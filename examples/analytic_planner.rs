@@ -1,0 +1,84 @@
+//! L1/L2/L3 integration demo: evaluate the AOT-compiled JAX/Pallas cost
+//! model from Rust over PJRT, compare the analytic optimum with what the
+//! stochastic-approximation controller converges to on IRM traffic, and
+//! cross-check the artifact against the pure-Rust oracle.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example analytic_planner
+//! ```
+
+use elastictl::config::Config;
+use elastictl::experiments::{run_irm_convergence, ExpContext, TraceScale};
+use elastictl::runtime::{artifacts_dir, reference_curves, BucketedStats, CostCurveModel, Planner};
+use elastictl::trace::IrmConfig;
+use elastictl::util::tempdir::tempdir;
+
+fn main() {
+    let cfg = Config::default();
+    let dir = artifacts_dir();
+
+    // 1. Load the artifact (falls back with a message if absent).
+    match CostCurveModel::load(&dir, None) {
+        Ok(model) => {
+            println!(
+                "loaded cost_curve artifact from {} (n={}, g={})",
+                dir.display(),
+                model.n,
+                model.g
+            );
+            // Cross-check against the Rust oracle on a toy population.
+            let n = model.n;
+            let lam: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
+            let m = vec![1.4676e-7f32; n];
+            let s: Vec<f32> = (0..n).map(|i| 1.0e4 + i as f32).collect();
+            let c: Vec<f32> = s.iter().map(|x| x * 8.5085e-15).collect();
+            let w = vec![1.0f32; n];
+            let t = Planner::t_grid(model.g, cfg.controller.t_max_secs);
+            let got = model.evaluate(&lam, &m, &c, &s, &w, &t).expect("evaluate");
+            let want = reference_curves(&lam, &m, &c, &s, &w, &t);
+            let max_rel = got
+                .cost
+                .iter()
+                .zip(&want.cost)
+                .map(|(a, b)| ((a - b) / b.max(1e-30)).abs())
+                .fold(0.0f32, f32::max);
+            println!("PJRT vs rust-oracle max relative error: {max_rel:.2e}");
+            assert!(max_rel < 1e-3, "artifact disagrees with oracle");
+        }
+        Err(e) => println!("artifact not available ({e}); oracle-only demo"),
+    }
+
+    // 2. One planning call on a synthetic epoch.
+    let planner = Planner::load(&dir, cfg.controller.t_max_secs);
+    let items: Vec<(u32, u32)> = (1..=20_000u32)
+        .map(|rank| {
+            let count = (3600.0 / rank as f64).ceil() as u32;
+            (count, elastictl::trace::object_size(rank as u64, 7) as u32)
+        })
+        .collect();
+    let stats = BucketedStats::build(&items, planner.n_buckets(), 3600.0, &cfg.cost);
+    let plan = planner
+        .plan(&stats, cfg.cost.instance.ram_bytes)
+        .expect("plan");
+    println!(
+        "planner ({}) says: T* = {:.0}s, predicted cost rate ${:.3e}/s, vsize {:.1} MB -> {} instances",
+        if planner.uses_artifact() { "PJRT" } else { "oracle" },
+        plan.t_star_secs,
+        plan.cost_rate,
+        plan.vsize_bytes / 1048576.0,
+        plan.instances
+    );
+
+    // 3. Validate Proposition 1: SA converges near the model optimum.
+    let out = tempdir().expect("tempdir");
+    let ctx = ExpContext::standard(TraceScale::Smoke, out.path());
+    let irm = IrmConfig {
+        catalogue: 10_000,
+        alpha: 0.9,
+        total_rate: 300.0,
+        duration: 4 * elastictl::HOUR,
+        seed: 3,
+    };
+    let rep = run_irm_convergence(&ctx, &irm).expect("irm");
+    println!("\n{}", rep.render());
+}

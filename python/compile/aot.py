@@ -1,0 +1,78 @@
+"""AOT export: lower the L2 cost model (with its L1 Pallas kernel) to HLO
+*text* and write the artifact manifest the Rust runtime loads.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla_extension 0.5.1 the `xla` crate links
+against rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Outputs:
+    artifacts/cost_curve_n{N}_g{G}.hlo.txt  (one per shape variant)
+    artifacts/manifest.txt                  (`name n g path dtype` lines)
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .model import lowered_cost_model
+
+# Shape variants: (n_buckets, grid_points, block_g, block_n).
+# The small variant keeps tests fast; the large one is the planner default.
+VARIANTS = [
+    (256, 64, 16, 256),
+    (1024, 128, 32, 1024),
+    (4096, 256, 64, 1024),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--out", default=None,
+                    help="(compat) single-artifact output path; also "
+                         "triggers the full multi-variant export next to it")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = ["# name n g path dtype"]
+    for n, g, bg, bn in VARIANTS:
+        lowered = lowered_cost_model(n, g, block_g=bg, block_n=bn)
+        text = to_hlo_text(lowered)
+        fname = f"cost_curve_n{n}_g{g}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"cost_curve {n} {g} {fname} f32")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+
+    # Compat marker for Makefile timestamp tracking.
+    if args.out is not None:
+        with open(args.out, "w") as f:
+            f.write("see manifest.txt\n")
+
+
+if __name__ == "__main__":
+    main()

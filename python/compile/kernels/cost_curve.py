@@ -1,0 +1,109 @@
+"""L1 — Pallas kernel for the IRM cost-curve evaluation (eq. 4).
+
+The hot-spot is a (G x N) elementwise-exp + weighted reduction over N,
+emitting three G-length curves. The kernel tiles the iteration space as
+
+    grid = (G / BLOCK_G, N / BLOCK_N)
+
+with per-block operands resident in VMEM:
+
+  * lam/m/c/s/w blocks:  (BLOCK_N,)   five operands
+  * t block:             (BLOCK_G,)
+  * outputs:             (BLOCK_G,) accumulated across the N axis of the
+                         grid (output blocks map to the G tile only, so
+                         successive N steps accumulate in place — the
+                         standard Pallas reduction idiom).
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper has no GPU
+kernel; this is the paper's *analytic model* as dense compute. On a real
+TPU the kernel is VPU-bound (exp + FMA, no matmul), so block shapes are
+lane-aligned (BLOCK_G multiple of 8, BLOCK_N multiple of 128) and sized so
+one (G,N) f32 tile (BLOCK_G*BLOCK_N*4 bytes) stays well under VMEM.
+On this repo's CPU CI the kernel runs under interpret=True (Mosaic
+custom-calls cannot execute on the CPU PJRT plugin).
+
+VMEM budget at the default (BLOCK_G=64, BLOCK_N=1024):
+  working tile 64*1024*4 = 256 KiB, operands 5*4 KiB + 256 B,
+  outputs 3*256 B  ->  ~0.27 MiB << 16 MiB VMEM; FLOP/byte ≈ 64*6/4 ≈ 96,
+  comfortably compute-bound on the VPU roofline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_G = 64
+DEFAULT_BLOCK_N = 1024
+
+
+def _cost_curve_kernel(lam_ref, m_ref, c_ref, s_ref, w_ref, t_ref,
+                       cost_ref, vsize_ref, miss_ref):
+    """One (BLOCK_G, BLOCK_N) tile: compute partial sums, accumulate."""
+    n_idx = pl.program_id(1)
+
+    lam = lam_ref[...]          # (BLOCK_N,)
+    m = m_ref[...]
+    c = c_ref[...]
+    s = s_ref[...]
+    w = w_ref[...]
+    t = t_ref[...]              # (BLOCK_G,)
+
+    e = jnp.exp(-lam[None, :] * t[:, None])          # (BLOCK_G, BLOCK_N)
+    cost_tile = jnp.sum(w * (c + (lam * m - c) * e), axis=1)
+    vsize_tile = jnp.sum(w * s * (1.0 - e), axis=1)
+    miss_tile = jnp.sum(w * lam * e, axis=1)
+
+    # First N-step initializes the accumulators; later steps add.
+    @pl.when(n_idx == 0)
+    def _init():
+        cost_ref[...] = cost_tile
+        vsize_ref[...] = vsize_tile
+        miss_ref[...] = miss_tile
+
+    @pl.when(n_idx != 0)
+    def _acc():
+        cost_ref[...] += cost_tile
+        vsize_ref[...] += vsize_tile
+        miss_ref[...] += miss_tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_n", "interpret"))
+def cost_curves(lam, miss_cost, storage_rate, size, weight, t_grid,
+                block_g=DEFAULT_BLOCK_G, block_n=DEFAULT_BLOCK_N,
+                interpret=True):
+    """Tiled Pallas evaluation of the cost curves.
+
+    Requires N % block_n == 0 and G % block_g == 0 (aot.py pads buckets
+    with zero-weight entries, which contribute exactly nothing to any
+    curve, so padding is semantically free).
+    """
+    n = lam.shape[0]
+    g = t_grid.shape[0]
+    bg = min(block_g, g)
+    bn = min(block_n, n)
+    assert n % bn == 0, f"N={n} not a multiple of block_n={bn}"
+    assert g % bg == 0, f"G={g} not a multiple of block_g={bg}"
+    grid = (g // bg, n // bn)
+
+    out_shape = [jax.ShapeDtypeStruct((g,), jnp.float32)] * 3
+    per_n = pl.BlockSpec((bn,), lambda i, j: (j,))
+    per_g = pl.BlockSpec((bg,), lambda i, j: (i,))
+
+    cost, vsize, miss = pl.pallas_call(
+        _cost_curve_kernel,
+        grid=grid,
+        in_specs=[per_n, per_n, per_n, per_n, per_n, per_g],
+        out_specs=[per_g, per_g, per_g],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        lam.astype(jnp.float32),
+        miss_cost.astype(jnp.float32),
+        storage_rate.astype(jnp.float32),
+        size.astype(jnp.float32),
+        weight.astype(jnp.float32),
+        t_grid.astype(jnp.float32),
+    )
+    return cost, vsize, miss

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the cost-curve kernel.
+
+Implements eq. (4) of the paper and its companions exactly, with no
+tiling — the correctness reference the Pallas kernel is tested against:
+
+    cost(T)     = sum_i w_i * (c_i + (lam_i * m_i - c_i) * exp(-lam_i T))
+    vsize(T)    = sum_i w_i * s_i * (1 - exp(-lam_i T))
+    missrate(T) = sum_i w_i * lam_i * exp(-lam_i T)
+
+Shapes: per-content arrays are (N,), the T grid is (G,); outputs are (G,).
+All float32 (the artifact interface), so the oracle and the kernel share
+rounding behaviour.
+"""
+
+import jax.numpy as jnp
+
+
+def cost_curves_ref(lam, miss_cost, storage_rate, size, weight, t_grid):
+    """Evaluate the three curves. Returns (cost, vsize, missrate), each (G,).
+
+    Broadcasting layout: (G, 1) x (1, N) -> (G, N) -> reduce over N.
+    """
+    lam = lam.astype(jnp.float32)
+    m = miss_cost.astype(jnp.float32)
+    c = storage_rate.astype(jnp.float32)
+    s = size.astype(jnp.float32)
+    w = weight.astype(jnp.float32)
+    t = t_grid.astype(jnp.float32)
+
+    e = jnp.exp(-lam[None, :] * t[:, None])  # (G, N)
+    cost = jnp.sum(
+        w[None, :] * (c[None, :] + (lam[None, :] * m[None, :] - c[None, :]) * e),
+        axis=1,
+    )
+    vsize = jnp.sum(w[None, :] * s[None, :] * (1.0 - e), axis=1)
+    missrate = jnp.sum(w[None, :] * lam[None, :] * e, axis=1)
+    return cost, vsize, missrate
+
+
+def optimal_t_ref(lam, miss_cost, storage_rate, size, weight, t_grid):
+    """Argmin of the cost curve over the grid: (t_star, cost_star)."""
+    cost, _, _ = cost_curves_ref(lam, miss_cost, storage_rate, size, weight, t_grid)
+    i = jnp.argmin(cost)
+    return t_grid[i], cost[i]

@@ -1,0 +1,64 @@
+"""L2 — the JAX model of the paper's analytic cost theory (§4.1).
+
+Wraps the L1 Pallas kernel (`kernels.cost_curve`) into the jitted function
+that is AOT-lowered to the PJRT artifact: given bucketed per-content
+statistics, evaluate the cost / virtual-size / miss-rate curves over a
+T grid (eq. 4 and companions), plus derived quantities used by tests and
+analysis (optimal T, the analytic gradient dC/dT that the
+stochastic-approximation controller follows in expectation).
+
+Python (and this module) run only at build time; the Rust coordinator
+executes the compiled HLO at epoch boundaries.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cost_curve import cost_curves as _pallas_cost_curves
+
+
+def cost_model(lam, miss_cost, storage_rate, size, weight, t_grid,
+               block_g=None, block_n=None):
+    """The artifact entry point: three (G,) curves via the Pallas kernel."""
+    kwargs = {}
+    if block_g is not None:
+        kwargs["block_g"] = block_g
+    if block_n is not None:
+        kwargs["block_n"] = block_n
+    return _pallas_cost_curves(
+        lam, miss_cost, storage_rate, size, weight, t_grid, **kwargs
+    )
+
+
+def cost_gradient(lam, miss_cost, storage_rate, weight, t_grid):
+    """Analytic dC/dT (eq. 4 differentiated):
+
+        dC/dT = -sum_i w_i * lam_i * (lam_i m_i - c_i) * exp(-lam_i T)
+
+    The SA update's expected correction is proportional to -dC/dT; tests
+    verify the kernel's cost curve is consistent with this gradient.
+    """
+    lam = lam.astype(jnp.float32)
+    m = miss_cost.astype(jnp.float32)
+    c = storage_rate.astype(jnp.float32)
+    w = weight.astype(jnp.float32)
+    t = t_grid.astype(jnp.float32)
+    e = jnp.exp(-lam[None, :] * t[:, None])
+    return -jnp.sum(w[None, :] * lam[None, :] * (lam[None, :] * m[None, :] - c[None, :]) * e,
+                    axis=1)
+
+
+def lowered_cost_model(n, g, block_g=64, block_n=1024):
+    """Lower `cost_model` for fixed shapes (N buckets, G grid points)."""
+    def spec(shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    bg = min(block_g, g)
+    bn = min(block_n, n)
+
+    def fn(lam, m, c, s, w, t):
+        return cost_model(lam, m, c, s, w, t, block_g=bg, block_n=bn)
+
+    return jax.jit(fn).lower(
+        spec((n,)), spec((n,)), spec((n,)), spec((n,)), spec((n,)), spec((g,))
+    )

@@ -1,0 +1,153 @@
+"""pytest: Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Sweeps shapes, block configurations, and value regimes (including the
+paper's actual cost magnitudes: λ in [1e-6, 1e3] r/s, m ≈ 1.5e-7 $,
+c ≈ 8.5e-15·s $/s) with hypothesis when available, falling back to a
+seeded parameter sweep otherwise (the CI image may not ship hypothesis).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.cost_curve import cost_curves
+from compile.kernels.ref import cost_curves_ref, optimal_t_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def make_inputs(rng, n, g, lam_hi=10.0, size_hi=1e7):
+    lam = rng.uniform(1e-6, lam_hi, size=n).astype(np.float32)
+    m = np.full(n, 1.4676e-7, dtype=np.float32)
+    s = rng.uniform(64.0, size_hi, size=n).astype(np.float32)
+    c = (s * 8.5085e-15).astype(np.float32)
+    w = rng.uniform(0.0, 100.0, size=n).astype(np.float32)
+    t = np.linspace(0.0, 7200.0, g).astype(np.float32)
+    return lam, m, c, s, w, t
+
+
+def assert_curves_close(n, g, block_g, block_n, seed=0, lam_hi=10.0):
+    rng = np.random.default_rng(seed)
+    lam, m, c, s, w, t = make_inputs(rng, n, g, lam_hi=lam_hi)
+    got = cost_curves(jnp.array(lam), jnp.array(m), jnp.array(c),
+                      jnp.array(s), jnp.array(w), jnp.array(t),
+                      block_g=block_g, block_n=block_n)
+    want = cost_curves_ref(jnp.array(lam), jnp.array(m), jnp.array(c),
+                           jnp.array(s), jnp.array(w), jnp.array(t))
+    names = ["cost", "vsize", "missrate"]
+    for name, a, b in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-12,
+            err_msg=f"{name} mismatch at n={n} g={g} bg={block_g} bn={block_n}",
+        )
+
+
+@pytest.mark.parametrize("n,g,bg,bn", [
+    (128, 16, 16, 128),
+    (256, 64, 16, 256),
+    (256, 64, 64, 64),     # multiple N-steps per G tile
+    (1024, 128, 32, 1024),
+    (1024, 32, 32, 128),   # 8 accumulation steps
+    (64, 8, 8, 64),
+])
+def test_kernel_matches_ref_shapes(n, g, bg, bn):
+    assert_curves_close(n, g, bg, bn, seed=n + g)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_kernel_matches_ref_random_values(seed):
+    assert_curves_close(256, 64, 16, 256, seed=seed, lam_hi=1000.0)
+
+
+def test_zero_weight_buckets_are_free():
+    """Padding buckets (weight 0) must not change any curve."""
+    rng = np.random.default_rng(1)
+    lam, m, c, s, w, t = make_inputs(rng, 256, 32)
+    w2 = w.copy()
+    w2[128:] = 0.0
+    got = cost_curves(jnp.array(lam), jnp.array(m), jnp.array(c),
+                      jnp.array(s), jnp.array(w2), jnp.array(t),
+                      block_g=16, block_n=128)
+    want = cost_curves_ref(jnp.array(lam[:128]), jnp.array(m[:128]),
+                           jnp.array(c[:128]), jnp.array(s[:128]),
+                           jnp.array(w2[:128]), jnp.array(t))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4)
+
+
+def test_limits_match_eq4():
+    """T=0: all misses (cost = Σ w λ m); T→∞: all storage (cost = Σ w c)."""
+    rng = np.random.default_rng(2)
+    lam, m, c, s, w, _ = make_inputs(rng, 128, 16)
+    t = np.array([0.0] * 8 + [1e9] * 8, dtype=np.float32)
+    cost, vsize, missrate = cost_curves(
+        jnp.array(lam), jnp.array(m), jnp.array(c), jnp.array(s),
+        jnp.array(w), jnp.array(t), block_g=8, block_n=128)
+    all_miss = float(np.sum(w * lam * m))
+    all_store = float(np.sum(w * c))
+    np.testing.assert_allclose(np.asarray(cost)[0], all_miss, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(cost)[-1], all_store, rtol=1e-3)
+    assert np.asarray(vsize)[0] == 0.0
+    np.testing.assert_allclose(np.asarray(vsize)[-1], float(np.sum(w * s)), rtol=1e-4)
+    assert np.asarray(missrate)[-1] < np.asarray(missrate)[0]
+
+
+def test_missrate_monotone_decreasing():
+    rng = np.random.default_rng(3)
+    lam, m, c, s, w, t = make_inputs(rng, 256, 64)
+    _, _, missrate = cost_curves(jnp.array(lam), jnp.array(m), jnp.array(c),
+                                 jnp.array(s), jnp.array(w), jnp.array(t),
+                                 block_g=16, block_n=256)
+    mr = np.asarray(missrate)
+    assert np.all(np.diff(mr) <= 1e-6 * (1 + np.abs(mr[:-1])))
+
+
+def test_optimal_t_is_interior_when_mixed_population():
+    """Hot small objects + cold giants ⇒ optimum strictly inside (0, Tmax)."""
+    n, g = 128, 64
+    lam = np.concatenate([np.full(n // 2, 1.0), np.full(n // 2, 1e-5)]).astype(np.float32)
+    s = np.concatenate([np.full(n // 2, 1e4), np.full(n // 2, 2e7)]).astype(np.float32)
+    m = np.full(n, 1.4676e-7, dtype=np.float32)
+    c = (s * 8.5085e-15).astype(np.float32)
+    w = np.concatenate([np.full(n // 2, 1.0), np.full(n // 2, 1000.0)]).astype(np.float32)
+    # geometric grid: the optimum sits at small T (the hot objects are
+    # fully retained within seconds; the giants' storage grows linearly)
+    t = np.concatenate([[0.0], np.geomspace(1.0, 24 * 3600.0, g - 1)]).astype(np.float32)
+    t_star, _ = optimal_t_ref(jnp.array(lam), jnp.array(m), jnp.array(c),
+                              jnp.array(s), jnp.array(w), jnp.array(t))
+    assert 0.0 < float(t_star) < 24 * 3600.0
+    cost, _, _ = cost_curves(jnp.array(lam), jnp.array(m), jnp.array(c),
+                             jnp.array(s), jnp.array(w), jnp.array(t),
+                             block_g=16, block_n=128)
+    i = int(np.argmin(np.asarray(cost)))
+    np.testing.assert_allclose(float(t[i]), float(t_star), rtol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n_blocks=st.integers(min_value=1, max_value=4),
+        g_blocks=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31),
+        lam_exp=st.floats(min_value=-5.0, max_value=3.0),
+    )
+    def test_hypothesis_shape_value_sweep(n_blocks, g_blocks, seed, lam_exp):
+        n = 64 * n_blocks
+        g = 8 * g_blocks
+        assert_curves_close(n, g, 8, 64, seed=seed % 10_000,
+                            lam_hi=10.0 ** lam_exp + 1e-6)
+else:
+
+    @pytest.mark.parametrize("case", range(30))
+    def test_fallback_shape_value_sweep(case):
+        rng = np.random.default_rng(case)
+        n = 64 * int(rng.integers(1, 5))
+        g = 8 * int(rng.integers(1, 5))
+        lam_hi = 10.0 ** rng.uniform(-5, 3) + 1e-6
+        assert_curves_close(n, g, 8, 64, seed=case, lam_hi=lam_hi)

@@ -1,0 +1,84 @@
+"""pytest: L2 model — gradient consistency, lowering shapes, and the
+HLO-text export path the Rust runtime consumes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.model import cost_gradient, cost_model, lowered_cost_model
+from compile.aot import to_hlo_text
+from compile.kernels.ref import cost_curves_ref
+
+
+def inputs(n, g, seed=0):
+    rng = np.random.default_rng(seed)
+    lam = rng.uniform(1e-4, 5.0, n).astype(np.float32)
+    m = np.full(n, 1.4676e-7, dtype=np.float32)
+    s = rng.uniform(100, 1e6, n).astype(np.float32)
+    c = (s * 8.5085e-15).astype(np.float32)
+    w = rng.uniform(0.5, 50.0, n).astype(np.float32)
+    t = np.linspace(0.0, 3600.0, g).astype(np.float32)
+    return tuple(jnp.array(x) for x in (lam, m, c, s, w, t))
+
+
+def test_gradient_matches_finite_differences():
+    lam, m, c, s, w, t = inputs(128, 32, seed=4)
+    # Keep rates moderate and the grid off the origin so the O(eps^2)
+    # curvature term of central differences stays below the tolerance
+    # (f32 cost values cap how small eps can go).
+    lam = lam / 10.0
+    t = t + 5.0
+    grad = np.asarray(cost_gradient(lam, m, c, w, t))
+    # Central differences on the reference cost curve.
+    eps = 0.5
+    cost_p, _, _ = cost_curves_ref(lam, m, c, s, w, t + eps)
+    cost_m, _, _ = cost_curves_ref(lam, m, c, s, w, t - eps)
+    fd = (np.asarray(cost_p) - np.asarray(cost_m)) / (2 * eps)
+    scale = np.abs(grad).max() + 1e-30
+    np.testing.assert_allclose(grad / scale, fd / scale, atol=1e-2)
+
+
+def test_gradient_sign_structure():
+    """At T=0 with all-hot objects the gradient must be negative (growing T
+    reduces cost); with all-cold giant objects it must be positive."""
+    g = 4
+    t = jnp.array(np.zeros(g, dtype=np.float32) + 1.0)
+    hot = cost_gradient(
+        jnp.full((64,), 2.0), jnp.full((64,), 1e-6),
+        jnp.full((64,), 1e-12), jnp.full((64,), 1.0), t)
+    assert float(np.asarray(hot)[0]) < 0.0
+    cold = cost_gradient(
+        jnp.full((64,), 1e-6), jnp.full((64,), 1e-9),
+        jnp.full((64,), 1e-6), jnp.full((64,), 1.0), t)
+    assert float(np.asarray(cold)[0]) > 0.0
+
+
+def test_model_shapes():
+    lam, m, c, s, w, t = inputs(256, 64, seed=5)
+    cost, vsize, miss = cost_model(lam, m, c, s, w, t, block_g=16, block_n=256)
+    assert cost.shape == (64,)
+    assert vsize.shape == (64,)
+    assert miss.shape == (64,)
+    assert cost.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("n,g", [(256, 64), (64, 8)])
+def test_lowering_produces_hlo_text(n, g):
+    lowered = lowered_cost_model(n, g, block_g=min(8, g), block_n=min(64, n))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # 6 parameters and a 3-tuple result with the right shapes.
+    assert f"f32[{n}]" in text
+    assert f"f32[{g}]" in text
+    assert "ROOT" in text
+
+
+def test_lowered_executes_and_matches_ref():
+    n, g = 64, 8
+    lam, m, c, s, w, t = inputs(n, g, seed=6)
+    lowered = lowered_cost_model(n, g, block_g=8, block_n=64)
+    compiled = lowered.compile()
+    got = compiled(lam, m, c, s, w, t)
+    want = cost_curves_ref(lam, m, c, s, w, t)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4)

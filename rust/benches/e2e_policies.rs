@@ -1,0 +1,47 @@
+//! Fig. 6 end-to-end bench — full simulated epochs under each sizing
+//! policy: requests/second of the whole testbed (balancer + cluster +
+//! policy + billing), plus the resulting cost summary rows (the bench
+//! doubles as a fast regeneration of the headline table at smoke scale).
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::sim::run;
+use elastictl::trace::{SynthConfig, SynthGenerator, VecSource};
+use elastictl::util::bench::Bencher;
+use elastictl::MINUTE;
+
+fn main() {
+    let mut b = Bencher::new("e2e_policies");
+    let mut synth = SynthConfig::tiny();
+    synth.mean_rate = 400.0;
+    let trace = SynthGenerator::new(synth).generate();
+    println!("# trace: {} requests over 2 simulated hours", trace.len());
+
+    for policy in [
+        PolicyKind::Fixed,
+        PolicyKind::Ttl,
+        PolicyKind::Mrc,
+        PolicyKind::IdealTtl,
+    ] {
+        let mut cfg = Config::with_policy(policy);
+        cfg.cost.instance.ram_bytes = 40_000_000;
+        cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.fixed_instances = 8;
+        let mut last = None;
+        b.bench(
+            &format!("run_{}", policy.as_str()),
+            trace.len() as u64,
+            || {
+                let mut src = VecSource::new(trace.clone());
+                last = Some(run(&cfg, &mut src));
+            },
+        );
+        if let Some(res) = &last {
+            println!(
+                "#   {}: miss_ratio={:.4} total=${:.6} (storage ${:.6} miss ${:.6})",
+                res.policy, res.miss_ratio(), res.total_cost, res.storage_cost, res.miss_cost
+            );
+        }
+    }
+    b.finish();
+}

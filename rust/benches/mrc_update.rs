@@ -1,0 +1,51 @@
+//! §3 complexity bench — per-request cost of MRC profiling as the tracked
+//! set grows: exact Olken (O(log M)) vs SHARDS sampling (O(log RM)).
+//! Regenerates the complexity argument behind Fig. 1 / §2.4.
+
+use elastictl::mrc::{MrcProfiler, OlkenProfiler, ShardsMode, ShardsProfiler};
+use elastictl::util::bench::{black_box, Bencher};
+use elastictl::util::rng::Pcg;
+
+fn workload(n_objects: u64, n_requests: usize, seed: u64) -> Vec<(u64, u64)> {
+    // Zipf-ish accesses over n_objects with heterogeneous sizes.
+    let zipf = elastictl::trace::Zipf::new(n_objects, 0.9);
+    let mut rng = Pcg::seed_from_u64(seed);
+    (0..n_requests)
+        .map(|_| {
+            let o = zipf.sample(&mut rng);
+            (o, elastictl::trace::object_size(o, 7))
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new("mrc_update");
+    for &n_objects in &[10_000u64, 100_000, 1_000_000] {
+        let reqs = workload(n_objects, 60_000, n_objects);
+
+        let mut olken = OlkenProfiler::sized(1 << 40);
+        for &(o, s) in &reqs {
+            olken.record(o, s);
+        }
+        let mut i = 0usize;
+        b.bench(&format!("olken_m{}", n_objects), 1000, || {
+            for &(o, s) in &reqs[i..i + 1000] {
+                black_box(olken.record(o, s));
+            }
+            i = (i + 1000) % (reqs.len() - 1000);
+        });
+
+        let mut shards = ShardsProfiler::new(0.01, 1 << 40, ShardsMode::Sized, 5);
+        for &(o, s) in &reqs {
+            shards.record(o, s);
+        }
+        let mut j = 0usize;
+        b.bench(&format!("shards_r0.01_m{}", n_objects), 1000, || {
+            for &(o, s) in &reqs[j..j + 1000] {
+                black_box(shards.record(o, s));
+            }
+            j = (j + 1000) % (reqs.len() - 1000);
+        });
+    }
+    b.finish();
+}

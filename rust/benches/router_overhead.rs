@@ -1,0 +1,50 @@
+//! Fig. 1 bench — per-request cost of the three router variants over the
+//! same workload: basic (route only), TTL (route + O(1) virtual cache),
+//! MRC (route + O(log M) order-statistics tree). The paper's shape:
+//! basic ≈ TTL ≫ MRC in throughput; work grows with cache size only for
+//! MRC.
+
+use elastictl::balancer::Balancer;
+use elastictl::config::{Config, PolicyKind};
+use elastictl::cost::CostTracker;
+use elastictl::scaler::make_sizer;
+use elastictl::trace::{SynthConfig, SynthGenerator};
+use elastictl::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("router_overhead");
+    let mut cfg_trace = SynthConfig::tiny();
+    cfg_trace.mean_rate = 600.0;
+    let trace = SynthGenerator::new(cfg_trace).generate();
+    let chunk = 10_000.min(trace.len() / 2);
+
+    for policy in [PolicyKind::Fixed, PolicyKind::Ttl, PolicyKind::Mrc] {
+        let mut cfg = Config::with_policy(policy);
+        cfg.cost.instance.ram_bytes = 40_000_000;
+        cfg.scaler.fixed_instances = 8;
+        let sizer = make_sizer(&cfg);
+        let mut balancer = Balancer::from_config(&cfg, sizer, 8);
+        let mut costs = CostTracker::new(cfg.cost.clone());
+        // Warm the structures over the whole trace once.
+        for r in &trace {
+            balancer.handle(r, &mut costs);
+        }
+        let mut idx = 0usize;
+        b.bench(
+            &format!("{}_10k_requests", policy.as_str()),
+            chunk as u64,
+            || {
+                for r in &trace[idx..idx + chunk] {
+                    black_box(balancer.handle(r, &mut costs));
+                }
+                idx = (idx + chunk) % (trace.len() - chunk).max(1);
+            },
+        );
+        println!(
+            "# work_units[{}] = {:.2}/request",
+            policy.as_str(),
+            balancer.work_units as f64 / balancer.requests as f64
+        );
+    }
+    b.finish();
+}

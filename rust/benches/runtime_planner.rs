@@ -1,0 +1,70 @@
+//! L1/L2/L3 integration bench — latency of one analytic-planner call:
+//! bucketing the epoch's popularity estimates, then evaluating the AOT
+//! cost-curve artifact on the PJRT CPU client (vs the pure-Rust oracle).
+//! The planner runs once per epoch (hourly), so anything under ~100 ms is
+//! negligible; the bench verifies that and records the artifact/oracle
+//! ratio for EXPERIMENTS.md §Perf.
+
+use elastictl::config::Config;
+use elastictl::runtime::{artifacts_dir, BucketedStats, CostCurveModel, Planner};
+use elastictl::util::bench::{black_box, Bencher};
+use elastictl::util::rng::Pcg;
+
+fn main() {
+    let mut b = Bencher::new("runtime_planner");
+    let cfg = Config::default();
+    let mut rng = Pcg::seed_from_u64(9);
+
+    // Synthetic epoch estimates: 50k distinct objects, Zipf counts.
+    let zipf = elastictl::trace::Zipf::new(50_000, 0.9);
+    let mut counts = std::collections::HashMap::new();
+    for _ in 0..400_000 {
+        let o = zipf.sample(&mut rng);
+        *counts.entry(o).or_insert(0u32) += 1;
+    }
+    let mut items: Vec<(u32, u32)> = counts
+        .iter()
+        .map(|(&o, &c)| (c, elastictl::trace::object_size(o, 7) as u32))
+        .collect();
+    items.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+
+    // Bucketing cost (plain rust, part of every planner call).
+    b.bench("bucketize_50k_items", items.len() as u64, || {
+        black_box(BucketedStats::build(&items, 4096, 3600.0, &cfg.cost));
+    });
+
+    // Oracle evaluation.
+    let oracle = Planner::oracle(4096, 256, cfg.controller.t_max_secs);
+    let stats = BucketedStats::build(&items, 4096, 3600.0, &cfg.cost);
+    b.bench("oracle_curves_n4096_g256", (4096 * 256) as u64, || {
+        black_box(oracle.curves(&stats).unwrap());
+    });
+
+    // PJRT artifact evaluation (skipped if `make artifacts` has not run).
+    match CostCurveModel::load(artifacts_dir(), None) {
+        Ok(model) => {
+            let planner_grid = Planner::t_grid(model.g, cfg.controller.t_max_secs);
+            let stats_n = BucketedStats::build(&items, model.n, 3600.0, &cfg.cost);
+            b.bench(
+                &format!("pjrt_curves_n{}_g{}", model.n, model.g),
+                (model.n * model.g) as u64,
+                || {
+                    black_box(
+                        model
+                            .evaluate(
+                                &stats_n.lam,
+                                &stats_n.miss_cost,
+                                &stats_n.storage_rate,
+                                &stats_n.size,
+                                &stats_n.weight,
+                                &planner_grid,
+                            )
+                            .unwrap(),
+                    );
+                },
+            );
+        }
+        Err(e) => println!("# pjrt artifact unavailable ({e}); run `make artifacts`"),
+    }
+    b.finish();
+}

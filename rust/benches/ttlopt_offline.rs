@@ -1,0 +1,31 @@
+//! Fig. 8 bench — throughput of the offline clairvoyant solvers: TTL-OPT
+//! (Algorithm 1, linear time) and the Bélády replacement baseline
+//! (O(log M) per request). Both must handle multi-million-request traces
+//! in seconds to be usable as references.
+
+use elastictl::config::CostConfig;
+use elastictl::trace::{SynthConfig, SynthGenerator};
+use elastictl::ttlopt::{belady_miss_ratio, next_request_times, solve};
+use elastictl::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("ttlopt_offline");
+    let mut synth = SynthConfig::tiny();
+    synth.mean_rate = 500.0;
+    let trace = SynthGenerator::new(synth).generate();
+    let cost = CostConfig::default();
+    println!("# trace: {} requests", trace.len());
+
+    b.bench("next_request_times", trace.len() as u64, || {
+        black_box(next_request_times(&trace));
+    });
+
+    b.bench("ttlopt_solve", trace.len() as u64, || {
+        black_box(solve(&trace, &cost));
+    });
+
+    b.bench("belady_50mb", trace.len() as u64, || {
+        black_box(belady_miss_ratio(&trace, 50_000_000));
+    });
+    b.finish();
+}

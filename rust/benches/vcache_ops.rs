@@ -1,0 +1,49 @@
+//! §5.1 bench — the O(1) claim of the FIFO-calendar virtual TTL cache:
+//! per-request cost must stay flat as the ghost population grows, unlike
+//! the exact-calendar (BTreeMap) TTL cache it replaces.
+
+use elastictl::cache::{IdealTtlCache, TtlMode};
+use elastictl::config::{ControllerConfig, CostConfig};
+use elastictl::util::bench::{black_box, Bencher};
+use elastictl::util::rng::Pcg;
+use elastictl::vcache::VirtualCache;
+use elastictl::SECOND;
+
+fn main() {
+    let mut b = Bencher::new("vcache_ops");
+    for &population in &[10_000u64, 100_000, 1_000_000] {
+        // FIFO-calendar virtual cache (the paper's O(1) design).
+        let ctrl = ControllerConfig { t_init_secs: 36_000.0, ..Default::default() };
+        let mut vc = VirtualCache::new(&ctrl, CostConfig::default());
+        let mut rng = Pcg::seed_from_u64(population);
+        let mut now = 0u64;
+        for i in 0..population {
+            vc.on_request(now, i, 1000);
+            now += 1000;
+        }
+        b.bench(&format!("fifo_ttl_m{}", population), 1000, || {
+            for _ in 0..1000 {
+                now += 1000;
+                let obj = rng.below(population);
+                black_box(vc.on_request(now, obj, 1000));
+            }
+        });
+
+        // Exact-calendar TTL cache (O(log M) reference).
+        let mut ideal = IdealTtlCache::new(TtlMode::WithRenewal);
+        let mut now2 = 0u64;
+        for i in 0..population {
+            ideal.on_request(now2, i, 1000, 36_000 * SECOND);
+            now2 += 1000;
+        }
+        let mut rng2 = Pcg::seed_from_u64(population ^ 1);
+        b.bench(&format!("exact_calendar_m{}", population), 1000, || {
+            for _ in 0..1000 {
+                now2 += 1000;
+                let obj = rng2.below(population);
+                black_box(ideal.on_request(now2, obj, 1000, 36_000 * SECOND));
+            }
+        });
+    }
+    b.finish();
+}

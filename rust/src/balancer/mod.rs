@@ -1,0 +1,215 @@
+//! The load balancer (§5.2): the single component on the request path.
+//! It routes requests to cluster instances via the hash-slot map, inserts
+//! on miss (after the simulated origin fetch), feeds each request to the
+//! sizing policy's shadow structure, and at epoch boundaries applies the
+//! policy's decision by resizing the cluster.
+//!
+//! Mirrors the paper's custom mcrouter-like tool. Per-request cost:
+//! routing O(1) + policy shadow work (O(1) for TTL, O(log M) for MRC) —
+//! the Fig. 1 comparison is exactly these code paths.
+
+use crate::cluster::Cluster;
+use crate::config::Config;
+use crate::cost::CostTracker;
+use crate::scaler::EpochSizer;
+use crate::trace::Request;
+use crate::TimeUs;
+
+/// Outcome of one request through the balancer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Served {
+    /// Physical hit at the responsible instance.
+    pub hit: bool,
+    /// The miss was *spurious*: the object is resident on some instance,
+    /// but slot reassignment routed the request elsewhere (§5.2).
+    pub spurious: bool,
+    /// Policy work units performed (Fig. 1 proxy).
+    pub work_units: u32,
+}
+
+/// The mcrouter-like front.
+pub struct Balancer {
+    pub cluster: Cluster,
+    sizer: Box<dyn EpochSizer>,
+    /// Total requests handled.
+    pub requests: u64,
+    /// Physical misses (including spurious).
+    pub misses: u64,
+    /// Spurious misses observed after resizes.
+    pub spurious_misses: u64,
+    /// Cumulative policy work units.
+    pub work_units: u64,
+}
+
+impl Balancer {
+    pub fn new(cluster: Cluster, sizer: Box<dyn EpochSizer>) -> Self {
+        Balancer {
+            cluster,
+            sizer,
+            requests: 0,
+            misses: 0,
+            spurious_misses: 0,
+            work_units: 0,
+        }
+    }
+
+    /// Build a balancer from config (initial size = policy's first guess
+    /// for elastic policies, `fixed_instances` otherwise).
+    pub fn from_config(cfg: &Config, sizer: Box<dyn EpochSizer>, initial: u32) -> Self {
+        let cluster = Cluster::new(&cfg.cluster, cfg.cost.instance.ram_bytes, initial);
+        Self::new(cluster, sizer)
+    }
+
+    pub fn sizer(&self) -> &dyn EpochSizer {
+        self.sizer.as_ref()
+    }
+
+    /// Handle one request: policy shadow update, route, serve, account.
+    pub fn handle(&mut self, req: &Request, costs: &mut CostTracker) -> Served {
+        self.requests += 1;
+        let work = self.sizer.on_request(req.ts, req.obj, req.size_bytes());
+        self.work_units += work.units as u64;
+
+        let routed = self.cluster.route(req.obj);
+        let hit = self.cluster.serve(req.obj, req.size_bytes());
+        let mut spurious = false;
+        if !hit {
+            self.misses += 1;
+            costs.record_miss(req.size_bytes());
+            // The miss is spurious iff another instance still holds a stale
+            // copy (the slot moved under it). The routed instance is
+            // excluded: `serve` just inserted the object there. Checked
+            // only on misses; bounded by the instance count.
+            if self.cluster.resident_elsewhere(req.obj, routed) {
+                spurious = true;
+                self.spurious_misses += 1;
+            }
+        }
+        Served { hit, spurious, work_units: work.units }
+    }
+
+    /// Epoch boundary: ask the policy for `I(k+1)`, resize, return the new
+    /// size. The *ending* epoch is billed by the caller at the size that
+    /// was active (§2.3's synchronous billing).
+    pub fn end_epoch(&mut self, now: TimeUs) -> u32 {
+        let target = self.sizer.decide(now);
+        self.cluster.resize(target);
+        self.cluster.len() as u32
+    }
+
+    /// Overall miss ratio so far.
+    pub fn miss_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.requests as f64
+        }
+    }
+
+    /// Policy diagnostics for the figure series.
+    pub fn ttl_secs(&self) -> Option<f64> {
+        self.sizer.ttl_secs()
+    }
+
+    pub fn shadow_size(&self) -> Option<u64> {
+        self.sizer.shadow_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, PolicyKind};
+    use crate::cost::CostTracker;
+    use crate::scaler::make_sizer;
+    use crate::SECOND;
+
+    fn mk(policy: PolicyKind, initial: u32) -> (Balancer, CostTracker) {
+        let cfg = Config::with_policy(policy);
+        let sizer = make_sizer(&cfg);
+        let b = Balancer::from_config(&cfg, sizer, initial);
+        let c = CostTracker::new(cfg.cost.clone());
+        (b, c)
+    }
+
+    fn req(ts: u64, obj: u64, size: u32) -> Request {
+        Request { ts, obj, size }
+    }
+
+    #[test]
+    fn miss_then_hit_with_accounting() {
+        let (mut b, mut c) = mk(PolicyKind::Fixed, 2);
+        let r = req(0, 1, 1000);
+        let s1 = b.handle(&r, &mut c);
+        assert!(!s1.hit);
+        let s2 = b.handle(&req(SECOND, 1, 1000), &mut c);
+        assert!(s2.hit);
+        assert_eq!(b.requests, 2);
+        assert_eq!(b.misses, 1);
+        assert!(c.miss_total() > 0.0);
+        assert!((b.miss_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_policy_never_resizes() {
+        let (mut b, mut c) = mk(PolicyKind::Fixed, 8);
+        for i in 0..100u64 {
+            b.handle(&req(i, i, 100), &mut c);
+        }
+        assert_eq!(b.end_epoch(crate::HOUR), 8);
+        assert_eq!(b.cluster.resizes, 0);
+    }
+
+    #[test]
+    fn ttl_policy_resizes_cluster() {
+        let cfg = Config::with_policy(PolicyKind::Ttl);
+        let mut ctrl_cfg = cfg.clone();
+        ctrl_cfg.controller.t_init_secs = 7200.0; // sticky ghosts
+        let sizer = make_sizer(&ctrl_cfg);
+        let mut b = Balancer::from_config(&ctrl_cfg, sizer, 1);
+        let mut c = CostTracker::new(ctrl_cfg.cost.clone());
+        let inst = ctrl_cfg.cost.instance.ram_bytes;
+        // ~3 instances worth of distinct objects.
+        for i in 0..30u64 {
+            b.handle(&req(i * SECOND, i, (inst / 10) as u32), &mut c);
+        }
+        let n = b.end_epoch(40 * SECOND);
+        assert!(n >= 2, "n={n}");
+        assert!(b.cluster.resizes >= 1);
+        assert!(b.ttl_secs().is_some());
+        assert!(b.shadow_size().unwrap() > 0);
+    }
+
+    #[test]
+    fn spurious_misses_detected_after_grow() {
+        let (mut b, mut c) = mk(PolicyKind::Fixed, 2);
+        for i in 0..3000u64 {
+            b.handle(&req(i, i % 1500, 100), &mut c);
+        }
+        // Force a manual resize (bypassing the fixed policy) and replay.
+        b.cluster.resize(5);
+        let before = b.spurious_misses;
+        for i in 0..1500u64 {
+            b.handle(&req(4000 + i, i, 100), &mut c);
+        }
+        assert!(
+            b.spurious_misses > before,
+            "no spurious misses after resize"
+        );
+    }
+
+    #[test]
+    fn work_units_accumulate() {
+        let (mut b, mut c) = mk(PolicyKind::Mrc, 2);
+        for i in 0..500u64 {
+            b.handle(&req(i, i % 100, 100), &mut c);
+        }
+        assert!(b.work_units > 500, "MRC must cost >1 unit/request");
+        let (mut b2, mut c2) = mk(PolicyKind::Fixed, 2);
+        for i in 0..500u64 {
+            b2.handle(&req(i, i % 100, 100), &mut c2);
+        }
+        assert_eq!(b2.work_units, 500);
+        assert!(b.work_units > 2 * b2.work_units);
+    }
+}

@@ -1,0 +1,193 @@
+//! Exact-calendar TTL cache (with or without renewal) — the *ideal* TTL
+//! cache of §4: every object is evicted exactly when its timer expires.
+//!
+//! The calendar is a `BTreeMap<(expiry, obj), ()>`, so each request costs
+//! O(log M). This is the reference implementation against which the O(1)
+//! FIFO-calendar virtual cache ([`crate::vcache::FifoTtlCache`]) is
+//! validated (§5.1: "we compare the TTL based solution corresponding with
+//! (7) with our solution achieving O(1) complexity, and we observed no
+//! significant difference").
+
+use crate::{ObjectId, TimeUs};
+use std::collections::{BTreeMap, HashMap};
+
+/// TTL policy family (§4): with renewal, hits reset the timer; without,
+/// the timer set at miss time is untouched by later hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TtlMode {
+    WithRenewal,
+    WithoutRenewal,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    size: u64,
+    expiry: TimeUs,
+}
+
+/// Exact TTL cache storing metadata only (sizes, not payloads).
+#[derive(Debug)]
+pub struct IdealTtlCache {
+    mode: TtlMode,
+    map: HashMap<ObjectId, Entry>,
+    calendar: BTreeMap<(TimeUs, ObjectId), ()>,
+    used: u64,
+}
+
+impl IdealTtlCache {
+    pub fn new(mode: TtlMode) -> Self {
+        IdealTtlCache {
+            mode,
+            map: HashMap::new(),
+            calendar: BTreeMap::new(),
+            used: 0,
+        }
+    }
+
+    pub fn mode(&self) -> TtlMode {
+        self.mode
+    }
+
+    /// Bytes of non-expired content (exact, given `expire_until` was called
+    /// at the current time).
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, obj: ObjectId) -> bool {
+        self.map.contains_key(&obj)
+    }
+
+    /// Evict every entry whose timer expired at or before `now`.
+    /// Returns the number of evictions.
+    pub fn expire_until(&mut self, now: TimeUs) -> usize {
+        let mut n = 0;
+        loop {
+            let Some((&(exp, obj), _)) = self.calendar.iter().next() else { break };
+            if exp > now {
+                break;
+            }
+            self.calendar.remove(&(exp, obj));
+            if let Some(e) = self.map.remove(&obj) {
+                self.used -= e.size;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Process a request for `obj` of `size` bytes at `now` with the
+    /// current timer `ttl` (µs). Returns `true` on hit.
+    ///
+    /// Expiry is processed first, so a request arriving after the object's
+    /// timer lapsed is a miss even if no eviction event ran in between.
+    pub fn on_request(&mut self, now: TimeUs, obj: ObjectId, size: u64, ttl: TimeUs) -> bool {
+        self.expire_until(now);
+        match self.map.get_mut(&obj) {
+            Some(e) => {
+                if self.mode == TtlMode::WithRenewal {
+                    let old = e.expiry;
+                    e.expiry = now + ttl;
+                    let new_expiry = e.expiry;
+                    self.calendar.remove(&(old, obj));
+                    self.calendar.insert((new_expiry, obj), ());
+                }
+                true
+            }
+            None => {
+                let expiry = now + ttl;
+                self.map.insert(obj, Entry { size, expiry });
+                self.calendar.insert((expiry, obj), ());
+                self.used += size;
+                false
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.calendar.clear();
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SECOND;
+
+    #[test]
+    fn miss_then_hit_within_ttl() {
+        let mut c = IdealTtlCache::new(TtlMode::WithRenewal);
+        assert!(!c.on_request(0, 1, 100, 10 * SECOND));
+        assert!(c.on_request(5 * SECOND, 1, 100, 10 * SECOND));
+        assert_eq!(c.used(), 100);
+    }
+
+    #[test]
+    fn expires_exactly_at_timer() {
+        let mut c = IdealTtlCache::new(TtlMode::WithRenewal);
+        c.on_request(0, 1, 100, 10 * SECOND);
+        // at t=10s the entry expires (expiry inclusive)
+        assert!(!c.on_request(10 * SECOND, 1, 100, 10 * SECOND));
+    }
+
+    #[test]
+    fn renewal_extends_lifetime() {
+        let mut c = IdealTtlCache::new(TtlMode::WithRenewal);
+        c.on_request(0, 1, 100, 10 * SECOND);
+        assert!(c.on_request(9 * SECOND, 1, 100, 10 * SECOND)); // renews to 19s
+        assert!(c.on_request(18 * SECOND, 1, 100, 10 * SECOND)); // renews to 28s
+        assert!(!c.on_request(29 * SECOND, 1, 100, 10 * SECOND));
+    }
+
+    #[test]
+    fn without_renewal_hits_do_not_extend() {
+        let mut c = IdealTtlCache::new(TtlMode::WithoutRenewal);
+        c.on_request(0, 1, 100, 10 * SECOND);
+        assert!(c.on_request(9 * SECOND, 1, 100, 10 * SECOND)); // hit, no renewal
+        // original timer (10s) has lapsed:
+        assert!(!c.on_request(11 * SECOND, 1, 100, 10 * SECOND));
+    }
+
+    #[test]
+    fn used_tracks_unexpired_bytes() {
+        let mut c = IdealTtlCache::new(TtlMode::WithRenewal);
+        c.on_request(0, 1, 100, 5 * SECOND);
+        c.on_request(0, 2, 200, 50 * SECOND);
+        assert_eq!(c.used(), 300);
+        c.expire_until(10 * SECOND);
+        assert_eq!(c.used(), 200);
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
+    }
+
+    #[test]
+    fn zero_ttl_stores_nothing_usable() {
+        let mut c = IdealTtlCache::new(TtlMode::WithRenewal);
+        assert!(!c.on_request(0, 1, 100, 0));
+        // expires immediately: next request at any later time misses
+        assert!(!c.on_request(1, 1, 100, 0));
+    }
+
+    #[test]
+    fn many_objects_expire_in_order() {
+        let mut c = IdealTtlCache::new(TtlMode::WithRenewal);
+        for i in 0..100u64 {
+            c.on_request(i * SECOND, i, 10, 50 * SECOND);
+        }
+        // at t=120s objects with expiry <= 120s are gone: i + 50 <= 120
+        c.expire_until(120 * SECOND);
+        for i in 0..100u64 {
+            assert_eq!(c.contains(i), i + 50 > 120, "obj {i}");
+        }
+    }
+}

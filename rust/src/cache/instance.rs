@@ -1,0 +1,122 @@
+//! One physical cache node of the cluster: a [`Store`] plus accounting.
+
+use super::{make_store, Store};
+use crate::config::EvictionKind;
+use crate::metrics::HitMiss;
+use crate::ObjectId;
+
+/// A cluster node. The paper's instances are Redis `cache.t2.micro` nodes;
+/// the store kind and capacity are configurable.
+pub struct CacheInstance {
+    /// Stable identifier (never reused within a run, so per-server series
+    /// in Fig. 9 stay unambiguous across resizes).
+    pub id: u32,
+    store: Box<dyn Store + Send>,
+    pub stats: HitMiss,
+    /// Requests routed to this node (hits + misses), for Fig. 9 balance.
+    pub requests: u64,
+}
+
+impl CacheInstance {
+    pub fn new(id: u32, kind: EvictionKind, capacity: u64, seed: u64) -> Self {
+        CacheInstance {
+            id,
+            store: make_store(kind, capacity, seed ^ id as u64),
+            stats: HitMiss::default(),
+            requests: 0,
+        }
+    }
+
+    /// Serve a request: lookup, and on miss insert (the balancer fetched
+    /// the object from the origin). Returns `true` on hit.
+    pub fn serve(&mut self, obj: ObjectId, size: u64) -> bool {
+        self.requests += 1;
+        let hit = self.store.lookup(obj);
+        self.stats.record(hit);
+        if !hit {
+            self.store.insert(obj, size);
+        }
+        hit
+    }
+
+    /// Lookup without insertion (used when the balancer decides the object
+    /// is not worth caching).
+    pub fn lookup_only(&mut self, obj: ObjectId) -> bool {
+        self.requests += 1;
+        let hit = self.store.lookup(obj);
+        self.stats.record(hit);
+        hit
+    }
+
+    pub fn used(&self) -> u64 {
+        self.store.used()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.store.capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn contains(&self, obj: ObjectId) -> bool {
+        self.store.contains(obj)
+    }
+
+    /// Drop all content (e.g. node decommissioned then re-provisioned).
+    pub fn clear(&mut self) {
+        self.store.clear();
+    }
+
+    /// Reset per-epoch counters, keeping content.
+    pub fn reset_epoch_stats(&mut self) {
+        self.stats = HitMiss::default();
+        self.requests = 0;
+    }
+}
+
+impl std::fmt::Debug for CacheInstance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheInstance")
+            .field("id", &self.id)
+            .field("used", &self.used())
+            .field("capacity", &self.capacity())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_inserts_on_miss() {
+        let mut n = CacheInstance::new(0, EvictionKind::Lru, 1000, 1);
+        assert!(!n.serve(1, 100));
+        assert!(n.serve(1, 100));
+        assert_eq!(n.stats.hits, 1);
+        assert_eq!(n.stats.misses, 1);
+        assert_eq!(n.requests, 2);
+        assert_eq!(n.used(), 100);
+    }
+
+    #[test]
+    fn lookup_only_does_not_insert() {
+        let mut n = CacheInstance::new(0, EvictionKind::Lru, 1000, 1);
+        assert!(!n.lookup_only(7));
+        assert!(!n.contains(7));
+        assert_eq!(n.stats.misses, 1);
+    }
+
+    #[test]
+    fn epoch_stats_reset_keeps_content() {
+        let mut n = CacheInstance::new(3, EvictionKind::Lru, 1000, 1);
+        n.serve(1, 10);
+        n.reset_epoch_stats();
+        assert_eq!(n.stats.total(), 0);
+        assert_eq!(n.requests, 0);
+        assert!(n.contains(1));
+    }
+}

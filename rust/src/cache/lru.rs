@@ -1,0 +1,287 @@
+//! Strict LRU with byte capacity and heterogeneous object sizes.
+//!
+//! O(1) per operation: a `HashMap<ObjectId, slot>` indexes into a slab of
+//! intrusive doubly-linked-list nodes with a free list, so steady-state
+//! operation performs **no allocation** — the property the paper leans on
+//! when arguing CDN caches must stay O(1) per request (§2.4).
+
+use super::Store;
+use crate::util::fasthash::FastMap;
+use crate::ObjectId;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    obj: ObjectId,
+    size: u64,
+    prev: u32,
+    next: u32,
+}
+
+/// Byte-capacity LRU cache.
+#[derive(Debug)]
+pub struct LruCache {
+    capacity: u64,
+    used: u64,
+    map: FastMap<ObjectId, u32>,
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    head: u32, // most recently used
+    tail: u32, // least recently used
+    evictions: u64,
+}
+
+impl LruCache {
+    pub fn new(capacity: u64) -> Self {
+        LruCache {
+            capacity,
+            used: 0,
+            map: FastMap::default(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            evictions: 0,
+        }
+    }
+
+    /// Number of objects evicted to make room since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// The least-recently-used object, if any (next eviction victim).
+    pub fn lru_object(&self) -> Option<ObjectId> {
+        (self.tail != NIL).then(|| self.nodes[self.tail as usize].obj)
+    }
+
+    #[inline]
+    fn unlink(&mut self, idx: u32) {
+        let (prev, next) = {
+            let n = &self.nodes[idx as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    #[inline]
+    fn push_front(&mut self, idx: u32) {
+        self.nodes[idx as usize].prev = NIL;
+        self.nodes[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    #[inline]
+    fn alloc(&mut self, obj: ObjectId, size: u64) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = Node { obj, size, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                let i = self.nodes.len() as u32;
+                self.nodes.push(Node { obj, size, prev: NIL, next: NIL });
+                i
+            }
+        }
+    }
+
+    fn evict_tail(&mut self) -> Option<(ObjectId, u64)> {
+        if self.tail == NIL {
+            return None;
+        }
+        let idx = self.tail;
+        let (obj, size) = {
+            let n = &self.nodes[idx as usize];
+            (n.obj, n.size)
+        };
+        self.unlink(idx);
+        self.map.remove(&obj);
+        self.free.push(idx);
+        self.used -= size;
+        self.evictions += 1;
+        Some((obj, size))
+    }
+
+    /// Iterate resident objects from MRU to LRU (test/debug helper).
+    pub fn iter_mru(&self) -> impl Iterator<Item = (ObjectId, u64)> + '_ {
+        struct It<'a> {
+            cache: &'a LruCache,
+            cur: u32,
+        }
+        impl<'a> Iterator for It<'a> {
+            type Item = (ObjectId, u64);
+            fn next(&mut self) -> Option<Self::Item> {
+                if self.cur == NIL {
+                    return None;
+                }
+                let n = &self.cache.nodes[self.cur as usize];
+                self.cur = n.next;
+                Some((n.obj, n.size))
+            }
+        }
+        It { cache: self, cur: self.head }
+    }
+}
+
+impl Store for LruCache {
+    fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn used(&self) -> u64 {
+        self.used
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    #[inline]
+    fn lookup(&mut self, obj: ObjectId) -> bool {
+        if let Some(&idx) = self.map.get(&obj) {
+            if idx != self.head {
+                self.unlink(idx);
+                self.push_front(idx);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    fn insert(&mut self, obj: ObjectId, size: u64) -> bool {
+        if size > self.capacity {
+            return false;
+        }
+        if self.lookup(obj) {
+            return true; // refresh only
+        }
+        while self.used + size > self.capacity {
+            if self.evict_tail().is_none() {
+                break;
+            }
+        }
+        let idx = self.alloc(obj, size);
+        self.map.insert(obj, idx);
+        self.push_front(idx);
+        self.used += size;
+        true
+    }
+
+    fn remove(&mut self, obj: ObjectId) -> bool {
+        if let Some(idx) = self.map.remove(&obj) {
+            let size = self.nodes[idx as usize].size;
+            self.unlink(idx);
+            self.free.push(idx);
+            self.used -= size;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn contains(&self, obj: ObjectId) -> bool {
+        self.map.contains_key(&obj)
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::conformance;
+
+    #[test]
+    fn conformance_suite() {
+        conformance::run_all(|| Box::new(LruCache::new(1000)));
+    }
+
+    #[test]
+    fn evicts_in_lru_order() {
+        let mut c = LruCache::new(30);
+        c.insert(1, 10);
+        c.insert(2, 10);
+        c.insert(3, 10);
+        // Touch 1 so 2 becomes LRU.
+        assert!(c.lookup(1));
+        assert_eq!(c.lru_object(), Some(2));
+        c.insert(4, 10); // evicts 2
+        assert!(!c.contains(2));
+        assert!(c.contains(1) && c.contains(3) && c.contains(4));
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn heterogeneous_sizes_evict_enough() {
+        let mut c = LruCache::new(100);
+        for i in 0..10u64 {
+            c.insert(i, 10);
+        }
+        // Inserting a 95-byte object must evict until it fits.
+        assert!(c.insert(100, 95));
+        assert!(c.used() <= 100);
+        assert!(c.contains(100));
+        // 9 of the 10 small objects must have gone (95+10 > 100).
+        assert_eq!(c.len(), 1 + (100 - 95) / 10);
+    }
+
+    #[test]
+    fn mru_iteration_order() {
+        let mut c = LruCache::new(100);
+        c.insert(1, 10);
+        c.insert(2, 10);
+        c.insert(3, 10);
+        c.lookup(2);
+        let order: Vec<u64> = c.iter_mru().map(|(o, _)| o).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn free_list_reuses_slots() {
+        let mut c = LruCache::new(50);
+        for round in 0..100u64 {
+            for i in 0..5u64 {
+                c.insert(round * 5 + i, 10);
+            }
+        }
+        // Slab never exceeds the resident set by more than the churned slots.
+        assert!(c.nodes.len() <= 16, "slab grew to {}", c.nodes.len());
+    }
+
+    #[test]
+    fn remove_middle_keeps_list_consistent() {
+        let mut c = LruCache::new(100);
+        for i in 0..5u64 {
+            c.insert(i, 10);
+        }
+        assert!(c.remove(2));
+        let order: Vec<u64> = c.iter_mru().map(|(o, _)| o).collect();
+        assert_eq!(order, vec![4, 3, 1, 0]);
+        assert_eq!(c.used(), 40);
+    }
+}

@@ -1,0 +1,140 @@
+//! Physical cache substrates (§2.1): the fixed-size in-memory stores that
+//! the cluster's instances run.
+//!
+//! * [`LruCache`] — strict O(1) LRU over heterogeneous-size objects
+//!   (intrusive doubly linked list on a slab, no per-request allocation).
+//! * [`SampledLruCache`] — Redis-style eviction: sample 5 random entries,
+//!   evict the least recently used, repeat until there is room.
+//! * [`SlabCache`] — Memcached-style size classes with per-class LRU.
+//! * [`IdealTtlCache`] — an exact-calendar TTL cache (BTreeMap calendar,
+//!   O(log M)) used as the ground-truth reference for the O(1)
+//!   FIFO-calendar virtual cache of §5.1.
+//! * [`CacheInstance`] — one cluster node: an eviction policy plus
+//!   hit/miss/byte counters.
+
+mod ideal_ttl;
+mod instance;
+mod lru;
+mod sampled_lru;
+mod slab;
+
+pub use ideal_ttl::{IdealTtlCache, TtlMode};
+pub use instance::CacheInstance;
+pub use lru::LruCache;
+pub use sampled_lru::SampledLruCache;
+pub use slab::SlabCache;
+
+use crate::ObjectId;
+
+/// Common interface of the physical stores. `lookup` returns whether the
+/// object was present (a hit) and refreshes recency; `insert` stores the
+/// object, evicting as needed; objects larger than the capacity are
+/// rejected (never stored) — mirroring Memcached/Redis behaviour.
+pub trait Store {
+    /// Capacity in bytes.
+    fn capacity(&self) -> u64;
+    /// Bytes currently used.
+    fn used(&self) -> u64;
+    /// Number of resident objects.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Look up `obj`; on hit, refresh its recency. Returns hit/miss.
+    fn lookup(&mut self, obj: ObjectId) -> bool;
+    /// Insert `obj` of `size` bytes (no-op if already present, which
+    /// refreshes recency instead). Returns false if the object cannot fit
+    /// at all.
+    fn insert(&mut self, obj: ObjectId, size: u64) -> bool;
+    /// Remove `obj` if present; returns true if it was resident.
+    fn remove(&mut self, obj: ObjectId) -> bool;
+    /// Whether `obj` is resident, without touching recency.
+    fn contains(&self, obj: ObjectId) -> bool;
+    /// Drop everything.
+    fn clear(&mut self);
+}
+
+/// Build a store of the configured eviction kind.
+pub fn make_store(kind: crate::config::EvictionKind, capacity: u64, seed: u64) -> Box<dyn Store + Send> {
+    use crate::config::EvictionKind::*;
+    match kind {
+        Lru => Box::new(LruCache::new(capacity)),
+        SampledLru => Box::new(SampledLruCache::new(capacity, seed)),
+        Slab => Box::new(SlabCache::new(capacity)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod conformance {
+    //! Shared behavioural tests run against every [`Store`] implementation.
+    use super::*;
+
+    pub fn basic_hit_miss(store: &mut dyn Store) {
+        assert!(!store.lookup(1), "cold lookup must miss");
+        assert!(store.insert(1, 100));
+        assert!(store.lookup(1), "must hit after insert");
+        // Slab stores round up to a chunk; LRU stores use the exact size.
+        assert!((100..=256).contains(&store.used()), "used={}", store.used());
+        assert_eq!(store.len(), 1);
+        assert!(store.remove(1));
+        assert!(!store.remove(1));
+        assert!(!store.lookup(1));
+        assert_eq!(store.used(), 0);
+    }
+
+    pub fn capacity_respected(store: &mut dyn Store) {
+        let cap = store.capacity();
+        // Fill with objects of cap/10 bytes each; used() never exceeds cap.
+        for i in 0..100u64 {
+            store.insert(i, cap / 10);
+            assert!(store.used() <= cap, "used {} > cap {}", store.used(), cap);
+        }
+        assert!(store.len() <= 10);
+    }
+
+    pub fn oversized_rejected(store: &mut dyn Store) {
+        assert!(!store.insert(99, store.capacity() + 1));
+        assert!(!store.contains(99));
+    }
+
+    pub fn reinsert_refreshes_not_duplicates(store: &mut dyn Store) {
+        store.insert(5, 10);
+        let used = store.used();
+        store.insert(5, 10);
+        assert_eq!(store.used(), used);
+        assert_eq!(store.len(), 1);
+    }
+
+    pub fn clear_resets(store: &mut dyn Store) {
+        for i in 0..5u64 {
+            store.insert(i, 10);
+        }
+        store.clear();
+        assert_eq!(store.len(), 0);
+        assert_eq!(store.used(), 0);
+        assert!(!store.contains(0));
+    }
+
+    pub fn run_all(mk: impl Fn() -> Box<dyn Store + Send>) {
+        basic_hit_miss(&mut *mk());
+        capacity_respected(&mut *mk());
+        oversized_rejected(&mut *mk());
+        reinsert_refreshes_not_duplicates(&mut *mk());
+        clear_resets(&mut *mk());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EvictionKind;
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        for kind in [EvictionKind::Lru, EvictionKind::SampledLru, EvictionKind::Slab] {
+            let mut s = make_store(kind, 1000, 1);
+            assert_eq!(s.capacity(), 1000);
+            conformance::basic_hit_miss(&mut *s);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Redis-style sampled-LRU eviction (§2.1): "Redis picks randomly 5
+//! objects and evicts the one least recently accessed; if the available
+//! space is not sufficient, it repeats the process."
+//!
+//! Entries live in a dense vector (swap-remove on eviction) so sampling a
+//! random resident object is O(1); recency is a logical clock stamped on
+//! each access.
+
+use super::Store;
+use crate::ObjectId;
+use crate::util::fasthash::FastMap;
+use crate::util::rng::Pcg;
+
+const SAMPLES: usize = 5;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    obj: ObjectId,
+    size: u64,
+    last_access: u64,
+}
+
+/// Sampled-LRU byte-capacity cache.
+pub struct SampledLruCache {
+    capacity: u64,
+    used: u64,
+    entries: Vec<Entry>,
+    index: FastMap<ObjectId, u32>,
+    clock: u64,
+    rng: Pcg,
+    evictions: u64,
+}
+
+impl SampledLruCache {
+    pub fn new(capacity: u64, seed: u64) -> Self {
+        SampledLruCache {
+            capacity,
+            used: 0,
+            entries: Vec::new(),
+            index: FastMap::default(),
+            clock: 0,
+            rng: Pcg::seed_from_u64(seed),
+            evictions: 0,
+        }
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    #[inline]
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Pick the stalest of `SAMPLES` random entries and evict it.
+    fn evict_one(&mut self) -> bool {
+        if self.entries.is_empty() {
+            return false;
+        }
+        let mut victim = usize::MAX;
+        let mut oldest = u64::MAX;
+        for _ in 0..SAMPLES.min(self.entries.len()) {
+            let i = self.rng.below_usize(self.entries.len());
+            if self.entries[i].last_access < oldest {
+                oldest = self.entries[i].last_access;
+                victim = i;
+            }
+        }
+        let e = self.entries.swap_remove(victim);
+        self.index.remove(&e.obj);
+        // Fix the index of the entry swapped into `victim`'s slot.
+        if victim < self.entries.len() {
+            let moved = self.entries[victim].obj;
+            self.index.insert(moved, victim as u32);
+        }
+        self.used -= e.size;
+        self.evictions += 1;
+        true
+    }
+}
+
+impl Store for SampledLruCache {
+    fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn used(&self) -> u64 {
+        self.used
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[inline]
+    fn lookup(&mut self, obj: ObjectId) -> bool {
+        let t = self.tick();
+        if let Some(&i) = self.index.get(&obj) {
+            self.entries[i as usize].last_access = t;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn insert(&mut self, obj: ObjectId, size: u64) -> bool {
+        if size > self.capacity {
+            return false;
+        }
+        if self.lookup(obj) {
+            return true;
+        }
+        while self.used + size > self.capacity {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        let t = self.tick();
+        let i = self.entries.len() as u32;
+        self.entries.push(Entry { obj, size, last_access: t });
+        self.index.insert(obj, i);
+        self.used += size;
+        true
+    }
+
+    fn remove(&mut self, obj: ObjectId) -> bool {
+        if let Some(i) = self.index.remove(&obj) {
+            let i = i as usize;
+            let e = self.entries.swap_remove(i);
+            if i < self.entries.len() {
+                let moved = self.entries[i].obj;
+                self.index.insert(moved, i as u32);
+            }
+            self.used -= e.size;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn contains(&self, obj: ObjectId) -> bool {
+        self.index.contains_key(&obj)
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.index.clear();
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::conformance;
+
+    #[test]
+    fn conformance_suite() {
+        conformance::run_all(|| Box::new(SampledLruCache::new(1000, 3)));
+    }
+
+    #[test]
+    fn eviction_prefers_stale_entries() {
+        // With 5-way sampling, recently touched hot objects should survive
+        // much more often than cold ones. Insert hot+cold sets, churn, and
+        // check survival bias.
+        let mut c = SampledLruCache::new(100 * 10, 9);
+        for i in 0..100u64 {
+            c.insert(i, 10);
+        }
+        // Touch the "hot" half often.
+        for _ in 0..50 {
+            for i in 0..50u64 {
+                c.lookup(i);
+            }
+            // Insert fresh objects to force evictions.
+            for j in 0..5u64 {
+                c.insert(1000 + j + c.clock, 10);
+            }
+        }
+        let hot_survivors = (0..50u64).filter(|&i| c.contains(i)).count();
+        let cold_survivors = (50..100u64).filter(|&i| c.contains(i)).count();
+        assert!(
+            hot_survivors > cold_survivors + 10,
+            "hot={hot_survivors} cold={cold_survivors}"
+        );
+    }
+
+    #[test]
+    fn swap_remove_keeps_index_consistent() {
+        let mut c = SampledLruCache::new(1000, 5);
+        for i in 0..20u64 {
+            c.insert(i, 10);
+        }
+        // Remove half in arbitrary order, then verify all lookups.
+        for i in (0..20u64).step_by(2) {
+            assert!(c.remove(i));
+        }
+        for i in 0..20u64 {
+            assert_eq!(c.contains(i), i % 2 == 1, "obj {i}");
+            assert_eq!(c.lookup(i), i % 2 == 1);
+        }
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.used(), 100);
+    }
+
+    #[test]
+    fn repeated_eviction_frees_enough_space() {
+        let mut c = SampledLruCache::new(100, 1);
+        for i in 0..10u64 {
+            c.insert(i, 10);
+        }
+        assert!(c.insert(42, 73));
+        assert!(c.used() <= 100);
+        assert!(c.contains(42));
+    }
+}

@@ -1,0 +1,288 @@
+//! Memcached-style slab cache (§2.1): "Memcached organizes the content
+//! into classes of objects with similar sizes, and performs LRU within
+//! each class."
+//!
+//! Size classes grow geometrically (factor 2 from 64 B); each class owns a
+//! share of the byte budget proportional to demand (classes acquire pages
+//! on first need, first-come-first-served, as in Memcached before
+//! automove), which reproduces the *calcification* pathology the paper
+//! cites ([15], [25], [34]) as the reason it runs Redis instead.
+
+use super::{LruCache, Store};
+use crate::util::fasthash::FastMap;
+use crate::ObjectId;
+
+const MIN_CLASS: u64 = 64;
+const GROWTH: f64 = 2.0;
+/// Memcached page size: the unit in which classes acquire memory. Small
+/// caches shrink the page so at least a handful of pages exist (real
+/// Memcached assumes ≥ 64 MB; our tests run tiny instances).
+const PAGE: u64 = 1 << 20;
+
+#[inline]
+fn page_size_for(capacity: u64) -> u64 {
+    (capacity / 4).clamp(MIN_CLASS, PAGE).min(capacity.max(MIN_CLASS))
+}
+
+/// Slab-class cache: per-class LRU over a shared page budget.
+pub struct SlabCache {
+    capacity: u64,
+    page: u64,
+    classes: Vec<LruCache>, // class i holds objects of chunk size chunk(i)
+    class_pages: Vec<u64>,  // pages owned by each class
+    pages_total: u64,
+    pages_free: u64,
+    index: FastMap<ObjectId, u8>, // object -> class
+}
+
+impl SlabCache {
+    pub fn new(capacity: u64) -> Self {
+        let page = page_size_for(capacity);
+        let mut chunks = Vec::new();
+        let mut c = MIN_CLASS;
+        while c < page {
+            chunks.push(c);
+            c = ((c as f64) * GROWTH) as u64;
+        }
+        chunks.push(page); // largest class: one object per page
+        let nclasses = chunks.len();
+        SlabCache {
+            capacity,
+            page,
+            classes: (0..nclasses).map(|_| LruCache::new(0)).collect(),
+            class_pages: vec![0; nclasses],
+            pages_total: capacity / page,
+            pages_free: capacity / page,
+            index: FastMap::default(),
+        }
+    }
+
+    /// Chunk size of class `i`.
+    fn chunk(&self, i: usize) -> u64 {
+        let mut c = MIN_CLASS;
+        for _ in 0..i {
+            c = ((c as f64) * GROWTH) as u64;
+        }
+        c.min(self.page)
+    }
+
+    /// Class index for an object of `size` bytes, `None` if it exceeds the
+    /// largest chunk (Memcached rejects such objects by default).
+    fn class_of(&self, size: u64) -> Option<usize> {
+        if size > self.page {
+            return None;
+        }
+        let mut c = MIN_CLASS;
+        let mut i = 0usize;
+        while c < size {
+            c = ((c as f64) * GROWTH) as u64;
+            i += 1;
+        }
+        Some(i)
+    }
+
+    /// Rounded-up (chunk) size an object occupies — the internal
+    /// fragmentation Memcached pays.
+    pub fn chunk_size_for(&self, size: u64) -> Option<u64> {
+        self.class_of(size).map(|i| self.chunk(i))
+    }
+
+    /// Grow class `ci` by one page if any free page remains.
+    fn try_grow(&mut self, ci: usize) -> bool {
+        if self.pages_free == 0 {
+            return false;
+        }
+        self.pages_free -= 1;
+        self.class_pages[ci] += 1;
+        let new_cap = self.class_pages[ci] * self.page;
+        // LruCache has no resize; rebuild preserving entries (rare event —
+        // page grants happen O(capacity/PAGE) times total).
+        let mut rebuilt = LruCache::new(new_cap);
+        let entries: Vec<(ObjectId, u64)> = self.classes[ci]
+            .iter_mru()
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .collect();
+        for (obj, size) in entries {
+            rebuilt.insert(obj, size);
+        }
+        self.classes[ci] = rebuilt;
+        true
+    }
+
+    /// Bytes used, counting internal fragmentation (chunk-rounded).
+    pub fn used_with_fragmentation(&self) -> u64 {
+        self.classes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c.len() as u64 * self.chunk(i))
+            .sum()
+    }
+}
+
+impl Store for SlabCache {
+    fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn used(&self) -> u64 {
+        self.classes.iter().map(|c| c.used()).sum()
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn lookup(&mut self, obj: ObjectId) -> bool {
+        if let Some(&ci) = self.index.get(&obj) {
+            self.classes[ci as usize].lookup(obj)
+        } else {
+            false
+        }
+    }
+
+    fn insert(&mut self, obj: ObjectId, size: u64) -> bool {
+        let Some(ci) = self.class_of(size) else { return false };
+        if size > self.capacity {
+            return false;
+        }
+        if self.lookup(obj) {
+            return true;
+        }
+        let chunk = self.chunk(ci);
+        // Ensure the class can hold one more chunk: grow by pages while
+        // possible; otherwise the class's own LRU evicts (calcification:
+        // pages never move between classes).
+        while self.classes[ci].used() + chunk > self.class_pages[ci] * self.page {
+            if !self.try_grow(ci) {
+                break;
+            }
+        }
+        if self.class_pages[ci] == 0 {
+            return false; // no page ever granted and none free
+        }
+        // Track evictions performed by the class LRU to fix the index.
+        let evicted_before = self.classes[ci].evictions();
+        let ok = self.classes[ci].insert(obj, chunk);
+        if ok {
+            self.index.insert(obj, ci as u8);
+            // Remove index entries for objects the class LRU evicted.
+            if self.classes[ci].evictions() > evicted_before {
+                self.index.retain(|o, &mut c| {
+                    c as usize != ci || self.classes[ci].contains(*o)
+                });
+            }
+        }
+        ok
+    }
+
+    fn remove(&mut self, obj: ObjectId) -> bool {
+        if let Some(ci) = self.index.remove(&obj) {
+            self.classes[ci as usize].remove(obj)
+        } else {
+            false
+        }
+    }
+
+    fn contains(&self, obj: ObjectId) -> bool {
+        self.index.contains_key(&obj)
+    }
+
+    fn clear(&mut self) {
+        for (ci, c) in self.classes.iter_mut().enumerate() {
+            c.clear();
+            self.class_pages[ci] = 0;
+        }
+        self.pages_free = self.pages_total;
+        self.index.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_assignment_rounds_up() {
+        let s = SlabCache::new(64 * PAGE);
+        assert_eq!(s.class_of(1), Some(0));
+        assert_eq!(s.class_of(64), Some(0));
+        assert_eq!(s.class_of(65), Some(1));
+        assert_eq!(s.chunk_size_for(100), Some(128));
+        assert_eq!(s.chunk_size_for(PAGE + 1), None);
+    }
+
+    #[test]
+    fn tiny_capacity_still_stores() {
+        // Regression: a 1000-byte instance must still grant pages.
+        let mut s = SlabCache::new(1000);
+        assert!(s.insert(1, 100));
+        assert!(s.lookup(1));
+        assert!(s.used() <= 1000);
+    }
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut s = SlabCache::new(8 * PAGE);
+        assert!(!s.lookup(1));
+        assert!(s.insert(1, 100));
+        assert!(s.lookup(1));
+        assert!(s.remove(1));
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn per_class_lru_evicts_within_class() {
+        let mut s = SlabCache::new(PAGE); // one page only
+        let chunk = s.chunk_size_for(100).unwrap(); // 128
+        let fit = (PAGE / chunk) as u64;
+        for i in 0..fit + 5 {
+            assert!(s.insert(i, 100), "insert {i}");
+        }
+        // The first few inserted must have been evicted by the class LRU.
+        assert!(!s.contains(0));
+        assert!(s.contains(fit + 4));
+        assert!(s.len() as u64 <= fit);
+        // Index stays consistent with residency.
+        for i in 0..fit + 5 {
+            assert_eq!(s.contains(i), s.lookup(i));
+        }
+    }
+
+    #[test]
+    fn calcification_pages_never_return() {
+        // Fill with small objects (class A grabs all pages), then large
+        // objects can claim no page and are rejected — the calcification
+        // pathology (§6.1's reason to prefer Redis).
+        let mut s = SlabCache::new(4 * PAGE);
+        let mut i = 0u64;
+        while s.pages_free > 0 {
+            s.insert(i, 64);
+            i += 1;
+        }
+        assert!(!s.insert(u64::MAX, PAGE / 2), "large class got no page");
+        // Small objects still cycle fine.
+        assert!(s.insert(u64::MAX - 1, 64));
+    }
+
+    #[test]
+    fn fragmentation_accounted() {
+        let mut s = SlabCache::new(8 * PAGE);
+        s.insert(1, 100); // occupies a 128-byte chunk
+        assert_eq!(s.used(), 128);
+        assert_eq!(s.used_with_fragmentation(), 128);
+    }
+
+    #[test]
+    fn clear_releases_pages() {
+        let mut s = SlabCache::new(2 * PAGE);
+        for i in 0..1000u64 {
+            s.insert(i, 512);
+        }
+        s.clear();
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.pages_free, s.pages_total);
+        assert!(s.insert(5, PAGE / 2), "pages reusable after clear");
+    }
+}

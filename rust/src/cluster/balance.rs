@@ -1,0 +1,155 @@
+//! Fig. 9 — load balance across servers: per-interval min/max of slots,
+//! requests and misses per server, normalized by the per-server
+//! expectation. The paper reports slots within ±2.5%, misses up to +10%,
+//! requests up to +30% of the mean.
+
+use crate::metrics::TimeSeries;
+use crate::TimeUs;
+
+/// One interval's normalized spread for a metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Spread {
+    /// min(server metric) / mean(server metric); 1.0 when perfectly even.
+    pub min_norm: f64,
+    /// max(server metric) / mean(server metric).
+    pub max_norm: f64,
+}
+
+impl Spread {
+    fn of(values: &[u64]) -> Option<Spread> {
+        if values.is_empty() {
+            return None;
+        }
+        let sum: u64 = values.iter().sum();
+        if sum == 0 {
+            return None;
+        }
+        let mean = sum as f64 / values.len() as f64;
+        let min = *values.iter().min().unwrap() as f64;
+        let max = *values.iter().max().unwrap() as f64;
+        Some(Spread { min_norm: min / mean, max_norm: max / mean })
+    }
+}
+
+/// Per-epoch snapshot of all three spreads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BalanceSnapshot {
+    pub t: TimeUs,
+    pub servers: usize,
+    pub slots: Option<Spread>,
+    pub requests: Option<Spread>,
+    pub misses: Option<Spread>,
+}
+
+/// Accumulates snapshots into the six Fig. 9 series.
+#[derive(Debug, Default)]
+pub struct BalanceTracker {
+    pub slots_min: TimeSeries,
+    pub slots_max: TimeSeries,
+    pub requests_min: TimeSeries,
+    pub requests_max: TimeSeries,
+    pub misses_min: TimeSeries,
+    pub misses_max: TimeSeries,
+    snapshots: Vec<BalanceSnapshot>,
+}
+
+impl BalanceTracker {
+    pub fn new() -> Self {
+        let mut t = BalanceTracker::default();
+        t.slots_min = TimeSeries::new("slots_min");
+        t.slots_max = TimeSeries::new("slots_max");
+        t.requests_min = TimeSeries::new("requests_min");
+        t.requests_max = TimeSeries::new("requests_max");
+        t.misses_min = TimeSeries::new("misses_min");
+        t.misses_max = TimeSeries::new("misses_max");
+        t
+    }
+
+    /// Record one epoch's `(slots, requests, misses)` per server.
+    pub fn record(&mut self, t: TimeUs, per_server: &[(usize, u64, u64)]) -> BalanceSnapshot {
+        let slots: Vec<u64> = per_server.iter().map(|x| x.0 as u64).collect();
+        let reqs: Vec<u64> = per_server.iter().map(|x| x.1).collect();
+        let miss: Vec<u64> = per_server.iter().map(|x| x.2).collect();
+        let snap = BalanceSnapshot {
+            t,
+            servers: per_server.len(),
+            slots: Spread::of(&slots),
+            requests: Spread::of(&reqs),
+            misses: Spread::of(&miss),
+        };
+        if let Some(s) = snap.slots {
+            self.slots_min.push(t, s.min_norm);
+            self.slots_max.push(t, s.max_norm);
+        }
+        if let Some(s) = snap.requests {
+            self.requests_min.push(t, s.min_norm);
+            self.requests_max.push(t, s.max_norm);
+        }
+        if let Some(s) = snap.misses {
+            self.misses_min.push(t, s.min_norm);
+            self.misses_max.push(t, s.max_norm);
+        }
+        self.snapshots.push(snap);
+        snap
+    }
+
+    pub fn snapshots(&self) -> &[BalanceSnapshot] {
+        &self.snapshots
+    }
+
+    /// Worst (largest) max_norm observed for each metric across the run.
+    pub fn worst(&self) -> (f64, f64, f64) {
+        (
+            self.slots_max.max().unwrap_or(1.0),
+            self.requests_max.max().unwrap_or(1.0),
+            self.misses_max.max().unwrap_or(1.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_of_even_load_is_one() {
+        let s = Spread::of(&[100, 100, 100]).unwrap();
+        assert_eq!(s.min_norm, 1.0);
+        assert_eq!(s.max_norm, 1.0);
+    }
+
+    #[test]
+    fn spread_detects_imbalance() {
+        let s = Spread::of(&[50, 100, 150]).unwrap();
+        assert!((s.min_norm - 0.5).abs() < 1e-12);
+        assert!((s.max_norm - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spread_handles_degenerate_inputs() {
+        assert!(Spread::of(&[]).is_none());
+        assert!(Spread::of(&[0, 0]).is_none());
+        let one = Spread::of(&[7]).unwrap();
+        assert_eq!(one.min_norm, 1.0);
+        assert_eq!(one.max_norm, 1.0);
+    }
+
+    #[test]
+    fn tracker_accumulates_series() {
+        let mut t = BalanceTracker::new();
+        t.record(0, &[(10, 100, 5), (10, 200, 15)]);
+        t.record(100, &[(12, 150, 9), (8, 150, 11)]);
+        assert_eq!(t.snapshots().len(), 2);
+        assert_eq!(t.requests_max.len(), 2);
+        let (ws, wr, wm) = t.worst();
+        assert!(ws >= 1.0 && wr > 1.3 && wm > 1.4);
+    }
+
+    #[test]
+    fn single_server_is_perfectly_balanced() {
+        let mut t = BalanceTracker::new();
+        let snap = t.record(0, &[(16384, 1000, 30)]);
+        assert_eq!(snap.slots.unwrap().max_norm, 1.0);
+        assert_eq!(snap.requests.unwrap().max_norm, 1.0);
+    }
+}

@@ -1,0 +1,317 @@
+//! Horizontally scalable cache cluster behind a Redis-style two-step
+//! hash-slot scheme (§6.2, Fig. 9): 16384 slots; object keys hash into a
+//! slot; each slot is assigned to a server. Adding a server transfers
+//! randomly selected slots to it; removing one scatters its slots over
+//! the survivors.
+//!
+//! Slot moves create **spurious misses** (§5.2): the object is resident on
+//! the old owner, but requests now route to the new owner, which misses.
+//! We model this faithfully — stale copies linger on the old owner until
+//! its LRU churns them out.
+
+mod balance;
+
+pub use balance::{BalanceSnapshot, BalanceTracker};
+
+use crate::cache::CacheInstance;
+use crate::config::{ClusterConfig, EvictionKind};
+use crate::{mix64, ObjectId};
+use crate::util::rng::Pcg;
+
+/// A homogeneous cluster of cache instances plus the slot map.
+pub struct Cluster {
+    instances: Vec<CacheInstance>,
+    /// slot → index into `instances`.
+    slot_owner: Vec<u32>,
+    hash_slots: u32,
+    eviction: EvictionKind,
+    capacity_per_instance: u64,
+    next_id: u32,
+    rng: Pcg,
+    /// Cumulative slots moved by resizes (each move risks spurious misses).
+    pub slots_moved: u64,
+    /// Number of resize events that changed the instance count.
+    pub resizes: u64,
+}
+
+impl Cluster {
+    /// Create a cluster of `n ≥ 1` instances.
+    pub fn new(cfg: &ClusterConfig, capacity_per_instance: u64, n: u32) -> Self {
+        let n = n.max(1);
+        let mut rng = Pcg::seed_from_u64(cfg.seed);
+        let mut instances = Vec::with_capacity(n as usize);
+        for id in 0..n {
+            instances.push(CacheInstance::new(id, cfg.eviction, capacity_per_instance, cfg.seed));
+        }
+        // Initial assignment: round-robin then shuffle, so each server owns
+        // ~slots/n with random placement (as Redis' random assignment).
+        let mut slot_owner: Vec<u32> = (0..cfg.hash_slots).map(|s| s % n).collect();
+        rng.shuffle(&mut slot_owner);
+        Cluster {
+            instances,
+            slot_owner,
+            hash_slots: cfg.hash_slots,
+            eviction: cfg.eviction,
+            capacity_per_instance,
+            next_id: n,
+            rng,
+            slots_moved: 0,
+            resizes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    pub fn instances(&self) -> &[CacheInstance] {
+        &self.instances
+    }
+
+    pub fn instances_mut(&mut self) -> &mut [CacheInstance] {
+        &mut self.instances
+    }
+
+    pub fn capacity_per_instance(&self) -> u64 {
+        self.capacity_per_instance
+    }
+
+    /// Total bytes resident across instances.
+    pub fn used(&self) -> u64 {
+        self.instances.iter().map(|i| i.used()).sum()
+    }
+
+    /// Hash slot of an object key (two-step scheme, step 1).
+    #[inline]
+    pub fn slot_of(&self, obj: ObjectId) -> u32 {
+        (mix64(obj) % self.hash_slots as u64) as u32
+    }
+
+    /// Index of the instance responsible for `obj` (step 2).
+    #[inline]
+    pub fn route(&self, obj: ObjectId) -> usize {
+        self.slot_owner[self.slot_of(obj) as usize] as usize
+    }
+
+    /// Serve a request through the slot map. Returns `true` on hit.
+    #[inline]
+    pub fn serve(&mut self, obj: ObjectId, size: u64) -> bool {
+        let idx = self.route(obj);
+        self.instances[idx].serve(obj, size)
+    }
+
+    /// Whether the responsible instance currently holds `obj`.
+    pub fn contains(&self, obj: ObjectId) -> bool {
+        self.instances[self.route(obj)].contains(obj)
+    }
+
+    /// Whether *any* instance holds `obj` — used to count spurious misses
+    /// (present somewhere, but not where routing points).
+    pub fn resident_anywhere(&self, obj: ObjectId) -> bool {
+        self.instances.iter().any(|i| i.contains(obj))
+    }
+
+    /// Whether an instance *other than* `except` holds `obj` (stale copy
+    /// left behind by a slot move).
+    pub fn resident_elsewhere(&self, obj: ObjectId, except: usize) -> bool {
+        self.instances
+            .iter()
+            .enumerate()
+            .any(|(i, inst)| i != except && inst.contains(obj))
+    }
+
+    /// Slots currently owned by instance index `idx`.
+    pub fn slots_of_instance(&self, idx: usize) -> usize {
+        self.slot_owner.iter().filter(|&&o| o as usize == idx).count()
+    }
+
+    /// Resize the cluster to `target` instances (Algorithm 2 line 8 side
+    /// effect). Adding: each new server receives `slots/new_total` randomly
+    /// chosen slots. Removing: the victims' slots scatter uniformly over
+    /// the survivors. Returns slots moved.
+    pub fn resize(&mut self, target: u32) -> u64 {
+        let target = target.max(1) as usize;
+        let before = self.instances.len();
+        if target == before {
+            return 0;
+        }
+        self.resizes += 1;
+        let mut moved = 0u64;
+        if target > before {
+            for _ in before..target {
+                let new_idx = self.instances.len() as u32;
+                self.instances.push(CacheInstance::new(
+                    self.next_id,
+                    self.eviction,
+                    self.capacity_per_instance,
+                    mix64(self.next_id as u64) ^ 0x51AB,
+                ));
+                self.next_id += 1;
+                // Transfer the expected share of slots: pick each slot with
+                // probability 1/(current server count).
+                let n_now = self.instances.len() as u32;
+                let share = self.hash_slots / n_now;
+                let mut candidates: Vec<u32> = (0..self.hash_slots).collect();
+                self.rng.shuffle(&mut candidates);
+                for &slot in candidates.iter().take(share as usize) {
+                    if self.slot_owner[slot as usize] != new_idx {
+                        self.slot_owner[slot as usize] = new_idx;
+                        moved += 1;
+                    }
+                }
+            }
+        } else {
+            // Remove the highest-index instances; scatter their slots.
+            while self.instances.len() > target {
+                let victim = (self.instances.len() - 1) as u32;
+                let survivors = victim; // indices 0..victim remain
+                for slot in 0..self.hash_slots as usize {
+                    if self.slot_owner[slot] == victim {
+                        self.slot_owner[slot] = self.rng.below(survivors as u64) as u32;
+                        moved += 1;
+                    }
+                }
+                self.instances.pop();
+            }
+        }
+        self.slots_moved += moved;
+        moved
+    }
+
+    /// Per-instance snapshot for Fig. 9 (slots / requests / misses,
+    /// normalized inside [`BalanceTracker`]).
+    pub fn balance_snapshot(&self) -> Vec<(usize, u64, u64)> {
+        (0..self.instances.len())
+            .map(|i| {
+                (
+                    self.slots_of_instance(i),
+                    self.instances[i].requests,
+                    self.instances[i].stats.misses,
+                )
+            })
+            .collect()
+    }
+
+    /// Reset per-epoch counters on every instance.
+    pub fn reset_epoch_stats(&mut self) {
+        for i in &mut self.instances {
+            i.reset_epoch_stats();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn mk(n: u32) -> Cluster {
+        Cluster::new(&ClusterConfig::default(), 1000 * 1000, n)
+    }
+
+    #[test]
+    fn slots_partition_completely() {
+        let c = mk(4);
+        let total: usize = (0..4).map(|i| c.slots_of_instance(i)).sum();
+        assert_eq!(total, 16384);
+        // Roughly balanced: each within 15% of 4096.
+        for i in 0..4 {
+            let s = c.slots_of_instance(i) as f64;
+            assert!((s - 4096.0).abs() / 4096.0 < 0.15, "server {i}: {s}");
+        }
+    }
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let c = mk(3);
+        for obj in 0..1000u64 {
+            let r = c.route(obj);
+            assert!(r < 3);
+            assert_eq!(r, c.route(obj));
+        }
+    }
+
+    #[test]
+    fn serve_hits_after_insert() {
+        let mut c = mk(2);
+        assert!(!c.serve(42, 100));
+        assert!(c.serve(42, 100));
+        assert_eq!(c.used(), 100);
+    }
+
+    #[test]
+    fn grow_moves_expected_share() {
+        let mut c = mk(4);
+        let moved = c.resize(5);
+        // New server should own ≈ 16384/5 ≈ 3276 slots.
+        let share = c.slots_of_instance(4) as f64;
+        assert!((share - 3276.8).abs() / 3276.8 < 0.05, "share={share}");
+        assert!(moved > 0);
+        assert_eq!(c.len(), 5);
+        let total: usize = (0..5).map(|i| c.slots_of_instance(i)).sum();
+        assert_eq!(total, 16384);
+    }
+
+    #[test]
+    fn shrink_scatters_slots() {
+        let mut c = mk(5);
+        c.resize(3);
+        assert_eq!(c.len(), 3);
+        let total: usize = (0..3).map(|i| c.slots_of_instance(i)).sum();
+        assert_eq!(total, 16384);
+        for i in 0..3 {
+            assert!(c.slots_of_instance(i) > 3000, "server {i} starved");
+        }
+    }
+
+    #[test]
+    fn resize_to_same_is_noop() {
+        let mut c = mk(4);
+        assert_eq!(c.resize(4), 0);
+        assert_eq!(c.resizes, 0);
+    }
+
+    #[test]
+    fn spurious_miss_after_resize() {
+        let mut c = mk(2);
+        // Fill with objects, then grow; some objects now route elsewhere
+        // while the copies are still resident on the old owner.
+        for obj in 0..2000u64 {
+            c.serve(obj, 10);
+        }
+        c.resize(3);
+        let mut spurious = 0;
+        for obj in 0..2000u64 {
+            if !c.contains(obj) && c.resident_anywhere(obj) {
+                spurious += 1;
+            }
+        }
+        // With 1/3 of slots moved, a sizeable fraction must be spurious.
+        assert!(spurious > 200, "spurious={spurious}");
+    }
+
+    #[test]
+    fn min_one_instance() {
+        let mut c = mk(2);
+        c.resize(0);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn instance_ids_never_reused() {
+        let mut c = mk(2);
+        c.resize(4);
+        c.resize(2);
+        c.resize(4);
+        let ids: Vec<u32> = c.instances().iter().map(|i| i.id).collect();
+        // First two survive; later adds got fresh ids (2,3 then 4,5).
+        assert_eq!(ids[0], 0);
+        assert_eq!(ids[1], 1);
+        assert_eq!(ids[2], 4);
+        assert_eq!(ids[3], 5);
+    }
+}

@@ -1,0 +1,130 @@
+//! Cloud cache instance catalog, modelled on Amazon ElastiCache (§2.2,
+//! §6.1). Prices are the Oct. 2017 US figures the paper quotes.
+
+/// One purchasable cache node configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceType {
+    /// Catalog name, e.g. `cache.t2.micro`.
+    pub name: String,
+    /// Usable RAM in bytes.
+    pub ram_bytes: u64,
+    /// Number of vCPUs (relevant for throughput scaling discussions).
+    pub vcpus: u32,
+    /// On-demand price, dollars per hour.
+    pub dollars_per_hour: f64,
+}
+
+impl InstanceType {
+    /// The instance the paper selects: 0.555 GB RAM, 1 vCPU, $0.017/h.
+    /// Small nodes give fine sizing granularity and one vCPU each, which
+    /// preserves aggregate throughput while scaling (§6.1).
+    pub fn cache_t2_micro() -> Self {
+        InstanceType {
+            name: "cache.t2.micro".into(),
+            ram_bytes: 555_000_000,
+            vcpus: 1,
+            dollars_per_hour: 0.017,
+        }
+    }
+
+    /// 3.22 GB / 2 vCPU node (the "bigger instance" §6.1 argues against).
+    pub fn cache_t2_medium() -> Self {
+        InstanceType {
+            name: "cache.t2.medium".into(),
+            ram_bytes: 3_220_000_000,
+            vcpus: 2,
+            dollars_per_hour: 0.068,
+        }
+    }
+
+    /// 6.05 GB / 2 vCPU node.
+    pub fn cache_m4_large() -> Self {
+        InstanceType {
+            name: "cache.m4.large".into(),
+            ram_bytes: 6_050_000_000,
+            vcpus: 2,
+            dollars_per_hour: 0.156,
+        }
+    }
+
+    /// Dollars per byte·hour — the granularity-independent storage price.
+    pub fn dollars_per_byte_hour(&self) -> f64 {
+        self.dollars_per_hour / self.ram_bytes as f64
+    }
+}
+
+/// The full catalog a user can choose from when configuring the cluster.
+#[derive(Debug, Clone)]
+pub struct InstanceCatalog {
+    pub instances: Vec<InstanceType>,
+}
+
+impl Default for InstanceCatalog {
+    fn default() -> Self {
+        InstanceCatalog {
+            instances: vec![
+                InstanceType::cache_t2_micro(),
+                InstanceType::cache_t2_medium(),
+                InstanceType::cache_m4_large(),
+            ],
+        }
+    }
+}
+
+impl InstanceCatalog {
+    /// Look an instance type up by name.
+    pub fn by_name(&self, name: &str) -> Option<&InstanceType> {
+        self.instances.iter().find(|i| i.name == name)
+    }
+
+    /// The cheapest instance per byte·hour (what a price-driven user picks
+    /// absent throughput constraints).
+    pub fn cheapest_per_byte(&self) -> Option<&InstanceType> {
+        self.instances.iter().min_by(|a, b| {
+            a.dollars_per_byte_hour()
+                .partial_cmp(&b.dollars_per_byte_hour())
+                .unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        let cat = InstanceCatalog::default();
+        assert!(cat.by_name("cache.t2.micro").is_some());
+        assert!(cat.by_name("cache.none").is_none());
+        assert_eq!(cat.instances.len(), 3);
+    }
+
+    #[test]
+    fn micro_matches_paper() {
+        let m = InstanceType::cache_t2_micro();
+        assert_eq!(m.vcpus, 1);
+        assert!((m.dollars_per_hour - 0.017).abs() < 1e-12);
+        // eight micro nodes ≈ the production 4 GB cache of §6.1
+        assert!(8 * m.ram_bytes >= 4_000_000_000);
+    }
+
+    #[test]
+    fn per_byte_pricing_is_close_to_linear() {
+        // [39] (cited in §4.1): prices are almost linear in RAM. Our catalog
+        // reflects that: per-byte-hour prices within ~2.5x of each other.
+        let cat = InstanceCatalog::default();
+        let prices: Vec<f64> = cat
+            .instances
+            .iter()
+            .map(|i| i.dollars_per_byte_hour())
+            .collect();
+        let lo = prices.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = prices.iter().cloned().fold(0.0, f64::max);
+        assert!(hi / lo < 2.5, "hi={hi} lo={lo}");
+        assert_eq!(
+            cat.cheapest_per_byte().unwrap().name,
+            "cache.t2.medium"
+        );
+    }
+}

@@ -1,0 +1,561 @@
+//! Configuration system: instance catalog, cost constants, controller and
+//! scaler parameters, workload description.
+//!
+//! Everything is plain-old-data, (de)serializable from a TOML subset
+//! ([`crate::util::toml_lite`]), with defaults matching §6.1 of the paper
+//! (Amazon ElastiCache `cache.t2.micro`, Oct. 2017 US pricing, one-hour
+//! billing epochs, per-miss cost derived from the production 4 GB cache
+//! balance-point rule of thumb).
+
+mod instance;
+
+pub use instance::{InstanceCatalog, InstanceType};
+
+use crate::util::toml_lite::{Doc, Value};
+use crate::{Result, HOUR};
+use std::path::Path;
+
+/// Gain (step-size) schedule `ε(n)` for the stochastic-approximation TTL
+/// update of §4.1 / eq. (7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GainSchedule {
+    /// Constant gain `ε(n) = eps0`. Does not converge w.p.1 but tracks
+    /// non-stationary popularities — the mode the paper uses on real traces.
+    Constant { eps0: f64 },
+    /// Polynomial decay `ε(n) = eps0 / (1 + n)^exponent` with
+    /// `0.5 < exponent ≤ 1`, satisfying the Robbins–Monro conditions of
+    /// Proposition 1 (Σε = ∞, Σε² < ∞).
+    Polynomial { eps0: f64, exponent: f64 },
+}
+
+impl GainSchedule {
+    /// Gain for the `n`-th update (0-based).
+    #[inline]
+    pub fn gain(&self, n: u64) -> f64 {
+        match *self {
+            GainSchedule::Constant { eps0 } => eps0,
+            GainSchedule::Polynomial { eps0, exponent } => {
+                eps0 / (1.0 + n as f64).powf(exponent)
+            }
+        }
+    }
+
+    /// True if the schedule satisfies the Robbins–Monro conditions.
+    pub fn converges_wp1(&self) -> bool {
+        match *self {
+            GainSchedule::Constant { .. } => false,
+            GainSchedule::Polynomial { exponent, .. } => {
+                exponent > 0.5 && exponent <= 1.0
+            }
+        }
+    }
+}
+
+impl Default for GainSchedule {
+    fn default() -> Self {
+        // The raw gradient sample (λ̂·m − c_i) is measured in $/s and is
+        // tiny in absolute terms (≈1e-9 for this catalog), so a large eps0
+        // is required to move T by seconds. See ControllerConfig::normalized
+        // for the scale-free alternative.
+        GainSchedule::Constant { eps0: 5.0e9 }
+    }
+}
+
+/// Parameters of the TTL stochastic-approximation controller (§4.1, §5.1).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Initial timer value, seconds.
+    pub t_init_secs: f64,
+    /// Projection lower bound, seconds. Proposition 1 permits any closed
+    /// interval; a small positive floor keeps `T = 0` from becoming an
+    /// absorbing state of the *practical* estimator (at T = 0 no window
+    /// can ever record a hit, so every correction is negative and the
+    /// iterate can never escape — a pathology of the delayed-measurement
+    /// implementation, not of the theory).
+    pub t_min_secs: f64,
+    /// Projection upper bound `T_max`, seconds (Proposition 1 projects the
+    /// iterate onto `[T_min, T_max]`).
+    pub t_max_secs: f64,
+    /// Gain schedule ε(n).
+    pub gain: GainSchedule,
+    /// If true, normalise the correction term by an EWMA of its absolute
+    /// value, making the update scale-free: `T += ε̃ · corr / ewma(|corr|)`
+    /// with `ε̃` in seconds. This keeps the controller robust across cost
+    /// catalogs without retuning eps0; disable to run the paper's plain
+    /// eq. (7).
+    pub normalized: bool,
+    /// Step size in seconds used when `normalized` is on.
+    pub normalized_step_secs: f64,
+    /// EWMA smoothing factor for the correction magnitude (normalised mode).
+    pub normalized_ewma_alpha: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            t_init_secs: 60.0,
+            t_min_secs: 1.0,
+            t_max_secs: 6.0 * 3600.0,
+            gain: GainSchedule::default(),
+            normalized: true,
+            normalized_step_secs: 0.5,
+            normalized_ewma_alpha: 0.002,
+        }
+    }
+}
+
+/// Cost model constants (§2.3, §6.1).
+#[derive(Debug, Clone)]
+pub struct CostConfig {
+    /// Instance type used for every node of the homogeneous cluster.
+    pub instance: InstanceType,
+    /// Billing epoch in microseconds (paper: 1 h minimum billing period).
+    pub epoch_us: u64,
+    /// Cost charged per miss, dollars. §6.1: 1.4676e-7 $/miss, derived from
+    /// the balance-point rule on the production cache.
+    pub miss_cost_dollars: f64,
+    /// If true, the miss cost is proportional to object size:
+    /// `m_o = miss_cost_dollars · s_o / mean_object_bytes` — the
+    /// heterogeneous-cost generality of §4. Default: constant per miss.
+    pub miss_cost_per_byte: bool,
+    /// Mean object size (bytes) used to normalise per-byte miss costs.
+    pub mean_object_bytes: f64,
+}
+
+impl CostConfig {
+    /// Storage cost per byte·second, from the instance hourly price.
+    #[inline]
+    pub fn storage_cost_per_byte_sec(&self) -> f64 {
+        self.instance.dollars_per_hour / (self.instance.ram_bytes as f64 * 3600.0)
+    }
+
+    /// Storage cost rate `c_i = s_i · c` ($/s) for an object of `size` bytes.
+    #[inline]
+    pub fn storage_rate(&self, size: u64) -> f64 {
+        size as f64 * self.storage_cost_per_byte_sec()
+    }
+
+    /// Miss cost `m_o` for an object of `size` bytes.
+    #[inline]
+    pub fn miss_cost(&self, size: u64) -> f64 {
+        if self.miss_cost_per_byte {
+            self.miss_cost_dollars * size as f64 / self.mean_object_bytes
+        } else {
+            self.miss_cost_dollars
+        }
+    }
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig {
+            instance: InstanceType::cache_t2_micro(),
+            epoch_us: HOUR,
+            miss_cost_dollars: 1.4676e-7,
+            miss_cost_per_byte: false,
+            mean_object_bytes: 64.0 * 1024.0,
+        }
+    }
+}
+
+/// Which epoch-end sizing policy drives the cluster (§6.1 "previous
+/// solutions" + our model-driven ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Static cluster of `fixed_instances` nodes (the paper's baseline).
+    Fixed,
+    /// Algorithm 2: virtual-TTL-cache-driven sizing (the paper's system).
+    Ttl,
+    /// Exact-MRC-driven sizing (Olken order-statistics tree, O(log M)/req).
+    Mrc,
+    /// Ideal vertically scalable TTL cache billed on instantaneous size.
+    IdealTtl,
+    /// PJRT analytic planner: bucketed IRM model argmin over the AOT cost
+    /// curve (our L1/L2 integration; an ablation, not in the paper).
+    Analytic,
+}
+
+impl PolicyKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PolicyKind::Fixed => "fixed",
+            PolicyKind::Ttl => "ttl",
+            PolicyKind::Mrc => "mrc",
+            PolicyKind::IdealTtl => "ideal_ttl",
+            PolicyKind::Analytic => "analytic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        Ok(match s {
+            "fixed" => PolicyKind::Fixed,
+            "ttl" => PolicyKind::Ttl,
+            "mrc" => PolicyKind::Mrc,
+            "ideal_ttl" | "ideal-ttl" => PolicyKind::IdealTtl,
+            "analytic" => PolicyKind::Analytic,
+            other => anyhow::bail!(
+                "unknown policy {other} (fixed|ttl|mrc|ideal_ttl|analytic)"
+            ),
+        })
+    }
+}
+
+/// Scaler parameters.
+#[derive(Debug, Clone)]
+pub struct ScalerConfig {
+    pub policy: PolicyKind,
+    /// Number of instances for [`PolicyKind::Fixed`].
+    pub fixed_instances: u32,
+    /// Hard cap on cluster size for all elastic policies.
+    pub max_instances: u32,
+    /// Minimum cluster size (the balancer keeps at least one node so the
+    /// service stays up even when the optimal size is zero).
+    pub min_instances: u32,
+    /// Exponential decay applied to the MRC reuse histogram at each epoch
+    /// boundary so that sizing tracks the diurnal pattern.
+    pub mrc_decay: f64,
+}
+
+impl Default for ScalerConfig {
+    fn default() -> Self {
+        ScalerConfig {
+            policy: PolicyKind::Ttl,
+            fixed_instances: 8,
+            max_instances: 64,
+            min_instances: 1,
+            mrc_decay: 0.5,
+        }
+    }
+}
+
+/// Physical cache eviction policy for the instances (§2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionKind {
+    /// Strict LRU (Memcached within a size class; our default).
+    Lru,
+    /// Redis-style sampled LRU: evict the least recently used of 5 random
+    /// entries, repeating until enough space is free.
+    SampledLru,
+    /// Memcached-style slab allocation: size classes with per-class LRU.
+    Slab,
+}
+
+impl EvictionKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EvictionKind::Lru => "lru",
+            EvictionKind::SampledLru => "sampled_lru",
+            EvictionKind::Slab => "slab",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EvictionKind> {
+        Ok(match s {
+            "lru" => EvictionKind::Lru,
+            "sampled_lru" => EvictionKind::SampledLru,
+            "slab" => EvictionKind::Slab,
+            other => anyhow::bail!("unknown eviction kind {other}"),
+        })
+    }
+}
+
+/// Cluster parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub eviction: EvictionKind,
+    /// Redis cluster hash slots (16384 in the spec and in the paper).
+    pub hash_slots: u32,
+    /// Random seed for slot (re)assignment.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            eviction: EvictionKind::Lru,
+            hash_slots: 16384,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Top-level experiment / run configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub cost: CostConfig,
+    pub controller: ControllerConfig,
+    pub scaler: ScalerConfig,
+    pub cluster: ClusterConfig,
+}
+
+impl Config {
+    /// Load a TOML-subset config file; unspecified keys keep defaults.
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text)?;
+        let mut cfg = Config::default();
+
+        // [cost]
+        if let Some(v) = doc.get_str("cost.instance") {
+            let cat = InstanceCatalog::default();
+            cfg.cost.instance = cat
+                .by_name(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown instance type {v}"))?
+                .clone();
+        }
+        if let Some(v) = doc.get_u64("cost.instance_ram_bytes") {
+            cfg.cost.instance.ram_bytes = v;
+        }
+        if let Some(v) = doc.get_f64("cost.instance_dollars_per_hour") {
+            cfg.cost.instance.dollars_per_hour = v;
+        }
+        if let Some(v) = doc.get_u64("cost.epoch_us") {
+            cfg.cost.epoch_us = v;
+        }
+        if let Some(v) = doc.get_f64("cost.miss_cost_dollars") {
+            cfg.cost.miss_cost_dollars = v;
+        }
+        if let Some(v) = doc.get_bool("cost.miss_cost_per_byte") {
+            cfg.cost.miss_cost_per_byte = v;
+        }
+        if let Some(v) = doc.get_f64("cost.mean_object_bytes") {
+            cfg.cost.mean_object_bytes = v;
+        }
+
+        // [controller]
+        if let Some(v) = doc.get_f64("controller.t_init_secs") {
+            cfg.controller.t_init_secs = v;
+        }
+        if let Some(v) = doc.get_f64("controller.t_min_secs") {
+            cfg.controller.t_min_secs = v;
+        }
+        if let Some(v) = doc.get_f64("controller.t_max_secs") {
+            cfg.controller.t_max_secs = v;
+        }
+        if let Some(v) = doc.get_bool("controller.normalized") {
+            cfg.controller.normalized = v;
+        }
+        if let Some(v) = doc.get_f64("controller.normalized_step_secs") {
+            cfg.controller.normalized_step_secs = v;
+        }
+        if let Some(v) = doc.get_f64("controller.normalized_ewma_alpha") {
+            cfg.controller.normalized_ewma_alpha = v;
+        }
+        match (
+            doc.get_str("controller.gain_kind"),
+            doc.get_f64("controller.gain_eps0"),
+            doc.get_f64("controller.gain_exponent"),
+        ) {
+            (Some("constant"), Some(eps0), _) => {
+                cfg.controller.gain = GainSchedule::Constant { eps0 };
+            }
+            (Some("polynomial"), Some(eps0), Some(exponent)) => {
+                cfg.controller.gain = GainSchedule::Polynomial { eps0, exponent };
+            }
+            (Some(other), _, _) => anyhow::bail!("unknown gain_kind {other}"),
+            _ => {}
+        }
+
+        // [scaler]
+        if let Some(v) = doc.get_str("scaler.policy") {
+            cfg.scaler.policy = PolicyKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_u32("scaler.fixed_instances") {
+            cfg.scaler.fixed_instances = v;
+        }
+        if let Some(v) = doc.get_u32("scaler.max_instances") {
+            cfg.scaler.max_instances = v;
+        }
+        if let Some(v) = doc.get_u32("scaler.min_instances") {
+            cfg.scaler.min_instances = v;
+        }
+        if let Some(v) = doc.get_f64("scaler.mrc_decay") {
+            cfg.scaler.mrc_decay = v;
+        }
+
+        // [cluster]
+        if let Some(v) = doc.get_str("cluster.eviction") {
+            cfg.cluster.eviction = EvictionKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_u32("cluster.hash_slots") {
+            cfg.cluster.hash_slots = v;
+        }
+        if let Some(v) = doc.get_u64("cluster.seed") {
+            cfg.cluster.seed = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to TOML-subset text (round-trips through
+    /// [`Self::from_toml`]).
+    pub fn to_toml(&self) -> String {
+        let mut doc = Doc::default();
+        doc.set("cost.instance", Value::Str(self.cost.instance.name.clone()));
+        doc.set(
+            "cost.instance_ram_bytes",
+            Value::Int(self.cost.instance.ram_bytes as i64),
+        );
+        doc.set(
+            "cost.instance_dollars_per_hour",
+            Value::Float(self.cost.instance.dollars_per_hour),
+        );
+        doc.set("cost.epoch_us", Value::Int(self.cost.epoch_us as i64));
+        doc.set(
+            "cost.miss_cost_dollars",
+            Value::Float(self.cost.miss_cost_dollars),
+        );
+        doc.set(
+            "cost.miss_cost_per_byte",
+            Value::Bool(self.cost.miss_cost_per_byte),
+        );
+        doc.set(
+            "cost.mean_object_bytes",
+            Value::Float(self.cost.mean_object_bytes),
+        );
+
+        doc.set("controller.t_init_secs", Value::Float(self.controller.t_init_secs));
+        doc.set("controller.t_min_secs", Value::Float(self.controller.t_min_secs));
+        doc.set("controller.t_max_secs", Value::Float(self.controller.t_max_secs));
+        doc.set("controller.normalized", Value::Bool(self.controller.normalized));
+        doc.set(
+            "controller.normalized_step_secs",
+            Value::Float(self.controller.normalized_step_secs),
+        );
+        doc.set(
+            "controller.normalized_ewma_alpha",
+            Value::Float(self.controller.normalized_ewma_alpha),
+        );
+        match self.controller.gain {
+            GainSchedule::Constant { eps0 } => {
+                doc.set("controller.gain_kind", Value::Str("constant".into()));
+                doc.set("controller.gain_eps0", Value::Float(eps0));
+            }
+            GainSchedule::Polynomial { eps0, exponent } => {
+                doc.set("controller.gain_kind", Value::Str("polynomial".into()));
+                doc.set("controller.gain_eps0", Value::Float(eps0));
+                doc.set("controller.gain_exponent", Value::Float(exponent));
+            }
+        }
+
+        doc.set("scaler.policy", Value::Str(self.scaler.policy.as_str().into()));
+        doc.set(
+            "scaler.fixed_instances",
+            Value::Int(self.scaler.fixed_instances as i64),
+        );
+        doc.set("scaler.max_instances", Value::Int(self.scaler.max_instances as i64));
+        doc.set("scaler.min_instances", Value::Int(self.scaler.min_instances as i64));
+        doc.set("scaler.mrc_decay", Value::Float(self.scaler.mrc_decay));
+
+        doc.set(
+            "cluster.eviction",
+            Value::Str(self.cluster.eviction.as_str().into()),
+        );
+        doc.set("cluster.hash_slots", Value::Int(self.cluster.hash_slots as i64));
+        doc.set("cluster.seed", Value::Int(self.cluster.seed as i64));
+        doc.render()
+    }
+
+    /// Convenience: a config running the given policy, other fields default.
+    pub fn with_policy(policy: PolicyKind) -> Self {
+        let mut c = Config::default();
+        c.scaler.policy = policy;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::tempdir;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = CostConfig::default();
+        assert_eq!(c.epoch_us, HOUR);
+        assert!((c.miss_cost_dollars - 1.4676e-7).abs() < 1e-12);
+        assert_eq!(c.instance.ram_bytes, 555_000_000);
+        assert!((c.instance.dollars_per_hour - 0.017).abs() < 1e-9);
+        // c = 0.017 / (0.555e9 * 3600) ≈ 8.51e-15 $/byte/s
+        let per_bs = c.storage_cost_per_byte_sec();
+        assert!((per_bs - 8.508508508508508e-15).abs() / per_bs < 1e-9);
+    }
+
+    #[test]
+    fn miss_cost_modes() {
+        let mut c = CostConfig::default();
+        assert_eq!(c.miss_cost(1), c.miss_cost(1 << 20));
+        c.miss_cost_per_byte = true;
+        c.mean_object_bytes = 1024.0;
+        assert!((c.miss_cost(1024) - c.miss_cost_dollars).abs() < 1e-18);
+        assert!(c.miss_cost(2048) > c.miss_cost(1024));
+    }
+
+    #[test]
+    fn gain_schedules() {
+        let g = GainSchedule::Constant { eps0: 2.0 };
+        assert_eq!(g.gain(0), 2.0);
+        assert_eq!(g.gain(1000), 2.0);
+        assert!(!g.converges_wp1());
+
+        let p = GainSchedule::Polynomial { eps0: 1.0, exponent: 0.7 };
+        assert!(p.converges_wp1());
+        assert!(p.gain(10) < p.gain(0));
+        // Σ ε²(n) finite requires exponent > 0.5
+        let bad = GainSchedule::Polynomial { eps0: 1.0, exponent: 0.4 };
+        assert!(!bad.converges_wp1());
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let mut cfg = Config::default();
+        cfg.scaler.policy = PolicyKind::Mrc;
+        cfg.controller.t_max_secs = 1234.0;
+        cfg.controller.gain = GainSchedule::Polynomial { eps0: 3.0, exponent: 0.8 };
+        cfg.cluster.eviction = EvictionKind::Slab;
+        let text = cfg.to_toml();
+        let back = Config::from_toml(&text).unwrap();
+        assert_eq!(back.scaler.policy, PolicyKind::Mrc);
+        assert_eq!(back.controller.t_max_secs, 1234.0);
+        assert_eq!(back.controller.gain, cfg.controller.gain);
+        assert_eq!(back.cluster.eviction, EvictionKind::Slab);
+        assert_eq!(back.cost.instance.name, "cache.t2.micro");
+    }
+
+    #[test]
+    fn from_path_reads_partial_config() {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("cfg.toml");
+        std::fs::write(&p, "[scaler]\npolicy = \"ideal_ttl\"\nfixed_instances = 4\n").unwrap();
+        let cfg = Config::from_path(&p).unwrap();
+        assert_eq!(cfg.scaler.policy, PolicyKind::IdealTtl);
+        assert_eq!(cfg.scaler.fixed_instances, 4);
+        // unspecified sections fall back to defaults
+        assert_eq!(cfg.cost.epoch_us, HOUR);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(Config::from_toml("[scaler]\npolicy = \"bogus\"\n").is_err());
+        assert!(Config::from_toml("[cost]\ninstance = \"cache.none\"\n").is_err());
+        assert!(Config::from_toml("[controller]\ngain_kind = \"exp\"\ngain_eps0 = 1.0\n").is_err());
+    }
+
+    #[test]
+    fn policy_kind_string_round_trip() {
+        for p in [
+            PolicyKind::Fixed,
+            PolicyKind::Ttl,
+            PolicyKind::Mrc,
+            PolicyKind::IdealTtl,
+            PolicyKind::Analytic,
+        ] {
+            assert_eq!(PolicyKind::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(PolicyKind::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Cost accounting (§2.3): storage cost `C^s(1,k) = Σ_h c^s·I(h)` billed
+//! per epoch, miss cost `C^m = Σ_n m_{r(n)}` accrued per miss, and the
+//! per-run cumulative series of Figs. 6–8.
+
+use crate::config::CostConfig;
+use crate::metrics::TimeSeries;
+use crate::TimeUs;
+
+/// Running cost ledger for one policy run.
+#[derive(Debug)]
+pub struct CostTracker {
+    cfg: CostConfig,
+    /// Total storage dollars so far.
+    storage_total: f64,
+    /// Total miss dollars so far.
+    miss_total: f64,
+    /// Miss dollars accrued within the current epoch.
+    epoch_miss: f64,
+    /// Misses within the current epoch.
+    epoch_miss_count: u64,
+    /// Cumulative series sampled at epoch boundaries.
+    pub storage_series: TimeSeries,
+    pub miss_series: TimeSeries,
+    pub total_series: TimeSeries,
+    /// Instances billed per epoch.
+    pub instances_series: TimeSeries,
+    epochs: u64,
+}
+
+impl CostTracker {
+    pub fn new(cfg: CostConfig) -> Self {
+        CostTracker {
+            cfg,
+            storage_total: 0.0,
+            miss_total: 0.0,
+            epoch_miss: 0.0,
+            epoch_miss_count: 0,
+            storage_series: TimeSeries::new("storage_cum"),
+            miss_series: TimeSeries::new("miss_cum"),
+            total_series: TimeSeries::new("total_cum"),
+            instances_series: TimeSeries::new("instances"),
+            epochs: 0,
+        }
+    }
+
+    pub fn config(&self) -> &CostConfig {
+        &self.cfg
+    }
+
+    /// Record one miss for an object of `size` bytes.
+    #[inline]
+    pub fn record_miss(&mut self, size: u64) {
+        let m = self.cfg.miss_cost(size);
+        self.epoch_miss += m;
+        self.epoch_miss_count += 1;
+    }
+
+    /// Record an arbitrary storage charge (used by the ideal TTL cache,
+    /// billed on instantaneous occupancy rather than per instance).
+    #[inline]
+    pub fn record_storage_dollars(&mut self, dollars: f64) {
+        self.storage_total += dollars;
+    }
+
+    /// Close the epoch that just ended at `t`, billing `instances` nodes
+    /// for the whole epoch (§2.3: turning a node off early is paid anyway).
+    pub fn end_epoch(&mut self, t: TimeUs, instances: u32) -> EpochCosts {
+        let storage = instances as f64 * self.cfg.instance.dollars_per_hour
+            * (self.cfg.epoch_us as f64 / crate::HOUR as f64);
+        self.storage_total += storage;
+        self.miss_total += self.epoch_miss;
+        let out = EpochCosts {
+            t,
+            storage,
+            miss: self.epoch_miss,
+            miss_count: self.epoch_miss_count,
+            instances,
+        };
+        self.epoch_miss = 0.0;
+        self.epoch_miss_count = 0;
+        self.epochs += 1;
+        self.storage_series.push(t, self.storage_total);
+        self.miss_series.push(t, self.miss_total);
+        self.total_series.push(t, self.total());
+        self.instances_series.push(t, instances as f64);
+        out
+    }
+
+    /// Close an epoch for a vertically billed (ideal TTL) run: storage was
+    /// already accrued via [`Self::record_storage_dollars`].
+    pub fn end_epoch_vertical(&mut self, t: TimeUs) -> EpochCosts {
+        self.miss_total += self.epoch_miss;
+        let out = EpochCosts {
+            t,
+            storage: 0.0,
+            miss: self.epoch_miss,
+            miss_count: self.epoch_miss_count,
+            instances: 0,
+        };
+        self.epoch_miss = 0.0;
+        self.epoch_miss_count = 0;
+        self.epochs += 1;
+        self.storage_series.push(t, self.storage_total);
+        self.miss_series.push(t, self.miss_total);
+        self.total_series.push(t, self.total());
+        out
+    }
+
+    pub fn storage_total(&self) -> f64 {
+        self.storage_total
+    }
+
+    pub fn miss_total(&self) -> f64 {
+        // Include the open epoch so totals are usable mid-run.
+        self.miss_total + self.epoch_miss
+    }
+
+    pub fn total(&self) -> f64 {
+        self.storage_total + self.miss_total()
+    }
+
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+}
+
+/// Costs attributed to one closed epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochCosts {
+    pub t: TimeUs,
+    pub storage: f64,
+    pub miss: f64,
+    pub miss_count: u64,
+    pub instances: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostConfig;
+    use crate::HOUR;
+
+    #[test]
+    fn storage_bills_per_instance_hour() {
+        let mut t = CostTracker::new(CostConfig::default());
+        let e = t.end_epoch(HOUR, 8);
+        assert!((e.storage - 8.0 * 0.017).abs() < 1e-12);
+        assert_eq!(e.instances, 8);
+        assert!((t.total() - 0.136).abs() < 1e-9);
+    }
+
+    #[test]
+    fn miss_costs_accumulate_per_epoch() {
+        let mut t = CostTracker::new(CostConfig::default());
+        for _ in 0..1000 {
+            t.record_miss(4096);
+        }
+        let e = t.end_epoch(HOUR, 1);
+        assert_eq!(e.miss_count, 1000);
+        assert!((e.miss - 1000.0 * 1.4676e-7).abs() < 1e-12);
+        // epoch counters reset
+        let e2 = t.end_epoch(2 * HOUR, 1);
+        assert_eq!(e2.miss_count, 0);
+        assert_eq!(e2.miss, 0.0);
+    }
+
+    #[test]
+    fn series_are_cumulative_and_aligned() {
+        let mut t = CostTracker::new(CostConfig::default());
+        t.record_miss(1);
+        t.end_epoch(HOUR, 2);
+        t.record_miss(1);
+        t.record_miss(1);
+        t.end_epoch(2 * HOUR, 3);
+        assert_eq!(t.storage_series.len(), 2);
+        let (_, s2) = t.storage_series.last().unwrap();
+        assert!((s2 - 5.0 * 0.017).abs() < 1e-12);
+        let (_, m2) = t.miss_series.last().unwrap();
+        assert!((m2 - 3.0 * 1.4676e-7).abs() < 1e-15);
+        let (_, tot) = t.total_series.last().unwrap();
+        assert!((tot - (s2 + m2)).abs() < 1e-12);
+        assert_eq!(t.epochs(), 2);
+    }
+
+    #[test]
+    fn vertical_billing_accrues_directly() {
+        let mut t = CostTracker::new(CostConfig::default());
+        t.record_storage_dollars(0.5);
+        t.record_miss(1);
+        let e = t.end_epoch_vertical(HOUR);
+        assert_eq!(e.storage, 0.0); // storage accrued out of band
+        assert!((t.storage_total() - 0.5).abs() < 1e-12);
+        assert!(t.total() > 0.5);
+    }
+
+    #[test]
+    fn open_epoch_included_in_running_totals() {
+        let mut t = CostTracker::new(CostConfig::default());
+        t.record_miss(1);
+        assert!(t.miss_total() > 0.0);
+        assert_eq!(t.total(), t.miss_total());
+    }
+}

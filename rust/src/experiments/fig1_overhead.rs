@@ -1,0 +1,179 @@
+//! Fig. 1 — load balancer computational overhead (§2.4).
+//!
+//! Paper: replaying the trace, the MRC-based balancer nearly doubles CPU
+//! load vs. the basic (fixed-route) one, while the TTL balancer stays
+//! under ~20%; in closed-loop mode, MRC halves achievable throughput while
+//! TTL loses ~8%.
+//!
+//! Here we run the same three request paths over the same trace chunk and
+//! measure wall-clock per request: the per-hour "CPU load" series (left
+//! panel) and the normalized closed-loop throughput (right panel).
+
+use super::ExpContext;
+use crate::balancer::Balancer;
+use crate::config::{Config, PolicyKind};
+use crate::cost::CostTracker;
+use crate::scaler::make_sizer;
+use crate::Result;
+use std::time::Instant;
+
+/// One router variant's measurements.
+#[derive(Debug, Clone)]
+pub struct RouterMeasurement {
+    pub name: String,
+    /// Seconds of CPU per simulated hour of trace.
+    pub cpu_per_hour: Vec<(u64, f64)>,
+    /// Requests per wall second, closed loop.
+    pub throughput: f64,
+    /// Normalized to the basic router.
+    pub throughput_norm: f64,
+    pub total_work_units: u64,
+}
+
+/// Fig. 1 report.
+#[derive(Debug)]
+pub struct Fig1Report {
+    pub variants: Vec<RouterMeasurement>,
+}
+
+impl Fig1Report {
+    pub fn render(&self) -> String {
+        let mut s = String::from(
+            "Fig.1 — router overhead (normalized closed-loop throughput)\n",
+        );
+        for v in &self.variants {
+            s.push_str(&format!(
+                "  {:<8} throughput={:>10.0} req/s  normalized={:.3}  work_units={}\n",
+                v.name, v.throughput, v.throughput_norm, v.total_work_units
+            ));
+        }
+        s.push_str(
+            "  paper shape: basic=1.00, ttl≈0.92, mrc≈0.55 (ordering must hold)\n",
+        );
+        s
+    }
+}
+
+fn run_variant(cfg: &Config, trace: &[crate::trace::Request], name: &str) -> RouterMeasurement {
+    let sizer = make_sizer(cfg);
+    let initial = cfg.scaler.fixed_instances;
+    let mut b = Balancer::from_config(cfg, sizer, initial);
+    let mut costs = CostTracker::new(cfg.cost.clone());
+    let mut cpu_per_hour: Vec<(u64, f64)> = Vec::new();
+    let mut hour_end = crate::HOUR;
+    let mut hour_cpu = 0.0f64;
+    let mut epoch_end = cfg.cost.epoch_us;
+
+    let t_all = Instant::now();
+    for r in trace {
+        while r.ts >= epoch_end {
+            b.end_epoch(epoch_end);
+            epoch_end += cfg.cost.epoch_us;
+        }
+        while r.ts >= hour_end {
+            cpu_per_hour.push((hour_end, hour_cpu));
+            hour_cpu = 0.0;
+            hour_end += crate::HOUR;
+        }
+        let hot = Instant::now();
+        b.handle(r, &mut costs);
+        hour_cpu += hot.elapsed().as_secs_f64();
+    }
+    cpu_per_hour.push((hour_end, hour_cpu));
+    let elapsed = t_all.elapsed().as_secs_f64();
+    RouterMeasurement {
+        name: name.to_string(),
+        cpu_per_hour,
+        throughput: trace.len() as f64 / elapsed.max(1e-9),
+        throughput_norm: 0.0, // filled by caller
+        total_work_units: b.work_units,
+    }
+}
+
+/// Run Fig. 1 over (a prefix of) the context trace.
+pub fn run_fig1(ctx: &ExpContext, max_requests: usize) -> Result<Fig1Report> {
+    let trace = &ctx.trace[..ctx.trace.len().min(max_requests)];
+
+    let mut basic_cfg = ctx.cfg.clone();
+    basic_cfg.scaler.policy = PolicyKind::Fixed;
+    basic_cfg.scaler.fixed_instances = 8;
+
+    let mut ttl_cfg = ctx.cfg.clone();
+    ttl_cfg.scaler.policy = PolicyKind::Ttl;
+    ttl_cfg.scaler.fixed_instances = 8;
+
+    let mut mrc_cfg = ctx.cfg.clone();
+    mrc_cfg.scaler.policy = PolicyKind::Mrc;
+    mrc_cfg.scaler.fixed_instances = 8;
+
+    let mut variants = vec![
+        run_variant(&basic_cfg, trace, "basic"),
+        run_variant(&ttl_cfg, trace, "ttl"),
+        run_variant(&mrc_cfg, trace, "mrc"),
+    ];
+    let base = variants[0].throughput;
+    for v in &mut variants {
+        v.throughput_norm = v.throughput / base.max(1e-9);
+    }
+
+    // CSVs: per-hour CPU (left panel), throughput bars (right panel).
+    let mut rows = Vec::new();
+    for v in &variants {
+        for &(t, cpu) in &v.cpu_per_hour {
+            rows.push(vec![
+                v.name.clone(),
+                format!("{:.1}", crate::us_to_secs(t) / 3600.0),
+                format!("{cpu:.6}"),
+            ]);
+        }
+    }
+    ctx.write_csv("fig1_cpu_per_hour.csv", &["variant", "hour", "cpu_seconds"], &rows)?;
+    let bar_rows: Vec<Vec<String>> = variants
+        .iter()
+        .map(|v| {
+            vec![
+                v.name.clone(),
+                format!("{:.1}", v.throughput),
+                format!("{:.4}", v.throughput_norm),
+            ]
+        })
+        .collect();
+    ctx.write_csv(
+        "fig1_throughput.csv",
+        &["variant", "req_per_sec", "normalized"],
+        &bar_rows,
+    )?;
+
+    Ok(Fig1Report { variants })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::TraceScale;
+
+    #[test]
+    fn ordering_matches_paper_shape() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let ctx = ExpContext::standard(TraceScale::Smoke, dir.path());
+        let rep = run_fig1(&ctx, 120_000).unwrap();
+        assert_eq!(rep.variants.len(), 3);
+        let by_name = |n: &str| rep.variants.iter().find(|v| v.name == n).unwrap();
+        let basic = by_name("basic");
+        let ttl = by_name("ttl");
+        let mrc = by_name("mrc");
+        assert_eq!(basic.throughput_norm, 1.0);
+        // The MRC router must do strictly more bookkeeping work than TTL,
+        // which does more than basic.
+        assert!(mrc.total_work_units > ttl.total_work_units);
+        assert!(ttl.total_work_units > basic.total_work_units);
+        // Throughput ordering: mrc slowest (allow noise margin for ttl).
+        assert!(
+            mrc.throughput_norm < ttl.throughput_norm,
+            "mrc={} ttl={}",
+            mrc.throughput_norm,
+            ttl.throughput_norm
+        );
+        assert!(dir.path().join("fig1_throughput.csv").exists());
+    }
+}

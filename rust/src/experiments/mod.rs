@@ -1,0 +1,178 @@
+//! Experiment harness: one entry point per figure/table of the paper.
+//! See DESIGN.md §5 for the index. Each experiment writes CSV series under
+//! an output directory and returns a human-readable report string.
+
+mod ablations;
+mod fig1_overhead;
+mod fig2_mrc_accuracy;
+mod fig4_trace;
+mod fig5_dynamics;
+mod fig6_costs;
+mod fig8_ttlopt;
+mod fig9_balance;
+mod irm_convergence;
+
+pub use ablations::{run_epoch_ablation, run_gain_ablation, run_instance_ablation, run_per_content_ablation, AblationReport};
+pub use fig1_overhead::run_fig1;
+pub use fig2_mrc_accuracy::run_fig2;
+pub use fig4_trace::run_fig4;
+pub use fig5_dynamics::run_fig5;
+pub use fig6_costs::{run_fig6_fig7_headline, Fig6Report};
+pub use fig8_ttlopt::run_fig8;
+pub use fig9_balance::run_fig9;
+pub use irm_convergence::run_irm_convergence;
+
+use crate::config::Config;
+use crate::trace::{Request, SynthConfig, SynthGenerator};
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Shared experiment context: trace + config + output directory.
+pub struct ExpContext {
+    pub cfg: Config,
+    pub trace: Vec<Request>,
+    pub out_dir: PathBuf,
+}
+
+impl ExpContext {
+    /// Build the standard evaluation context: the Akamai-like synthetic
+    /// trace (scaled per `scale`) and a config whose instance size is
+    /// shrunk so cluster sizes land in the paper's 1–10 range at our
+    /// request scale (documented in EXPERIMENTS.md §Calibration).
+    pub fn standard(scale: TraceScale, out_dir: impl AsRef<Path>) -> Self {
+        let synth = scale.synth_config();
+        let trace = SynthGenerator::new(synth).generate();
+        let mut cfg = scale.config();
+        // §6.1 balance-point rule, applied to the scaled trace exactly as
+        // the paper applied it to the production cache: assume the
+        // well-engineered static size is 8 nodes, and set the per-miss
+        // cost so that storage and miss bills balance there. (The paper's
+        // 1.4676e-7 $ was derived the same way from its own trace volume.)
+        cfg.cost.miss_cost_dollars = calibrate_miss_cost(&cfg, &trace, 8);
+        let out_dir = out_dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&out_dir).ok();
+        ExpContext { cfg, trace, out_dir }
+    }
+
+    pub fn write_csv(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+        crate::metrics::write_csv(self.out_dir.join(name), header, rows)
+    }
+}
+
+/// Trace scale presets: the paper's trace is 2·10⁹ requests over 30 days;
+/// we provide scaled-down variants that preserve the requests/object ratio
+/// and diurnal amplitude.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceScale {
+    /// ~0.4M requests, 2 simulated days — CI-speed smoke runs.
+    Smoke,
+    /// ~2.6M requests, 5 simulated days — the "5-day trace" analogue.
+    Small,
+    /// ~10M requests, 15 simulated days — the Fig. 6 window.
+    Full,
+}
+
+impl TraceScale {
+    pub fn synth_config(self) -> SynthConfig {
+        let mut c = SynthConfig::akamai_like();
+        match self {
+            TraceScale::Smoke => {
+                c.catalogue = 20_000;
+                c.alpha = 0.95;
+                c.mean_rate = 5.0;
+                c.duration = 2 * crate::DAY;
+                c.churn_per_day = 0.02;
+            }
+            TraceScale::Small => {
+                c.catalogue = 120_000;
+                c.alpha = 0.95;
+                c.mean_rate = 15.0;
+                c.duration = 5 * crate::DAY;
+                c.churn_per_day = 0.02;
+            }
+            TraceScale::Full => {
+                c.catalogue = 400_000;
+                c.alpha = 0.95;
+                c.mean_rate = 25.0;
+                c.duration = 15 * crate::DAY;
+                c.churn_per_day = 0.02;
+            }
+        }
+        c
+    }
+
+    /// Config calibrated to the scale: instance RAM shrunk so the optimal
+    /// cluster has ~4–10 nodes (the paper's fixed-8 regime), miss cost per
+    /// the §6.1 balance-point rule recomputed in EXPERIMENTS.md.
+    pub fn config(self) -> Config {
+        let mut cfg = Config::default();
+        match self {
+            TraceScale::Smoke => {
+                cfg.cost.instance.ram_bytes = 40_000_000;
+                cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+            }
+            TraceScale::Small => {
+                cfg.cost.instance.ram_bytes = 80_000_000;
+                cfg.cost.instance.dollars_per_hour = 0.017 * 80.0e6 / 555.0e6;
+            }
+            TraceScale::Full => {
+                cfg.cost.instance.ram_bytes = 150_000_000;
+                cfg.cost.instance.dollars_per_hour = 0.017 * 150.0e6 / 555.0e6;
+            }
+        }
+        cfg.scaler.max_instances = 64;
+        cfg
+    }
+}
+
+/// The §6.1 rule of thumb as code: replay a prefix of the trace through a
+/// fixed cluster of `n_ref` nodes and return the per-miss dollar cost at
+/// which the prefix's miss bill equals its storage bill.
+pub fn calibrate_miss_cost(cfg: &Config, trace: &[Request], n_ref: u32) -> f64 {
+    use crate::config::PolicyKind;
+    use crate::trace::VecSource;
+    // A prefix long enough to warm the cache and cover several epochs.
+    let horizon = (8 * cfg.cost.epoch_us).max(1);
+    let cut = trace.partition_point(|r| r.ts < horizon);
+    let prefix = &trace[..cut.max(1).min(trace.len())];
+    let mut probe_cfg = cfg.clone();
+    probe_cfg.scaler.policy = PolicyKind::Fixed;
+    probe_cfg.scaler.fixed_instances = n_ref;
+    let res = crate::sim::run(&probe_cfg, &mut VecSource::new(prefix.to_vec()));
+    if res.misses == 0 {
+        return cfg.cost.miss_cost_dollars;
+    }
+    res.storage_cost / res.misses as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_have_increasing_volume() {
+        let a = TraceScale::Smoke.synth_config().expected_requests();
+        let b = TraceScale::Small.synth_config().expected_requests();
+        let c = TraceScale::Full.synth_config().expected_requests();
+        assert!(a < b && b < c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn configs_preserve_per_byte_price() {
+        for scale in [TraceScale::Smoke, TraceScale::Small, TraceScale::Full] {
+            let cfg = scale.config();
+            let per_byte = cfg.cost.instance.dollars_per_hour / cfg.cost.instance.ram_bytes as f64;
+            let paper = 0.017 / 555.0e6;
+            assert!((per_byte - paper).abs() / paper < 1e-9, "{scale:?}");
+        }
+    }
+
+    #[test]
+    fn standard_context_materializes() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let ctx = ExpContext::standard(TraceScale::Smoke, dir.path());
+        assert!(ctx.trace.len() > 100_000, "len={}", ctx.trace.len());
+        ctx.write_csv("t.csv", &["a"], &[vec!["1".into()]]).unwrap();
+        assert!(dir.path().join("t.csv").exists());
+    }
+}

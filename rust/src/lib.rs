@@ -1,0 +1,117 @@
+//! # elastictl — Elastic Provisioning of Cloud Caches: a Cost-aware TTL Approach
+//!
+//! Reproduction of Carra, Neglia & Michiardi (2018). The library implements
+//! the paper's full stack:
+//!
+//! * a **virtual TTL cache** with renewal whose single timer `T` is adapted
+//!   by stochastic approximation to minimise *storage + miss* cost
+//!   ([`vcache`]);
+//! * an **O(1)** FIFO-calendar implementation of that cache (§5.1 of the
+//!   paper) so the load balancer's bookkeeping never exceeds the per-request
+//!   complexity of the caches it fronts;
+//! * a horizontally scalable cluster of fixed-size physical cache instances
+//!   behind a Redis-style 16384-hash-slot **load balancer**
+//!   ([`cluster`], [`balancer`], [`cache`]);
+//! * the **epoch autoscaler** (Algorithm 2) plus the baselines the paper
+//!   compares against: static provisioning, exact-MRC-driven sizing, the
+//!   ideal (vertically billed) TTL cache, and the clairvoyant **TTL-OPT**
+//!   lower bound (Algorithm 1) ([`scaler`], [`mrc`], [`ttlopt`]);
+//! * a discrete-event **testbed** that replays (synthetic) CDN traces
+//!   through the real data structures and bills by ElastiCache-style
+//!   epochs ([`sim`], [`trace`], [`cost`]);
+//! * a PJRT-backed **analytic planner** that evaluates the paper's IRM cost
+//!   model `C(T) = Σ_i c_i + (λ_i m_i − c_i) e^{−λ_i T}` (eq. 4) via an
+//!   AOT-compiled JAX/Pallas artifact ([`runtime`]);
+//! * the **experiment harness** regenerating every figure of §2/§3/§6
+//!   ([`experiments`]).
+//!
+//! Time is measured in microseconds ([`TimeUs`]); object sizes in bytes.
+
+pub mod balancer;
+pub mod cache;
+pub mod cluster;
+pub mod config;
+pub mod cost;
+pub mod experiments;
+pub mod metrics;
+pub mod mrc;
+pub mod runtime;
+pub mod scaler;
+pub mod serve;
+pub mod sim;
+pub mod trace;
+pub mod ttlopt;
+pub mod util;
+pub mod vcache;
+
+/// Simulation / trace time in microseconds since the start of the trace.
+pub type TimeUs = u64;
+
+/// Opaque object (cache key) identifier.
+pub type ObjectId = u64;
+
+/// One microsecond-denominated second.
+pub const SECOND: TimeUs = 1_000_000;
+/// Microseconds in a minute.
+pub const MINUTE: TimeUs = 60 * SECOND;
+/// Microseconds in an hour (the paper's billing epoch).
+pub const HOUR: TimeUs = 60 * MINUTE;
+/// Microseconds in a day (the diurnal period of the Akamai workload).
+pub const DAY: TimeUs = 24 * HOUR;
+
+/// Convert a microsecond timestamp to fractional seconds.
+#[inline]
+pub fn us_to_secs(t: TimeUs) -> f64 {
+    t as f64 / SECOND as f64
+}
+
+/// Convert fractional seconds to a microsecond timestamp (saturating at 0).
+#[inline]
+pub fn secs_to_us(s: f64) -> TimeUs {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * SECOND as f64).round() as TimeUs
+    }
+}
+
+/// Crate-wide result alias (errors flow through `anyhow`).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Deterministic 64-bit mix used everywhere a hash of an [`ObjectId`] is
+/// needed (slot assignment, SHARDS sampling, synthetic size generation).
+///
+/// SplitMix64 finalizer: fast, stateless and well distributed; using one
+/// shared mixer keeps routing and sampling decisions reproducible across
+/// runs and across modules.
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_round_trip() {
+        for s in [0.0, 0.5, 1.0, 3600.0, 86_400.0] {
+            assert!((us_to_secs(secs_to_us(s)) - s).abs() < 1e-6);
+        }
+        assert_eq!(secs_to_us(-1.0), 0);
+        assert_eq!(HOUR, 3_600 * SECOND);
+        assert_eq!(DAY, 24 * HOUR);
+    }
+
+    #[test]
+    fn mix64_is_deterministic_and_spreads() {
+        assert_eq!(mix64(42), mix64(42));
+        // Consecutive ids land in different hash-slot buckets most of the time.
+        let slots: std::collections::HashSet<u64> =
+            (0..1000u64).map(|i| mix64(i) % 16384).collect();
+        assert!(slots.len() > 900, "got {} distinct slots", slots.len());
+    }
+}

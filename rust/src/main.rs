@@ -1,0 +1,282 @@
+//! `elastictl` — CLI for the elastic cloud-cache coordinator.
+//!
+//! ```text
+//! elastictl gen-trace <out> [--kind akamai|irm] [--scale smoke|small|full] [--seed N]
+//! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic] [--fixed-instances N]
+//! elastictl exp <id> [--scale smoke|small|full] [--out DIR]
+//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 irm all
+//! elastictl plan <trace>
+//! elastictl ttlopt <trace>
+//! elastictl serve [--addr HOST:PORT] [--policy ...]
+//! Global: --config <file.toml>
+//! ```
+//!
+//! Argument parsing is hand-rolled (the offline build has no clap).
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::experiments::{self, ExpContext, TraceScale};
+use elastictl::trace::{self, IrmConfig, IrmGenerator, SynthConfig, SynthGenerator, VecSource};
+use elastictl::Result;
+use std::path::PathBuf;
+
+const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve> [args]
+  gen-trace <out> [--kind akamai|irm] [--scale smoke|small|full] [--seed N]
+  run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic] [--fixed-instances N]
+  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 irm ablations all)
+  plan <trace>
+  ttlopt <trace>
+  serve [--addr HOST:PORT] [--policy P]";
+
+/// Minimal flag parser: positionals + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+}
+
+fn parse_scale(s: &str) -> Result<TraceScale> {
+    Ok(match s {
+        "smoke" => TraceScale::Smoke,
+        "small" => TraceScale::Small,
+        "full" => TraceScale::Full,
+        other => anyhow::bail!("unknown scale {other} (smoke|small|full)"),
+    })
+}
+
+fn read_any_trace(path: &PathBuf) -> Result<Vec<trace::Request>> {
+    if path.extension().map(|e| e == "csv").unwrap_or(false) {
+        trace::read_csv(path)
+    } else {
+        trace::read_trace(path)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv)?;
+    let mut cfg = match args.flag("config") {
+        Some(p) => Config::from_path(p)?,
+        None => Config::default(),
+    };
+    let cmd = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("{USAGE}"))?
+        .as_str();
+
+    match cmd {
+        "gen-trace" => {
+            let out = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("gen-trace needs an output path"))?,
+            );
+            let kind = args.flag_or("kind", "akamai");
+            let scale = parse_scale(&args.flag_or("scale", "smoke"))?;
+            let seed: Option<u64> = args.flag("seed").map(|s| s.parse()).transpose()?;
+            let reqs = match kind.as_str() {
+                "akamai" => {
+                    let mut sc: SynthConfig = scale.synth_config();
+                    if let Some(s) = seed {
+                        sc.seed = s;
+                    }
+                    SynthGenerator::new(sc).generate()
+                }
+                "irm" => {
+                    let mut ic = IrmConfig::small();
+                    if let Some(s) = seed {
+                        ic.seed = s;
+                    }
+                    IrmGenerator::new(ic).generate()
+                }
+                other => anyhow::bail!("unknown trace kind {other} (akamai|irm)"),
+            };
+            let n = trace::write_trace(&out, &reqs)?;
+            println!("wrote {n} requests to {}", out.display());
+        }
+        "run" => {
+            let path = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("run needs a trace path"))?,
+            );
+            cfg.scaler.policy = PolicyKind::parse(&args.flag_or("policy", "ttl"))?;
+            if let Some(n) = args.flag("fixed-instances") {
+                cfg.scaler.fixed_instances = n.parse()?;
+            }
+            let reqs = read_any_trace(&path)?;
+            let result = if cfg.scaler.policy == PolicyKind::Analytic {
+                let sizer = Box::new(elastictl::runtime::AnalyticSizer::from_config(&cfg));
+                let mut src = VecSource::new(reqs);
+                elastictl::sim::run_policy(&cfg, &mut src, sizer, cfg.scaler.min_instances)
+            } else {
+                let mut src = VecSource::new(reqs);
+                elastictl::sim::run(&cfg, &mut src)
+            };
+            println!(
+                "policy={} requests={} miss_ratio={:.4} spurious={} storage=${:.4} miss=${:.4} total=${:.4}",
+                result.policy,
+                result.requests,
+                result.miss_ratio(),
+                result.spurious_misses,
+                result.storage_cost,
+                result.miss_cost,
+                result.total_cost
+            );
+        }
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("exp needs an experiment id"))?;
+            let scale = parse_scale(&args.flag_or("scale", "smoke"))?;
+            let out = PathBuf::from(args.flag_or("out", "results"));
+            run_experiment(id, scale, &out)?;
+        }
+        "plan" => {
+            use elastictl::runtime::{artifacts_dir, Planner, PopularityEstimator};
+            let path = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("plan needs a trace path"))?,
+            );
+            let reqs = read_any_trace(&path)?;
+            let planner = Planner::load(artifacts_dir(), cfg.controller.t_max_secs);
+            let mut est = PopularityEstimator::new();
+            for r in &reqs {
+                est.record(r.obj, r.size_bytes());
+            }
+            let end = reqs.last().map(|r| r.ts).unwrap_or(1);
+            let stats = est.drain(end, planner.n_buckets(), &cfg.cost);
+            let plan = planner.plan(&stats, cfg.cost.instance.ram_bytes)?;
+            println!(
+                "artifact={} T*={:.1}s cost_rate=${:.3e}/s vsize={:.1}MB instances={}",
+                planner.uses_artifact(),
+                plan.t_star_secs,
+                plan.cost_rate,
+                plan.vsize_bytes / 1048576.0,
+                plan.instances
+            );
+        }
+        "ttlopt" => {
+            let path = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("ttlopt needs a trace path"))?,
+            );
+            let reqs = read_any_trace(&path)?;
+            let res = elastictl::ttlopt::solve(&reqs, &cfg.cost);
+            println!(
+                "ttl-opt: requests={} miss_ratio={:.4} storage=${:.4} miss=${:.4} total=${:.4} peak={:.1}MB",
+                res.requests,
+                res.miss_ratio(),
+                res.storage_cost,
+                res.miss_cost,
+                res.total_cost,
+                res.peak_bytes as f64 / 1048576.0
+            );
+        }
+        "serve" => {
+            cfg.scaler.policy = PolicyKind::parse(&args.flag_or("policy", "ttl"))?;
+            let addr = args.flag_or("addr", "127.0.0.1:7171");
+            elastictl::serve::serve(cfg, &addr)?;
+        }
+        other => anyhow::bail!("unknown command {other}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn run_experiment(id: &str, scale: TraceScale, out: &PathBuf) -> Result<()> {
+    let ctx = ExpContext::standard(scale, out);
+    println!(
+        "# trace: {} requests, out: {}",
+        ctx.trace.len(),
+        ctx.out_dir.display()
+    );
+    let all = id == "all";
+    let mut matched = all;
+    if all || id == "fig1" {
+        matched = true;
+        println!("{}", experiments::run_fig1(&ctx, 500_000)?.render());
+    }
+    if all || id == "fig2" {
+        matched = true;
+        let rates = [0.001, 0.003, 0.01, 0.03, 0.1];
+        println!("{}", experiments::run_fig2(&ctx, 500_000, &rates)?.render());
+    }
+    if all || id == "fig4" {
+        matched = true;
+        println!("{}", experiments::run_fig4(&ctx)?.render());
+    }
+    if all || id == "fig5" {
+        matched = true;
+        println!("{}", experiments::run_fig5(&ctx)?.render());
+    }
+    if all || id == "fig6" || id == "fig7" || id == "headline" {
+        matched = true;
+        println!("{}", experiments::run_fig6_fig7_headline(&ctx)?.render());
+    }
+    if all || id == "fig8" {
+        matched = true;
+        println!("{}", experiments::run_fig8(&ctx)?.render());
+    }
+    if all || id == "fig9" {
+        matched = true;
+        println!("{}", experiments::run_fig9(&ctx)?.render());
+    }
+    if all || id == "ablations" {
+        matched = true;
+        println!("{}", experiments::run_epoch_ablation(&ctx)?.render());
+        println!("{}", experiments::run_instance_ablation(&ctx)?.render());
+        println!("{}", experiments::run_per_content_ablation(&ctx)?.render());
+        println!("{}", experiments::run_gain_ablation(&ctx)?.render());
+    }
+    if all || id == "irm" {
+        matched = true;
+        let irm = IrmConfig {
+            catalogue: 20_000,
+            alpha: 0.9,
+            total_rate: 400.0,
+            duration: 6 * elastictl::HOUR,
+            seed: 3,
+        };
+        println!("{}", experiments::run_irm_convergence(&ctx, &irm)?.render());
+    }
+    if !matched {
+        anyhow::bail!("unknown experiment id {id}\n{USAGE}");
+    }
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! Log-scale histogram over `u64` magnitudes (bytes, reuse distances,
+//! latencies). Constant-time insert; used by the MRC machinery and by the
+//! trace characterization of Fig. 4.
+
+/// Histogram with logarithmically spaced buckets: bucket `i` covers
+/// `[base^i, base^(i+1))`, with a dedicated zero bucket.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    base: f64,
+    counts: Vec<f64>,
+    zero: f64,
+    /// Values beyond the last bucket (counted, reported as "overflow").
+    overflow: f64,
+    total: f64,
+}
+
+impl LogHistogram {
+    /// `base` > 1 controls resolution (e.g. 2.0 → power-of-two buckets,
+    /// 1.2 → ~4 buckets per octave); `max_value` fixes the bucket count.
+    pub fn new(base: f64, max_value: u64) -> Self {
+        assert!(base > 1.0);
+        let nbuckets = ((max_value.max(2) as f64).ln() / base.ln()).ceil() as usize + 1;
+        LogHistogram {
+            base,
+            counts: vec![0.0; nbuckets],
+            zero: 0.0,
+            overflow: 0.0,
+            total: 0.0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, v: u64) -> Option<usize> {
+        if v == 0 {
+            return None;
+        }
+        let idx = (v as f64).ln() / self.base.ln();
+        Some(idx as usize)
+    }
+
+    /// Insert `v` with weight `w`.
+    #[inline]
+    pub fn add(&mut self, v: u64, w: f64) {
+        self.total += w;
+        match self.bucket_of(v) {
+            None => self.zero += w,
+            Some(i) if i < self.counts.len() => self.counts[i] += w,
+            Some(_) => self.overflow += w,
+        }
+    }
+
+    /// Insert with weight 1.
+    #[inline]
+    pub fn inc(&mut self, v: u64) {
+        self.add(v, 1.0);
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    pub fn overflow(&self) -> f64 {
+        self.overflow
+    }
+
+    /// Lower edge of bucket `i`.
+    pub fn bucket_lo(&self, i: usize) -> u64 {
+        self.base.powi(i as i32) as u64
+    }
+
+    /// Weight of values ≤ `v` (inclusive of the full bucket containing `v`
+    /// — the histogram's resolution limit).
+    pub fn cumulative_le(&self, v: u64) -> f64 {
+        let mut acc = self.zero;
+        if let Some(b) = self.bucket_of(v) {
+            for i in 0..=b.min(self.counts.len().saturating_sub(1)) {
+                acc += self.counts[i];
+            }
+        }
+        acc
+    }
+
+    /// Weight of values strictly greater than bucket(v)'s upper edge, plus
+    /// overflow. `cumulative_gt(v) = total − cumulative_le(v)`.
+    pub fn cumulative_gt(&self, v: u64) -> f64 {
+        self.total - self.cumulative_le(v)
+    }
+
+    /// Empirical CDF evaluated at each bucket edge:
+    /// returns (edge_value, fraction ≤ edge).
+    pub fn cdf(&self) -> Vec<(u64, f64)> {
+        let mut out: Vec<(u64, f64)> = Vec::with_capacity(self.counts.len());
+        let mut acc = self.zero;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if self.total > 0.0 {
+                let edge = self.bucket_lo(i + 1);
+                // Small buckets can share an integer edge (base^i truncates);
+                // merge them so the CDF edges are strictly increasing.
+                match out.last_mut() {
+                    Some(last) if last.0 == edge => last.1 = acc / self.total,
+                    _ => out.push((edge, acc / self.total)),
+                }
+            }
+        }
+        out
+    }
+
+    /// Scale every stored weight by `f` (used for epoch decay in the MRC
+    /// scaler so sizing tracks diurnal popularity changes).
+    pub fn decay(&mut self, f: f64) {
+        assert!((0.0..=1.0).contains(&f));
+        self.zero *= f;
+        self.overflow *= f;
+        for c in &mut self.counts {
+            *c *= f;
+        }
+        self.total *= f;
+    }
+
+    /// Reset all counts.
+    pub fn clear(&mut self) {
+        self.zero = 0.0;
+        self.overflow = 0.0;
+        self.total = 0.0;
+        for c in &mut self.counts {
+            *c = 0.0;
+        }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_assignment_and_cdf() {
+        let mut h = LogHistogram::new(2.0, 1 << 20);
+        h.inc(0);
+        h.inc(1);
+        h.inc(2);
+        h.inc(3);
+        h.inc(1024);
+        assert_eq!(h.total(), 5.0);
+        // values ≤ 1: zero bucket + bucket 0 (v=1)
+        assert_eq!(h.cumulative_le(1), 2.0);
+        // 2 and 3 share bucket 1
+        assert_eq!(h.cumulative_le(3), 4.0);
+        assert_eq!(h.cumulative_gt(3), 1.0);
+        let cdf = h.cdf();
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overflow_counted() {
+        let mut h = LogHistogram::new(2.0, 16);
+        h.inc(1 << 30);
+        assert_eq!(h.overflow(), 1.0);
+        assert_eq!(h.cumulative_gt(16), 1.0);
+    }
+
+    #[test]
+    fn decay_and_clear() {
+        let mut h = LogHistogram::new(2.0, 1024);
+        for v in [1u64, 8, 64, 512] {
+            h.add(v, 2.0);
+        }
+        h.decay(0.5);
+        assert!((h.total() - 4.0).abs() < 1e-12);
+        assert!((h.cumulative_le(1024) - 4.0).abs() < 1e-12);
+        h.clear();
+        assert_eq!(h.total(), 0.0);
+    }
+
+    #[test]
+    fn weighted_inserts() {
+        let mut h = LogHistogram::new(1.5, 1 << 16);
+        h.add(100, 10.0);
+        h.add(100, 5.0);
+        assert_eq!(h.total(), 15.0);
+        assert_eq!(h.cumulative_le(200), 15.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Lightweight metrics: counters, time series, log-scale histograms,
+//! percentile summaries, CSV export. Everything on the request path is
+//! allocation-free; series sampling happens at epoch granularity.
+
+mod histogram;
+mod series;
+
+pub use histogram::LogHistogram;
+pub use series::{merged_csv, TimeSeries};
+
+use std::fmt::Write as _;
+
+/// Hit/miss counters for one cache (physical or virtual).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HitMiss {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl HitMiss {
+    #[inline]
+    pub fn record(&mut self, hit: bool) {
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+    }
+
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit ratio in [0,1]; 0 for an empty counter.
+    #[inline]
+    pub fn hit_ratio(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+
+    /// Miss ratio in [0,1]; 1 for an empty counter (pessimistic).
+    #[inline]
+    pub fn miss_ratio(&self) -> f64 {
+        if self.total() == 0 {
+            1.0
+        } else {
+            self.misses as f64 / self.total() as f64
+        }
+    }
+
+    /// Merge another counter into this one.
+    pub fn merge(&mut self, other: &HitMiss) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
+/// Exponentially weighted moving average.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Ewma { alpha, value: None }
+    }
+
+    #[inline]
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    #[inline]
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Mean / min / max / percentile summary over a sample batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Returns `None` for empty input.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx]
+        };
+        Some(Summary {
+            count: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+        })
+    }
+}
+
+/// Render rows of (label, values...) as aligned CSV text.
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", header.join(","));
+    for row in rows {
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+/// Write CSV text to a file, creating parent directories.
+pub fn write_csv(
+    path: impl AsRef<std::path::Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> crate::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_csv(header, rows))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_ratios() {
+        let mut hm = HitMiss::default();
+        assert_eq!(hm.hit_ratio(), 0.0);
+        assert_eq!(hm.miss_ratio(), 1.0);
+        for i in 0..10 {
+            hm.record(i % 4 != 0); // 3 hits per 4
+        }
+        assert_eq!(hm.total(), 10);
+        assert_eq!(hm.misses, 3);
+        assert!((hm.hit_ratio() - 0.7).abs() < 1e-12);
+        let mut other = HitMiss { hits: 1, misses: 1 };
+        other.merge(&hm);
+        assert_eq!(other.total(), 12);
+    }
+
+    #[test]
+    fn ewma_tracks() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.update(10.0), 10.0);
+        assert_eq!(e.update(0.0), 5.0);
+        assert_eq!(e.update(0.0), 2.5);
+        e.reset();
+        assert_eq!(e.get(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_bad_alpha() {
+        let _ = Ewma::new(0.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn csv_render() {
+        let rows = vec![vec!["a".into(), "1".into()], vec!["b".into(), "2".into()]];
+        let text = to_csv(&["k", "v"], &rows);
+        assert_eq!(text, "k,v\na,1\nb,2\n");
+    }
+}

@@ -1,0 +1,201 @@
+//! Time series: (timestamp, value) samples with cumulative helpers and CSV
+//! export. Used for TTL-over-time (Fig. 5), cumulative costs (Figs. 6–8)
+//! and balance metrics (Fig. 9).
+
+use crate::{us_to_secs, TimeUs};
+
+/// A named series of `(t, v)` samples, `t` in microseconds.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub name: String,
+    samples: Vec<(TimeUs, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>) -> Self {
+        TimeSeries { name: name.into(), samples: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: TimeUs, v: f64) {
+        self.samples.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[(TimeUs, f64)] {
+        &self.samples
+    }
+
+    pub fn last(&self) -> Option<(TimeUs, f64)> {
+        self.samples.last().copied()
+    }
+
+    /// Running cumulative sum of the values (same timestamps).
+    pub fn cumulative(&self) -> TimeSeries {
+        let mut out = TimeSeries::new(format!("{}_cum", self.name));
+        let mut acc = 0.0;
+        for &(t, v) in &self.samples {
+            acc += v;
+            out.push(t, acc);
+        }
+        out
+    }
+
+    /// Value at or before `t` (step interpolation); `None` before the first
+    /// sample.
+    pub fn at(&self, t: TimeUs) -> Option<f64> {
+        match self.samples.binary_search_by_key(&t, |&(ts, _)| ts) {
+            Ok(i) => Some(self.samples[i].1),
+            Err(0) => None,
+            Err(i) => Some(self.samples[i - 1].1),
+        }
+    }
+
+    /// Time integral ∫ v dt over the sampled range using step
+    /// interpolation, in value·seconds. This is how the ideal TTL cache's
+    /// instantaneous-occupancy bill is computed.
+    pub fn integral(&self) -> f64 {
+        let mut acc = 0.0;
+        for w in self.samples.windows(2) {
+            let (t0, v0) = w[0];
+            let (t1, _) = w[1];
+            acc += v0 * (us_to_secs(t1) - us_to_secs(t0));
+        }
+        acc
+    }
+
+    /// Max value over the series, `None` if empty.
+    pub fn max(&self) -> Option<f64> {
+        self.samples
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(None, |m, v| Some(m.map_or(v, |m: f64| m.max(v))))
+    }
+
+    /// Mean value (unweighted by time).
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().map(|&(_, v)| v).sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    /// Render as CSV rows `t_secs,value`.
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        self.samples
+            .iter()
+            .map(|&(t, v)| vec![format!("{:.3}", us_to_secs(t)), format!("{v:.9e}")])
+            .collect()
+    }
+
+    /// Downsample to at most `n` evenly spaced points (keeps first + last).
+    pub fn downsample(&self, n: usize) -> TimeSeries {
+        let mut out = TimeSeries::new(self.name.clone());
+        if self.samples.len() <= n || n < 2 {
+            out.samples = self.samples.clone();
+            return out;
+        }
+        let step = (self.samples.len() - 1) as f64 / (n - 1) as f64;
+        for i in 0..n {
+            let idx = (i as f64 * step).round() as usize;
+            out.samples.push(self.samples[idx.min(self.samples.len() - 1)]);
+        }
+        out
+    }
+}
+
+/// Align several series on the union of their timestamps (step
+/// interpolation) and render a combined CSV (`t_secs,<name1>,<name2>,…`).
+pub fn merged_csv(series: &[&TimeSeries]) -> String {
+    let mut ts: Vec<TimeUs> = series
+        .iter()
+        .flat_map(|s| s.samples().iter().map(|&(t, _)| t))
+        .collect();
+    ts.sort_unstable();
+    ts.dedup();
+    let mut header = vec!["t_secs".to_string()];
+    header.extend(series.iter().map(|s| s.name.clone()));
+    let mut out = header.join(",");
+    out.push('\n');
+    for t in ts {
+        let mut row = vec![format!("{:.3}", us_to_secs(t))];
+        for s in series {
+            row.push(match s.at(t) {
+                Some(v) => format!("{v:.9e}"),
+                None => String::new(),
+            });
+        }
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SECOND;
+
+    #[test]
+    fn cumulative_and_integral() {
+        let mut s = TimeSeries::new("x");
+        s.push(0, 1.0);
+        s.push(SECOND, 2.0);
+        s.push(3 * SECOND, 4.0);
+        let c = s.cumulative();
+        assert_eq!(c.last().unwrap().1, 7.0);
+        // ∫ = 1*1 + 2*2 = 5 (step interp, last sample contributes nothing)
+        assert!((s.integral() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_lookup() {
+        let mut s = TimeSeries::new("x");
+        s.push(10, 1.0);
+        s.push(20, 2.0);
+        assert_eq!(s.at(5), None);
+        assert_eq!(s.at(10), Some(1.0));
+        assert_eq!(s.at(15), Some(1.0));
+        assert_eq!(s.at(20), Some(2.0));
+        assert_eq!(s.at(1000), Some(2.0));
+    }
+
+    #[test]
+    fn stats_and_downsample() {
+        let mut s = TimeSeries::new("x");
+        for i in 0..101u64 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.max(), Some(100.0));
+        assert!((s.mean().unwrap() - 50.0).abs() < 1e-9);
+        let d = s.downsample(11);
+        assert_eq!(d.len(), 11);
+        assert_eq!(d.samples()[0].1, 0.0);
+        assert_eq!(d.samples()[10].1, 100.0);
+        // n >= len keeps everything
+        assert_eq!(s.downsample(1000).len(), 101);
+    }
+
+    #[test]
+    fn merged_csv_aligns() {
+        let mut a = TimeSeries::new("a");
+        a.push(0, 1.0);
+        a.push(2 * SECOND, 3.0);
+        let mut b = TimeSeries::new("b");
+        b.push(SECOND, 5.0);
+        let text = merged_csv(&[&a, &b]);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "t_secs,a,b");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].starts_with("0.000,1"));
+        assert!(lines[1].ends_with(",")); // b missing before its first sample
+    }
+}

@@ -1,0 +1,368 @@
+//! Exact MRC profiling for heterogeneous object sizes — Olken's algorithm
+//! with an **order-statistics treap** weighted by object size (the
+//! footnote-1 technique: `rank(x)` returns the total bytes of objects
+//! accessed more recently than `x`). O(log M) per request.
+//!
+//! Each resident object is a treap node keyed by its last-access sequence
+//! number; the subtree aggregates resident bytes. On a re-access, the
+//! byte-weighted reuse distance is the sum of weights of keys greater than
+//! the object's previous key — exactly the minimum LRU cache size at which
+//! that request would have hit.
+
+use super::{MissRatioCurve, MrcProfiler};
+use crate::metrics::LogHistogram;
+use crate::util::fasthash::FastMap;
+use crate::{mix64, ObjectId};
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct TreapNode {
+    key: u64,      // last-access sequence number (unique)
+    priority: u64, // heap priority (hash of key)
+    weight: u64,   // object size in bytes
+    subtree_weight: u64,
+    left: u32,
+    right: u32,
+}
+
+/// Size-weighted order-statistics treap.
+struct WeightedTreap {
+    nodes: Vec<TreapNode>,
+    free: Vec<u32>,
+    root: u32,
+}
+
+impl WeightedTreap {
+    fn new() -> Self {
+        WeightedTreap { nodes: Vec::new(), free: Vec::new(), root: NIL }
+    }
+
+    #[inline]
+    fn weight_of(&self, idx: u32) -> u64 {
+        if idx == NIL {
+            0
+        } else {
+            self.nodes[idx as usize].subtree_weight
+        }
+    }
+
+    #[inline]
+    fn update(&mut self, idx: u32) {
+        if idx == NIL {
+            return;
+        }
+        let (l, r, w) = {
+            let n = &self.nodes[idx as usize];
+            (n.left, n.right, n.weight)
+        };
+        self.nodes[idx as usize].subtree_weight =
+            w + self.weight_of(l) + self.weight_of(r);
+    }
+
+    fn alloc(&mut self, key: u64, weight: u64) -> u32 {
+        let node = TreapNode {
+            key,
+            priority: mix64(key ^ 0x7E4B_D1C3_5A96_0F2E),
+            weight,
+            subtree_weight: weight,
+            left: NIL,
+            right: NIL,
+        };
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = node;
+                i
+            }
+            None => {
+                let i = self.nodes.len() as u32;
+                self.nodes.push(node);
+                i
+            }
+        }
+    }
+
+    /// Split by key: returns (subtree with keys ≤ k, subtree with keys > k).
+    fn split(&mut self, idx: u32, k: u64) -> (u32, u32) {
+        if idx == NIL {
+            return (NIL, NIL);
+        }
+        if self.nodes[idx as usize].key <= k {
+            let right = self.nodes[idx as usize].right;
+            let (a, b) = self.split(right, k);
+            self.nodes[idx as usize].right = a;
+            self.update(idx);
+            (idx, b)
+        } else {
+            let left = self.nodes[idx as usize].left;
+            let (a, b) = self.split(left, k);
+            self.nodes[idx as usize].left = b;
+            self.update(idx);
+            (a, idx)
+        }
+    }
+
+    /// Merge two treaps where all keys of `a` < all keys of `b`.
+    fn merge(&mut self, a: u32, b: u32) -> u32 {
+        if a == NIL {
+            return b;
+        }
+        if b == NIL {
+            return a;
+        }
+        if self.nodes[a as usize].priority > self.nodes[b as usize].priority {
+            let ar = self.nodes[a as usize].right;
+            let m = self.merge(ar, b);
+            self.nodes[a as usize].right = m;
+            self.update(a);
+            a
+        } else {
+            let bl = self.nodes[b as usize].left;
+            let m = self.merge(a, bl);
+            self.nodes[b as usize].left = m;
+            self.update(b);
+            b
+        }
+    }
+
+    /// Insert a node with a key strictly greater than every existing key
+    /// (access sequence numbers are monotone), so this is a merge at the
+    /// right spine.
+    fn insert_max(&mut self, key: u64, weight: u64) {
+        let idx = self.alloc(key, weight);
+        self.root = self.merge(self.root, idx);
+    }
+
+    /// Total bytes with key strictly greater than `k`.
+    fn weight_greater(&mut self, k: u64) -> u64 {
+        // Non-destructive walk.
+        let mut acc = 0u64;
+        let mut cur = self.root;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            if n.key > k {
+                acc += n.weight + self.weight_of(n.right);
+                cur = n.left;
+            } else {
+                cur = n.right;
+            }
+        }
+        acc
+    }
+
+    /// Remove the node with exactly key `k` (must exist). Returns weight.
+    fn remove(&mut self, k: u64) -> u64 {
+        let (le, gt) = self.split(self.root, k);
+        let (lt, eq) = self.split(le, k - 1);
+        debug_assert!(eq != NIL, "key {k} not present");
+        let w = self.nodes[eq as usize].weight;
+        debug_assert_eq!(self.nodes[eq as usize].key, k);
+        debug_assert!(
+            self.nodes[eq as usize].left == NIL && self.nodes[eq as usize].right == NIL
+        );
+        self.free.push(eq);
+        self.root = self.merge(lt, gt);
+        w
+    }
+
+    fn total_weight(&self) -> u64 {
+        self.weight_of(self.root)
+    }
+
+    fn len(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+}
+
+/// Exact Olken profiler over heterogeneous sizes.
+pub struct OlkenProfiler {
+    treap: WeightedTreap,
+    last_key: FastMap<ObjectId, u64>,
+    seq: u64,
+    hist: LogHistogram,
+    cold: f64,
+    requests: f64,
+    /// If true, ignore real sizes and weight every object 1 byte — the
+    /// uniform-size mode used as the Fig. 2 control.
+    uniform: bool,
+}
+
+impl OlkenProfiler {
+    /// `max_bytes` bounds the histogram range (largest meaningful cache
+    /// size); `hist_base` sets resolution (e.g. 1.3 ≈ 4 buckets/octave).
+    pub fn new(max_bytes: u64, hist_base: f64, uniform: bool) -> Self {
+        OlkenProfiler {
+            treap: WeightedTreap::new(),
+            last_key: FastMap::default(),
+            seq: 0,
+            hist: LogHistogram::new(hist_base, max_bytes),
+            cold: 0.0,
+            requests: 0.0,
+            uniform,
+        }
+    }
+
+    /// Convenience: byte-weighted profiler with 1.3 base up to 1 TB.
+    pub fn sized(max_bytes: u64) -> Self {
+        Self::new(max_bytes, 1.3, false)
+    }
+
+    /// Resident objects tracked.
+    pub fn tracked(&self) -> usize {
+        self.treap.len()
+    }
+
+    /// Total tracked bytes.
+    pub fn tracked_bytes(&self) -> u64 {
+        self.treap.total_weight()
+    }
+
+    pub fn cold_misses(&self) -> f64 {
+        self.cold
+    }
+}
+
+impl MrcProfiler for OlkenProfiler {
+    fn record(&mut self, obj: ObjectId, size: u64) -> Option<u64> {
+        let w = if self.uniform { 1 } else { size.max(1) };
+        self.seq += 1;
+        let key = self.seq;
+        self.requests += 1.0;
+        let dist = match self.last_key.get(&obj).copied() {
+            Some(old_key) => {
+                let d = self.treap.weight_greater(old_key);
+                self.treap.remove(old_key);
+                self.hist.inc(d);
+                Some(d)
+            }
+            None => {
+                self.cold += 1.0;
+                None
+            }
+        };
+        self.treap.insert_max(key, w);
+        self.last_key.insert(obj, key);
+        dist
+    }
+
+    fn curve(&self) -> MissRatioCurve {
+        MissRatioCurve::from_histogram(&self.hist, self.cold)
+    }
+
+    fn decay(&mut self, factor: f64) {
+        self.hist.decay(factor);
+        self.cold *= factor;
+        self.requests *= factor;
+    }
+
+    fn requests(&self) -> f64 {
+        self.requests
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_distance_counts_intervening_bytes() {
+        let mut p = OlkenProfiler::sized(1 << 30);
+        assert_eq!(p.record(1, 100), None); // cold
+        assert_eq!(p.record(2, 200), None);
+        assert_eq!(p.record(3, 300), None);
+        // Re-access 1: objects 2 and 3 were touched since → 500 bytes.
+        assert_eq!(p.record(1, 100), Some(500));
+        // Re-access 1 again immediately: nothing in between → 0.
+        assert_eq!(p.record(1, 100), Some(0));
+        // Re-access 2: 1 and 3 touched since 2's access → 400.
+        assert_eq!(p.record(2, 200), Some(400));
+        assert_eq!(p.cold_misses(), 3.0);
+    }
+
+    #[test]
+    fn repeated_accesses_do_not_double_count() {
+        let mut p = OlkenProfiler::sized(1 << 30);
+        p.record(1, 100);
+        p.record(2, 50);
+        p.record(2, 50);
+        p.record(2, 50);
+        // Only one copy of object 2 separates the accesses of 1.
+        assert_eq!(p.record(1, 100), Some(50));
+        assert_eq!(p.tracked(), 2);
+        assert_eq!(p.tracked_bytes(), 150);
+    }
+
+    #[test]
+    fn uniform_mode_counts_objects() {
+        let mut p = OlkenProfiler::new(1 << 20, 2.0, true);
+        p.record(1, 12345);
+        p.record(2, 999);
+        p.record(3, 1);
+        assert_eq!(p.record(1, 12345), Some(2)); // two objects in between
+    }
+
+    #[test]
+    fn curve_matches_brute_force_lru_simulation() {
+        // Cross-check: for a small trace, the Olken curve evaluated at size
+        // S must equal the miss ratio of an actual LRU(S) simulation.
+        use crate::cache::{LruCache, Store};
+        let objs: Vec<(u64, u64)> = (0..60)
+            .map(|i| {
+                let o = crate::mix64(i) % 12;
+                (o, 50 + o * 10)
+            })
+            .collect();
+        let mut p = OlkenProfiler::new(1 << 20, 1.05, false);
+        for &(o, s) in &objs {
+            p.record(o, s);
+        }
+        let curve = p.curve();
+        for cache_size in [100u64, 400, 1000, 4000] {
+            let mut lru = LruCache::new(cache_size);
+            let mut misses = 0.0;
+            for &(o, s) in &objs {
+                if !lru.lookup(o) {
+                    misses += 1.0;
+                    lru.insert(o, s);
+                }
+            }
+            let sim_mr = misses / objs.len() as f64;
+            let olken_mr = curve.miss_ratio_at(cache_size);
+            // Histogram bucketing introduces bounded quantization error.
+            assert!(
+                (sim_mr - olken_mr).abs() < 0.12,
+                "size={cache_size}: sim={sim_mr} olken={olken_mr}"
+            );
+        }
+    }
+
+    #[test]
+    fn treap_internal_consistency_under_churn() {
+        let mut p = OlkenProfiler::sized(1 << 30);
+        let mut expected_bytes: u64 = 0;
+        let mut sizes = std::collections::HashMap::new();
+        for i in 0..5000u64 {
+            let obj = crate::mix64(i) % 500;
+            let size = 10 + obj * 3;
+            if !sizes.contains_key(&obj) {
+                expected_bytes += size;
+                sizes.insert(obj, size);
+            }
+            p.record(obj, size);
+        }
+        assert_eq!(p.tracked(), sizes.len());
+        assert_eq!(p.tracked_bytes(), expected_bytes);
+    }
+
+    #[test]
+    fn decay_scales_history() {
+        let mut p = OlkenProfiler::sized(1 << 20);
+        for i in 0..100u64 {
+            p.record(i % 10, 100);
+        }
+        let r0 = p.requests();
+        p.decay(0.25);
+        assert!((p.requests() - r0 * 0.25).abs() < 1e-9);
+        assert!(p.curve().is_monotone());
+    }
+}

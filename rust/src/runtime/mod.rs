@@ -1,0 +1,333 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas cost-model artifact
+//! (HLO text, see `python/compile/aot.py`) and exposes it to the
+//! coordinator as the **analytic planner**.
+//!
+//! The artifact evaluates the paper's IRM cost model (eq. 4) on bucketed
+//! per-content statistics:
+//!
+//! ```text
+//! cost(T)  = Σ_i w_i ( c_i + (λ_i m_i − c_i) e^{−λ_i T} )     [$ / s]
+//! vsize(T) = Σ_i w_i s_i (1 − e^{−λ_i T})                     [bytes]
+//! missrate(T) = Σ_i w_i λ_i e^{−λ_i T}                        [1 / s]
+//! ```
+//!
+//! over a grid of T values. Python runs only at build time (`make
+//! artifacts`); this module executes the compiled HLO on the PJRT CPU
+//! client from the Rust side — never on the request path, only at epoch
+//! boundaries.
+
+mod planner;
+
+pub use planner::{AnalyticSizer, BucketedStats, PlanDecision, Planner, PopularityEstimator};
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Shape manifest entry (mirrors python/compile/aot.py output).
+///
+/// The manifest is a plain-text file `artifacts/manifest.txt` with one
+/// whitespace-separated record per line: `name n g path dtype`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub n: usize,
+    pub g: usize,
+    pub path: String,
+    pub dtype: String,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let p = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| anyhow::anyhow!("manifest {}: {e}; run `make artifacts`", p.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the manifest text format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(
+                parts.len() == 5,
+                "manifest line {}: expected `name n g path dtype`, got {line:?}",
+                lineno + 1
+            );
+            artifacts.push(ArtifactSpec {
+                name: parts[0].to_string(),
+                n: parts[1].parse()?,
+                g: parts[2].parse()?,
+                path: parts[3].to_string(),
+                dtype: parts[4].to_string(),
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Render back to the manifest text format.
+    pub fn render(&self) -> String {
+        let mut out = String::from("# name n g path dtype\n");
+        for a in &self.artifacts {
+            out.push_str(&format!("{} {} {} {} {}\n", a.name, a.n, a.g, a.path, a.dtype));
+        }
+        out
+    }
+
+    /// Find the cost-curve artifact with bucket count `n`, or the largest
+    /// available if `n` is None.
+    pub fn find_cost_curve(&self, n: Option<usize>) -> Option<&ArtifactSpec> {
+        let mut specs: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name == "cost_curve")
+            .collect();
+        specs.sort_by_key(|a| a.n);
+        match n {
+            Some(n) => specs.into_iter().find(|a| a.n == n),
+            None => specs.into_iter().last(),
+        }
+    }
+}
+
+/// The default artifacts directory (workspace-relative), overridable via
+/// `ELASTICTL_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ELASTICTL_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Walk up from cwd looking for `artifacts/manifest.json` (tests run
+    // from the workspace root; binaries may run elsewhere).
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Evaluated curves for one planning call.
+#[derive(Debug, Clone)]
+pub struct CostCurves {
+    /// T grid, seconds.
+    pub t_grid: Vec<f32>,
+    /// $/s at each T.
+    pub cost: Vec<f32>,
+    /// Expected virtual size (bytes) at each T.
+    pub vsize: Vec<f32>,
+    /// Misses/s at each T.
+    pub missrate: Vec<f32>,
+}
+
+impl CostCurves {
+    /// Index of the minimum-cost grid point.
+    pub fn argmin_cost(&self) -> usize {
+        self.cost
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// A loaded, compiled cost-curve executable.
+pub struct CostCurveModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub g: usize,
+}
+
+impl CostCurveModel {
+    /// Load + compile the artifact for bucket count `n` (or largest).
+    pub fn load(dir: impl AsRef<Path>, n: Option<usize>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let spec = manifest
+            .find_cost_curve(n)
+            .ok_or_else(|| anyhow::anyhow!("no cost_curve artifact (n={n:?}) in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(dir.join(&spec.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(CostCurveModel { exe, n: spec.n, g: spec.g })
+    }
+
+    /// Evaluate the curves. All per-bucket arrays must have length `n`;
+    /// `t_grid` must have length `g`.
+    pub fn evaluate(
+        &self,
+        lam: &[f32],
+        miss_cost: &[f32],
+        storage_rate: &[f32],
+        size: &[f32],
+        weight: &[f32],
+        t_grid: &[f32],
+    ) -> Result<CostCurves> {
+        for (name, a) in [
+            ("lam", lam),
+            ("miss_cost", miss_cost),
+            ("storage_rate", storage_rate),
+            ("size", size),
+            ("weight", weight),
+        ] {
+            anyhow::ensure!(a.len() == self.n, "{name}: len {} != n {}", a.len(), self.n);
+        }
+        anyhow::ensure!(t_grid.len() == self.g, "t_grid: len {} != g {}", t_grid.len(), self.g);
+
+        let args = [
+            xla::Literal::vec1(lam),
+            xla::Literal::vec1(miss_cost),
+            xla::Literal::vec1(storage_rate),
+            xla::Literal::vec1(size),
+            xla::Literal::vec1(weight),
+            xla::Literal::vec1(t_grid),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (cost, vsize, missrate) = result.to_tuple3()?;
+        Ok(CostCurves {
+            t_grid: t_grid.to_vec(),
+            cost: cost.to_vec::<f32>()?,
+            vsize: vsize.to_vec::<f32>()?,
+            missrate: missrate.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Pure-Rust oracle of the same model — used for validating the artifact
+/// round-trip and as a fallback when artifacts are absent.
+pub fn reference_curves(
+    lam: &[f32],
+    miss_cost: &[f32],
+    storage_rate: &[f32],
+    size: &[f32],
+    weight: &[f32],
+    t_grid: &[f32],
+) -> CostCurves {
+    let mut cost = vec![0f32; t_grid.len()];
+    let mut vsize = vec![0f32; t_grid.len()];
+    let mut missrate = vec![0f32; t_grid.len()];
+    for (g, &t) in t_grid.iter().enumerate() {
+        let (mut c_acc, mut v_acc, mut m_acc) = (0f64, 0f64, 0f64);
+        for i in 0..lam.len() {
+            let (l, m, c, s, w) = (
+                lam[i] as f64,
+                miss_cost[i] as f64,
+                storage_rate[i] as f64,
+                size[i] as f64,
+                weight[i] as f64,
+            );
+            let e = (-l * t as f64).exp();
+            c_acc += w * (c + (l * m - c) * e);
+            v_acc += w * s * (1.0 - e);
+            m_acc += w * l * e;
+        }
+        cost[g] = c_acc as f32;
+        vsize[g] = v_acc as f32;
+        missrate[g] = m_acc as f32;
+    }
+    CostCurves { t_grid: t_grid.to_vec(), cost, vsize, missrate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_inputs(
+        n: usize,
+        g: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let lam: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let m = vec![1.4676e-7f32; n];
+        let c: Vec<f32> = (0..n).map(|i| 8.5e-15 * (1000.0 + i as f32 * 10.0)).collect();
+        let s: Vec<f32> = (0..n).map(|i| 1000.0 + i as f32 * 10.0).collect();
+        let w = vec![1.0f32; n];
+        let t: Vec<f32> = (0..g).map(|i| i as f32 * 10.0).collect();
+        (lam, m, c, s, w, t)
+    }
+
+    #[test]
+    fn reference_limits_match_eq4() {
+        let (lam, m, c, s, w, _) = toy_inputs(16, 4);
+        // T=0: cost = Σ λ m (all misses); T→∞: cost = Σ c.
+        let t = vec![0.0f32, 1e9];
+        let cur = reference_curves(&lam, &m, &c, &s, &w, &t);
+        let all_miss: f32 = lam.iter().zip(&m).map(|(l, mm)| l * mm).sum();
+        let all_store: f32 = c.iter().sum();
+        assert!((cur.cost[0] - all_miss).abs() / all_miss < 1e-5);
+        assert!((cur.cost[1] - all_store).abs() / all_store < 1e-4);
+        // vsize at T=0 is 0; at ∞ is Σ s.
+        assert_eq!(cur.vsize[0], 0.0);
+        let total_s: f32 = s.iter().sum();
+        assert!((cur.vsize[1] - total_s).abs() / total_s < 1e-5);
+    }
+
+    #[test]
+    fn reference_missrate_decreases_in_t() {
+        let (lam, m, c, s, w, t) = toy_inputs(8, 16);
+        let cur = reference_curves(&lam, &m, &c, &s, &w, &t);
+        for win in cur.missrate.windows(2) {
+            assert!(win[1] <= win[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn argmin_picks_minimum() {
+        let curves = CostCurves {
+            t_grid: vec![0.0, 1.0, 2.0],
+            cost: vec![3.0, 1.0, 2.0],
+            vsize: vec![0.0; 3],
+            missrate: vec![0.0; 3],
+        };
+        assert_eq!(curves.argmin_cost(), 1);
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = Manifest {
+            artifacts: vec![
+                ArtifactSpec {
+                    name: "cost_curve".into(),
+                    n: 1024,
+                    g: 128,
+                    path: "cost_curve_n1024_g128.hlo.txt".into(),
+                    dtype: "f32".into(),
+                },
+                ArtifactSpec {
+                    name: "cost_curve".into(),
+                    n: 4096,
+                    g: 256,
+                    path: "cost_curve_n4096_g256.hlo.txt".into(),
+                    dtype: "f32".into(),
+                },
+            ],
+        };
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        std::fs::write(dir.path().join("manifest.txt"), m.render()).unwrap();
+        let back = Manifest::load(dir.path()).unwrap();
+        assert_eq!(back.artifacts.len(), 2);
+        assert_eq!(back.find_cost_curve(None).unwrap().n, 4096);
+        assert_eq!(back.find_cost_curve(Some(1024)).unwrap().g, 128);
+        assert!(back.find_cost_curve(Some(999)).is_none());
+        assert!(Manifest::parse("bad line here").is_err());
+        assert!(Manifest::load(dir.path().join("nope")).is_err());
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_artifacts.rs and
+    // skip gracefully when `make artifacts` has not run.
+}

@@ -1,0 +1,376 @@
+//! The analytic planner: estimate per-content popularity over the epoch,
+//! bucket it, evaluate the AOT cost model, and size the cluster at the
+//! model-predicted optimum.
+//!
+//! This is the L1/L2/L3 integration point and an *ablation* against the
+//! paper's stochastic-approximation controller: the SA controller needs no
+//! popularity estimates and is O(1) per request; the planner pays an
+//! O(K log K) sort per epoch (K = distinct objects seen) in exchange for
+//! jumping straight to the model optimum when traffic is IRM-like.
+
+use super::{reference_curves, CostCurveModel, CostCurves};
+use crate::config::{Config, CostConfig};
+use crate::scaler::{EpochSizer, PolicyWork};
+use crate::{ObjectId, TimeUs};
+use crate::util::fasthash::FastMap;
+
+/// Per-epoch popularity estimator: exact counts in a hash map, reset at
+/// each epoch boundary. (A production deployment could swap a sketch in;
+/// the planner already isolates it behind this type.)
+#[derive(Debug, Default)]
+pub struct PopularityEstimator {
+    counts: FastMap<ObjectId, (u32, u32)>, // obj -> (requests, size)
+    epoch_start: TimeUs,
+}
+
+impl PopularityEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, obj: ObjectId, size: u64) {
+        let e = self.counts.entry(obj).or_insert((0, size as u32));
+        e.0 += 1;
+    }
+
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Drain the epoch into bucketed per-content statistics.
+    pub fn drain(&mut self, now: TimeUs, n_buckets: usize, cost: &CostConfig) -> BucketedStats {
+        let epoch_secs = crate::us_to_secs(now.saturating_sub(self.epoch_start)).max(1.0);
+        let mut items: Vec<(u32, u32)> = self.counts.values().copied().collect();
+        self.counts.clear();
+        self.epoch_start = now;
+        // Hottest first: head buckets get one object each, the tail is
+        // aggregated — preserving the head of the Zipf curve exactly.
+        items.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+        BucketedStats::build(&items, n_buckets, epoch_secs, cost)
+    }
+}
+
+/// Bucketed arrays matching the artifact input layout.
+#[derive(Debug, Clone)]
+pub struct BucketedStats {
+    pub lam: Vec<f32>,
+    pub miss_cost: Vec<f32>,
+    pub storage_rate: Vec<f32>,
+    pub size: Vec<f32>,
+    pub weight: Vec<f32>,
+    /// Total request rate represented (diagnostic).
+    pub total_rate: f64,
+}
+
+impl BucketedStats {
+    /// `items` sorted by descending count: the first `n_buckets − tail`
+    /// objects occupy one bucket each; the remainder is pooled into the
+    /// tail buckets by rank slices.
+    pub fn build(
+        items: &[(u32, u32)],
+        n_buckets: usize,
+        epoch_secs: f64,
+        cost: &CostConfig,
+    ) -> BucketedStats {
+        let n = n_buckets.max(1);
+        let mut out = BucketedStats {
+            lam: vec![0.0; n],
+            miss_cost: vec![0.0; n],
+            storage_rate: vec![0.0; n],
+            size: vec![0.0; n],
+            weight: vec![0.0; n],
+            total_rate: 0.0,
+        };
+        if items.is_empty() {
+            return out;
+        }
+        // Head: one object per bucket while both last.
+        let head = items.len().min(n.saturating_sub(1).max(1));
+        for (b, &(count, size)) in items.iter().take(head).enumerate() {
+            let lam = count as f64 / epoch_secs;
+            out.lam[b] = lam as f32;
+            out.miss_cost[b] = cost.miss_cost(size as u64) as f32;
+            out.storage_rate[b] = cost.storage_rate(size as u64) as f32;
+            out.size[b] = size as f32;
+            out.weight[b] = 1.0;
+            out.total_rate += lam;
+        }
+        // Tail: pool everything else into the final bucket with averaged
+        // rate/size (homogenized tail — the classic IRM bucketing).
+        if items.len() > head {
+            let tail = &items[head..];
+            let count_sum: f64 = tail.iter().map(|x| x.0 as f64).sum();
+            let size_mean: f64 =
+                tail.iter().map(|x| x.1 as f64).sum::<f64>() / tail.len() as f64;
+            let lam_mean = count_sum / epoch_secs / tail.len() as f64;
+            let b = n - 1;
+            out.lam[b] = lam_mean as f32;
+            out.miss_cost[b] = cost.miss_cost(size_mean as u64) as f32;
+            out.storage_rate[b] = cost.storage_rate(size_mean as u64) as f32;
+            out.size[b] = size_mean as f32;
+            out.weight[b] = tail.len() as f32;
+            out.total_rate += count_sum / epoch_secs;
+        }
+        out
+    }
+}
+
+/// One planning decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanDecision {
+    /// Model-optimal TTL, seconds.
+    pub t_star_secs: f64,
+    /// Predicted cost rate at the optimum, $/s.
+    pub cost_rate: f64,
+    /// Predicted steady-state virtual size at the optimum, bytes.
+    pub vsize_bytes: f64,
+    /// Cluster size implied by the virtual size.
+    pub instances: u32,
+}
+
+/// Wraps the artifact (or the Rust oracle) + the T grid.
+pub struct Planner {
+    model: Option<CostCurveModel>,
+    n: usize,
+    t_grid: Vec<f32>,
+}
+
+impl Planner {
+    /// Geometric T grid from 1 s to `t_max` over `g` points (dense where
+    /// the cost curve bends).
+    pub fn t_grid(g: usize, t_max: f64) -> Vec<f32> {
+        let g = g.max(2);
+        (0..g)
+            .map(|i| {
+                if i == 0 {
+                    0.0
+                } else {
+                    let f = (i - 1) as f64 / (g - 2).max(1) as f64;
+                    (t_max.max(2.0).powf(f)) as f32
+                }
+            })
+            .collect()
+    }
+
+    /// Load the AOT artifact; `Err` only on a malformed artifact — a
+    /// *missing* artifact falls back to the Rust oracle (useful for tests;
+    /// `make artifacts` enables the PJRT path).
+    pub fn load(dir: impl AsRef<std::path::Path>, t_max: f64) -> Self {
+        match CostCurveModel::load(dir, None) {
+            Ok(m) => {
+                let g = m.g;
+                let n = m.n;
+                Planner { model: Some(m), n, t_grid: Self::t_grid(g, t_max) }
+            }
+            Err(_) => Planner { model: None, n: 1024, t_grid: Self::t_grid(128, t_max) },
+        }
+    }
+
+    /// Oracle-only planner (no PJRT) with explicit shapes.
+    pub fn oracle(n: usize, g: usize, t_max: f64) -> Self {
+        Planner { model: None, n, t_grid: Self::t_grid(g, t_max) }
+    }
+
+    pub fn uses_artifact(&self) -> bool {
+        self.model.is_some()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.n
+    }
+
+    /// Evaluate the cost curves for bucketed stats.
+    pub fn curves(&self, stats: &BucketedStats) -> crate::Result<CostCurves> {
+        match &self.model {
+            Some(m) => m.evaluate(
+                &stats.lam,
+                &stats.miss_cost,
+                &stats.storage_rate,
+                &stats.size,
+                &stats.weight,
+                &self.t_grid,
+            ),
+            None => Ok(reference_curves(
+                &stats.lam,
+                &stats.miss_cost,
+                &stats.storage_rate,
+                &stats.size,
+                &stats.weight,
+                &self.t_grid,
+            )),
+        }
+    }
+
+    /// Full decision: argmin T, implied size and instance count.
+    pub fn plan(&self, stats: &BucketedStats, instance_bytes: u64) -> crate::Result<PlanDecision> {
+        let curves = self.curves(stats)?;
+        let i = curves.argmin_cost();
+        let vsize = curves.vsize[i] as f64;
+        Ok(PlanDecision {
+            t_star_secs: curves.t_grid[i] as f64,
+            cost_rate: curves.cost[i] as f64,
+            vsize_bytes: vsize,
+            instances: (vsize / instance_bytes.max(1) as f64).round() as u32,
+        })
+    }
+}
+
+/// Model-driven epoch sizer (the `PolicyKind::Analytic` ablation).
+pub struct AnalyticSizer {
+    estimator: PopularityEstimator,
+    planner: Planner,
+    cost: CostConfig,
+    instance_bytes: u64,
+    min_instances: u32,
+    max_instances: u32,
+    last_plan: Option<PlanDecision>,
+}
+
+impl AnalyticSizer {
+    pub fn new(cfg: &Config, planner: Planner) -> Self {
+        AnalyticSizer {
+            estimator: PopularityEstimator::new(),
+            planner,
+            cost: cfg.cost.clone(),
+            instance_bytes: cfg.cost.instance.ram_bytes,
+            min_instances: cfg.scaler.min_instances.max(1),
+            max_instances: cfg.scaler.max_instances.max(1),
+            last_plan: None,
+        }
+    }
+
+    /// Build with the default artifacts dir.
+    pub fn from_config(cfg: &Config) -> Self {
+        let planner = Planner::load(super::artifacts_dir(), cfg.controller.t_max_secs);
+        Self::new(cfg, planner)
+    }
+
+    pub fn last_plan(&self) -> Option<PlanDecision> {
+        self.last_plan
+    }
+}
+
+impl EpochSizer for AnalyticSizer {
+    fn on_request(&mut self, _now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork {
+        self.estimator.record(obj, size);
+        PolicyWork { units: 2, shadow_hit: None }
+    }
+
+    fn decide(&mut self, now: TimeUs) -> u32 {
+        let stats = self
+            .estimator
+            .drain(now, self.planner.n_buckets(), &self.cost);
+        match self.planner.plan(&stats, self.instance_bytes) {
+            Ok(plan) => {
+                let n = plan.instances.clamp(self.min_instances, self.max_instances);
+                self.last_plan = Some(plan);
+                n
+            }
+            Err(_) => self
+                .last_plan
+                .map(|p| p.instances.clamp(self.min_instances, self.max_instances))
+                .unwrap_or(self.min_instances),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn ttl_secs(&self) -> Option<f64> {
+        self.last_plan.map(|p| p.t_star_secs)
+    }
+
+    fn shadow_size(&self) -> Option<u64> {
+        self.last_plan.map(|p| p.vsize_bytes as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::HOUR;
+
+    #[test]
+    fn t_grid_shape() {
+        let g = Planner::t_grid(16, 3600.0);
+        assert_eq!(g.len(), 16);
+        assert_eq!(g[0], 0.0);
+        assert!((g[1] - 1.0).abs() < 1e-6);
+        assert!((g[15] - 3600.0).abs() / 3600.0 < 1e-5);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn bucketing_head_exact_tail_pooled() {
+        let cost = CostConfig::default();
+        let items: Vec<(u32, u32)> = (0..100).map(|i| (1000 - i * 10, 1000)).collect();
+        let s = BucketedStats::build(&items, 8, 100.0, &cost);
+        // 7 head buckets hold the 7 hottest; bucket 7 pools the other 93.
+        assert_eq!(s.weight[0], 1.0);
+        assert_eq!(s.weight[7], 93.0);
+        assert!(s.lam[0] > s.lam[1]);
+        assert!((s.lam[0] - 10.0).abs() < 1e-6); // 1000 reqs / 100 s
+        let rate_sum: f64 = items.iter().map(|x| x.0 as f64 / 100.0).sum();
+        assert!((s.total_rate - rate_sum).abs() / rate_sum < 1e-9);
+    }
+
+    #[test]
+    fn bucketing_handles_empty_and_small() {
+        let cost = CostConfig::default();
+        let s = BucketedStats::build(&[], 4, 10.0, &cost);
+        assert_eq!(s.total_rate, 0.0);
+        let s2 = BucketedStats::build(&[(5, 100)], 4, 10.0, &cost);
+        assert!((s2.lam[0] - 0.5).abs() < 1e-6);
+        assert_eq!(s2.weight[1], 0.0);
+    }
+
+    #[test]
+    fn oracle_planner_finds_interior_optimum() {
+        // A population where neither T=0 nor T=∞ is optimal: hot objects
+        // worth caching, cold giants not.
+        let cost = CostConfig::default();
+        let mut items: Vec<(u32, u32)> = Vec::new();
+        for _ in 0..50 {
+            items.push((3600, 10_000)); // 1 r/s, 10 KB — cache these
+        }
+        for _ in 0..5000 {
+            items.push((1, 20_000_000)); // one-hit 20 MB — do not cache
+        }
+        let stats = BucketedStats::build(&items, 128, 3600.0, &cost);
+        let planner = Planner::oracle(128, 64, 24.0 * 3600.0);
+        let plan = planner.plan(&stats, cost.instance.ram_bytes).unwrap();
+        assert!(plan.t_star_secs > 0.0, "T*=0 would cache nothing");
+        assert!(
+            plan.t_star_secs < 24.0 * 3600.0,
+            "T*=Tmax would store the giants"
+        );
+        assert!(plan.vsize_bytes > 0.0);
+    }
+
+    #[test]
+    fn analytic_sizer_full_epoch_cycle() {
+        let mut cfg = Config::default();
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.cost.instance.dollars_per_hour = 0.017 * 1.0e6 / 555.0e6;
+        cfg.scaler.max_instances = 50;
+        let planner = Planner::oracle(256, 64, cfg.controller.t_max_secs);
+        let mut s = AnalyticSizer::new(&cfg, planner);
+        // Hot working set of ~3 MB requested many times in the epoch.
+        for round in 0..50u64 {
+            for i in 0..30u64 {
+                s.on_request(round, i, 100_000);
+            }
+        }
+        let n = s.decide(HOUR);
+        assert!(n >= 2, "n={n}, plan={:?}", s.last_plan());
+        assert!(s.ttl_secs().unwrap() > 0.0);
+        // Second epoch with no traffic: plan size collapses.
+        let n2 = s.decide(2 * HOUR);
+        assert_eq!(n2, cfg.scaler.min_instances);
+    }
+}

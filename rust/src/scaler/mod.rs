@@ -1,0 +1,366 @@
+//! Epoch-end sizing policies: given what was observed during the epoch,
+//! decide `I(k+1)` — the number of instances for the next billing epoch.
+//!
+//! * [`FixedSizer`] — the paper's baseline: a static cluster.
+//! * [`TtlSizer`] — Algorithm 2: `I(k+1) = round(VC.size / S_p)`, with the
+//!   virtual cache + stochastic-approximation controller doing the real
+//!   work on the request path at O(1).
+//! * [`MrcSizer`] — the previously proposed alternative ([35]): profile
+//!   the epoch's requests into an exact MRC (O(log M) per request) and
+//!   pick the cluster size minimizing predicted storage + miss cost.
+//!
+//! The PJRT-backed analytic sizer lives in [`crate::runtime`] and
+//! implements the same [`EpochSizer`] trait.
+
+use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
+use crate::metrics::Ewma;
+use crate::mrc::{MrcProfiler, OlkenProfiler};
+use crate::vcache::VirtualCache;
+use crate::{ObjectId, TimeUs};
+
+/// Per-request work a policy performs, as abstract *work units* — the
+/// Fig. 1 CPU-overhead proxy. The basic router (hash + route) costs 1; the
+/// TTL policy adds a small constant; the MRC policy adds O(log M).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PolicyWork {
+    pub units: u32,
+    /// Whether the policy's shadow structure registered a (virtual) hit.
+    pub shadow_hit: Option<bool>,
+}
+
+/// An epoch-granularity cluster sizing policy.
+pub trait EpochSizer {
+    /// Called on every request, *before* routing. Must be O(1) for
+    /// production-grade policies (the paper's complexity argument, §2.4).
+    fn on_request(&mut self, now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork;
+
+    /// Called at each epoch boundary; returns the target instance count.
+    fn decide(&mut self, now: TimeUs) -> u32;
+
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Current TTL (seconds) if the policy maintains one (Fig. 5 left).
+    fn ttl_secs(&self) -> Option<f64> {
+        None
+    }
+
+    /// Current virtual/profiled size in bytes (Fig. 5 right).
+    fn shadow_size(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Static baseline.
+pub struct FixedSizer {
+    n: u32,
+}
+
+impl FixedSizer {
+    pub fn new(n: u32) -> Self {
+        FixedSizer { n: n.max(1) }
+    }
+}
+
+impl EpochSizer for FixedSizer {
+    fn on_request(&mut self, _now: TimeUs, _obj: ObjectId, _size: u64) -> PolicyWork {
+        PolicyWork { units: 1, shadow_hit: None }
+    }
+
+    fn decide(&mut self, _now: TimeUs) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// Algorithm 2 — the paper's TTL-based scaling.
+pub struct TtlSizer {
+    vc: VirtualCache,
+    instance_bytes: u64,
+    min_instances: u32,
+    max_instances: u32,
+}
+
+impl TtlSizer {
+    pub fn new(
+        ctrl: &ControllerConfig,
+        cost: CostConfig,
+        instance_bytes: u64,
+        scaler: &ScalerConfig,
+    ) -> Self {
+        TtlSizer {
+            vc: VirtualCache::new(ctrl, cost),
+            instance_bytes: instance_bytes.max(1),
+            min_instances: scaler.min_instances.max(1),
+            max_instances: scaler.max_instances.max(1),
+        }
+    }
+
+    pub fn from_config(cfg: &Config) -> Self {
+        Self::new(
+            &cfg.controller,
+            cfg.cost.clone(),
+            cfg.cost.instance.ram_bytes,
+            &cfg.scaler,
+        )
+    }
+
+    pub fn vcache(&self) -> &VirtualCache {
+        &self.vc
+    }
+}
+
+impl EpochSizer for TtlSizer {
+    fn on_request(&mut self, now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork {
+        let out = self.vc.on_request(now, obj, size);
+        // hash + route (1) + vcache list ops (≈2) — constant.
+        PolicyWork { units: 3, shadow_hit: Some(out.hit) }
+    }
+
+    fn decide(&mut self, now: TimeUs) -> u32 {
+        self.vc.expire(now);
+        // Algorithm 2 line 8: ROUND(VC.size / S_p).
+        let raw = (self.vc.vsize() as f64 / self.instance_bytes as f64).round() as u32;
+        raw.clamp(self.min_instances, self.max_instances)
+    }
+
+    fn name(&self) -> &'static str {
+        "ttl"
+    }
+
+    fn ttl_secs(&self) -> Option<f64> {
+        Some(self.vc.ttl_secs())
+    }
+
+    fn shadow_size(&self) -> Option<u64> {
+        Some(self.vc.vsize())
+    }
+}
+
+/// MRC-driven sizing ([35] / §3): exact Olken profiling with per-epoch
+/// decay, epoch-end cost minimization over candidate cluster sizes.
+pub struct MrcSizer {
+    profiler: OlkenProfiler,
+    cost: CostConfig,
+    instance_bytes: u64,
+    min_instances: u32,
+    max_instances: u32,
+    decay: f64,
+    /// Requests observed in the current epoch.
+    epoch_requests: u64,
+    /// Smoothed per-epoch request volume (for predicting next epoch).
+    rate_ewma: Ewma,
+    /// Smoothed mean request size (for the per-byte miss-cost mode).
+    mean_size: Ewma,
+    last_size_estimate: u64,
+}
+
+impl MrcSizer {
+    pub fn new(cost: CostConfig, instance_bytes: u64, scaler: &ScalerConfig) -> Self {
+        let max_bytes = instance_bytes.max(1) * scaler.max_instances.max(1) as u64 * 2;
+        MrcSizer {
+            profiler: OlkenProfiler::sized(max_bytes.max(1 << 20)),
+            cost,
+            instance_bytes: instance_bytes.max(1),
+            min_instances: scaler.min_instances.max(1),
+            max_instances: scaler.max_instances.max(1),
+            decay: scaler.mrc_decay,
+            epoch_requests: 0,
+            rate_ewma: Ewma::new(0.3),
+            mean_size: Ewma::new(0.05),
+            last_size_estimate: 0,
+        }
+    }
+
+    pub fn from_config(cfg: &Config) -> Self {
+        Self::new(cfg.cost.clone(), cfg.cost.instance.ram_bytes, &cfg.scaler)
+    }
+
+    /// Predicted total cost for an `n`-instance epoch given the current
+    /// curve and traffic estimate.
+    fn predicted_cost(&self, n: u32, reqs: f64, mean_size: f64) -> f64 {
+        let storage = n as f64
+            * self.cost.instance.dollars_per_hour
+            * (self.cost.epoch_us as f64 / crate::HOUR as f64);
+        let mr = self.profiler.curve().miss_ratio_at(n as u64 * self.instance_bytes);
+        let miss = mr * reqs * self.cost.miss_cost(mean_size as u64);
+        storage + miss
+    }
+}
+
+impl EpochSizer for MrcSizer {
+    fn on_request(&mut self, _now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork {
+        let dist = self.profiler.record(obj, size);
+        self.epoch_requests += 1;
+        self.mean_size.update(size as f64);
+        // 1 route unit + O(log M) tree units: charge log2(tracked).
+        let log_m = (self.profiler.tracked().max(2) as f64).log2() as u32;
+        PolicyWork { units: 1 + log_m, shadow_hit: dist.map(|_| true) }
+    }
+
+    fn decide(&mut self, _now: TimeUs) -> u32 {
+        let reqs = self.rate_ewma.update(self.epoch_requests as f64);
+        self.epoch_requests = 0;
+        let mean_size = self.mean_size.get().unwrap_or(64.0 * 1024.0);
+        let mut best_n = self.min_instances;
+        let mut best_cost = f64::INFINITY;
+        for n in self.min_instances..=self.max_instances {
+            let c = self.predicted_cost(n, reqs, mean_size);
+            if c < best_cost {
+                best_cost = c;
+                best_n = n;
+            }
+        }
+        self.last_size_estimate = best_n as u64 * self.instance_bytes;
+        self.profiler.decay(self.decay);
+        best_n
+    }
+
+    fn name(&self) -> &'static str {
+        "mrc"
+    }
+
+    fn shadow_size(&self) -> Option<u64> {
+        Some(self.last_size_estimate)
+    }
+}
+
+/// Build the configured sizer (Fixed/Ttl/Mrc — Analytic and IdealTtl are
+/// constructed by their owning modules).
+pub fn make_sizer(cfg: &Config) -> Box<dyn EpochSizer> {
+    use crate::config::PolicyKind::*;
+    match cfg.scaler.policy {
+        Fixed => Box::new(FixedSizer::new(cfg.scaler.fixed_instances)),
+        Ttl => Box::new(TtlSizer::from_config(cfg)),
+        Mrc => Box::new(MrcSizer::from_config(cfg)),
+        other => panic!("make_sizer cannot build {:?}; use its owning module", other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::{HOUR, SECOND};
+
+    #[test]
+    fn fixed_sizer_is_constant() {
+        let mut s = FixedSizer::new(8);
+        for i in 0..100 {
+            s.on_request(i, i, 100);
+        }
+        assert_eq!(s.decide(HOUR), 8);
+        assert_eq!(s.decide(2 * HOUR), 8);
+        assert_eq!(s.name(), "fixed");
+    }
+
+    #[test]
+    fn ttl_sizer_rounds_vsize_to_instances() {
+        let mut cfg = Config::default();
+        cfg.controller.t_init_secs = 3600.0; // long TTL: everything sticks
+        let mut s = TtlSizer::from_config(&cfg);
+        let inst = cfg.cost.instance.ram_bytes;
+        // Insert ~2.4 instances worth of distinct bytes.
+        let obj_size = inst / 10;
+        for i in 0..24u64 {
+            s.on_request(i * SECOND, i, obj_size);
+        }
+        let n = s.decide(30 * SECOND);
+        assert_eq!(n, 2, "vsize={} inst={}", s.shadow_size().unwrap(), inst);
+        assert!(s.ttl_secs().is_some());
+    }
+
+    #[test]
+    fn ttl_sizer_respects_bounds() {
+        let mut cfg = Config::default();
+        cfg.scaler.min_instances = 2;
+        cfg.scaler.max_instances = 4;
+        cfg.controller.t_init_secs = 3600.0;
+        let mut s = TtlSizer::from_config(&cfg);
+        // Empty vcache → raw 0 → clamped to 2.
+        assert_eq!(s.decide(0), 2);
+        // Overfill → clamped to 4.
+        let inst = cfg.cost.instance.ram_bytes;
+        for i in 0..100u64 {
+            s.on_request(i, i, inst / 5);
+        }
+        assert_eq!(s.decide(SECOND * 200), 4);
+    }
+
+    #[test]
+    fn mrc_sizer_grows_with_reusable_working_set() {
+        let mut cfg = Config::default();
+        cfg.scaler.max_instances = 16;
+        // Shrink the instance (price scaled per byte like the paper's) so
+        // the test's request volume makes misses economically meaningful.
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.cost.instance.dollars_per_hour = 0.017 * 1.0e6 / 555.0e6;
+        let mut s = MrcSizer::from_config(&cfg);
+        let inst = cfg.cost.instance.ram_bytes;
+        // Working set ≈ 3 instances, re-accessed many times: misses are
+        // expensive (many requests/epoch), so sizing up must win.
+        let nobj = 300u64;
+        let obj_size = 3 * inst / nobj;
+        for round in 0..20u64 {
+            for i in 0..nobj {
+                s.on_request(round * SECOND, i, obj_size);
+            }
+        }
+        let n = s.decide(HOUR);
+        assert!(n >= 3, "n={n}");
+        assert_eq!(s.name(), "mrc");
+    }
+
+    #[test]
+    fn mrc_sizer_shrinks_for_cold_traffic() {
+        let mut cfg = Config::default();
+        cfg.scaler.max_instances = 16;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.cost.instance.dollars_per_hour = 0.017 * 1.0e6 / 555.0e6;
+        let mut s = MrcSizer::from_config(&cfg);
+        // One-hit wonders only: no reuse, caching buys nothing → min size.
+        for i in 0..20_000u64 {
+            s.on_request(i, i, 100_000);
+        }
+        assert_eq!(s.decide(HOUR), cfg.scaler.min_instances);
+    }
+
+    #[test]
+    fn mrc_work_units_grow_logarithmically() {
+        let cfg = Config::default();
+        let mut s = MrcSizer::from_config(&cfg);
+        let w_small = s.on_request(0, 0, 100).units;
+        for i in 1..10_000u64 {
+            s.on_request(i, i, 100);
+        }
+        let w_large = s.on_request(10_001, 10_001, 100).units;
+        assert!(
+            w_large >= w_small + 8,
+            "w_small={w_small} w_large={w_large}"
+        );
+        // …while the TTL sizer stays constant:
+        let mut t = TtlSizer::from_config(&cfg);
+        let a = t.on_request(0, 0, 100).units;
+        for i in 1..10_000u64 {
+            t.on_request(i, i, 100);
+        }
+        let b = t.on_request(10_001, 10_001, 100).units;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn factory_builds_each_kind() {
+        use crate::config::PolicyKind;
+        for (kind, name) in [
+            (PolicyKind::Fixed, "fixed"),
+            (PolicyKind::Ttl, "ttl"),
+            (PolicyKind::Mrc, "mrc"),
+        ] {
+            let s = make_sizer(&Config::with_policy(kind));
+            assert_eq!(s.name(), name);
+        }
+    }
+}

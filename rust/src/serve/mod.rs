@@ -1,0 +1,245 @@
+//! `elastictl serve` — a minimal mcrouter-like network front (§6.1: "We
+//! have implemented the scheme described in Sect. 5.2 in a custom tool
+//! similar to mcrouter").
+//!
+//! Line protocol over TCP (one request per line, ASCII):
+//!
+//! ```text
+//! GET <key> <size>\n   -> HIT | MISS | SPURIOUS\n
+//! STATS\n              -> one-line JSON counters\n
+//! EPOCH\n              -> RESIZED <n>\n      (forces an epoch boundary)
+//! QUIT\n               -> BYE\n (closes the connection)
+//! ```
+//!
+//! The server wraps the same [`Balancer`] the simulator uses — the
+//! request path is identical; only the transport differs. One OS thread
+//! per connection (the build is offline-only, so no async runtime crate;
+//! the shared balancer sits behind a mutex exactly as mcrouter's shared
+//! routing state does).
+
+use crate::balancer::Balancer;
+use crate::config::Config;
+use crate::cost::CostTracker;
+use crate::scaler::make_sizer;
+use crate::trace::Request;
+use crate::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+/// Shared server state.
+pub struct ServerState {
+    pub balancer: Balancer,
+    pub costs: CostTracker,
+    start: std::time::Instant,
+}
+
+impl ServerState {
+    pub fn new(cfg: &Config) -> Self {
+        let sizer = make_sizer(cfg);
+        let initial = match cfg.scaler.policy {
+            crate::config::PolicyKind::Fixed => cfg.scaler.fixed_instances,
+            _ => cfg.scaler.min_instances.max(1),
+        };
+        ServerState {
+            balancer: Balancer::from_config(cfg, sizer, initial),
+            costs: CostTracker::new(cfg.cost.clone()),
+            start: std::time::Instant::now(),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Handle one protocol line; returns the response line, or `None` to
+    /// close the connection.
+    pub fn handle_line(&mut self, line: &str) -> Option<String> {
+        let mut parts = line.split_ascii_whitespace();
+        match parts.next() {
+            Some("GET") => {
+                let key = parts.next()?;
+                let size: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+                // Hash arbitrary string keys onto the ObjectId space.
+                let obj = key
+                    .parse::<u64>()
+                    .unwrap_or_else(|_| crate::mix64(fxhash_str(key)));
+                let req =
+                    Request { ts: self.now_us(), obj, size: size.min(u32::MAX as u64) as u32 };
+                let served = self.balancer.handle(&req, &mut self.costs);
+                Some(
+                    if served.hit {
+                        "HIT"
+                    } else if served.spurious {
+                        "SPURIOUS"
+                    } else {
+                        "MISS"
+                    }
+                    .to_string(),
+                )
+            }
+            Some("STATS") => Some(format!(
+                "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{}}}",
+                self.balancer.requests,
+                self.balancer.misses,
+                self.balancer.spurious_misses,
+                self.balancer.cluster.len(),
+                self.costs.miss_total(),
+                self.balancer
+                    .ttl_secs()
+                    .map(|t| format!("{t:.3}"))
+                    .unwrap_or_else(|| "null".into()),
+            )),
+            Some("EPOCH") => {
+                let n = self.balancer.end_epoch(self.now_us());
+                Some(format!("RESIZED {n}"))
+            }
+            Some("QUIT") => None,
+            Some(other) => Some(format!("ERR unknown command {other}")),
+            None => Some("ERR empty".to_string()),
+        }
+    }
+}
+
+/// Deterministic string hash (FNV-1a) for non-numeric keys.
+fn fxhash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Command channel to the state-owner thread: one protocol line plus a
+/// reply channel. The balancer's shadow structures hold non-`Send` PJRT
+/// handles in the analytic configuration, so a single dedicated thread
+/// owns all state (mcrouter's shared routing state, without locks on the
+/// request path).
+pub type StateTx = mpsc::Sender<(String, mpsc::Sender<Option<String>>)>;
+
+/// Spawn the state-owner thread for `cfg`, returning its command channel.
+pub fn spawn_state(cfg: Config) -> StateTx {
+    let (tx, rx) = mpsc::channel::<(String, mpsc::Sender<Option<String>>)>();
+    std::thread::spawn(move || {
+        let mut st = ServerState::new(&cfg);
+        for (line, reply) in rx {
+            let _ = reply.send(st.handle_line(&line));
+        }
+    });
+    tx
+}
+
+/// Run the server until the listener errors or the process is killed.
+pub fn serve(cfg: Config, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "elastictl serve: listening on {} (policy={})",
+        listener.local_addr()?,
+        cfg.scaler.policy.as_str()
+    );
+    let tx = spawn_state(cfg);
+    for stream in listener.incoming() {
+        let socket = stream?;
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(socket, tx);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(socket: TcpStream, tx: StateTx) -> Result<()> {
+    let reader = BufReader::new(socket.try_clone()?);
+    let mut w = socket;
+    for line in reader.lines() {
+        let line = line?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send((line, reply_tx))
+            .map_err(|_| anyhow::anyhow!("state thread gone"))?;
+        match reply_rx.recv()? {
+            Some(text) => {
+                w.write_all(text.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            None => {
+                w.write_all(b"BYE\n")?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, PolicyKind};
+
+    fn state(policy: PolicyKind) -> ServerState {
+        ServerState::new(&Config::with_policy(policy))
+    }
+
+    #[test]
+    fn get_protocol_hit_miss() {
+        let mut st = state(PolicyKind::Ttl);
+        assert_eq!(st.handle_line("GET alpha 1000").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET alpha 1000").unwrap(), "HIT");
+        assert_eq!(st.handle_line("GET 42 5").unwrap(), "MISS");
+    }
+
+    #[test]
+    fn stats_and_epoch() {
+        let mut st = state(PolicyKind::Ttl);
+        st.handle_line("GET k1 100");
+        st.handle_line("GET k2 100");
+        let stats = st.handle_line("STATS").unwrap();
+        assert!(stats.contains("\"requests\":2"), "{stats}");
+        assert!(stats.contains("\"misses\":2"));
+        let resp = st.handle_line("EPOCH").unwrap();
+        assert!(resp.starts_with("RESIZED "), "{resp}");
+    }
+
+    #[test]
+    fn errors_and_quit() {
+        let mut st = state(PolicyKind::Fixed);
+        assert!(st.handle_line("FROB x").unwrap().starts_with("ERR"));
+        assert!(st.handle_line("").unwrap().starts_with("ERR"));
+        assert!(st.handle_line("QUIT").is_none());
+        // GET with no key is malformed → connection closes (None).
+        assert!(st.handle_line("GET").is_none());
+    }
+
+    #[test]
+    fn string_and_numeric_keys_are_distinct_objects() {
+        let mut st = state(PolicyKind::Fixed);
+        st.handle_line("GET alpha 10");
+        assert_eq!(st.handle_line("GET beta 10").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET alpha 10").unwrap(), "HIT");
+        assert_eq!(st.handle_line("GET beta 10").unwrap(), "HIT");
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let cfg = Config::with_policy(PolicyKind::Ttl);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = spawn_state(cfg);
+        let srv = {
+            std::thread::spawn(move || {
+                let (socket, _) = listener.accept().unwrap();
+                handle_conn(socket, tx).unwrap();
+            })
+        };
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(b"GET obj1 500\nGET obj1 500\nSTATS\nQUIT\n")
+            .unwrap();
+        let mut lines = BufReader::new(sock.try_clone().unwrap()).lines();
+        assert_eq!(lines.next().unwrap().unwrap(), "MISS");
+        assert_eq!(lines.next().unwrap().unwrap(), "HIT");
+        let stats = lines.next().unwrap().unwrap();
+        assert!(stats.contains("\"requests\":2"));
+        assert_eq!(lines.next().unwrap().unwrap(), "BYE");
+        srv.join().unwrap();
+    }
+}

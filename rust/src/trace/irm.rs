@@ -1,0 +1,136 @@
+//! Stationary IRM (Independent Reference Model) trace generator — the
+//! arrival pattern under which Proposition 1 holds: Poisson aggregate
+//! arrivals, each request independently for object `i` with probability
+//! `λ_i / Σλ_j` (§4.1). Used to validate controller convergence and the
+//! analytic planner against theory.
+
+use super::{object_size, Request, RequestSource, Zipf};
+use crate::{TimeUs, SECOND};
+use crate::util::rng::Pcg;
+
+/// IRM generator parameters.
+#[derive(Debug, Clone)]
+pub struct IrmConfig {
+    /// Catalogue size N.
+    pub catalogue: u64,
+    /// Zipf exponent shaping the per-object rates λ_i.
+    pub alpha: f64,
+    /// Aggregate Poisson rate Σλ_i, requests per second.
+    pub total_rate: f64,
+    /// Trace duration (µs).
+    pub duration: TimeUs,
+    pub seed: u64,
+}
+
+impl IrmConfig {
+    pub fn small() -> Self {
+        IrmConfig {
+            catalogue: 10_000,
+            alpha: 0.9,
+            total_rate: 500.0,
+            duration: 2 * crate::HOUR,
+            seed: 11,
+        }
+    }
+
+    /// Per-object arrival rate λ_i for rank `i` (1-based), requests/s.
+    pub fn lambda_of_rank(&self, rank: u64) -> f64 {
+        let z = Zipf::new(self.catalogue, self.alpha);
+        self.total_rate * z.pmf(rank)
+    }
+}
+
+/// Streaming IRM source.
+pub struct IrmGenerator {
+    cfg: IrmConfig,
+    zipf: Zipf,
+    rng: Pcg,
+    now: TimeUs,
+    rate_per_us: f64,
+}
+
+impl IrmGenerator {
+    pub fn new(cfg: IrmConfig) -> Self {
+        IrmGenerator {
+            zipf: Zipf::new(cfg.catalogue, cfg.alpha),
+            rng: Pcg::seed_from_u64(cfg.seed),
+            now: 0,
+            rate_per_us: cfg.total_rate / SECOND as f64,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &IrmConfig {
+        &self.cfg
+    }
+
+    pub fn generate(mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.next_request() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+impl RequestSource for IrmGenerator {
+    fn next_request(&mut self) -> Option<Request> {
+        let u: f64 = self.rng.f64().max(1e-300);
+        let dt = (-u.ln() / self.rate_per_us).ceil() as TimeUs;
+        self.now = self.now.saturating_add(dt.max(1));
+        if self.now >= self.cfg.duration {
+            return None;
+        }
+        let obj = self.zipf.sample(&mut self.rng);
+        let size = object_size(obj, self.cfg.seed) as u32;
+        Some(Request { ts: self.now, obj, size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn aggregate_rate_matches() {
+        let cfg = IrmConfig::small();
+        let dur_s = cfg.duration as f64 / SECOND as f64;
+        let expect = cfg.total_rate * dur_s;
+        let n = IrmGenerator::new(cfg).generate().len() as f64;
+        assert!((n - expect).abs() / expect < 0.05, "n={n} expect={expect}");
+    }
+
+    #[test]
+    fn per_object_rates_follow_zipf() {
+        let cfg = IrmConfig { catalogue: 100, ..IrmConfig::small() };
+        let lam1 = cfg.lambda_of_rank(1);
+        let lam10 = cfg.lambda_of_rank(10);
+        // λ_1/λ_10 = 10^alpha
+        assert!((lam1 / lam10 - 10f64.powf(cfg.alpha)).abs() < 1e-6);
+
+        let trace = IrmGenerator::new(cfg.clone()).generate();
+        let mut counts: HashMap<u64, u64> = HashMap::new();
+        for r in &trace {
+            *counts.entry(r.obj).or_default() += 1;
+        }
+        let dur_s = cfg.duration as f64 / SECOND as f64;
+        let emp1 = *counts.get(&1).unwrap_or(&0) as f64 / dur_s;
+        assert!(
+            (emp1 - lam1).abs() / lam1 < 0.15,
+            "emp={emp1} lam={lam1}"
+        );
+    }
+
+    #[test]
+    fn interarrivals_are_memoryless() {
+        // Coefficient of variation of exponential inter-arrivals is 1.
+        let cfg = IrmConfig::small();
+        let trace = IrmGenerator::new(cfg).generate();
+        let gaps: Vec<f64> = trace.windows(2).map(|w| (w[1].ts - w[0].ts) as f64).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.05, "cv={cv}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Request traces: the record format, binary/CSV IO, synthetic workload
+//! generators, and trace characterization (Fig. 4).
+//!
+//! The paper evaluates on anonymized Akamai traces (30 days, 2·10⁹
+//! requests, 110 M objects, sizes from bytes to tens of MB, strong diurnal
+//! pattern). Those traces are proprietary, so [`synth`] generates a
+//! synthetic workload matching the two published marginals (rank-frequency
+//! and size CDF, Fig. 4) plus the diurnal modulation that drives
+//! elasticity; [`irm`] generates stationary IRM traffic for validating the
+//! stochastic-approximation theory (Proposition 1). See DESIGN.md §3.
+
+mod irm;
+mod record;
+mod stats;
+mod synth;
+mod zipf;
+
+pub use irm::{IrmConfig, IrmGenerator};
+pub use record::{read_csv, read_trace, write_csv, write_trace, Request, TraceReader, TraceWriter};
+pub use stats::{characterize, TraceStats};
+pub use synth::{SynthConfig, SynthGenerator};
+pub use zipf::Zipf;
+
+use crate::{ObjectId, TimeUs};
+
+/// Anything that yields a time-ordered request stream.
+pub trait RequestSource {
+    /// Next request, or `None` when the trace is exhausted.
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Drain up to `n` requests into a vector.
+    fn take_requests(&mut self, n: usize) -> Vec<Request> {
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            match self.next_request() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+/// An in-memory trace is a source.
+pub struct VecSource {
+    reqs: std::vec::IntoIter<Request>,
+}
+
+impl VecSource {
+    pub fn new(reqs: Vec<Request>) -> Self {
+        VecSource { reqs: reqs.into_iter() }
+    }
+}
+
+impl RequestSource for VecSource {
+    fn next_request(&mut self) -> Option<Request> {
+        self.reqs.next()
+    }
+}
+
+/// Size lookup shared by generators: deterministic per-object size drawn
+/// from a heavy-tailed mixture, so the same object always has the same
+/// size (as in a real CDN trace).
+///
+/// The mixture approximates the Fig. 4 size CDF: mostly tens-of-KB web
+/// objects, a quarter of mid-size (hundreds of KB) assets, and a small
+/// tail of multi-MB downloads, clamped to [64 B, 64 MB].
+pub fn object_size(obj: ObjectId, seed: u64) -> u64 {
+    let h = crate::mix64(obj ^ seed.rotate_left(17));
+    // Split the hash: low bits pick the mixture component, high bits drive
+    // the lognormal draw via a Box-Muller-free approximation (sum of
+    // uniforms ≈ normal).
+    let comp = h % 100;
+    let u1 = ((h >> 8) & 0xFFFF) as f64 / 65536.0;
+    let u2 = ((h >> 24) & 0xFFFF) as f64 / 65536.0;
+    let u3 = ((h >> 40) & 0xFFFF) as f64 / 65536.0;
+    // Irwin-Hall(3) standardized: mean 1.5, var 3/12 → z ≈ (sum-1.5)*2
+    let z = (u1 + u2 + u3 - 1.5) * 2.0;
+    let (median_ln, sigma) = if comp < 70 {
+        ((10.0 * 1024.0f64).ln(), 1.2) // ~10 KB web objects
+    } else if comp < 95 {
+        ((200.0 * 1024.0f64).ln(), 1.0) // ~200 KB assets
+    } else {
+        ((5.0 * 1024.0 * 1024.0f64).ln(), 0.8) // ~5 MB downloads
+    };
+    let size = (median_ln + sigma * z).exp();
+    (size as u64).clamp(64, 64 * 1024 * 1024)
+}
+
+/// Diurnal rate modulation: multiplicative factor in
+/// `[1−amplitude, 1+amplitude]` with a 24 h period, peaking mid-day.
+#[inline]
+pub fn diurnal_factor(t: TimeUs, amplitude: f64) -> f64 {
+    let day_frac = (t % crate::DAY) as f64 / crate::DAY as f64;
+    // Peak at 14:00, trough at 02:00 (typical CDN vantage-point shape).
+    1.0 + amplitude * (2.0 * std::f64::consts::PI * (day_frac - 7.0 / 24.0)).sin()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{DAY, HOUR};
+
+    #[test]
+    fn object_size_is_deterministic_and_bounded() {
+        for obj in 0..10_000u64 {
+            let s1 = object_size(obj, 7);
+            let s2 = object_size(obj, 7);
+            assert_eq!(s1, s2);
+            assert!((64..=64 * 1024 * 1024).contains(&s1));
+        }
+        // different seeds give different size assignments
+        let diff = (0..1000u64)
+            .filter(|&o| object_size(o, 1) != object_size(o, 2))
+            .count();
+        assert!(diff > 900);
+    }
+
+    #[test]
+    fn size_distribution_is_heavy_tailed() {
+        let sizes: Vec<u64> = (0..100_000u64).map(|o| object_size(o, 42)).collect();
+        let mean = sizes.iter().sum::<u64>() as f64 / sizes.len() as f64;
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        // heavy tail: mean well above median
+        assert!(mean > 2.0 * median, "mean={mean} median={median}");
+        // and the tail reaches into the multi-MB range
+        assert!(*sorted.last().unwrap() > 10 * 1024 * 1024);
+    }
+
+    #[test]
+    fn diurnal_factor_period_and_range() {
+        for t in (0..DAY).step_by(HOUR as usize) {
+            let f = diurnal_factor(t, 0.8);
+            assert!((0.199..=1.801).contains(&f), "f={f}");
+            assert!((diurnal_factor(t + DAY, 0.8) - f).abs() < 1e-9);
+        }
+        // peak afternoon > trough night
+        let peak = diurnal_factor(14 * HOUR, 0.8);
+        let trough = diurnal_factor(2 * HOUR, 0.8);
+        assert!(peak > 1.5 && trough < 0.5);
+    }
+
+    #[test]
+    fn vec_source_drains() {
+        let reqs = vec![
+            Request { ts: 0, obj: 1, size: 10 },
+            Request { ts: 1, obj: 2, size: 20 },
+        ];
+        let mut src = VecSource::new(reqs);
+        assert_eq!(src.take_requests(5).len(), 2);
+        assert!(src.next_request().is_none());
+    }
+}

@@ -1,0 +1,265 @@
+//! The request record and trace IO.
+//!
+//! Binary format: little-endian fixed 20-byte records
+//! `(ts_us: u64, obj: u64, size: u32)` after a 16-byte header
+//! (`b"ELTC"`, version u32, record count u64). CSV is also supported for
+//! interoperability (`ts_us,obj,size` with a header line).
+
+use crate::{ObjectId, Result, TimeUs};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ELTC";
+const VERSION: u32 = 1;
+const RECORD_BYTES: usize = 20;
+
+/// One trace record: a request for `obj` of `size` bytes at time `ts`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub ts: TimeUs,
+    pub obj: ObjectId,
+    pub size: u32,
+}
+
+impl Request {
+    #[inline]
+    pub fn size_bytes(&self) -> u64 {
+        self.size as u64
+    }
+
+    #[inline]
+    fn encode(&self, buf: &mut [u8; RECORD_BYTES]) {
+        buf[0..8].copy_from_slice(&self.ts.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.obj.to_le_bytes());
+        buf[16..20].copy_from_slice(&self.size.to_le_bytes());
+    }
+
+    #[inline]
+    fn decode(buf: &[u8; RECORD_BYTES]) -> Request {
+        Request {
+            ts: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            obj: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            size: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+        }
+    }
+}
+
+/// Streaming binary trace writer.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    count: u64,
+    path: std::path::PathBuf,
+}
+
+impl TraceWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(&path)?);
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u64.to_le_bytes())?; // count patched on finish
+        Ok(TraceWriter { out, count: 0, path })
+    }
+
+    #[inline]
+    pub fn write(&mut self, r: &Request) -> Result<()> {
+        let mut buf = [0u8; RECORD_BYTES];
+        r.encode(&mut buf);
+        self.out.write_all(&buf)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Flush and patch the record count into the header.
+    pub fn finish(mut self) -> Result<u64> {
+        self.out.flush()?;
+        let count = self.count;
+        drop(self.out);
+        // Patch header in place.
+        use std::io::{Seek, SeekFrom};
+        let mut f = std::fs::OpenOptions::new().write(true).open(&self.path)?;
+        f.seek(SeekFrom::Start(8))?;
+        f.write_all(&count.to_le_bytes())?;
+        Ok(count)
+    }
+}
+
+/// Streaming binary trace reader (implements [`super::RequestSource`]).
+pub struct TraceReader {
+    input: BufReader<File>,
+    remaining: u64,
+}
+
+impl TraceReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let mut input = BufReader::new(File::open(path.as_ref())?);
+        let mut hdr = [0u8; 16];
+        input.read_exact(&mut hdr)?;
+        anyhow::ensure!(&hdr[0..4] == MAGIC, "not an elastictl trace file");
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        anyhow::ensure!(version == VERSION, "unsupported trace version {version}");
+        let remaining = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        Ok(TraceReader { input, remaining })
+    }
+
+    /// Records left to read.
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+}
+
+impl super::RequestSource for TraceReader {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let mut buf = [0u8; RECORD_BYTES];
+        match self.input.read_exact(&mut buf) {
+            Ok(()) => {
+                self.remaining -= 1;
+                Some(Request::decode(&buf))
+            }
+            Err(_) => {
+                self.remaining = 0;
+                None
+            }
+        }
+    }
+}
+
+/// Write a whole trace to a binary file. Returns the record count.
+pub fn write_trace(path: impl AsRef<Path>, reqs: &[Request]) -> Result<u64> {
+    let mut w = TraceWriter::create(path)?;
+    for r in reqs {
+        w.write(r)?;
+    }
+    w.finish()
+}
+
+/// Read a whole binary trace into memory.
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Request>> {
+    use super::RequestSource;
+    let mut r = TraceReader::open(path)?;
+    let mut out = Vec::with_capacity(r.remaining() as usize);
+    while let Some(req) = r.next_request() {
+        out.push(req);
+    }
+    Ok(out)
+}
+
+/// Write a trace as CSV (`ts_us,obj,size`).
+pub fn write_csv(path: impl AsRef<Path>, reqs: &[Request]) -> Result<()> {
+    let mut out = BufWriter::new(File::create(path.as_ref())?);
+    writeln!(out, "ts_us,obj,size")?;
+    for r in reqs {
+        writeln!(out, "{},{},{}", r.ts, r.obj, r.size)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Read a CSV trace (header line required).
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Vec<Request>> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 {
+            anyhow::ensure!(
+                line.trim() == "ts_us,obj,size",
+                "unexpected CSV header: {line}"
+            );
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let ts = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {i}: missing ts"))?
+            .trim()
+            .parse()?;
+        let obj = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {i}: missing obj"))?
+            .trim()
+            .parse()?;
+        let size = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {i}: missing size"))?
+            .trim()
+            .parse()?;
+        out.push(Request { ts, obj, size });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::RequestSource;
+
+    fn sample_trace(n: u64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                ts: i * 1000,
+                obj: crate::mix64(i) % 100,
+                size: (i % 4096 + 1) as u32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn binary_round_trip() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("t.bin");
+        let reqs = sample_trace(1000);
+        let n = write_trace(&p, &reqs).unwrap();
+        assert_eq!(n, 1000);
+        let back = read_trace(&p).unwrap();
+        assert_eq!(back, reqs);
+    }
+
+    #[test]
+    fn streaming_reader_counts() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("t.bin");
+        write_trace(&p, &sample_trace(10)).unwrap();
+        let mut r = TraceReader::open(&p).unwrap();
+        assert_eq!(r.remaining(), 10);
+        assert_eq!(r.take_requests(4).len(), 4);
+        assert_eq!(r.remaining(), 6);
+        assert_eq!(r.take_requests(100).len(), 6);
+        assert!(r.next_request().is_none());
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("t.csv");
+        let reqs = sample_trace(50);
+        write_csv(&p, &reqs).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back, reqs);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("bad.bin");
+        std::fs::write(&p, b"not a trace file at all").unwrap();
+        assert!(TraceReader::open(&p).is_err());
+    }
+
+    #[test]
+    fn encode_decode_identity() {
+        let r = Request { ts: u64::MAX - 5, obj: 0xDEAD_BEEF_CAFE, size: u32::MAX };
+        let mut buf = [0u8; 20];
+        r.encode(&mut buf);
+        assert_eq!(Request::decode(&buf), r);
+    }
+}

@@ -1,0 +1,174 @@
+//! Trace characterization — regenerates Fig. 4 of the paper: requests per
+//! object ordered by rank (left) and the cumulative fraction of requests
+//! for objects up to a given size (right).
+
+use super::Request;
+use crate::metrics::LogHistogram;
+use std::collections::HashMap;
+
+/// Aggregate statistics of a trace.
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub requests: u64,
+    pub distinct_objects: u64,
+    pub total_bytes_requested: u64,
+    /// Sum of sizes of distinct objects (the footprint an infinite cache
+    /// would need).
+    pub footprint_bytes: u64,
+    pub duration_us: u64,
+    /// Request counts ordered by popularity rank (descending) — Fig. 4 left.
+    pub rank_frequency: Vec<u64>,
+    /// Request-weighted size CDF points `(size_edge, fraction)` — Fig. 4
+    /// right.
+    pub size_cdf: Vec<(u64, f64)>,
+    pub min_size: u64,
+    pub max_size: u64,
+    pub mean_size: f64,
+}
+
+impl TraceStats {
+    /// Mean request rate over the trace, requests/s.
+    pub fn mean_rate(&self) -> f64 {
+        if self.duration_us == 0 {
+            0.0
+        } else {
+            self.requests as f64 / (self.duration_us as f64 / crate::SECOND as f64)
+        }
+    }
+
+    /// Requests per distinct object.
+    pub fn reqs_per_object(&self) -> f64 {
+        if self.distinct_objects == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.distinct_objects as f64
+        }
+    }
+
+    /// Fit a Zipf exponent to the head of the rank-frequency curve by
+    /// log-log least squares over the top `k` ranks.
+    pub fn fitted_zipf_alpha(&self, k: usize) -> Option<f64> {
+        let k = k.min(self.rank_frequency.len());
+        if k < 3 {
+            return None;
+        }
+        let pts: Vec<(f64, f64)> = self.rank_frequency[..k]
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f > 0)
+            .map(|(i, &f)| (((i + 1) as f64).ln(), (f as f64).ln()))
+            .collect();
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return None;
+        }
+        let slope = (n * sxy - sx * sy) / denom;
+        Some(-slope)
+    }
+}
+
+/// Compute [`TraceStats`] over a trace slice.
+pub fn characterize(trace: &[Request]) -> TraceStats {
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    let mut sizes: HashMap<u64, u64> = HashMap::new();
+    let mut total_bytes = 0u64;
+    let mut size_hist = LogHistogram::new(1.3, 1 << 40);
+    let (mut min_size, mut max_size) = (u64::MAX, 0u64);
+    for r in trace {
+        *counts.entry(r.obj).or_default() += 1;
+        sizes.entry(r.obj).or_insert(r.size_bytes());
+        total_bytes += r.size_bytes();
+        size_hist.inc(r.size_bytes());
+        min_size = min_size.min(r.size_bytes());
+        max_size = max_size.max(r.size_bytes());
+    }
+    let mut rank_frequency: Vec<u64> = counts.values().copied().collect();
+    rank_frequency.sort_unstable_by(|a, b| b.cmp(a));
+    let duration_us = match (trace.first(), trace.last()) {
+        (Some(a), Some(b)) => b.ts.saturating_sub(a.ts),
+        _ => 0,
+    };
+    let footprint: u64 = sizes.values().sum();
+    let requests = trace.len() as u64;
+    TraceStats {
+        requests,
+        distinct_objects: counts.len() as u64,
+        total_bytes_requested: total_bytes,
+        footprint_bytes: footprint,
+        duration_us,
+        rank_frequency,
+        size_cdf: size_hist.cdf(),
+        min_size: if requests == 0 { 0 } else { min_size },
+        max_size,
+        mean_size: if requests == 0 {
+            0.0
+        } else {
+            total_bytes as f64 / requests as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{SynthConfig, SynthGenerator};
+
+    #[test]
+    fn characterize_counts() {
+        let trace = vec![
+            Request { ts: 0, obj: 1, size: 100 },
+            Request { ts: 10, obj: 1, size: 100 },
+            Request { ts: 20, obj: 2, size: 50 },
+        ];
+        let s = characterize(&trace);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.distinct_objects, 2);
+        assert_eq!(s.total_bytes_requested, 250);
+        assert_eq!(s.footprint_bytes, 150);
+        assert_eq!(s.duration_us, 20);
+        assert_eq!(s.rank_frequency, vec![2, 1]);
+        assert_eq!(s.min_size, 50);
+        assert_eq!(s.max_size, 100);
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let s = characterize(&[]);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_rate(), 0.0);
+        assert_eq!(s.reqs_per_object(), 0.0);
+        assert!(s.fitted_zipf_alpha(100).is_none());
+    }
+
+    #[test]
+    fn fitted_alpha_recovers_generator_exponent() {
+        let mut cfg = SynthConfig::tiny();
+        cfg.alpha = 0.9;
+        cfg.mean_rate = 400.0;
+        let trace = SynthGenerator::new(cfg).generate();
+        let s = characterize(&trace);
+        let alpha = s.fitted_zipf_alpha(50).unwrap();
+        assert!(
+            (alpha - 0.9).abs() < 0.25,
+            "fitted alpha={alpha} expected ~0.9"
+        );
+    }
+
+    #[test]
+    fn size_cdf_monotone_and_normalized() {
+        let trace = SynthGenerator::new(SynthConfig::tiny()).generate();
+        let s = characterize(&trace);
+        let cdf = &s.size_cdf;
+        assert!(!cdf.is_empty());
+        for w in cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 > w[0].0);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! Zipf(α) rank sampler with O(1) amortized sampling via the rejection
+//! method of [Jim Gray et al., "Quickly Generating Billion-Record
+//! Synthetic Databases"] — no O(N) table, so catalogues of 10⁶–10⁸
+//! objects are cheap to sample from.
+
+use crate::util::rng::Pcg;
+
+/// Zipf distribution over ranks `1..=n` with exponent `alpha > 0`:
+/// `P(rank = k) ∝ k^-alpha`.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    // Precomputed constants of the rejection sampler.
+    t: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n >= 1, "catalogue must be non-empty");
+        assert!(alpha > 0.0, "alpha must be positive");
+        // t = (n^(1-alpha) - alpha) / (1 - alpha) for alpha != 1,
+        //     1 + ln(n) for alpha == 1 (integral of the envelope).
+        let t = if (alpha - 1.0).abs() < 1e-12 {
+            1.0 + (n as f64).ln()
+        } else {
+            ((n as f64).powf(1.0 - alpha) - alpha) / (1.0 - alpha)
+        };
+        Zipf { n, alpha, t }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Inverse of the envelope CDF.
+    #[inline]
+    fn inv_cdf(&self, p: f64) -> f64 {
+        let pt = p * self.t;
+        if pt <= 1.0 {
+            pt
+        } else if (self.alpha - 1.0).abs() < 1e-12 {
+            (pt - 1.0 + 1.0f64.ln()).exp() // e^(pt-1)
+        } else {
+            (pt * (1.0 - self.alpha) + self.alpha).powf(1.0 / (1.0 - self.alpha))
+        }
+    }
+
+    /// Sample a rank in `1..=n`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg) -> u64 {
+        loop {
+            let p: f64 = rng.f64();
+            let x = self.inv_cdf(p);
+            let k = (x + 1.0).floor().clamp(1.0, self.n as f64);
+            // Accept with probability proportional to the ratio of the true
+            // pmf to the envelope density at x.
+            let ratio = (k.powf(-self.alpha))
+                / if x <= 1.0 { 1.0 } else { x.powf(-self.alpha) };
+            let accept: f64 = rng.f64();
+            if accept < ratio {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Exact probability of rank `k` (O(n) normalization on first call —
+    /// for tests and for the analytic planner's bucketing, not for
+    /// sampling).
+    pub fn pmf(&self, k: u64) -> f64 {
+        assert!(k >= 1 && k <= self.n);
+        (k as f64).powf(-self.alpha) / self.harmonic()
+    }
+
+    /// Generalized harmonic number `H_{n,alpha}`.
+    pub fn harmonic(&self) -> f64 {
+        (1..=self.n).map(|k| (k as f64).powf(-self.alpha)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(1000, 0.9);
+        let mut rng = Pcg::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let k = z.sample(&mut rng);
+            assert!((1..=1000).contains(&k));
+        }
+    }
+
+    #[test]
+    fn empirical_matches_pmf() {
+        for alpha in [0.7, 1.0, 1.3] {
+            let n = 200u64;
+            let z = Zipf::new(n, alpha);
+            let mut rng = Pcg::seed_from_u64(42);
+            let trials = 400_000;
+            let mut counts = vec![0u64; n as usize + 1];
+            for _ in 0..trials {
+                counts[z.sample(&mut rng) as usize] += 1;
+            }
+            // Check the head ranks against the exact pmf (relative error).
+            for k in [1u64, 2, 5, 10, 50] {
+                let emp = counts[k as usize] as f64 / trials as f64;
+                let exact = z.pmf(k);
+                let rel = (emp - exact).abs() / exact;
+                assert!(
+                    rel < 0.08,
+                    "alpha={alpha} k={k}: emp={emp:.5} exact={exact:.5} rel={rel:.3}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pmf_normalizes() {
+        let z = Zipf::new(500, 0.9);
+        let sum: f64 = (1..=500).map(|k| z.pmf(k)).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn head_is_heavier_with_larger_alpha() {
+        let z1 = Zipf::new(1000, 0.6);
+        let z2 = Zipf::new(1000, 1.2);
+        assert!(z2.pmf(1) > z1.pmf(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_alpha() {
+        let _ = Zipf::new(10, 0.0);
+    }
+}

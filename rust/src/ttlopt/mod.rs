@@ -1,0 +1,302 @@
+//! TTL-OPT (§4.2, Algorithm 1): the clairvoyant per-request-optimal TTL
+//! policy. Knowing the next request time of each object, store it until
+//! then iff the storage cost of the gap is below the miss cost; otherwise
+//! serve without storing. Proposition 2 proves this minimizes total cost;
+//! it is computable offline in linear time and serves as the lower bound
+//! of Fig. 8.
+//!
+//! A Bélády byte-capacity baseline is included for context (§4.2 notes
+//! that under heterogeneous sizes optimal *replacement* is NP-complete;
+//! Bélády is the classical uniform-size heuristic).
+
+use crate::config::CostConfig;
+use crate::cost::CostTracker;
+use crate::metrics::TimeSeries;
+use crate::trace::Request;
+use crate::{us_to_secs, TimeUs};
+use std::collections::HashMap;
+
+/// Result of the clairvoyant solve.
+#[derive(Debug)]
+pub struct TtlOptResult {
+    pub requests: u64,
+    pub misses: u64,
+    /// Requests served from cache (stored across the preceding gap).
+    pub hits: u64,
+    pub storage_cost: f64,
+    pub miss_cost: f64,
+    pub total_cost: f64,
+    /// Cumulative total cost sampled at epoch boundaries (Fig. 8).
+    pub total_series: TimeSeries,
+    /// Peak simultaneous bytes the policy would hold.
+    pub peak_bytes: u64,
+}
+
+impl TtlOptResult {
+    pub fn miss_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.requests as f64
+        }
+    }
+}
+
+/// Compute, for each request index, the timestamp of the *next* request
+/// for the same object (`None` for last occurrences) — one backward pass.
+pub fn next_request_times(trace: &[Request]) -> Vec<Option<TimeUs>> {
+    let mut next: Vec<Option<TimeUs>> = vec![None; trace.len()];
+    let mut last_seen: HashMap<u64, TimeUs> = HashMap::new();
+    for (i, r) in trace.iter().enumerate().rev() {
+        next[i] = last_seen.get(&r.obj).copied();
+        last_seen.insert(r.obj, r.ts);
+    }
+    next
+}
+
+/// Run Algorithm 1 over an in-memory trace.
+pub fn solve(trace: &[Request], cost: &CostConfig) -> TtlOptResult {
+    let next = next_request_times(trace);
+    let mut costs = CostTracker::new(cost.clone());
+    let mut total_series = TimeSeries::new("ttlopt_total_cum");
+    let epoch_us = cost.epoch_us.max(1);
+    let mut epoch_end = epoch_us;
+
+    let mut misses = 0u64;
+    let mut hits = 0u64;
+    // Objects currently stored until their next request (decided at the
+    // previous request). Tracks the instantaneous footprint.
+    let mut stored_until: HashMap<u64, (TimeUs, u64)> = HashMap::new();
+    let mut cur_bytes = 0u64;
+    let mut peak_bytes = 0u64;
+
+    for (i, r) in trace.iter().enumerate() {
+        while r.ts >= epoch_end {
+            costs.end_epoch_vertical(epoch_end);
+            total_series.push(epoch_end, costs.total());
+            epoch_end += epoch_us;
+        }
+        // Was this request covered by a storage decision?
+        let covered = match stored_until.remove(&r.obj) {
+            Some((until, bytes)) => {
+                debug_assert!(until == r.ts);
+                cur_bytes -= bytes;
+                true
+            }
+            None => false,
+        };
+        if covered {
+            hits += 1;
+        } else {
+            misses += 1;
+            costs.record_miss(r.size_bytes());
+        }
+        // Decide for the gap to the next request (Algorithm 1 lines 3–8).
+        if let Some(t_next) = next[i] {
+            let gap_secs = us_to_secs(t_next - r.ts);
+            let store_cost = cost.storage_rate(r.size_bytes()) * gap_secs;
+            if store_cost < cost.miss_cost(r.size_bytes()) {
+                costs.record_storage_dollars(store_cost);
+                stored_until.insert(r.obj, (t_next, r.size_bytes()));
+                cur_bytes += r.size_bytes();
+                peak_bytes = peak_bytes.max(cur_bytes);
+            }
+        }
+    }
+    costs.end_epoch_vertical(epoch_end);
+    total_series.push(epoch_end, costs.total());
+
+    TtlOptResult {
+        requests: trace.len() as u64,
+        misses,
+        hits,
+        storage_cost: costs.storage_total(),
+        miss_cost: costs.miss_total(),
+        total_cost: costs.total(),
+        total_series,
+        peak_bytes,
+    }
+}
+
+/// Bélády's clairvoyant *replacement* baseline at a fixed byte capacity:
+/// evict the resident object whose next use is farthest in the future.
+/// O(log M) per request via a max-heap on next-use times (lazy deletion).
+/// Not cost-optimal under heterogeneous sizes (§4.2 / [24]) — included to
+/// contextualize TTL-OPT.
+pub fn belady_miss_ratio(trace: &[Request], capacity: u64) -> f64 {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let next = next_request_times(trace);
+    // Heap of (next_use_time, obj); stale entries skipped on pop.
+    let mut heap: BinaryHeap<(TimeUs, u64)> = BinaryHeap::new();
+    let mut resident: HashMap<u64, (u64, TimeUs)> = HashMap::new(); // obj -> (size, next_use)
+    let mut used = 0u64;
+    let mut misses = 0u64;
+    let _ = Reverse(0u8); // keep the import local and explicit
+
+    for (i, r) in trace.iter().enumerate() {
+        let nu = next[i].unwrap_or(TimeUs::MAX);
+        match resident.get_mut(&r.obj) {
+            Some(entry) => {
+                entry.1 = nu;
+                heap.push((nu, r.obj));
+            }
+            None => {
+                misses += 1;
+                if r.size_bytes() <= capacity {
+                    while used + r.size_bytes() > capacity {
+                        // Evict farthest-next-use resident object.
+                        match heap.pop() {
+                            Some((t, obj)) => {
+                                if resident.get(&obj).map(|e| e.1) == Some(t) {
+                                    let (sz, _) = resident.remove(&obj).unwrap();
+                                    used -= sz;
+                                }
+                            }
+                            None => break,
+                        }
+                    }
+                    if used + r.size_bytes() <= capacity {
+                        resident.insert(r.obj, (r.size_bytes(), nu));
+                        heap.push((nu, r.obj));
+                        used += r.size_bytes();
+                    }
+                }
+            }
+        }
+    }
+    misses as f64 / trace.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostConfig;
+    use crate::SECOND;
+
+    fn req(ts: u64, obj: u64, size: u32) -> Request {
+        Request { ts, obj, size }
+    }
+
+    #[test]
+    fn next_request_backward_pass() {
+        let trace = vec![req(0, 1, 10), req(5, 2, 10), req(9, 1, 10), req(12, 1, 10)];
+        let next = next_request_times(&trace);
+        assert_eq!(next, vec![Some(9), None, Some(12), None]);
+    }
+
+    #[test]
+    fn stores_iff_gap_cheaper_than_miss() {
+        let cost = CostConfig::default();
+        // Gap so short that storing is cheaper: hit expected.
+        let trace = vec![req(0, 1, 1000), req(SECOND, 1, 1000)];
+        let res = solve(&trace, &cost);
+        assert_eq!(res.misses, 1); // only the cold first request
+        assert_eq!(res.hits, 1);
+        assert!(res.storage_cost > 0.0);
+
+        // Gap of a year for a big object: storing would cost ≫ miss.
+        let trace2 = vec![req(0, 1, 50_000_000), req(365 * crate::DAY, 1, 50_000_000)];
+        let res2 = solve(&trace2, &cost);
+        assert_eq!(res2.misses, 2);
+        assert_eq!(res2.hits, 0);
+        assert_eq!(res2.storage_cost, 0.0);
+    }
+
+    #[test]
+    fn indifference_boundary_prefers_not_storing() {
+        // Exactly equal costs: Algorithm 1 uses strict `<`, so no store.
+        let mut cost = CostConfig::default();
+        cost.miss_cost_dollars = 1.0;
+        // pick size/gap so storage == miss exactly: rate*gap = 1.0
+        let rate = cost.storage_rate(1_000_000);
+        let gap_secs = 1.0 / rate;
+        let gap_us = (gap_secs * 1e6) as u64;
+        let trace = vec![req(0, 1, 1_000_000), req(gap_us, 1, 1_000_000)];
+        let res = solve(&trace, &cost);
+        // floating rounding may fall either side of the boundary, but cost
+        // must equal min(storage, miss) for the second request:
+        let expect = 1.0 + 1.0f64.min(rate * us_to_secs(gap_us));
+        assert!((res.total_cost - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ttlopt_is_a_lower_bound_for_per_object_costs() {
+        // For any single-object trace, cost must equal:
+        // m + Σ_gaps min(m, c·gap).
+        let cost = CostConfig::default();
+        let gaps = [1u64, 10, 100, 10_000, 1_000_000];
+        let mut t = 0u64;
+        let mut trace = vec![req(0, 7, 123_456)];
+        for g in gaps {
+            t += g * SECOND;
+            trace.push(req(t, 7, 123_456));
+        }
+        let res = solve(&trace, &cost);
+        let m = cost.miss_cost(123_456);
+        let c = cost.storage_rate(123_456);
+        let expect: f64 = m
+            + gaps
+                .iter()
+                .map(|&g| m.min(c * g as f64))
+                .sum::<f64>();
+        assert!(
+            (res.total_cost - expect).abs() < 1e-9,
+            "got {} expect {}",
+            res.total_cost,
+            expect
+        );
+    }
+
+    #[test]
+    fn peak_bytes_tracks_overlapping_storage() {
+        let cost = CostConfig::default();
+        let trace = vec![
+            req(0, 1, 1000),
+            req(1, 2, 2000),
+            req(2 * SECOND, 1, 1000),
+            req(3 * SECOND, 2, 2000),
+        ];
+        let res = solve(&trace, &cost);
+        assert_eq!(res.peak_bytes, 3000);
+    }
+
+    #[test]
+    fn belady_basic() {
+        // Capacity for one object; A B A pattern with tight capacity.
+        let trace = vec![
+            req(0, 1, 100),
+            req(1, 2, 100),
+            req(2, 1, 100),
+            req(3, 2, 100),
+        ];
+        // capacity 100: each insert evicts the other → all misses
+        let mr_small = belady_miss_ratio(&trace, 100);
+        assert_eq!(mr_small, 1.0);
+        // capacity 200: both fit → 2 cold misses only
+        let mr_big = belady_miss_ratio(&trace, 200);
+        assert_eq!(mr_big, 0.5);
+    }
+
+    #[test]
+    fn belady_beats_or_equals_lru_on_miss_ratio() {
+        use crate::cache::{LruCache, Store};
+        use crate::trace::{SynthConfig, SynthGenerator};
+        let trace = SynthGenerator::new(SynthConfig::tiny()).generate();
+        let cap = 50_000_000u64;
+        let mut lru = LruCache::new(cap);
+        let mut lru_misses = 0u64;
+        for r in &trace {
+            if !lru.lookup(r.obj) {
+                lru_misses += 1;
+                lru.insert(r.obj, r.size_bytes());
+            }
+        }
+        let lru_mr = lru_misses as f64 / trace.len() as f64;
+        let belady_mr = belady_miss_ratio(&trace, cap);
+        assert!(
+            belady_mr <= lru_mr + 1e-9,
+            "belady {belady_mr} vs lru {lru_mr}"
+        );
+    }
+}

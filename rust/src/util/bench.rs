@@ -1,0 +1,173 @@
+//! Criterion-style micro/meso bench harness for `harness = false` bench
+//! targets (offline stand-in for `criterion`).
+//!
+//! Measures wall-clock over warmup + measured iterations, reports mean /
+//! p50 / p99 per-iteration time and derived throughput, and appends
+//! machine-readable rows to `target/bench_results.csv` so EXPERIMENTS.md
+//! tables can be regenerated.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements_per_iter: u64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            self.elements_per_iter as f64 * 1e9 / self.mean_ns
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let tp = if self.elements_per_iter > 1 {
+            format!("  ({:>12.0} elem/s)", self.throughput_per_sec())
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} {:>12.1} ns/iter  p50 {:>12.1}  p99 {:>12.1}{}",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, tp
+        )
+    }
+}
+
+/// Harness configuration: time-budgeted like criterion.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+    results: Vec<BenchResult>,
+    suite: String,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        // Respect a quick mode for CI: ELASTICTL_BENCH_QUICK=1.
+        let quick = std::env::var("ELASTICTL_BENCH_QUICK").ok().as_deref() == Some("1");
+        Bencher {
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            min_iters: 10,
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Time `f`, which performs `elements` logical operations per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, elements: u64, mut f: F) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure individual iterations.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure || (samples_ns.len() as u64) < self.min_iters {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let pct = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        let result = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            iters: samples_ns.len() as u64,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p99_ns: pct(0.99),
+            elements_per_iter: elements,
+        };
+        println!("{}", result.render());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Append results to `target/bench_results.csv`.
+    pub fn finish(self) {
+        let path = std::path::Path::new("target").join("bench_results.csv");
+        let mut text = String::new();
+        let fresh = !path.exists();
+        if fresh {
+            text.push_str("suite_bench,iters,mean_ns,p50_ns,p99_ns,elements_per_iter,throughput_per_sec\n");
+        }
+        for r in &self.results {
+            text.push_str(&format!(
+                "{},{},{:.1},{:.1},{:.1},{},{:.1}\n",
+                r.name,
+                r.iters,
+                r.mean_ns,
+                r.p50_ns,
+                r.p99_ns,
+                r.elements_per_iter,
+                r.throughput_per_sec()
+            ));
+        }
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            let _ = f.write_all(text.as_bytes());
+        }
+        println!("--- {} benches recorded ---", self.results.len());
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box
+/// wrapper kept for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("ELASTICTL_BENCH_QUICK", "1");
+        let mut b = Bencher::new("selftest");
+        let mut acc = 0u64;
+        let r = b.bench("mix64", 1, || {
+            acc = acc.wrapping_add(black_box(crate::mix64(acc)));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 10);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            p50_ns: 1000.0,
+            p99_ns: 1000.0,
+            elements_per_iter: 500,
+        };
+        assert!((r.throughput_per_sec() - 5e8).abs() < 1.0);
+    }
+}

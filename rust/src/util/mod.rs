@@ -1,0 +1,19 @@
+//! In-tree replacements for the usual utility crates — the build is fully
+//! offline (only the `xla` closure + `anyhow` are vendored), so the
+//! project ships its own:
+//!
+//! * [`fasthash`] — mix64-based hashing for the u64-keyed hot maps;
+//! * [`rng`] — PCG-family deterministic RNG (`rand`/`rand_pcg` stand-in);
+//! * [`tempdir`] — scoped temporary directories (`tempfile` stand-in);
+//! * [`toml_lite`] — the TOML subset the config system needs;
+//! * [`bench`] — a criterion-style timing harness for `cargo bench`
+//!   targets (`harness = false`);
+//! * [`proptest`] — a tiny randomized property-test driver with failure
+//!   reporting (shrinking is replaced by seed reporting).
+
+pub mod bench;
+pub mod fasthash;
+pub mod proptest;
+pub mod rng;
+pub mod tempdir;
+pub mod toml_lite;

@@ -1,0 +1,58 @@
+//! Tiny randomized property-test driver (offline stand-in for
+//! `proptest`): run a property against many seeded random inputs; on
+//! failure report the seed and iteration so the case can be replayed
+//! deterministically.
+
+use super::rng::Pcg;
+
+/// Number of cases per property (override with ELASTICTL_PROPTEST_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("ELASTICTL_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` randomized inputs. The property receives a
+/// seeded RNG it draws its inputs from; panics are annotated with the
+/// failing `(seed, case)` for replay.
+pub fn check<F: Fn(&mut Pcg)>(name: &str, base_seed: u64, prop: F) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = crate::mix64(base_seed ^ (case as u64).rotate_left(32));
+        let mut rng = Pcg::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            eprintln!(
+                "property {name} failed at case {case}/{cases} (replay seed {seed:#x})"
+            );
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u32);
+        check("trivial", 1, |rng| {
+            counter.set(counter.get() + 1);
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+        assert_eq!(counter.get(), default_cases());
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("fails", 2, |rng| {
+            assert!(rng.below(10) < 5, "will fail for some draw");
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! Scoped temporary directories (offline stand-in for `tempfile`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory under the system temp root, removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh unique directory.
+    pub fn new() -> std::io::Result<TempDir> {
+        let unique = format!(
+            "elastictl-{}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0),
+        );
+        let path = std::env::temp_dir().join(unique);
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Keep the directory (skip cleanup), returning its path.
+    pub fn into_path(mut self) -> PathBuf {
+        let p = std::mem::take(&mut self.path);
+        std::mem::forget(self);
+        p
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        if !self.path.as_os_str().is_empty() {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+/// `tempfile::tempdir()`-compatible helper.
+pub fn tempdir() -> std::io::Result<TempDir> {
+    TempDir::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let keep;
+        {
+            let d = tempdir().unwrap();
+            keep = d.path().to_path_buf();
+            std::fs::write(d.path().join("x"), b"hello").unwrap();
+            assert!(keep.exists());
+        }
+        assert!(!keep.exists(), "dir not removed on drop");
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = tempdir().unwrap();
+        let b = tempdir().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn into_path_persists() {
+        let d = tempdir().unwrap();
+        let p = d.into_path();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&p).unwrap();
+    }
+}

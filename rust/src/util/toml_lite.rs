@@ -1,0 +1,221 @@
+//! The TOML subset the config system needs (offline stand-in for
+//! `toml`/`serde`): `[section]` headers and `key = value` pairs where a
+//! value is a string (`"..."`), bool, integer or float. Comments (`#`)
+//! and blank lines are ignored. Produces a flat
+//! `section.key -> value` map; writing is the mirror operation.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Value::Str(s) => format!("{s:?}"),
+            Value::Bool(b) => b.to_string(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => {
+                if f.fract() == 0.0 && f.abs() < 1e15 {
+                    format!("{f:.1}")
+                } else {
+                    format!("{f}")
+                }
+            }
+        }
+    }
+}
+
+/// Flat document: keys are `section.key` (or bare `key` before any
+/// section header).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            entries.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.as_i64()).map(|i| i.max(0) as u64)
+    }
+
+    pub fn get_u32(&self, key: &str) -> Option<u32> {
+        self.get_u64(key).map(|v| v.min(u32::MAX as u64) as u32)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.as_bool())
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    /// Render grouped by section, sections sorted, keys sorted.
+    pub fn render(&self) -> String {
+        let mut by_section: BTreeMap<&str, Vec<(&str, &Value)>> = BTreeMap::new();
+        for (k, v) in &self.entries {
+            match k.rsplit_once('.') {
+                Some((sec, key)) => by_section.entry(sec).or_default().push((key, v)),
+                None => by_section.entry("").or_default().push((k, v)),
+            }
+        }
+        let mut out = String::new();
+        for (sec, kvs) in by_section {
+            if !sec.is_empty() {
+                out.push_str(&format!("[{sec}]\n"));
+            }
+            for (k, v) in kvs {
+                out.push_str(&format!("{k} = {}\n", v.render()));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(q) = s.strip_prefix('"') {
+        let Some(inner) = q.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        return Ok(Value::Str(inner.replace("\\\"", "\"")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_scalars() {
+        let doc = Doc::parse(
+            "# comment\n\
+             top = 1\n\
+             [cost]\n\
+             miss_cost_dollars = 1.4676e-7\n\
+             epoch_us = 3600000000\n\
+             per_byte = false\n\
+             [scaler]\n\
+             policy = \"ttl\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("top"), Some(&Value::Int(1)));
+        assert!((doc.get_f64("cost.miss_cost_dollars").unwrap() - 1.4676e-7).abs() < 1e-15);
+        assert_eq!(doc.get_u64("cost.epoch_us"), Some(3_600_000_000));
+        assert_eq!(doc.get_bool("cost.per_byte"), Some(false));
+        assert_eq!(doc.get_str("scaler.policy"), Some("ttl"));
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut doc = Doc::default();
+        doc.set("a.x", Value::Int(5));
+        doc.set("a.y", Value::Float(2.5));
+        doc.set("b.name", Value::Str("hello".into()));
+        doc.set("b.flag", Value::Bool(true));
+        let text = doc.render();
+        let back = Doc::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(Doc::parse("[x]\nkey value\n").is_err());
+        assert!(Doc::parse("k = \"unterminated\n").is_err());
+        assert!(Doc::parse("k = what\n").is_err());
+    }
+
+    #[test]
+    fn float_render_parses_back_as_float() {
+        let mut doc = Doc::default();
+        doc.set("s.v", Value::Float(3600.0));
+        let text = doc.render();
+        let back = Doc::parse(&text).unwrap();
+        assert_eq!(back.get_f64("s.v"), Some(3600.0));
+    }
+}

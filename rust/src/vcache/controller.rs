@@ -1,0 +1,307 @@
+//! The stochastic-approximation TTL controller — eq. (5)/(7) of §4.1/§5.1.
+//!
+//! Upon the closure of a content's measurement window (the interval
+//! `[t_n, t_n + T(t_n)]` opened by the miss at `t_n`), the timer is nudged
+//! along the negative cost gradient:
+//!
+//! ```text
+//! T ← Π_[0,Tmax]( T + ε(n) · ( λ̂·m_i − c_i ) ),   λ̂ = h_i / T(t_n)
+//! ```
+//!
+//! `λ̂·m_i` is the (estimated) miss-cost saving rate of keeping the object;
+//! `c_i = s_i·c` is its storage cost rate. Misses of hot objects push `T`
+//! up; storage burnt on cold objects pushes it down. The expected
+//! correction equals `−dC/dT` up to a positive factor (Proposition 1).
+//!
+//! Two gain modes: the paper's plain ε(n) (constant or Robbins–Monro), and
+//! a scale-free *normalized* mode that divides the correction by a running
+//! mean of its magnitude — same sign structure, no eps0 retuning when the
+//! cost catalog changes.
+
+use crate::config::{ControllerConfig, GainSchedule};
+use crate::metrics::Ewma;
+use crate::{secs_to_us, us_to_secs, TimeUs};
+
+/// One applied correction, for diagnostics/experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorrectionSample {
+    /// λ̂·m − c, in $/s.
+    pub raw: f64,
+    /// Seconds actually added to T after gain/normalization/projection.
+    pub applied_secs: f64,
+}
+
+/// Stochastic-approximation timer state.
+#[derive(Debug, Clone)]
+pub struct TtlController {
+    t_secs: f64,
+    t_min: f64,
+    t_max: f64,
+    gain: GainSchedule,
+    normalized: bool,
+    step_secs: f64,
+    magnitude: Ewma,
+    /// Updates consumed calibrating the gain before the iterate moves
+    /// (normalized mode). A slow EWMA then keeps ε quasi-constant over any
+    /// local window, preserving the E[correction] = 0 equilibrium of the
+    /// plain eq. (7) (per-sample normalization would bias it toward sign
+    /// balance), while still tracking magnitude-regime changes.
+    warmup_remaining: u32,
+    n_updates: u64,
+    last: Option<CorrectionSample>,
+}
+
+/// Updates used to estimate the typical correction magnitude before any
+/// movement (normalized mode).
+const GAIN_WARMUP_UPDATES: u32 = 200;
+/// Per-update movement cap, in units of `step_secs` (guards against a
+/// single outlier sample jumping across the projection interval).
+const MAX_STEP_FACTOR: f64 = 100.0;
+
+impl TtlController {
+    pub fn new(cfg: &ControllerConfig) -> Self {
+        TtlController {
+            t_secs: cfg.t_init_secs.clamp(cfg.t_min_secs.max(0.0), cfg.t_max_secs),
+            t_min: cfg.t_min_secs.max(0.0),
+            t_max: cfg.t_max_secs,
+            gain: cfg.gain,
+            normalized: cfg.normalized,
+            step_secs: cfg.normalized_step_secs,
+            magnitude: Ewma::new(cfg.normalized_ewma_alpha),
+            warmup_remaining: if cfg.normalized { GAIN_WARMUP_UPDATES } else { 0 },
+            n_updates: 0,
+            last: None,
+        }
+    }
+
+    /// Current timer, seconds.
+    #[inline]
+    pub fn ttl_secs(&self) -> f64 {
+        self.t_secs
+    }
+
+    /// Current timer, microseconds.
+    #[inline]
+    pub fn ttl_us(&self) -> TimeUs {
+        secs_to_us(self.t_secs)
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.n_updates
+    }
+
+    pub fn last_correction(&self) -> Option<CorrectionSample> {
+        self.last
+    }
+
+    /// Apply eq. (7) for a closed measurement window: `hits` hits were
+    /// observed over a window of `window_ttl` µs for an object with
+    /// storage rate `storage_rate` ($/s) and miss cost `miss_cost` ($).
+    pub fn apply_window(
+        &mut self,
+        hits: u32,
+        window_ttl: TimeUs,
+        storage_rate: f64,
+        miss_cost: f64,
+    ) {
+        // λ̂ = h / T(t_n). Guard tiny windows (T → 0 would make the
+        // estimator degenerate); 100 ms floor keeps λ̂ finite while leaving
+        // the projection interval untouched.
+        let window_secs = us_to_secs(window_ttl).max(0.1);
+        let lambda_hat = hits as f64 / window_secs;
+        self.apply_correction(lambda_hat * miss_cost - storage_rate);
+    }
+
+    /// Apply a raw correction `λ̂·m − c` ($/s) through gain, optional
+    /// auto-scaling, and projection.
+    pub fn apply_correction(&mut self, raw: f64) {
+        let applied = if self.normalized {
+            // Scale-free plain eq. (7): a *constant* ε chosen so the mean
+            // correction magnitude moves T by `step_secs`. The magnitude
+            // is estimated over a warmup during which the iterate holds
+            // still; afterwards ε is frozen, so every sample keeps its
+            // relative weight and the update stays unbiased.
+            self.magnitude.update(raw.abs());
+            if self.warmup_remaining > 0 {
+                self.warmup_remaining -= 1;
+                0.0
+            } else {
+                // ε adapts *slowly* (the EWMA's alpha spreads over many
+                // hundreds of samples), so over any window where the
+                // sample mix is stationary all corrections share one gain
+                // — locally the plain eq. (7) — while the controller can
+                // still re-scale between regimes where magnitudes differ
+                // by orders (T seconds vs hours).
+                let eps = self.step_secs / self.magnitude.get().unwrap_or(1e-30).max(1e-30);
+                let g = self.gain_factor();
+                (eps * g * raw).clamp(
+                    -MAX_STEP_FACTOR * self.step_secs,
+                    MAX_STEP_FACTOR * self.step_secs,
+                )
+            }
+        } else {
+            self.gain.gain(self.n_updates) * raw
+        };
+        let before = self.t_secs;
+        self.t_secs = (self.t_secs + applied).clamp(self.t_min, self.t_max);
+        self.n_updates += 1;
+        self.last = Some(CorrectionSample { raw, applied_secs: self.t_secs - before });
+    }
+
+    /// In normalized mode the schedule still shapes the step over time
+    /// (constant → 1.0; polynomial → decaying factor relative to eps0).
+    fn gain_factor(&self) -> f64 {
+        match self.gain {
+            GainSchedule::Constant { .. } => 1.0,
+            GainSchedule::Polynomial { eps0, .. } => {
+                self.gain.gain(self.n_updates) / eps0.max(1e-30)
+            }
+        }
+    }
+
+    /// Reset the iterate (tests / epoch experiments).
+    pub fn set_ttl_secs(&mut self, t: f64) {
+        self.t_secs = t.clamp(self.t_min, self.t_max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ControllerConfig;
+
+    fn cfg_plain(eps0: f64) -> ControllerConfig {
+        ControllerConfig {
+            t_init_secs: 100.0,
+            t_min_secs: 0.0,
+            t_max_secs: 1000.0,
+            gain: GainSchedule::Constant { eps0 },
+            normalized: false,
+            ..ControllerConfig::default()
+        }
+    }
+
+    #[test]
+    fn positive_correction_raises_ttl() {
+        let mut c = TtlController::new(&cfg_plain(1.0));
+        c.apply_correction(5.0);
+        assert_eq!(c.ttl_secs(), 105.0);
+        assert_eq!(c.updates(), 1);
+        assert_eq!(c.last_correction().unwrap().applied_secs, 5.0);
+    }
+
+    #[test]
+    fn projection_clamps_both_ends() {
+        let mut c = TtlController::new(&cfg_plain(1.0));
+        c.apply_correction(1e9);
+        assert_eq!(c.ttl_secs(), 1000.0);
+        c.apply_correction(-1e12);
+        assert_eq!(c.ttl_secs(), 0.0);
+    }
+
+    #[test]
+    fn window_estimator_signs() {
+        // Hot small object: λ̂·m >> c → positive step.
+        let mut c = TtlController::new(&cfg_plain(1e9));
+        let t0 = c.ttl_secs();
+        c.apply_window(100, 10 * crate::SECOND, 1e-12, 1e-7);
+        assert!(c.ttl_secs() > t0);
+
+        // Cold huge object: 0 hits → correction = −c < 0.
+        let mut c2 = TtlController::new(&cfg_plain(1e9));
+        let t0 = c2.ttl_secs();
+        c2.apply_window(0, 10 * crate::SECOND, 1e-7, 1e-7);
+        assert!(c2.ttl_secs() < t0);
+    }
+
+    #[test]
+    fn tiny_window_guarded() {
+        let mut c = TtlController::new(&cfg_plain(1.0));
+        // window_ttl = 0 must not produce NaN/inf
+        c.apply_window(5, 0, 0.0, 1.0);
+        assert!(c.ttl_secs().is_finite());
+    }
+
+    #[test]
+    fn normalized_mode_warmup_then_balanced_steps() {
+        let cfg = ControllerConfig {
+            t_init_secs: 100.0,
+            t_max_secs: 1000.0,
+            normalized: true,
+            normalized_step_secs: 2.0,
+            ..ControllerConfig::default()
+        };
+        let mut c = TtlController::new(&cfg);
+        // Warmup: the iterate must not move.
+        for i in 0..200 {
+            let raw = if i % 2 == 0 { 1e-9 } else { -1e-9 };
+            c.apply_correction(raw);
+            assert_eq!(c.ttl_secs(), 100.0, "moved during warmup");
+        }
+        // Post-warmup: ε is frozen; equal-magnitude alternating samples
+        // cancel exactly and each step is ≈ step_secs.
+        for i in 0..100 {
+            let raw = if i % 2 == 0 { 1e-9 } else { -1e-9 };
+            c.apply_correction(raw);
+            let s = c.last_correction().unwrap().applied_secs.abs();
+            assert!((s - 2.0).abs() < 0.1, "step {s}");
+        }
+        assert!((c.ttl_secs() - 100.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn normalized_mode_preserves_magnitude_asymmetry() {
+        // Frequent small negatives vs rare large positives with equal
+        // expectation must keep T roughly stationary — the unbiasedness
+        // property the per-sample normalization destroyed.
+        let cfg = ControllerConfig {
+            t_init_secs: 500.0,
+            t_max_secs: 10_000.0,
+            normalized: true,
+            normalized_step_secs: 2.0,
+            ..ControllerConfig::default()
+        };
+        let mut c = TtlController::new(&cfg);
+        // E[corr] = 0: 9 × (−1e-10) + 1 × (+9e-10) per block of 10.
+        for _ in 0..2000 {
+            for k in 0..10 {
+                c.apply_correction(if k == 9 { 9e-10 } else { -1e-10 });
+            }
+        }
+        assert!(
+            (c.ttl_secs() - 500.0).abs() < 100.0,
+            "drifted to {}",
+            c.ttl_secs()
+        );
+    }
+
+    #[test]
+    fn robbins_monro_steps_decay() {
+        let cfg = ControllerConfig {
+            t_init_secs: 100.0,
+            t_max_secs: 1e6,
+            gain: GainSchedule::Polynomial { eps0: 10.0, exponent: 0.7 },
+            normalized: false,
+            ..ControllerConfig::default()
+        };
+        let mut c = TtlController::new(&cfg);
+        c.apply_correction(1.0);
+        let s1 = c.last_correction().unwrap().applied_secs;
+        for _ in 0..99 {
+            c.apply_correction(1.0);
+        }
+        let s100 = c.last_correction().unwrap().applied_secs;
+        assert!(s100 < s1 / 5.0, "s1={s1} s100={s100}");
+    }
+
+    #[test]
+    fn init_clamped_to_projection_interval() {
+        let cfg = ControllerConfig {
+            t_init_secs: 5000.0,
+            t_max_secs: 100.0,
+            ..ControllerConfig::default()
+        };
+        let c = TtlController::new(&cfg);
+        assert_eq!(c.ttl_secs(), 100.0);
+    }
+}

@@ -1,0 +1,350 @@
+//! The O(1) FIFO-calendar TTL ghost store (§5.1).
+//!
+//! A proper TTL calendar needs ordered insertion (O(log M)) because the
+//! timer value changes over time: `t_n + T(t_n)` is not monotone in `n`.
+//! The paper's trick: keep ghosts in a list ordered by *last request time*
+//! (which IS monotone — renewal moves a ghost to the head), and evict from
+//! the tail while the tail's timer has expired, stopping at the first
+//! unexpired ghost. Ghosts whose timer already lapsed may therefore
+//! survive a little longer when a ghost ahead of them has a longer
+//! deadline; §5.1 verifies experimentally that this has negligible impact
+//! (we verify the same in `rust/tests/fifo_vs_ideal.rs`).
+//!
+//! Implementation: intrusive doubly linked list over a slab with a free
+//! list — zero allocation in steady state, O(1) per operation amortized.
+
+use crate::util::fasthash::FastMap;
+use crate::{ObjectId, TimeUs};
+
+const NIL: u32 = u32::MAX;
+
+/// One ghost: content metadata plus the measurement window used by the
+/// delayed eq. (7) update (Fig. 3).
+#[derive(Debug, Clone, Copy)]
+pub struct VNode {
+    pub obj: ObjectId,
+    pub size: u64,
+    /// Eviction deadline: last request time + timer-at-that-time.
+    pub expire_at: TimeUs,
+    /// Measurement window start (the miss that inserted the ghost).
+    pub window_start: TimeUs,
+    /// Timer value when the window opened (µs) — the `T(t_n)` of eq. (7).
+    pub window_ttl: TimeUs,
+    /// Hits observed within the window — `h_{r(n)}`.
+    pub window_hits: u32,
+    /// Whether the eq. (7) update for this window is still owed.
+    pub update_pending: bool,
+    prev: u32,
+    next: u32,
+}
+
+/// Outcome of [`FifoTtlCache::touch`].
+pub enum TouchResult<'a> {
+    /// Live ghost: renewed, node returned for window bookkeeping.
+    Hit(&'a mut VNode),
+    /// Ghost had expired; it was collected now (fire its pending update).
+    Expired(VNode),
+    /// No ghost for this object.
+    Absent,
+}
+
+/// FIFO-calendar TTL cache over ghosts.
+pub struct FifoTtlCache {
+    map: FastMap<ObjectId, u32>,
+    nodes: Vec<VNode>,
+    free: Vec<u32>,
+    head: u32, // most recently requested
+    tail: u32, // least recently requested (eviction scan point)
+    vsize: u64,
+    evictions: u64,
+}
+
+impl FifoTtlCache {
+    pub fn new() -> Self {
+        FifoTtlCache {
+            map: FastMap::default(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            vsize: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Sum of resident ghost sizes (lazy expiry: includes ghosts whose
+    /// timer lapsed but that the tail scan has not reached yet).
+    pub fn vsize(&self) -> u64 {
+        self.vsize
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains(&self, obj: ObjectId) -> bool {
+        self.map.contains_key(&obj)
+    }
+
+    #[inline]
+    fn unlink(&mut self, idx: u32) {
+        let (prev, next) = {
+            let n = &self.nodes[idx as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    #[inline]
+    fn push_front(&mut self, idx: u32) {
+        self.nodes[idx as usize].prev = NIL;
+        self.nodes[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Renew `obj` at `now` with timer `ttl`: move to head, refresh the
+    /// deadline. [`TouchResult::Hit`] carries the node for window
+    /// bookkeeping; an expired ghost (deadline lapsed but not yet reached
+    /// by the tail scan) is collected lazily and returned as
+    /// [`TouchResult::Expired`] so the caller can fire its pending eq. (7)
+    /// update — this is Fig. 3 case (b) with the "eviction" happening at
+    /// touch time instead of at the tail scan.
+    pub fn touch(&mut self, now: TimeUs, obj: ObjectId, ttl: TimeUs) -> TouchResult<'_> {
+        let Some(&idx) = self.map.get(&obj) else {
+            return TouchResult::Absent;
+        };
+        if self.nodes[idx as usize].expire_at <= now {
+            // Lazily collect the expired ghost: it must behave exactly as
+            // if it had been evicted on time (§5.1's approximation is only
+            // about *when* memory is reclaimed, not hit/miss semantics).
+            let node = self.remove_idx(idx);
+            return TouchResult::Expired(node);
+        }
+        self.unlink(idx);
+        self.push_front(idx);
+        let n = &mut self.nodes[idx as usize];
+        n.expire_at = now + ttl;
+        TouchResult::Hit(n)
+    }
+
+    /// Insert a fresh ghost at the head (a virtual miss just occurred).
+    pub fn insert(&mut self, now: TimeUs, obj: ObjectId, size: u64, ttl: TimeUs) {
+        debug_assert!(!self.map.contains_key(&obj));
+        let node = VNode {
+            obj,
+            size,
+            expire_at: now + ttl,
+            window_start: now,
+            window_ttl: ttl,
+            window_hits: 0,
+            update_pending: true,
+            prev: NIL,
+            next: NIL,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = node;
+                i
+            }
+            None => {
+                let i = self.nodes.len() as u32;
+                self.nodes.push(node);
+                i
+            }
+        };
+        self.map.insert(obj, idx);
+        self.push_front(idx);
+        self.vsize += size;
+    }
+
+    fn remove_idx(&mut self, idx: u32) -> VNode {
+        let node = self.nodes[idx as usize];
+        self.unlink(idx);
+        self.map.remove(&node.obj);
+        self.free.push(idx);
+        self.vsize -= node.size;
+        self.evictions += 1;
+        node
+    }
+
+    /// Pop expired ghosts from the tail, calling `on_evict` for each
+    /// (the controller applies pending eq. (7) updates there — Fig. 3
+    /// case b). Stops at the first unexpired tail ghost: the FIFO
+    /// approximation.
+    pub fn evict_expired(&mut self, now: TimeUs, mut on_evict: impl FnMut(&VNode)) -> usize {
+        let mut n = 0;
+        while self.tail != NIL {
+            let idx = self.tail;
+            if self.nodes[idx as usize].expire_at > now {
+                break;
+            }
+            let node = self.remove_idx(idx);
+            on_evict(&node);
+            n += 1;
+        }
+        n
+    }
+
+    /// Walk the list head→tail (test helper).
+    pub fn iter_recency(&self) -> impl Iterator<Item = &VNode> + '_ {
+        struct It<'a> {
+            c: &'a FifoTtlCache,
+            cur: u32,
+        }
+        impl<'a> Iterator for It<'a> {
+            type Item = &'a VNode;
+            fn next(&mut self) -> Option<Self::Item> {
+                if self.cur == NIL {
+                    return None;
+                }
+                let n = &self.c.nodes[self.cur as usize];
+                self.cur = n.next;
+                Some(n)
+            }
+        }
+        It { c: self, cur: self.head }
+    }
+
+    /// Exact unexpired byte count (O(M) — tests only; production code uses
+    /// the lazy [`Self::vsize`]).
+    pub fn exact_unexpired_bytes(&self, now: TimeUs) -> u64 {
+        self.iter_recency()
+            .filter(|n| n.expire_at > now)
+            .map(|n| n.size)
+            .sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.vsize = 0;
+    }
+}
+
+impl Default for FifoTtlCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SECOND;
+
+    const TTL: TimeUs = 10 * SECOND;
+
+    #[test]
+    fn insert_touch_expire_cycle() {
+        let mut c = FifoTtlCache::new();
+        c.insert(0, 1, 100, TTL);
+        assert_eq!(c.vsize(), 100);
+        assert!(matches!(c.touch(5 * SECOND, 1, TTL), TouchResult::Hit(_)));
+        // renewal pushed deadline to 15s
+        assert!(matches!(c.touch(14 * SECOND, 1, TTL), TouchResult::Hit(_)));
+        // deadline 24s; at 24s it's expired (inclusive)
+        assert!(matches!(c.touch(24 * SECOND, 1, TTL), TouchResult::Expired(_)));
+        assert_eq!(c.vsize(), 0, "lazy collection on touch removes the ghost");
+        assert!(matches!(c.touch(25 * SECOND, 1, TTL), TouchResult::Absent));
+    }
+
+    #[test]
+    fn tail_eviction_in_recency_order() {
+        let mut c = FifoTtlCache::new();
+        for i in 0..5u64 {
+            c.insert(i * SECOND, i, 10, TTL);
+        }
+        // touch object 0 so it moves to the head
+        assert!(matches!(c.touch(5 * SECOND, 0, TTL), TouchResult::Hit(_)));
+        let order: Vec<u64> = c.iter_recency().map(|n| n.obj).collect();
+        assert_eq!(order, vec![0, 4, 3, 2, 1]);
+        // at t=13s: deadlines are 1→11s, 2→12s, 3→13s (expired); 4→14s, 0→15s
+        let mut evicted = Vec::new();
+        c.evict_expired(13 * SECOND, |n| evicted.push(n.obj));
+        assert_eq!(evicted, vec![1, 2, 3]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.vsize(), 20);
+    }
+
+    #[test]
+    fn fifo_approximation_can_defer_eviction() {
+        // The FIFO scan stops at an unexpired tail ghost even if a deeper
+        // ghost has expired (out-of-order deadlines from a shrinking TTL).
+        let mut c = FifoTtlCache::new();
+        c.insert(0, 1, 10, 100 * SECOND); // deadline 100s, at the tail
+        c.insert(SECOND, 2, 10, SECOND); // deadline 2s, at the head
+        let n = c.evict_expired(50 * SECOND, |_| {});
+        assert_eq!(n, 0, "tail (deadline 100s) blocks the scan");
+        assert_eq!(c.vsize(), 20, "lazy vsize still counts the expired ghost");
+        assert_eq!(c.exact_unexpired_bytes(50 * SECOND), 10);
+        // But a touch of the expired ghost still misses (and is collected
+        // with its window intact for the pending update):
+        match c.touch(50 * SECOND, 2, TTL) {
+            TouchResult::Expired(n) => assert!(n.update_pending),
+            _ => panic!("expected Expired"),
+        }
+    }
+
+    #[test]
+    fn window_state_initialized_on_insert() {
+        let mut c = FifoTtlCache::new();
+        c.insert(7 * SECOND, 9, 55, TTL);
+        let n = c.iter_recency().next().unwrap();
+        assert_eq!(n.window_start, 7 * SECOND);
+        assert_eq!(n.window_ttl, TTL);
+        assert_eq!(n.window_hits, 0);
+        assert!(n.update_pending);
+    }
+
+    #[test]
+    fn pending_update_fires_on_eviction() {
+        let mut c = FifoTtlCache::new();
+        c.insert(0, 1, 100, TTL);
+        let mut fired = Vec::new();
+        c.evict_expired(TTL, |n| fired.push((n.obj, n.update_pending)));
+        assert_eq!(fired, vec![(1, true)]);
+    }
+
+    #[test]
+    fn free_list_bounds_slab_growth() {
+        let mut c = FifoTtlCache::new();
+        for round in 0..50u64 {
+            for i in 0..10u64 {
+                c.insert(round * 100 * SECOND + i, round * 10 + i, 1, SECOND);
+            }
+            c.evict_expired((round * 100 + 50) * SECOND, |_| {});
+        }
+        assert!(c.nodes.len() <= 32, "slab grew to {}", c.nodes.len());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn zero_ttl_ghost_is_immediately_dead() {
+        let mut c = FifoTtlCache::new();
+        c.insert(5, 1, 10, 0);
+        assert!(matches!(c.touch(5, 1, 0), TouchResult::Expired(_)));
+        assert_eq!(c.len(), 0);
+    }
+}

@@ -1,0 +1,375 @@
+//! Per-content TTL policy — the paper's §7 future-work direction:
+//! "potential improvements can come from TTL policies that use different
+//! TTL values for different contents (as TTL-OPT does) selecting the
+//! timer value on the basis of a forecast for the next inter-arrival
+//! time."
+//!
+//! Implementation: per object, an EWMA of observed inter-arrival times
+//! forecasts the next gap Δ̂. Mimicking TTL-OPT's decision rule
+//! (Algorithm 1) with the forecast in place of clairvoyance:
+//!
+//! * store iff the *predicted* storage cost of the gap is below the miss
+//!   cost: `c_i · Δ̂ · safety < m_i`;
+//! * if stored, set the content's own TTL to `Δ̂ · safety` (enough to
+//!   bridge the predicted gap, with head-room for forecast error).
+//!
+//! First-sight objects have no gap estimate: by default they are NOT
+//! stored — the 2-LRU/ghost admission idea the paper cites in §3 ([22]):
+//! the first request only creates metadata; a content is admitted once a
+//! gap forecast exists. (`bootstrap_cap_secs > 0` switches to optimistic
+//! break-even-capped bootstrap storage instead, which loses money on
+//! one-hit-wonder-heavy traces.)
+//!
+//! Everything stays O(1) per request: a hash-map entry per live ghost
+//! plus the same FIFO-calendar trick for expiry — per-content deadlines
+//! are no less ordered than the global-TTL ones, so the same lazy-tail
+//! approximation applies.
+
+use crate::config::CostConfig;
+use crate::metrics::HitMiss;
+use crate::util::fasthash::FastMap;
+use crate::{secs_to_us, us_to_secs, ObjectId, TimeUs};
+
+/// Tuning knobs of the forecast policy.
+#[derive(Debug, Clone)]
+pub struct PerContentConfig {
+    /// EWMA factor for inter-arrival estimates.
+    pub gap_alpha: f64,
+    /// Multiplicative head-room on the forecast gap.
+    pub safety: f64,
+    /// Hard TTL cap, seconds.
+    pub t_max_secs: f64,
+    /// Cap on the bootstrap (first-sight) TTL, seconds. 0 (default)
+    /// means first-sight objects are tracked but not stored (2-LRU-style
+    /// admission).
+    pub bootstrap_cap_secs: f64,
+}
+
+impl Default for PerContentConfig {
+    fn default() -> Self {
+        PerContentConfig {
+            gap_alpha: 0.3,
+            safety: 1.5,
+            t_max_secs: 6.0 * 3600.0,
+            bootstrap_cap_secs: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Tracked {
+    /// Requests observed for this object.
+    requests: u32,
+    /// Last request time (for gap measurement).
+    last_seen: TimeUs,
+    /// EWMA of inter-arrival gaps, seconds. 0 = no estimate yet.
+    gap_secs: f64,
+    /// Current eviction deadline if resident, else 0.
+    expire_at: TimeUs,
+    size: u64,
+    resident: bool,
+}
+
+/// Per-content TTL virtual cache (vertically billed like the ideal cache).
+pub struct PerContentTtl {
+    cfg: PerContentConfig,
+    cost: CostConfig,
+    objects: FastMap<ObjectId, Tracked>,
+    /// Resident bytes (lazily maintained on the expiry sweep).
+    vsize: u64,
+    /// FIFO of (deadline, obj) in insertion order for the lazy sweep.
+    queue: std::collections::VecDeque<(TimeUs, ObjectId)>,
+    pub stats: HitMiss,
+}
+
+impl PerContentTtl {
+    pub fn new(cfg: PerContentConfig, cost: CostConfig) -> Self {
+        PerContentTtl {
+            cfg,
+            cost,
+            objects: FastMap::default(),
+            vsize: 0,
+            queue: std::collections::VecDeque::new(),
+            stats: HitMiss::default(),
+        }
+    }
+
+    pub fn vsize(&self) -> u64 {
+        self.vsize
+    }
+
+    pub fn tracked(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Break-even residence time `m_i / c_i` for an object, seconds.
+    fn break_even_secs(&self, size: u64) -> f64 {
+        let rate = self.cost.storage_rate(size).max(1e-30);
+        self.cost.miss_cost(size) / rate
+    }
+
+    /// TTL decision for an object with forecast gap `gap_secs` (0 = none).
+    fn ttl_secs_for(&self, size: u64, gap_secs: f64) -> f64 {
+        if gap_secs <= 0.0 {
+            // Bootstrap: break-even-bounded optimism.
+            return self
+                .break_even_secs(size)
+                .min(self.cfg.bootstrap_cap_secs)
+                .min(self.cfg.t_max_secs);
+        }
+        let horizon = gap_secs * self.cfg.safety;
+        // Algorithm 1's test with the forecast standing in for the oracle.
+        let predicted_storage = self.cost.storage_rate(size) * horizon;
+        if predicted_storage < self.cost.miss_cost(size) {
+            horizon.min(self.cfg.t_max_secs)
+        } else {
+            0.0
+        }
+    }
+
+    /// Drop expired residents from the sweep queue.
+    fn sweep(&mut self, now: TimeUs) {
+        while let Some(&(deadline, obj)) = self.queue.front() {
+            if deadline > now {
+                break;
+            }
+            self.queue.pop_front();
+            if let Some(t) = self.objects.get_mut(&obj) {
+                // Only evict if this queue entry is the *current* deadline
+                // (renewals push new entries; stale ones are skipped).
+                if t.resident && t.expire_at == deadline {
+                    t.resident = false;
+                    self.vsize -= t.size;
+                }
+            }
+        }
+    }
+
+    /// Handle a request; returns `true` on (virtual) hit.
+    pub fn on_request(&mut self, now: TimeUs, obj: ObjectId, size: u64) -> bool {
+        self.sweep(now);
+        let be = self.break_even_secs(size); // immutable pre-compute
+        let cfg_safety = self.cfg.safety;
+        let gap_alpha = self.cfg.gap_alpha;
+        let entry = self.objects.entry(obj).or_insert(Tracked {
+            requests: 0,
+            last_seen: 0,
+            gap_secs: 0.0,
+            expire_at: 0,
+            size,
+            resident: false,
+        });
+        let first_sight = entry.requests == 0;
+        entry.requests = entry.requests.saturating_add(1);
+        // Update the gap forecast.
+        if !first_sight {
+            let gap = us_to_secs(now.saturating_sub(entry.last_seen));
+            entry.gap_secs = if entry.gap_secs == 0.0 {
+                gap
+            } else {
+                entry.gap_secs + gap_alpha * (gap - entry.gap_secs)
+            };
+        }
+        entry.last_seen = now;
+        let hit = entry.resident && entry.expire_at > now;
+        if hit {
+            self.stats.record(true);
+        } else {
+            self.stats.record(false);
+            if entry.resident {
+                // Expired but not yet swept: treat as evicted now.
+                entry.resident = false;
+                self.vsize -= entry.size;
+            }
+        }
+        // (Re)new the residency decision with the fresh forecast.
+        let gap_secs = entry.gap_secs;
+        let ttl = {
+            // inline ttl_secs_for to avoid double borrow
+            if gap_secs <= 0.0 {
+                be.min(self.cfg.bootstrap_cap_secs).min(self.cfg.t_max_secs)
+            } else {
+                let horizon = gap_secs * cfg_safety;
+                if horizon < be {
+                    horizon.min(self.cfg.t_max_secs)
+                } else {
+                    0.0
+                }
+            }
+        };
+        if ttl > 0.0 {
+            let deadline = now + secs_to_us(ttl);
+            if !entry.resident {
+                entry.resident = true;
+                self.vsize += entry.size;
+            }
+            entry.expire_at = deadline;
+            self.queue.push_back((deadline, obj));
+        } else if entry.resident {
+            entry.resident = false;
+            self.vsize -= entry.size;
+        }
+        hit
+    }
+}
+
+/// Run the per-content policy over a trace with ideal (vertical) billing —
+/// comparable to `sim::run_ideal_ttl` and to TTL-OPT.
+pub fn run_per_content(
+    cfg: &PerContentConfig,
+    cost: &CostConfig,
+    trace: &[crate::trace::Request],
+) -> PerContentResult {
+    let mut pc = PerContentTtl::new(cfg.clone(), cost.clone());
+    let mut costs = crate::cost::CostTracker::new(cost.clone());
+    let per_byte_sec = cost.storage_cost_per_byte_sec();
+    let mut last_ts = 0;
+    for r in trace {
+        let dt = us_to_secs(r.ts.saturating_sub(last_ts));
+        costs.record_storage_dollars(pc.vsize() as f64 * per_byte_sec * dt);
+        last_ts = r.ts;
+        if !pc.on_request(r.ts, r.obj, r.size_bytes()) {
+            costs.record_miss(r.size_bytes());
+        }
+    }
+    PerContentResult {
+        requests: trace.len() as u64,
+        hits: pc.stats.hits,
+        storage_cost: costs.storage_total(),
+        miss_cost: costs.miss_total(),
+        total_cost: costs.total(),
+    }
+}
+
+/// Summary of a per-content run.
+#[derive(Debug, Clone, Copy)]
+pub struct PerContentResult {
+    pub requests: u64,
+    pub hits: u64,
+    pub storage_cost: f64,
+    pub miss_cost: f64,
+    pub total_cost: f64,
+}
+
+impl PerContentResult {
+    pub fn miss_ratio(&self) -> f64 {
+        1.0 - self.hits as f64 / self.requests.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SECOND;
+
+    fn mk() -> PerContentTtl {
+        PerContentTtl::new(PerContentConfig::default(), CostConfig::default())
+    }
+
+    #[test]
+    fn periodic_object_becomes_all_hits() {
+        let mut pc = mk();
+        // Perfectly periodic small object: after the forecast stabilizes,
+        // every request hits.
+        let mut hits = 0;
+        for k in 0..50u64 {
+            if pc.on_request(k * 10 * SECOND, 1, 1000) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "hits={hits}"); // at most the first two miss
+    }
+
+    #[test]
+    fn giant_with_long_gaps_is_not_stored() {
+        let mut pc = mk();
+        // 50 MB object re-requested every 2 hours: storing costs more
+        // than the miss (break-even for 50 MB ≈ 345 s).
+        let size = 50_000_000;
+        let mut hits = 0;
+        for k in 0..10u64 {
+            if pc.on_request(k * 2 * crate::HOUR, 7, size) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 0);
+        // And it does not occupy the virtual cache between requests
+        // (bootstrap may hold it briefly; after the first gap estimate it
+        // must be dropped).
+        assert_eq!(pc.vsize(), 0, "giant retained");
+    }
+
+    #[test]
+    fn vsize_tracks_residency() {
+        let mut pc = mk();
+        // 2-LRU admission: first sight is metadata-only.
+        pc.on_request(0, 1, 1000);
+        assert_eq!(pc.vsize(), 0, "first sight must not be stored");
+        // Second request creates the gap forecast and admits the object.
+        pc.on_request(10 * SECOND, 1, 1000);
+        assert!(pc.vsize() > 0, "admitted object not stored");
+        // Sweep far in the future: everything expired.
+        pc.sweep(100 * crate::HOUR);
+        assert_eq!(pc.vsize(), 0);
+
+        // Optimistic bootstrap mode stores at first sight.
+        let mut cfg = PerContentConfig::default();
+        cfg.bootstrap_cap_secs = 600.0;
+        let mut pc2 = PerContentTtl::new(cfg, CostConfig::default());
+        pc2.on_request(0, 1, 1000);
+        assert!(pc2.vsize() > 0, "bootstrap mode should store");
+    }
+
+    #[test]
+    fn beats_global_ttl_on_mixed_periodicities() {
+        // Two populations with very different periods defeat any single T;
+        // per-content forecasts should land between global-TTL and OPT.
+        use crate::config::{Config, PolicyKind};
+        use crate::sim::run_ideal_ttl;
+        use crate::trace::{Request, VecSource};
+        use crate::ttlopt::solve;
+
+        let mut trace: Vec<Request> = Vec::new();
+        // fast population: 200 objects every 30 s; slow: 200 small objects
+        // every 2 h (cheap to keep) interleaved with 2000 one-hit giants.
+        for k in 0..240u64 {
+            for o in 0..200u64 {
+                trace.push(Request { ts: k * 30 * SECOND + o, obj: o, size: 20_000 });
+            }
+        }
+        for k in 0..2u64 {
+            for o in 0..200u64 {
+                trace.push(Request {
+                    ts: k * 2 * crate::HOUR + 7200 + o,
+                    obj: 1000 + o,
+                    size: 4_000,
+                });
+            }
+        }
+        for g in 0..2000u64 {
+            trace.push(Request { ts: g * 3 * SECOND + 13, obj: 10_000 + g, size: 30_000_000 });
+        }
+        trace.sort_unstable_by_key(|r| r.ts);
+
+        let cost = CostConfig::default();
+        let pc = run_per_content(&PerContentConfig::default(), &cost, &trace);
+
+        let mut cfg = Config::with_policy(PolicyKind::IdealTtl);
+        cfg.cost = cost.clone();
+        let global = run_ideal_ttl(&cfg, &mut VecSource::new(trace.clone()));
+        let opt = solve(&trace, &cost);
+
+        assert!(
+            pc.total_cost < global.total_cost,
+            "per-content {} !< global {}",
+            pc.total_cost,
+            global.total_cost
+        );
+        assert!(
+            pc.total_cost >= opt.total_cost - 1e-12,
+            "per-content {} beat OPT {}?!",
+            pc.total_cost,
+            opt.total_cost
+        );
+    }
+}

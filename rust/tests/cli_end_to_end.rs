@@ -1,0 +1,89 @@
+//! End-to-end CLI tests: drive the compiled `elastictl` binary exactly as
+//! a user would — generate a trace file, replay it under each policy,
+//! compute the clairvoyant bound, and query the planner.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elastictl")
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn elastictl");
+    assert!(
+        out.status.success(),
+        "elastictl {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn gen_run_ttlopt_plan_pipeline() {
+    let dir = elastictl::util::tempdir::tempdir().unwrap();
+    let trace = dir.path().join("t.bin");
+    let trace_s = trace.to_str().unwrap();
+
+    let out = run_ok(&["gen-trace", trace_s, "--kind", "irm", "--seed", "5"]);
+    assert!(out.contains("wrote"), "{out}");
+
+    for policy in ["fixed", "ttl", "mrc", "ideal_ttl"] {
+        let out = run_ok(&["run", trace_s, "--policy", policy]);
+        assert!(out.contains(&format!("policy={policy}")), "{out}");
+        assert!(out.contains("total=$"), "{out}");
+    }
+
+    let out = run_ok(&["ttlopt", trace_s]);
+    assert!(out.contains("ttl-opt:"), "{out}");
+
+    // plan works whether or not artifacts exist (oracle fallback).
+    let out = run_ok(&["plan", trace_s]);
+    assert!(out.contains("T*="), "{out}");
+}
+
+#[test]
+fn csv_traces_are_accepted() {
+    let dir = elastictl::util::tempdir::tempdir().unwrap();
+    let csv = dir.path().join("t.csv");
+    let mut text = String::from("ts_us,obj,size\n");
+    for i in 0..2000u64 {
+        text.push_str(&format!("{},{},{}\n", i * 50_000, i % 200, 1000 + i % 5000));
+    }
+    std::fs::write(&csv, text).unwrap();
+    let out = run_ok(&["run", csv.to_str().unwrap(), "--policy", "ttl"]);
+    assert!(out.contains("requests=2000"), "{out}");
+}
+
+#[test]
+fn config_file_is_honored() {
+    let dir = elastictl::util::tempdir::tempdir().unwrap();
+    let cfg = dir.path().join("cfg.toml");
+    std::fs::write(&cfg, "[scaler]\nfixed_instances = 3\n").unwrap();
+    let trace = dir.path().join("t.bin");
+    run_ok(&["gen-trace", trace.to_str().unwrap(), "--kind", "irm"]);
+    let out = run_ok(&[
+        "--config",
+        cfg.to_str().unwrap(),
+        "run",
+        trace.to_str().unwrap(),
+        "--policy",
+        "fixed",
+        "--fixed-instances",
+        "3",
+    ]);
+    assert!(out.contains("policy=fixed"), "{out}");
+}
+
+#[test]
+fn unknown_args_fail_cleanly() {
+    let out = Command::new(bin()).args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"), "{err}");
+}

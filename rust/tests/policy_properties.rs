@@ -1,0 +1,179 @@
+//! Randomized property tests over the policy stack (the crate's offline
+//! proptest driver): cost-accounting identities, cluster invariants under
+//! arbitrary resize sequences, virtual-cache size consistency, MRC
+//! monotonicity, and TTL-OPT optimality against perturbed policies.
+
+use elastictl::cache::{LruCache, Store};
+use elastictl::cluster::Cluster;
+use elastictl::config::{ClusterConfig, Config, CostConfig, PolicyKind};
+use elastictl::mrc::{MrcProfiler, OlkenProfiler};
+use elastictl::sim::run;
+use elastictl::trace::{Request, VecSource};
+use elastictl::ttlopt::{next_request_times, solve};
+use elastictl::util::proptest::check;
+use elastictl::util::rng::Pcg;
+
+fn random_trace(rng: &mut Pcg, max_len: usize, catalogue: u64) -> Vec<Request> {
+    let len = 10 + rng.below_usize(max_len.max(11) - 10);
+    let mut ts = 0u64;
+    (0..len)
+        .map(|_| {
+            ts += rng.below(5_000_000) + 1;
+            let obj = rng.below(catalogue);
+            Request { ts, obj, size: (64 + rng.below(1_000_000)) as u32 }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cluster_slots_always_partition() {
+    check("cluster_slots_partition", 0xC1, |rng| {
+        let mut cluster = Cluster::new(&ClusterConfig::default(), 1_000_000, 1 + rng.below(8) as u32);
+        for _ in 0..6 {
+            let target = 1 + rng.below(20) as u32;
+            cluster.resize(target);
+            assert_eq!(cluster.len(), target.max(1) as usize);
+            let total: usize = (0..cluster.len())
+                .map(|i| cluster.slots_of_instance(i))
+                .sum();
+            assert_eq!(total, 16384, "slots lost after resize to {target}");
+            // Routing always lands on a live instance.
+            for obj in 0..64u64 {
+                assert!(cluster.route(obj) < cluster.len());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lru_used_equals_sum_of_resident_sizes() {
+    check("lru_used_consistency", 0xC2, |rng| {
+        let cap = 1_000 + rng.below(100_000);
+        let mut lru = LruCache::new(cap);
+        for _ in 0..300 {
+            let obj = rng.below(200);
+            let size = 1 + rng.below(cap / 4);
+            if rng.chance(0.2) {
+                lru.remove(obj);
+            } else {
+                lru.insert(obj, size);
+            }
+            let sum: u64 = lru.iter_mru().map(|(_, s)| s).sum();
+            assert_eq!(sum, lru.used());
+            assert!(lru.used() <= cap);
+        }
+    });
+}
+
+#[test]
+fn prop_total_cost_is_storage_plus_miss() {
+    check("cost_identity", 0xC3, |rng| {
+        let trace = random_trace(rng, 4_000, 500);
+        let mut cfg = Config::with_policy(if rng.chance(0.5) {
+            PolicyKind::Ttl
+        } else {
+            PolicyKind::Fixed
+        });
+        cfg.cost.instance.ram_bytes = 10_000_000;
+        cfg.cost.epoch_us = elastictl::MINUTE * (1 + rng.below(30));
+        let res = run(&cfg, &mut VecSource::new(trace));
+        assert!(
+            (res.total_cost - (res.storage_cost + res.miss_cost)).abs() < 1e-9,
+            "cost identity broken"
+        );
+        assert!(res.miss_ratio() > 0.0 && res.miss_ratio() <= 1.0);
+        // Miss cost equals misses * per-miss cost (constant mode).
+        let expect = res.misses as f64 * cfg.cost.miss_cost_dollars;
+        assert!((res.miss_cost - expect).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_mrc_curve_is_monotone_and_bounded() {
+    check("mrc_monotone", 0xC4, |rng| {
+        let trace = random_trace(rng, 3_000, 300);
+        let mut p = OlkenProfiler::sized(1 << 32);
+        for r in &trace {
+            p.record(r.obj, r.size_bytes());
+        }
+        let curve = p.curve();
+        assert!(curve.is_monotone());
+        for &(_, mr) in &curve.points {
+            assert!((0.0..=1.0).contains(&mr), "mr={mr}");
+        }
+        // At infinite size only cold misses remain.
+        let tail = curve.miss_ratio_at(u64::MAX / 2);
+        let cold_ratio = p.cold_misses() / trace.len() as f64;
+        assert!((tail - cold_ratio).abs() < 1e-9, "tail={tail} cold={cold_ratio}");
+    });
+}
+
+#[test]
+fn prop_ttlopt_never_worse_than_all_or_nothing() {
+    // TTL-OPT is optimal; in particular it must not exceed the cost of
+    // the trivial policies "never store" (all misses) and, per object,
+    // "always store" — checked in aggregate here.
+    check("ttlopt_lower_bound", 0xC5, |rng| {
+        let trace = random_trace(rng, 2_000, 100);
+        let cost = CostConfig::default();
+        let res = solve(&trace, &cost);
+        let never_store: f64 = trace.iter().map(|r| cost.miss_cost(r.size_bytes())).sum();
+        assert!(
+            res.total_cost <= never_store + 1e-12,
+            "opt {} > never-store {}",
+            res.total_cost,
+            never_store
+        );
+        // Always-store: every gap billed as storage + first-miss per obj.
+        let next = next_request_times(&trace);
+        let mut always_store = 0.0;
+        for (i, r) in trace.iter().enumerate() {
+            match next[i] {
+                Some(t_next) => {
+                    always_store += cost.storage_rate(r.size_bytes())
+                        * elastictl::us_to_secs(t_next - r.ts)
+                }
+                None => {}
+            }
+        }
+        let cold: f64 = {
+            let mut seen = std::collections::HashSet::new();
+            trace
+                .iter()
+                .filter(|r| seen.insert(r.obj))
+                .map(|r| cost.miss_cost(r.size_bytes()))
+                .sum()
+        };
+        always_store += cold;
+        assert!(
+            res.total_cost <= always_store + 1e-12,
+            "opt {} > always-store {}",
+            res.total_cost,
+            always_store
+        );
+    });
+}
+
+#[test]
+fn prop_vcache_vsize_equals_sum_of_resident_ghosts() {
+    use elastictl::config::ControllerConfig;
+    use elastictl::vcache::VirtualCache;
+    check("vcache_size_consistency", 0xC6, |rng| {
+        let ctrl = ControllerConfig { t_init_secs: 30.0, ..Default::default() };
+        let mut vc = VirtualCache::new(&ctrl, CostConfig::default());
+        let mut now = 0u64;
+        for _ in 0..500 {
+            now += rng.below(10_000_000);
+            let obj = rng.below(50);
+            let size = 100 + rng.below(10_000);
+            vc.on_request(now, obj, size);
+        }
+        // vsize is the exact sum over resident ghosts (lazy or not).
+        assert!(vc.len() <= 50);
+        assert!(vc.vsize() > 0 || vc.len() == 0);
+        // After expiring far in the future, everything is gone.
+        vc.expire(now + elastictl::DAY);
+        assert_eq!(vc.vsize(), 0);
+        assert_eq!(vc.len(), 0);
+    });
+}

@@ -1,0 +1,138 @@
+//! Integration tests over the AOT artifacts: load the HLO text on the
+//! PJRT CPU client, execute, and compare against the Rust oracle and the
+//! paper's eq. (4) limits. Skipped (with a message) when `make artifacts`
+//! has not run.
+
+use elastictl::config::Config;
+use elastictl::runtime::{
+    artifacts_dir, reference_curves, BucketedStats, CostCurveModel, Manifest, Planner,
+};
+use elastictl::util::rng::Pcg;
+
+fn artifacts_available() -> bool {
+    Manifest::load(artifacts_dir()).is_ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts missing; run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn random_inputs(n: usize, g: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg::seed_from_u64(seed);
+    let lam: Vec<f32> = (0..n).map(|_| rng.range_f64(1e-6, 5.0) as f32).collect();
+    let m = vec![1.4676e-7f32; n];
+    let s: Vec<f32> = (0..n).map(|_| rng.range_f64(64.0, 1e7) as f32).collect();
+    let c: Vec<f32> = s.iter().map(|x| x * 8.5085e-15).collect();
+    let w: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 100.0) as f32).collect();
+    let t: Vec<f32> = (0..g).map(|i| i as f32 * 7200.0 / g as f32).collect();
+    (lam, m, c, s, w, t)
+}
+
+#[test]
+fn every_manifest_variant_loads_and_matches_oracle() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    assert!(!manifest.artifacts.is_empty());
+    for spec in &manifest.artifacts {
+        let model = CostCurveModel::load(&dir, Some(spec.n)).unwrap();
+        assert_eq!(model.n, spec.n);
+        assert_eq!(model.g, spec.g);
+        let (lam, m, c, s, w, t) = random_inputs(spec.n, spec.g, spec.n as u64);
+        let got = model.evaluate(&lam, &m, &c, &s, &w, &t).unwrap();
+        let want = reference_curves(&lam, &m, &c, &s, &w, &t);
+        for (name, a, b) in [
+            ("cost", &got.cost, &want.cost),
+            ("vsize", &got.vsize, &want.vsize),
+            ("missrate", &got.missrate, &want.missrate),
+        ] {
+            assert_eq!(a.len(), spec.g);
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                let denom = y.abs().max(1e-20);
+                assert!(
+                    ((x - y) / denom).abs() < 1e-3,
+                    "{name}[{i}] (n={}): pjrt={x} oracle={y}",
+                    spec.n
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_respects_eq4_limits() {
+    require_artifacts!();
+    let model = CostCurveModel::load(artifacts_dir(), None).unwrap();
+    let (lam, m, c, s, w, mut t) = random_inputs(model.n, model.g, 99);
+    // First half of the grid at T=0, second at T≈∞.
+    for (i, v) in t.iter_mut().enumerate() {
+        *v = if i < model.g / 2 { 0.0 } else { 1e9 };
+    }
+    let got = model.evaluate(&lam, &m, &c, &s, &w, &t).unwrap();
+    let all_miss: f32 = lam.iter().zip(&m).zip(&w).map(|((l, mm), ww)| ww * l * mm).sum();
+    let all_store: f32 = c.iter().zip(&w).map(|(cc, ww)| ww * cc).sum();
+    assert!(((got.cost[0] - all_miss) / all_miss).abs() < 1e-3);
+    let last = got.cost[model.g - 1];
+    assert!(((last - all_store) / all_store).abs() < 1e-2, "last={last} store={all_store}");
+    assert!(got.vsize[0].abs() < 1.0);
+}
+
+#[test]
+fn planner_uses_artifact_and_agrees_with_oracle_planner() {
+    require_artifacts!();
+    let cfg = Config::default();
+    let planner = Planner::load(artifacts_dir(), cfg.controller.t_max_secs);
+    assert!(planner.uses_artifact(), "planner fell back to oracle");
+
+    let mut rng = Pcg::seed_from_u64(5);
+    let items: Vec<(u32, u32)> = (0..20_000)
+        .map(|i| {
+            (
+                (10_000 / (i + 1)).max(1) as u32,
+                (64 + rng.below(5_000_000)) as u32,
+            )
+        })
+        .collect();
+    let stats = BucketedStats::build(&items, planner.n_buckets(), 3600.0, &cfg.cost);
+    let plan = planner.plan(&stats, cfg.cost.instance.ram_bytes).unwrap();
+
+    let oracle = Planner::oracle(planner.n_buckets(), 256, cfg.controller.t_max_secs);
+    let oracle_plan = oracle.plan(&stats, cfg.cost.instance.ram_bytes).unwrap();
+    // Same bucketing, same grid resolution → same optimum (modulo fp).
+    assert!(
+        (plan.t_star_secs - oracle_plan.t_star_secs).abs()
+            <= 0.05 * (plan.t_star_secs + oracle_plan.t_star_secs + 1.0),
+        "pjrt T*={} oracle T*={}",
+        plan.t_star_secs,
+        oracle_plan.t_star_secs
+    );
+    assert_eq!(plan.instances, oracle_plan.instances);
+}
+
+#[test]
+fn analytic_sizer_runs_a_full_simulation() {
+    require_artifacts!();
+    use elastictl::runtime::AnalyticSizer;
+    use elastictl::sim::run_policy;
+    use elastictl::trace::{SynthConfig, SynthGenerator, VecSource};
+
+    let mut cfg = Config::default();
+    cfg.cost.instance.ram_bytes = 40_000_000;
+    cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+    cfg.cost.epoch_us = 10 * elastictl::MINUTE;
+    let mut synth = SynthConfig::tiny();
+    synth.mean_rate = 150.0;
+    let trace = SynthGenerator::new(synth).generate();
+
+    let sizer = Box::new(AnalyticSizer::from_config(&cfg));
+    let res = run_policy(&cfg, &mut VecSource::new(trace), sizer, 1);
+    assert_eq!(res.policy, "analytic");
+    assert!(res.requests > 10_000);
+    assert!(res.total_cost > 0.0);
+    assert!(res.miss_ratio() < 1.0);
+}
