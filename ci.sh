@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, release build, tests.
+#
+# Usage: ./ci.sh            (from anywhere; operates on the repo checkout)
+# Env:   ELASTICTL_PROPTEST_CASES / ELASTICTL_BENCH_QUICK are honored by
+#        the test suite; CI keeps their defaults.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check"
+cargo fmt --all --check || {
+    echo "ci: formatting drift detected (run 'cargo fmt --all')" >&2
+    exit 1
+}
+
+echo "==> cargo clippy (lib, -D warnings)"
+cargo clippy --lib -- -D warnings
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "ci: all green"

@@ -1,0 +1,97 @@
+//! Tenant-layer overhead bench — per-request cost of the multi-tenant
+//! path (tenant-scoped routing + controller-bank dispatch + per-tenant
+//! ledgers) against the single-tenant TTL router over the same workload.
+//!
+//! Acceptance target: the multi-tenant request path stays O(1) and lands
+//! within 25% of the single-tenant `router_overhead` ttl path.
+
+use elastictl::balancer::Balancer;
+use elastictl::config::{Config, PolicyKind};
+use elastictl::cost::CostTracker;
+use elastictl::scaler::make_sizer;
+use elastictl::tenant::{TenantSpec, TrafficClass};
+use elastictl::trace::{Request, SynthConfig, SynthGenerator};
+use elastictl::util::bench::{black_box, Bencher};
+
+fn bench_policy(
+    b: &mut Bencher,
+    name: &str,
+    cfg: &Config,
+    trace: &[Request],
+    chunk: usize,
+) -> f64 {
+    let sizer = make_sizer(cfg);
+    let mut balancer = Balancer::from_config(cfg, sizer, 8);
+    let mut costs = CostTracker::new(cfg.cost.clone());
+    for spec in &cfg.tenants {
+        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+    }
+    // Warm the structures over the whole trace once.
+    for r in trace {
+        balancer.handle(r, &mut costs);
+    }
+    let mut idx = 0usize;
+    let mean_ns = b
+        .bench(&format!("{name}_10k_requests"), chunk as u64, || {
+            for r in &trace[idx..idx + chunk] {
+                black_box(balancer.handle(r, &mut costs));
+            }
+            idx = (idx + chunk) % (trace.len() - chunk).max(1);
+        })
+        .mean_ns;
+    println!(
+        "# work_units[{name}] = {:.2}/request, tenants seen = {}",
+        balancer.work_units as f64 / balancer.requests as f64,
+        balancer
+            .tenant_stats()
+            .iter()
+            .filter(|hm| hm.total() > 0)
+            .count()
+    );
+    mean_ns
+}
+
+fn main() {
+    let mut b = Bencher::new("tenant_overhead");
+    let mut cfg_trace = SynthConfig::tiny();
+    cfg_trace.mean_rate = 600.0;
+    let single: Vec<Request> = SynthGenerator::new(cfg_trace).generate();
+    // Same requests, round-robined across three tenants (tenant-local key
+    // spaces, as the mux would produce).
+    let multi: Vec<Request> = single
+        .iter()
+        .enumerate()
+        .map(|(i, r)| r.with_tenant((i % 3) as u16))
+        .collect();
+    let chunk = 10_000.min(single.len() / 2);
+
+    let mut ttl_cfg = Config::with_policy(PolicyKind::Ttl);
+    ttl_cfg.cost.instance.ram_bytes = 40_000_000;
+    ttl_cfg.scaler.fixed_instances = 8;
+    let single_ns = bench_policy(&mut b, "ttl_single_tenant", &ttl_cfg, &single, chunk);
+
+    let mut ten_cfg = Config::with_policy(PolicyKind::TenantTtl);
+    ten_cfg.cost.instance.ram_bytes = 40_000_000;
+    ten_cfg.scaler.fixed_instances = 8;
+    ten_cfg.tenants = vec![
+        TenantSpec::new(0, "api")
+            .with_multiplier(3.0)
+            .with_class(TrafficClass::Interactive),
+        TenantSpec::new(1, "web"),
+        TenantSpec::new(2, "batch")
+            .with_multiplier(0.3)
+            .with_class(TrafficClass::Bulk),
+    ];
+    let multi_ns = bench_policy(&mut b, "tenant_ttl_3_tenants", &ten_cfg, &multi, chunk);
+
+    let ratio = multi_ns / single_ns.max(1e-9);
+    println!(
+        "# tenant_overhead: multi/single = {ratio:.3} ({})",
+        if ratio <= 1.25 {
+            "within the 25% O(1) budget"
+        } else {
+            "EXCEEDS the 25% budget"
+        }
+    );
+    b.finish();
+}

@@ -4,6 +4,13 @@
 //! sizing policy's shadow structure, and at epoch boundaries applies the
 //! policy's decision by resizing the cluster.
 //!
+//! Multi-tenant traces route on `(tenant, key)`: the tenant id is folded
+//! into the hash-slot key ([`crate::tenant::scoped_object`]), so tenants
+//! share the physical cluster without key collisions, and the policy's
+//! shadow update is dispatched with the full request so per-tenant
+//! controllers can claim it. Tenant 0 routes bit-for-bit like the
+//! pre-tenant balancer.
+//!
 //! Mirrors the paper's custom mcrouter-like tool. Per-request cost:
 //! routing O(1) + policy shadow work (O(1) for TTL, O(log M) for MRC) —
 //! the Fig. 1 comparison is exactly these code paths.
@@ -11,9 +18,11 @@
 use crate::cluster::Cluster;
 use crate::config::Config;
 use crate::cost::CostTracker;
+use crate::metrics::HitMiss;
 use crate::scaler::EpochSizer;
+use crate::tenant::scoped_object;
 use crate::trace::Request;
-use crate::TimeUs;
+use crate::{TenantId, TimeUs};
 
 /// Outcome of one request through the balancer.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,6 +48,9 @@ pub struct Balancer {
     pub spurious_misses: u64,
     /// Cumulative policy work units.
     pub work_units: u64,
+    /// Per-tenant hit/miss counters, indexed by tenant id (grown on
+    /// demand; single-tenant traces only ever touch slot 0).
+    tenant_stats: Vec<HitMiss>,
 }
 
 impl Balancer {
@@ -50,6 +62,7 @@ impl Balancer {
             misses: 0,
             spurious_misses: 0,
             work_units: 0,
+            tenant_stats: Vec::new(),
         }
     }
 
@@ -64,27 +77,34 @@ impl Balancer {
         self.sizer.as_ref()
     }
 
-    /// Handle one request: policy shadow update, route, serve, account.
+    /// Handle one request: policy shadow update, route on `(tenant, key)`,
+    /// serve, account.
     pub fn handle(&mut self, req: &Request, costs: &mut CostTracker) -> Served {
         self.requests += 1;
-        let work = self.sizer.on_request(req.ts, req.obj, req.size_bytes());
+        let work = self.sizer.on_request(req);
         self.work_units += work.units as u64;
 
-        let routed = self.cluster.route(req.obj);
-        let hit = self.cluster.serve(req.obj, req.size_bytes());
+        let obj = scoped_object(req.tenant, req.obj);
+        let routed = self.cluster.route(obj);
+        let hit = self.cluster.serve(obj, req.size_bytes());
         let mut spurious = false;
         if !hit {
             self.misses += 1;
-            costs.record_miss(req.size_bytes());
+            costs.record_miss_for(req.tenant, req.size_bytes());
             // The miss is spurious iff another instance still holds a stale
             // copy (the slot moved under it). The routed instance is
             // excluded: `serve` just inserted the object there. Checked
             // only on misses; bounded by the instance count.
-            if self.cluster.resident_elsewhere(req.obj, routed) {
+            if self.cluster.resident_elsewhere(obj, routed) {
                 spurious = true;
                 self.spurious_misses += 1;
             }
         }
+        let i = req.tenant as usize;
+        if self.tenant_stats.len() <= i {
+            self.tenant_stats.resize(i + 1, HitMiss::default());
+        }
+        self.tenant_stats[i].record(hit);
         Served { hit, spurious, work_units: work.units }
     }
 
@@ -106,6 +126,20 @@ impl Balancer {
         }
     }
 
+    /// Per-tenant counters, indexed by tenant id (empty slots for ids the
+    /// trace never used).
+    pub fn tenant_stats(&self) -> &[HitMiss] {
+        &self.tenant_stats
+    }
+
+    /// Counters for one tenant (zero if never seen).
+    pub fn tenant_stats_of(&self, t: TenantId) -> HitMiss {
+        self.tenant_stats
+            .get(t as usize)
+            .copied()
+            .unwrap_or_default()
+    }
+
     /// Policy diagnostics for the figure series.
     pub fn ttl_secs(&self) -> Option<f64> {
         self.sizer.ttl_secs()
@@ -113,6 +147,11 @@ impl Balancer {
 
     pub fn shadow_size(&self) -> Option<u64> {
         self.sizer.shadow_size()
+    }
+
+    /// Per-tenant timers, when the policy runs one controller per tenant.
+    pub fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
+        self.sizer.tenant_ttls()
     }
 }
 
@@ -133,7 +172,7 @@ mod tests {
     }
 
     fn req(ts: u64, obj: u64, size: u32) -> Request {
-        Request { ts, obj, size }
+        Request::new(ts, obj, size)
     }
 
     #[test]
@@ -148,6 +187,9 @@ mod tests {
         assert_eq!(b.misses, 1);
         assert!(c.miss_total() > 0.0);
         assert!((b.miss_ratio() - 0.5).abs() < 1e-12);
+        // Everything landed on tenant 0's counters.
+        assert_eq!(b.tenant_stats_of(0).total(), 2);
+        assert_eq!(b.tenant_stats_of(1).total(), 0);
     }
 
     #[test]
@@ -178,6 +220,39 @@ mod tests {
         assert!(b.cluster.resizes >= 1);
         assert!(b.ttl_secs().is_some());
         assert!(b.shadow_size().unwrap() > 0);
+    }
+
+    #[test]
+    fn tenants_do_not_collide_on_shared_cluster() {
+        // The same tenant-local key from two tenants must be two distinct
+        // physical objects — and tenant stats must separate them.
+        let (mut b, mut c) = mk(PolicyKind::Fixed, 4);
+        let s1 = b.handle(&req(0, 42, 100).with_tenant(1), &mut c);
+        assert!(!s1.hit);
+        let s2 = b.handle(&req(1, 42, 100).with_tenant(2), &mut c);
+        assert!(!s2.hit, "tenant 2 must not hit tenant 1's object");
+        let s3 = b.handle(&req(2, 42, 100).with_tenant(1), &mut c);
+        assert!(s3.hit);
+        assert_eq!(b.tenant_stats_of(1).hits, 1);
+        assert_eq!(b.tenant_stats_of(1).misses, 1);
+        assert_eq!(b.tenant_stats_of(2).misses, 1);
+        assert_eq!(b.tenant_stats_of(0).total(), 0);
+    }
+
+    #[test]
+    fn tenant_policy_reports_per_tenant_ttls() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.tenants = vec![
+            crate::tenant::TenantSpec::new(0, "a"),
+            crate::tenant::TenantSpec::new(1, "b").with_multiplier(2.0),
+        ];
+        let sizer = make_sizer(&cfg);
+        let mut b = Balancer::from_config(&cfg, sizer, 1);
+        let mut c = CostTracker::new(cfg.cost.clone());
+        b.handle(&req(0, 1, 100).with_tenant(0), &mut c);
+        b.handle(&req(1, 1, 100).with_tenant(1), &mut c);
+        let ttls = b.tenant_ttls().expect("tenant policy exposes ttls");
+        assert_eq!(ttls.len(), 2);
     }
 
     #[test]

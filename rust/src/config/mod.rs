@@ -11,8 +11,9 @@ mod instance;
 
 pub use instance::{InstanceCatalog, InstanceType};
 
+use crate::tenant::{TenantSpec, TrafficClass};
 use crate::util::toml_lite::{Doc, Value};
-use crate::{Result, HOUR};
+use crate::{Result, TenantId, HOUR};
 use std::path::Path;
 
 /// Gain (step-size) schedule `ε(n)` for the stochastic-approximation TTL
@@ -173,6 +174,10 @@ pub enum PolicyKind {
     /// PJRT analytic planner: bucketed IRM model argmin over the AOT cost
     /// curve (our L1/L2 integration; an ablation, not in the paper).
     Analytic,
+    /// Multi-tenant Algorithm 2: one TTL controller per tenant, one shared
+    /// elastic cluster sized by the cost-aware arbiter
+    /// ([`crate::tenant::TenantTtlSizer`]).
+    TenantTtl,
 }
 
 impl PolicyKind {
@@ -183,6 +188,7 @@ impl PolicyKind {
             PolicyKind::Mrc => "mrc",
             PolicyKind::IdealTtl => "ideal_ttl",
             PolicyKind::Analytic => "analytic",
+            PolicyKind::TenantTtl => "tenant_ttl",
         }
     }
 
@@ -193,8 +199,9 @@ impl PolicyKind {
             "mrc" => PolicyKind::Mrc,
             "ideal_ttl" | "ideal-ttl" => PolicyKind::IdealTtl,
             "analytic" => PolicyKind::Analytic,
+            "tenant_ttl" | "tenant-ttl" | "tenants" => PolicyKind::TenantTtl,
             other => anyhow::bail!(
-                "unknown policy {other} (fixed|ttl|mrc|ideal_ttl|analytic)"
+                "unknown policy {other} (fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl)"
             ),
         })
     }
@@ -286,6 +293,11 @@ pub struct Config {
     pub controller: ControllerConfig,
     pub scaler: ScalerConfig,
     pub cluster: ClusterConfig,
+    /// Tenant roster for the multi-tenant policy. Empty = single-tenant
+    /// mode (every request is tenant 0 with multiplier 1.0). In TOML this
+    /// is a `[tenant0]` / `[tenant1]` / … section per tenant, each with
+    /// optional `id`, `name`, `miss_cost_multiplier` and `class` keys.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Config {
@@ -388,6 +400,47 @@ impl Config {
         if let Some(v) = doc.get_u64("cluster.seed") {
             cfg.cluster.seed = v;
         }
+
+        // [tenant0], [tenant1], … — one section per tenant. Sections are
+        // discovered by scanning the parsed keys, so a gap in the
+        // numbering (say, a deleted [tenant1] between [tenant0] and
+        // [tenant2]) cannot silently drop the later tenants.
+        let mut indices: Vec<u64> = doc
+            .entries
+            .keys()
+            .filter_map(|k| {
+                let rest = k.strip_prefix("tenant")?;
+                let (idx, _) = rest.split_once('.')?;
+                idx.parse::<u64>().ok()
+            })
+            .collect();
+        indices.sort_unstable();
+        indices.dedup();
+        let mut tenants = Vec::new();
+        for i in indices {
+            let id = doc.get_u64(&format!("tenant{i}.id")).unwrap_or(i);
+            anyhow::ensure!(
+                id <= u16::MAX as u64,
+                "tenant{i}: id {id} out of range (tenant ids are u16)"
+            );
+            let name = match doc.get_str(&format!("tenant{i}.name")) {
+                Some(s) => s.to_string(),
+                None => format!("tenant{i}"),
+            };
+            let multiplier = doc
+                .get_f64(&format!("tenant{i}.miss_cost_multiplier"))
+                .unwrap_or(1.0);
+            let class = match doc.get_str(&format!("tenant{i}.class")) {
+                Some(s) => TrafficClass::parse(s)?,
+                None => TrafficClass::Standard,
+            };
+            tenants.push(
+                TenantSpec::new(id as TenantId, name)
+                    .with_multiplier(multiplier)
+                    .with_class(class),
+            );
+        }
+        cfg.tenants = tenants;
         Ok(cfg)
     }
 
@@ -457,6 +510,19 @@ impl Config {
         );
         doc.set("cluster.hash_slots", Value::Int(self.cluster.hash_slots as i64));
         doc.set("cluster.seed", Value::Int(self.cluster.seed as i64));
+
+        for (i, t) in self.tenants.iter().enumerate() {
+            doc.set(&format!("tenant{i}.id"), Value::Int(t.id as i64));
+            doc.set(&format!("tenant{i}.name"), Value::Str(t.name.clone()));
+            doc.set(
+                &format!("tenant{i}.miss_cost_multiplier"),
+                Value::Float(t.miss_cost_multiplier),
+            );
+            doc.set(
+                &format!("tenant{i}.class"),
+                Value::Str(t.class.as_str().into()),
+            );
+        }
         doc.render()
     }
 
@@ -553,9 +619,58 @@ mod tests {
             PolicyKind::Mrc,
             PolicyKind::IdealTtl,
             PolicyKind::Analytic,
+            PolicyKind::TenantTtl,
         ] {
             assert_eq!(PolicyKind::parse(p.as_str()).unwrap(), p);
         }
         assert!(PolicyKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn tenant_sections_round_trip() {
+        let mut cfg = Config::default();
+        cfg.scaler.policy = PolicyKind::TenantTtl;
+        cfg.tenants = vec![
+            TenantSpec::new(0, "api")
+                .with_multiplier(3.0)
+                .with_class(TrafficClass::Interactive),
+            TenantSpec::new(5, "batch")
+                .with_multiplier(0.3)
+                .with_class(TrafficClass::Bulk),
+        ];
+        let text = cfg.to_toml();
+        let back = Config::from_toml(&text).unwrap();
+        assert_eq!(back.scaler.policy, PolicyKind::TenantTtl);
+        assert_eq!(back.tenants, cfg.tenants);
+    }
+
+    #[test]
+    fn tenant_sections_defaults_and_errors() {
+        let cfg = Config::from_toml(
+            "[tenant0]\nmiss_cost_multiplier = 2.0\n[tenant1]\nname = \"web\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0].id, 0);
+        assert_eq!(cfg.tenants[0].name, "tenant0");
+        assert_eq!(cfg.tenants[0].miss_cost_multiplier, 2.0);
+        assert_eq!(cfg.tenants[1].id, 1);
+        assert_eq!(cfg.tenants[1].name, "web");
+        assert_eq!(cfg.tenants[1].miss_cost_multiplier, 1.0);
+        // No tenant sections → single-tenant mode.
+        assert!(Config::from_toml("").unwrap().tenants.is_empty());
+        // Bad class is rejected.
+        assert!(Config::from_toml("[tenant0]\nclass = \"vip\"\n").is_err());
+        // Out-of-range ids error loudly instead of clamping.
+        assert!(Config::from_toml("[tenant0]\nid = 70000\n").is_err());
+        // A numbering gap must not drop the later sections.
+        let gappy = Config::from_toml(
+            "[tenant0]\nname = \"a\"\n[tenant2]\nname = \"c\"\nmiss_cost_multiplier = 5.0\n",
+        )
+        .unwrap();
+        assert_eq!(gappy.tenants.len(), 2);
+        assert_eq!(gappy.tenants[1].id, 2);
+        assert_eq!(gappy.tenants[1].name, "c");
+        assert_eq!(gappy.tenants[1].miss_cost_multiplier, 5.0);
     }
 }

@@ -1,10 +1,22 @@
 //! Cost accounting (§2.3): storage cost `C^s(1,k) = Σ_h c^s·I(h)` billed
 //! per epoch, miss cost `C^m = Σ_n m_{r(n)}` accrued per miss, and the
 //! per-run cumulative series of Figs. 6–8.
+//!
+//! Multi-tenant runs additionally keep one [`TenantLedger`] per tenant:
+//! misses are billed at `weight_t × m_o` (the tenant's miss-cost
+//! multiplier) and attributed to the requesting tenant, so fig10 can
+//! report who spent what on the shared cluster.
 
 use crate::config::CostConfig;
 use crate::metrics::TimeSeries;
-use crate::TimeUs;
+use crate::{TenantId, TimeUs};
+
+/// Per-tenant slice of the miss bill.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TenantLedger {
+    pub misses: u64,
+    pub miss_dollars: f64,
+}
 
 /// Running cost ledger for one policy run.
 #[derive(Debug)]
@@ -18,6 +30,12 @@ pub struct CostTracker {
     epoch_miss: f64,
     /// Misses within the current epoch.
     epoch_miss_count: u64,
+    /// Per-tenant miss attribution, indexed by tenant id (grown on
+    /// demand; single-tenant runs only ever touch slot 0).
+    tenant_ledgers: Vec<TenantLedger>,
+    /// Per-tenant miss-cost multipliers, indexed by tenant id (missing =
+    /// 1.0).
+    tenant_weights: Vec<f64>,
     /// Cumulative series sampled at epoch boundaries.
     pub storage_series: TimeSeries,
     pub miss_series: TimeSeries,
@@ -35,6 +53,8 @@ impl CostTracker {
             miss_total: 0.0,
             epoch_miss: 0.0,
             epoch_miss_count: 0,
+            tenant_ledgers: Vec::new(),
+            tenant_weights: Vec::new(),
             storage_series: TimeSeries::new("storage_cum"),
             miss_series: TimeSeries::new("miss_cum"),
             total_series: TimeSeries::new("total_cum"),
@@ -47,12 +67,53 @@ impl CostTracker {
         &self.cfg
     }
 
-    /// Record one miss for an object of `size` bytes.
+    /// Set tenant `t`'s miss-cost multiplier (default 1.0).
+    pub fn set_tenant_weight(&mut self, t: TenantId, weight: f64) {
+        let i = t as usize;
+        if self.tenant_weights.len() <= i {
+            self.tenant_weights.resize(i + 1, 1.0);
+        }
+        self.tenant_weights[i] = weight;
+    }
+
+    /// Miss-cost multiplier for tenant `t`.
+    #[inline]
+    pub fn tenant_weight(&self, t: TenantId) -> f64 {
+        self.tenant_weights.get(t as usize).copied().unwrap_or(1.0)
+    }
+
+    /// Tenant `t`'s cumulative miss attribution (zero if never seen).
+    pub fn tenant_ledger(&self, t: TenantId) -> TenantLedger {
+        self.tenant_ledgers
+            .get(t as usize)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// All per-tenant ledgers, indexed by tenant id.
+    pub fn tenant_ledgers(&self) -> &[TenantLedger] {
+        &self.tenant_ledgers
+    }
+
+    /// Record one miss for an object of `size` bytes (tenant 0).
     #[inline]
     pub fn record_miss(&mut self, size: u64) {
-        let m = self.cfg.miss_cost(size);
+        self.record_miss_for(0, size);
+    }
+
+    /// Record one miss by tenant `t` for an object of `size` bytes,
+    /// billed at the tenant's weighted miss cost.
+    #[inline]
+    pub fn record_miss_for(&mut self, t: TenantId, size: u64) {
+        let m = self.cfg.miss_cost(size) * self.tenant_weight(t);
         self.epoch_miss += m;
         self.epoch_miss_count += 1;
+        let i = t as usize;
+        if self.tenant_ledgers.len() <= i {
+            self.tenant_ledgers.resize(i + 1, TenantLedger::default());
+        }
+        self.tenant_ledgers[i].misses += 1;
+        self.tenant_ledgers[i].miss_dollars += m;
     }
 
     /// Record an arbitrary storage charge (used by the ideal TTL cache,
@@ -199,5 +260,30 @@ mod tests {
         t.record_miss(1);
         assert!(t.miss_total() > 0.0);
         assert_eq!(t.total(), t.miss_total());
+    }
+
+    #[test]
+    fn tenant_ledgers_attribute_weighted_misses() {
+        let mut t = CostTracker::new(CostConfig::default());
+        let m = t.config().miss_cost_dollars;
+        t.set_tenant_weight(1, 3.0);
+        t.set_tenant_weight(2, 0.5);
+        t.record_miss_for(1, 4096);
+        t.record_miss_for(1, 4096);
+        t.record_miss_for(2, 4096);
+        t.record_miss(4096); // tenant 0, weight 1.0
+        let l0 = t.tenant_ledger(0);
+        let l1 = t.tenant_ledger(1);
+        let l2 = t.tenant_ledger(2);
+        assert_eq!((l0.misses, l1.misses, l2.misses), (1, 2, 1));
+        assert!((l1.miss_dollars - 2.0 * 3.0 * m).abs() < 1e-15);
+        assert!((l2.miss_dollars - 0.5 * m).abs() < 1e-15);
+        assert!((l0.miss_dollars - m).abs() < 1e-15);
+        // The aggregate bill is the sum of the ledgers.
+        let sum = l0.miss_dollars + l1.miss_dollars + l2.miss_dollars;
+        assert!((t.miss_total() - sum).abs() < 1e-15);
+        // Unknown tenants read as zero / weight 1.
+        assert_eq!(t.tenant_ledger(40), TenantLedger::default());
+        assert_eq!(t.tenant_weight(40), 1.0);
     }
 }

@@ -3,6 +3,7 @@
 //! an output directory and returns a human-readable report string.
 
 mod ablations;
+mod fig10_tenants;
 mod fig1_overhead;
 mod fig2_mrc_accuracy;
 mod fig4_trace;
@@ -13,6 +14,7 @@ mod fig9_balance;
 mod irm_convergence;
 
 pub use ablations::{run_epoch_ablation, run_gain_ablation, run_instance_ablation, run_per_content_ablation, AblationReport};
+pub use fig10_tenants::{run_fig10, tenant_specs, tenant_trace, Fig10Report, TenantOutcome};
 pub use fig1_overhead::run_fig1;
 pub use fig2_mrc_accuracy::run_fig2;
 pub use fig4_trace::run_fig4;

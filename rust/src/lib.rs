@@ -22,8 +22,17 @@
 //! * a PJRT-backed **analytic planner** that evaluates the paper's IRM cost
 //!   model `C(T) = Σ_i c_i + (λ_i m_i − c_i) e^{−λ_i T}` (eq. 4) via an
 //!   AOT-compiled JAX/Pallas artifact ([`runtime`]);
+//! * a **multi-tenant provisioning layer** ([`tenant`]): a registry of
+//!   tenants with per-tenant miss-cost multipliers and traffic classes, a
+//!   bank of per-tenant §4 TTL controllers (each converging to its own
+//!   `T_i`), and a Memshare-style cost-aware arbiter that folds the
+//!   per-tenant shadow demands into one shared cluster sizing decision —
+//!   requests carry a compact tenant id end to end (trace format v2,
+//!   [`trace::TenantMux`], `(tenant, key)` routing in [`balancer`],
+//!   per-tenant cost ledgers in [`cost`], and the `GET <tenant>/<key>` /
+//!   `STATS <tenant>` serve protocol);
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
-//!   ([`experiments`]).
+//!   plus the multi-tenant fig10 study ([`experiments`]).
 //!
 //! Time is measured in microseconds ([`TimeUs`]); object sizes in bytes.
 
@@ -39,6 +48,7 @@ pub mod runtime;
 pub mod scaler;
 pub mod serve;
 pub mod sim;
+pub mod tenant;
 pub mod trace;
 pub mod ttlopt;
 pub mod util;
@@ -49,6 +59,10 @@ pub type TimeUs = u64;
 
 /// Opaque object (cache key) identifier.
 pub type ObjectId = u64;
+
+/// Compact tenant identifier carried by every request (0 = the default
+/// tenant of single-workload traces).
+pub type TenantId = u16;
 
 /// One microsecond-denominated second.
 pub const SECOND: TimeUs = 1_000_000;

@@ -1,10 +1,10 @@
 //! `elastictl` — CLI for the elastic cloud-cache coordinator.
 //!
 //! ```text
-//! elastictl gen-trace <out> [--kind akamai|irm] [--scale smoke|small|full] [--seed N]
-//! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic] [--fixed-instances N]
+//! elastictl gen-trace <out> [--kind akamai|irm|tenants] [--scale smoke|small|full] [--seed N]
+//! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
 //! elastictl exp <id> [--scale smoke|small|full] [--out DIR]
-//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 irm all
+//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 irm all
 //! elastictl plan <trace>
 //! elastictl ttlopt <trace>
 //! elastictl serve [--addr HOST:PORT] [--policy ...]
@@ -20,12 +20,12 @@ use elastictl::Result;
 use std::path::PathBuf;
 
 const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve> [args]
-  gen-trace <out> [--kind akamai|irm] [--scale smoke|small|full] [--seed N]
-  run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic] [--fixed-instances N]
-  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 irm ablations all)
+  gen-trace <out> [--kind akamai|irm|tenants] [--scale smoke|small|full] [--seed N]
+  run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
+  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 irm ablations all)
   plan <trace>
   ttlopt <trace>
-  serve [--addr HOST:PORT] [--policy P]";
+  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], EPOCH, QUIT)";
 
 /// Minimal flag parser: positionals + `--key value` pairs.
 struct Args {
@@ -122,7 +122,9 @@ fn main() -> Result<()> {
                     }
                     IrmGenerator::new(ic).generate()
                 }
-                other => anyhow::bail!("unknown trace kind {other} (akamai|irm)"),
+                // The fig10 three-tenant mux (api/web/batch profiles).
+                "tenants" => experiments::tenant_trace(scale, seed.unwrap_or(0xF16_10)),
+                other => anyhow::bail!("unknown trace kind {other} (akamai|irm|tenants)"),
             };
             let n = trace::write_trace(&out, &reqs)?;
             println!("wrote {n} requests to {}", out.display());
@@ -256,6 +258,10 @@ fn run_experiment(id: &str, scale: TraceScale, out: &PathBuf) -> Result<()> {
     if all || id == "fig9" {
         matched = true;
         println!("{}", experiments::run_fig9(&ctx)?.render());
+    }
+    if all || id == "fig10" || id == "tenants" {
+        matched = true;
+        println!("{}", experiments::run_fig10(&ctx, scale)?.render());
     }
     if all || id == "ablations" {
         matched = true;

@@ -252,8 +252,9 @@ impl AnalyticSizer {
 }
 
 impl EpochSizer for AnalyticSizer {
-    fn on_request(&mut self, _now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork {
-        self.estimator.record(obj, size);
+    fn on_request(&mut self, req: &crate::trace::Request) -> PolicyWork {
+        let obj = crate::tenant::scoped_object(req.tenant, req.obj);
+        self.estimator.record(obj, req.size_bytes());
         PolicyWork { units: 2, shadow_hit: None }
     }
 
@@ -363,7 +364,7 @@ mod tests {
         // Hot working set of ~3 MB requested many times in the epoch.
         for round in 0..50u64 {
             for i in 0..30u64 {
-                s.on_request(round, i, 100_000);
+                s.on_request(&crate::trace::Request::new(round, i, 100_000));
             }
         }
         let n = s.decide(HOUR);

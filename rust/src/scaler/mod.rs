@@ -8,6 +8,8 @@
 //! * [`MrcSizer`] — the previously proposed alternative ([35]): profile
 //!   the epoch's requests into an exact MRC (O(log M) per request) and
 //!   pick the cluster size minimizing predicted storage + miss cost.
+//! * [`crate::tenant::TenantTtlSizer`] — the multi-tenant generalization:
+//!   one TTL controller per tenant, arbitrated into one shared cluster.
 //!
 //! The PJRT-backed analytic sizer lives in [`crate::runtime`] and
 //! implements the same [`EpochSizer`] trait.
@@ -15,8 +17,9 @@
 use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
 use crate::metrics::Ewma;
 use crate::mrc::{MrcProfiler, OlkenProfiler};
+use crate::trace::Request;
 use crate::vcache::VirtualCache;
-use crate::{ObjectId, TimeUs};
+use crate::{TenantId, TimeUs};
 
 /// Per-request work a policy performs, as abstract *work units* — the
 /// Fig. 1 CPU-overhead proxy. The basic router (hash + route) costs 1; the
@@ -32,7 +35,9 @@ pub struct PolicyWork {
 pub trait EpochSizer {
     /// Called on every request, *before* routing. Must be O(1) for
     /// production-grade policies (the paper's complexity argument, §2.4).
-    fn on_request(&mut self, now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork;
+    /// The full request is passed so tenant-aware policies can dispatch
+    /// shadow work to the right per-tenant controller.
+    fn on_request(&mut self, req: &Request) -> PolicyWork;
 
     /// Called at each epoch boundary; returns the target instance count.
     fn decide(&mut self, now: TimeUs) -> u32;
@@ -49,6 +54,12 @@ pub trait EpochSizer {
     fn shadow_size(&self) -> Option<u64> {
         None
     }
+
+    /// Per-tenant timers, for policies that run one controller per tenant
+    /// (fig10). `None` for tenant-oblivious policies.
+    fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
+        None
+    }
 }
 
 /// Static baseline.
@@ -63,7 +74,7 @@ impl FixedSizer {
 }
 
 impl EpochSizer for FixedSizer {
-    fn on_request(&mut self, _now: TimeUs, _obj: ObjectId, _size: u64) -> PolicyWork {
+    fn on_request(&mut self, _req: &Request) -> PolicyWork {
         PolicyWork { units: 1, shadow_hit: None }
     }
 
@@ -114,8 +125,12 @@ impl TtlSizer {
 }
 
 impl EpochSizer for TtlSizer {
-    fn on_request(&mut self, now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork {
-        let out = self.vc.on_request(now, obj, size);
+    fn on_request(&mut self, req: &Request) -> PolicyWork {
+        // Tenant-scoped like the cluster's routing key, so a mixed trace
+        // replayed under the single-controller policy doesn't alias
+        // colliding tenant-local ids in the shadow cache.
+        let obj = crate::tenant::scoped_object(req.tenant, req.obj);
+        let out = self.vc.on_request(req.ts, obj, req.size_bytes());
         // hash + route (1) + vcache list ops (≈2) — constant.
         PolicyWork { units: 3, shadow_hit: Some(out.hit) }
     }
@@ -192,10 +207,13 @@ impl MrcSizer {
 }
 
 impl EpochSizer for MrcSizer {
-    fn on_request(&mut self, _now: TimeUs, obj: ObjectId, size: u64) -> PolicyWork {
-        let dist = self.profiler.record(obj, size);
+    fn on_request(&mut self, req: &Request) -> PolicyWork {
+        // The profiler works on the tenant-scoped id so cross-tenant key
+        // collisions don't corrupt reuse distances on mixed traces.
+        let obj = crate::tenant::scoped_object(req.tenant, req.obj);
+        let dist = self.profiler.record(obj, req.size_bytes());
         self.epoch_requests += 1;
-        self.mean_size.update(size as f64);
+        self.mean_size.update(req.size_bytes() as f64);
         // 1 route unit + O(log M) tree units: charge log2(tracked).
         let log_m = (self.profiler.tracked().max(2) as f64).log2() as u32;
         PolicyWork { units: 1 + log_m, shadow_hit: dist.map(|_| true) }
@@ -228,14 +246,15 @@ impl EpochSizer for MrcSizer {
     }
 }
 
-/// Build the configured sizer (Fixed/Ttl/Mrc — Analytic and IdealTtl are
-/// constructed by their owning modules).
+/// Build the configured sizer (Fixed/Ttl/Mrc/TenantTtl — Analytic and
+/// IdealTtl are constructed by their owning modules).
 pub fn make_sizer(cfg: &Config) -> Box<dyn EpochSizer> {
     use crate::config::PolicyKind::*;
     match cfg.scaler.policy {
         Fixed => Box::new(FixedSizer::new(cfg.scaler.fixed_instances)),
         Ttl => Box::new(TtlSizer::from_config(cfg)),
         Mrc => Box::new(MrcSizer::from_config(cfg)),
+        TenantTtl => Box::new(crate::tenant::TenantTtlSizer::from_config(cfg)),
         other => panic!("make_sizer cannot build {:?}; use its owning module", other),
     }
 }
@@ -246,15 +265,20 @@ mod tests {
     use crate::config::Config;
     use crate::{HOUR, SECOND};
 
+    fn req(ts: u64, obj: u64, size: u64) -> Request {
+        Request::new(ts, obj, size.min(u32::MAX as u64) as u32)
+    }
+
     #[test]
     fn fixed_sizer_is_constant() {
         let mut s = FixedSizer::new(8);
         for i in 0..100 {
-            s.on_request(i, i, 100);
+            s.on_request(&req(i, i, 100));
         }
         assert_eq!(s.decide(HOUR), 8);
         assert_eq!(s.decide(2 * HOUR), 8);
         assert_eq!(s.name(), "fixed");
+        assert!(s.tenant_ttls().is_none());
     }
 
     #[test]
@@ -266,7 +290,7 @@ mod tests {
         // Insert ~2.4 instances worth of distinct bytes.
         let obj_size = inst / 10;
         for i in 0..24u64 {
-            s.on_request(i * SECOND, i, obj_size);
+            s.on_request(&req(i * SECOND, i, obj_size));
         }
         let n = s.decide(30 * SECOND);
         assert_eq!(n, 2, "vsize={} inst={}", s.shadow_size().unwrap(), inst);
@@ -285,7 +309,7 @@ mod tests {
         // Overfill → clamped to 4.
         let inst = cfg.cost.instance.ram_bytes;
         for i in 0..100u64 {
-            s.on_request(i, i, inst / 5);
+            s.on_request(&req(i, i, inst / 5));
         }
         assert_eq!(s.decide(SECOND * 200), 4);
     }
@@ -306,7 +330,7 @@ mod tests {
         let obj_size = 3 * inst / nobj;
         for round in 0..20u64 {
             for i in 0..nobj {
-                s.on_request(round * SECOND, i, obj_size);
+                s.on_request(&req(round * SECOND, i, obj_size));
             }
         }
         let n = s.decide(HOUR);
@@ -323,31 +347,45 @@ mod tests {
         let mut s = MrcSizer::from_config(&cfg);
         // One-hit wonders only: no reuse, caching buys nothing → min size.
         for i in 0..20_000u64 {
-            s.on_request(i, i, 100_000);
+            s.on_request(&req(i, i, 100_000));
         }
         assert_eq!(s.decide(HOUR), cfg.scaler.min_instances);
+    }
+
+    #[test]
+    fn mrc_scopes_colliding_tenant_keys_apart() {
+        // The same object id requested by two tenants must profile as two
+        // distinct objects (no phantom reuse across tenants).
+        let cfg = Config::default();
+        let mut s = MrcSizer::from_config(&cfg);
+        let a = s.on_request(&req(0, 42, 100).with_tenant(1));
+        let b = s.on_request(&req(1, 42, 100).with_tenant(2));
+        assert_eq!(a.shadow_hit, None, "first touch is cold");
+        assert_eq!(b.shadow_hit, None, "other tenant's touch is still cold");
+        let c = s.on_request(&req(2, 42, 100).with_tenant(1));
+        assert_eq!(c.shadow_hit, Some(true), "same tenant re-touch reuses");
     }
 
     #[test]
     fn mrc_work_units_grow_logarithmically() {
         let cfg = Config::default();
         let mut s = MrcSizer::from_config(&cfg);
-        let w_small = s.on_request(0, 0, 100).units;
+        let w_small = s.on_request(&req(0, 0, 100)).units;
         for i in 1..10_000u64 {
-            s.on_request(i, i, 100);
+            s.on_request(&req(i, i, 100));
         }
-        let w_large = s.on_request(10_001, 10_001, 100).units;
+        let w_large = s.on_request(&req(10_001, 10_001, 100)).units;
         assert!(
             w_large >= w_small + 8,
             "w_small={w_small} w_large={w_large}"
         );
         // …while the TTL sizer stays constant:
         let mut t = TtlSizer::from_config(&cfg);
-        let a = t.on_request(0, 0, 100).units;
+        let a = t.on_request(&req(0, 0, 100)).units;
         for i in 1..10_000u64 {
-            t.on_request(i, i, 100);
+            t.on_request(&req(i, i, 100));
         }
-        let b = t.on_request(10_001, 10_001, 100).units;
+        let b = t.on_request(&req(10_001, 10_001, 100)).units;
         assert_eq!(a, b);
     }
 
@@ -358,6 +396,7 @@ mod tests {
             (PolicyKind::Fixed, "fixed"),
             (PolicyKind::Ttl, "ttl"),
             (PolicyKind::Mrc, "mrc"),
+            (PolicyKind::TenantTtl, "tenant_ttl"),
         ] {
             let s = make_sizer(&Config::with_policy(kind));
             assert_eq!(s.name(), name);

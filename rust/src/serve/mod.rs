@@ -5,11 +5,22 @@
 //! Line protocol over TCP (one request per line, ASCII):
 //!
 //! ```text
-//! GET <key> <size>\n   -> HIT | MISS | SPURIOUS\n
-//! STATS\n              -> one-line JSON counters\n
-//! EPOCH\n              -> RESIZED <n>\n      (forces an epoch boundary)
-//! QUIT\n               -> BYE\n (closes the connection)
+//! GET <key> <size>\n          -> HIT | MISS | SPURIOUS\n
+//! GET <tenant>/<key> <size>\n -> HIT | MISS | SPURIOUS\n   (tenant ∈ 0..65535)
+//! STATS\n                     -> one-line JSON, global counters\n
+//! STATS <tenant>\n            -> one-line JSON, that tenant's counters\n
+//! EPOCH\n                     -> RESIZED <n>\n      (forces an epoch boundary)
+//! QUIT\n                      -> BYE\n (closes the connection)
 //! ```
+//!
+//! Tenant-prefix parsing is enabled only when the server is tenant-aware
+//! (a `[tenantN]` roster in the config, or the `tenant_ttl` policy) — a
+//! legacy single-tenant deployment keeps its pre-tenant key semantics
+//! bit-for-bit, even for keys like `2023/07/28` whose first segment
+//! happens to be numeric. On a tenant-aware server, a key prefix that
+//! does not parse as a tenant id is still treated as a plain tenant-0
+//! key. Malformed input answers an `ERR …` line and keeps the connection
+//! open; only `QUIT` (or EOF) closes it.
 //!
 //! The server wraps the same [`Balancer`] the simulator uses — the
 //! request path is identical; only the transport differs. One OS thread
@@ -22,7 +33,7 @@ use crate::config::Config;
 use crate::cost::CostTracker;
 use crate::scaler::make_sizer;
 use crate::trace::Request;
-use crate::Result;
+use crate::{Result, TenantId};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -31,6 +42,10 @@ use std::sync::mpsc;
 pub struct ServerState {
     pub balancer: Balancer,
     pub costs: CostTracker,
+    /// Whether `GET <tenant>/<key>` prefixes are interpreted. Off for
+    /// legacy single-tenant configs so numeric-prefixed keys keep their
+    /// pre-tenant meaning.
+    tenant_routing: bool,
     start: std::time::Instant,
 }
 
@@ -41,9 +56,16 @@ impl ServerState {
             crate::config::PolicyKind::Fixed => cfg.scaler.fixed_instances,
             _ => cfg.scaler.min_instances.max(1),
         };
+        let mut costs = CostTracker::new(cfg.cost.clone());
+        for spec in &cfg.tenants {
+            costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+        }
+        let tenant_routing = !cfg.tenants.is_empty()
+            || cfg.scaler.policy == crate::config::PolicyKind::TenantTtl;
         ServerState {
             balancer: Balancer::from_config(cfg, sizer, initial),
-            costs: CostTracker::new(cfg.cost.clone()),
+            costs,
+            tenant_routing,
             start: std::time::Instant::now(),
         }
     }
@@ -53,19 +75,31 @@ impl ServerState {
     }
 
     /// Handle one protocol line; returns the response line, or `None` to
-    /// close the connection.
+    /// close the connection (only `QUIT` does).
     pub fn handle_line(&mut self, line: &str) -> Option<String> {
         let mut parts = line.split_ascii_whitespace();
         match parts.next() {
             Some("GET") => {
-                let key = parts.next()?;
+                let token = match parts.next() {
+                    Some(t) => t,
+                    None => return Some("ERR missing key".to_string()),
+                };
                 let size: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+                let (tenant, key) = if self.tenant_routing {
+                    split_tenant_key(token)
+                } else {
+                    (0, token)
+                };
                 // Hash arbitrary string keys onto the ObjectId space.
                 let obj = key
                     .parse::<u64>()
                     .unwrap_or_else(|_| crate::mix64(fxhash_str(key)));
-                let req =
-                    Request { ts: self.now_us(), obj, size: size.min(u32::MAX as u64) as u32 };
+                let req = Request {
+                    ts: self.now_us(),
+                    obj,
+                    size: size.min(u32::MAX as u64) as u32,
+                    tenant,
+                };
                 let served = self.balancer.handle(&req, &mut self.costs);
                 Some(
                     if served.hit {
@@ -78,18 +112,29 @@ impl ServerState {
                     .to_string(),
                 )
             }
-            Some("STATS") => Some(format!(
-                "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{}}}",
-                self.balancer.requests,
-                self.balancer.misses,
-                self.balancer.spurious_misses,
-                self.balancer.cluster.len(),
-                self.costs.miss_total(),
-                self.balancer
-                    .ttl_secs()
-                    .map(|t| format!("{t:.3}"))
-                    .unwrap_or_else(|| "null".into()),
-            )),
+            Some("STATS") => match parts.next() {
+                None => Some(format!(
+                    "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
+                    self.balancer.requests,
+                    self.balancer.misses,
+                    self.balancer.spurious_misses,
+                    self.balancer.cluster.len(),
+                    self.costs.miss_total(),
+                    self.balancer
+                        .ttl_secs()
+                        .map(|t| format!("{t:.3}"))
+                        .unwrap_or_else(|| "null".into()),
+                    self.balancer
+                        .tenant_stats()
+                        .iter()
+                        .filter(|hm| hm.total() > 0)
+                        .count(),
+                )),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.tenant_stats_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
             Some("EPOCH") => {
                 let n = self.balancer.end_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
@@ -99,6 +144,39 @@ impl ServerState {
             None => Some("ERR empty".to_string()),
         }
     }
+
+    /// One-line JSON for `STATS <tenant>`.
+    fn tenant_stats_line(&self, tenant: TenantId) -> String {
+        let hm = self.balancer.tenant_stats_of(tenant);
+        let ledger = self.costs.tenant_ledger(tenant);
+        let ttl = self
+            .balancer
+            .tenant_ttls()
+            .and_then(|v| v.into_iter().find(|(id, _)| *id == tenant))
+            .map(|(_, t)| format!("{t:.3}"))
+            .unwrap_or_else(|| "null".into());
+        format!(
+            "{{\"tenant\":{},\"requests\":{},\"misses\":{},\"miss_cost\":{:.9},\"ttl_secs\":{}}}",
+            tenant,
+            hm.total(),
+            hm.misses,
+            ledger.miss_dollars,
+            ttl,
+        )
+    }
+}
+
+/// Split `5/alpha` into `(5, "alpha")`; tokens without a parseable tenant
+/// prefix are plain tenant-0 keys.
+fn split_tenant_key(token: &str) -> (TenantId, &str) {
+    if let Some((prefix, rest)) = token.split_once('/') {
+        if !rest.is_empty() {
+            if let Ok(t) = prefix.parse::<TenantId>() {
+                return (t, rest);
+            }
+        }
+    }
+    (0, token)
 }
 
 /// Deterministic string hash (FNV-1a) for non-numeric keys.
@@ -133,9 +211,10 @@ pub fn spawn_state(cfg: Config) -> StateTx {
 pub fn serve(cfg: Config, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!(
-        "elastictl serve: listening on {} (policy={})",
+        "elastictl serve: listening on {} (policy={}, tenants={})",
         listener.local_addr()?,
-        cfg.scaler.policy.as_str()
+        cfg.scaler.policy.as_str(),
+        if cfg.tenants.is_empty() { 1 } else { cfg.tenants.len() },
     );
     let tx = spawn_state(cfg);
     for stream in listener.incoming() {
@@ -174,6 +253,7 @@ fn handle_conn(socket: TcpStream, tx: StateTx) -> Result<()> {
 mod tests {
     use super::*;
     use crate::config::{Config, PolicyKind};
+    use crate::tenant::TenantSpec;
 
     fn state(policy: PolicyKind) -> ServerState {
         ServerState::new(&Config::with_policy(policy))
@@ -195,6 +275,7 @@ mod tests {
         let stats = st.handle_line("STATS").unwrap();
         assert!(stats.contains("\"requests\":2"), "{stats}");
         assert!(stats.contains("\"misses\":2"));
+        assert!(stats.contains("\"tenants\":1"), "{stats}");
         let resp = st.handle_line("EPOCH").unwrap();
         assert!(resp.starts_with("RESIZED "), "{resp}");
     }
@@ -204,9 +285,12 @@ mod tests {
         let mut st = state(PolicyKind::Fixed);
         assert!(st.handle_line("FROB x").unwrap().starts_with("ERR"));
         assert!(st.handle_line("").unwrap().starts_with("ERR"));
+        // A malformed GET must answer an error and keep the connection
+        // open — only QUIT closes it.
+        assert_eq!(st.handle_line("GET").unwrap(), "ERR missing key");
+        assert_eq!(st.handle_line("GET k 10").unwrap(), "MISS");
+        assert!(st.handle_line("STATS nope").unwrap().starts_with("ERR bad tenant"));
         assert!(st.handle_line("QUIT").is_none());
-        // GET with no key is malformed → connection closes (None).
-        assert!(st.handle_line("GET").is_none());
     }
 
     #[test]
@@ -216,6 +300,68 @@ mod tests {
         assert_eq!(st.handle_line("GET beta 10").unwrap(), "MISS");
         assert_eq!(st.handle_line("GET alpha 10").unwrap(), "HIT");
         assert_eq!(st.handle_line("GET beta 10").unwrap(), "HIT");
+    }
+
+    #[test]
+    fn tenant_keys_route_to_distinct_objects() {
+        // Tenant routing is on for the tenant policy (or a tenant roster).
+        let mut st = state(PolicyKind::TenantTtl);
+        assert_eq!(st.handle_line("GET 1/alpha 10").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET 2/alpha 10").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET 1/alpha 10").unwrap(), "HIT");
+        assert_eq!(st.handle_line("GET 2/alpha 10").unwrap(), "HIT");
+        // Bare key == tenant 0; a non-numeric prefix stays a plain key.
+        assert_eq!(st.handle_line("GET alpha 10").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET a/b 10").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET a/b 10").unwrap(), "HIT");
+    }
+
+    #[test]
+    fn legacy_servers_keep_numeric_slash_keys_verbatim() {
+        // A single-tenant (legacy-config) server must not reinterpret
+        // numeric-prefixed keys as tenant routes: `2023/07/28` is one
+        // tenant-0 key, exactly as before the tenant protocol existed.
+        let mut st = state(PolicyKind::Ttl);
+        assert_eq!(st.handle_line("GET 2023/07/28 10").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET 2023/07/28 10").unwrap(), "HIT");
+        let stats = st.handle_line("STATS 2023").unwrap();
+        assert!(
+            stats.contains("\"requests\":0"),
+            "no phantom tenant may accrue traffic: {stats}"
+        );
+    }
+
+    #[test]
+    fn per_tenant_stats_line() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.tenants = vec![
+            TenantSpec::new(1, "api").with_multiplier(4.0),
+            TenantSpec::new(2, "batch").with_multiplier(0.5),
+        ];
+        let mut st = ServerState::new(&cfg);
+        st.handle_line("GET 1/k1 100");
+        st.handle_line("GET 1/k1 100");
+        st.handle_line("GET 2/k9 100");
+        let s1 = st.handle_line("STATS 1").unwrap();
+        assert!(s1.contains("\"tenant\":1"), "{s1}");
+        assert!(s1.contains("\"requests\":2"), "{s1}");
+        assert!(s1.contains("\"misses\":1"), "{s1}");
+        let s2 = st.handle_line("STATS 2").unwrap();
+        assert!(s2.contains("\"requests\":1"), "{s2}");
+        // Weighted billing: tenant 1's single miss costs 8× tenant 2's.
+        let grab = |s: &str| -> f64 {
+            let i = s.find("\"miss_cost\":").unwrap() + "\"miss_cost\":".len();
+            s[i..].split(',').next().unwrap().parse().unwrap()
+        };
+        let (m1, m2) = (grab(&s1), grab(&s2));
+        // Allow slack for the 9-decimal rendering of ~1e-7 dollar values.
+        assert!(
+            (m1 / m2 - 8.0).abs() < 0.2,
+            "m1={m1} m2={m2} (want 4.0/0.5 = 8×)"
+        );
+        // A quiet tenant reads as zeros, not an error.
+        let s9 = st.handle_line("STATS 9").unwrap();
+        assert!(s9.contains("\"requests\":0"), "{s9}");
     }
 
     #[test]
@@ -232,13 +378,14 @@ mod tests {
             })
         };
         let mut sock = TcpStream::connect(addr).unwrap();
-        sock.write_all(b"GET obj1 500\nGET obj1 500\nSTATS\nQUIT\n")
+        sock.write_all(b"GET obj1 500\nGET obj1 500\nGET 3/obj1 500\nSTATS\nQUIT\n")
             .unwrap();
         let mut lines = BufReader::new(sock.try_clone().unwrap()).lines();
         assert_eq!(lines.next().unwrap().unwrap(), "MISS");
         assert_eq!(lines.next().unwrap().unwrap(), "HIT");
+        assert_eq!(lines.next().unwrap().unwrap(), "MISS");
         let stats = lines.next().unwrap().unwrap();
-        assert!(stats.contains("\"requests\":2"));
+        assert!(stats.contains("\"requests\":3"));
         assert_eq!(lines.next().unwrap().unwrap(), "BYE");
         srv.join().unwrap();
     }

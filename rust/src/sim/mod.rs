@@ -10,7 +10,21 @@ use crate::metrics::TimeSeries;
 use crate::scaler::{make_sizer, EpochSizer};
 use crate::trace::RequestSource;
 use crate::vcache::VirtualCache;
-use crate::TimeUs;
+use crate::{TenantId, TimeUs};
+
+/// Per-tenant slice of a run: who asked for what, who missed, what it
+/// cost, and where that tenant's timer converged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSummary {
+    pub tenant: TenantId,
+    pub requests: u64,
+    pub misses: u64,
+    /// Weighted miss dollars attributed to this tenant.
+    pub miss_dollars: f64,
+    /// Final per-tenant TTL, when the policy ran one controller per
+    /// tenant.
+    pub ttl_secs: Option<f64>,
+}
 
 /// Result of one policy run over a trace.
 #[derive(Debug)]
@@ -33,6 +47,8 @@ pub struct SimResult {
     pub shadow_series: TimeSeries,
     /// Fig. 9 balance tracker.
     pub balance: BalanceTracker,
+    /// Per-tenant breakdown (one row per tenant that sent traffic).
+    pub tenants: Vec<TenantSummary>,
     pub total_cost: f64,
     pub storage_cost: f64,
     pub miss_cost: f64,
@@ -74,6 +90,9 @@ pub fn run_policy(
     let name = sizer.name().to_string();
     let mut balancer = Balancer::from_config(cfg, sizer, initial_instances);
     let mut costs = CostTracker::new(cfg.cost.clone());
+    for spec in &cfg.tenants {
+        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+    }
     let mut balance = BalanceTracker::new();
     let mut ttl_series = TimeSeries::new(format!("{name}_ttl_secs"));
     let mut shadow_series = TimeSeries::new(format!("{name}_shadow_bytes"));
@@ -109,6 +128,28 @@ pub fn run_policy(
     balance.record(epoch_end, &balancer.cluster.balance_snapshot());
     costs.end_epoch(epoch_end.max(last_ts), active_instances);
 
+    // Per-tenant breakdown: requests/misses from the balancer, weighted
+    // dollars from the tracker, final timers from the policy (if any).
+    let ttls = balancer.tenant_ttls();
+    let mut tenants = Vec::new();
+    for (i, hm) in balancer.tenant_stats().iter().enumerate() {
+        if hm.total() == 0 {
+            continue;
+        }
+        let t = i as TenantId;
+        let ledger = costs.tenant_ledger(t);
+        let ttl_secs = ttls
+            .as_ref()
+            .and_then(|v| v.iter().find(|(id, _)| *id == t).map(|&(_, x)| x));
+        tenants.push(TenantSummary {
+            tenant: t,
+            requests: hm.total(),
+            misses: hm.misses,
+            miss_dollars: ledger.miss_dollars,
+            ttl_secs,
+        });
+    }
+
     SimResult {
         policy: name,
         requests: balancer.requests,
@@ -123,6 +164,7 @@ pub fn run_policy(
         ttl_series,
         shadow_series,
         balance,
+        tenants,
         total_cost: costs.total(),
         storage_cost: costs.storage_total(),
         miss_cost: costs.miss_total(),
@@ -152,6 +194,9 @@ pub fn run_ideal_ttl(cfg: &Config, source: &mut dyn RequestSource) -> SimResult 
     let cost_cfg: CostConfig = cfg.cost.clone();
     let mut vc = VirtualCache::new(&cfg.controller, cost_cfg.clone());
     let mut costs = CostTracker::new(cost_cfg.clone());
+    for spec in &cfg.tenants {
+        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+    }
     let mut ttl_series = TimeSeries::new("ideal_ttl_ttl_secs");
     let mut shadow_series = TimeSeries::new("ideal_ttl_vsize_bytes");
     let per_byte_sec = cost_cfg.storage_cost_per_byte_sec();
@@ -171,11 +216,14 @@ pub fn run_ideal_ttl(cfg: &Config, source: &mut dyn RequestSource) -> SimResult 
             costs.end_epoch_vertical(epoch_end);
             epoch_end += epoch_us;
         }
-        let out = vc.on_request(req.ts, req.obj, req.size_bytes());
+        // The ideal cache stays per-object; scope keys so multi-tenant
+        // traces don't alias across tenants.
+        let obj = crate::tenant::scoped_object(req.tenant, req.obj);
+        let out = vc.on_request(req.ts, obj, req.size_bytes());
         requests += 1;
         if !out.hit {
             misses += 1;
-            costs.record_miss(req.size_bytes());
+            costs.record_miss_for(req.tenant, req.size_bytes());
         }
         if requests % SAMPLE_EVERY == 0 {
             ttl_series.push(req.ts, out.ttl_secs);
@@ -198,6 +246,7 @@ pub fn run_ideal_ttl(cfg: &Config, source: &mut dyn RequestSource) -> SimResult 
         ttl_series,
         shadow_series,
         balance: BalanceTracker::new(),
+        tenants: Vec::new(),
         total_cost: costs.total(),
         storage_cost: costs.storage_total(),
         miss_cost: costs.miss_total(),
@@ -287,6 +336,40 @@ mod tests {
     }
 
     #[test]
+    fn tenant_ttl_run_reports_per_tenant_summaries() {
+        use crate::tenant::TenantSpec;
+        use crate::trace::TenantMux;
+        let mut cfg = tiny_cfg(PolicyKind::TenantTtl);
+        cfg.tenants = vec![
+            TenantSpec::new(0, "hot").with_multiplier(2.0),
+            TenantSpec::new(1, "cold").with_multiplier(0.5),
+        ];
+        let mut mux = TenantMux::new();
+        let mut s0 = SynthConfig::tiny();
+        s0.mean_rate = 60.0;
+        s0.seed = 1;
+        let mut s1 = SynthConfig::tiny();
+        s1.mean_rate = 40.0;
+        s1.seed = 2;
+        mux.add(0, Box::new(SynthGenerator::new(s0)));
+        mux.add(1, Box::new(SynthGenerator::new(s1)));
+        let mut src = VecSource::new(mux.generate());
+        let res = run(&cfg, &mut src);
+        assert_eq!(res.policy, "tenant_ttl");
+        assert_eq!(res.tenants.len(), 2, "{:?}", res.tenants);
+        for t in &res.tenants {
+            assert!(t.requests > 100, "{t:?}");
+            assert!(t.ttl_secs.is_some(), "{t:?}");
+            assert!(t.miss_dollars > 0.0, "{t:?}");
+        }
+        let total_reqs: u64 = res.tenants.iter().map(|t| t.requests).sum();
+        assert_eq!(total_reqs, res.requests);
+        // Weighted billing: per-tenant dollars sum to the aggregate bill.
+        let sum: f64 = res.tenants.iter().map(|t| t.miss_dollars).sum();
+        assert!((sum - res.miss_cost).abs() < 1e-9);
+    }
+
+    #[test]
     fn epoch_billing_counts_all_epochs() {
         // A trace spanning 3 epochs must produce ≥ 3 epoch closures even
         // with long request gaps.
@@ -296,9 +379,9 @@ mod tests {
             c
         };
         let reqs = vec![
-            crate::trace::Request { ts: 0, obj: 1, size: 100 },
-            crate::trace::Request { ts: 2 * HOUR + MINUTE, obj: 2, size: 100 },
-            crate::trace::Request { ts: 2 * HOUR + 2 * MINUTE, obj: 1, size: 100 },
+            crate::trace::Request::new(0, 1, 100),
+            crate::trace::Request::new(2 * HOUR + MINUTE, 2, 100),
+            crate::trace::Request::new(2 * HOUR + 2 * MINUTE, 1, 100),
         ];
         let mut src = VecSource::new(reqs);
         let res = run(&cfg, &mut src);

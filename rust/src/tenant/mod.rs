@@ -1,0 +1,659 @@
+//! Multi-tenant cost-aware provisioning (Memshare-style, Cidon et al.):
+//! one shared elastic cluster fronting many applications with different
+//! miss costs and traffic patterns.
+//!
+//! The paper's controller optimizes a single aggregate workload. Real
+//! in-memory cache deployments are multi-tenant, and the dollars at stake
+//! differ wildly per tenant — a miss that re-runs a pricey backend query
+//! is worth orders of magnitude more than a miss on a batch scan. This
+//! module adds the tenant dimension without giving up the paper's O(1)
+//! request path:
+//!
+//! * [`TenantRegistry`] — per-tenant id, miss-cost multiplier and traffic
+//!   class ([`TenantSpec`], [`TrafficClass`]).
+//! * [`ControllerBank`] — one §4 stochastic-approximation
+//!   [`VirtualCache`] per tenant. Each controller sees its tenant's
+//!   *scaled* miss cost, so each timer `T_i` converges to that tenant's
+//!   own storage/miss balance point.
+//! * [`Arbiter`] — at each epoch boundary, folds the per-tenant shadow
+//!   sizes into the shared cluster sizing decision. Cost awareness is
+//!   embedded in the demands themselves (an expensive-miss tenant's
+//!   controller holds ghosts longer, so its shadow demand is bigger) —
+//!   that is what steers the instance count. When the aggregate demand
+//!   exceeds the cluster cap, the arbiter additionally *attributes* the
+//!   capped capacity to tenants in descending miss-cost order; today
+//!   these grants are reporting/diagnostics (surfaced via
+//!   [`TenantTtlSizer::allocations`]), not a feedback signal into the
+//!   controllers — per-tenant admission enforcement is a ROADMAP item.
+//! * [`TenantTtlSizer`] — the [`EpochSizer`] gluing the three together;
+//!   [`crate::balancer::Balancer`] dispatches each request's shadow
+//!   update to the right controller via the request's tenant id.
+//!
+//! Physical placement stays tenant-agnostic: the balancer routes on
+//! `(tenant, key)` by folding the tenant into the hash-slot key
+//! ([`scoped_object`]), so tenants share instances but never collide.
+
+use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
+use crate::scaler::{EpochSizer, PolicyWork};
+use crate::trace::Request;
+use crate::vcache::VirtualCache;
+use crate::{ObjectId, TenantId, TimeUs};
+
+/// Traffic class of a tenant — a coarse service-level label, reported in
+/// ledgers and usable by operators to pick miss-cost multipliers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    /// Latency-sensitive request/response traffic (misses are expensive).
+    Interactive,
+    /// Ordinary web/CDN traffic.
+    Standard,
+    /// Throughput-oriented batch/scan traffic (misses are cheap).
+    Bulk,
+}
+
+impl TrafficClass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrafficClass::Interactive => "interactive",
+            TrafficClass::Standard => "standard",
+            TrafficClass::Bulk => "bulk",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<TrafficClass> {
+        Ok(match s {
+            "interactive" => TrafficClass::Interactive,
+            "standard" => TrafficClass::Standard,
+            "bulk" => TrafficClass::Bulk,
+            other => anyhow::bail!("unknown traffic class {other} (interactive|standard|bulk)"),
+        })
+    }
+}
+
+/// Static description of one tenant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub id: TenantId,
+    pub name: String,
+    /// Multiplier applied to the catalog per-miss cost for this tenant
+    /// (its misses cost `multiplier × m_o` dollars).
+    pub miss_cost_multiplier: f64,
+    pub class: TrafficClass,
+}
+
+impl TenantSpec {
+    pub fn new(id: TenantId, name: impl Into<String>) -> TenantSpec {
+        TenantSpec {
+            id,
+            name: name.into(),
+            miss_cost_multiplier: 1.0,
+            class: TrafficClass::Standard,
+        }
+    }
+
+    pub fn with_multiplier(mut self, m: f64) -> TenantSpec {
+        self.miss_cost_multiplier = m;
+        self
+    }
+
+    pub fn with_class(mut self, class: TrafficClass) -> TenantSpec {
+        self.class = class;
+        self
+    }
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec::new(0, "default")
+    }
+}
+
+/// The set of known tenants. Lookup is a linear scan — registries hold a
+/// handful of tenants, and the hot path goes through [`ControllerBank`]'s
+/// dense index instead.
+#[derive(Debug, Clone, Default)]
+pub struct TenantRegistry {
+    specs: Vec<TenantSpec>,
+}
+
+impl TenantRegistry {
+    pub fn new() -> TenantRegistry {
+        TenantRegistry { specs: Vec::new() }
+    }
+
+    /// A registry holding only the default tenant 0 (the single-workload
+    /// configuration every pre-tenant trace maps onto).
+    pub fn single_tenant() -> TenantRegistry {
+        TenantRegistry { specs: vec![TenantSpec::default()] }
+    }
+
+    /// Build from specs; a later spec with a duplicate id replaces the
+    /// earlier one.
+    pub fn from_specs(specs: impl IntoIterator<Item = TenantSpec>) -> TenantRegistry {
+        let mut reg = TenantRegistry::new();
+        for s in specs {
+            reg.register(s);
+        }
+        reg
+    }
+
+    pub fn register(&mut self, spec: TenantSpec) {
+        match self.specs.iter_mut().find(|s| s.id == spec.id) {
+            Some(slot) => *slot = spec,
+            None => self.specs.push(spec),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TenantSpec> {
+        self.specs.iter()
+    }
+
+    pub fn get(&self, id: TenantId) -> Option<&TenantSpec> {
+        self.specs.iter().find(|s| s.id == id)
+    }
+
+    /// Miss-cost multiplier for `id` (1.0 for unknown tenants).
+    pub fn multiplier(&self, id: TenantId) -> f64 {
+        self.get(id).map(|s| s.miss_cost_multiplier).unwrap_or(1.0)
+    }
+}
+
+/// Fold a tenant id into an object id so tenants sharing physical
+/// instances never collide on keys, while tenant 0 (single-workload
+/// traces) keeps its ids — and therefore its routing — bit-for-bit
+/// unchanged. XOR with a per-tenant mixed constant is a bijection per
+/// tenant, so it preserves each tenant's key-space structure.
+#[inline]
+pub fn scoped_object(tenant: TenantId, obj: ObjectId) -> ObjectId {
+    if tenant == 0 {
+        obj
+    } else {
+        obj ^ crate::mix64(tenant as u64)
+    }
+}
+
+/// One §4 virtual-TTL-cache controller per tenant, with O(1) dispatch by
+/// tenant id (dense index vector; unknown tenants are admitted lazily
+/// with default cost).
+pub struct ControllerBank {
+    ctrl: ControllerConfig,
+    /// Base (multiplier-1) cost catalog.
+    cost: CostConfig,
+    registry: TenantRegistry,
+    /// `(tenant, controller)` in registration order.
+    slots: Vec<(TenantId, VirtualCache)>,
+    /// tenant id → slot index (`u32::MAX` = absent), grown on demand.
+    index: Vec<u32>,
+}
+
+impl ControllerBank {
+    pub fn new(ctrl: &ControllerConfig, cost: CostConfig, registry: TenantRegistry) -> Self {
+        let mut bank = ControllerBank {
+            ctrl: ctrl.clone(),
+            cost,
+            registry: TenantRegistry::new(),
+            slots: Vec::new(),
+            index: Vec::new(),
+        };
+        for spec in registry.iter() {
+            bank.admit(spec.clone());
+        }
+        bank
+    }
+
+    /// Per-tenant cost view: the miss side is scaled by the tenant's
+    /// multiplier, which is what makes each controller converge to its
+    /// own `T_i` (eq. 7's corrections are `λ̂·m_i − c_i`).
+    fn scaled_cost(&self, multiplier: f64) -> CostConfig {
+        let mut c = self.cost.clone();
+        c.miss_cost_dollars *= multiplier;
+        c
+    }
+
+    fn admit(&mut self, spec: TenantSpec) {
+        let vc = VirtualCache::new(&self.ctrl, self.scaled_cost(spec.miss_cost_multiplier));
+        let slot = self.slots.len() as u32;
+        let id = spec.id as usize;
+        if self.index.len() <= id {
+            self.index.resize(id + 1, u32::MAX);
+        }
+        self.index[id] = slot;
+        self.slots.push((spec.id, vc));
+        self.registry.register(spec);
+    }
+
+    pub fn registry(&self) -> &TenantRegistry {
+        &self.registry
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The controller for `tenant`, creating one (default spec, multiplier
+    /// 1.0) the first time an unregistered tenant shows up.
+    #[inline]
+    pub fn controller_mut(&mut self, tenant: TenantId) -> &mut VirtualCache {
+        let id = tenant as usize;
+        let slot = self.index.get(id).copied().unwrap_or(u32::MAX);
+        let slot = if slot == u32::MAX {
+            self.admit(TenantSpec::new(tenant, format!("tenant{tenant}")));
+            self.slots.len() as u32 - 1
+        } else {
+            slot
+        };
+        &mut self.slots[slot as usize].1
+    }
+
+    pub fn get(&self, tenant: TenantId) -> Option<&VirtualCache> {
+        let slot = self.index.get(tenant as usize).copied()?;
+        if slot == u32::MAX {
+            return None;
+        }
+        Some(&self.slots[slot as usize].1)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (TenantId, &VirtualCache)> {
+        self.slots.iter().map(|(t, vc)| (*t, vc))
+    }
+
+    /// Run expiry (and any pending controller updates) on every tenant.
+    pub fn expire_all(&mut self, now: TimeUs) {
+        for (_, vc) in &mut self.slots {
+            vc.expire(now);
+        }
+    }
+
+    /// Sum of per-tenant virtual sizes, bytes.
+    pub fn total_vsize(&self) -> u64 {
+        self.slots.iter().map(|(_, vc)| vc.vsize()).sum()
+    }
+
+    /// `(tenant, T_i seconds)` for every tenant.
+    pub fn ttls(&self) -> Vec<(TenantId, f64)> {
+        self.slots.iter().map(|(t, vc)| (*t, vc.ttl_secs())).collect()
+    }
+}
+
+/// One tenant's share of an epoch sizing decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantAllocation {
+    pub tenant: TenantId,
+    /// Shadow (virtual cache) demand at the epoch boundary, bytes.
+    pub demand_bytes: u64,
+    /// Bytes granted by the arbiter (= demand unless the cap binds).
+    pub granted_bytes: u64,
+    /// Miss-cost weight used for contention ordering.
+    pub weight: f64,
+}
+
+/// Cost-aware capacity arbiter: Algorithm 2's `ROUND(VC.size / S_p)`
+/// generalized to the multi-tenant aggregate, with weighted trimming when
+/// the instance cap binds.
+#[derive(Debug, Clone)]
+pub struct Arbiter {
+    instance_bytes: u64,
+    min_instances: u32,
+    max_instances: u32,
+}
+
+impl Arbiter {
+    pub fn new(instance_bytes: u64, scaler: &ScalerConfig) -> Arbiter {
+        Arbiter {
+            instance_bytes: instance_bytes.max(1),
+            min_instances: scaler.min_instances.max(1),
+            max_instances: scaler.max_instances.max(1),
+        }
+    }
+
+    /// Fold `(tenant, demand_bytes, weight)` triples into the next cluster
+    /// size plus the per-tenant grants. The size is
+    /// `clamp(round(Σdemand / S_p))`; grants equal demands unless the
+    /// aggregate exceeds the cap, in which case the capped capacity is
+    /// attributed to higher-weight (more miss-cost-sensitive) tenants
+    /// first. Grants are an accounting/reporting output — enforcement
+    /// (capping what a squeezed tenant may actually occupy) is left to a
+    /// future admission layer (see ROADMAP).
+    pub fn decide(&self, demands: &[(TenantId, u64, f64)]) -> (u32, Vec<TenantAllocation>) {
+        let total: u64 = demands.iter().map(|&(_, d, _)| d).sum();
+        let raw = (total as f64 / self.instance_bytes as f64).round() as u32;
+        let n = raw.clamp(self.min_instances, self.max_instances);
+
+        let mut allocs: Vec<TenantAllocation> = demands
+            .iter()
+            .map(|&(tenant, demand_bytes, weight)| TenantAllocation {
+                tenant,
+                demand_bytes,
+                granted_bytes: demand_bytes,
+                weight,
+            })
+            .collect();
+        if raw > self.max_instances {
+            // The cap binds: hand out capacity in descending miss-cost
+            // weight (ties: bigger demand first), so the squeeze lands on
+            // the tenants whose misses are cheapest.
+            let mut order: Vec<usize> = (0..allocs.len()).collect();
+            order.sort_by(|&a, &b| {
+                allocs[b]
+                    .weight
+                    .partial_cmp(&allocs[a].weight)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(allocs[b].demand_bytes.cmp(&allocs[a].demand_bytes))
+            });
+            let mut remaining = self.max_instances as u64 * self.instance_bytes;
+            for i in order {
+                let grant = allocs[i].demand_bytes.min(remaining);
+                allocs[i].granted_bytes = grant;
+                remaining -= grant;
+            }
+        }
+        (n, allocs)
+    }
+}
+
+/// Multi-tenant version of Algorithm 2: the balancer feeds each request to
+/// its tenant's controller; the arbiter sizes the shared cluster from the
+/// aggregate shadow demand at each epoch boundary.
+pub struct TenantTtlSizer {
+    bank: ControllerBank,
+    arbiter: Arbiter,
+    last_allocations: Vec<TenantAllocation>,
+}
+
+impl TenantTtlSizer {
+    pub fn new(
+        ctrl: &ControllerConfig,
+        cost: CostConfig,
+        registry: TenantRegistry,
+        instance_bytes: u64,
+        scaler: &ScalerConfig,
+    ) -> Self {
+        TenantTtlSizer {
+            bank: ControllerBank::new(ctrl, cost, registry),
+            arbiter: Arbiter::new(instance_bytes, scaler),
+            last_allocations: Vec::new(),
+        }
+    }
+
+    /// Build from config; an empty `cfg.tenants` list falls back to the
+    /// single default tenant (plus lazy admission of any ids the trace
+    /// actually carries).
+    pub fn from_config(cfg: &Config) -> Self {
+        let registry = if cfg.tenants.is_empty() {
+            TenantRegistry::single_tenant()
+        } else {
+            TenantRegistry::from_specs(cfg.tenants.iter().cloned())
+        };
+        Self::new(
+            &cfg.controller,
+            cfg.cost.clone(),
+            registry,
+            cfg.cost.instance.ram_bytes,
+            &cfg.scaler,
+        )
+    }
+
+    pub fn bank(&self) -> &ControllerBank {
+        &self.bank
+    }
+
+    /// Per-tenant grants from the most recent epoch decision.
+    pub fn allocations(&self) -> &[TenantAllocation] {
+        &self.last_allocations
+    }
+}
+
+impl EpochSizer for TenantTtlSizer {
+    fn on_request(&mut self, req: &Request) -> PolicyWork {
+        let vc = self.bank.controller_mut(req.tenant);
+        let out = vc.on_request(req.ts, req.obj, req.size_bytes());
+        // hash + route (1) + bank dispatch (1) + vcache list ops (≈2):
+        // constant, one unit over the single-tenant TTL path.
+        PolicyWork { units: 4, shadow_hit: Some(out.hit) }
+    }
+
+    fn decide(&mut self, now: TimeUs) -> u32 {
+        self.bank.expire_all(now);
+        let demands: Vec<(TenantId, u64, f64)> = self
+            .bank
+            .iter()
+            .map(|(t, vc)| (t, vc.vsize(), self.bank.registry().multiplier(t)))
+            .collect();
+        let (n, allocs) = self.arbiter.decide(&demands);
+        self.last_allocations = allocs;
+        n
+    }
+
+    fn name(&self) -> &'static str {
+        "tenant_ttl"
+    }
+
+    /// Demand-weighted mean of the per-tenant timers (diagnostic series).
+    fn ttl_secs(&self) -> Option<f64> {
+        let mut wsum = 0.0;
+        let mut tsum = 0.0;
+        let mut count = 0usize;
+        let mut plain = 0.0;
+        for (_, vc) in self.bank.iter() {
+            let w = vc.vsize() as f64;
+            wsum += w;
+            tsum += w * vc.ttl_secs();
+            plain += vc.ttl_secs();
+            count += 1;
+        }
+        if count == 0 {
+            None
+        } else if wsum > 0.0 {
+            Some(tsum / wsum)
+        } else {
+            Some(plain / count as f64)
+        }
+    }
+
+    fn shadow_size(&self) -> Option<u64> {
+        Some(self.bank.total_vsize())
+    }
+
+    fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
+        Some(self.bank.ttls())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::{HOUR, SECOND};
+
+    fn specs_3() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec::new(0, "api")
+                .with_multiplier(3.0)
+                .with_class(TrafficClass::Interactive),
+            TenantSpec::new(1, "web"),
+            TenantSpec::new(2, "batch")
+                .with_multiplier(0.3)
+                .with_class(TrafficClass::Bulk),
+        ]
+    }
+
+    #[test]
+    fn registry_lookup_and_override() {
+        let mut reg = TenantRegistry::from_specs(specs_3());
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.get(0).unwrap().name, "api");
+        assert_eq!(reg.multiplier(2), 0.3);
+        assert_eq!(reg.multiplier(999), 1.0);
+        reg.register(TenantSpec::new(1, "web2").with_multiplier(2.0));
+        assert_eq!(reg.len(), 3, "duplicate id must replace, not append");
+        assert_eq!(reg.get(1).unwrap().name, "web2");
+        assert_eq!(reg.multiplier(1), 2.0);
+    }
+
+    #[test]
+    fn traffic_class_round_trip() {
+        for c in [
+            TrafficClass::Interactive,
+            TrafficClass::Standard,
+            TrafficClass::Bulk,
+        ] {
+            assert_eq!(TrafficClass::parse(c.as_str()).unwrap(), c);
+        }
+        assert!(TrafficClass::parse("nope").is_err());
+    }
+
+    #[test]
+    fn scoped_object_separates_tenants_but_not_tenant_zero() {
+        // Tenant 0 is the identity: legacy routing is unchanged.
+        for obj in 0..100u64 {
+            assert_eq!(scoped_object(0, obj), obj);
+        }
+        // Distinct tenants map the same key apart, bijectively per tenant.
+        let a: std::collections::HashSet<u64> =
+            (0..1000u64).map(|o| scoped_object(1, o)).collect();
+        assert_eq!(a.len(), 1000);
+        let collisions = (0..1000u64)
+            .filter(|&o| scoped_object(1, o) == scoped_object(2, o))
+            .count();
+        assert_eq!(collisions, 0);
+    }
+
+    #[test]
+    fn bank_dispatches_per_tenant_and_admits_strays() {
+        let cfg = Config::default();
+        let mut bank = ControllerBank::new(
+            &cfg.controller,
+            cfg.cost.clone(),
+            TenantRegistry::from_specs(specs_3()),
+        );
+        assert_eq!(bank.len(), 3);
+        bank.controller_mut(0).on_request(0, 7, 1000);
+        bank.controller_mut(2).on_request(0, 7, 500);
+        assert_eq!(bank.get(0).unwrap().vsize(), 1000);
+        assert_eq!(bank.get(2).unwrap().vsize(), 500);
+        assert_eq!(bank.get(1).unwrap().vsize(), 0);
+        // A tenant nobody registered still gets a controller.
+        bank.controller_mut(17).on_request(0, 1, 64);
+        assert_eq!(bank.len(), 4);
+        assert_eq!(bank.get(17).unwrap().vsize(), 64);
+        assert_eq!(bank.total_vsize(), 1564);
+        bank.expire_all(2 * crate::DAY);
+        assert_eq!(bank.total_vsize(), 0);
+    }
+
+    #[test]
+    fn bank_scales_miss_cost_per_tenant() {
+        // The high-multiplier tenant's controller must see a larger miss
+        // cost, driving its TTL above the low-multiplier tenant's under
+        // the *same* request pattern.
+        let mut cfg = Config::default();
+        cfg.controller.t_init_secs = 30.0;
+        let mut bank = ControllerBank::new(
+            &cfg.controller,
+            cfg.cost.clone(),
+            TenantRegistry::from_specs(vec![
+                TenantSpec::new(1, "hot").with_multiplier(10.0),
+                TenantSpec::new(2, "cold").with_multiplier(0.1),
+            ]),
+        );
+        // Identical traffic into both controllers: each object is
+        // requested at cycle start and 20 s later, then left to expire
+        // until the next 60 s cycle. Every residency closes a one-hit
+        // window, so λ̂ ≈ 1/T and the correction sign is decided by the
+        // tenant's miss cost: λ̂·(10·m) ≫ c_100KB > λ̂·(0.1·m).
+        let mut events: Vec<(u64, u64)> = Vec::new();
+        for k in 0..200u64 {
+            for obj in 0..20u64 {
+                events.push((k * 60 * SECOND + obj, obj));
+                events.push((k * 60 * SECOND + 20 * SECOND + obj, obj));
+            }
+        }
+        events.sort_unstable();
+        for (ts, obj) in events {
+            bank.controller_mut(1).on_request(ts, obj, 100_000);
+            bank.controller_mut(2).on_request(ts, obj, 100_000);
+        }
+        let t_hot = bank.get(1).unwrap().ttl_secs();
+        let t_cold = bank.get(2).unwrap().ttl_secs();
+        assert!(
+            t_hot > t_cold,
+            "expensive-miss tenant should hold longer: hot={t_hot} cold={t_cold}"
+        );
+        assert!(bank.get(1).unwrap().updates() > 200, "too few updates");
+    }
+
+    #[test]
+    fn arbiter_sums_demands_and_clamps() {
+        let cfg = Config::default();
+        let mut scaler = cfg.scaler.clone();
+        scaler.min_instances = 1;
+        scaler.max_instances = 4;
+        let arb = Arbiter::new(1_000_000, &scaler);
+        // Under the cap: everyone granted in full, size = round(total/S).
+        let (n, allocs) = arb.decide(&[(0, 1_400_000, 3.0), (1, 700_000, 1.0)]);
+        assert_eq!(n, 2);
+        assert!(allocs.iter().all(|a| a.granted_bytes == a.demand_bytes));
+        // Over the cap: total 9 MB → raw 9 > max 4. High-weight tenant is
+        // granted first; the cheap tenant absorbs the squeeze.
+        let (n, allocs) =
+            arb.decide(&[(0, 3_000_000, 3.0), (1, 6_000_000, 0.3)]);
+        assert_eq!(n, 4);
+        let a0 = allocs.iter().find(|a| a.tenant == 0).unwrap();
+        let a1 = allocs.iter().find(|a| a.tenant == 1).unwrap();
+        assert_eq!(a0.granted_bytes, 3_000_000);
+        assert_eq!(a1.granted_bytes, 1_000_000);
+        // Empty demand set still yields the floor.
+        let (n, _) = arb.decide(&[]);
+        assert_eq!(n, scaler.min_instances);
+    }
+
+    #[test]
+    fn tenant_sizer_sizes_shared_cluster_from_aggregate() {
+        let mut cfg = Config::default();
+        cfg.controller.t_init_secs = 3600.0; // sticky ghosts
+        cfg.tenants = specs_3();
+        let inst = cfg.cost.instance.ram_bytes;
+        let mut s = TenantTtlSizer::from_config(&cfg);
+        assert_eq!(s.name(), "tenant_ttl");
+        // ~1 instance worth of ghosts per tenant → aggregate ≈ 3.
+        let obj_size = inst / 10;
+        for i in 0..10u64 {
+            for t in 0..3u16 {
+                let req = Request::new(i * SECOND, i, obj_size as u32)
+                    .with_tenant(t);
+                s.on_request(&req);
+            }
+        }
+        let n = s.decide(20 * SECOND);
+        assert_eq!(n, 3, "aggregate demand should need 3 instances");
+        assert_eq!(s.allocations().len(), 3);
+        assert!(s.shadow_size().unwrap() > 2 * inst);
+        let ttls = s.tenant_ttls().unwrap();
+        assert_eq!(ttls.len(), 3);
+        assert!(s.ttl_secs().is_some());
+    }
+
+    #[test]
+    fn single_tenant_fallback_matches_default_registry() {
+        let cfg = Config::default();
+        let mut s = TenantTtlSizer::from_config(&cfg);
+        assert_eq!(s.bank().len(), 1);
+        let req = Request::new(0, 1, 1000);
+        s.on_request(&req);
+        assert_eq!(s.shadow_size(), Some(1000));
+        let n = s.decide(HOUR);
+        assert_eq!(n, cfg.scaler.min_instances.max(1));
+    }
+}

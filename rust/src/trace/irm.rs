@@ -83,7 +83,7 @@ impl RequestSource for IrmGenerator {
         }
         let obj = self.zipf.sample(&mut self.rng);
         let size = object_size(obj, self.cfg.seed) as u32;
-        Some(Request { ts: self.now, obj, size })
+        Some(Request::new(self.now, obj, size))
     }
 }
 

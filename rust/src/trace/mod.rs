@@ -13,12 +13,14 @@ mod irm;
 mod record;
 mod stats;
 mod synth;
+mod tenant_mux;
 mod zipf;
 
 pub use irm::{IrmConfig, IrmGenerator};
 pub use record::{read_csv, read_trace, write_csv, write_trace, Request, TraceReader, TraceWriter};
 pub use stats::{characterize, TraceStats};
 pub use synth::{SynthConfig, SynthGenerator};
+pub use tenant_mux::TenantMux;
 pub use zipf::Zipf;
 
 use crate::{ObjectId, TimeUs};
@@ -144,10 +146,7 @@ mod tests {
 
     #[test]
     fn vec_source_drains() {
-        let reqs = vec![
-            Request { ts: 0, obj: 1, size: 10 },
-            Request { ts: 1, obj: 2, size: 20 },
-        ];
+        let reqs = vec![Request::new(0, 1, 10), Request::new(1, 2, 20)];
         let mut src = VecSource::new(reqs);
         assert_eq!(src.take_requests(5).len(), 2);
         assert!(src.next_request().is_none());

@@ -1,28 +1,47 @@
 //! The request record and trace IO.
 //!
-//! Binary format: little-endian fixed 20-byte records
-//! `(ts_us: u64, obj: u64, size: u32)` after a 16-byte header
-//! (`b"ELTC"`, version u32, record count u64). CSV is also supported for
-//! interoperability (`ts_us,obj,size` with a header line).
+//! Binary format v2: little-endian fixed 22-byte records
+//! `(ts_us: u64, obj: u64, size: u32, tenant: u16)` after a 16-byte header
+//! (`b"ELTC"`, version u32, record count u64). Version-1 files (20-byte
+//! records without the tenant column) are still readable; their requests
+//! load with `tenant = 0`. CSV is also supported for interoperability
+//! (`ts_us,obj,size,tenant` with a header line; the legacy three-column
+//! header is accepted on read).
 
-use crate::{ObjectId, Result, TimeUs};
+use crate::{ObjectId, Result, TenantId, TimeUs};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"ELTC";
-const VERSION: u32 = 1;
-const RECORD_BYTES: usize = 20;
+const VERSION: u32 = 2;
+const V1_RECORD_BYTES: usize = 20;
+const RECORD_BYTES: usize = 22;
 
-/// One trace record: a request for `obj` of `size` bytes at time `ts`.
+/// One trace record: tenant `tenant` requests `obj` of `size` bytes at
+/// time `ts`. Single-workload traces use tenant 0 throughout.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Request {
     pub ts: TimeUs,
     pub obj: ObjectId,
     pub size: u32,
+    pub tenant: TenantId,
 }
 
 impl Request {
+    /// A single-tenant (tenant 0) request.
+    #[inline]
+    pub fn new(ts: TimeUs, obj: ObjectId, size: u32) -> Request {
+        Request { ts, obj, size, tenant: 0 }
+    }
+
+    /// Same request attributed to `tenant`.
+    #[inline]
+    pub fn with_tenant(mut self, tenant: TenantId) -> Request {
+        self.tenant = tenant;
+        self
+    }
+
     #[inline]
     pub fn size_bytes(&self) -> u64 {
         self.size as u64
@@ -33,6 +52,7 @@ impl Request {
         buf[0..8].copy_from_slice(&self.ts.to_le_bytes());
         buf[8..16].copy_from_slice(&self.obj.to_le_bytes());
         buf[16..20].copy_from_slice(&self.size.to_le_bytes());
+        buf[20..22].copy_from_slice(&self.tenant.to_le_bytes());
     }
 
     #[inline]
@@ -41,11 +61,22 @@ impl Request {
             ts: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
             obj: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
             size: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+            tenant: u16::from_le_bytes(buf[20..22].try_into().unwrap()),
+        }
+    }
+
+    #[inline]
+    fn decode_v1(buf: &[u8; V1_RECORD_BYTES]) -> Request {
+        Request {
+            ts: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            obj: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            size: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+            tenant: 0,
         }
     }
 }
 
-/// Streaming binary trace writer.
+/// Streaming binary trace writer (always writes the current version).
 pub struct TraceWriter {
     out: BufWriter<File>,
     count: u64,
@@ -89,9 +120,11 @@ impl TraceWriter {
 }
 
 /// Streaming binary trace reader (implements [`super::RequestSource`]).
+/// Reads both the current 22-byte records and legacy v1 20-byte records.
 pub struct TraceReader {
     input: BufReader<File>,
     remaining: u64,
+    version: u32,
 }
 
 impl TraceReader {
@@ -101,14 +134,22 @@ impl TraceReader {
         input.read_exact(&mut hdr)?;
         anyhow::ensure!(&hdr[0..4] == MAGIC, "not an elastictl trace file");
         let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
-        anyhow::ensure!(version == VERSION, "unsupported trace version {version}");
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "unsupported trace version {version}"
+        );
         let remaining = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
-        Ok(TraceReader { input, remaining })
+        Ok(TraceReader { input, remaining, version })
     }
 
     /// Records left to read.
     pub fn remaining(&self) -> u64 {
         self.remaining
+    }
+
+    /// On-disk format version (1 = legacy tenant-less records).
+    pub fn version(&self) -> u32 {
+        self.version
     }
 }
 
@@ -117,17 +158,27 @@ impl super::RequestSource for TraceReader {
         if self.remaining == 0 {
             return None;
         }
-        let mut buf = [0u8; RECORD_BYTES];
-        match self.input.read_exact(&mut buf) {
-            Ok(()) => {
-                self.remaining -= 1;
-                Some(Request::decode(&buf))
+        let req = if self.version == 1 {
+            let mut buf = [0u8; V1_RECORD_BYTES];
+            match self.input.read_exact(&mut buf) {
+                Ok(()) => Request::decode_v1(&buf),
+                Err(_) => {
+                    self.remaining = 0;
+                    return None;
+                }
             }
-            Err(_) => {
-                self.remaining = 0;
-                None
+        } else {
+            let mut buf = [0u8; RECORD_BYTES];
+            match self.input.read_exact(&mut buf) {
+                Ok(()) => Request::decode(&buf),
+                Err(_) => {
+                    self.remaining = 0;
+                    return None;
+                }
             }
-        }
+        };
+        self.remaining -= 1;
+        Some(req)
     }
 }
 
@@ -151,25 +202,29 @@ pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Request>> {
     Ok(out)
 }
 
-/// Write a trace as CSV (`ts_us,obj,size`).
+/// Write a trace as CSV (`ts_us,obj,size,tenant`).
 pub fn write_csv(path: impl AsRef<Path>, reqs: &[Request]) -> Result<()> {
     let mut out = BufWriter::new(File::create(path.as_ref())?);
-    writeln!(out, "ts_us,obj,size")?;
+    writeln!(out, "ts_us,obj,size,tenant")?;
     for r in reqs {
-        writeln!(out, "{},{},{}", r.ts, r.obj, r.size)?;
+        writeln!(out, "{},{},{},{}", r.ts, r.obj, r.size, r.tenant)?;
     }
     out.flush()?;
     Ok(())
 }
 
-/// Read a CSV trace (header line required).
+/// Read a CSV trace (header line required; the legacy tenant-less header
+/// `ts_us,obj,size` is accepted and loads every request as tenant 0).
 pub fn read_csv(path: impl AsRef<Path>) -> Result<Vec<Request>> {
     let text = std::fs::read_to_string(path.as_ref())?;
     let mut out = Vec::new();
+    let mut has_tenant_column = false;
     for (i, line) in text.lines().enumerate() {
         if i == 0 {
+            let hdr = line.trim();
+            has_tenant_column = hdr == "ts_us,obj,size,tenant";
             anyhow::ensure!(
-                line.trim() == "ts_us,obj,size",
+                has_tenant_column || hdr == "ts_us,obj,size",
                 "unexpected CSV header: {line}"
             );
             continue;
@@ -193,7 +248,16 @@ pub fn read_csv(path: impl AsRef<Path>) -> Result<Vec<Request>> {
             .ok_or_else(|| anyhow::anyhow!("line {i}: missing size"))?
             .trim()
             .parse()?;
-        out.push(Request { ts, obj, size });
+        let tenant = if has_tenant_column {
+            parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {i}: missing tenant"))?
+                .trim()
+                .parse()?
+        } else {
+            0
+        };
+        out.push(Request { ts, obj, size, tenant });
     }
     Ok(out)
 }
@@ -209,6 +273,7 @@ mod tests {
                 ts: i * 1000,
                 obj: crate::mix64(i) % 100,
                 size: (i % 4096 + 1) as u32,
+                tenant: (i % 5) as TenantId,
             })
             .collect()
     }
@@ -231,6 +296,7 @@ mod tests {
         write_trace(&p, &sample_trace(10)).unwrap();
         let mut r = TraceReader::open(&p).unwrap();
         assert_eq!(r.remaining(), 10);
+        assert_eq!(r.version(), 2);
         assert_eq!(r.take_requests(4).len(), 4);
         assert_eq!(r.remaining(), 6);
         assert_eq!(r.take_requests(100).len(), 6);
@@ -248,6 +314,42 @@ mod tests {
     }
 
     #[test]
+    fn legacy_csv_header_reads_as_tenant_zero() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("old.csv");
+        std::fs::write(&p, "ts_us,obj,size\n5,7,100\n9,8,200\n").unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(
+            back,
+            vec![Request::new(5, 7, 100), Request::new(9, 8, 200)]
+        );
+    }
+
+    #[test]
+    fn v1_binary_traces_read_as_tenant_zero() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("v1.bin");
+        // Hand-build a version-1 file: header + two 20-byte records.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        for (ts, obj, size) in [(11u64, 3u64, 100u32), (22, 4, 200)] {
+            bytes.extend_from_slice(&ts.to_le_bytes());
+            bytes.extend_from_slice(&obj.to_le_bytes());
+            bytes.extend_from_slice(&size.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let mut r = TraceReader::open(&p).unwrap();
+        assert_eq!(r.version(), 1);
+        let back = r.take_requests(10);
+        assert_eq!(
+            back,
+            vec![Request::new(11, 3, 100), Request::new(22, 4, 200)]
+        );
+    }
+
+    #[test]
     fn rejects_garbage() {
         let dir = crate::util::tempdir::tempdir().unwrap();
         let p = dir.path().join("bad.bin");
@@ -257,8 +359,13 @@ mod tests {
 
     #[test]
     fn encode_decode_identity() {
-        let r = Request { ts: u64::MAX - 5, obj: 0xDEAD_BEEF_CAFE, size: u32::MAX };
-        let mut buf = [0u8; 20];
+        let r = Request {
+            ts: u64::MAX - 5,
+            obj: 0xDEAD_BEEF_CAFE,
+            size: u32::MAX,
+            tenant: u16::MAX,
+        };
+        let mut buf = [0u8; RECORD_BYTES];
         r.encode(&mut buf);
         assert_eq!(Request::decode(&buf), r);
     }

@@ -121,9 +121,9 @@ mod tests {
     #[test]
     fn characterize_counts() {
         let trace = vec![
-            Request { ts: 0, obj: 1, size: 100 },
-            Request { ts: 10, obj: 1, size: 100 },
-            Request { ts: 20, obj: 2, size: 50 },
+            Request::new(0, 1, 100),
+            Request::new(10, 1, 100),
+            Request::new(20, 2, 50),
         ];
         let s = characterize(&trace);
         assert_eq!(s.requests, 3);

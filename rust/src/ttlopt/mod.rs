@@ -48,8 +48,10 @@ pub fn next_request_times(trace: &[Request]) -> Vec<Option<TimeUs>> {
     let mut next: Vec<Option<TimeUs>> = vec![None; trace.len()];
     let mut last_seen: HashMap<u64, TimeUs> = HashMap::new();
     for (i, r) in trace.iter().enumerate().rev() {
-        next[i] = last_seen.get(&r.obj).copied();
-        last_seen.insert(r.obj, r.ts);
+        // Tenant-scoped so multi-tenant traces don't alias across tenants.
+        let key = crate::tenant::scoped_object(r.tenant, r.obj);
+        next[i] = last_seen.get(&key).copied();
+        last_seen.insert(key, r.ts);
     }
     next
 }
@@ -77,7 +79,8 @@ pub fn solve(trace: &[Request], cost: &CostConfig) -> TtlOptResult {
             epoch_end += epoch_us;
         }
         // Was this request covered by a storage decision?
-        let covered = match stored_until.remove(&r.obj) {
+        let key = crate::tenant::scoped_object(r.tenant, r.obj);
+        let covered = match stored_until.remove(&key) {
             Some((until, bytes)) => {
                 debug_assert!(until == r.ts);
                 cur_bytes -= bytes;
@@ -97,7 +100,7 @@ pub fn solve(trace: &[Request], cost: &CostConfig) -> TtlOptResult {
             let store_cost = cost.storage_rate(r.size_bytes()) * gap_secs;
             if store_cost < cost.miss_cost(r.size_bytes()) {
                 costs.record_storage_dollars(store_cost);
-                stored_until.insert(r.obj, (t_next, r.size_bytes()));
+                stored_until.insert(key, (t_next, r.size_bytes()));
                 cur_bytes += r.size_bytes();
                 peak_bytes = peak_bytes.max(cur_bytes);
             }
@@ -175,7 +178,7 @@ mod tests {
     use crate::SECOND;
 
     fn req(ts: u64, obj: u64, size: u32) -> Request {
-        Request { ts, obj, size }
+        Request::new(ts, obj, size)
     }
 
     #[test]

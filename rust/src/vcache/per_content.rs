@@ -334,20 +334,16 @@ mod tests {
         // every 2 h (cheap to keep) interleaved with 2000 one-hit giants.
         for k in 0..240u64 {
             for o in 0..200u64 {
-                trace.push(Request { ts: k * 30 * SECOND + o, obj: o, size: 20_000 });
+                trace.push(Request::new(k * 30 * SECOND + o, o, 20_000));
             }
         }
         for k in 0..2u64 {
             for o in 0..200u64 {
-                trace.push(Request {
-                    ts: k * 2 * crate::HOUR + 7200 + o,
-                    obj: 1000 + o,
-                    size: 4_000,
-                });
+                trace.push(Request::new(k * 2 * crate::HOUR + 7200 + o, 1000 + o, 4_000));
             }
         }
         for g in 0..2000u64 {
-            trace.push(Request { ts: g * 3 * SECOND + 13, obj: 10_000 + g, size: 30_000_000 });
+            trace.push(Request::new(g * 3 * SECOND + 13, 10_000 + g, 30_000_000));
         }
         trace.sort_unstable_by_key(|r| r.ts);
 

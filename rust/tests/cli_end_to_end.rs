@@ -51,6 +51,7 @@ fn gen_run_ttlopt_plan_pipeline() {
 fn csv_traces_are_accepted() {
     let dir = elastictl::util::tempdir::tempdir().unwrap();
     let csv = dir.path().join("t.csv");
+    // Legacy tenant-less header must keep working.
     let mut text = String::from("ts_us,obj,size\n");
     for i in 0..2000u64 {
         text.push_str(&format!("{},{},{}\n", i * 50_000, i % 200, 1000 + i % 5000));
@@ -58,6 +59,26 @@ fn csv_traces_are_accepted() {
     std::fs::write(&csv, text).unwrap();
     let out = run_ok(&["run", csv.to_str().unwrap(), "--policy", "ttl"]);
     assert!(out.contains("requests=2000"), "{out}");
+}
+
+#[test]
+fn tenant_csv_runs_under_tenant_ttl_policy() {
+    let dir = elastictl::util::tempdir::tempdir().unwrap();
+    let csv = dir.path().join("mt.csv");
+    let mut text = String::from("ts_us,obj,size,tenant\n");
+    for i in 0..3000u64 {
+        text.push_str(&format!(
+            "{},{},{},{}\n",
+            i * 50_000,
+            i % 150,
+            1000 + i % 5000,
+            i % 3
+        ));
+    }
+    std::fs::write(&csv, text).unwrap();
+    let out = run_ok(&["run", csv.to_str().unwrap(), "--policy", "tenant_ttl"]);
+    assert!(out.contains("policy=tenant_ttl"), "{out}");
+    assert!(out.contains("requests=3000"), "{out}");
 }
 
 #[test]

@@ -20,7 +20,7 @@ fn random_trace(rng: &mut Pcg, max_len: usize, catalogue: u64) -> Vec<Request> {
         .map(|_| {
             ts += rng.below(5_000_000) + 1;
             let obj = rng.below(catalogue);
-            Request { ts, obj, size: (64 + rng.below(1_000_000)) as u32 }
+            Request::new(ts, obj, (64 + rng.below(1_000_000)) as u32)
         })
         .collect()
 }

@@ -1,0 +1,114 @@
+//! Property-style round-trip tests for trace IO: arbitrary request
+//! streams — including max-size, zero-timestamp and extreme-tenant edge
+//! cases — must survive `write_trace`/`read_trace` and
+//! `write_csv`/`read_csv` bit-for-bit, and legacy v1/tenant-less files
+//! must keep loading as tenant 0.
+
+use elastictl::trace::{read_csv, read_trace, write_csv, write_trace, Request};
+use elastictl::util::proptest::check;
+use elastictl::util::rng::Pcg;
+use elastictl::util::tempdir::tempdir;
+
+/// Draw an arbitrary request, biased toward the edges of every field.
+fn arb_request(rng: &mut Pcg, monotone_ts: &mut u64) -> Request {
+    let ts = match rng.below(8) {
+        0 => 0,
+        1 => u64::MAX - rng.below(1000),
+        _ => {
+            *monotone_ts += rng.below(10_000_000);
+            *monotone_ts
+        }
+    };
+    let obj = match rng.below(4) {
+        0 => 0,
+        1 => u64::MAX,
+        _ => rng.next_u64(),
+    };
+    let size = match rng.below(4) {
+        0 => 0,
+        1 => u32::MAX,
+        _ => rng.below(1 << 32) as u32,
+    };
+    let tenant = match rng.below(4) {
+        0 => 0,
+        1 => u16::MAX,
+        _ => rng.below(1 << 16) as u16,
+    };
+    Request { ts, obj, size, tenant }
+}
+
+fn arb_trace(rng: &mut Pcg) -> Vec<Request> {
+    let len = rng.below_usize(300);
+    let mut ts = 0u64;
+    (0..len).map(|_| arb_request(rng, &mut ts)).collect()
+}
+
+#[test]
+fn prop_binary_round_trip_preserves_requests() {
+    check("trace_binary_round_trip", 0x7B1, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("t.bin");
+        let reqs = arb_trace(rng);
+        let n = write_trace(&p, &reqs).unwrap();
+        assert_eq!(n, reqs.len() as u64);
+        let back = read_trace(&p).unwrap();
+        assert_eq!(back, reqs);
+    });
+}
+
+#[test]
+fn prop_csv_round_trip_preserves_requests() {
+    check("trace_csv_round_trip", 0xC5B, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("t.csv");
+        let reqs = arb_trace(rng);
+        write_csv(&p, &reqs).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back, reqs);
+    });
+}
+
+#[test]
+fn prop_legacy_csv_loads_as_tenant_zero() {
+    check("trace_legacy_csv", 0x1E6, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("legacy.csv");
+        let mut reqs = arb_trace(rng);
+        for r in &mut reqs {
+            r.tenant = 0;
+        }
+        // Write the pre-tenant three-column format by hand.
+        let mut text = String::from("ts_us,obj,size\n");
+        for r in &reqs {
+            text.push_str(&format!("{},{},{}\n", r.ts, r.obj, r.size));
+        }
+        std::fs::write(&p, text).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back, reqs);
+    });
+}
+
+#[test]
+fn prop_legacy_v1_binary_loads_as_tenant_zero() {
+    check("trace_legacy_v1_binary", 0x1E7, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("legacy.bin");
+        let mut reqs = arb_trace(rng);
+        for r in &mut reqs {
+            r.tenant = 0;
+        }
+        // Write the 20-byte v1 record format by hand.
+        let mut bytes = Vec::with_capacity(16 + reqs.len() * 20);
+        bytes.extend_from_slice(b"ELTC");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(reqs.len() as u64).to_le_bytes());
+        for r in &reqs {
+            bytes.extend_from_slice(&r.ts.to_le_bytes());
+            bytes.extend_from_slice(&r.obj.to_le_bytes());
+            bytes.extend_from_slice(&r.size.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let back = read_trace(&p).unwrap();
+        assert_eq!(back, reqs);
+    });
+}
