@@ -13,8 +13,8 @@ cargo fmt --all --check || {
     exit 1
 }
 
-echo "==> cargo clippy (lib, -D warnings)"
-cargo clippy --lib -- -D warnings
+echo "==> cargo clippy (all targets, -D warnings)"
+cargo clippy --all-targets -- -D warnings
 
 echo "==> cargo build --release"
 cargo build --release

@@ -1,14 +1,15 @@
-//! Quickstart: generate a small diurnal CDN workload, run the paper's
-//! TTL-based autoscaler against the static baseline, and print the cost
-//! comparison.
+//! Quickstart: generate a small diurnal CDN workload, drive the paper's
+//! TTL-based autoscaler and the static baseline through the streaming
+//! `engine::Engine` — the canonical way to run any policy over any trace
+//! — and print the cost comparison.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use elastictl::config::{Config, PolicyKind};
-use elastictl::sim::run;
-use elastictl::trace::{SynthConfig, SynthGenerator, VecSource};
+use elastictl::engine::EngineBuilder;
+use elastictl::trace::{SynthConfig, SynthGenerator};
 
 fn main() {
     // 1. A 2-day synthetic trace with the Akamai-like marginals (Fig. 4)
@@ -31,13 +32,22 @@ fn main() {
         elastictl::experiments::calibrate_miss_cost(&cfg, &trace, 8);
     println!("calibrated miss cost: ${:.3e}/miss", cfg.cost.miss_cost_dollars);
 
-    // 3. Run the static baseline and the TTL autoscaler.
+    // 3. Run the static baseline and the TTL autoscaler through the same
+    //    engine. `EngineBuilder` resolves the policy from the config (the
+    //    uniform registry covers every PolicyKind); `offer` steps one
+    //    request at a time — the identical path the simulator, the TCP
+    //    server and the experiment harness drive. Batch callers can use
+    //    `elastictl::engine::run(&cfg, &mut source)` as a one-liner, with
+    //    `trace::FileSource` streaming a trace file in constant memory.
     let mut results = Vec::new();
     for policy in [PolicyKind::Fixed, PolicyKind::Ttl] {
         cfg.scaler.policy = policy;
         cfg.scaler.fixed_instances = 8;
-        let mut src = VecSource::new(trace.clone());
-        results.push(run(&cfg, &mut src));
+        let mut engine = EngineBuilder::new(&cfg).build();
+        for r in &trace {
+            engine.offer(r);
+        }
+        results.push(engine.finish());
     }
 
     println!("\n{:<8} {:>10} {:>12} {:>12} {:>12}", "policy", "miss%", "storage $", "miss $", "total $");

@@ -1,0 +1,62 @@
+//! Engine request-path throughput — requests/second through
+//! `Engine::offer` for each policy, with and without the default probe
+//! set, so future PRs can track the speed of the unified request path.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::engine::EngineBuilder;
+use elastictl::trace::{SynthConfig, SynthGenerator};
+use elastictl::util::bench::{black_box, Bencher};
+use elastictl::MINUTE;
+
+fn main() {
+    let mut b = Bencher::new("engine_throughput");
+    let mut synth = SynthConfig::tiny();
+    synth.mean_rate = 400.0;
+    let trace = SynthGenerator::new(synth).generate();
+    println!("# trace: {} requests over 2 simulated hours", trace.len());
+
+    for policy in [
+        PolicyKind::Fixed,
+        PolicyKind::Ttl,
+        PolicyKind::Mrc,
+        PolicyKind::IdealTtl,
+        PolicyKind::TenantTtl,
+    ] {
+        let mut cfg = Config::with_policy(policy);
+        cfg.cost.instance.ram_bytes = 40_000_000;
+        cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.fixed_instances = 8;
+
+        let mut last_requests = 0u64;
+        b.bench(
+            &format!("offer_{}", policy.as_str()),
+            trace.len() as u64,
+            || {
+                // Bare request path: what the server runs.
+                let mut engine = EngineBuilder::new(&cfg).no_default_probes().build();
+                for r in &trace {
+                    black_box(engine.offer(r));
+                }
+                last_requests = engine.requests();
+                black_box(engine.finish());
+            },
+        );
+        assert_eq!(last_requests, trace.len() as u64);
+    }
+
+    // Probe overhead: the full default observer set on the TTL policy.
+    let mut cfg = Config::with_policy(PolicyKind::Ttl);
+    cfg.cost.instance.ram_bytes = 40_000_000;
+    cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+    cfg.cost.epoch_us = 10 * MINUTE;
+    b.bench("offer_ttl_default_probes", trace.len() as u64, || {
+        let mut engine = EngineBuilder::new(&cfg).build();
+        for r in &trace {
+            black_box(engine.offer(r));
+        }
+        black_box(engine.finish());
+    });
+
+    b.finish();
+}

@@ -532,6 +532,18 @@ impl Config {
         c.scaler.policy = policy;
         c
     }
+
+    /// Cluster size before the first epoch decision — the single source of
+    /// truth shared by the engine builder, the simulator and the server
+    /// (previously duplicated in `sim::run` and `serve::ServerState::new`,
+    /// where Fixed-vs-elastic semantics could drift apart): Fixed runs at
+    /// its static size, elastic policies start at the floor.
+    pub fn initial_instances(&self) -> u32 {
+        match self.scaler.policy {
+            PolicyKind::Fixed => self.scaler.fixed_instances.max(1),
+            _ => self.scaler.min_instances.max(1),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -624,6 +636,27 @@ mod tests {
             assert_eq!(PolicyKind::parse(p.as_str()).unwrap(), p);
         }
         assert!(PolicyKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn initial_instances_single_source_of_truth() {
+        let mut cfg = Config::with_policy(PolicyKind::Fixed);
+        cfg.scaler.fixed_instances = 6;
+        cfg.scaler.min_instances = 2;
+        assert_eq!(cfg.initial_instances(), 6, "Fixed runs at its static size");
+        for kind in [
+            PolicyKind::Ttl,
+            PolicyKind::Mrc,
+            PolicyKind::IdealTtl,
+            PolicyKind::Analytic,
+            PolicyKind::TenantTtl,
+        ] {
+            cfg.scaler.policy = kind;
+            assert_eq!(cfg.initial_instances(), 2, "{kind:?} starts at the floor");
+        }
+        // Degenerate configs still keep the service up.
+        cfg.scaler.min_instances = 0;
+        assert_eq!(cfg.initial_instances(), 1);
     }
 
     #[test]

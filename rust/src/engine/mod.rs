@@ -1,0 +1,712 @@
+//! The streaming execution engine — ONE request path for every way a
+//! policy meets a trace.
+//!
+//! The paper's central claim is an O(1)-per-request provisioning scheme
+//! that runs the *same* logic in a simulator and in an mcrouter-like
+//! production front (§5.2, §6.1). This module is that shared path: an
+//! [`EngineBuilder`] (config + policy + probes) produces an [`Engine`]
+//! with a step API —
+//!
+//! * [`Engine::offer`] — feed one request, get its [`Outcome`];
+//! * [`Engine::advance_to`] — close any billing epochs that elapsed;
+//! * [`Engine::finish`] — bill the final partial epoch and collect the
+//!   [`RunReport`].
+//!
+//! The discrete-event simulator ([`crate::sim`]), the TCP server
+//! ([`crate::serve`]), the analytic runtime driver and the ideal-TTL
+//! reference all drive this engine instead of hand-rolling their own
+//! epoch loops. Policies come from the uniform registry in
+//! [`policy`] (every [`crate::config::PolicyKind`] is first-class — the
+//! old dispatch panicked on `analytic`); series sampling, Fig. 9 balance
+//! tracking and per-tenant summaries are composable [`Probe`]s. Because
+//! the engine pulls nothing, any [`crate::trace::RequestSource`] can
+//! drive it — including the streaming file readers
+//! ([`crate::trace::FileSource`]), so a million-user trace never has to
+//! materialize as a `Vec<Request>`.
+
+mod policy;
+mod probe;
+
+pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
+pub use probe::{BalanceProbe, Probe, ProbeCtx, ShadowProbe, TenantProbe, TtlProbe};
+
+use crate::balancer::Balancer;
+use crate::cluster::BalanceTracker;
+use crate::config::Config;
+use crate::cost::{CostTracker, EpochCosts};
+use crate::metrics::{HitMiss, TimeSeries};
+use crate::scaler::EpochSizer;
+use crate::trace::{Request, RequestSource};
+use crate::{TenantId, TimeUs};
+
+/// How often the default ttl/shadow probes sample their series.
+pub const SAMPLE_EVERY: u64 = 4096;
+
+/// Outcome of offering one request to the engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    /// The request hit (physically, or virtually for the vertical mode,
+    /// where virtual hits are real hits).
+    pub hit: bool,
+    /// The miss was *spurious*: the object is resident on some instance,
+    /// but slot reassignment routed the request elsewhere (§5.2).
+    pub spurious: bool,
+    /// Policy work units performed (Fig. 1 proxy).
+    pub work_units: u32,
+}
+
+/// Per-tenant slice of a run: who asked for what, who missed, what it
+/// cost, and where that tenant's timer converged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSummary {
+    pub tenant: TenantId,
+    pub requests: u64,
+    pub misses: u64,
+    /// Weighted miss dollars attributed to this tenant.
+    pub miss_dollars: f64,
+    /// Final per-tenant TTL, when the policy ran one controller per
+    /// tenant.
+    pub ttl_secs: Option<f64>,
+}
+
+/// Result of one policy run over a request stream.
+#[derive(Debug)]
+pub struct RunReport {
+    pub policy: String,
+    pub requests: u64,
+    pub misses: u64,
+    pub spurious_misses: u64,
+    pub work_units: u64,
+    pub epochs: Vec<EpochCosts>,
+    /// Cumulative dollars.
+    pub storage_series: TimeSeries,
+    pub miss_series: TimeSeries,
+    pub total_series: TimeSeries,
+    /// Instances active per epoch.
+    pub instances_series: TimeSeries,
+    /// TTL (s) sampled periodically (TTL-family policies).
+    pub ttl_series: TimeSeries,
+    /// Virtual/shadow size (bytes) sampled periodically.
+    pub shadow_series: TimeSeries,
+    /// Fig. 9 balance tracker.
+    pub balance: BalanceTracker,
+    /// Per-tenant breakdown (one row per tenant that sent traffic).
+    pub tenants: Vec<TenantSummary>,
+    pub total_cost: f64,
+    pub storage_cost: f64,
+    pub miss_cost: f64,
+}
+
+impl RunReport {
+    pub fn miss_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.requests as f64
+        }
+    }
+
+    /// One summary row for tables: name, requests, miss%, storage, miss$,
+    /// total$.
+    pub fn summary_row(&self) -> Vec<String> {
+        vec![
+            self.policy.clone(),
+            self.requests.to_string(),
+            format!("{:.4}", self.miss_ratio()),
+            format!("{:.4}", self.storage_cost),
+            format!("{:.4}", self.miss_cost),
+            format!("{:.4}", self.total_cost),
+        ]
+    }
+}
+
+/// The two billing shapes a policy runs under.
+pub(crate) enum Core {
+    /// Horizontally scaled cluster behind the balancer, epoch-billed.
+    Cluster(Balancer),
+    /// The ideal vertically scaled TTL cache (§6.1 reference): billed on
+    /// instantaneous occupancy; no instances, no spurious misses.
+    Vertical {
+        policy: VerticalTtl,
+        requests: u64,
+        misses: u64,
+        work_units: u64,
+    },
+}
+
+impl Core {
+    /// Current policy TTL — the one dispatch shared by [`Engine`] and
+    /// [`ProbeCtx`], so STATS and probe samples cannot diverge.
+    pub(crate) fn ttl_secs(&self) -> Option<f64> {
+        match self {
+            Core::Cluster(b) => b.ttl_secs(),
+            Core::Vertical { policy, .. } => policy.ttl_secs(),
+        }
+    }
+
+    /// Current virtual/shadow size in bytes.
+    pub(crate) fn shadow_size(&self) -> Option<u64> {
+        match self {
+            Core::Cluster(b) => b.shadow_size(),
+            Core::Vertical { policy, .. } => policy.shadow_size(),
+        }
+    }
+}
+
+/// Builder: config + policy + probes → [`Engine`].
+pub struct EngineBuilder {
+    cfg: Config,
+    policy: Option<EnginePolicy>,
+    initial_instances: Option<u32>,
+    probes: Vec<Box<dyn Probe>>,
+    default_probes: bool,
+    auto_epochs: bool,
+}
+
+impl EngineBuilder {
+    pub fn new(cfg: &Config) -> Self {
+        EngineBuilder {
+            cfg: cfg.clone(),
+            policy: None,
+            initial_instances: None,
+            probes: Vec::new(),
+            default_probes: true,
+            auto_epochs: true,
+        }
+    }
+
+    /// Override the policy (default: the registry's build for
+    /// `cfg.scaler.policy`).
+    pub fn policy(mut self, policy: EnginePolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Run a caller-constructed horizontal sizer.
+    pub fn sizer(mut self, sizer: Box<dyn EpochSizer>) -> Self {
+        self.policy = Some(EnginePolicy::Horizontal(sizer));
+        self
+    }
+
+    /// Override the pre-first-epoch cluster size (default:
+    /// [`Config::initial_instances`]).
+    pub fn initial_instances(mut self, n: u32) -> Self {
+        self.initial_instances = Some(n);
+        self
+    }
+
+    /// Attach an extra observer.
+    pub fn probe(mut self, probe: Box<dyn Probe>) -> Self {
+        self.probes.push(probe);
+        self
+    }
+
+    /// Drop the default ttl/shadow/balance/tenant probes (bare request
+    /// path — what the server and throughput benches want).
+    pub fn no_default_probes(mut self) -> Self {
+        self.default_probes = false;
+        self
+    }
+
+    /// Close billing epochs only on explicit [`Engine::advance_to`] /
+    /// [`Engine::force_epoch`] calls, never implicitly from request
+    /// timestamps. Trace replay wants automatic closure (epochs elapse
+    /// with trace time); the TCP server wants this manual mode so the
+    /// operator's `EPOCH` command keeps full control of the resize
+    /// cadence — a GET after an idle hour must not silently bill and
+    /// shrink the cluster. Vertical occupancy still accrues with time.
+    pub fn manual_epochs(mut self) -> Self {
+        self.auto_epochs = false;
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        let cfg = self.cfg;
+        let policy = self.policy.unwrap_or_else(|| build_policy(&cfg));
+        let mut costs = CostTracker::new(cfg.cost.clone());
+        for spec in &cfg.tenants {
+            costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+        }
+        let mut probes = self.probes;
+        let (core, policy_name) = match policy {
+            EnginePolicy::Horizontal(sizer) => {
+                let name = sizer.name().to_string();
+                let initial = self
+                    .initial_instances
+                    .unwrap_or_else(|| cfg.initial_instances());
+                let balancer = Balancer::from_config(&cfg, sizer, initial);
+                if self.default_probes {
+                    probes.push(Box::new(TtlProbe::sampled(&name)));
+                    probes.push(Box::new(ShadowProbe::sampled(&name, "shadow_bytes")));
+                    probes.push(Box::new(BalanceProbe::new()));
+                    probes.push(Box::new(TenantProbe::new()));
+                }
+                (Core::Cluster(balancer), name)
+            }
+            EnginePolicy::Vertical(v) => {
+                let name = v.name().to_string();
+                if self.default_probes {
+                    probes.push(Box::new(TtlProbe::sampled(&name)));
+                    probes.push(Box::new(ShadowProbe::sampled(&name, "vsize_bytes")));
+                }
+                (
+                    Core::Vertical { policy: v, requests: 0, misses: 0, work_units: 0 },
+                    name,
+                )
+            }
+        };
+        let active_instances = match &core {
+            Core::Cluster(b) => b.cluster.len() as u32,
+            Core::Vertical { .. } => 0,
+        };
+        let epoch_us = cfg.cost.epoch_us.max(1);
+        Engine {
+            core,
+            costs,
+            probes,
+            policy_name,
+            epoch_us,
+            epoch_end: epoch_us,
+            active_instances,
+            per_byte_sec: cfg.cost.storage_cost_per_byte_sec(),
+            auto_epochs: self.auto_epochs,
+            processed: 0,
+            clock: 0,
+            epochs: Vec::new(),
+        }
+    }
+}
+
+/// The unified request path: offer requests, advance billing time, finish
+/// into a report.
+pub struct Engine {
+    core: Core,
+    costs: CostTracker,
+    probes: Vec<Box<dyn Probe>>,
+    policy_name: String,
+    epoch_us: TimeUs,
+    /// End of the currently open billing epoch.
+    epoch_end: TimeUs,
+    /// Instances billed for the currently open epoch (0 = vertical).
+    active_instances: u32,
+    /// $/byte/s for the vertical occupancy bill.
+    per_byte_sec: f64,
+    /// Whether `offer` closes elapsed epochs implicitly (trace replay)
+    /// or leaves closure to explicit `advance_to`/`force_epoch` calls
+    /// (the server's operator-driven cadence).
+    auto_epochs: bool,
+    /// Requests offered so far.
+    processed: u64,
+    /// Latest timestamp observed (request or explicit advance).
+    clock: TimeUs,
+    epochs: Vec<EpochCosts>,
+}
+
+impl Engine {
+    /// Offer one request: close any elapsed epochs (automatic mode), run
+    /// the policy shadow work, serve, account, notify probes.
+    pub fn offer(&mut self, req: &Request) -> Outcome {
+        if self.auto_epochs {
+            self.advance_to(req.ts);
+        } else {
+            // Manual mode: time (and vertical occupancy dollars) still
+            // advance, but epoch closure waits for an explicit call.
+            self.accrue(req.ts);
+        }
+        self.processed += 1;
+        let outcome = match &mut self.core {
+            Core::Cluster(b) => {
+                let served = b.handle(req, &mut self.costs);
+                Outcome {
+                    hit: served.hit,
+                    spurious: served.spurious,
+                    work_units: served.work_units,
+                }
+            }
+            Core::Vertical { policy, requests, misses, work_units } => {
+                let work = policy.on_request(req);
+                let hit = work.shadow_hit.unwrap_or(false);
+                *requests += 1;
+                *work_units += work.units as u64;
+                if !hit {
+                    *misses += 1;
+                    self.costs.record_miss_for(req.tenant, req.size_bytes());
+                }
+                Outcome { hit, spurious: false, work_units: work.units }
+            }
+        };
+        let ctx = ProbeCtx {
+            core: &self.core,
+            costs: &self.costs,
+            processed: self.processed,
+            instances: self.active_instances,
+        };
+        for p in &mut self.probes {
+            p.on_request(req, &outcome, &ctx);
+        }
+        outcome
+    }
+
+    /// Advance billing time to `ts`, closing every epoch that elapsed.
+    /// Idempotent for `ts` at or before the current clock.
+    pub fn advance_to(&mut self, ts: TimeUs) {
+        self.accrue(ts);
+        while ts >= self.epoch_end {
+            let t = self.epoch_end;
+            self.close_epoch_at(t);
+            self.epoch_end += self.epoch_us;
+        }
+    }
+
+    /// Force an epoch boundary *now* (the server's `EPOCH` command): bill
+    /// the open epoch, apply the policy's sizing decision, restart the
+    /// epoch clock from `now`. Returns the resulting instance count (the
+    /// equivalent count for the vertical mode).
+    pub fn force_epoch(&mut self, now: TimeUs) -> u32 {
+        self.accrue(now);
+        let t = self.clock;
+        let n = self.close_epoch_at(t);
+        self.epoch_end = t + self.epoch_us;
+        match &mut self.core {
+            Core::Cluster(_) => n,
+            Core::Vertical { policy, .. } => policy.decide(t),
+        }
+    }
+
+    /// Bill the final (partial) epoch at full price (§2.3) and fold every
+    /// probe's observations into the report.
+    pub fn finish(mut self) -> RunReport {
+        {
+            let ctx = ProbeCtx {
+                core: &self.core,
+                costs: &self.costs,
+                processed: self.processed,
+                instances: self.active_instances,
+            };
+            for p in &mut self.probes {
+                p.on_epoch(self.epoch_end, &ctx);
+            }
+        }
+        let t_bill = self.epoch_end.max(self.clock);
+        match &self.core {
+            Core::Cluster(_) => {
+                self.epochs
+                    .push(self.costs.end_epoch(t_bill, self.active_instances));
+            }
+            Core::Vertical { .. } => {
+                self.epochs.push(self.costs.end_epoch_vertical(t_bill));
+            }
+        }
+
+        let mut report = RunReport {
+            policy: self.policy_name.clone(),
+            requests: self.requests(),
+            misses: self.misses(),
+            spurious_misses: self.spurious_misses(),
+            work_units: self.work_units(),
+            epochs: std::mem::take(&mut self.epochs),
+            storage_series: self.costs.storage_series.clone(),
+            miss_series: self.costs.miss_series.clone(),
+            total_series: self.costs.total_series.clone(),
+            instances_series: self.costs.instances_series.clone(),
+            ttl_series: TimeSeries::new(format!("{}_ttl_secs", self.policy_name)),
+            shadow_series: TimeSeries::new(format!("{}_shadow_bytes", self.policy_name)),
+            balance: BalanceTracker::new(),
+            tenants: Vec::new(),
+            total_cost: self.costs.total(),
+            storage_cost: self.costs.storage_total(),
+            miss_cost: self.costs.miss_total(),
+        };
+        let probes = std::mem::take(&mut self.probes);
+        let ctx = ProbeCtx {
+            core: &self.core,
+            costs: &self.costs,
+            processed: self.processed,
+            instances: self.active_instances,
+        };
+        for p in probes {
+            p.finish(&ctx, &mut report);
+        }
+        report
+    }
+
+    /// Vertical mode accrues storage continuously on the instantaneous
+    /// occupancy; cluster mode bills per epoch instead.
+    fn accrue(&mut self, ts: TimeUs) {
+        if let Core::Vertical { policy, .. } = &self.core {
+            let dt = crate::us_to_secs(ts.saturating_sub(self.clock));
+            self.costs
+                .record_storage_dollars(policy.vsize() as f64 * self.per_byte_sec * dt);
+        }
+        self.clock = self.clock.max(ts);
+    }
+
+    /// Close the open epoch at `t`: probes first (per-instance stats still
+    /// intact), then bill, then apply the sizing decision.
+    fn close_epoch_at(&mut self, t: TimeUs) -> u32 {
+        {
+            let ctx = ProbeCtx {
+                core: &self.core,
+                costs: &self.costs,
+                processed: self.processed,
+                instances: self.active_instances,
+            };
+            for p in &mut self.probes {
+                p.on_epoch(t, &ctx);
+            }
+        }
+        match &mut self.core {
+            Core::Cluster(b) => {
+                self.epochs.push(self.costs.end_epoch(t, self.active_instances));
+                b.cluster.reset_epoch_stats();
+                self.active_instances = b.end_epoch(t);
+            }
+            Core::Vertical { .. } => {
+                self.epochs.push(self.costs.end_epoch_vertical(t));
+            }
+        }
+        self.active_instances
+    }
+
+    // --- accessors (the server's STATS surface and probe-free callers) ---
+
+    pub fn policy_name(&self) -> &str {
+        &self.policy_name
+    }
+
+    pub fn requests(&self) -> u64 {
+        match &self.core {
+            Core::Cluster(b) => b.requests,
+            Core::Vertical { requests, .. } => *requests,
+        }
+    }
+
+    pub fn misses(&self) -> u64 {
+        match &self.core {
+            Core::Cluster(b) => b.misses,
+            Core::Vertical { misses, .. } => *misses,
+        }
+    }
+
+    pub fn spurious_misses(&self) -> u64 {
+        match &self.core {
+            Core::Cluster(b) => b.spurious_misses,
+            Core::Vertical { .. } => 0,
+        }
+    }
+
+    pub fn work_units(&self) -> u64 {
+        match &self.core {
+            Core::Cluster(b) => b.work_units,
+            Core::Vertical { work_units, .. } => *work_units,
+        }
+    }
+
+    /// Live instance count (0 for the vertical mode).
+    pub fn instances(&self) -> u32 {
+        match &self.core {
+            Core::Cluster(b) => b.cluster.len() as u32,
+            Core::Vertical { .. } => 0,
+        }
+    }
+
+    pub fn costs(&self) -> &CostTracker {
+        &self.costs
+    }
+
+    pub fn ttl_secs(&self) -> Option<f64> {
+        self.core.ttl_secs()
+    }
+
+    pub fn shadow_size(&self) -> Option<u64> {
+        self.core.shadow_size()
+    }
+
+    pub fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
+        match &self.core {
+            Core::Cluster(b) => b.tenant_ttls(),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// Counters for one tenant (zero if never seen).
+    pub fn tenant_stats_of(&self, t: TenantId) -> HitMiss {
+        match &self.core {
+            Core::Cluster(b) => b.tenant_stats_of(t),
+            Core::Vertical { .. } => HitMiss::default(),
+        }
+    }
+
+    /// Tenants that have sent traffic so far.
+    pub fn active_tenants(&self) -> usize {
+        match &self.core {
+            Core::Cluster(b) => b.tenant_stats().iter().filter(|hm| hm.total() > 0).count(),
+            Core::Vertical { .. } => 0,
+        }
+    }
+
+    /// Latest timestamp observed.
+    pub fn clock(&self) -> TimeUs {
+        self.clock
+    }
+
+    /// End of the currently open billing epoch.
+    pub fn epoch_end(&self) -> TimeUs {
+        self.epoch_end
+    }
+}
+
+/// Drain a source through a freshly built engine — the one-call form every
+/// batch consumer (CLI, experiments, tests) uses.
+pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> RunReport {
+    let mut engine = EngineBuilder::new(cfg).build();
+    while let Some(req) = source.next_request() {
+        engine.offer(&req);
+    }
+    engine.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::trace::{Request, VecSource};
+    use crate::{HOUR, MINUTE, SECOND};
+
+    fn tiny_cfg(policy: PolicyKind) -> Config {
+        let mut cfg = Config::with_policy(policy);
+        cfg.cost.instance.ram_bytes = 20_000_000;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.fixed_instances = 4;
+        cfg
+    }
+
+    #[test]
+    fn offer_reports_hits_and_misses() {
+        let mut engine = EngineBuilder::new(&tiny_cfg(PolicyKind::Fixed)).build();
+        let miss = engine.offer(&Request::new(0, 1, 1000));
+        assert!(!miss.hit);
+        let hit = engine.offer(&Request::new(SECOND, 1, 1000));
+        assert!(hit.hit);
+        assert_eq!(engine.requests(), 2);
+        assert_eq!(engine.misses(), 1);
+        let report = engine.finish();
+        assert_eq!(report.policy, "fixed");
+        assert_eq!(report.requests, 2);
+        assert!((report.total_cost - (report.storage_cost + report.miss_cost)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_to_closes_elapsed_epochs() {
+        let cfg = tiny_cfg(PolicyKind::Fixed);
+        let mut engine = EngineBuilder::new(&cfg).build();
+        engine.offer(&Request::new(0, 1, 100));
+        // Jump 3 epochs ahead: three closures must be billed.
+        engine.advance_to(3 * cfg.cost.epoch_us + 1);
+        let report = engine.finish();
+        assert_eq!(report.epochs.len(), 4, "3 advanced + 1 final");
+        assert!(report.storage_series.len() >= 4);
+    }
+
+    #[test]
+    fn vertical_mode_bills_occupancy_not_instances() {
+        let mut cfg = tiny_cfg(PolicyKind::IdealTtl);
+        cfg.controller.t_init_secs = 600.0;
+        let mut engine = EngineBuilder::new(&cfg).build();
+        engine.offer(&Request::new(0, 1, 1_000_000));
+        engine.offer(&Request::new(100 * SECOND, 2, 1_000_000));
+        assert_eq!(engine.instances(), 0);
+        let report = engine.finish();
+        assert_eq!(report.policy, "ideal_ttl");
+        assert_eq!(report.spurious_misses, 0);
+        assert!(report.storage_cost > 0.0, "occupancy must accrue dollars");
+        // 1 MB held 100 s at the catalog's per-byte rate.
+        let expect = 1.0e6 * cfg.cost.storage_cost_per_byte_sec() * 100.0;
+        assert!((report.storage_cost - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn analytic_policy_runs_through_the_same_entry_point() {
+        let mut cfg = tiny_cfg(PolicyKind::Analytic);
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        let reqs: Vec<Request> = (0..2000u64)
+            .map(|i| Request::new(i * SECOND / 2, i % 50, 10_000))
+            .collect();
+        let report = run(&cfg, &mut VecSource::new(reqs));
+        assert_eq!(report.policy, "analytic");
+        assert_eq!(report.requests, 2000);
+        assert!(report.total_cost > 0.0);
+    }
+
+    #[test]
+    fn force_epoch_resizes_and_restarts_the_clock() {
+        let mut cfg = tiny_cfg(PolicyKind::Ttl);
+        cfg.controller.t_init_secs = 7200.0;
+        let mut engine = EngineBuilder::new(&cfg).build();
+        let inst = cfg.cost.instance.ram_bytes;
+        for i in 0..30u64 {
+            engine.offer(&Request::new(i * SECOND, i, (inst / 10) as u32));
+        }
+        let n = engine.force_epoch(40 * SECOND);
+        assert!(n >= 2, "n={n}");
+        assert_eq!(engine.instances(), n);
+        assert_eq!(engine.epoch_end(), 40 * SECOND + cfg.cost.epoch_us);
+    }
+
+    #[test]
+    fn manual_epochs_close_only_on_explicit_calls() {
+        let cfg = tiny_cfg(PolicyKind::Fixed);
+        let mut engine = EngineBuilder::new(&cfg).manual_epochs().build();
+        // Requests far past several epoch boundaries must not close them.
+        engine.offer(&Request::new(0, 1, 100));
+        engine.offer(&Request::new(5 * cfg.cost.epoch_us, 2, 100));
+        assert_eq!(engine.costs().epochs(), 0, "no implicit closure");
+        // The explicit boundary still works.
+        let n = engine.force_epoch(5 * cfg.cost.epoch_us + 1);
+        assert_eq!(n, 4);
+        assert_eq!(engine.costs().epochs(), 1);
+        let report = engine.finish();
+        assert_eq!(report.epochs.len(), 2, "forced + final");
+    }
+
+    #[test]
+    fn custom_probe_observes_every_request() {
+        struct Counter(std::rc::Rc<std::cell::Cell<u64>>);
+        impl Probe for Counter {
+            fn on_request(&mut self, _r: &Request, _o: &Outcome, _c: &ProbeCtx) {
+                self.0.set(self.0.get() + 1);
+            }
+        }
+        let seen = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut engine = EngineBuilder::new(&tiny_cfg(PolicyKind::Fixed))
+            .probe(Box::new(Counter(seen.clone())))
+            .build();
+        for i in 0..10u64 {
+            engine.offer(&Request::new(i, i, 100));
+        }
+        engine.finish();
+        assert_eq!(seen.get(), 10);
+    }
+
+    #[test]
+    fn empty_run_still_bills_one_epoch() {
+        let report = run(&tiny_cfg(PolicyKind::Fixed), &mut VecSource::new(Vec::new()));
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.epochs.len(), 1);
+        assert_eq!(report.miss_ratio(), 0.0);
+        assert!(report.storage_cost > 0.0, "the open epoch is billed");
+    }
+
+    #[test]
+    fn epoch_billing_counts_all_epochs_despite_gaps() {
+        let mut cfg = tiny_cfg(PolicyKind::Fixed);
+        cfg.cost.epoch_us = HOUR;
+        let reqs = vec![
+            Request::new(0, 1, 100),
+            Request::new(2 * HOUR + MINUTE, 2, 100),
+            Request::new(2 * HOUR + 2 * MINUTE, 1, 100),
+        ];
+        let report = run(&cfg, &mut VecSource::new(reqs));
+        assert!(report.storage_series.len() >= 3, "epochs={}", report.storage_series.len());
+    }
+}

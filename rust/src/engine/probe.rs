@@ -1,0 +1,210 @@
+//! Composable run observers. The old simulator hard-coded its series
+//! sampling (`SAMPLE_EVERY`, the Fig. 9 balance tracker, the per-tenant
+//! summary pass) into each hand-rolled loop; probes make those observers
+//! pluggable so experiments attach exactly what they need and new
+//! diagnostics never fork the request path again.
+
+use super::{Core, Outcome, RunReport, TenantSummary, SAMPLE_EVERY};
+use crate::cluster::BalanceTracker;
+use crate::cost::CostTracker;
+use crate::metrics::TimeSeries;
+use crate::trace::Request;
+use crate::{TenantId, TimeUs};
+
+/// Read-only view of the engine state, handed to probes at each hook.
+pub struct ProbeCtx<'a> {
+    pub(crate) core: &'a Core,
+    pub(crate) costs: &'a CostTracker,
+    /// Requests offered so far (the current request included).
+    pub processed: u64,
+    /// Instances billed for the currently open epoch.
+    pub instances: u32,
+}
+
+impl ProbeCtx<'_> {
+    /// Current policy TTL, if the policy maintains one (Fig. 5 left).
+    pub fn ttl_secs(&self) -> Option<f64> {
+        self.core.ttl_secs()
+    }
+
+    /// Current virtual/shadow size in bytes (Fig. 5 right).
+    pub fn shadow_size(&self) -> Option<u64> {
+        self.core.shadow_size()
+    }
+
+    /// Per-instance `(slots, requests, misses)` snapshot (cluster runs
+    /// only — the vertical mode has no instances to balance).
+    pub fn balance_snapshot(&self) -> Option<Vec<(usize, u64, u64)>> {
+        match self.core {
+            Core::Cluster(b) => Some(b.cluster.balance_snapshot()),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// The run's cost ledger.
+    pub fn costs(&self) -> &CostTracker {
+        self.costs
+    }
+
+    /// Per-tenant traffic/billing/timer rows (one per tenant that sent
+    /// traffic; empty for the vertical mode, which is tenant-oblivious).
+    pub fn tenant_summaries(&self) -> Vec<TenantSummary> {
+        match self.core {
+            Core::Cluster(b) => {
+                let ttls = b.tenant_ttls();
+                let mut out = Vec::new();
+                for (i, hm) in b.tenant_stats().iter().enumerate() {
+                    if hm.total() == 0 {
+                        continue;
+                    }
+                    let t = i as TenantId;
+                    let ledger = self.costs.tenant_ledger(t);
+                    let ttl_secs = ttls
+                        .as_ref()
+                        .and_then(|v| v.iter().find(|(id, _)| *id == t).map(|&(_, x)| x));
+                    out.push(TenantSummary {
+                        tenant: t,
+                        requests: hm.total(),
+                        misses: hm.misses,
+                        miss_dollars: ledger.miss_dollars,
+                        ttl_secs,
+                    });
+                }
+                out
+            }
+            Core::Vertical { .. } => Vec::new(),
+        }
+    }
+}
+
+/// A run observer attached to an [`super::Engine`]. All hooks default to
+/// no-ops; `finish` folds whatever the probe accumulated into the report.
+pub trait Probe {
+    /// Called after every request is served.
+    fn on_request(&mut self, _req: &Request, _outcome: &Outcome, _ctx: &ProbeCtx) {}
+
+    /// Called at each epoch closure, before billing and resizing (so the
+    /// closing epoch's per-instance stats are still intact).
+    fn on_epoch(&mut self, _epoch_end: TimeUs, _ctx: &ProbeCtx) {}
+
+    /// Fold the probe's observations into the finished report.
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, _report: &mut RunReport) {}
+}
+
+/// Samples the policy TTL every `every` requests into the report's
+/// `ttl_series` (Fig. 5 left).
+pub struct TtlProbe {
+    every: u64,
+    series: TimeSeries,
+}
+
+impl TtlProbe {
+    /// Default sampling cadence ([`SAMPLE_EVERY`]).
+    pub fn sampled(policy: &str) -> Self {
+        Self::with_every(policy, SAMPLE_EVERY)
+    }
+
+    pub fn with_every(policy: &str, every: u64) -> Self {
+        TtlProbe {
+            every: every.max(1),
+            series: TimeSeries::new(format!("{policy}_ttl_secs")),
+        }
+    }
+}
+
+impl Probe for TtlProbe {
+    fn on_request(&mut self, req: &Request, _outcome: &Outcome, ctx: &ProbeCtx) {
+        if ctx.processed % self.every == 0 {
+            if let Some(t) = ctx.ttl_secs() {
+                self.series.push(req.ts, t);
+            }
+        }
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        report.ttl_series = self.series;
+    }
+}
+
+/// Samples the virtual/shadow size every `every` requests into the
+/// report's `shadow_series` (Fig. 5 right).
+pub struct ShadowProbe {
+    every: u64,
+    series: TimeSeries,
+}
+
+impl ShadowProbe {
+    /// Default cadence; `suffix` names the series (`shadow_bytes` for
+    /// cluster runs, `vsize_bytes` for the vertical mode).
+    pub fn sampled(policy: &str, suffix: &str) -> Self {
+        Self::with_every(policy, suffix, SAMPLE_EVERY)
+    }
+
+    pub fn with_every(policy: &str, suffix: &str, every: u64) -> Self {
+        ShadowProbe {
+            every: every.max(1),
+            series: TimeSeries::new(format!("{policy}_{suffix}")),
+        }
+    }
+}
+
+impl Probe for ShadowProbe {
+    fn on_request(&mut self, req: &Request, _outcome: &Outcome, ctx: &ProbeCtx) {
+        if ctx.processed % self.every == 0 {
+            if let Some(s) = ctx.shadow_size() {
+                self.series.push(req.ts, s as f64);
+            }
+        }
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        report.shadow_series = self.series;
+    }
+}
+
+/// Records the Fig. 9 per-instance balance snapshot at every epoch
+/// boundary.
+pub struct BalanceProbe {
+    tracker: BalanceTracker,
+}
+
+impl BalanceProbe {
+    pub fn new() -> Self {
+        BalanceProbe { tracker: BalanceTracker::new() }
+    }
+}
+
+impl Default for BalanceProbe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Probe for BalanceProbe {
+    fn on_epoch(&mut self, epoch_end: TimeUs, ctx: &ProbeCtx) {
+        if let Some(snap) = ctx.balance_snapshot() {
+            self.tracker.record(epoch_end, &snap);
+        }
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        let me = *self;
+        report.balance = me.tracker;
+    }
+}
+
+/// Fills the report's per-tenant breakdown from the run's final state.
+#[derive(Default)]
+pub struct TenantProbe;
+
+impl TenantProbe {
+    pub fn new() -> Self {
+        TenantProbe
+    }
+}
+
+impl Probe for TenantProbe {
+    fn finish(self: Box<Self>, ctx: &ProbeCtx, report: &mut RunReport) {
+        report.tenants = ctx.tenant_summaries();
+    }
+}

@@ -16,7 +16,7 @@
 
 use super::ExpContext;
 use crate::config::{GainSchedule, PolicyKind};
-use crate::sim::run;
+use crate::engine::run;
 use crate::trace::VecSource;
 use crate::vcache::{run_per_content, PerContentConfig};
 use crate::Result;
@@ -118,10 +118,9 @@ pub fn run_instance_ablation(ctx: &ExpContext) -> Result<AblationReport> {
 
 /// Per-content TTL (§7) vs the global-TTL ideal cache vs TTL-OPT.
 pub fn run_per_content_ablation(ctx: &ExpContext) -> Result<AblationReport> {
-    use crate::sim::run_ideal_ttl;
     let mut cfg = ctx.cfg.clone();
     cfg.scaler.policy = PolicyKind::IdealTtl;
-    let global = run_ideal_ttl(&cfg, &mut VecSource::new(ctx.trace.clone()));
+    let global = run(&cfg, &mut ctx.source());
     let pc = run_per_content(&PerContentConfig::default(), &ctx.cfg.cost, &ctx.trace);
     let opt = crate::ttlopt::solve(&ctx.trace, &ctx.cfg.cost);
 
@@ -172,7 +171,6 @@ pub fn run_per_content_ablation(ctx: &ExpContext) -> Result<AblationReport> {
 
 /// Gain-schedule sweep on the ideal TTL cache.
 pub fn run_gain_ablation(ctx: &ExpContext) -> Result<AblationReport> {
-    use crate::sim::run_ideal_ttl;
     let mut rows = Vec::new();
     let variants: Vec<(&str, Box<dyn Fn(&mut crate::config::Config)>)> = vec![
         ("auto-scaled (default)", Box::new(|_c| {})),
@@ -201,7 +199,7 @@ pub fn run_gain_ablation(ctx: &ExpContext) -> Result<AblationReport> {
         let mut cfg = ctx.cfg.clone();
         cfg.scaler.policy = PolicyKind::IdealTtl;
         mutate(&mut cfg);
-        let res = run_ideal_ttl(&cfg, &mut VecSource::new(ctx.trace.clone()));
+        let res = run(&cfg, &mut ctx.source());
         rows.push((label.to_string(), res.storage_cost, res.miss_cost, res.total_cost));
     }
     let report = AblationReport {

@@ -15,7 +15,7 @@
 
 use super::{calibrate_miss_cost, ExpContext, TraceScale};
 use crate::config::PolicyKind;
-use crate::sim::{run, SimResult};
+use crate::engine::{run, RunReport};
 use crate::tenant::{TenantSpec, TrafficClass};
 use crate::trace::{Request, SynthGenerator, TenantMux, VecSource};
 use crate::Result;
@@ -43,7 +43,7 @@ pub struct TenantOutcome {
 #[derive(Debug)]
 pub struct Fig10Report {
     pub outcomes: Vec<TenantOutcome>,
-    pub elastic: SimResult,
+    pub elastic: RunReport,
     /// Aggregate cost of the shared elastic cluster.
     pub elastic_total: f64,
     /// Sum of the per-tenant best static clusters.

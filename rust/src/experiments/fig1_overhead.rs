@@ -10,10 +10,8 @@
 //! panel) and the normalized closed-loop throughput (right panel).
 
 use super::ExpContext;
-use crate::balancer::Balancer;
 use crate::config::{Config, PolicyKind};
-use crate::cost::CostTracker;
-use crate::scaler::make_sizer;
+use crate::engine::EngineBuilder;
 use crate::Result;
 use std::time::Instant;
 
@@ -55,28 +53,29 @@ impl Fig1Report {
 }
 
 fn run_variant(cfg: &Config, trace: &[crate::trace::Request], name: &str) -> RouterMeasurement {
-    let sizer = make_sizer(cfg);
-    let initial = cfg.scaler.fixed_instances;
-    let mut b = Balancer::from_config(cfg, sizer, initial);
-    let mut costs = CostTracker::new(cfg.cost.clone());
+    // The bare engine request path (no series probes) at the fixed
+    // baseline's initial size, so all variants start from the same
+    // cluster shape.
+    let mut engine = EngineBuilder::new(cfg)
+        .initial_instances(cfg.scaler.fixed_instances)
+        .no_default_probes()
+        .build();
     let mut cpu_per_hour: Vec<(u64, f64)> = Vec::new();
     let mut hour_end = crate::HOUR;
     let mut hour_cpu = 0.0f64;
-    let mut epoch_end = cfg.cost.epoch_us;
 
     let t_all = Instant::now();
     for r in trace {
-        while r.ts >= epoch_end {
-            b.end_epoch(epoch_end);
-            epoch_end += cfg.cost.epoch_us;
-        }
         while r.ts >= hour_end {
             cpu_per_hour.push((hour_end, hour_cpu));
             hour_cpu = 0.0;
             hour_end += crate::HOUR;
         }
+        // Close elapsed epochs outside the hot window: Fig. 1 measures
+        // per-request router overhead, not epoch-boundary billing work.
+        engine.advance_to(r.ts);
         let hot = Instant::now();
-        b.handle(r, &mut costs);
+        engine.offer(r);
         hour_cpu += hot.elapsed().as_secs_f64();
     }
     cpu_per_hour.push((hour_end, hour_cpu));
@@ -86,7 +85,7 @@ fn run_variant(cfg: &Config, trace: &[crate::trace::Request], name: &str) -> Rou
         cpu_per_hour,
         throughput: trace.len() as f64 / elapsed.max(1e-9),
         throughput_norm: 0.0, // filled by caller
-        total_work_units: b.work_units,
+        total_work_units: engine.work_units(),
     }
 }
 

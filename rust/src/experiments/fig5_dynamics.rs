@@ -3,13 +3,12 @@
 
 use super::ExpContext;
 use crate::config::PolicyKind;
-use crate::sim::{run, SimResult};
-use crate::trace::VecSource;
+use crate::engine::{run, RunReport};
 use crate::Result;
 
 #[derive(Debug)]
 pub struct Fig5Report {
-    pub result: SimResult,
+    pub result: RunReport,
     /// Peak/trough ratio of the virtual size within each full day.
     pub daily_swings: Vec<f64>,
 }
@@ -39,8 +38,7 @@ impl Fig5Report {
 pub fn run_fig5(ctx: &ExpContext) -> Result<Fig5Report> {
     let mut cfg = ctx.cfg.clone();
     cfg.scaler.policy = PolicyKind::Ttl;
-    let mut src = VecSource::new(ctx.trace.clone());
-    let result = run(&cfg, &mut src);
+    let result = run(&cfg, &mut ctx.source());
 
     // Daily swing: max/min of the shadow series per full day.
     let mut daily_swings = Vec::new();

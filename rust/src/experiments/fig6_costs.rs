@@ -11,24 +11,24 @@
 
 use super::ExpContext;
 use crate::config::{Config, PolicyKind};
+use crate::engine::{run, RunReport};
 use crate::metrics::merged_csv;
-use crate::sim::{run, SimResult};
 use crate::trace::VecSource;
 use crate::Result;
 
 /// Everything Figs. 6/7 + headline need.
 #[derive(Debug)]
 pub struct Fig6Report {
-    pub fixed: SimResult,
-    pub ttl: SimResult,
-    pub mrc: SimResult,
-    pub ideal: SimResult,
+    pub fixed: RunReport,
+    pub ttl: RunReport,
+    pub mrc: RunReport,
+    pub ideal: RunReport,
     /// Baseline instance count used for "fixed".
     pub fixed_instances: u32,
 }
 
 impl Fig6Report {
-    pub fn savings_vs_fixed(&self, r: &SimResult) -> f64 {
+    pub fn savings_vs_fixed(&self, r: &RunReport) -> f64 {
         1.0 - r.total_cost / self.fixed.total_cost.max(1e-12)
     }
 
@@ -92,12 +92,11 @@ pub fn calibrate_fixed_instances(cfg: &Config, trace: &[crate::trace::Request]) 
 pub fn run_fig6_fig7_headline(ctx: &ExpContext) -> Result<Fig6Report> {
     let fixed_instances = calibrate_fixed_instances(&ctx.cfg, &ctx.trace);
 
-    let run_one = |policy: PolicyKind, fixed_n: u32| -> SimResult {
+    let run_one = |policy: PolicyKind, fixed_n: u32| -> RunReport {
         let mut cfg = ctx.cfg.clone();
         cfg.scaler.policy = policy;
         cfg.scaler.fixed_instances = fixed_n;
-        let mut src = VecSource::new(ctx.trace.clone());
-        run(&cfg, &mut src)
+        run(&cfg, &mut ctx.source())
     };
 
     let fixed = run_one(PolicyKind::Fixed, fixed_instances);

@@ -4,9 +4,8 @@
 
 use super::ExpContext;
 use crate::config::PolicyKind;
+use crate::engine::run;
 use crate::metrics::merged_csv;
-use crate::sim::run;
-use crate::trace::VecSource;
 use crate::ttlopt::{solve, TtlOptResult};
 use crate::Result;
 
@@ -49,11 +48,11 @@ pub fn run_fig8(ctx: &ExpContext) -> Result<Fig8Report> {
     let mut fixed_cfg = ctx.cfg.clone();
     fixed_cfg.scaler.policy = PolicyKind::Fixed;
     fixed_cfg.scaler.fixed_instances = fixed_instances;
-    let fixed = run(&fixed_cfg, &mut VecSource::new(ctx.trace.clone()));
+    let fixed = run(&fixed_cfg, &mut ctx.source());
 
     let mut ttl_cfg = ctx.cfg.clone();
     ttl_cfg.scaler.policy = PolicyKind::Ttl;
-    let ttl = run(&ttl_cfg, &mut VecSource::new(ctx.trace.clone()));
+    let ttl = run(&ttl_cfg, &mut ctx.source());
 
     let opt = solve(&ctx.trace, &ctx.cfg.cost);
 

@@ -5,14 +5,13 @@
 
 use super::ExpContext;
 use crate::config::PolicyKind;
+use crate::engine::{run, RunReport};
 use crate::metrics::merged_csv;
-use crate::sim::{run, SimResult};
-use crate::trace::VecSource;
 use crate::Result;
 
 #[derive(Debug)]
 pub struct Fig9Report {
-    pub result: SimResult,
+    pub result: RunReport,
     pub worst_slots: f64,
     pub worst_requests: f64,
     pub worst_misses: f64,
@@ -41,8 +40,7 @@ impl Fig9Report {
 pub fn run_fig9(ctx: &ExpContext) -> Result<Fig9Report> {
     let mut cfg = ctx.cfg.clone();
     cfg.scaler.policy = PolicyKind::Ttl;
-    let mut src = VecSource::new(ctx.trace.clone());
-    let result = run(&cfg, &mut src);
+    let result = run(&cfg, &mut ctx.source());
     let (worst_slots, worst_requests, worst_misses) = result.balance.worst();
 
     let b = &result.balance;

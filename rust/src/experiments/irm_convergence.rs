@@ -5,8 +5,8 @@
 
 use super::ExpContext;
 use crate::config::PolicyKind;
+use crate::engine::run;
 use crate::runtime::{BucketedStats, Planner};
-use crate::sim::run_ideal_ttl;
 use crate::trace::{IrmConfig, IrmGenerator};
 use crate::Result;
 
@@ -51,12 +51,13 @@ impl IrmReport {
 }
 
 pub fn run_irm_convergence(ctx: &ExpContext, irm: &IrmConfig) -> Result<IrmReport> {
-    // 1) Run the ideal TTL cache with the SA controller on IRM traffic.
+    // 1) Run the ideal TTL cache with the SA controller on IRM traffic —
+    //    through the engine's vertical mode, like every other policy.
     let mut cfg = ctx.cfg.clone();
     cfg.scaler.policy = PolicyKind::IdealTtl;
     let trace = IrmGenerator::new(irm.clone()).generate();
     let mut src = crate::trace::VecSource::new(trace.clone());
-    let result = run_ideal_ttl(&cfg, &mut src);
+    let result = run(&cfg, &mut src);
 
     let samples = result.ttl_series.samples();
     let tail = &samples[samples.len() * 3 / 4..];

@@ -59,6 +59,12 @@ impl ExpContext {
     pub fn write_csv(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
         crate::metrics::write_csv(self.out_dir.join(name), header, rows)
     }
+
+    /// A fresh in-memory source replaying the context trace from the
+    /// start (experiments run several policies over the same trace).
+    pub fn source(&self) -> crate::trace::VecSource {
+        crate::trace::VecSource::new(self.trace.clone())
+    }
 }
 
 /// Trace scale presets: the paper's trace is 2·10⁹ requests over 30 days;
@@ -140,7 +146,7 @@ pub fn calibrate_miss_cost(cfg: &Config, trace: &[Request], n_ref: u32) -> f64 {
     let mut probe_cfg = cfg.clone();
     probe_cfg.scaler.policy = PolicyKind::Fixed;
     probe_cfg.scaler.fixed_instances = n_ref;
-    let res = crate::sim::run(&probe_cfg, &mut VecSource::new(prefix.to_vec()));
+    let res = crate::engine::run(&probe_cfg, &mut VecSource::new(prefix.to_vec()));
     if res.misses == 0 {
         return cfg.cost.miss_cost_dollars;
     }

@@ -16,9 +16,32 @@
 //!   compares against: static provisioning, exact-MRC-driven sizing, the
 //!   ideal (vertically billed) TTL cache, and the clairvoyant **TTL-OPT**
 //!   lower bound (Algorithm 1) ([`scaler`], [`mrc`], [`ttlopt`]);
-//! * a discrete-event **testbed** that replays (synthetic) CDN traces
-//!   through the real data structures and bills by ElastiCache-style
-//!   epochs ([`sim`], [`trace`], [`cost`]);
+//! * the **streaming execution engine** ([`engine`]) — the one request
+//!   path behind everything above: `EngineBuilder` (config + policy +
+//!   probes) produces an `Engine` driven step by step
+//!   (`offer`/`advance_to`/`finish`), with a uniform policy registry in
+//!   which every [`config::PolicyKind`] is first-class and composable
+//!   `Probe` observers for series/balance/tenant diagnostics. The
+//!   canonical way to run a policy over a trace:
+//!
+//!   ```no_run
+//!   use elastictl::config::Config;
+//!   use elastictl::engine::EngineBuilder;
+//!   use elastictl::trace::{FileSource, RequestSource};
+//!
+//!   let cfg = Config::default();
+//!   let mut src = FileSource::open("trace.bin")?; // streams, no Vec in RAM
+//!   let mut engine = EngineBuilder::new(&cfg).build();
+//!   while let Some(req) = src.next_request() {
+//!       engine.offer(&req);
+//!   }
+//!   let report = engine.finish();
+//!   println!("total ${:.4}", report.total_cost);
+//!   # Ok::<(), anyhow::Error>(())
+//!   ```
+//! * a discrete-event **testbed** facade that replays (synthetic) CDN
+//!   traces through the engine and bills by ElastiCache-style epochs
+//!   ([`sim`], [`trace`], [`cost`]);
 //! * a PJRT-backed **analytic planner** that evaluates the paper's IRM cost
 //!   model `C(T) = Σ_i c_i + (λ_i m_i − c_i) e^{−λ_i T}` (eq. 4) via an
 //!   AOT-compiled JAX/Pallas artifact ([`runtime`]);
@@ -41,6 +64,7 @@ pub mod cache;
 pub mod cluster;
 pub mod config;
 pub mod cost;
+pub mod engine;
 pub mod experiments;
 pub mod metrics;
 pub mod mrc;

@@ -15,7 +15,7 @@
 
 use elastictl::config::{Config, PolicyKind};
 use elastictl::experiments::{self, ExpContext, TraceScale};
-use elastictl::trace::{self, IrmConfig, IrmGenerator, SynthConfig, SynthGenerator, VecSource};
+use elastictl::trace::{self, FileSource, IrmConfig, IrmGenerator, SynthConfig, SynthGenerator};
 use elastictl::Result;
 use std::path::PathBuf;
 
@@ -72,6 +72,9 @@ fn parse_scale(s: &str) -> Result<TraceScale> {
     })
 }
 
+/// Load a whole trace into memory — only for the offline solvers
+/// (`ttlopt`, `plan`) that need random access; `run` streams via
+/// [`FileSource`] instead.
 fn read_any_trace(path: &PathBuf) -> Result<Vec<trace::Request>> {
     if path.extension().map(|e| e == "csv").unwrap_or(false) {
         trace::read_csv(path)
@@ -139,15 +142,12 @@ fn main() -> Result<()> {
             if let Some(n) = args.flag("fixed-instances") {
                 cfg.scaler.fixed_instances = n.parse()?;
             }
-            let reqs = read_any_trace(&path)?;
-            let result = if cfg.scaler.policy == PolicyKind::Analytic {
-                let sizer = Box::new(elastictl::runtime::AnalyticSizer::from_config(&cfg));
-                let mut src = VecSource::new(reqs);
-                elastictl::sim::run_policy(&cfg, &mut src, sizer, cfg.scaler.min_instances)
-            } else {
-                let mut src = VecSource::new(reqs);
-                elastictl::sim::run(&cfg, &mut src)
-            };
+            // Stream the trace file through the engine — every policy
+            // (analytic included) takes the same entry point, and the
+            // trace never materializes in memory.
+            let mut src = FileSource::open(&path)?;
+            let result = elastictl::engine::run(&cfg, &mut src);
+            src.check()?;
             println!(
                 "policy={} requests={} miss_ratio={:.4} spurious={} storage=${:.4} miss=${:.4} total=${:.4}",
                 result.policy,

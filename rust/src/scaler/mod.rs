@@ -246,17 +246,15 @@ impl EpochSizer for MrcSizer {
     }
 }
 
-/// Build the configured sizer (Fixed/Ttl/Mrc/TenantTtl — Analytic and
-/// IdealTtl are constructed by their owning modules).
+/// Build the configured sizer via the engine's uniform policy registry
+/// ([`crate::engine::build_sizer`]). Every [`crate::config::PolicyKind`]
+/// — `analytic` and `ideal_ttl` included — has a first-class entry, so
+/// this can no longer panic. Note that for `ideal_ttl` the returned
+/// sizer only carries §6.1 cost semantics when run under the engine's
+/// vertical billing mode ([`crate::engine::run`] selects it from the
+/// config); see [`crate::engine::build_sizer`]'s billing caveat.
 pub fn make_sizer(cfg: &Config) -> Box<dyn EpochSizer> {
-    use crate::config::PolicyKind::*;
-    match cfg.scaler.policy {
-        Fixed => Box::new(FixedSizer::new(cfg.scaler.fixed_instances)),
-        Ttl => Box::new(TtlSizer::from_config(cfg)),
-        Mrc => Box::new(MrcSizer::from_config(cfg)),
-        TenantTtl => Box::new(crate::tenant::TenantTtlSizer::from_config(cfg)),
-        other => panic!("make_sizer cannot build {:?}; use its owning module", other),
-    }
+    crate::engine::build_sizer(cfg)
 }
 
 #[cfg(test)]
@@ -392,11 +390,15 @@ mod tests {
     #[test]
     fn factory_builds_each_kind() {
         use crate::config::PolicyKind;
+        // Every kind — including the two the pre-engine factory panicked
+        // on — now builds through the one registry.
         for (kind, name) in [
             (PolicyKind::Fixed, "fixed"),
             (PolicyKind::Ttl, "ttl"),
             (PolicyKind::Mrc, "mrc"),
             (PolicyKind::TenantTtl, "tenant_ttl"),
+            (PolicyKind::Analytic, "analytic"),
+            (PolicyKind::IdealTtl, "ideal_ttl"),
         ] {
             let s = make_sizer(&Config::with_policy(kind));
             assert_eq!(s.name(), name);

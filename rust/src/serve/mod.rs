@@ -22,16 +22,18 @@
 //! key. Malformed input answers an `ERR …` line and keeps the connection
 //! open; only `QUIT` (or EOF) closes it.
 //!
-//! The server wraps the same [`Balancer`] the simulator uses — the
-//! request path is identical; only the transport differs. One OS thread
-//! per connection (the build is offline-only, so no async runtime crate;
-//! the shared balancer sits behind a mutex exactly as mcrouter's shared
-//! routing state does).
+//! The server drives the same [`Engine`] the simulator uses — the request
+//! path is identical; only the transport differs (requests arrive over
+//! TCP instead of from a trace source). The engine runs in manual-epoch
+//! mode: `EPOCH` is the only thing that closes a billing epoch and
+//! applies the sizing decision, so the operator keeps full control of
+//! the resize cadence. One OS thread per connection
+//! (the build is offline-only, so no async runtime crate; the engine sits
+//! behind a state-owner thread exactly as mcrouter's shared routing state
+//! does).
 
-use crate::balancer::Balancer;
 use crate::config::Config;
-use crate::cost::CostTracker;
-use crate::scaler::make_sizer;
+use crate::engine::{Engine, EngineBuilder};
 use crate::trace::Request;
 use crate::{Result, TenantId};
 use std::io::{BufRead, BufReader, Write};
@@ -40,8 +42,7 @@ use std::sync::mpsc;
 
 /// Shared server state.
 pub struct ServerState {
-    pub balancer: Balancer,
-    pub costs: CostTracker,
+    pub engine: Engine,
     /// Whether `GET <tenant>/<key>` prefixes are interpreted. Off for
     /// legacy single-tenant configs so numeric-prefixed keys keep their
     /// pre-tenant meaning.
@@ -51,20 +52,18 @@ pub struct ServerState {
 
 impl ServerState {
     pub fn new(cfg: &Config) -> Self {
-        let sizer = make_sizer(cfg);
-        let initial = match cfg.scaler.policy {
-            crate::config::PolicyKind::Fixed => cfg.scaler.fixed_instances,
-            _ => cfg.scaler.min_instances.max(1),
-        };
-        let mut costs = CostTracker::new(cfg.cost.clone());
-        for spec in &cfg.tenants {
-            costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
-        }
         let tenant_routing = !cfg.tenants.is_empty()
             || cfg.scaler.policy == crate::config::PolicyKind::TenantTtl;
         ServerState {
-            balancer: Balancer::from_config(cfg, sizer, initial),
-            costs,
+            // The bare request path: the server reports via STATS, not
+            // via sampled figure series. Epochs stay manual — only the
+            // operator's EPOCH command bills and resizes, exactly as
+            // before the engine port; a GET after an idle hour must not
+            // silently close the elapsed epochs.
+            engine: EngineBuilder::new(cfg)
+                .no_default_probes()
+                .manual_epochs()
+                .build(),
             tenant_routing,
             start: std::time::Instant::now(),
         }
@@ -100,7 +99,7 @@ impl ServerState {
                     size: size.min(u32::MAX as u64) as u32,
                     tenant,
                 };
-                let served = self.balancer.handle(&req, &mut self.costs);
+                let served = self.engine.offer(&req);
                 Some(
                     if served.hit {
                         "HIT"
@@ -115,20 +114,16 @@ impl ServerState {
             Some("STATS") => match parts.next() {
                 None => Some(format!(
                     "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
-                    self.balancer.requests,
-                    self.balancer.misses,
-                    self.balancer.spurious_misses,
-                    self.balancer.cluster.len(),
-                    self.costs.miss_total(),
-                    self.balancer
+                    self.engine.requests(),
+                    self.engine.misses(),
+                    self.engine.spurious_misses(),
+                    self.engine.instances(),
+                    self.engine.costs().miss_total(),
+                    self.engine
                         .ttl_secs()
                         .map(|t| format!("{t:.3}"))
                         .unwrap_or_else(|| "null".into()),
-                    self.balancer
-                        .tenant_stats()
-                        .iter()
-                        .filter(|hm| hm.total() > 0)
-                        .count(),
+                    self.engine.active_tenants(),
                 )),
                 Some(t) => match t.parse::<TenantId>() {
                     Ok(tenant) => Some(self.tenant_stats_line(tenant)),
@@ -136,7 +131,7 @@ impl ServerState {
                 },
             },
             Some("EPOCH") => {
-                let n = self.balancer.end_epoch(self.now_us());
+                let n = self.engine.force_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
             }
             Some("QUIT") => None,
@@ -147,10 +142,10 @@ impl ServerState {
 
     /// One-line JSON for `STATS <tenant>`.
     fn tenant_stats_line(&self, tenant: TenantId) -> String {
-        let hm = self.balancer.tenant_stats_of(tenant);
-        let ledger = self.costs.tenant_ledger(tenant);
+        let hm = self.engine.tenant_stats_of(tenant);
+        let ledger = self.engine.costs().tenant_ledger(tenant);
         let ttl = self
-            .balancer
+            .engine
             .tenant_ttls()
             .and_then(|v| v.into_iter().find(|(id, _)| *id == tenant))
             .map(|(_, t)| format!("{t:.3}"))
@@ -189,7 +184,7 @@ fn fxhash_str(s: &str) -> u64 {
 }
 
 /// Command channel to the state-owner thread: one protocol line plus a
-/// reply channel. The balancer's shadow structures hold non-`Send` PJRT
+/// reply channel. The engine's shadow structures hold non-`Send` PJRT
 /// handles in the analytic configuration, so a single dedicated thread
 /// owns all state (mcrouter's shared routing state, without locks on the
 /// request path).
@@ -278,6 +273,31 @@ mod tests {
         assert!(stats.contains("\"tenants\":1"), "{stats}");
         let resp = st.handle_line("EPOCH").unwrap();
         assert!(resp.starts_with("RESIZED "), "{resp}");
+    }
+
+    #[test]
+    fn ideal_ttl_policy_is_served_not_rejected() {
+        // The pre-engine server panicked in `make_sizer` for this policy;
+        // the vertical billing mode serves it like any other.
+        let mut st = state(PolicyKind::IdealTtl);
+        assert_eq!(st.handle_line("GET k 100").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET k 100").unwrap(), "HIT");
+        let stats = st.handle_line("STATS").unwrap();
+        assert!(stats.contains("\"requests\":2"), "{stats}");
+        assert!(st.handle_line("EPOCH").unwrap().starts_with("RESIZED"));
+    }
+
+    #[test]
+    fn gets_never_close_epochs_implicitly() {
+        // The resize/billing cadence belongs to the operator's EPOCH
+        // command: request timestamps (wall clock) must not close epochs
+        // behind their back, no matter how much time passed.
+        let mut st = state(PolicyKind::Ttl);
+        st.handle_line("GET k1 100");
+        st.handle_line("GET k2 100");
+        assert_eq!(st.engine.costs().epochs(), 0, "no implicit epoch closure");
+        st.handle_line("EPOCH");
+        assert_eq!(st.engine.costs().epochs(), 1, "EPOCH closes exactly one");
     }
 
     #[test]

@@ -1,256 +1,56 @@
 //! The discrete-event testbed (§6.1 substitute, DESIGN.md §3): replays a
 //! trace through the real balancer/cluster/policy data structures with
 //! epoch billing, producing the series behind Figs. 5–9.
+//!
+//! Since the engine redesign this module is a thin facade: every entry
+//! point drives [`crate::engine::Engine`], the same request path the TCP
+//! server and the analytic runtime driver use — there is exactly one
+//! epoch-closing loop in the codebase. `SimResult` is the engine's
+//! [`crate::engine::RunReport`] under its historical name.
 
-use crate::balancer::Balancer;
-use crate::cluster::BalanceTracker;
-use crate::config::{Config, CostConfig, PolicyKind};
-use crate::cost::{CostTracker, EpochCosts};
-use crate::metrics::TimeSeries;
-use crate::scaler::{make_sizer, EpochSizer};
+pub use crate::engine::{RunReport as SimResult, TenantSummary};
+
+use crate::config::Config;
+use crate::engine::{EngineBuilder, EnginePolicy, VerticalTtl};
+use crate::scaler::EpochSizer;
 use crate::trace::RequestSource;
-use crate::vcache::VirtualCache;
-use crate::{TenantId, TimeUs};
 
-/// Per-tenant slice of a run: who asked for what, who missed, what it
-/// cost, and where that tenant's timer converged.
-#[derive(Debug, Clone, PartialEq)]
-pub struct TenantSummary {
-    pub tenant: TenantId,
-    pub requests: u64,
-    pub misses: u64,
-    /// Weighted miss dollars attributed to this tenant.
-    pub miss_dollars: f64,
-    /// Final per-tenant TTL, when the policy ran one controller per
-    /// tenant.
-    pub ttl_secs: Option<f64>,
+/// Run the configured policy over a source. Every [`crate::config::PolicyKind`]
+/// — `analytic` and `ideal_ttl` included — goes through the same engine
+/// entry point (the pre-engine dispatch panicked on `analytic`).
+pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> SimResult {
+    crate::engine::run(cfg, source)
 }
 
-/// Result of one policy run over a trace.
-#[derive(Debug)]
-pub struct SimResult {
-    pub policy: String,
-    pub requests: u64,
-    pub misses: u64,
-    pub spurious_misses: u64,
-    pub work_units: u64,
-    pub epochs: Vec<EpochCosts>,
-    /// Cumulative dollars.
-    pub storage_series: TimeSeries,
-    pub miss_series: TimeSeries,
-    pub total_series: TimeSeries,
-    /// Instances active per epoch.
-    pub instances_series: TimeSeries,
-    /// TTL (s) sampled periodically (TTL-family policies).
-    pub ttl_series: TimeSeries,
-    /// Virtual/shadow size (bytes) sampled periodically.
-    pub shadow_series: TimeSeries,
-    /// Fig. 9 balance tracker.
-    pub balance: BalanceTracker,
-    /// Per-tenant breakdown (one row per tenant that sent traffic).
-    pub tenants: Vec<TenantSummary>,
-    pub total_cost: f64,
-    pub storage_cost: f64,
-    pub miss_cost: f64,
-}
-
-impl SimResult {
-    pub fn miss_ratio(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.misses as f64 / self.requests as f64
-        }
-    }
-
-    /// One summary row for tables: name, requests, miss%, storage, miss$,
-    /// total$.
-    pub fn summary_row(&self) -> Vec<String> {
-        vec![
-            self.policy.clone(),
-            self.requests.to_string(),
-            format!("{:.4}", self.miss_ratio()),
-            format!("{:.4}", self.storage_cost),
-            format!("{:.4}", self.miss_cost),
-            format!("{:.4}", self.total_cost),
-        ]
-    }
-}
-
-/// How often the TTL / shadow-size series are sampled.
-const SAMPLE_EVERY: u64 = 4096;
-
-/// Run a policy over a trace source.
+/// Run a caller-constructed horizontal sizer over a source.
 pub fn run_policy(
     cfg: &Config,
     source: &mut dyn RequestSource,
     sizer: Box<dyn EpochSizer>,
     initial_instances: u32,
 ) -> SimResult {
-    let name = sizer.name().to_string();
-    let mut balancer = Balancer::from_config(cfg, sizer, initial_instances);
-    let mut costs = CostTracker::new(cfg.cost.clone());
-    for spec in &cfg.tenants {
-        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
-    }
-    let mut balance = BalanceTracker::new();
-    let mut ttl_series = TimeSeries::new(format!("{name}_ttl_secs"));
-    let mut shadow_series = TimeSeries::new(format!("{name}_shadow_bytes"));
-    let epoch_us = cfg.cost.epoch_us.max(1);
-
-    let mut epoch_end: TimeUs = epoch_us;
-    let mut active_instances = balancer.cluster.len() as u32;
-    let mut processed: u64 = 0;
-    let mut last_ts: TimeUs = 0;
-
+    let mut engine = EngineBuilder::new(cfg)
+        .sizer(sizer)
+        .initial_instances(initial_instances)
+        .build();
     while let Some(req) = source.next_request() {
-        // Close any epochs that elapsed before this request.
-        while req.ts >= epoch_end {
-            balance.record(epoch_end, &balancer.cluster.balance_snapshot());
-            costs.end_epoch(epoch_end, active_instances);
-            balancer.cluster.reset_epoch_stats();
-            active_instances = balancer.end_epoch(epoch_end);
-            epoch_end += epoch_us;
-        }
-        balancer.handle(&req, &mut costs);
-        processed += 1;
-        last_ts = req.ts;
-        if processed % SAMPLE_EVERY == 0 {
-            if let Some(t) = balancer.ttl_secs() {
-                ttl_series.push(req.ts, t);
-            }
-            if let Some(s) = balancer.shadow_size() {
-                shadow_series.push(req.ts, s as f64);
-            }
-        }
+        engine.offer(&req);
     }
-    // Bill the final (partial) epoch at full price (§2.3).
-    balance.record(epoch_end, &balancer.cluster.balance_snapshot());
-    costs.end_epoch(epoch_end.max(last_ts), active_instances);
-
-    // Per-tenant breakdown: requests/misses from the balancer, weighted
-    // dollars from the tracker, final timers from the policy (if any).
-    let ttls = balancer.tenant_ttls();
-    let mut tenants = Vec::new();
-    for (i, hm) in balancer.tenant_stats().iter().enumerate() {
-        if hm.total() == 0 {
-            continue;
-        }
-        let t = i as TenantId;
-        let ledger = costs.tenant_ledger(t);
-        let ttl_secs = ttls
-            .as_ref()
-            .and_then(|v| v.iter().find(|(id, _)| *id == t).map(|&(_, x)| x));
-        tenants.push(TenantSummary {
-            tenant: t,
-            requests: hm.total(),
-            misses: hm.misses,
-            miss_dollars: ledger.miss_dollars,
-            ttl_secs,
-        });
-    }
-
-    SimResult {
-        policy: name,
-        requests: balancer.requests,
-        misses: balancer.misses,
-        spurious_misses: balancer.spurious_misses,
-        work_units: balancer.work_units,
-        epochs: Vec::new(),
-        storage_series: costs.storage_series.clone(),
-        miss_series: costs.miss_series.clone(),
-        total_series: costs.total_series.clone(),
-        instances_series: costs.instances_series.clone(),
-        ttl_series,
-        shadow_series,
-        balance,
-        tenants,
-        total_cost: costs.total(),
-        storage_cost: costs.storage_total(),
-        miss_cost: costs.miss_total(),
-    }
+    engine.finish()
 }
 
-/// Run the configured policy (Fixed/Ttl/Mrc) over a source.
-pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> SimResult {
-    match cfg.scaler.policy {
-        PolicyKind::IdealTtl => run_ideal_ttl(cfg, source),
-        PolicyKind::Analytic => panic!("analytic policy: use runtime::run_analytic"),
-        _ => {
-            let sizer = make_sizer(cfg);
-            let initial = match cfg.scaler.policy {
-                PolicyKind::Fixed => cfg.scaler.fixed_instances,
-                _ => cfg.scaler.min_instances.max(1),
-            };
-            run_policy(cfg, source, sizer, initial)
-        }
-    }
-}
-
-/// The *ideal* vertically scaled TTL cache (§6.1 "as a reference"): a pure
-/// TTL cache billed on instantaneous occupancy — no instances, no epochs'
-/// granularity loss, no spurious misses. Virtual hits are real hits.
+/// The *ideal* vertically scaled TTL cache (§6.1 "as a reference"): the
+/// engine's vertical billing mode — occupancy billed continuously, no
+/// instances, no spurious misses; virtual hits are real hits. Forced to
+/// vertical regardless of `cfg.scaler.policy`.
 pub fn run_ideal_ttl(cfg: &Config, source: &mut dyn RequestSource) -> SimResult {
-    let cost_cfg: CostConfig = cfg.cost.clone();
-    let mut vc = VirtualCache::new(&cfg.controller, cost_cfg.clone());
-    let mut costs = CostTracker::new(cost_cfg.clone());
-    for spec in &cfg.tenants {
-        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
-    }
-    let mut ttl_series = TimeSeries::new("ideal_ttl_ttl_secs");
-    let mut shadow_series = TimeSeries::new("ideal_ttl_vsize_bytes");
-    let per_byte_sec = cost_cfg.storage_cost_per_byte_sec();
-    let epoch_us = cost_cfg.epoch_us.max(1);
-
-    let mut epoch_end: TimeUs = epoch_us;
-    let mut last_ts: TimeUs = 0;
-    let mut requests = 0u64;
-    let mut misses = 0u64;
-
+    let mut engine = EngineBuilder::new(cfg)
+        .policy(EnginePolicy::Vertical(VerticalTtl::from_config(cfg)))
+        .build();
     while let Some(req) = source.next_request() {
-        // Storage accrues continuously on the current occupancy.
-        let dt_secs = crate::us_to_secs(req.ts.saturating_sub(last_ts));
-        costs.record_storage_dollars(vc.vsize() as f64 * per_byte_sec * dt_secs);
-        last_ts = req.ts;
-        while req.ts >= epoch_end {
-            costs.end_epoch_vertical(epoch_end);
-            epoch_end += epoch_us;
-        }
-        // The ideal cache stays per-object; scope keys so multi-tenant
-        // traces don't alias across tenants.
-        let obj = crate::tenant::scoped_object(req.tenant, req.obj);
-        let out = vc.on_request(req.ts, obj, req.size_bytes());
-        requests += 1;
-        if !out.hit {
-            misses += 1;
-            costs.record_miss_for(req.tenant, req.size_bytes());
-        }
-        if requests % SAMPLE_EVERY == 0 {
-            ttl_series.push(req.ts, out.ttl_secs);
-            shadow_series.push(req.ts, out.vsize as f64);
-        }
+        engine.offer(&req);
     }
-    costs.end_epoch_vertical(epoch_end.max(last_ts));
-
-    SimResult {
-        policy: "ideal_ttl".into(),
-        requests,
-        misses,
-        spurious_misses: 0,
-        work_units: requests * 3,
-        epochs: Vec::new(),
-        storage_series: costs.storage_series.clone(),
-        miss_series: costs.miss_series.clone(),
-        total_series: costs.total_series.clone(),
-        instances_series: costs.instances_series.clone(),
-        ttl_series,
-        shadow_series,
-        balance: BalanceTracker::new(),
-        tenants: Vec::new(),
-        total_cost: costs.total(),
-        storage_cost: costs.storage_total(),
-        miss_cost: costs.miss_total(),
-    }
+    engine.finish()
 }
 
 #[cfg(test)]
@@ -321,6 +121,19 @@ mod tests {
         let res = run(&cfg, &mut src);
         assert_eq!(res.policy, "mrc");
         assert!(res.work_units > res.requests, "MRC must cost >1/req");
+    }
+
+    #[test]
+    fn analytic_run_uses_the_same_entry_point() {
+        // The pre-engine dispatch panicked here; now it is a policy like
+        // any other.
+        let mut cfg = tiny_cfg(PolicyKind::Analytic);
+        cfg.cost.instance.ram_bytes = 2_000_000;
+        let mut src = VecSource::new(tiny_trace());
+        let res = run(&cfg, &mut src);
+        assert_eq!(res.policy, "analytic");
+        assert!(res.requests > 1000);
+        assert!(res.total_cost > 0.0);
     }
 
     #[test]

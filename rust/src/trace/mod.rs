@@ -17,13 +17,16 @@ mod tenant_mux;
 mod zipf;
 
 pub use irm::{IrmConfig, IrmGenerator};
-pub use record::{read_csv, read_trace, write_csv, write_trace, Request, TraceReader, TraceWriter};
+pub use record::{
+    read_csv, read_trace, write_csv, write_trace, CsvReader, Request, TraceReader, TraceWriter,
+};
 pub use stats::{characterize, TraceStats};
 pub use synth::{SynthConfig, SynthGenerator};
 pub use tenant_mux::TenantMux;
 pub use zipf::Zipf;
 
-use crate::{ObjectId, TimeUs};
+use crate::{ObjectId, Result, TimeUs};
+use std::path::Path;
 
 /// Anything that yields a time-ordered request stream.
 pub trait RequestSource {
@@ -57,6 +60,45 @@ impl VecSource {
 impl RequestSource for VecSource {
     fn next_request(&mut self) -> Option<Request> {
         self.reqs.next()
+    }
+}
+
+/// File-backed streaming source: binary (v1/v2, [`TraceReader`]) or CSV
+/// ([`CsvReader`]) picked by extension. Replays a trace in constant
+/// memory — this is how `elastictl run` feeds the engine, so a
+/// million-user trace never materializes as a `Vec<Request>`.
+pub enum FileSource {
+    Binary(TraceReader),
+    Csv(CsvReader),
+}
+
+impl FileSource {
+    /// Open `path` (`.csv` → CSV dialect, anything else → binary).
+    pub fn open(path: impl AsRef<Path>) -> Result<FileSource> {
+        let p = path.as_ref();
+        if p.extension().map(|e| e == "csv").unwrap_or(false) {
+            Ok(FileSource::Csv(CsvReader::open(p)?))
+        } else {
+            Ok(FileSource::Binary(TraceReader::open(p)?))
+        }
+    }
+
+    /// Surface any error that ended the stream early (binary truncation,
+    /// CSV parse/IO); call after the drive loop.
+    pub fn check(&mut self) -> Result<()> {
+        match self {
+            FileSource::Binary(r) => r.check(),
+            FileSource::Csv(r) => r.check(),
+        }
+    }
+}
+
+impl RequestSource for FileSource {
+    fn next_request(&mut self) -> Option<Request> {
+        match self {
+            FileSource::Binary(r) => r.next_request(),
+            FileSource::Csv(r) => r.next_request(),
+        }
     }
 }
 
@@ -150,5 +192,27 @@ mod tests {
         let mut src = VecSource::new(reqs);
         assert_eq!(src.take_requests(5).len(), 2);
         assert!(src.next_request().is_none());
+    }
+
+    #[test]
+    fn file_source_dispatches_on_extension() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let reqs = vec![Request::new(0, 1, 10), Request::new(5, 2, 20)];
+
+        let bin = dir.path().join("t.bin");
+        write_trace(&bin, &reqs).unwrap();
+        let mut src = FileSource::open(&bin).unwrap();
+        assert!(matches!(src, FileSource::Binary(_)));
+        assert_eq!(src.take_requests(10), reqs);
+        src.check().unwrap();
+
+        let csv = dir.path().join("t.csv");
+        write_csv(&csv, &reqs).unwrap();
+        let mut src = FileSource::open(&csv).unwrap();
+        assert!(matches!(src, FileSource::Csv(_)));
+        assert_eq!(src.take_requests(10), reqs);
+        src.check().unwrap();
+
+        assert!(FileSource::open(dir.path().join("missing.bin")).is_err());
     }
 }

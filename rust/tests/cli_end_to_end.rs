@@ -33,7 +33,9 @@ fn gen_run_ttlopt_plan_pipeline() {
     let out = run_ok(&["gen-trace", trace_s, "--kind", "irm", "--seed", "5"]);
     assert!(out.contains("wrote"), "{out}");
 
-    for policy in ["fixed", "ttl", "mrc", "ideal_ttl"] {
+    // Every policy goes through the same engine entry point — `analytic`
+    // included (the pre-engine dispatch panicked on it).
+    for policy in ["fixed", "ttl", "mrc", "ideal_ttl", "analytic"] {
         let out = run_ok(&["run", trace_s, "--policy", policy]);
         assert!(out.contains(&format!("policy={policy}")), "{out}");
         assert!(out.contains("total=$"), "{out}");

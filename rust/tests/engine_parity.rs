@@ -1,0 +1,248 @@
+//! Golden-parity regression for the engine port.
+//!
+//! The reference runners below are verbatim copies of the pre-engine
+//! hand-rolled loops (`sim::run_policy` and `sim::run_ideal_ttl` as they
+//! stood before `engine::Engine` existed), kept here as the golden spec:
+//! for every policy the engine must reproduce their aggregates —
+//! requests, misses, spurious misses, storage/miss/total dollars —
+//! *bit-for-bit*, not approximately.
+//!
+//! A second suite pins the streaming file sources: replaying a trace
+//! through `TraceReader`/`CsvReader` must produce byte-identical cost
+//! totals to the in-memory `VecSource`.
+
+use elastictl::balancer::Balancer;
+use elastictl::config::{Config, PolicyKind};
+use elastictl::cost::CostTracker;
+use elastictl::engine;
+use elastictl::runtime::AnalyticSizer;
+use elastictl::scaler::{EpochSizer, FixedSizer, MrcSizer, TtlSizer};
+use elastictl::tenant::TenantTtlSizer;
+use elastictl::trace::{
+    write_csv, write_trace, FileSource, Request, SynthConfig, SynthGenerator, VecSource,
+};
+use elastictl::vcache::VirtualCache;
+use elastictl::{TimeUs, MINUTE};
+
+/// Aggregates pinned by the parity check.
+#[derive(Debug, PartialEq)]
+struct Golden {
+    requests: u64,
+    misses: u64,
+    spurious: u64,
+    storage_bits: u64,
+    miss_bits: u64,
+    total_bits: u64,
+}
+
+impl Golden {
+    fn of(requests: u64, misses: u64, spurious: u64, storage: f64, miss: f64, total: f64) -> Self {
+        Golden {
+            requests,
+            misses,
+            spurious,
+            storage_bits: storage.to_bits(),
+            miss_bits: miss.to_bits(),
+            total_bits: total.to_bits(),
+        }
+    }
+}
+
+/// Verbatim copy of the seed's `sim::run_policy` epoch loop (series
+/// sampling elided — it never touched the aggregates), including the
+/// seed's inline initial-size dispatch and its inline sizer
+/// construction — deliberately NOT `Config::initial_instances()` or
+/// `make_sizer`/`engine::build_policy`, so a regression in any of those
+/// shared helpers shows up here instead of cancelling out on both sides.
+fn reference_run_policy(cfg: &Config, trace: &[Request]) -> Golden {
+    let initial = match cfg.scaler.policy {
+        PolicyKind::Fixed => cfg.scaler.fixed_instances,
+        _ => cfg.scaler.min_instances.max(1),
+    };
+    let sizer: Box<dyn EpochSizer> = match cfg.scaler.policy {
+        PolicyKind::Fixed => Box::new(FixedSizer::new(cfg.scaler.fixed_instances)),
+        PolicyKind::Ttl => Box::new(TtlSizer::from_config(cfg)),
+        PolicyKind::Mrc => Box::new(MrcSizer::from_config(cfg)),
+        PolicyKind::TenantTtl => Box::new(TenantTtlSizer::from_config(cfg)),
+        PolicyKind::Analytic => Box::new(AnalyticSizer::from_config(cfg)),
+        PolicyKind::IdealTtl => unreachable!("ideal_ttl uses reference_run_ideal"),
+    };
+    let mut balancer = Balancer::from_config(cfg, sizer, initial);
+    let mut costs = CostTracker::new(cfg.cost.clone());
+    for spec in &cfg.tenants {
+        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+    }
+    let epoch_us = cfg.cost.epoch_us.max(1);
+    let mut epoch_end: TimeUs = epoch_us;
+    let mut active_instances = balancer.cluster.len() as u32;
+    let mut last_ts: TimeUs = 0;
+
+    for req in trace {
+        while req.ts >= epoch_end {
+            costs.end_epoch(epoch_end, active_instances);
+            balancer.cluster.reset_epoch_stats();
+            active_instances = balancer.end_epoch(epoch_end);
+            epoch_end += epoch_us;
+        }
+        balancer.handle(req, &mut costs);
+        last_ts = req.ts;
+    }
+    // Bill the final (partial) epoch at full price (§2.3).
+    costs.end_epoch(epoch_end.max(last_ts), active_instances);
+
+    Golden::of(
+        balancer.requests,
+        balancer.misses,
+        balancer.spurious_misses,
+        costs.storage_total(),
+        costs.miss_total(),
+        costs.total(),
+    )
+}
+
+/// Verbatim copy of the seed's `sim::run_ideal_ttl` loop.
+fn reference_run_ideal(cfg: &Config, trace: &[Request]) -> Golden {
+    let cost_cfg = cfg.cost.clone();
+    let mut vc = VirtualCache::new(&cfg.controller, cost_cfg.clone());
+    let mut costs = CostTracker::new(cost_cfg.clone());
+    for spec in &cfg.tenants {
+        costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+    }
+    let per_byte_sec = cost_cfg.storage_cost_per_byte_sec();
+    let epoch_us = cost_cfg.epoch_us.max(1);
+
+    let mut epoch_end: TimeUs = epoch_us;
+    let mut last_ts: TimeUs = 0;
+    let mut requests = 0u64;
+    let mut misses = 0u64;
+
+    for req in trace {
+        // Storage accrues continuously on the current occupancy.
+        let dt_secs = elastictl::us_to_secs(req.ts.saturating_sub(last_ts));
+        costs.record_storage_dollars(vc.vsize() as f64 * per_byte_sec * dt_secs);
+        last_ts = req.ts;
+        while req.ts >= epoch_end {
+            costs.end_epoch_vertical(epoch_end);
+            epoch_end += epoch_us;
+        }
+        let obj = elastictl::tenant::scoped_object(req.tenant, req.obj);
+        let out = vc.on_request(req.ts, obj, req.size_bytes());
+        requests += 1;
+        if !out.hit {
+            misses += 1;
+            costs.record_miss_for(req.tenant, req.size_bytes());
+        }
+    }
+    costs.end_epoch_vertical(epoch_end.max(last_ts));
+
+    Golden::of(
+        requests,
+        misses,
+        0,
+        costs.storage_total(),
+        costs.miss_total(),
+        costs.total(),
+    )
+}
+
+fn golden_of_report(r: &engine::RunReport) -> Golden {
+    Golden::of(
+        r.requests,
+        r.misses,
+        r.spurious_misses,
+        r.storage_cost,
+        r.miss_cost,
+        r.total_cost,
+    )
+}
+
+/// Smoke-scale trace: deterministic tiny synth, truncated so the whole
+/// matrix stays CI-fast but still spans several epochs and resizes.
+fn parity_trace() -> Vec<Request> {
+    let mut trace = SynthGenerator::new(SynthConfig::tiny()).generate();
+    trace.truncate(200_000);
+    trace
+}
+
+fn parity_cfg(policy: PolicyKind) -> Config {
+    let mut cfg = Config::with_policy(policy);
+    cfg.cost.instance.ram_bytes = 20_000_000;
+    cfg.cost.epoch_us = 10 * MINUTE;
+    cfg.scaler.fixed_instances = 4;
+    cfg.scaler.max_instances = 32;
+    cfg
+}
+
+#[test]
+fn engine_matches_reference_loop_for_every_horizontal_policy() {
+    let base = parity_trace();
+    // Tag a copy across three tenants for the tenant policy.
+    let tenanted: Vec<Request> = base
+        .iter()
+        .enumerate()
+        .map(|(i, r)| r.with_tenant((i % 3) as u16))
+        .collect();
+
+    for policy in [
+        PolicyKind::Fixed,
+        PolicyKind::Ttl,
+        PolicyKind::Mrc,
+        PolicyKind::Analytic,
+        PolicyKind::TenantTtl,
+    ] {
+        let mut cfg = parity_cfg(policy);
+        if policy == PolicyKind::TenantTtl {
+            use elastictl::tenant::TenantSpec;
+            cfg.tenants = vec![
+                TenantSpec::new(0, "a").with_multiplier(2.0),
+                TenantSpec::new(1, "b"),
+                TenantSpec::new(2, "c").with_multiplier(0.5),
+            ];
+        }
+        let trace = if policy == PolicyKind::TenantTtl { &tenanted } else { &base };
+
+        let want = reference_run_policy(&cfg, trace);
+        let got = golden_of_report(&engine::run(&cfg, &mut VecSource::new(trace.clone())));
+        assert_eq!(got, want, "policy {policy:?} diverged from the seed loop");
+        assert!(got.requests > 100_000, "trace too small to be meaningful");
+    }
+}
+
+#[test]
+fn engine_matches_reference_loop_for_ideal_ttl() {
+    let trace = parity_trace();
+    let mut cfg = parity_cfg(PolicyKind::IdealTtl);
+    cfg.controller.t_init_secs = 600.0;
+    let want = reference_run_ideal(&cfg, &trace);
+    let got = golden_of_report(&engine::run(&cfg, &mut VecSource::new(trace)));
+    assert_eq!(got, want, "ideal_ttl diverged from the seed loop");
+    assert_eq!(got.spurious, 0);
+}
+
+#[test]
+fn streaming_sources_match_vec_source_bit_for_bit() {
+    let dir = elastictl::util::tempdir::tempdir().unwrap();
+    let mut trace = parity_trace();
+    trace.truncate(60_000);
+    // Exercise the tenant column through both encodings.
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.tenant = (i % 4) as u16;
+    }
+    let cfg = parity_cfg(PolicyKind::Ttl);
+
+    let want = golden_of_report(&engine::run(&cfg, &mut VecSource::new(trace.clone())));
+
+    let bin = dir.path().join("t.bin");
+    write_trace(&bin, &trace).unwrap();
+    let mut src = FileSource::open(&bin).unwrap();
+    let got_bin = golden_of_report(&engine::run(&cfg, &mut src));
+    src.check().unwrap();
+    assert_eq!(got_bin, want, "binary streaming diverged from VecSource");
+
+    let csv = dir.path().join("t.csv");
+    write_csv(&csv, &trace).unwrap();
+    let mut src = FileSource::open(&csv).unwrap();
+    let got_csv = golden_of_report(&engine::run(&cfg, &mut src));
+    src.check().unwrap();
+    assert_eq!(got_csv, want, "CSV streaming diverged from VecSource");
+}
