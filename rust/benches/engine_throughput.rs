@@ -45,6 +45,23 @@ fn main() {
         assert_eq!(last_requests, trace.len() as u64);
     }
 
+    // Enforcement overhead: the tenant policy with binding grants — the
+    // admission compare + outcome feedback must stay O(1) per request
+    // (the CI quick-bench gate tracks this row against the committed
+    // baseline).
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.cost.instance.ram_bytes = 40_000_000;
+    cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+    cfg.cost.epoch_us = 10 * MINUTE;
+    cfg.scaler.enforce_grants = true;
+    b.bench("offer_tenant_ttl_enforced", trace.len() as u64, || {
+        let mut engine = EngineBuilder::new(&cfg).no_default_probes().build();
+        for r in &trace {
+            black_box(engine.offer(r));
+        }
+        black_box(engine.finish());
+    });
+
     // Probe overhead: the full default observer set on the TTL policy.
     let mut cfg = Config::with_policy(PolicyKind::Ttl);
     cfg.cost.instance.ram_bytes = 40_000_000;

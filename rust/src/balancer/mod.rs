@@ -32,6 +32,10 @@ pub struct Served {
     /// The miss was *spurious*: the object is resident on some instance,
     /// but slot reassignment routed the request elsewhere (§5.2).
     pub spurious: bool,
+    /// The policy admitted the request's object (on a miss, the fetched
+    /// object was inserted). `false` only under multi-tenant grant
+    /// enforcement when the tenant overran its occupancy cap.
+    pub admitted: bool,
     /// Policy work units performed (Fig. 1 proxy).
     pub work_units: u32,
 }
@@ -46,6 +50,9 @@ pub struct Balancer {
     pub misses: u64,
     /// Spurious misses observed after resizes.
     pub spurious_misses: u64,
+    /// Requests whose insert was refused by the policy's admission
+    /// verdict (multi-tenant occupancy-cap enforcement).
+    pub denied_admissions: u64,
     /// Cumulative policy work units.
     pub work_units: u64,
     /// Per-tenant hit/miss counters, indexed by tenant id (grown on
@@ -61,6 +68,7 @@ impl Balancer {
             requests: 0,
             misses: 0,
             spurious_misses: 0,
+            denied_admissions: 0,
             work_units: 0,
             tenant_stats: Vec::new(),
         }
@@ -77,8 +85,10 @@ impl Balancer {
         self.sizer.as_ref()
     }
 
-    /// Handle one request: policy shadow update, route on `(tenant, key)`,
-    /// serve, account.
+    /// Handle one request: policy shadow update (which doubles as the
+    /// admission verdict under grant enforcement), route on
+    /// `(tenant, key)`, serve, account, feed the physical outcome back to
+    /// the policy.
     pub fn handle(&mut self, req: &Request, costs: &mut CostTracker) -> Served {
         self.requests += 1;
         let work = self.sizer.on_request(req);
@@ -86,7 +96,22 @@ impl Balancer {
 
         let obj = scoped_object(req.tenant, req.obj);
         let routed = self.cluster.route(obj);
-        let hit = self.cluster.serve(obj, req.size_bytes());
+        // A refused admission still serves the request (the origin fetch
+        // happens either way) — it only skips the insert, bounding how
+        // fast a tenant can push bytes beyond its granted share into the
+        // shared cluster (re-admissions of its virtually-resident set
+        // stay exempt: that is repair traffic its grant already covers).
+        let hit = if work.admit {
+            self.cluster.serve(obj, req.size_bytes())
+        } else {
+            self.cluster.serve_no_insert(obj)
+        };
+        if !work.admit && !hit {
+            // Count only denials that actually suppressed an insert (a
+            // physical hit needed none), matching the per-tenant
+            // `denied_admissions` in the enforcement rows.
+            self.denied_admissions += 1;
+        }
         let mut spurious = false;
         if !hit {
             self.misses += 1;
@@ -105,7 +130,9 @@ impl Balancer {
             self.tenant_stats.resize(i + 1, HitMiss::default());
         }
         self.tenant_stats[i].record(hit);
-        Served { hit, spurious, work_units: work.units }
+        // Close the loop: SLO measurement + admission-budget charging.
+        self.sizer.on_served(req, hit, &work);
+        Served { hit, spurious, admitted: work.admit, work_units: work.units }
     }
 
     /// Epoch boundary: ask the policy for `I(k+1)`, resize, return the new
@@ -152,6 +179,11 @@ impl Balancer {
     /// Per-tenant timers, when the policy runs one controller per tenant.
     pub fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
         self.sizer.tenant_ttls()
+    }
+
+    /// Per-tenant enforcement state, when the policy arbitrates tenants.
+    pub fn tenant_enforcement(&self) -> Option<Vec<crate::tenant::TenantEnforcement>> {
+        self.sizer.enforcement()
     }
 }
 
@@ -253,6 +285,47 @@ mod tests {
         b.handle(&req(1, 1, 100).with_tenant(1), &mut c);
         let ttls = b.tenant_ttls().expect("tenant policy exposes ttls");
         assert_eq!(ttls.len(), 2);
+    }
+
+    #[test]
+    fn denied_admissions_skip_the_insert() {
+        // An enforcing tenant policy with a tiny capacity: after the
+        // first epoch decision caps the flood tenant, its misses must
+        // stop materializing as inserts — repeated requests keep missing.
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 1;
+        cfg.scaler.enforce_grants = true;
+        cfg.tenants = vec![
+            crate::tenant::TenantSpec::new(1, "gold").with_multiplier(10.0),
+            crate::tenant::TenantSpec::new(2, "flood").with_multiplier(0.1),
+        ];
+        let sizer = make_sizer(&cfg);
+        let mut b = Balancer::from_config(&cfg, sizer, 1);
+        let mut c = CostTracker::new(cfg.cost.clone());
+        // Flood demand far past the 1 MB capacity; gold takes a slice.
+        for i in 0..30u64 {
+            b.handle(&req(i * SECOND, i, 100_000).with_tenant(2), &mut c);
+        }
+        for i in 0..5u64 {
+            b.handle(&req(30 * SECOND + i, i, 100_000).with_tenant(1), &mut c);
+        }
+        assert_eq!(b.denied_admissions, 0, "no caps before the first epoch");
+        b.end_epoch(31 * SECOND);
+        // Next epoch: flood blows through its budget; the denials skip
+        // inserts, so a denied object stays a miss on re-request.
+        let before = b.denied_admissions;
+        for i in 0..30u64 {
+            b.handle(&req(32 * SECOND + i, 1000 + i, 100_000).with_tenant(2), &mut c);
+        }
+        assert!(b.denied_admissions > before, "flood must be refused");
+        let s = b.handle(&req(33 * SECOND, 1029, 100_000).with_tenant(2), &mut c);
+        assert!(!s.hit, "denied object must not have been inserted");
+        // Gold keeps admitting within its grant.
+        let s = b.handle(&req(34 * SECOND, 3, 100_000).with_tenant(1), &mut c);
+        assert!(s.admitted);
+        assert!(b.tenant_enforcement().is_some());
     }
 
     #[test]

@@ -104,6 +104,15 @@ impl Cluster {
         self.instances[idx].serve(obj, size)
     }
 
+    /// Serve a request *without* inserting on miss (the balancer refused
+    /// admission — multi-tenant occupancy-cap enforcement). Hit/miss
+    /// accounting is identical to [`Self::serve`].
+    #[inline]
+    pub fn serve_no_insert(&mut self, obj: ObjectId) -> bool {
+        let idx = self.route(obj);
+        self.instances[idx].lookup_only(obj)
+    }
+
     /// Whether the responsible instance currently holds `obj`.
     pub fn contains(&self, obj: ObjectId) -> bool {
         self.instances[self.route(obj)].contains(obj)

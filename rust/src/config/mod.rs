@@ -16,6 +16,9 @@ use crate::util::toml_lite::{Doc, Value};
 use crate::{Result, TenantId, HOUR};
 use std::path::Path;
 
+/// Bytes per `reserved_mb` config unit (mebibytes).
+const MB: f64 = 1024.0 * 1024.0;
+
 /// Gain (step-size) schedule `ε(n)` for the stochastic-approximation TTL
 /// update of §4.1 / eq. (7).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -221,6 +224,14 @@ pub struct ScalerConfig {
     /// Exponential decay applied to the MRC reuse histogram at each epoch
     /// boundary so that sizing tracks the diurnal pattern.
     pub mrc_decay: f64,
+    /// Make the multi-tenant arbiter's grants *binding* (the enforcement
+    /// loop of [`crate::tenant`]): each epoch, `granted_bytes` becomes a
+    /// per-tenant occupancy cap (an admission byte budget on the
+    /// balancer's request path) plus a TTL clamp on that tenant's
+    /// controller. Off by default: the legacy mode keeps grants as
+    /// reporting/diagnostics only, bit-for-bit compatible with the
+    /// pre-enforcement request path.
+    pub enforce_grants: bool,
 }
 
 impl Default for ScalerConfig {
@@ -231,6 +242,7 @@ impl Default for ScalerConfig {
             max_instances: 64,
             min_instances: 1,
             mrc_decay: 0.5,
+            enforce_grants: false,
         }
     }
 }
@@ -389,6 +401,9 @@ impl Config {
         if let Some(v) = doc.get_f64("scaler.mrc_decay") {
             cfg.scaler.mrc_decay = v;
         }
+        if let Some(v) = doc.get_bool("scaler.enforce_grants") {
+            cfg.scaler.enforce_grants = v;
+        }
 
         // [cluster]
         if let Some(v) = doc.get_str("cluster.eviction") {
@@ -434,11 +449,24 @@ impl Config {
                 Some(s) => TrafficClass::parse(s)?,
                 None => TrafficClass::Standard,
             };
-            tenants.push(
-                TenantSpec::new(id as TenantId, name)
-                    .with_multiplier(multiplier)
-                    .with_class(class),
-            );
+            let mut spec = TenantSpec::new(id as TenantId, name)
+                .with_multiplier(multiplier)
+                .with_class(class);
+            if let Some(mb) = doc.get_f64(&format!("tenant{i}.reserved_mb")) {
+                anyhow::ensure!(
+                    mb >= 0.0 && mb.is_finite(),
+                    "tenant{i}: reserved_mb must be a finite non-negative number"
+                );
+                spec = spec.with_reserved_bytes((mb * MB) as u64);
+            }
+            if let Some(r) = doc.get_f64(&format!("tenant{i}.slo_miss_ratio")) {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&r),
+                    "tenant{i}: slo_miss_ratio must lie in [0, 1]"
+                );
+                spec = spec.with_slo_miss_ratio(r);
+            }
+            tenants.push(spec);
         }
         cfg.tenants = tenants;
         Ok(cfg)
@@ -503,6 +531,10 @@ impl Config {
         doc.set("scaler.max_instances", Value::Int(self.scaler.max_instances as i64));
         doc.set("scaler.min_instances", Value::Int(self.scaler.min_instances as i64));
         doc.set("scaler.mrc_decay", Value::Float(self.scaler.mrc_decay));
+        doc.set(
+            "scaler.enforce_grants",
+            Value::Bool(self.scaler.enforce_grants),
+        );
 
         doc.set(
             "cluster.eviction",
@@ -522,6 +554,15 @@ impl Config {
                 &format!("tenant{i}.class"),
                 Value::Str(t.class.as_str().into()),
             );
+            if t.reserved_bytes > 0 {
+                doc.set(
+                    &format!("tenant{i}.reserved_mb"),
+                    Value::Float(t.reserved_bytes as f64 / MB),
+                );
+            }
+            if let Some(r) = t.slo_miss_ratio {
+                doc.set(&format!("tenant{i}.slo_miss_ratio"), Value::Float(r));
+            }
         }
         doc.render()
     }
@@ -663,10 +704,13 @@ mod tests {
     fn tenant_sections_round_trip() {
         let mut cfg = Config::default();
         cfg.scaler.policy = PolicyKind::TenantTtl;
+        cfg.scaler.enforce_grants = true;
         cfg.tenants = vec![
             TenantSpec::new(0, "api")
                 .with_multiplier(3.0)
-                .with_class(TrafficClass::Interactive),
+                .with_class(TrafficClass::Interactive)
+                .with_reserved_bytes(64 * 1024 * 1024)
+                .with_slo_miss_ratio(0.05),
             TenantSpec::new(5, "batch")
                 .with_multiplier(0.3)
                 .with_class(TrafficClass::Bulk),
@@ -674,7 +718,29 @@ mod tests {
         let text = cfg.to_toml();
         let back = Config::from_toml(&text).unwrap();
         assert_eq!(back.scaler.policy, PolicyKind::TenantTtl);
+        assert!(back.scaler.enforce_grants);
         assert_eq!(back.tenants, cfg.tenants);
+    }
+
+    #[test]
+    fn slo_and_reservation_keys_parse_and_validate() {
+        let cfg = Config::from_toml(
+            "[scaler]\nenforce_grants = true\n\
+             [tenant0]\nreserved_mb = 40\nslo_miss_ratio = 0.1\n\
+             [tenant1]\nname = \"bulk\"\n",
+        )
+        .unwrap();
+        assert!(cfg.scaler.enforce_grants);
+        assert_eq!(cfg.tenants[0].reserved_bytes, 40 * 1024 * 1024);
+        assert_eq!(cfg.tenants[0].slo_miss_ratio, Some(0.1));
+        // Unset keys keep the no-reservation / no-SLO defaults.
+        assert_eq!(cfg.tenants[1].reserved_bytes, 0);
+        assert_eq!(cfg.tenants[1].slo_miss_ratio, None);
+        // Enforcement stays off unless asked for.
+        assert!(!Config::from_toml("").unwrap().scaler.enforce_grants);
+        // Out-of-range values error loudly.
+        assert!(Config::from_toml("[tenant0]\nslo_miss_ratio = 1.5\n").is_err());
+        assert!(Config::from_toml("[tenant0]\nreserved_mb = -3.0\n").is_err());
     }
 
     #[test]

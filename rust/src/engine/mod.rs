@@ -28,7 +28,9 @@ mod policy;
 mod probe;
 
 pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
-pub use probe::{BalanceProbe, Probe, ProbeCtx, ShadowProbe, TenantProbe, TtlProbe};
+pub use probe::{
+    BalanceProbe, Probe, ProbeCtx, ShadowProbe, SloProbe, SloSample, TenantProbe, TtlProbe,
+};
 
 use crate::balancer::Balancer;
 use crate::cluster::BalanceTracker;
@@ -36,6 +38,7 @@ use crate::config::Config;
 use crate::cost::{CostTracker, EpochCosts};
 use crate::metrics::{HitMiss, TimeSeries};
 use crate::scaler::EpochSizer;
+use crate::tenant::TenantEnforcement;
 use crate::trace::{Request, RequestSource};
 use crate::{TenantId, TimeUs};
 
@@ -92,6 +95,9 @@ pub struct RunReport {
     pub balance: BalanceTracker,
     /// Per-tenant breakdown (one row per tenant that sent traffic).
     pub tenants: Vec<TenantSummary>,
+    /// Per-epoch per-tenant SLO/enforcement record (miss ratio vs target,
+    /// grants, caps, clamps, boosts) — see [`SloProbe`].
+    pub slo: Vec<SloSample>,
     pub total_cost: f64,
     pub storage_cost: f64,
     pub miss_cost: f64,
@@ -240,6 +246,7 @@ impl EngineBuilder {
                     probes.push(Box::new(ShadowProbe::sampled(&name, "shadow_bytes")));
                     probes.push(Box::new(BalanceProbe::new()));
                     probes.push(Box::new(TenantProbe::new()));
+                    probes.push(Box::new(SloProbe::new()));
                 }
                 (Core::Cluster(balancer), name)
             }
@@ -413,6 +420,7 @@ impl Engine {
             shadow_series: TimeSeries::new(format!("{}_shadow_bytes", self.policy_name)),
             balance: BalanceTracker::new(),
             tenants: Vec::new(),
+            slo: Vec::new(),
             total_cost: self.costs.total(),
             storage_cost: self.costs.storage_total(),
             miss_cost: self.costs.miss_total(),
@@ -527,6 +535,23 @@ impl Engine {
             Core::Cluster(b) => b.tenant_ttls(),
             Core::Vertical { .. } => None,
         }
+    }
+
+    /// Per-tenant enforcement state (grants, caps, clamps, SLO tracking),
+    /// when the policy arbitrates tenants (`None` otherwise).
+    pub fn tenant_enforcement(&self) -> Option<Vec<TenantEnforcement>> {
+        match &self.core {
+            Core::Cluster(b) => b.tenant_enforcement(),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// Enforcement state for one tenant (`None` when the policy does not
+    /// arbitrate tenants or the tenant has never been seen).
+    pub fn tenant_enforcement_of(&self, t: TenantId) -> Option<TenantEnforcement> {
+        self.tenant_enforcement()?
+            .into_iter()
+            .find(|row| row.tenant == t)
     }
 
     /// Counters for one tenant (zero if never seen).

@@ -111,7 +111,7 @@ impl EpochSizer for VerticalTtl {
         // across tenants.
         let obj = crate::tenant::scoped_object(req.tenant, req.obj);
         let out = self.vc.on_request(req.ts, obj, req.size_bytes());
-        PolicyWork { units: 3, shadow_hit: Some(out.hit) }
+        PolicyWork { units: 3, shadow_hit: Some(out.hit), admit: true }
     }
 
     /// Equivalent instance count of the current occupancy — a diagnostic;

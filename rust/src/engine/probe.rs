@@ -7,7 +7,8 @@
 use super::{Core, Outcome, RunReport, TenantSummary, SAMPLE_EVERY};
 use crate::cluster::BalanceTracker;
 use crate::cost::CostTracker;
-use crate::metrics::TimeSeries;
+use crate::metrics::{HitMiss, TimeSeries};
+use crate::tenant::TenantEnforcement;
 use crate::trace::Request;
 use crate::{TenantId, TimeUs};
 
@@ -37,6 +38,24 @@ impl ProbeCtx<'_> {
     pub fn balance_snapshot(&self) -> Option<Vec<(usize, u64, u64)>> {
         match self.core {
             Core::Cluster(b) => Some(b.cluster.balance_snapshot()),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// Cumulative per-tenant hit/miss counters, indexed by tenant id
+    /// (cluster runs only).
+    pub fn tenant_stats(&self) -> Option<&[HitMiss]> {
+        match self.core {
+            Core::Cluster(b) => Some(b.tenant_stats()),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// Per-tenant enforcement state (grants, caps, clamps, SLO tracking),
+    /// when the policy arbitrates tenants.
+    pub fn tenant_enforcement(&self) -> Option<Vec<TenantEnforcement>> {
+        match self.core {
+            Core::Cluster(b) => b.tenant_enforcement(),
             Core::Vertical { .. } => None,
         }
     }
@@ -206,5 +225,95 @@ impl TenantProbe {
 impl Probe for TenantProbe {
     fn finish(self: Box<Self>, ctx: &ProbeCtx, report: &mut RunReport) {
         report.tenants = ctx.tenant_summaries();
+    }
+}
+
+/// One per-tenant row of an epoch's SLO/enforcement record (fig11 and the
+/// `SLO` serve command read the live equivalent).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSample {
+    /// Epoch-close timestamp.
+    pub t: TimeUs,
+    pub tenant: TenantId,
+    /// Requests / misses within the closing epoch (not cumulative).
+    pub requests: u64,
+    pub misses: u64,
+    /// Miss ratio of the closing epoch.
+    pub miss_ratio: f64,
+    /// Configured miss-ratio SLO, if any.
+    pub slo_miss_ratio: Option<f64>,
+    /// Bytes granted by the decision that was in force during this epoch.
+    pub granted_bytes: Option<u64>,
+    /// Occupancy cap / admission budget in force during this epoch.
+    pub cap_bytes: Option<u64>,
+    /// TTL clamp in force during this epoch, seconds.
+    pub ttl_clamp_secs: Option<f64>,
+    /// Grant-priority boost in force during this epoch.
+    pub boost: f64,
+}
+
+impl SloSample {
+    /// Whether this epoch violated the tenant's SLO.
+    pub fn in_violation(&self) -> bool {
+        self.slo_miss_ratio.map(|t| self.miss_ratio > t).unwrap_or(false)
+    }
+}
+
+/// Records, at every epoch boundary, each active tenant's epoch miss
+/// ratio next to the enforcement state (grant / cap / clamp / boost) that
+/// was in force while the epoch ran — the measurement behind the
+/// per-tenant SLO guarantee of `exp fig11`.
+#[derive(Default)]
+pub struct SloProbe {
+    /// Cumulative per-tenant counters at the previous epoch boundary.
+    prev: Vec<HitMiss>,
+    samples: Vec<SloSample>,
+}
+
+impl SloProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Probe for SloProbe {
+    fn on_epoch(&mut self, epoch_end: TimeUs, ctx: &ProbeCtx) {
+        let Some(stats) = ctx.tenant_stats() else {
+            return;
+        };
+        // Enforcement rows reflect the decision taken at the *previous*
+        // boundary — exactly what governed the epoch that is closing now.
+        let rows = ctx.tenant_enforcement();
+        for (i, hm) in stats.iter().enumerate() {
+            let prev = self.prev.get(i).copied().unwrap_or_default();
+            let requests = hm.total() - prev.total();
+            if requests == 0 {
+                continue;
+            }
+            let misses = hm.misses - prev.misses;
+            let tenant = i as TenantId;
+            let row = rows
+                .as_ref()
+                .and_then(|v| v.iter().find(|r| r.tenant == tenant));
+            self.samples.push(SloSample {
+                t: epoch_end,
+                tenant,
+                requests,
+                misses,
+                miss_ratio: misses as f64 / requests as f64,
+                slo_miss_ratio: row.and_then(|r| r.slo_miss_ratio),
+                granted_bytes: row.and_then(|r| {
+                    if r.decided { Some(r.granted_bytes) } else { None }
+                }),
+                cap_bytes: row.and_then(|r| r.cap_bytes),
+                ttl_clamp_secs: row.and_then(|r| r.ttl_clamp_secs),
+                boost: row.map(|r| r.boost).unwrap_or(1.0),
+            });
+        }
+        self.prev = stats.to_vec();
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        report.slo = self.samples;
     }
 }

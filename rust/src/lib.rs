@@ -46,16 +46,27 @@
 //!   model `C(T) = Σ_i c_i + (λ_i m_i − c_i) e^{−λ_i T}` (eq. 4) via an
 //!   AOT-compiled JAX/Pallas artifact ([`runtime`]);
 //! * a **multi-tenant provisioning layer** ([`tenant`]): a registry of
-//!   tenants with per-tenant miss-cost multipliers and traffic classes, a
-//!   bank of per-tenant §4 TTL controllers (each converging to its own
-//!   `T_i`), and a Memshare-style cost-aware arbiter that folds the
-//!   per-tenant shadow demands into one shared cluster sizing decision —
-//!   requests carry a compact tenant id end to end (trace format v2,
-//!   [`trace::TenantMux`], `(tenant, key)` routing in [`balancer`],
-//!   per-tenant cost ledgers in [`cost`], and the `GET <tenant>/<key>` /
-//!   `STATS <tenant>` serve protocol);
+//!   tenants with per-tenant miss-cost multipliers, traffic classes,
+//!   Memshare-style byte reservations and miss-ratio SLOs; a bank of
+//!   per-tenant §4 TTL controllers (each converging to its own `T_i`);
+//!   and a cost-aware arbiter that folds the per-tenant shadow demands
+//!   into one shared cluster sizing decision — requests carry a compact
+//!   tenant id end to end (trace format v2, [`trace::TenantMux`],
+//!   `(tenant, key)` routing in [`balancer`], per-tenant cost ledgers in
+//!   [`cost`], and the `GET <tenant>/<key>` / `STATS <tenant>` /
+//!   `SLO <tenant>` serve protocol);
+//! * the **per-tenant enforcement loop** (`scaler.enforce_grants`): each
+//!   epoch the arbiter's grants become *binding* — an occupancy cap
+//!   enforced as a constant-time admission byte budget on the balancer's
+//!   request path (a refused admission still serves the miss, it only
+//!   skips the insert), a TTL clamp that projects an over-demanding
+//!   tenant's controller onto its largest affordable timer, and an SLO
+//!   feedback term that escalates a tenant's grant priority while its
+//!   measured miss ratio exceeds its configured `slo_miss_ratio`
+//!   ([`tenant::TenantEnforcement`], [`engine::SloProbe`]);
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
-//!   plus the multi-tenant fig10 study ([`experiments`]).
+//!   plus the multi-tenant fig10 study and the fig11 SLO-enforcement
+//!   study ([`experiments`]).
 //!
 //! Time is measured in microseconds ([`TimeUs`]); object sizes in bytes.
 

@@ -255,7 +255,7 @@ impl EpochSizer for AnalyticSizer {
     fn on_request(&mut self, req: &crate::trace::Request) -> PolicyWork {
         let obj = crate::tenant::scoped_object(req.tenant, req.obj);
         self.estimator.record(obj, req.size_bytes());
-        PolicyWork { units: 2, shadow_hit: None }
+        PolicyWork { units: 2, shadow_hit: None, admit: true }
     }
 
     fn decide(&mut self, now: TimeUs) -> u32 {

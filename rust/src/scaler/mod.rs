@@ -17,6 +17,7 @@
 use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
 use crate::metrics::Ewma;
 use crate::mrc::{MrcProfiler, OlkenProfiler};
+use crate::tenant::TenantEnforcement;
 use crate::trace::Request;
 use crate::vcache::VirtualCache;
 use crate::{TenantId, TimeUs};
@@ -24,11 +25,23 @@ use crate::{TenantId, TimeUs};
 /// Per-request work a policy performs, as abstract *work units* — the
 /// Fig. 1 CPU-overhead proxy. The basic router (hash + route) costs 1; the
 /// TTL policy adds a small constant; the MRC policy adds O(log M).
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PolicyWork {
     pub units: u32,
     /// Whether the policy's shadow structure registered a (virtual) hit.
     pub shadow_hit: Option<bool>,
+    /// Admission verdict for the balancer: on a physical miss, may the
+    /// fetched object be inserted? Enforcing policies
+    /// ([`crate::tenant::TenantTtlSizer`]) refuse inserts that would
+    /// overrun the tenant's occupancy cap; every other policy always
+    /// admits.
+    pub admit: bool,
+}
+
+impl Default for PolicyWork {
+    fn default() -> Self {
+        PolicyWork { units: 0, shadow_hit: None, admit: true }
+    }
 }
 
 /// An epoch-granularity cluster sizing policy.
@@ -38,6 +51,13 @@ pub trait EpochSizer {
     /// The full request is passed so tenant-aware policies can dispatch
     /// shadow work to the right per-tenant controller.
     fn on_request(&mut self, req: &Request) -> PolicyWork;
+
+    /// Called after the request was physically served, with the physical
+    /// outcome and the [`PolicyWork`] this request's `on_request`
+    /// returned (admission verdict + shadow outcome). SLO-aware policies
+    /// use this to measure per-tenant physical miss ratios and charge
+    /// admission budgets; the default is a no-op.
+    fn on_served(&mut self, _req: &Request, _hit: bool, _work: &PolicyWork) {}
 
     /// Called at each epoch boundary; returns the target instance count.
     fn decide(&mut self, now: TimeUs) -> u32;
@@ -60,6 +80,13 @@ pub trait EpochSizer {
     fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
         None
     }
+
+    /// Per-tenant enforcement state (grants, caps, clamps, SLO tracking),
+    /// for policies that arbitrate tenants. `None` for tenant-oblivious
+    /// policies.
+    fn enforcement(&self) -> Option<Vec<TenantEnforcement>> {
+        None
+    }
 }
 
 /// Static baseline.
@@ -75,7 +102,7 @@ impl FixedSizer {
 
 impl EpochSizer for FixedSizer {
     fn on_request(&mut self, _req: &Request) -> PolicyWork {
-        PolicyWork { units: 1, shadow_hit: None }
+        PolicyWork { units: 1, shadow_hit: None, admit: true }
     }
 
     fn decide(&mut self, _now: TimeUs) -> u32 {
@@ -132,7 +159,7 @@ impl EpochSizer for TtlSizer {
         let obj = crate::tenant::scoped_object(req.tenant, req.obj);
         let out = self.vc.on_request(req.ts, obj, req.size_bytes());
         // hash + route (1) + vcache list ops (≈2) — constant.
-        PolicyWork { units: 3, shadow_hit: Some(out.hit) }
+        PolicyWork { units: 3, shadow_hit: Some(out.hit), admit: true }
     }
 
     fn decide(&mut self, now: TimeUs) -> u32 {
@@ -216,7 +243,7 @@ impl EpochSizer for MrcSizer {
         self.mean_size.update(req.size_bytes() as f64);
         // 1 route unit + O(log M) tree units: charge log2(tracked).
         let log_m = (self.profiler.tracked().max(2) as f64).log2() as u32;
-        PolicyWork { units: 1 + log_m, shadow_hit: dist.map(|_| true) }
+        PolicyWork { units: 1 + log_m, shadow_hit: dist.map(|_| true), admit: true }
     }
 
     fn decide(&mut self, _now: TimeUs) -> u32 {

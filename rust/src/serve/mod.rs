@@ -9,9 +9,19 @@
 //! GET <tenant>/<key> <size>\n -> HIT | MISS | SPURIOUS\n   (tenant ∈ 0..65535)
 //! STATS\n                     -> one-line JSON, global counters\n
 //! STATS <tenant>\n            -> one-line JSON, that tenant's counters\n
+//! SLO <tenant>\n              -> one-line JSON, that tenant's enforcement
+//!                                state (grant, occupancy cap, TTL clamp,
+//!                                measured vs target miss ratio, priority
+//!                                boost, denied admissions); `ERR` when the
+//!                                policy does not arbitrate tenants
 //! EPOCH\n                     -> RESIZED <n>\n      (forces an epoch boundary)
 //! QUIT\n                      -> BYE\n (closes the connection)
 //! ```
+//!
+//! `SLO` reads the live enforcement loop (`scaler.enforce_grants` plus
+//! `[tenantN] reserved_mb` / `slo_miss_ratio` in the config): the epoch
+//! decision that `EPOCH` forces is the moment grants become caps/clamps,
+//! and `SLO` is how an operator watches them bind.
 //!
 //! Tenant-prefix parsing is enabled only when the server is tenant-aware
 //! (a `[tenantN]` roster in the config, or the `tenant_ttl` policy) — a
@@ -130,6 +140,13 @@ impl ServerState {
                     Err(_) => Some(format!("ERR bad tenant {t}")),
                 },
             },
+            Some("SLO") => match parts.next() {
+                None => Some("ERR SLO needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.slo_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
             Some("EPOCH") => {
                 let n = self.engine.force_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
@@ -138,6 +155,42 @@ impl ServerState {
             Some(other) => Some(format!("ERR unknown command {other}")),
             None => Some("ERR empty".to_string()),
         }
+    }
+
+    /// One-line JSON for `SLO <tenant>`: the live enforcement state.
+    fn slo_line(&self, tenant: TenantId) -> String {
+        let Some(row) = self.engine.tenant_enforcement_of(tenant) else {
+            return format!(
+                "ERR no enforcement state (policy {} does not arbitrate tenants, \
+                 or tenant {tenant} has never been seen)",
+                self.engine.policy_name()
+            );
+        };
+        let opt_u64 = |v: Option<u64>| {
+            v.map(|x| x.to_string()).unwrap_or_else(|| "null".into())
+        };
+        let opt_f64 = |v: Option<f64>| {
+            v.map(|x| format!("{x:.6}")).unwrap_or_else(|| "null".into())
+        };
+        format!(
+            "{{\"tenant\":{},\"enforced\":{},\"decided\":{},\"demand_bytes\":{},\
+             \"granted_bytes\":{},\"cap_bytes\":{},\"admitted_epoch_bytes\":{},\
+             \"denied\":{},\"ttl_clamp_secs\":{},\"slo_miss_ratio\":{},\
+             \"measured_miss_ratio\":{},\"in_violation\":{},\"boost\":{:.3}}}",
+            row.tenant,
+            row.enforced,
+            row.decided,
+            row.demand_bytes,
+            row.granted_bytes,
+            opt_u64(row.cap_bytes),
+            row.admitted_epoch_bytes,
+            row.denied_admissions,
+            opt_f64(row.ttl_clamp_secs),
+            opt_f64(row.slo_miss_ratio),
+            opt_f64(row.measured_miss_ratio),
+            row.in_violation(),
+            row.boost,
+        )
     }
 
     /// One-line JSON for `STATS <tenant>`.
@@ -382,6 +435,47 @@ mod tests {
         // A quiet tenant reads as zeros, not an error.
         let s9 = st.handle_line("STATS 9").unwrap();
         assert!(s9.contains("\"requests\":0"), "{s9}");
+    }
+
+    #[test]
+    fn slo_command_reports_enforcement_state() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 1;
+        cfg.scaler.enforce_grants = true;
+        cfg.tenants = vec![
+            TenantSpec::new(1, "gold")
+                .with_multiplier(10.0)
+                .with_slo_miss_ratio(0.2),
+            TenantSpec::new(2, "flood").with_multiplier(0.1),
+        ];
+        let mut st = ServerState::new(&cfg);
+        // Pre-decision: state exists but nothing is capped yet.
+        let s = st.handle_line("SLO 1").unwrap();
+        assert!(s.contains("\"enforced\":true"), "{s}");
+        assert!(s.contains("\"decided\":false"), "{s}");
+        assert!(s.contains("\"cap_bytes\":null"), "{s}");
+        assert!(s.contains("\"slo_miss_ratio\":0.200000"), "{s}");
+        // Oversubscribe the 1 MB cluster, then force the epoch decision.
+        for i in 0..30 {
+            st.handle_line(&format!("GET 2/obj{i} 100000"));
+        }
+        st.handle_line("GET 1/k 100000");
+        st.handle_line("EPOCH");
+        let s = st.handle_line("SLO 2").unwrap();
+        assert!(s.contains("\"decided\":true"), "{s}");
+        assert!(!s.contains("\"cap_bytes\":null"), "squeezed tenant must be capped: {s}");
+        assert!(!s.contains("\"ttl_clamp_secs\":null"), "and clamped: {s}");
+        // The gold tenant's all-miss warmup epoch reads as a violation.
+        let s = st.handle_line("SLO 1").unwrap();
+        assert!(s.contains("\"measured_miss_ratio\":1.000000"), "{s}");
+        assert!(s.contains("\"in_violation\":true"), "{s}");
+        // Errors: bad ids, and policies with no tenant arbitration.
+        assert!(st.handle_line("SLO").unwrap().starts_with("ERR"));
+        assert!(st.handle_line("SLO nope").unwrap().starts_with("ERR"));
+        let mut plain = state(PolicyKind::Ttl);
+        assert!(plain.handle_line("SLO 0").unwrap().starts_with("ERR"));
     }
 
     #[test]

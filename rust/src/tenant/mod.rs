@@ -9,25 +9,39 @@
 //! module adds the tenant dimension without giving up the paper's O(1)
 //! request path:
 //!
-//! * [`TenantRegistry`] — per-tenant id, miss-cost multiplier and traffic
-//!   class ([`TenantSpec`], [`TrafficClass`]).
+//! * [`TenantRegistry`] — per-tenant id, miss-cost multiplier, traffic
+//!   class, Memshare-style byte reservation and optional miss-ratio SLO
+//!   ([`TenantSpec`], [`TrafficClass`]).
 //! * [`ControllerBank`] — one §4 stochastic-approximation
 //!   [`VirtualCache`] per tenant. Each controller sees its tenant's
 //!   *scaled* miss cost, so each timer `T_i` converges to that tenant's
 //!   own storage/miss balance point.
 //! * [`Arbiter`] — at each epoch boundary, folds the per-tenant shadow
-//!   sizes into the shared cluster sizing decision. Cost awareness is
-//!   embedded in the demands themselves (an expensive-miss tenant's
-//!   controller holds ghosts longer, so its shadow demand is bigger) —
-//!   that is what steers the instance count. When the aggregate demand
-//!   exceeds the cluster cap, the arbiter additionally *attributes* the
-//!   capped capacity to tenants in descending miss-cost order; today
-//!   these grants are reporting/diagnostics (surfaced via
-//!   [`TenantTtlSizer::allocations`]), not a feedback signal into the
-//!   controllers — per-tenant admission enforcement is a ROADMAP item.
-//! * [`TenantTtlSizer`] — the [`EpochSizer`] gluing the three together;
+//!   sizes into the shared cluster sizing decision: reserved floors first
+//!   (Memshare's reserved-vs-pooled split), then the pooled capacity in
+//!   descending miss-cost-weight order, so when the instance cap binds
+//!   the squeeze lands on the tenants whose misses are cheapest.
+//! * **Grant enforcement** (`scaler.enforce_grants`) — the arbiter's
+//!   `granted_bytes` are *binding*, closed-loop, not merely reported:
+//!   each epoch every grant (which already contains the tenant's reserved
+//!   floor) becomes (a) a per-tenant **occupancy cap** enforced on the
+//!   balancer's admission path as a per-epoch admission byte budget for
+//!   bytes outside the tenant's virtual (affordable) set (a constant-time
+//!   compare per request — Carlsson & Eager's elastic insertion-policy
+//!   bound), and
+//!   (b) a per-tenant **TTL clamp**: a tenant whose controller wants more
+//!   memory than its grant has its timer projected onto
+//!   `[T_min, T · granted/demand]`, so it converges to the largest
+//!   affordable timer instead of thrashing above it. A **feedback term**
+//!   escalates a tenant's grant priority (weight × boost, ×2 per epoch up
+//!   to 64×) while its *measured* physical miss ratio exceeds its
+//!   configured `slo_miss_ratio`, and decays once compliant. With
+//!   enforcement off (the default) grants remain reporting-only and the
+//!   request path is bit-for-bit the pre-enforcement one.
+//! * [`TenantTtlSizer`] — the [`EpochSizer`] gluing it all together;
 //!   [`crate::balancer::Balancer`] dispatches each request's shadow
-//!   update to the right controller via the request's tenant id.
+//!   update (and admission verdict) through it via the request's tenant
+//!   id, and feeds physical outcomes back for the SLO tracker.
 //!
 //! Physical placement stays tenant-agnostic: the balancer routes on
 //! `(tenant, key)` by folding the tenant into the hash-slot key
@@ -38,6 +52,12 @@ use crate::scaler::{EpochSizer, PolicyWork};
 use crate::trace::Request;
 use crate::vcache::VirtualCache;
 use crate::{ObjectId, TenantId, TimeUs};
+
+/// Grant-priority escalation per epoch in SLO violation (and the decay
+/// factor once compliant).
+const SLO_BOOST_STEP: f64 = 2.0;
+/// Ceiling on the SLO escalation factor.
+const SLO_BOOST_MAX: f64 = 64.0;
 
 /// Traffic class of a tenant — a coarse service-level label, reported in
 /// ledgers and usable by operators to pick miss-cost multipliers.
@@ -79,6 +99,16 @@ pub struct TenantSpec {
     /// (its misses cost `multiplier × m_o` dollars).
     pub miss_cost_multiplier: f64,
     pub class: TrafficClass,
+    /// Memshare-style reservation: bytes of the shared cluster guaranteed
+    /// to this tenant even under contention (`[tenantN] reserved_mb`).
+    /// The reservation is both a grant floor in the [`Arbiter`] and an
+    /// admission-budget floor under enforcement. 0 = fully pooled.
+    pub reserved_bytes: u64,
+    /// Miss-ratio service-level objective (`[tenantN] slo_miss_ratio`).
+    /// While the tenant's measured physical miss ratio exceeds this
+    /// target, its grant priority escalates epoch over epoch. `None` =
+    /// best-effort tenant.
+    pub slo_miss_ratio: Option<f64>,
 }
 
 impl TenantSpec {
@@ -88,6 +118,8 @@ impl TenantSpec {
             name: name.into(),
             miss_cost_multiplier: 1.0,
             class: TrafficClass::Standard,
+            reserved_bytes: 0,
+            slo_miss_ratio: None,
         }
     }
 
@@ -98,6 +130,16 @@ impl TenantSpec {
 
     pub fn with_class(mut self, class: TrafficClass) -> TenantSpec {
         self.class = class;
+        self
+    }
+
+    pub fn with_reserved_bytes(mut self, bytes: u64) -> TenantSpec {
+        self.reserved_bytes = bytes;
+        self
+    }
+
+    pub fn with_slo_miss_ratio(mut self, target: f64) -> TenantSpec {
+        self.slo_miss_ratio = Some(target);
         self
     }
 }
@@ -164,6 +206,11 @@ impl TenantRegistry {
     pub fn multiplier(&self, id: TenantId) -> f64 {
         self.get(id).map(|s| s.miss_cost_multiplier).unwrap_or(1.0)
     }
+
+    /// Reserved bytes for `id` (0 for unknown tenants).
+    pub fn reserved_bytes(&self, id: TenantId) -> u64 {
+        self.get(id).map(|s| s.reserved_bytes).unwrap_or(0)
+    }
 }
 
 /// Fold a tenant id into an object id so tenants sharing physical
@@ -180,16 +227,133 @@ pub fn scoped_object(tenant: TenantId, obj: ObjectId) -> ObjectId {
     }
 }
 
+/// Windowed per-tenant SLO tracker: measures the physical miss ratio of
+/// the closing epoch and escalates/decays the tenant's grant-priority
+/// boost against its configured target.
+#[derive(Debug, Clone)]
+struct SloState {
+    target: Option<f64>,
+    epoch_hits: u64,
+    epoch_misses: u64,
+    /// Miss ratio of the last closed epoch that carried traffic.
+    measured: Option<f64>,
+    /// Grant-priority escalation factor (1.0 = compliant/untracked).
+    boost: f64,
+}
+
+impl SloState {
+    fn new(target: Option<f64>) -> SloState {
+        SloState { target, epoch_hits: 0, epoch_misses: 0, measured: None, boost: 1.0 }
+    }
+
+    #[inline]
+    fn record(&mut self, hit: bool) {
+        if hit {
+            self.epoch_hits += 1;
+        } else {
+            self.epoch_misses += 1;
+        }
+    }
+
+    /// Close the epoch's measurement window and update the boost. Quiet
+    /// epochs (no traffic) decay the boost rather than escalating on
+    /// stale measurements.
+    fn close_epoch(&mut self) {
+        let total = self.epoch_hits + self.epoch_misses;
+        let fresh = if total > 0 {
+            Some(self.epoch_misses as f64 / total as f64)
+        } else {
+            None
+        };
+        if fresh.is_some() {
+            self.measured = fresh;
+        }
+        self.epoch_hits = 0;
+        self.epoch_misses = 0;
+        if let Some(target) = self.target {
+            match fresh {
+                Some(m) if m > target => {
+                    self.boost = (self.boost * SLO_BOOST_STEP).min(SLO_BOOST_MAX);
+                }
+                _ => {
+                    self.boost = (self.boost / SLO_BOOST_STEP).max(1.0);
+                }
+            }
+        }
+    }
+}
+
+/// One tenant's controller plus its enforcement state.
+struct TenantSlot {
+    id: TenantId,
+    vc: VirtualCache,
+    slo: SloState,
+    /// Occupancy cap in force = the per-epoch admission byte budget (the
+    /// tenant's `granted_bytes`, which already contains its reserved
+    /// floor); `u64::MAX` before the first epoch decision or when
+    /// enforcement is off.
+    cap_bytes: u64,
+    /// Physical bytes admitted (inserted on miss) during the open epoch.
+    epoch_admitted_bytes: u64,
+    /// Cumulative admissions refused by the cap.
+    denied: u64,
+    /// Shadow demand / grant from the most recent epoch decision.
+    last_demand: u64,
+    last_grant: u64,
+    /// Whether any epoch decision has been taken yet.
+    decided: bool,
+}
+
+/// Read-only snapshot of one tenant's enforcement state (the `SLO`
+/// serve command and the [`crate::engine::SloProbe`] surface this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantEnforcement {
+    pub tenant: TenantId,
+    /// Shadow demand at the last epoch decision, bytes.
+    pub demand_bytes: u64,
+    /// Bytes granted at the last epoch decision.
+    pub granted_bytes: u64,
+    /// Whether an epoch decision has been taken yet.
+    pub decided: bool,
+    /// Whether grants are binding (`scaler.enforce_grants`).
+    pub enforced: bool,
+    /// Occupancy cap / per-epoch admission byte budget in force.
+    pub cap_bytes: Option<u64>,
+    /// Bytes admitted against the budget in the open epoch.
+    pub admitted_epoch_bytes: u64,
+    /// Cumulative admissions refused by the cap.
+    pub denied_admissions: u64,
+    /// TTL clamp in force on this tenant's controller, seconds.
+    pub ttl_clamp_secs: Option<f64>,
+    /// Configured miss-ratio SLO.
+    pub slo_miss_ratio: Option<f64>,
+    /// Measured physical miss ratio of the last closed epoch with traffic.
+    pub measured_miss_ratio: Option<f64>,
+    /// Grant-priority escalation factor (1.0 = compliant/untracked).
+    pub boost: f64,
+}
+
+impl TenantEnforcement {
+    /// Whether the last measurement violates the configured SLO.
+    pub fn in_violation(&self) -> bool {
+        matches!(
+            (self.slo_miss_ratio, self.measured_miss_ratio),
+            (Some(target), Some(m)) if m > target
+        )
+    }
+}
+
 /// One §4 virtual-TTL-cache controller per tenant, with O(1) dispatch by
 /// tenant id (dense index vector; unknown tenants are admitted lazily
-/// with default cost).
+/// with default cost), plus the per-tenant enforcement state (occupancy
+/// cap, admission budget, SLO tracker).
 pub struct ControllerBank {
     ctrl: ControllerConfig,
     /// Base (multiplier-1) cost catalog.
     cost: CostConfig,
     registry: TenantRegistry,
-    /// `(tenant, controller)` in registration order.
-    slots: Vec<(TenantId, VirtualCache)>,
+    /// Tenant slots in registration order.
+    slots: Vec<TenantSlot>,
     /// tenant id → slot index (`u32::MAX` = absent), grown on demand.
     index: Vec<u32>,
 }
@@ -226,7 +390,17 @@ impl ControllerBank {
             self.index.resize(id + 1, u32::MAX);
         }
         self.index[id] = slot;
-        self.slots.push((spec.id, vc));
+        self.slots.push(TenantSlot {
+            id: spec.id,
+            vc,
+            slo: SloState::new(spec.slo_miss_ratio),
+            cap_bytes: u64::MAX,
+            epoch_admitted_bytes: 0,
+            denied: 0,
+            last_demand: 0,
+            last_grant: 0,
+            decided: false,
+        });
         self.registry.register(spec);
     }
 
@@ -242,10 +416,10 @@ impl ControllerBank {
         self.slots.is_empty()
     }
 
-    /// The controller for `tenant`, creating one (default spec, multiplier
-    /// 1.0) the first time an unregistered tenant shows up.
+    /// The slot for `tenant`, creating one (default spec, multiplier 1.0)
+    /// the first time an unregistered tenant shows up.
     #[inline]
-    pub fn controller_mut(&mut self, tenant: TenantId) -> &mut VirtualCache {
+    fn slot_mut(&mut self, tenant: TenantId) -> &mut TenantSlot {
         let id = tenant as usize;
         let slot = self.index.get(id).copied().unwrap_or(u32::MAX);
         let slot = if slot == u32::MAX {
@@ -254,7 +428,14 @@ impl ControllerBank {
         } else {
             slot
         };
-        &mut self.slots[slot as usize].1
+        &mut self.slots[slot as usize]
+    }
+
+    /// The controller for `tenant`, creating one (default spec, multiplier
+    /// 1.0) the first time an unregistered tenant shows up.
+    #[inline]
+    pub fn controller_mut(&mut self, tenant: TenantId) -> &mut VirtualCache {
+        &mut self.slot_mut(tenant).vc
     }
 
     pub fn get(&self, tenant: TenantId) -> Option<&VirtualCache> {
@@ -262,28 +443,151 @@ impl ControllerBank {
         if slot == u32::MAX {
             return None;
         }
-        Some(&self.slots[slot as usize].1)
+        Some(&self.slots[slot as usize].vc)
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (TenantId, &VirtualCache)> {
-        self.slots.iter().map(|(t, vc)| (*t, vc))
+        self.slots.iter().map(|s| (s.id, &s.vc))
     }
 
     /// Run expiry (and any pending controller updates) on every tenant.
     pub fn expire_all(&mut self, now: TimeUs) {
-        for (_, vc) in &mut self.slots {
-            vc.expire(now);
+        for s in &mut self.slots {
+            s.vc.expire(now);
         }
     }
 
     /// Sum of per-tenant virtual sizes, bytes.
     pub fn total_vsize(&self) -> u64 {
-        self.slots.iter().map(|(_, vc)| vc.vsize()).sum()
+        self.slots.iter().map(|s| s.vc.vsize()).sum()
     }
 
     /// `(tenant, T_i seconds)` for every tenant.
     pub fn ttls(&self) -> Vec<(TenantId, f64)> {
-        self.slots.iter().map(|(t, vc)| (*t, vc.ttl_secs())).collect()
+        self.slots.iter().map(|s| (s.id, s.vc.ttl_secs())).collect()
+    }
+
+    /// Record a served request's physical outcome: SLO measurement, and —
+    /// on *budget-gated* admitted misses — budget consumption. Shadow-hit
+    /// re-admissions are repair traffic already counted by the demand
+    /// estimator that produced the grant, so they are exempt — which also
+    /// keeps `admitted_epoch_bytes ≤ cap_bytes` an invariant (every
+    /// charge passed the cap check in `on_request`). Denials that
+    /// suppressed an insert (`!hit && !admitted`) are counted.
+    #[inline]
+    fn record_served(
+        &mut self,
+        tenant: TenantId,
+        hit: bool,
+        admitted: bool,
+        shadow_hit: bool,
+        size: u64,
+    ) {
+        let slot = self.slot_mut(tenant);
+        slot.slo.record(hit);
+        if !hit {
+            if !admitted {
+                slot.denied += 1;
+            } else if !shadow_hit {
+                slot.epoch_admitted_bytes = slot.epoch_admitted_bytes.saturating_add(size);
+            }
+        }
+    }
+
+    /// Close every tenant's SLO measurement window and reset the
+    /// admission budgets for the next epoch.
+    fn close_epoch_slo(&mut self) {
+        for s in &mut self.slots {
+            s.slo.close_epoch();
+            s.epoch_admitted_bytes = 0;
+        }
+    }
+
+    /// Per-tenant `(demand, reserved, weight)` rows for the arbiter; the
+    /// weight is the miss-cost multiplier escalated by the SLO boost.
+    fn demands(&self) -> Vec<TenantDemand> {
+        self.slots
+            .iter()
+            .map(|s| TenantDemand {
+                tenant: s.id,
+                demand_bytes: s.vc.vsize(),
+                reserved_bytes: self.registry.reserved_bytes(s.id),
+                weight: self.registry.multiplier(s.id) * s.slo.boost,
+            })
+            .collect()
+    }
+
+    /// Apply one epoch grant to its tenant: record it, and under
+    /// enforcement convert it into the occupancy cap (admission budget)
+    /// and the TTL clamp.
+    fn apply_grant(&mut self, a: &TenantAllocation, enforce: bool) {
+        let slot = self.slot_mut(a.tenant);
+        slot.last_demand = a.demand_bytes;
+        slot.last_grant = a.granted_bytes;
+        slot.decided = true;
+        if !enforce {
+            slot.cap_bytes = u64::MAX;
+            return;
+        }
+        // The grant already contains the (possibly proportionally scaled)
+        // reserved floor — flooring at the raw reservation here would let
+        // oversubscribed reservations admit past cluster capacity.
+        slot.cap_bytes = a.granted_bytes;
+        if a.demand_bytes > a.granted_bytes {
+            // The grant was trimmed below the controller's demand: clamp
+            // the timer to the largest affordable value. vsize ≈ rate·T·s̄
+            // is linear in T, so T·granted/demand is the first-order
+            // affordable timer; repeated epochs converge geometrically.
+            let frac = a.granted_bytes as f64 / a.demand_bytes as f64;
+            let affordable = slot.vc.ttl_secs() * frac;
+            slot.vc.set_ttl_cap_secs(affordable);
+        } else {
+            slot.vc.clear_ttl_cap();
+        }
+    }
+
+    /// Enforcement snapshot for every tenant slot.
+    fn enforcement_rows(&self, enforce: bool) -> Vec<TenantEnforcement> {
+        self.slots
+            .iter()
+            .map(|s| TenantEnforcement {
+                tenant: s.id,
+                demand_bytes: s.last_demand,
+                granted_bytes: s.last_grant,
+                decided: s.decided,
+                enforced: enforce,
+                cap_bytes: if s.cap_bytes == u64::MAX { None } else { Some(s.cap_bytes) },
+                admitted_epoch_bytes: s.epoch_admitted_bytes,
+                denied_admissions: s.denied,
+                ttl_clamp_secs: s.vc.ttl_cap_secs(),
+                slo_miss_ratio: s.slo.target,
+                measured_miss_ratio: s.slo.measured,
+                boost: s.slo.boost,
+            })
+            .collect()
+    }
+}
+
+/// One tenant's input row to an epoch arbitration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantDemand {
+    pub tenant: TenantId,
+    /// Shadow (virtual cache) demand at the epoch boundary, bytes.
+    pub demand_bytes: u64,
+    /// Memshare-style reserved floor, bytes.
+    pub reserved_bytes: u64,
+    /// Miss-cost weight (multiplier × SLO boost) for contention ordering.
+    pub weight: f64,
+}
+
+impl TenantDemand {
+    pub fn new(tenant: TenantId, demand_bytes: u64, weight: f64) -> TenantDemand {
+        TenantDemand { tenant, demand_bytes, reserved_bytes: 0, weight }
+    }
+
+    pub fn with_reserved(mut self, bytes: u64) -> TenantDemand {
+        self.reserved_bytes = bytes;
+        self
     }
 }
 
@@ -293,15 +597,20 @@ pub struct TenantAllocation {
     pub tenant: TenantId,
     /// Shadow (virtual cache) demand at the epoch boundary, bytes.
     pub demand_bytes: u64,
-    /// Bytes granted by the arbiter (= demand unless the cap binds).
+    /// Reserved floor carried into the decision, bytes.
+    pub reserved_bytes: u64,
+    /// Bytes granted by the arbiter: the reserved floor plus the
+    /// demand top-up from the pooled capacity (= demand when neither the
+    /// reservation nor the instance cap binds).
     pub granted_bytes: u64,
     /// Miss-cost weight used for contention ordering.
     pub weight: f64,
 }
 
 /// Cost-aware capacity arbiter: Algorithm 2's `ROUND(VC.size / S_p)`
-/// generalized to the multi-tenant aggregate, with weighted trimming when
-/// the instance cap binds.
+/// generalized to the multi-tenant aggregate, with a Memshare-style
+/// reserved/pooled split and weighted trimming when the instance cap
+/// binds.
 #[derive(Debug, Clone)]
 pub struct Arbiter {
     instance_bytes: u64,
@@ -318,45 +627,73 @@ impl Arbiter {
         }
     }
 
-    /// Fold `(tenant, demand_bytes, weight)` triples into the next cluster
-    /// size plus the per-tenant grants. The size is
-    /// `clamp(round(Σdemand / S_p))`; grants equal demands unless the
-    /// aggregate exceeds the cap, in which case the capped capacity is
-    /// attributed to higher-weight (more miss-cost-sensitive) tenants
-    /// first. Grants are an accounting/reporting output — enforcement
-    /// (capping what a squeezed tenant may actually occupy) is left to a
-    /// future admission layer (see ROADMAP).
-    pub fn decide(&self, demands: &[(TenantId, u64, f64)]) -> (u32, Vec<TenantAllocation>) {
-        let total: u64 = demands.iter().map(|&(_, d, _)| d).sum();
+    /// Total grantable capacity, bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.max_instances as u64).saturating_mul(self.instance_bytes)
+    }
+
+    /// Fold per-tenant demand rows into the next cluster size plus the
+    /// per-tenant grants. The size is `clamp(round(Σdemand / S_p))`.
+    /// Grants are handed out in two phases against the capacity the
+    /// instance cap allows: first every tenant's reserved floor (scaled
+    /// down proportionally if the floors alone oversubscribe the
+    /// cluster), then the pooled remainder in descending miss-cost weight
+    /// (ties: bigger demand, then lower tenant id). Σ granted never
+    /// exceeds `max_instances × S_p`, and when nothing binds every grant
+    /// equals its demand. Under `scaler.enforce_grants` the caller turns
+    /// these grants into occupancy caps and TTL clamps
+    /// ([`ControllerBank::apply_grant`]); otherwise they are
+    /// reporting/diagnostics.
+    pub fn decide(&self, demands: &[TenantDemand]) -> (u32, Vec<TenantAllocation>) {
+        let total: u64 = demands.iter().map(|d| d.demand_bytes).sum();
         let raw = (total as f64 / self.instance_bytes as f64).round() as u32;
         let n = raw.clamp(self.min_instances, self.max_instances);
 
+        let capacity = self.capacity_bytes();
         let mut allocs: Vec<TenantAllocation> = demands
             .iter()
-            .map(|&(tenant, demand_bytes, weight)| TenantAllocation {
-                tenant,
-                demand_bytes,
-                granted_bytes: demand_bytes,
-                weight,
+            .map(|d| TenantAllocation {
+                tenant: d.tenant,
+                demand_bytes: d.demand_bytes,
+                reserved_bytes: d.reserved_bytes,
+                granted_bytes: 0,
+                weight: d.weight,
             })
             .collect();
-        if raw > self.max_instances {
-            // The cap binds: hand out capacity in descending miss-cost
-            // weight (ties: bigger demand first), so the squeeze lands on
-            // the tenants whose misses are cheapest.
-            let mut order: Vec<usize> = (0..allocs.len()).collect();
-            order.sort_by(|&a, &b| {
-                allocs[b]
-                    .weight
-                    .partial_cmp(&allocs[a].weight)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(allocs[b].demand_bytes.cmp(&allocs[a].demand_bytes))
-            });
-            let mut remaining = self.max_instances as u64 * self.instance_bytes;
-            for i in order {
-                let grant = allocs[i].demand_bytes.min(remaining);
-                allocs[i].granted_bytes = grant;
-                remaining -= grant;
+
+        // Phase 1 — reserved floors (Memshare's guaranteed memory),
+        // scaled proportionally if the reservations alone oversubscribe
+        // the cluster.
+        let reserved_sum: u64 = allocs.iter().map(|a| a.reserved_bytes).sum();
+        let scale = if reserved_sum > capacity {
+            capacity as f64 / reserved_sum as f64
+        } else {
+            1.0
+        };
+        let mut remaining = capacity;
+        for a in &mut allocs {
+            let floor = ((a.reserved_bytes as f64 * scale) as u64).min(remaining);
+            a.granted_bytes = floor;
+            remaining -= floor;
+        }
+
+        // Phase 2 — pooled capacity: top demands up in descending
+        // miss-cost weight, so the squeeze lands on the tenants whose
+        // misses are cheapest.
+        let mut order: Vec<usize> = (0..allocs.len()).collect();
+        order.sort_by(|&a, &b| {
+            allocs[b]
+                .weight
+                .partial_cmp(&allocs[a].weight)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(allocs[b].demand_bytes.cmp(&allocs[a].demand_bytes))
+                .then(allocs[a].tenant.cmp(&allocs[b].tenant))
+        });
+        for i in order {
+            if allocs[i].demand_bytes > allocs[i].granted_bytes {
+                let extra = (allocs[i].demand_bytes - allocs[i].granted_bytes).min(remaining);
+                allocs[i].granted_bytes += extra;
+                remaining -= extra;
             }
         }
         (n, allocs)
@@ -365,10 +702,13 @@ impl Arbiter {
 
 /// Multi-tenant version of Algorithm 2: the balancer feeds each request to
 /// its tenant's controller; the arbiter sizes the shared cluster from the
-/// aggregate shadow demand at each epoch boundary.
+/// aggregate shadow demand at each epoch boundary; under
+/// `scaler.enforce_grants` the grants feed back as binding occupancy caps
+/// and TTL clamps.
 pub struct TenantTtlSizer {
     bank: ControllerBank,
     arbiter: Arbiter,
+    enforce: bool,
     last_allocations: Vec<TenantAllocation>,
 }
 
@@ -383,6 +723,7 @@ impl TenantTtlSizer {
         TenantTtlSizer {
             bank: ControllerBank::new(ctrl, cost, registry),
             arbiter: Arbiter::new(instance_bytes, scaler),
+            enforce: scaler.enforce_grants,
             last_allocations: Vec::new(),
         }
     }
@@ -409,6 +750,11 @@ impl TenantTtlSizer {
         &self.bank
     }
 
+    /// Whether grants are binding for this sizer.
+    pub fn enforcing(&self) -> bool {
+        self.enforce
+    }
+
     /// Per-tenant grants from the most recent epoch decision.
     pub fn allocations(&self) -> &[TenantAllocation] {
         &self.last_allocations
@@ -417,21 +763,47 @@ impl TenantTtlSizer {
 
 impl EpochSizer for TenantTtlSizer {
     fn on_request(&mut self, req: &Request) -> PolicyWork {
-        let vc = self.bank.controller_mut(req.tenant);
-        let out = vc.on_request(req.ts, req.obj, req.size_bytes());
+        let enforce = self.enforce;
+        let slot = self.bank.slot_mut(req.tenant);
+        let out = slot.vc.on_request(req.ts, req.obj, req.size_bytes());
+        // Admission verdict, O(1): objects inside the tenant's virtual
+        // (affordable) set always re-admit; everything else must fit the
+        // epoch's remaining byte budget. With enforcement off the verdict
+        // is unconditionally yes and no budget state is touched.
+        let admit = !enforce
+            || out.hit
+            || slot.cap_bytes == u64::MAX
+            || slot.epoch_admitted_bytes.saturating_add(req.size_bytes()) <= slot.cap_bytes;
         // hash + route (1) + bank dispatch (1) + vcache list ops (≈2):
-        // constant, one unit over the single-tenant TTL path.
-        PolicyWork { units: 4, shadow_hit: Some(out.hit) }
+        // constant, one unit over the single-tenant TTL path; the
+        // enforcement compare adds one more constant unit.
+        PolicyWork {
+            units: 4 + enforce as u32,
+            shadow_hit: Some(out.hit),
+            admit,
+        }
+    }
+
+    fn on_served(&mut self, req: &Request, hit: bool, work: &PolicyWork) {
+        self.bank.record_served(
+            req.tenant,
+            hit,
+            work.admit,
+            work.shadow_hit == Some(true),
+            req.size_bytes(),
+        );
     }
 
     fn decide(&mut self, now: TimeUs) -> u32 {
         self.bank.expire_all(now);
-        let demands: Vec<(TenantId, u64, f64)> = self
-            .bank
-            .iter()
-            .map(|(t, vc)| (t, vc.vsize(), self.bank.registry().multiplier(t)))
-            .collect();
+        // Close the SLO measurement windows first so this decision's
+        // weights carry the boost earned by the epoch just ending.
+        self.bank.close_epoch_slo();
+        let demands = self.bank.demands();
         let (n, allocs) = self.arbiter.decide(&demands);
+        for a in &allocs {
+            self.bank.apply_grant(a, self.enforce);
+        }
         self.last_allocations = allocs;
         n
     }
@@ -469,6 +841,10 @@ impl EpochSizer for TenantTtlSizer {
     fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
         Some(self.bank.ttls())
     }
+
+    fn enforcement(&self) -> Option<Vec<TenantEnforcement>> {
+        Some(self.bank.enforcement_rows(self.enforce))
+    }
 }
 
 #[cfg(test)]
@@ -500,6 +876,10 @@ mod tests {
         assert_eq!(reg.len(), 3, "duplicate id must replace, not append");
         assert_eq!(reg.get(1).unwrap().name, "web2");
         assert_eq!(reg.multiplier(1), 2.0);
+        assert_eq!(reg.reserved_bytes(1), 0);
+        reg.register(TenantSpec::new(4, "gold").with_reserved_bytes(1 << 20));
+        assert_eq!(reg.reserved_bytes(4), 1 << 20);
+        assert_eq!(reg.reserved_bytes(999), 0);
     }
 
     #[test]
@@ -595,20 +975,71 @@ mod tests {
     }
 
     #[test]
+    fn slo_state_escalates_and_decays() {
+        let mut s = SloState::new(Some(0.1));
+        assert_eq!(s.boost, 1.0);
+        // Two violating epochs escalate geometrically…
+        for _ in 0..50 {
+            s.record(false);
+        }
+        s.close_epoch();
+        assert_eq!(s.measured, Some(1.0));
+        assert_eq!(s.boost, 2.0);
+        for _ in 0..50 {
+            s.record(false);
+        }
+        s.close_epoch();
+        assert_eq!(s.boost, 4.0);
+        // …capped at the ceiling…
+        for _ in 0..20 {
+            for _ in 0..10 {
+                s.record(false);
+            }
+            s.close_epoch();
+        }
+        assert_eq!(s.boost, SLO_BOOST_MAX);
+        // …and a compliant epoch decays it.
+        for _ in 0..100 {
+            s.record(true);
+        }
+        s.close_epoch();
+        assert_eq!(s.measured, Some(0.0));
+        assert_eq!(s.boost, SLO_BOOST_MAX / SLO_BOOST_STEP);
+        // Quiet epochs decay too (no escalating on stale data).
+        s.close_epoch();
+        assert_eq!(s.boost, SLO_BOOST_MAX / SLO_BOOST_STEP / SLO_BOOST_STEP);
+        assert_eq!(s.measured, Some(0.0), "measurement persists through quiet epochs");
+        // Untracked tenants never budge.
+        let mut free = SloState::new(None);
+        for _ in 0..10 {
+            free.record(false);
+        }
+        free.close_epoch();
+        assert_eq!(free.boost, 1.0);
+        assert_eq!(free.measured, Some(1.0));
+    }
+
+    #[test]
     fn arbiter_sums_demands_and_clamps() {
         let cfg = Config::default();
         let mut scaler = cfg.scaler.clone();
         scaler.min_instances = 1;
         scaler.max_instances = 4;
         let arb = Arbiter::new(1_000_000, &scaler);
+        assert_eq!(arb.capacity_bytes(), 4_000_000);
         // Under the cap: everyone granted in full, size = round(total/S).
-        let (n, allocs) = arb.decide(&[(0, 1_400_000, 3.0), (1, 700_000, 1.0)]);
+        let (n, allocs) = arb.decide(&[
+            TenantDemand::new(0, 1_400_000, 3.0),
+            TenantDemand::new(1, 700_000, 1.0),
+        ]);
         assert_eq!(n, 2);
         assert!(allocs.iter().all(|a| a.granted_bytes == a.demand_bytes));
         // Over the cap: total 9 MB → raw 9 > max 4. High-weight tenant is
         // granted first; the cheap tenant absorbs the squeeze.
-        let (n, allocs) =
-            arb.decide(&[(0, 3_000_000, 3.0), (1, 6_000_000, 0.3)]);
+        let (n, allocs) = arb.decide(&[
+            TenantDemand::new(0, 3_000_000, 3.0),
+            TenantDemand::new(1, 6_000_000, 0.3),
+        ]);
         assert_eq!(n, 4);
         let a0 = allocs.iter().find(|a| a.tenant == 0).unwrap();
         let a1 = allocs.iter().find(|a| a.tenant == 1).unwrap();
@@ -620,6 +1051,39 @@ mod tests {
     }
 
     #[test]
+    fn arbiter_honors_reserved_floors() {
+        let cfg = Config::default();
+        let mut scaler = cfg.scaler.clone();
+        scaler.min_instances = 1;
+        scaler.max_instances = 4;
+        let arb = Arbiter::new(1_000_000, &scaler);
+        // The cheap tenant's reservation survives the expensive tenant's
+        // huge demand: without the floor, weight ordering would hand
+        // tenant 0 the whole 4 MB.
+        let (_, allocs) = arb.decide(&[
+            TenantDemand::new(0, 10_000_000, 5.0),
+            TenantDemand::new(1, 2_000_000, 1.0).with_reserved(1_500_000),
+        ]);
+        let a0 = allocs.iter().find(|a| a.tenant == 0).unwrap();
+        let a1 = allocs.iter().find(|a| a.tenant == 1).unwrap();
+        assert!(a1.granted_bytes >= 1_500_000, "{a1:?}");
+        assert_eq!(a0.granted_bytes + a1.granted_bytes, 4_000_000);
+        // A reservation is granted even beyond demand (guaranteed
+        // headroom), and oversubscribed reservations scale down
+        // proportionally instead of starving anyone.
+        let (_, allocs) = arb.decide(&[
+            TenantDemand::new(0, 100_000, 1.0).with_reserved(6_000_000),
+            TenantDemand::new(1, 100_000, 1.0).with_reserved(2_000_000),
+        ]);
+        let a0 = allocs.iter().find(|a| a.tenant == 0).unwrap();
+        let a1 = allocs.iter().find(|a| a.tenant == 1).unwrap();
+        assert!(a0.granted_bytes >= 2_900_000 && a0.granted_bytes <= 3_000_000, "{a0:?}");
+        assert!(a1.granted_bytes >= 900_000 && a1.granted_bytes <= 1_000_000, "{a1:?}");
+        let total: u64 = allocs.iter().map(|a| a.granted_bytes).sum();
+        assert!(total <= arb.capacity_bytes());
+    }
+
+    #[test]
     fn tenant_sizer_sizes_shared_cluster_from_aggregate() {
         let mut cfg = Config::default();
         cfg.controller.t_init_secs = 3600.0; // sticky ghosts
@@ -627,6 +1091,7 @@ mod tests {
         let inst = cfg.cost.instance.ram_bytes;
         let mut s = TenantTtlSizer::from_config(&cfg);
         assert_eq!(s.name(), "tenant_ttl");
+        assert!(!s.enforcing(), "enforcement is opt-in");
         // ~1 instance worth of ghosts per tenant → aggregate ≈ 3.
         let obj_size = inst / 10;
         for i in 0..10u64 {
@@ -643,6 +1108,95 @@ mod tests {
         let ttls = s.tenant_ttls().unwrap();
         assert_eq!(ttls.len(), 3);
         assert!(s.ttl_secs().is_some());
+        // Unenforced: grants recorded but no caps/clamps in force.
+        let rows = s.enforcement().unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.decided);
+            assert!(!r.enforced);
+            assert_eq!(r.cap_bytes, None);
+            assert_eq!(r.ttl_clamp_secs, None);
+        }
+    }
+
+    #[test]
+    fn enforced_sizer_caps_admissions_and_clamps_ttls() {
+        let mut cfg = Config::default();
+        cfg.controller.t_init_secs = 3600.0; // sticky ghosts
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 2; // capacity: 2 MB
+        cfg.scaler.enforce_grants = true;
+        cfg.tenants = vec![
+            TenantSpec::new(0, "gold").with_multiplier(10.0).with_slo_miss_ratio(0.5),
+            TenantSpec::new(1, "bulk").with_multiplier(0.5),
+        ];
+        let mut s = TenantTtlSizer::from_config(&cfg);
+        assert!(s.enforcing());
+        // Before the first decision nothing is capped: everything admits.
+        let w = s.on_request(&Request::new(0, 1, 100_000));
+        assert!(w.admit);
+        assert_eq!(w.units, 5, "enforcement adds one constant work unit");
+        s.on_served(&Request::new(0, 1, 100_000), false, &w);
+        // Load both tenants far beyond capacity: gold 1.5 MB, bulk 3 MB.
+        for i in 0..15u64 {
+            let r = Request::new(i * SECOND, 100 + i, 100_000);
+            let w = s.on_request(&r);
+            s.on_served(&r, false, &w);
+        }
+        for i in 0..30u64 {
+            let r = Request::new(i * SECOND, 500 + i, 100_000).with_tenant(1);
+            let w = s.on_request(&r);
+            s.on_served(&r, false, &w);
+        }
+        let n = s.decide(40 * SECOND);
+        assert_eq!(n, 2, "cluster pegged at the cap");
+        // Gold (10×) granted in full; bulk squeezed to the remainder and
+        // clamped.
+        let rows = s.enforcement().unwrap();
+        let gold = rows.iter().find(|r| r.tenant == 0).unwrap();
+        let bulk = rows.iter().find(|r| r.tenant == 1).unwrap();
+        assert!(gold.enforced && bulk.enforced);
+        assert_eq!(gold.granted_bytes, gold.demand_bytes, "{gold:?}");
+        assert!(bulk.granted_bytes < bulk.demand_bytes, "{bulk:?}");
+        assert_eq!(bulk.cap_bytes, Some(bulk.granted_bytes));
+        let clamp = bulk.ttl_clamp_secs.expect("squeezed tenant must be clamped");
+        assert!(clamp < 3600.0, "clamp {clamp}");
+        assert_eq!(gold.ttl_clamp_secs, None, "full grant leaves gold unclamped");
+        // Bulk's next-epoch insertions stop at the budget; gold admits on.
+        let mut denied = 0;
+        for i in 0..30u64 {
+            let r = Request::new(41 * SECOND + i, 900 + i, 100_000).with_tenant(1);
+            let w = s.on_request(&r);
+            if !w.admit {
+                denied += 1;
+            }
+            s.on_served(&r, false, &w);
+        }
+        assert!(denied > 0, "over-budget inserts must be refused");
+        let r = Request::new(42 * SECOND, 4242, 100_000);
+        assert!(s.on_request(&r).admit, "gold stays within its grant");
+        let rows = s.enforcement().unwrap();
+        let bulk = rows.iter().find(|r| r.tenant == 1).unwrap();
+        assert_eq!(bulk.denied_admissions, denied);
+        assert!(bulk.admitted_epoch_bytes <= bulk.cap_bytes.unwrap());
+        // SLO bookkeeping: gold's all-miss warmup epoch violated its 0.5
+        // target, so the first decision already escalated its priority.
+        let gold = rows.iter().find(|r| r.tenant == 0).unwrap();
+        assert_eq!(gold.measured_miss_ratio, Some(1.0));
+        assert!(gold.in_violation());
+        assert_eq!(gold.boost, SLO_BOOST_STEP);
+        // A compliant epoch (all hits on resident ghosts) decays it back.
+        for i in 0..10u64 {
+            let r = Request::new(50 * SECOND + i, 100 + i, 100_000);
+            let w = s.on_request(&r);
+            s.on_served(&r, true, &w);
+        }
+        s.decide(80 * SECOND);
+        let rows = s.enforcement().unwrap();
+        let gold = rows.iter().find(|r| r.tenant == 0).unwrap();
+        assert_eq!(gold.measured_miss_ratio, Some(0.0));
+        assert!(!gold.in_violation());
+        assert_eq!(gold.boost, 1.0);
     }
 
     #[test]

@@ -103,7 +103,10 @@ impl Bencher {
         &self.results
     }
 
-    /// Append results to `target/bench_results.csv`.
+    /// Append results to `target/bench_results.csv`, and — when
+    /// `ELASTICTL_BENCH_JSON` names a file — write the suite's results
+    /// there as a JSON summary (the CI bench-regression gate compares it
+    /// against `rust/benches/baseline.json`).
     pub fn finish(self) {
         let path = std::path::Path::new("target").join("bench_results.csv");
         let mut text = String::new();
@@ -130,7 +133,43 @@ impl Bencher {
         if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
             let _ = f.write_all(text.as_bytes());
         }
+        if let Ok(json_path) = std::env::var("ELASTICTL_BENCH_JSON") {
+            if !json_path.is_empty() {
+                let json = self.to_json();
+                if let Some(parent) = std::path::Path::new(&json_path).parent() {
+                    let _ = std::fs::create_dir_all(parent);
+                }
+                if let Err(e) = std::fs::write(&json_path, json) {
+                    eprintln!("bench: could not write {json_path}: {e}");
+                } else {
+                    println!("--- JSON summary written to {json_path} ---");
+                }
+            }
+        }
         println!("--- {} benches recorded ---", self.results.len());
+    }
+
+    /// The suite's results as a JSON document (hand-rolled — the offline
+    /// build has no serde): `{"suite": ..., "results": [{...}, ...]}`.
+    fn to_json(&self) -> String {
+        let mut s = format!("{{\n  \"suite\": \"{}\",\n  \"results\": [\n", self.suite);
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"elements_per_iter\": {}, \
+                 \"throughput_per_sec\": {:.1}}}{}\n",
+                r.name,
+                r.iters,
+                r.mean_ns,
+                r.p50_ns,
+                r.p99_ns,
+                r.elements_per_iter,
+                r.throughput_per_sec(),
+                if i + 1 < self.results.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
     }
 }
 
@@ -156,6 +195,34 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.iters >= 10);
         assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn json_summary_is_well_formed() {
+        let mut b = Bencher::new("jsontest");
+        b.results.push(BenchResult {
+            name: "jsontest/alpha".into(),
+            iters: 3,
+            mean_ns: 1500.0,
+            p50_ns: 1400.0,
+            p99_ns: 2000.0,
+            elements_per_iter: 100,
+        });
+        b.results.push(BenchResult {
+            name: "jsontest/beta".into(),
+            iters: 5,
+            mean_ns: 10.0,
+            p50_ns: 10.0,
+            p99_ns: 11.0,
+            elements_per_iter: 1,
+        });
+        let json = b.to_json();
+        assert!(json.contains("\"suite\": \"jsontest\""), "{json}");
+        assert!(json.contains("\"name\": \"jsontest/alpha\""), "{json}");
+        // Exactly one separating comma between the two result objects,
+        // none after the last (valid JSON).
+        assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        assert!(json.trim_end().ends_with('}'), "{json}");
     }
 
     #[test]

@@ -37,6 +37,13 @@ pub struct TtlController {
     t_secs: f64,
     t_min: f64,
     t_max: f64,
+    /// Enforcement clamp (≤ `t_max`): the largest timer the owner is
+    /// currently *allowed* to run (the multi-tenant grant feedback of
+    /// [`crate::tenant`]). Equal to `t_max` when unclamped; the iterate is
+    /// projected onto `[t_min, cap]`, so eq. (7) keeps estimating the
+    /// unconstrained gradient while the timer converges to the largest
+    /// affordable value instead of thrashing above it.
+    cap_secs: f64,
     gain: GainSchedule,
     normalized: bool,
     step_secs: f64,
@@ -64,6 +71,7 @@ impl TtlController {
             t_secs: cfg.t_init_secs.clamp(cfg.t_min_secs.max(0.0), cfg.t_max_secs),
             t_min: cfg.t_min_secs.max(0.0),
             t_max: cfg.t_max_secs,
+            cap_secs: cfg.t_max_secs,
             gain: cfg.gain,
             normalized: cfg.normalized,
             step_secs: cfg.normalized_step_secs,
@@ -92,6 +100,31 @@ impl TtlController {
 
     pub fn last_correction(&self) -> Option<CorrectionSample> {
         self.last
+    }
+
+    /// The active enforcement clamp, if one binds below `t_max`.
+    pub fn cap_secs(&self) -> Option<f64> {
+        if self.cap_secs < self.t_max {
+            Some(self.cap_secs)
+        } else {
+            None
+        }
+    }
+
+    /// Clamp the timer to at most `cap` seconds (projected into
+    /// `[t_min, t_max]`). Takes effect immediately: the current iterate is
+    /// pulled down if it sits above the new cap.
+    pub fn set_cap_secs(&mut self, cap: f64) {
+        self.cap_secs = cap.max(self.t_min).min(self.t_max);
+        if self.t_secs > self.cap_secs {
+            self.t_secs = self.cap_secs;
+        }
+    }
+
+    /// Remove the enforcement clamp (the projection interval returns to
+    /// the configured `[t_min, t_max]`).
+    pub fn clear_cap(&mut self) {
+        self.cap_secs = self.t_max;
     }
 
     /// Apply eq. (7) for a closed measurement window: `hits` hits were
@@ -143,7 +176,7 @@ impl TtlController {
             self.gain.gain(self.n_updates) * raw
         };
         let before = self.t_secs;
-        self.t_secs = (self.t_secs + applied).clamp(self.t_min, self.t_max);
+        self.t_secs = (self.t_secs + applied).clamp(self.t_min, self.cap_secs);
         self.n_updates += 1;
         self.last = Some(CorrectionSample { raw, applied_secs: self.t_secs - before });
     }
@@ -161,7 +194,7 @@ impl TtlController {
 
     /// Reset the iterate (tests / epoch experiments).
     pub fn set_ttl_secs(&mut self, t: f64) {
-        self.t_secs = t.clamp(self.t_min, self.t_max);
+        self.t_secs = t.clamp(self.t_min, self.cap_secs);
     }
 }
 
@@ -292,6 +325,29 @@ mod tests {
         }
         let s100 = c.last_correction().unwrap().applied_secs;
         assert!(s100 < s1 / 5.0, "s1={s1} s100={s100}");
+    }
+
+    #[test]
+    fn enforcement_cap_projects_and_clears() {
+        let mut c = TtlController::new(&cfg_plain(1.0));
+        assert_eq!(c.cap_secs(), None, "fresh controller is unclamped");
+        // An immediate pull-down, then corrections project onto the cap.
+        c.set_cap_secs(50.0);
+        assert_eq!(c.ttl_secs(), 50.0);
+        assert_eq!(c.cap_secs(), Some(50.0));
+        c.apply_correction(1e9);
+        assert_eq!(c.ttl_secs(), 50.0, "cap must bound the iterate");
+        // The cap never leaves [t_min, t_max].
+        c.set_cap_secs(1e12);
+        assert_eq!(c.cap_secs(), None);
+        c.apply_correction(1e12);
+        assert_eq!(c.ttl_secs(), 1000.0, "back to the configured t_max");
+        // Clearing restores the configured interval.
+        c.set_cap_secs(10.0);
+        c.clear_cap();
+        assert_eq!(c.cap_secs(), None);
+        c.apply_correction(1e12);
+        assert_eq!(c.ttl_secs(), 1000.0);
     }
 
     #[test]

@@ -85,6 +85,26 @@ impl VirtualCache {
         &self.controller
     }
 
+    /// The active enforcement TTL clamp, if one binds (see
+    /// [`TtlController::set_cap_secs`]).
+    pub fn ttl_cap_secs(&self) -> Option<f64> {
+        self.controller.cap_secs()
+    }
+
+    /// Clamp this cache's timer to at most `cap` seconds (multi-tenant
+    /// grant enforcement). Newly inserted ghosts immediately use the
+    /// clamped timer; resident ghosts keep their original deadline and age
+    /// out naturally, so the virtual size converges to the affordable
+    /// level instead of dropping discontinuously.
+    pub fn set_ttl_cap_secs(&mut self, cap: f64) {
+        self.controller.set_cap_secs(cap);
+    }
+
+    /// Remove the enforcement TTL clamp.
+    pub fn clear_ttl_cap(&mut self) {
+        self.controller.clear_cap();
+    }
+
     /// Handle one request (Algorithm 2 lines 1–6). O(1) amortized: the
     /// expired-tail scan is paid for by the insertions that created those
     /// ghosts.

@@ -1,0 +1,156 @@
+//! Integration tests for the multi-tenant enforcement loop: the arbiter's
+//! squeeze path (randomized invariants over grants) and the engine-level
+//! guarantee that an epoch decision's caps and clamps actually bind on
+//! the request path after `force_epoch`.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::engine::EngineBuilder;
+use elastictl::tenant::{Arbiter, TenantDemand, TenantSpec};
+use elastictl::trace::Request;
+use elastictl::util::proptest::check;
+use elastictl::util::rng::Pcg;
+use elastictl::{MINUTE, SECOND};
+
+fn random_demands(rng: &mut Pcg) -> Vec<TenantDemand> {
+    let n = 1 + rng.below_usize(8);
+    (0..n)
+        .map(|i| {
+            let demand = rng.below(50_000_000);
+            let reserved = if rng.chance(0.4) { rng.below(20_000_000) } else { 0 };
+            TenantDemand::new(i as u16, demand, 0.1 + rng.f64() * 10.0).with_reserved(reserved)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sum_of_grants_never_exceeds_capacity() {
+    check("grants_capacity", 0xA1, |rng| {
+        let mut cfg = Config::default();
+        cfg.scaler.min_instances = 1;
+        cfg.scaler.max_instances = 1 + rng.below(12) as u32;
+        let instance = 1_000_000 + rng.below(9_000_000);
+        let arb = Arbiter::new(instance, &cfg.scaler);
+        let demands = random_demands(rng);
+        let (n, allocs) = arb.decide(&demands);
+        assert!(n >= cfg.scaler.min_instances && n <= cfg.scaler.max_instances);
+        let granted: u64 = allocs.iter().map(|a| a.granted_bytes).sum();
+        assert!(
+            granted <= arb.capacity_bytes(),
+            "granted {granted} > capacity {}",
+            arb.capacity_bytes()
+        );
+        for a in &allocs {
+            // No grant exceeds what demand or the reservation justify.
+            assert!(a.granted_bytes <= a.demand_bytes.max(a.reserved_bytes), "{a:?}");
+        }
+        // When nothing binds, every tenant gets at least its demand
+        // (reservations may grant headroom beyond it).
+        let total: u64 = demands.iter().map(|d| d.demand_bytes).sum();
+        let reserved_total: u64 = demands.iter().map(|d| d.reserved_bytes).sum();
+        if total + reserved_total <= arb.capacity_bytes() {
+            for a in &allocs {
+                assert!(a.granted_bytes >= a.demand_bytes, "{a:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_grants_monotone_in_miss_cost() {
+    check("grants_monotone", 0xA2, |rng| {
+        // Equal demands, no reservations, scarce capacity: the grant
+        // vector sorted by miss-cost weight must be non-increasing — a
+        // cheaper tenant can never out-grant a more expensive one.
+        let mut cfg = Config::default();
+        cfg.scaler.min_instances = 1;
+        cfg.scaler.max_instances = 1 + rng.below(4) as u32;
+        let arb = Arbiter::new(1_000_000, &cfg.scaler);
+        let demand = 1_000_000 + rng.below(10_000_000);
+        let n = 2 + rng.below_usize(6);
+        let demands: Vec<TenantDemand> = (0..n)
+            .map(|i| TenantDemand::new(i as u16, demand, 0.1 + rng.f64() * 20.0))
+            .collect();
+        let (_, allocs) = arb.decide(&demands);
+        let mut rows: Vec<(f64, u64)> =
+            allocs.iter().map(|a| (a.weight, a.granted_bytes)).collect();
+        rows.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for w in rows.windows(2) {
+            assert!(w[0].1 >= w[1].1, "higher weight got less: {rows:?}");
+        }
+    });
+}
+
+#[test]
+fn engine_applies_caps_and_clamps_after_force_epoch() {
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.controller.t_init_secs = 3600.0;
+    cfg.cost.instance.ram_bytes = 1_000_000;
+    cfg.cost.epoch_us = 10 * MINUTE;
+    cfg.scaler.max_instances = 2;
+    cfg.scaler.enforce_grants = true;
+    cfg.tenants = vec![
+        TenantSpec::new(0, "gold")
+            .with_multiplier(10.0)
+            .with_slo_miss_ratio(0.9),
+        TenantSpec::new(1, "flood").with_multiplier(0.2),
+    ];
+    let mut engine = EngineBuilder::new(&cfg)
+        .manual_epochs()
+        .no_default_probes()
+        .build();
+    // Gold wants 0.8 MB; the flood tenant wants 4 MB of a 2 MB cluster.
+    for i in 0..8u64 {
+        engine.offer(&Request::new(i * SECOND, i, 100_000));
+    }
+    for i in 0..40u64 {
+        engine.offer(&Request::new(10 * SECOND + i, 10_000 + i, 100_000).with_tenant(1));
+    }
+    let rows = engine.tenant_enforcement().expect("tenant policy exposes enforcement");
+    assert!(rows.iter().all(|r| !r.decided), "no decision before the epoch");
+    assert!(rows.iter().all(|r| r.enforced));
+
+    let n = engine.force_epoch(60 * SECOND);
+    assert!(n >= 1 && n <= 2, "n={n}");
+    let rows = engine.tenant_enforcement().unwrap();
+    let granted: u64 = rows.iter().map(|r| r.granted_bytes).sum();
+    assert!(granted <= 2_000_000, "grants exceed the 2-instance capacity");
+    let gold = rows.iter().find(|r| r.tenant == 0).unwrap();
+    let flood = rows.iter().find(|r| r.tenant == 1).unwrap();
+    assert_eq!(gold.granted_bytes, 800_000, "gold granted in full: {gold:?}");
+    assert!(flood.granted_bytes < flood.demand_bytes, "{flood:?}");
+    assert_eq!(flood.cap_bytes, Some(flood.granted_bytes));
+
+    // The TTL clamp binds the live timer immediately.
+    let clamp = flood.ttl_clamp_secs.expect("squeezed tenant is clamped");
+    let ttls = engine.tenant_ttls().unwrap();
+    let t_flood = ttls.iter().find(|(t, _)| *t == 1).unwrap().1;
+    assert!(t_flood <= clamp + 1e-9, "timer {t_flood} above clamp {clamp}");
+
+    // Fresh flood misses beyond the budget are refused on the request
+    // path; the consumed budget never overruns the cap.
+    for i in 0..40u64 {
+        engine.offer(&Request::new(70 * SECOND + i, 20_000 + i, 100_000).with_tenant(1));
+    }
+    let rows = engine.tenant_enforcement().unwrap();
+    let flood = rows.iter().find(|r| r.tenant == 1).unwrap();
+    assert!(flood.denied_admissions > 0, "{flood:?}");
+    assert!(flood.admitted_epoch_bytes <= flood.cap_bytes.unwrap(), "{flood:?}");
+
+    // Gold, inside its grant, keeps admitting.
+    let gold_denied = rows.iter().find(|r| r.tenant == 0).unwrap().denied_admissions;
+    engine.offer(&Request::new(120 * SECOND, 900, 100_000));
+    let rows = engine.tenant_enforcement().unwrap();
+    assert_eq!(
+        rows.iter().find(|r| r.tenant == 0).unwrap().denied_admissions,
+        gold_denied,
+        "gold must not be denied within its grant"
+    );
+
+    // The next epoch keeps the invariants: grants re-derived, budget
+    // counters reset.
+    engine.force_epoch(20 * MINUTE);
+    let rows = engine.tenant_enforcement().unwrap();
+    let granted: u64 = rows.iter().map(|r| r.granted_bytes).sum();
+    assert!(granted <= 2_000_000);
+    assert!(rows.iter().all(|r| r.admitted_epoch_bytes == 0), "budgets reset");
+}

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Compare a quick-bench JSON summary against the committed baseline.
+
+Usage: check_bench_regression.py <baseline.json> <current.json>
+
+The baseline (rust/benches/baseline.json) maps bench names to the
+throughput floor they are expected to sustain (elements/second, as
+emitted by the bench harness when ELASTICTL_BENCH_JSON is set). A run
+whose throughput drops more than `tolerance` below its baseline is
+reported as a regression via a GitHub Actions ::warning:: annotation.
+
+The gate is advisory (exit code 0 either way): quick-mode numbers on
+shared CI runners are noisy, so the job warns instead of failing. To
+ratchet the baseline, copy numbers from the BENCH_<sha>.json artifact of
+a healthy run into rust/benches/baseline.json — keep them conservative
+(below typical runner throughput) so only real regressions trip.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        current = json.load(f)
+
+    tolerance = float(baseline.get("tolerance", 0.10))
+    floors = baseline.get("throughput_per_sec", {})
+    results = {r["name"]: r for r in current.get("results", [])}
+
+    regressions = []
+    print(f"{'bench':<44} {'baseline/s':>14} {'current/s':>14}  verdict")
+    for name, floor in sorted(floors.items()):
+        row = results.get(name)
+        if row is None:
+            print(f"{name:<44} {floor:>14.0f} {'missing':>14}  ::warning — bench not run")
+            regressions.append((name, floor, None))
+            continue
+        tput = float(row.get("throughput_per_sec", 0.0))
+        limit = floor * (1.0 - tolerance)
+        verdict = "ok" if tput >= limit else "REGRESSION"
+        print(f"{name:<44} {floor:>14.0f} {tput:>14.0f}  {verdict}")
+        if tput < limit:
+            regressions.append((name, floor, tput))
+    for name in sorted(set(results) - set(floors)):
+        tput = float(results[name].get("throughput_per_sec", 0.0))
+        print(f"{name:<44} {'(no baseline)':>14} {tput:>14.0f}  new — consider adding")
+
+    if regressions:
+        for name, floor, tput in regressions:
+            got = "not run" if tput is None else f"{tput:.0f}/s"
+            print(
+                f"::warning title=bench regression::{name}: {got} vs baseline "
+                f"{floor:.0f}/s (>{tolerance:.0%} drop)"
+            )
+    else:
+        print(f"bench gate: all within {tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
