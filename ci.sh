@@ -21,6 +21,18 @@ if [[ ! -f Cargo.lock ]]; then
         echo "ci: WARNING no Cargo.lock and offline generation failed; running unlocked" >&2
         LOCKED=""
     fi
+elif ! cargo metadata --locked --format-version 1 >/dev/null 2>&1; then
+    if [[ -n "${CI:-}" ]]; then
+        # On networked CI an unsatisfiable lockfile IS the drift this gate
+        # exists to catch (Cargo.toml changed without regenerating the
+        # lock) — fail hard instead of silently running unlocked.
+        echo "ci: Cargo.lock is out of sync with Cargo.toml (run 'cargo generate-lockfile' and commit it)" >&2
+        exit 1
+    fi
+    # Outside CI (offline/vendored environments pinning a different
+    # resolution) fall back loudly rather than bricking local runs.
+    echo "ci: WARNING committed Cargo.lock is not satisfiable here; running unlocked" >&2
+    LOCKED=""
 fi
 
 echo "==> cargo fmt --check"

@@ -1,0 +1,63 @@
+//! Placement-subsystem overhead on the tenant-tagged request path:
+//! requests/second through `Engine::offer` for the multi-tenant policy
+//! under each placement kind (shared / hash_slot_pinned /
+//! slab_partition), with grant enforcement on so the resident-byte cap
+//! compare, ledger accounting and boundary shedding are all in the loop.
+//! The CI quick-bench gate tracks these rows against
+//! `rust/benches/baseline_placement.json`.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::engine::EngineBuilder;
+use elastictl::placement::PlacementKind;
+use elastictl::tenant::TenantSpec;
+use elastictl::trace::{Request, SynthConfig, SynthGenerator};
+use elastictl::util::bench::{black_box, Bencher};
+use elastictl::MINUTE;
+
+fn main() {
+    let mut b = Bencher::new("placement_overhead");
+    let mut synth = SynthConfig::tiny();
+    synth.mean_rate = 400.0;
+    let base = SynthGenerator::new(synth).generate();
+    // Tag the trace across three tenants (the fig10/fig11 shape).
+    let trace: Vec<Request> = base
+        .iter()
+        .enumerate()
+        .map(|(i, r)| r.with_tenant((i % 3) as u16))
+        .collect();
+    println!("# trace: {} tenant-tagged requests over 2 simulated hours", trace.len());
+
+    for placement in [
+        PlacementKind::Shared,
+        PlacementKind::HashSlotPinned,
+        PlacementKind::SlabPartition,
+    ] {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.cost.instance.ram_bytes = 40_000_000;
+        cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.enforce_grants = true;
+        cfg.cluster.placement = placement;
+        cfg.tenants = vec![
+            TenantSpec::new(0, "a").with_multiplier(2.0).with_reserved_bytes(10_000_000),
+            TenantSpec::new(1, "b"),
+            TenantSpec::new(2, "c").with_multiplier(0.5),
+        ];
+        let mut last_requests = 0u64;
+        b.bench(
+            &format!("offer_enforced_{}", placement.as_str()),
+            trace.len() as u64,
+            || {
+                let mut engine = EngineBuilder::new(&cfg).no_default_probes().build();
+                for r in &trace {
+                    black_box(engine.offer(r));
+                }
+                last_requests = engine.requests();
+                black_box(engine.finish());
+            },
+        );
+        assert_eq!(last_requests, trace.len() as u64);
+    }
+
+    b.finish();
+}

@@ -85,26 +85,32 @@ impl Balancer {
         self.sizer.as_ref()
     }
 
-    /// Handle one request: policy shadow update (which doubles as the
-    /// admission verdict under grant enforcement), route on
-    /// `(tenant, key)`, serve, account, feed the physical outcome back to
-    /// the policy.
+    /// Handle one request: feed the tenant's physical occupancy to the
+    /// policy, run its shadow update (which doubles as the admission
+    /// verdict under grant enforcement), route via the placement policy
+    /// on `(tenant, key)`, serve, account, feed the physical outcome back.
     pub fn handle(&mut self, req: &Request, costs: &mut CostTracker) -> Served {
         self.requests += 1;
+        // O(1) ledger read: resident-byte-binding policies compare the
+        // tenant's physical occupancy against its cap in `on_request`.
+        self.sizer
+            .note_physical(req.tenant, self.cluster.tenant_resident_bytes(req.tenant));
         let work = self.sizer.on_request(req);
         self.work_units += work.units as u64;
 
         let obj = scoped_object(req.tenant, req.obj);
-        let routed = self.cluster.route(obj);
+        let routed = self.cluster.route_for(req.tenant, obj);
         // A refused admission still serves the request (the origin fetch
         // happens either way) — it only skips the insert, bounding how
-        // fast a tenant can push bytes beyond its granted share into the
-        // shared cluster (re-admissions of its virtually-resident set
-        // stay exempt: that is repair traffic its grant already covers).
+        // far a tenant can push resident bytes beyond its granted share
+        // of the shared cluster (re-admissions of its virtually-resident
+        // set stay exempt: that is repair traffic its grant already
+        // covers, and overage is reclaimed by targeted shedding at the
+        // epoch boundary instead).
         let hit = if work.admit {
-            self.cluster.serve(obj, req.size_bytes())
+            self.cluster.serve_for(req.tenant, obj, req.size_bytes())
         } else {
-            self.cluster.serve_no_insert(obj)
+            self.cluster.serve_no_insert_for(req.tenant, obj)
         };
         if !work.admit && !hit {
             // Count only denials that actually suppressed an insert (a
@@ -135,12 +141,37 @@ impl Balancer {
         Served { hit, spurious, admitted: work.admit, work_units: work.units }
     }
 
-    /// Epoch boundary: ask the policy for `I(k+1)`, resize, return the new
-    /// size. The *ending* epoch is billed by the caller at the size that
-    /// was active (§2.3's synchronous billing).
+    /// Epoch boundary: ask the policy for `I(k+1)`, resize, run the
+    /// placement maintenance (re-pin / re-partition from the fresh
+    /// grants, then shed tenants past their binding occupancy caps), and
+    /// return the new size. The *ending* epoch is billed by the caller at
+    /// the size that was active (§2.3's synchronous billing).
     pub fn end_epoch(&mut self, now: TimeUs) -> u32 {
         let target = self.sizer.decide(now);
         self.cluster.resize(target);
+        if let Some(rows) = self.sizer.enforcement() {
+            let grants: Vec<crate::placement::TenantGrant> = rows
+                .iter()
+                .filter(|r| r.decided)
+                .map(|r| crate::placement::TenantGrant {
+                    tenant: r.tenant,
+                    granted_bytes: r.granted_bytes,
+                    reserved_bytes: r.reserved_bytes,
+                })
+                .collect();
+            if !grants.is_empty() {
+                self.cluster.apply_grants(&grants);
+            }
+            // Binding caps: bring every over-cap tenant back to its grant
+            // by evicting its own coldest entries (targeted shedding).
+            for r in &rows {
+                if r.enforced {
+                    if let Some(cap) = r.cap_bytes {
+                        self.cluster.shed_tenant(r.tenant, cap);
+                    }
+                }
+            }
+        }
         self.cluster.len() as u32
     }
 

@@ -1,9 +1,9 @@
 //! One physical cache node of the cluster: a [`Store`] plus accounting.
 
-use super::{make_store, Store};
+use super::{make_store, EvictionSink, Store};
 use crate::config::EvictionKind;
 use crate::metrics::HitMiss;
-use crate::ObjectId;
+use crate::{ObjectId, TenantId};
 
 /// A cluster node. The paper's instances are Redis `cache.t2.micro` nodes;
 /// the store kind and capacity are configurable.
@@ -30,13 +30,31 @@ impl CacheInstance {
     /// Serve a request: lookup, and on miss insert (the balancer fetched
     /// the object from the origin). Returns `true` on hit.
     pub fn serve(&mut self, obj: ObjectId, size: u64) -> bool {
+        let mut sink = EvictionSink::new();
+        self.serve_tagged(obj, size, 0, &mut sink).0
+    }
+
+    /// Tenant-tagged serve: like [`Self::serve`], but the inserted entry
+    /// carries `tenant`, and every eviction the insert performed is
+    /// appended to `evicted` as `(tenant, bytes)`. Returns
+    /// `(hit, bytes added to used())` so the cluster ledger can account
+    /// both sides of the move.
+    pub fn serve_tagged(
+        &mut self,
+        obj: ObjectId,
+        size: u64,
+        tenant: TenantId,
+        evicted: &mut EvictionSink,
+    ) -> (bool, u64) {
         self.requests += 1;
         let hit = self.store.lookup(obj);
         self.stats.record(hit);
-        if !hit {
-            self.store.insert(obj, size);
-        }
-        hit
+        let added = if hit {
+            0
+        } else {
+            self.store.insert_tagged(obj, size, tenant, evicted)
+        };
+        (hit, added)
     }
 
     /// Lookup without insertion (used when the balancer decides the object
@@ -62,6 +80,22 @@ impl CacheInstance {
 
     pub fn contains(&self, obj: ObjectId) -> bool {
         self.store.contains(obj)
+    }
+
+    /// Bytes resident for `tenant` on this node.
+    pub fn tenant_bytes_of(&self, tenant: TenantId) -> u64 {
+        self.store.tenant_bytes(tenant)
+    }
+
+    /// Evict up to `want` bytes of `tenant`'s coldest entries; returns
+    /// the bytes actually freed (targeted occupancy-cap shedding).
+    pub fn evict_tenant(&mut self, tenant: TenantId, want: u64) -> u64 {
+        self.store.evict_tenant(tenant, want)
+    }
+
+    /// Install per-tenant protected floors (slab-partition placement).
+    pub fn set_tenant_floors(&mut self, floors: &[(TenantId, u64)]) {
+        self.store.set_tenant_floors(floors);
     }
 
     /// Drop all content (e.g. node decommissioned then re-provisioned).
@@ -118,5 +152,27 @@ mod tests {
         assert_eq!(n.stats.total(), 0);
         assert_eq!(n.requests, 0);
         assert!(n.contains(1));
+    }
+
+    #[test]
+    fn tagged_serve_reports_adds_and_evictions() {
+        let mut n = CacheInstance::new(0, EvictionKind::Lru, 100, 1);
+        let mut sink = EvictionSink::new();
+        let (hit, added) = n.serve_tagged(1, 60, 4, &mut sink);
+        assert!(!hit);
+        assert_eq!(added, 60);
+        assert_eq!(n.tenant_bytes_of(4), 60);
+        // A hit adds nothing and evicts nothing.
+        let (hit, added) = n.serve_tagged(1, 60, 4, &mut sink);
+        assert!(hit);
+        assert_eq!(added, 0);
+        assert!(sink.is_empty());
+        // Overflow by another tenant reports tenant 4's eviction.
+        let (hit, added) = n.serve_tagged(2, 80, 7, &mut sink);
+        assert!(!hit);
+        assert_eq!(added, 80);
+        assert_eq!(sink, vec![(4, 60)]);
+        assert_eq!(n.tenant_bytes_of(4), 0);
+        assert_eq!(n.tenant_bytes_of(7), 80);
     }
 }

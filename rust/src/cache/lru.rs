@@ -4,10 +4,16 @@
 //! intrusive doubly-linked-list nodes with a free list, so steady-state
 //! operation performs **no allocation** — the property the paper leans on
 //! when arguing CDN caches must stay O(1) per request (§2.4).
+//!
+//! Placement subsystem: every node carries a tenant tag, per-tenant byte
+//! tallies are maintained inline, evictions report `(tenant, bytes)`
+//! through the caller's [`EvictionSink`], and optional per-tenant
+//! protected floors (Memshare-style slab partitions) steer the eviction
+//! victim choice away from tenants at or under their reservation.
 
-use super::Store;
+use super::{EvictionSink, Store};
 use crate::util::fasthash::FastMap;
-use crate::ObjectId;
+use crate::{ObjectId, TenantId};
 
 const NIL: u32 = u32::MAX;
 
@@ -15,6 +21,7 @@ const NIL: u32 = u32::MAX;
 struct Node {
     obj: ObjectId,
     size: u64,
+    tenant: TenantId,
     prev: u32,
     next: u32,
 }
@@ -30,6 +37,12 @@ pub struct LruCache {
     head: u32, // most recently used
     tail: u32, // least recently used
     evictions: u64,
+    /// Resident bytes per tenant id (grown on demand).
+    tenant_bytes: Vec<u64>,
+    /// Protected byte floors per tenant id (empty = unpartitioned: the
+    /// eviction victim is always the strict LRU tail, bit-identical to
+    /// the pre-placement cache).
+    floors: Vec<u64>,
 }
 
 impl LruCache {
@@ -43,6 +56,8 @@ impl LruCache {
             head: NIL,
             tail: NIL,
             evictions: 0,
+            tenant_bytes: Vec::new(),
+            floors: Vec::new(),
         }
     }
 
@@ -51,9 +66,34 @@ impl LruCache {
         self.evictions
     }
 
-    /// The least-recently-used object, if any (next eviction victim).
+    /// The least-recently-used object, if any (next eviction victim of an
+    /// unpartitioned cache).
     pub fn lru_object(&self) -> Option<ObjectId> {
         (self.tail != NIL).then(|| self.nodes[self.tail as usize].obj)
+    }
+
+    #[inline]
+    fn add_tenant(&mut self, tenant: TenantId, bytes: u64) {
+        let i = tenant as usize;
+        if self.tenant_bytes.len() <= i {
+            self.tenant_bytes.resize(i + 1, 0);
+        }
+        self.tenant_bytes[i] += bytes;
+    }
+
+    #[inline]
+    fn sub_tenant(&mut self, tenant: TenantId, bytes: u64) {
+        let slot = &mut self.tenant_bytes[tenant as usize];
+        debug_assert!(*slot >= bytes, "tenant {tenant} tally underflow");
+        *slot = slot.saturating_sub(bytes);
+    }
+
+    /// Whether `tenant` is protected from cross-tenant eviction: it has a
+    /// floor and currently holds no more than it.
+    #[inline]
+    fn protected(&self, tenant: TenantId) -> bool {
+        let floor = self.floors.get(tenant as usize).copied().unwrap_or(0);
+        floor > 0 && self.tenant_bytes.get(tenant as usize).copied().unwrap_or(0) <= floor
     }
 
     #[inline]
@@ -88,55 +128,78 @@ impl LruCache {
     }
 
     #[inline]
-    fn alloc(&mut self, obj: ObjectId, size: u64) -> u32 {
+    fn alloc(&mut self, obj: ObjectId, size: u64, tenant: TenantId) -> u32 {
+        let node = Node { obj, size, tenant, prev: NIL, next: NIL };
         match self.free.pop() {
             Some(i) => {
-                self.nodes[i as usize] = Node { obj, size, prev: NIL, next: NIL };
+                self.nodes[i as usize] = node;
                 i
             }
             None => {
                 let i = self.nodes.len() as u32;
-                self.nodes.push(Node { obj, size, prev: NIL, next: NIL });
+                self.nodes.push(node);
                 i
             }
         }
     }
 
-    fn evict_tail(&mut self) -> Option<(ObjectId, u64)> {
-        if self.tail == NIL {
-            return None;
-        }
-        let idx = self.tail;
-        let (obj, size) = {
+    /// Evict the node at `idx`, reporting it to the sink.
+    fn evict_at(&mut self, idx: u32, evicted: &mut EvictionSink) {
+        let (obj, size, tenant) = {
             let n = &self.nodes[idx as usize];
-            (n.obj, n.size)
+            (n.obj, n.size, n.tenant)
         };
         self.unlink(idx);
         self.map.remove(&obj);
         self.free.push(idx);
         self.used -= size;
+        self.sub_tenant(tenant, size);
         self.evictions += 1;
-        Some((obj, size))
+        evicted.push((tenant, size));
     }
 
     /// Iterate resident objects from MRU to LRU (test/debug helper).
     pub fn iter_mru(&self) -> impl Iterator<Item = (ObjectId, u64)> + '_ {
+        self.iter_mru_tagged().map(|(o, s, _)| (o, s))
+    }
+
+    /// MRU-to-LRU iteration including the tenant tag (slab-class rebuild
+    /// and placement tests).
+    pub fn iter_mru_tagged(&self) -> impl Iterator<Item = (ObjectId, u64, TenantId)> + '_ {
         struct It<'a> {
             cache: &'a LruCache,
             cur: u32,
         }
         impl<'a> Iterator for It<'a> {
-            type Item = (ObjectId, u64);
+            type Item = (ObjectId, u64, TenantId);
             fn next(&mut self) -> Option<Self::Item> {
                 if self.cur == NIL {
                     return None;
                 }
                 let n = &self.cache.nodes[self.cur as usize];
                 self.cur = n.next;
-                Some((n.obj, n.size))
+                Some((n.obj, n.size, n.tenant))
             }
         }
         It { cache: self, cur: self.head }
+    }
+
+    /// Remove `obj`, returning its `(size, tenant)` (the slab store needs
+    /// both to keep its own tallies exact).
+    pub fn remove_entry(&mut self, obj: ObjectId) -> Option<(u64, TenantId)> {
+        if let Some(idx) = self.map.remove(&obj) {
+            let (size, tenant) = {
+                let n = &self.nodes[idx as usize];
+                (n.size, n.tenant)
+            };
+            self.unlink(idx);
+            self.free.push(idx);
+            self.used -= size;
+            self.sub_tenant(tenant, size);
+            Some((size, tenant))
+        } else {
+            None
+        }
     }
 }
 
@@ -173,28 +236,113 @@ impl Store for LruCache {
         if self.lookup(obj) {
             return true; // refresh only
         }
-        while self.used + size > self.capacity {
-            if self.evict_tail().is_none() {
-                break;
+        let mut sink = EvictionSink::new();
+        self.insert_tagged(obj, size, 0, &mut sink) > 0
+    }
+
+    fn insert_tagged(
+        &mut self,
+        obj: ObjectId,
+        size: u64,
+        tenant: TenantId,
+        evicted: &mut EvictionSink,
+    ) -> u64 {
+        if size > self.capacity {
+            return 0;
+        }
+        if self.lookup(obj) {
+            return 0; // refresh only
+        }
+        if !self.floors.is_empty() && self.used + size > self.capacity {
+            // Feasibility first: bytes inside *other* tenants' protected
+            // floors are unreclaimable, so an insert that cannot fit even
+            // after evicting every pooled byte must be rejected up front —
+            // never after flushing other tenants' pooled entries as
+            // collateral.
+            let protected_others: u64 = self
+                .floors
+                .iter()
+                .enumerate()
+                .filter(|&(t, &floor)| t != tenant as usize && floor > 0)
+                .map(|(t, &floor)| floor.min(self.tenant_bytes.get(t).copied().unwrap_or(0)))
+                .sum();
+            if protected_others + size > self.capacity {
+                return 0;
             }
         }
-        let idx = self.alloc(obj, size);
+        if self.floors.is_empty() {
+            // Unpartitioned: evict the strict LRU tail until it fits —
+            // bit-identical to the pre-placement cache.
+            while self.used + size > self.capacity {
+                if self.tail == NIL {
+                    break;
+                }
+                let idx = self.tail;
+                self.evict_at(idx, evicted);
+            }
+        } else if self.used + size > self.capacity {
+            // Partitioned: one tail→head sweep evicting pooled entries
+            // (owners over their protected floor) and the inserting
+            // tenant's own — never restarting at the tail, so an insert
+            // costs at most one pass over the protected cold tail.
+            // Owners can only *become* protected as the sweep drains
+            // their pooled bytes, never the reverse, so a single pass
+            // with per-node re-checks is exact.
+            let mut cur = self.tail;
+            while self.used + size > self.capacity && cur != NIL {
+                let node = self.nodes[cur as usize];
+                let prev = node.prev;
+                if node.tenant == tenant || !self.protected(node.tenant) {
+                    self.evict_at(cur, evicted);
+                }
+                cur = prev;
+            }
+        }
+        if self.used + size > self.capacity {
+            // Unreachable after the feasibility check; kept as a guard so
+            // a partitioning bug can never overrun the capacity.
+            return 0;
+        }
+        let idx = self.alloc(obj, size, tenant);
         self.map.insert(obj, idx);
         self.push_front(idx);
         self.used += size;
-        true
+        self.add_tenant(tenant, size);
+        size
+    }
+
+    fn tenant_bytes(&self, tenant: TenantId) -> u64 {
+        self.tenant_bytes.get(tenant as usize).copied().unwrap_or(0)
+    }
+
+    fn evict_tenant(&mut self, tenant: TenantId, want: u64) -> u64 {
+        let mut freed = 0u64;
+        let mut cur = self.tail;
+        let mut sink = EvictionSink::new();
+        while cur != NIL && freed < want {
+            let node = self.nodes[cur as usize];
+            if node.tenant == tenant {
+                self.evict_at(cur, &mut sink);
+                freed += node.size;
+            }
+            cur = node.prev;
+        }
+        freed
+    }
+
+    fn set_tenant_floors(&mut self, floors: &[(TenantId, u64)]) {
+        self.floors.clear();
+        for &(t, f) in floors {
+            let i = t as usize;
+            if self.floors.len() <= i {
+                self.floors.resize(i + 1, 0);
+            }
+            self.floors[i] = f;
+        }
     }
 
     fn remove(&mut self, obj: ObjectId) -> bool {
-        if let Some(idx) = self.map.remove(&obj) {
-            let size = self.nodes[idx as usize].size;
-            self.unlink(idx);
-            self.free.push(idx);
-            self.used -= size;
-            true
-        } else {
-            false
-        }
+        self.remove_entry(obj).is_some()
     }
 
     fn contains(&self, obj: ObjectId) -> bool {
@@ -208,6 +356,7 @@ impl Store for LruCache {
         self.head = NIL;
         self.tail = NIL;
         self.used = 0;
+        self.tenant_bytes.clear();
     }
 }
 
@@ -283,5 +432,91 @@ mod tests {
         let order: Vec<u64> = c.iter_mru().map(|(o, _)| o).collect();
         assert_eq!(order, vec![4, 3, 1, 0]);
         assert_eq!(c.used(), 40);
+    }
+
+    #[test]
+    fn targeted_eviction_takes_coldest_first() {
+        let mut c = LruCache::new(1000);
+        let mut sink = EvictionSink::new();
+        for i in 0..5u64 {
+            c.insert_tagged(i, 10, 1, &mut sink);
+            c.insert_tagged(100 + i, 10, 2, &mut sink);
+        }
+        // Tenant 1's coldest entries are objects 0 and 1.
+        assert_eq!(c.evict_tenant(1, 20), 20);
+        assert!(!c.contains(0) && !c.contains(1));
+        assert!(c.contains(2) && c.contains(3) && c.contains(4));
+        // Tenant 2 untouched.
+        for i in 0..5u64 {
+            assert!(c.contains(100 + i));
+        }
+        assert_eq!(c.tenant_bytes(1), 30);
+        assert_eq!(c.tenant_bytes(2), 50);
+    }
+
+    #[test]
+    fn floors_protect_reserved_tenants_from_cross_eviction() {
+        let mut c = LruCache::new(100);
+        c.set_tenant_floors(&[(1, 40)]);
+        let mut sink = EvictionSink::new();
+        // Tenant 1 holds exactly its floor; its entries are the coldest.
+        for i in 0..4u64 {
+            c.insert_tagged(i, 10, 1, &mut sink);
+        }
+        // Tenant 2 fills the pool, then overflows: it must evict its own
+        // (pooled) entries, never tenant 1's protected ones.
+        for i in 100..110u64 {
+            c.insert_tagged(i, 10, 2, &mut sink);
+        }
+        assert_eq!(c.tenant_bytes(1), 40, "reservation must survive");
+        assert!(sink.iter().all(|&(t, _)| t == 2), "{sink:?}");
+        assert!(c.used() <= 100);
+        // Tenant 1 itself may still churn its own entries past the floor.
+        sink.clear();
+        assert_eq!(c.insert_tagged(50, 10, 1, &mut sink), 10);
+        assert_eq!(c.tenant_bytes(1), 40);
+        assert!(sink.iter().any(|&(t, _)| t == 1), "{sink:?}");
+        // Clearing the floors restores strict-LRU victims.
+        c.set_tenant_floors(&[]);
+        sink.clear();
+        c.insert_tagged(51, 10, 2, &mut sink);
+        assert_eq!(sink.len(), 1);
+    }
+
+    #[test]
+    fn infeasible_partitioned_insert_evicts_no_collateral() {
+        let mut c = LruCache::new(100);
+        c.set_tenant_floors(&[(1, 40)]);
+        let mut sink = EvictionSink::new();
+        for i in 0..4u64 {
+            c.insert_tagged(i, 10, 1, &mut sink);
+        }
+        for i in 10..16u64 {
+            c.insert_tagged(i, 10, 3, &mut sink);
+        }
+        assert!(sink.is_empty());
+        // Tenant 2 wants 70 bytes but only 60 pooled bytes exist (tenant
+        // 1's 40 are protected): the insert must be rejected *before*
+        // flushing tenant 3's pooled entries as collateral.
+        assert_eq!(c.insert_tagged(99, 70, 2, &mut sink), 0);
+        assert!(sink.is_empty(), "no collateral evictions: {sink:?}");
+        assert_eq!(c.tenant_bytes(3), 60);
+        assert_eq!(c.tenant_bytes(1), 40);
+        assert!(!c.contains(99));
+    }
+
+    #[test]
+    fn fully_reserved_cache_rejects_foreign_inserts() {
+        let mut c = LruCache::new(40);
+        c.set_tenant_floors(&[(1, 40)]);
+        let mut sink = EvictionSink::new();
+        for i in 0..4u64 {
+            c.insert_tagged(i, 10, 1, &mut sink);
+        }
+        // Tenant 2 can evict nothing and holds nothing: the insert is
+        // rejected instead of violating tenant 1's reservation.
+        assert_eq!(c.insert_tagged(99, 10, 2, &mut sink), 0);
+        assert!(!c.contains(99));
+        assert_eq!(c.tenant_bytes(1), 40);
     }
 }

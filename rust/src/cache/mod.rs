@@ -24,12 +24,21 @@ pub use lru::LruCache;
 pub use sampled_lru::SampledLruCache;
 pub use slab::SlabCache;
 
-use crate::ObjectId;
+use crate::{ObjectId, TenantId};
+
+/// Sink for eviction events: every entry a store evicts to make room is
+/// reported upward as `(owning tenant, bytes freed)` so the cluster's
+/// per-tenant resident ledger stays exact (placement subsystem).
+pub type EvictionSink = Vec<(TenantId, u64)>;
 
 /// Common interface of the physical stores. `lookup` returns whether the
 /// object was present (a hit) and refreshes recency; `insert` stores the
 /// object, evicting as needed; objects larger than the capacity are
 /// rejected (never stored) — mirroring Memcached/Redis behaviour.
+///
+/// Every entry carries a tenant tag: [`Store::insert_tagged`] is the
+/// primary insert path (the cluster's), with the untagged [`Store::insert`]
+/// kept as the tenant-0 convenience used by standalone callers and tests.
 pub trait Store {
     /// Capacity in bytes.
     fn capacity(&self) -> u64;
@@ -46,6 +55,33 @@ pub trait Store {
     /// refreshes recency instead). Returns false if the object cannot fit
     /// at all.
     fn insert(&mut self, obj: ObjectId, size: u64) -> bool;
+    /// Insert `obj` of `size` bytes tagged with `tenant`, appending every
+    /// evicted entry's `(tenant, bytes)` to `evicted`. Returns the bytes
+    /// this insert added to [`Store::used`] (slab stores round up to a
+    /// chunk): 0 when the object was rejected, or was already resident
+    /// and only had its recency refreshed.
+    fn insert_tagged(
+        &mut self,
+        obj: ObjectId,
+        size: u64,
+        tenant: TenantId,
+        evicted: &mut EvictionSink,
+    ) -> u64;
+    /// Bytes currently resident for `tenant` (the instance-local slice of
+    /// the cluster ledger).
+    fn tenant_bytes(&self, tenant: TenantId) -> u64;
+    /// Evict up to `want` bytes of `tenant`'s entries, coldest first.
+    /// Returns the bytes actually freed (less than `want` when the tenant
+    /// holds fewer). Targeted shedding for resident-byte occupancy caps;
+    /// runs at epoch boundaries, not on the request path.
+    fn evict_tenant(&mut self, tenant: TenantId, want: u64) -> u64;
+    /// Install per-tenant protected byte floors (slab-partition
+    /// placement): a tenant holding at most its floor is immune to
+    /// cross-tenant eviction; bytes above the floors are pooled and
+    /// evictable by anyone. An empty slice clears the partitioning. The
+    /// default ignores floors (stores without victim choice, e.g. slab
+    /// size classes, fall back to plain behaviour).
+    fn set_tenant_floors(&mut self, _floors: &[(TenantId, u64)]) {}
     /// Remove `obj` if present; returns true if it was resident.
     fn remove(&mut self, obj: ObjectId) -> bool;
     /// Whether `obj` is resident, without touching recency.
@@ -55,7 +91,11 @@ pub trait Store {
 }
 
 /// Build a store of the configured eviction kind.
-pub fn make_store(kind: crate::config::EvictionKind, capacity: u64, seed: u64) -> Box<dyn Store + Send> {
+pub fn make_store(
+    kind: crate::config::EvictionKind,
+    capacity: u64,
+    seed: u64,
+) -> Box<dyn Store + Send> {
     use crate::config::EvictionKind::*;
     match kind {
         Lru => Box::new(LruCache::new(capacity)),
@@ -113,6 +153,60 @@ pub(crate) mod conformance {
         assert_eq!(store.len(), 0);
         assert_eq!(store.used(), 0);
         assert!(!store.contains(0));
+        assert_eq!(store.tenant_bytes(0), 0, "clear must reset the tags");
+    }
+
+    pub fn tenant_tags_partition_used(store: &mut dyn Store) {
+        let mut sink = EvictionSink::new();
+        // Interleave three tenants; tags must partition used() exactly.
+        for i in 0..9u64 {
+            store.insert_tagged(i, 20, (i % 3) as TenantId, &mut sink);
+        }
+        let total: u64 = (0..3).map(|t| store.tenant_bytes(t)).sum();
+        assert_eq!(total, store.used(), "tags must partition used()");
+        assert_eq!(store.tenant_bytes(99), 0, "unseen tenant reads zero");
+        // Refreshing an existing entry adds nothing.
+        let before = store.tenant_bytes(0);
+        assert_eq!(store.insert_tagged(0, 20, 0, &mut sink), 0);
+        assert_eq!(store.tenant_bytes(0), before);
+        // Untagged inserts land on tenant 0.
+        let before = store.tenant_bytes(0);
+        assert!(store.insert(1000, 20));
+        assert!(store.tenant_bytes(0) >= before + 20);
+        // Removal gives the bytes back to the owner's tally.
+        assert!(store.remove(1000));
+        let total: u64 = (0..3).map(|t| store.tenant_bytes(t)).sum();
+        assert_eq!(total, store.used());
+    }
+
+    pub fn evictions_reported_and_targeted(store: &mut dyn Store) {
+        let cap = store.capacity();
+        let obj_sz = cap / 10;
+        let mut sink = EvictionSink::new();
+        // Fill with tenant 1, then overflow with tenant 2: every evicted
+        // byte must be reported, and the tallies must stay consistent.
+        for i in 0..10u64 {
+            store.insert_tagged(i, obj_sz, 1, &mut sink);
+        }
+        assert!(sink.is_empty(), "no evictions while filling to capacity");
+        for i in 100..105u64 {
+            store.insert_tagged(i, obj_sz, 2, &mut sink);
+        }
+        let reported: u64 = sink.iter().map(|&(_, b)| b).sum();
+        assert!(reported > 0, "overflow must report evictions");
+        let total: u64 = (0..4).map(|t| store.tenant_bytes(t)).sum();
+        assert_eq!(total, store.used());
+        // Targeted shed: tenant 1 loses bytes, tenant 2 is untouched.
+        let t2 = store.tenant_bytes(2);
+        let have = store.tenant_bytes(1);
+        let freed = store.evict_tenant(1, obj_sz * 2);
+        assert!(freed >= obj_sz.min(have), "freed={freed} have={have}");
+        assert_eq!(store.tenant_bytes(2), t2);
+        assert_eq!(store.tenant_bytes(1), have - freed);
+        // Shedding more than the tenant holds frees exactly what it has.
+        let rest = store.tenant_bytes(1);
+        assert_eq!(store.evict_tenant(1, u64::MAX), rest);
+        assert_eq!(store.tenant_bytes(1), 0);
     }
 
     pub fn run_all(mk: impl Fn() -> Box<dyn Store + Send>) {
@@ -121,6 +215,8 @@ pub(crate) mod conformance {
         oversized_rejected(&mut *mk());
         reinsert_refreshes_not_duplicates(&mut *mk());
         clear_resets(&mut *mk());
+        tenant_tags_partition_used(&mut *mk());
+        evictions_reported_and_targeted(&mut *mk());
     }
 }
 

@@ -5,11 +5,19 @@
 //! Entries live in a dense vector (swap-remove on eviction) so sampling a
 //! random resident object is O(1); recency is a logical clock stamped on
 //! each access.
+//!
+//! Placement subsystem: entries carry tenant tags and per-tenant byte
+//! tallies; evictions report `(tenant, bytes)` through the caller's
+//! [`EvictionSink`]. Protected floors are honored *best-effort*, true to
+//! the sampled flavour: among the sampled candidates a non-protected
+//! victim is preferred, but if every sample is protected the stalest
+//! sample is evicted anyway (forward progress beats a strict guarantee a
+//! 5-sample policy cannot give).
 
-use super::Store;
-use crate::ObjectId;
+use super::{EvictionSink, Store};
 use crate::util::fasthash::FastMap;
 use crate::util::rng::Pcg;
+use crate::{ObjectId, TenantId};
 
 const SAMPLES: usize = 5;
 
@@ -17,6 +25,7 @@ const SAMPLES: usize = 5;
 struct Entry {
     obj: ObjectId,
     size: u64,
+    tenant: TenantId,
     last_access: u64,
 }
 
@@ -29,6 +38,10 @@ pub struct SampledLruCache {
     clock: u64,
     rng: Pcg,
     evictions: u64,
+    /// Resident bytes per tenant id (grown on demand).
+    tenant_bytes: Vec<u64>,
+    /// Advisory protected floors per tenant id (empty = unpartitioned).
+    floors: Vec<u64>,
 }
 
 impl SampledLruCache {
@@ -41,6 +54,8 @@ impl SampledLruCache {
             clock: 0,
             rng: Pcg::seed_from_u64(seed),
             evictions: 0,
+            tenant_bytes: Vec::new(),
+            floors: Vec::new(),
         }
     }
 
@@ -54,29 +69,71 @@ impl SampledLruCache {
         self.clock
     }
 
-    /// Pick the stalest of `SAMPLES` random entries and evict it.
-    fn evict_one(&mut self) -> bool {
+    #[inline]
+    fn add_tenant(&mut self, tenant: TenantId, bytes: u64) {
+        let i = tenant as usize;
+        if self.tenant_bytes.len() <= i {
+            self.tenant_bytes.resize(i + 1, 0);
+        }
+        self.tenant_bytes[i] += bytes;
+    }
+
+    #[inline]
+    fn sub_tenant(&mut self, tenant: TenantId, bytes: u64) {
+        let slot = &mut self.tenant_bytes[tenant as usize];
+        debug_assert!(*slot >= bytes, "tenant {tenant} tally underflow");
+        *slot = slot.saturating_sub(bytes);
+    }
+
+    #[inline]
+    fn protected(&self, tenant: TenantId) -> bool {
+        let floor = self.floors.get(tenant as usize).copied().unwrap_or(0);
+        floor > 0 && self.tenant_bytes.get(tenant as usize).copied().unwrap_or(0) <= floor
+    }
+
+    /// Remove the entry at dense index `i`, fixing the swapped slot.
+    fn take_at(&mut self, i: usize) -> Entry {
+        let e = self.entries.swap_remove(i);
+        self.index.remove(&e.obj);
+        if i < self.entries.len() {
+            let moved = self.entries[i].obj;
+            self.index.insert(moved, i as u32);
+        }
+        self.used -= e.size;
+        self.sub_tenant(e.tenant, e.size);
+        e
+    }
+
+    /// Pick the stalest of `SAMPLES` random entries and evict it,
+    /// reporting it to the sink. With floors installed, a non-protected
+    /// victim is preferred among the samples; the inserting tenant's own
+    /// entries are always fair game.
+    fn evict_one(&mut self, tenant: TenantId, evicted: &mut EvictionSink) -> bool {
         if self.entries.is_empty() {
             return false;
         }
         let mut victim = usize::MAX;
         let mut oldest = u64::MAX;
+        let mut fallback = usize::MAX;
+        let mut fallback_oldest = u64::MAX;
         for _ in 0..SAMPLES.min(self.entries.len()) {
             let i = self.rng.below_usize(self.entries.len());
-            if self.entries[i].last_access < oldest {
-                oldest = self.entries[i].last_access;
+            let e = self.entries[i];
+            if e.last_access < fallback_oldest {
+                fallback_oldest = e.last_access;
+                fallback = i;
+            }
+            let evictable =
+                self.floors.is_empty() || e.tenant == tenant || !self.protected(e.tenant);
+            if evictable && e.last_access < oldest {
+                oldest = e.last_access;
                 victim = i;
             }
         }
-        let e = self.entries.swap_remove(victim);
-        self.index.remove(&e.obj);
-        // Fix the index of the entry swapped into `victim`'s slot.
-        if victim < self.entries.len() {
-            let moved = self.entries[victim].obj;
-            self.index.insert(moved, victim as u32);
-        }
-        self.used -= e.size;
+        let i = if victim != usize::MAX { victim } else { fallback };
+        let e = self.take_at(i);
         self.evictions += 1;
+        evicted.push((e.tenant, e.size));
         true
     }
 }
@@ -112,28 +169,80 @@ impl Store for SampledLruCache {
         if self.lookup(obj) {
             return true;
         }
+        let mut sink = EvictionSink::new();
+        self.insert_tagged(obj, size, 0, &mut sink) > 0
+    }
+
+    fn insert_tagged(
+        &mut self,
+        obj: ObjectId,
+        size: u64,
+        tenant: TenantId,
+        evicted: &mut EvictionSink,
+    ) -> u64 {
+        if size > self.capacity {
+            return 0;
+        }
+        if self.lookup(obj) {
+            return 0; // refresh only
+        }
         while self.used + size > self.capacity {
-            if !self.evict_one() {
+            if !self.evict_one(tenant, evicted) {
                 break;
             }
         }
         let t = self.tick();
         let i = self.entries.len() as u32;
-        self.entries.push(Entry { obj, size, last_access: t });
+        self.entries.push(Entry { obj, size, tenant, last_access: t });
         self.index.insert(obj, i);
         self.used += size;
-        true
+        self.add_tenant(tenant, size);
+        size
+    }
+
+    fn tenant_bytes(&self, tenant: TenantId) -> u64 {
+        self.tenant_bytes.get(tenant as usize).copied().unwrap_or(0)
+    }
+
+    fn evict_tenant(&mut self, tenant: TenantId, want: u64) -> u64 {
+        // Coldest-first within the tenant: collect (last_access, obj),
+        // sort ascending, remove until enough is freed. O(n log n), but
+        // only ever run at epoch boundaries.
+        let mut victims: Vec<(u64, ObjectId, u64)> = self
+            .entries
+            .iter()
+            .filter(|e| e.tenant == tenant)
+            .map(|e| (e.last_access, e.obj, e.size))
+            .collect();
+        victims.sort_unstable();
+        let mut freed = 0u64;
+        for (_, obj, size) in victims {
+            if freed >= want {
+                break;
+            }
+            if let Some(&i) = self.index.get(&obj) {
+                self.take_at(i as usize);
+                self.evictions += 1;
+                freed += size;
+            }
+        }
+        freed
+    }
+
+    fn set_tenant_floors(&mut self, floors: &[(TenantId, u64)]) {
+        self.floors.clear();
+        for &(t, f) in floors {
+            let i = t as usize;
+            if self.floors.len() <= i {
+                self.floors.resize(i + 1, 0);
+            }
+            self.floors[i] = f;
+        }
     }
 
     fn remove(&mut self, obj: ObjectId) -> bool {
-        if let Some(i) = self.index.remove(&obj) {
-            let i = i as usize;
-            let e = self.entries.swap_remove(i);
-            if i < self.entries.len() {
-                let moved = self.entries[i].obj;
-                self.index.insert(moved, i as u32);
-            }
-            self.used -= e.size;
+        if let Some(&i) = self.index.get(&obj) {
+            self.take_at(i as usize);
             true
         } else {
             false
@@ -148,6 +257,7 @@ impl Store for SampledLruCache {
         self.entries.clear();
         self.index.clear();
         self.used = 0;
+        self.tenant_bytes.clear();
     }
 }
 
@@ -215,5 +325,28 @@ mod tests {
         assert!(c.insert(42, 73));
         assert!(c.used() <= 100);
         assert!(c.contains(42));
+    }
+
+    #[test]
+    fn floors_bias_victims_toward_pooled_entries() {
+        let mut c = SampledLruCache::new(1000, 7);
+        c.set_tenant_floors(&[(1, 400)]);
+        let mut sink = EvictionSink::new();
+        for i in 0..40u64 {
+            c.insert_tagged(i, 10, 1, &mut sink);
+        }
+        // Tenant 2 churns hard; tenant 1 sits at its floor. The sampled
+        // policy is advisory, so allow a small amount of leakage but the
+        // overwhelming majority of victims must be pooled (tenant 2).
+        for i in 1000..1200u64 {
+            c.insert_tagged(i, 10, 2, &mut sink);
+        }
+        let t1_evicted: u64 = sink.iter().filter(|&&(t, _)| t == 1).map(|&(_, b)| b).sum();
+        let t2_evicted: u64 = sink.iter().filter(|&&(t, _)| t == 2).map(|&(_, b)| b).sum();
+        assert!(
+            t2_evicted > 10 * t1_evicted.max(1),
+            "pooled churn must dominate: t1={t1_evicted} t2={t2_evicted}"
+        );
+        assert!(c.tenant_bytes(1) >= 300, "reservation mostly intact");
     }
 }

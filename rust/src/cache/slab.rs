@@ -8,9 +8,9 @@
 //! automove), which reproduces the *calcification* pathology the paper
 //! cites ([15], [25], [34]) as the reason it runs Redis instead.
 
-use super::{LruCache, Store};
+use super::{EvictionSink, LruCache, Store};
 use crate::util::fasthash::FastMap;
-use crate::ObjectId;
+use crate::{ObjectId, TenantId};
 
 const MIN_CLASS: u64 = 64;
 const GROWTH: f64 = 2.0;
@@ -33,6 +33,9 @@ pub struct SlabCache {
     pages_total: u64,
     pages_free: u64,
     index: FastMap<ObjectId, u8>, // object -> class
+    /// Resident (chunk-rounded) bytes per tenant id. The class LRUs keep
+    /// their own tallies too; this aggregate keeps `tenant_bytes()` O(1).
+    tenant_bytes: Vec<u64>,
 }
 
 impl SlabCache {
@@ -54,7 +57,24 @@ impl SlabCache {
             pages_total: capacity / page,
             pages_free: capacity / page,
             index: FastMap::default(),
+            tenant_bytes: Vec::new(),
         }
+    }
+
+    #[inline]
+    fn add_tenant(&mut self, tenant: TenantId, bytes: u64) {
+        let i = tenant as usize;
+        if self.tenant_bytes.len() <= i {
+            self.tenant_bytes.resize(i + 1, 0);
+        }
+        self.tenant_bytes[i] += bytes;
+    }
+
+    #[inline]
+    fn sub_tenant(&mut self, tenant: TenantId, bytes: u64) {
+        let slot = &mut self.tenant_bytes[tenant as usize];
+        debug_assert!(*slot >= bytes, "tenant {tenant} tally underflow");
+        *slot = slot.saturating_sub(bytes);
     }
 
     /// Chunk size of class `i`.
@@ -95,18 +115,21 @@ impl SlabCache {
         self.pages_free -= 1;
         self.class_pages[ci] += 1;
         let new_cap = self.class_pages[ci] * self.page;
-        // LruCache has no resize; rebuild preserving entries (rare event —
-        // page grants happen O(capacity/PAGE) times total).
+        // LruCache has no resize; rebuild preserving entries and their
+        // tenant tags (rare event — page grants happen O(capacity/PAGE)
+        // times total).
         let mut rebuilt = LruCache::new(new_cap);
-        let entries: Vec<(ObjectId, u64)> = self.classes[ci]
-            .iter_mru()
+        let entries: Vec<(ObjectId, u64, TenantId)> = self.classes[ci]
+            .iter_mru_tagged()
             .collect::<Vec<_>>()
             .into_iter()
             .rev()
             .collect();
-        for (obj, size) in entries {
-            rebuilt.insert(obj, size);
+        let mut sink = EvictionSink::new();
+        for (obj, size, tenant) in entries {
+            rebuilt.insert_tagged(obj, size, tenant, &mut sink);
         }
+        debug_assert!(sink.is_empty(), "rebuild into a larger class evicted");
         self.classes[ci] = rebuilt;
         true
     }
@@ -143,12 +166,29 @@ impl Store for SlabCache {
     }
 
     fn insert(&mut self, obj: ObjectId, size: u64) -> bool {
-        let Some(ci) = self.class_of(size) else { return false };
-        if size > self.capacity {
+        if self.class_of(size).is_none() || size > self.capacity {
             return false;
         }
         if self.lookup(obj) {
             return true;
+        }
+        let mut sink = EvictionSink::new();
+        self.insert_tagged(obj, size, 0, &mut sink) > 0
+    }
+
+    fn insert_tagged(
+        &mut self,
+        obj: ObjectId,
+        size: u64,
+        tenant: TenantId,
+        evicted: &mut EvictionSink,
+    ) -> u64 {
+        let Some(ci) = self.class_of(size) else { return 0 };
+        if size > self.capacity {
+            return 0;
+        }
+        if self.lookup(obj) {
+            return 0; // refresh only
         }
         let chunk = self.chunk(ci);
         // Ensure the class can hold one more chunk: grow by pages while
@@ -160,29 +200,59 @@ impl Store for SlabCache {
             }
         }
         if self.class_pages[ci] == 0 {
-            return false; // no page ever granted and none free
+            return 0; // no page ever granted and none free
         }
-        // Track evictions performed by the class LRU to fix the index.
-        let evicted_before = self.classes[ci].evictions();
-        let ok = self.classes[ci].insert(obj, chunk);
-        if ok {
+        let start = evicted.len();
+        let added = self.classes[ci].insert_tagged(obj, chunk, tenant, evicted);
+        if added > 0 {
             self.index.insert(obj, ci as u8);
-            // Remove index entries for objects the class LRU evicted.
-            if self.classes[ci].evictions() > evicted_before {
-                self.index.retain(|o, &mut c| {
-                    c as usize != ci || self.classes[ci].contains(*o)
-                });
-            }
+            self.add_tenant(tenant, added);
         }
-        ok
+        if evicted.len() > start {
+            // Settle the aggregate tallies for what the class LRU shed,
+            // and drop the evicted objects from the object → class index.
+            let shed: Vec<(TenantId, u64)> = evicted[start..].to_vec();
+            for (t, b) in shed {
+                self.sub_tenant(t, b);
+            }
+            self.index.retain(|o, &mut c| {
+                c as usize != ci || self.classes[ci].contains(*o)
+            });
+        }
+        added
+    }
+
+    fn tenant_bytes(&self, tenant: TenantId) -> u64 {
+        self.tenant_bytes.get(tenant as usize).copied().unwrap_or(0)
+    }
+
+    fn evict_tenant(&mut self, tenant: TenantId, want: u64) -> u64 {
+        // Coldest-first *within each class* (Memcached has no global
+        // recency order across classes); classes are drained in index
+        // order until enough is freed. The object → class index is
+        // settled once at the end, not once per touched class.
+        let mut freed = 0u64;
+        for class in &mut self.classes {
+            if freed >= want {
+                break;
+            }
+            freed += class.evict_tenant(tenant, want - freed);
+        }
+        if freed > 0 {
+            self.sub_tenant(tenant, freed);
+            self.index.retain(|o, &mut c| self.classes[c as usize].contains(*o));
+        }
+        freed
     }
 
     fn remove(&mut self, obj: ObjectId) -> bool {
         if let Some(ci) = self.index.remove(&obj) {
-            self.classes[ci as usize].remove(obj)
-        } else {
-            false
+            if let Some((size, tenant)) = self.classes[ci as usize].remove_entry(obj) {
+                self.sub_tenant(tenant, size);
+                return true;
+            }
         }
+        false
     }
 
     fn contains(&self, obj: ObjectId) -> bool {
@@ -196,6 +266,7 @@ impl Store for SlabCache {
         }
         self.pages_free = self.pages_total;
         self.index.clear();
+        self.tenant_bytes.clear();
     }
 }
 
@@ -272,6 +343,52 @@ mod tests {
         s.insert(1, 100); // occupies a 128-byte chunk
         assert_eq!(s.used(), 128);
         assert_eq!(s.used_with_fragmentation(), 128);
+    }
+
+    #[test]
+    fn tenant_tags_survive_chunking_and_page_grants() {
+        let mut s = SlabCache::new(4 * PAGE);
+        let mut sink = EvictionSink::new();
+        // Chunk rounding: a 100-byte object occupies a 128-byte chunk and
+        // the tenant tally must count the chunk (tags partition used()).
+        assert_eq!(s.insert_tagged(1, 100, 3, &mut sink), 128);
+        assert_eq!(s.tenant_bytes(3), 128);
+        for i in 10..40u64 {
+            s.insert_tagged(i, 100, (i % 2) as TenantId, &mut sink);
+        }
+        let total: u64 = (0..4).map(|t| s.tenant_bytes(t)).sum();
+        assert_eq!(total, s.used());
+        // Targeted eviction frees only the target tenant's chunks.
+        let t0 = s.tenant_bytes(0);
+        let t1 = s.tenant_bytes(1);
+        let freed = s.evict_tenant(0, 256);
+        assert_eq!(freed, 256);
+        assert_eq!(s.tenant_bytes(0), t0 - 256);
+        assert_eq!(s.tenant_bytes(1), t1);
+        let total: u64 = (0..4).map(|t| s.tenant_bytes(t)).sum();
+        assert_eq!(total, s.used());
+        // Removal returns the chunk to the owner's tally.
+        assert!(s.remove(1));
+        assert_eq!(s.tenant_bytes(3), 0);
+    }
+
+    #[test]
+    fn class_overflow_reports_mixed_tenant_evictions() {
+        let mut s = SlabCache::new(PAGE); // one page, one class in play
+        let chunk = s.chunk_size_for(100).unwrap();
+        let fit = PAGE / chunk;
+        let mut sink = EvictionSink::new();
+        for i in 0..fit + 5 {
+            s.insert_tagged(i, 100, (i % 2) as TenantId, &mut sink);
+        }
+        let reported: u64 = sink.iter().map(|&(_, b)| b).sum();
+        assert_eq!(reported, 5 * chunk, "every class-LRU eviction reported");
+        let total: u64 = (0..2).map(|t| s.tenant_bytes(t)).sum();
+        assert_eq!(total, s.used());
+        // The index dropped the evicted objects.
+        for i in 0..fit + 5 {
+            assert_eq!(s.contains(i), s.lookup(i));
+        }
     }
 
     #[test]

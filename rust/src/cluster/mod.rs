@@ -8,15 +8,30 @@
 //! the old owner, but requests now route to the new owner, which misses.
 //! We model this faithfully — stale copies linger on the old owner until
 //! its LRU churns them out.
+//!
+//! Placement subsystem: requests route through the configured
+//! [`PlacementPolicy`] (`[placement]` config section) — `shared` keeps
+//! the plain slot-map routing above, `hash_slot_pinned` confines each
+//! tenant to an instance subset sized from its grant, `slab_partition`
+//! installs Memshare-style per-tenant floors inside every instance. The
+//! cluster also maintains the per-tenant **resident-bytes ledger**:
+//! every insert is tagged with its tenant, every eviction reports
+//! `(tenant, bytes)` back, and the invariant
+//! `Σ tenant_resident == used()` holds after every operation
+//! ([`Cluster::ledger_residents`], pinned by a property test).
 
 mod balance;
 
 pub use balance::{BalanceSnapshot, BalanceTracker};
 
-use crate::cache::CacheInstance;
+use crate::cache::{CacheInstance, EvictionSink};
 use crate::config::{ClusterConfig, EvictionKind};
-use crate::{mix64, ObjectId};
+use crate::placement::{
+    make_placement, PlacementKind, PlacementPolicy, PlacementSnapshot, PlacementTenantRow,
+    TenantGrant,
+};
 use crate::util::rng::Pcg;
+use crate::{mix64, ObjectId, TenantId};
 
 /// A homogeneous cluster of cache instances plus the slot map.
 pub struct Cluster {
@@ -32,6 +47,13 @@ pub struct Cluster {
     pub slots_moved: u64,
     /// Number of resize events that changed the instance count.
     pub resizes: u64,
+    /// Where `(tenant, key)` physically lives (placement subsystem).
+    placement: Box<dyn PlacementPolicy>,
+    /// Per-tenant resident bytes across all instances, indexed by tenant
+    /// id. Invariant: `Σ tenant_resident == used()`.
+    tenant_resident: Vec<u64>,
+    /// Reusable eviction sink (no per-request allocation).
+    evict_buf: EvictionSink,
 }
 
 impl Cluster {
@@ -57,6 +79,9 @@ impl Cluster {
             rng,
             slots_moved: 0,
             resizes: 0,
+            placement: make_placement(cfg.placement),
+            tenant_resident: Vec::new(),
+            evict_buf: EvictionSink::new(),
         }
     }
 
@@ -91,17 +116,66 @@ impl Cluster {
         (mix64(obj) % self.hash_slots as u64) as u32
     }
 
-    /// Index of the instance responsible for `obj` (step 2).
+    /// Index of the instance responsible for `obj` under *shared* routing
+    /// (step 2). Placement-aware callers use [`Self::route_for`].
     #[inline]
     pub fn route(&self, obj: ObjectId) -> usize {
         self.slot_owner[self.slot_of(obj) as usize] as usize
     }
 
-    /// Serve a request through the slot map. Returns `true` on hit.
+    /// Placement-aware routing: the instance responsible for `obj` (an
+    /// already tenant-scoped id) on behalf of `tenant`. Identical to
+    /// [`Self::route`] under the default `shared` placement.
+    #[inline]
+    pub fn route_for(&self, tenant: TenantId, obj: ObjectId) -> usize {
+        let slot = self.slot_of(obj);
+        let shared = self.slot_owner[slot as usize] as usize;
+        self.placement.route(tenant, slot, shared, self.instances.len())
+    }
+
+    #[inline]
+    fn ledger_add(&mut self, tenant: TenantId, bytes: u64) {
+        let i = tenant as usize;
+        if self.tenant_resident.len() <= i {
+            self.tenant_resident.resize(i + 1, 0);
+        }
+        self.tenant_resident[i] += bytes;
+    }
+
+    #[inline]
+    fn ledger_sub(&mut self, tenant: TenantId, bytes: u64) {
+        let slot = &mut self.tenant_resident[tenant as usize];
+        debug_assert!(
+            *slot >= bytes,
+            "tenant {tenant} resident ledger underflow: {} < {bytes}",
+            *slot
+        );
+        *slot = slot.saturating_sub(bytes);
+    }
+
+    /// Serve a request through the slot map (tenant 0). Returns `true` on
+    /// hit.
     #[inline]
     pub fn serve(&mut self, obj: ObjectId, size: u64) -> bool {
-        let idx = self.route(obj);
-        self.instances[idx].serve(obj, size)
+        self.serve_for(0, obj, size)
+    }
+
+    /// Tenant-tagged serve: route via the placement policy, look up, and
+    /// on miss insert the fetched object tagged with `tenant`, folding
+    /// the insert and every eviction it caused into the resident ledger.
+    #[inline]
+    pub fn serve_for(&mut self, tenant: TenantId, obj: ObjectId, size: u64) -> bool {
+        let idx = self.route_for(tenant, obj);
+        let buf = &mut self.evict_buf;
+        buf.clear();
+        let (hit, added) = self.instances[idx].serve_tagged(obj, size, tenant, buf);
+        if added > 0 {
+            self.ledger_add(tenant, added);
+        }
+        while let Some((t, b)) = self.evict_buf.pop() {
+            self.ledger_sub(t, b);
+        }
+        hit
     }
 
     /// Serve a request *without* inserting on miss (the balancer refused
@@ -109,8 +183,104 @@ impl Cluster {
     /// accounting is identical to [`Self::serve`].
     #[inline]
     pub fn serve_no_insert(&mut self, obj: ObjectId) -> bool {
-        let idx = self.route(obj);
+        self.serve_no_insert_for(0, obj)
+    }
+
+    /// Placement-aware [`Self::serve_no_insert`].
+    #[inline]
+    pub fn serve_no_insert_for(&mut self, tenant: TenantId, obj: ObjectId) -> bool {
+        let idx = self.route_for(tenant, obj);
         self.instances[idx].lookup_only(obj)
+    }
+
+    /// Physical resident bytes of `tenant` across the cluster (O(1): the
+    /// ledger row).
+    #[inline]
+    pub fn tenant_resident_bytes(&self, tenant: TenantId) -> u64 {
+        self.tenant_resident.get(tenant as usize).copied().unwrap_or(0)
+    }
+
+    /// Non-zero ledger rows as `(tenant, resident bytes)`.
+    pub fn tenant_residents(&self) -> Vec<(TenantId, u64)> {
+        self.tenant_resident
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b > 0)
+            .map(|(t, &b)| (t as TenantId, b))
+            .collect()
+    }
+
+    /// Sum of the ledger rows — equals [`Self::used`] by invariant (the
+    /// placement property suite pins this).
+    pub fn ledger_residents(&self) -> u64 {
+        self.tenant_resident.iter().sum()
+    }
+
+    /// The configured placement policy kind.
+    pub fn placement_kind(&self) -> PlacementKind {
+        self.placement.kind()
+    }
+
+    /// Instance pins of `tenant`, when the placement policy pins.
+    pub fn pins_of(&self, tenant: TenantId) -> Option<&[u32]> {
+        self.placement.pins(tenant)
+    }
+
+    /// Epoch boundary: hand the fresh grants to the placement policy
+    /// (re-pin subsets / recompute partition floors) and install any
+    /// per-instance floors. A no-op under `shared` placement — the
+    /// stores are never touched, keeping the default bit-identical.
+    pub fn apply_grants(&mut self, grants: &[TenantGrant]) {
+        let n = self.instances.len();
+        self.placement.on_grants(grants, n, self.capacity_per_instance);
+        if let Some(floors) = self.placement.instance_floors() {
+            for inst in &mut self.instances {
+                inst.set_tenant_floors(floors);
+            }
+        }
+    }
+
+    /// Shed `tenant` down to `cap_bytes` resident: evict its coldest
+    /// entries, instance by instance, until the ledger row fits the cap.
+    /// Returns the bytes freed. Runs at epoch boundaries under grant
+    /// enforcement — never on the request path.
+    pub fn shed_tenant(&mut self, tenant: TenantId, cap_bytes: u64) -> u64 {
+        let resident = self.tenant_resident_bytes(tenant);
+        if resident <= cap_bytes {
+            return 0;
+        }
+        let mut want = resident - cap_bytes;
+        let mut freed_total = 0u64;
+        for inst in &mut self.instances {
+            if want == 0 {
+                break;
+            }
+            let have = inst.tenant_bytes_of(tenant);
+            if have == 0 {
+                continue;
+            }
+            let freed = inst.evict_tenant(tenant, want.min(have));
+            want = want.saturating_sub(freed);
+            freed_total += freed;
+        }
+        if freed_total > 0 {
+            self.ledger_sub(tenant, freed_total);
+        }
+        freed_total
+    }
+
+    /// Placement snapshot for the `PLACEMENT` serve command.
+    pub fn placement_snapshot(&self) -> PlacementSnapshot {
+        let tenants = self
+            .tenant_residents()
+            .into_iter()
+            .map(|(tenant, resident_bytes)| PlacementTenantRow {
+                tenant,
+                resident_bytes,
+                pins: self.placement.pins(tenant).map(|p| p.to_vec()),
+            })
+            .collect();
+        PlacementSnapshot { policy: self.placement.kind(), tenants }
     }
 
     /// Whether the responsible instance currently holds `obj`.
@@ -141,7 +311,8 @@ impl Cluster {
     /// Resize the cluster to `target` instances (Algorithm 2 line 8 side
     /// effect). Adding: each new server receives `slots/new_total` randomly
     /// chosen slots. Removing: the victims' slots scatter uniformly over
-    /// the survivors. Returns slots moved.
+    /// the survivors (their residents leave the per-tenant ledger with
+    /// them). Returns slots moved.
     pub fn resize(&mut self, target: u32) -> u64 {
         let target = target.max(1) as usize;
         let before = self.instances.len();
@@ -184,7 +355,14 @@ impl Cluster {
                         moved += 1;
                     }
                 }
-                self.instances.pop();
+                // The decommissioned node's residents leave the ledger.
+                let gone = self.instances.pop().expect("len > target >= 1");
+                for t in 0..self.tenant_resident.len() {
+                    let b = gone.tenant_bytes_of(t as TenantId);
+                    if b > 0 {
+                        self.ledger_sub(t as TenantId, b);
+                    }
+                }
             }
         }
         self.slots_moved += moved;
@@ -222,6 +400,12 @@ mod tests {
         Cluster::new(&ClusterConfig::default(), 1000 * 1000, n)
     }
 
+    fn mk_placed(n: u32, placement: PlacementKind) -> Cluster {
+        let mut cfg = ClusterConfig::default();
+        cfg.placement = placement;
+        Cluster::new(&cfg, 1000 * 1000, n)
+    }
+
     #[test]
     fn slots_partition_completely() {
         let c = mk(4);
@@ -241,6 +425,9 @@ mod tests {
             let r = c.route(obj);
             assert!(r < 3);
             assert_eq!(r, c.route(obj));
+            // Shared placement: route_for agrees with route for any tenant.
+            assert_eq!(c.route_for(0, obj), r);
+            assert_eq!(c.route_for(5, obj), r);
         }
     }
 
@@ -250,6 +437,119 @@ mod tests {
         assert!(!c.serve(42, 100));
         assert!(c.serve(42, 100));
         assert_eq!(c.used(), 100);
+        assert_eq!(c.tenant_resident_bytes(0), 100);
+        assert_eq!(c.ledger_residents(), c.used());
+    }
+
+    #[test]
+    fn ledger_tracks_inserts_and_evictions() {
+        let mut c = mk(1);
+        // Fill past capacity: 15 objects of 100 KB into a 1 MB node.
+        for obj in 0..15u64 {
+            c.serve_for((obj % 3) as TenantId, obj, 100_000);
+        }
+        assert_eq!(c.ledger_residents(), c.used());
+        let total: u64 = (0..3).map(|t| c.tenant_resident_bytes(t)).sum();
+        assert_eq!(total, c.used());
+        assert!(c.used() <= 1_000_000);
+        // Denied admissions never touch the ledger.
+        let before = c.ledger_residents();
+        c.serve_no_insert_for(1, 999_999);
+        assert_eq!(c.ledger_residents(), before);
+    }
+
+    #[test]
+    fn shed_tenant_binds_the_ledger_row() {
+        let mut c = mk(2);
+        for obj in 0..10u64 {
+            c.serve_for(1, obj, 50_000);
+            c.serve_for(2, 1000 + obj, 50_000);
+        }
+        assert_eq!(c.tenant_resident_bytes(1), 500_000);
+        let freed = c.shed_tenant(1, 200_000);
+        assert_eq!(freed, 300_000);
+        assert_eq!(c.tenant_resident_bytes(1), 200_000);
+        assert_eq!(c.tenant_resident_bytes(2), 500_000, "other tenants untouched");
+        assert_eq!(c.ledger_residents(), c.used());
+        // Already under the cap: nothing happens.
+        assert_eq!(c.shed_tenant(1, 200_000), 0);
+    }
+
+    #[test]
+    fn shrink_drops_victims_from_the_ledger() {
+        let mut c = mk(4);
+        for obj in 0..40u64 {
+            c.serve_for((obj % 2) as TenantId, obj, 50_000);
+        }
+        assert_eq!(c.ledger_residents(), c.used());
+        c.resize(2);
+        assert_eq!(c.ledger_residents(), c.used(), "ledger must follow the shrink");
+    }
+
+    #[test]
+    fn pinned_placement_confines_tenants_to_their_subsets() {
+        let mut c = mk_placed(4, PlacementKind::HashSlotPinned);
+        assert_eq!(c.placement_kind(), PlacementKind::HashSlotPinned);
+        // Before any grants: shared routing (bit-identical warmup).
+        for obj in 0..100u64 {
+            assert_eq!(c.route_for(1, obj), c.route(obj));
+        }
+        // Grants: tenant 1 → 1 instance, tenant 2 → 2 instances.
+        c.apply_grants(&[
+            TenantGrant { tenant: 1, granted_bytes: 1_000_000, reserved_bytes: 1_000_000 },
+            TenantGrant { tenant: 2, granted_bytes: 2_000_000, reserved_bytes: 0 },
+        ]);
+        let p1 = c.pins_of(1).unwrap().to_vec();
+        let p2 = c.pins_of(2).unwrap().to_vec();
+        assert_eq!(p1.len(), 1);
+        assert_eq!(p2.len(), 2);
+        assert!(p1.iter().all(|i| !p2.contains(i)));
+        for obj in 0..500u64 {
+            assert!(p1.contains(&(c.route_for(1, obj) as u32)));
+            assert!(p2.contains(&(c.route_for(2, obj) as u32)));
+        }
+        // The snapshot surfaces the pins.
+        c.serve_for(1, 7, 100);
+        let snap = c.placement_snapshot();
+        assert_eq!(snap.policy, PlacementKind::HashSlotPinned);
+        let row = snap.tenants.iter().find(|r| r.tenant == 1).unwrap();
+        assert_eq!(row.resident_bytes, 100);
+        assert_eq!(row.pins.as_deref(), Some(&p1[..]));
+    }
+
+    #[test]
+    fn partition_placement_installs_floors() {
+        let mut c = mk_placed(2, PlacementKind::SlabPartition);
+        // Routing stays shared.
+        for obj in 0..100u64 {
+            assert_eq!(c.route_for(3, obj), c.route(obj));
+        }
+        c.apply_grants(&[TenantGrant {
+            tenant: 1,
+            granted_bytes: 800_000,
+            reserved_bytes: 800_000,
+        }]);
+        // Tenant 1 fills toward its per-instance floor (400 KB each); a
+        // foreign flood may take only its *pooled* overage — the floored
+        // share on every instance must survive.
+        for obj in 0..8u64 {
+            c.serve_for(1, obj, 100_000);
+        }
+        let protected: u64 = c
+            .instances()
+            .iter()
+            .map(|i| i.tenant_bytes_of(1).min(400_000))
+            .sum();
+        assert!(protected > 0);
+        for obj in 100..160u64 {
+            c.serve_for(2, obj, 100_000);
+        }
+        assert!(
+            c.tenant_resident_bytes(1) >= protected,
+            "floors must protect tenant 1: {} < {protected}",
+            c.tenant_resident_bytes(1)
+        );
+        assert_eq!(c.ledger_residents(), c.used());
     }
 
     #[test]

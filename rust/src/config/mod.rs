@@ -11,6 +11,7 @@ mod instance;
 
 pub use instance::{InstanceCatalog, InstanceType};
 
+use crate::placement::PlacementKind;
 use crate::tenant::{TenantSpec, TrafficClass};
 use crate::util::toml_lite::{Doc, Value};
 use crate::{Result, TenantId, HOUR};
@@ -286,6 +287,12 @@ pub struct ClusterConfig {
     pub hash_slots: u32,
     /// Random seed for slot (re)assignment.
     pub seed: u64,
+    /// Physical placement policy (`[placement] policy = "..."` in TOML):
+    /// `shared` (default, bit-identical scoped-key routing),
+    /// `hash_slot_pinned` (per-tenant instance subsets sized from the
+    /// epoch grants) or `slab_partition` (Memshare-style per-tenant byte
+    /// floors inside each instance). See [`crate::placement`].
+    pub placement: PlacementKind,
 }
 
 impl Default for ClusterConfig {
@@ -294,6 +301,7 @@ impl Default for ClusterConfig {
             eviction: EvictionKind::Lru,
             hash_slots: 16384,
             seed: 0xC0FFEE,
+            placement: PlacementKind::Shared,
         }
     }
 }
@@ -414,6 +422,11 @@ impl Config {
         }
         if let Some(v) = doc.get_u64("cluster.seed") {
             cfg.cluster.seed = v;
+        }
+
+        // [placement]
+        if let Some(v) = doc.get_str("placement.policy") {
+            cfg.cluster.placement = PlacementKind::parse(v)?;
         }
 
         // [tenant0], [tenant1], … — one section per tenant. Sections are
@@ -543,6 +556,11 @@ impl Config {
         doc.set("cluster.hash_slots", Value::Int(self.cluster.hash_slots as i64));
         doc.set("cluster.seed", Value::Int(self.cluster.seed as i64));
 
+        doc.set(
+            "placement.policy",
+            Value::Str(self.cluster.placement.as_str().into()),
+        );
+
         for (i, t) in self.tenants.iter().enumerate() {
             doc.set(&format!("tenant{i}.id"), Value::Int(t.id as i64));
             doc.set(&format!("tenant{i}.name"), Value::Str(t.name.clone()));
@@ -636,13 +654,30 @@ mod tests {
         cfg.controller.t_max_secs = 1234.0;
         cfg.controller.gain = GainSchedule::Polynomial { eps0: 3.0, exponent: 0.8 };
         cfg.cluster.eviction = EvictionKind::Slab;
+        cfg.cluster.placement = PlacementKind::HashSlotPinned;
         let text = cfg.to_toml();
         let back = Config::from_toml(&text).unwrap();
         assert_eq!(back.scaler.policy, PolicyKind::Mrc);
         assert_eq!(back.controller.t_max_secs, 1234.0);
         assert_eq!(back.controller.gain, cfg.controller.gain);
         assert_eq!(back.cluster.eviction, EvictionKind::Slab);
+        assert_eq!(back.cluster.placement, PlacementKind::HashSlotPinned);
         assert_eq!(back.cost.instance.name, "cache.t2.micro");
+    }
+
+    #[test]
+    fn placement_section_parses_and_defaults() {
+        // Default: shared, bit-identical to the pre-placement cluster.
+        assert_eq!(
+            Config::from_toml("").unwrap().cluster.placement,
+            PlacementKind::Shared
+        );
+        let cfg = Config::from_toml("[placement]\npolicy = \"slab_partition\"\n").unwrap();
+        assert_eq!(cfg.cluster.placement, PlacementKind::SlabPartition);
+        let cfg = Config::from_toml("[placement]\npolicy = \"hash_slot_pinned\"\n").unwrap();
+        assert_eq!(cfg.cluster.placement, PlacementKind::HashSlotPinned);
+        // Bad values error loudly.
+        assert!(Config::from_toml("[placement]\npolicy = \"bogus\"\n").is_err());
     }
 
     #[test]

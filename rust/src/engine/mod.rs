@@ -29,7 +29,8 @@ mod probe;
 
 pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
 pub use probe::{
-    BalanceProbe, Probe, ProbeCtx, ShadowProbe, SloProbe, SloSample, TenantProbe, TtlProbe,
+    BalanceProbe, PlacementProbe, PlacementSample, Probe, ProbeCtx, ShadowProbe, SloProbe,
+    SloSample, TenantProbe, TtlProbe,
 };
 
 use crate::balancer::Balancer;
@@ -37,6 +38,7 @@ use crate::cluster::BalanceTracker;
 use crate::config::Config;
 use crate::cost::{CostTracker, EpochCosts};
 use crate::metrics::{HitMiss, TimeSeries};
+use crate::placement::PlacementSnapshot;
 use crate::scaler::EpochSizer;
 use crate::tenant::TenantEnforcement;
 use crate::trace::{Request, RequestSource};
@@ -98,6 +100,9 @@ pub struct RunReport {
     /// Per-epoch per-tenant SLO/enforcement record (miss ratio vs target,
     /// grants, caps, clamps, boosts) — see [`SloProbe`].
     pub slo: Vec<SloSample>,
+    /// Per-epoch per-tenant physical resident bytes (post-boundary
+    /// placement maintenance) — see [`PlacementProbe`].
+    pub placement: Vec<PlacementSample>,
     pub total_cost: f64,
     pub storage_cost: f64,
     pub miss_cost: f64,
@@ -247,6 +252,7 @@ impl EngineBuilder {
                     probes.push(Box::new(BalanceProbe::new()));
                     probes.push(Box::new(TenantProbe::new()));
                     probes.push(Box::new(SloProbe::new()));
+                    probes.push(Box::new(PlacementProbe::new()));
                 }
                 (Core::Cluster(balancer), name)
             }
@@ -421,6 +427,7 @@ impl Engine {
             balance: BalanceTracker::new(),
             tenants: Vec::new(),
             slo: Vec::new(),
+            placement: Vec::new(),
             total_cost: self.costs.total(),
             storage_cost: self.costs.storage_total(),
             miss_cost: self.costs.miss_total(),
@@ -471,6 +478,20 @@ impl Engine {
             }
             Core::Vertical { .. } => {
                 self.epochs.push(self.costs.end_epoch_vertical(t));
+            }
+        }
+        // Post-decision hook: resize, placement maintenance and
+        // occupancy-cap shedding have been applied — probes can observe
+        // the state the next epoch starts from.
+        {
+            let ctx = ProbeCtx {
+                core: &self.core,
+                costs: &self.costs,
+                processed: self.processed,
+                instances: self.active_instances,
+            };
+            for p in &mut self.probes {
+                p.on_epoch_applied(t, &ctx);
             }
         }
         self.active_instances
@@ -559,6 +580,25 @@ impl Engine {
         match &self.core {
             Core::Cluster(b) => b.tenant_stats_of(t),
             Core::Vertical { .. } => HitMiss::default(),
+        }
+    }
+
+    /// Physical resident bytes of one tenant — the cluster placement
+    /// ledger row (0 for the vertical mode, which has no instances).
+    pub fn tenant_physical_bytes(&self, t: TenantId) -> u64 {
+        match &self.core {
+            Core::Cluster(b) => b.cluster.tenant_resident_bytes(t),
+            Core::Vertical { .. } => 0,
+        }
+    }
+
+    /// Placement snapshot (policy kind, per-tenant resident bytes and
+    /// pins) — the `PLACEMENT` serve command renders this. `None` for the
+    /// vertical mode.
+    pub fn placement_snapshot(&self) -> Option<PlacementSnapshot> {
+        match &self.core {
+            Core::Cluster(b) => Some(b.cluster.placement_snapshot()),
+            Core::Vertical { .. } => None,
         }
     }
 

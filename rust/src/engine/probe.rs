@@ -60,6 +60,15 @@ impl ProbeCtx<'_> {
         }
     }
 
+    /// Per-tenant physical resident bytes — the cluster's placement
+    /// ledger rows (cluster runs only).
+    pub fn tenant_residents(&self) -> Option<Vec<(TenantId, u64)>> {
+        match self.core {
+            Core::Cluster(b) => Some(b.cluster.tenant_residents()),
+            Core::Vertical { .. } => None,
+        }
+    }
+
     /// The run's cost ledger.
     pub fn costs(&self) -> &CostTracker {
         self.costs
@@ -105,6 +114,12 @@ pub trait Probe {
     /// Called at each epoch closure, before billing and resizing (so the
     /// closing epoch's per-instance stats are still intact).
     fn on_epoch(&mut self, _epoch_end: TimeUs, _ctx: &ProbeCtx) {}
+
+    /// Called at each epoch boundary *after* the sizing decision was
+    /// applied (resize, placement re-pin/re-partition, occupancy-cap
+    /// shedding) — the state the next epoch starts from. Not called for
+    /// the final partial epoch (`finish` applies no decision).
+    fn on_epoch_applied(&mut self, _epoch_end: TimeUs, _ctx: &ProbeCtx) {}
 
     /// Fold the probe's observations into the finished report.
     fn finish(self: Box<Self>, _ctx: &ProbeCtx, _report: &mut RunReport) {}
@@ -273,6 +288,70 @@ pub struct SloProbe {
 impl SloProbe {
     pub fn new() -> Self {
         Self::default()
+    }
+}
+
+/// One per-tenant row of an epoch boundary's physical-placement record:
+/// the resident bytes the tenant holds *after* the boundary's placement
+/// maintenance (resize, re-pin/re-partition, occupancy-cap shedding),
+/// next to the grant/cap of the decision now in force. `exp fig12` and
+/// the occupancy-cap acceptance check read this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementSample {
+    /// Epoch-boundary timestamp.
+    pub t: TimeUs,
+    pub tenant: TenantId,
+    /// Physical resident bytes the next epoch starts from.
+    pub resident_bytes: u64,
+    /// Bytes granted by the decision now in force.
+    pub granted_bytes: Option<u64>,
+    /// Occupancy cap now in force. Under `scaler.enforce_grants`,
+    /// `resident_bytes ≤ cap_bytes` at every boundary: the boundary shed
+    /// just reclaimed any overage, and in-epoch admission keeps it bound
+    /// until the next boundary.
+    pub cap_bytes: Option<u64>,
+}
+
+/// Records, at every epoch boundary, each tenant's physical resident
+/// bytes (the cluster placement ledger) next to the enforcement state
+/// the next epoch starts under.
+#[derive(Default)]
+pub struct PlacementProbe {
+    samples: Vec<PlacementSample>,
+}
+
+impl PlacementProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Probe for PlacementProbe {
+    fn on_epoch_applied(&mut self, epoch_end: TimeUs, ctx: &ProbeCtx) {
+        let Some(residents) = ctx.tenant_residents() else {
+            return;
+        };
+        // The decision (grants → caps, pins, floors, shed) was just
+        // applied: rows describe the state the next epoch starts under.
+        let rows = ctx.tenant_enforcement();
+        for (tenant, resident_bytes) in residents {
+            let row = rows
+                .as_ref()
+                .and_then(|v| v.iter().find(|r| r.tenant == tenant));
+            self.samples.push(PlacementSample {
+                t: epoch_end,
+                tenant,
+                resident_bytes,
+                granted_bytes: row.and_then(|r| {
+                    if r.decided { Some(r.granted_bytes) } else { None }
+                }),
+                cap_bytes: row.and_then(|r| r.cap_bytes),
+            });
+        }
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        report.placement = self.samples;
     }
 }
 

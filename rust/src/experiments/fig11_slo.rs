@@ -47,9 +47,10 @@ pub const FLOOD: u16 = 1;
 /// 5 MB outliers.
 const OBJ_BYTES: u32 = 100_000;
 
-/// Spike window within the 2-day trace.
-const SPIKE_START: TimeUs = 18 * HOUR;
-const SPIKE_END: TimeUs = 30 * HOUR;
+/// Spike window within the 2-day trace (shared with fig12's placement
+/// study, which replays the same storm).
+pub(super) const SPIKE_START: TimeUs = 18 * HOUR;
+pub(super) const SPIKE_END: TimeUs = 30 * HOUR;
 
 /// Fig. 11 report.
 #[derive(Debug)]
@@ -150,7 +151,7 @@ fn uniform(mut reqs: Vec<Request>, tenant: u16) -> Vec<Request> {
     reqs
 }
 
-fn scale_factor(scale: TraceScale) -> f64 {
+pub(super) fn scale_factor(scale: TraceScale) -> f64 {
     match scale {
         TraceScale::Smoke => 1.0,
         TraceScale::Small => 2.0,
@@ -160,7 +161,7 @@ fn scale_factor(scale: TraceScale) -> f64 {
 
 /// The gold tenant's steady cacheable workload: small hot catalogue,
 /// no churn.
-fn gold_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
+pub(super) fn gold_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
     let f = scale_factor(scale);
     let mut g = SynthConfig::akamai_like();
     g.catalogue = (800.0 * f) as u64;
@@ -175,7 +176,7 @@ fn gold_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
 
 /// The flood tenant: a quiet background scan for the whole run, plus a
 /// 12-hour spike of ~80× its quiet volume over a huge cold catalogue.
-fn flood_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
+pub(super) fn flood_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
     let f = scale_factor(scale);
     let mut quiet = SynthConfig::akamai_like();
     quiet.catalogue = (30_000.0 * f) as u64;
@@ -206,7 +207,7 @@ fn flood_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
 
 /// The shared-cluster config (the tenant roster and `enforce_grants` are
 /// filled in per run).
-fn fig11_cfg(scale: TraceScale) -> Config {
+pub(super) fn fig11_cfg(scale: TraceScale) -> Config {
     let f = scale_factor(scale);
     let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
     cfg.cost.instance.ram_bytes = (40.0e6 * f) as u64;

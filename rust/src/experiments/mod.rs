@@ -5,6 +5,7 @@
 mod ablations;
 mod fig10_tenants;
 mod fig11_slo;
+mod fig12_placement;
 mod fig1_overhead;
 mod fig2_mrc_accuracy;
 mod fig4_trace;
@@ -17,6 +18,7 @@ mod irm_convergence;
 pub use ablations::{run_epoch_ablation, run_gain_ablation, run_instance_ablation, run_per_content_ablation, AblationReport};
 pub use fig10_tenants::{run_fig10, tenant_specs, tenant_trace, Fig10Report, TenantOutcome};
 pub use fig11_slo::{fig11_specs, run_fig11, Fig11Report};
+pub use fig12_placement::{fig12_specs, run_fig12, Fig12Report, Fig12Variant};
 pub use fig1_overhead::run_fig1;
 pub use fig2_mrc_accuracy::run_fig2;
 pub use fig4_trace::run_fig4;

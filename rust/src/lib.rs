@@ -56,17 +56,30 @@
 //!   [`cost`], and the `GET <tenant>/<key>` / `STATS <tenant>` /
 //!   `SLO <tenant>` serve protocol);
 //! * the **per-tenant enforcement loop** (`scaler.enforce_grants`): each
-//!   epoch the arbiter's grants become *binding* — an occupancy cap
-//!   enforced as a constant-time admission byte budget on the balancer's
-//!   request path (a refused admission still serves the miss, it only
-//!   skips the insert), a TTL clamp that projects an over-demanding
-//!   tenant's controller onto its largest affordable timer, and an SLO
-//!   feedback term that escalates a tenant's grant priority while its
-//!   measured miss ratio exceeds its configured `slo_miss_ratio`
+//!   epoch the arbiter's grants become *binding* — an occupancy cap that
+//!   binds on **physical resident bytes** (the balancer feeds each
+//!   tenant's placement-ledger row to the policy; an insert admits only
+//!   while `resident + size ≤ cap`, a refused admission still serves the
+//!   miss, and over-cap tenants are shed back under their grant at epoch
+//!   boundaries by targeted eviction of their own coldest entries), a
+//!   TTL clamp that projects an over-demanding tenant's controller onto
+//!   its largest affordable timer, and an SLO feedback term that
+//!   escalates a tenant's grant priority while its measured miss ratio
+//!   exceeds its configured `slo_miss_ratio`
 //!   ([`tenant::TenantEnforcement`], [`engine::SloProbe`]);
+//! * the **physical placement subsystem** ([`placement`]): every store
+//!   entry carries a tenant tag, evictions report `(tenant, bytes)`
+//!   upward, and the cluster maintains a per-tenant resident-bytes
+//!   ledger (`Σ per-tenant == used()`); a `PlacementPolicy`
+//!   (`[placement]` config section) decides where `(tenant, key)` lives —
+//!   `shared` scoped-key hashing (default, bit-identical),
+//!   `hash_slot_pinned` per-tenant instance subsets sized from the epoch
+//!   grants, or `slab_partition` Memshare-style per-instance byte floors
+//!   — surfaced via the `PLACEMENT` serve command, `physical_bytes` in
+//!   `STATS <tenant>`, and [`engine::PlacementProbe`];
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
-//!   plus the multi-tenant fig10 study and the fig11 SLO-enforcement
-//!   study ([`experiments`]).
+//!   plus the multi-tenant fig10 study, the fig11 SLO-enforcement study
+//!   and the fig12 placement-isolation study ([`experiments`]).
 //!
 //! Time is measured in microseconds ([`TimeUs`]); object sizes in bytes.
 
@@ -79,6 +92,7 @@ pub mod engine;
 pub mod experiments;
 pub mod metrics;
 pub mod mrc;
+pub mod placement;
 pub mod runtime;
 pub mod scaler;
 pub mod serve;

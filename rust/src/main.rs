@@ -4,7 +4,7 @@
 //! elastictl gen-trace <out> [--kind akamai|irm|tenants] [--scale smoke|small|full] [--seed N]
 //! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
 //! elastictl exp <id> [--scale smoke|small|full] [--out DIR]
-//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 irm all
+//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 irm all
 //! elastictl plan <trace>
 //! elastictl ttlopt <trace>
 //! elastictl serve [--addr HOST:PORT] [--policy ...]
@@ -22,10 +22,10 @@ use std::path::PathBuf;
 const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve> [args]
   gen-trace <out> [--kind akamai|irm|tenants] [--scale smoke|small|full] [--seed N]
   run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
-  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 irm ablations all)
+  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 irm ablations all)
   plan <trace>
   ttlopt <trace>
-  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, EPOCH, QUIT)";
+  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, EPOCH, QUIT)";
 
 /// Minimal flag parser: positionals + `--key value` pairs.
 struct Args {
@@ -266,6 +266,10 @@ fn run_experiment(id: &str, scale: TraceScale, out: &PathBuf) -> Result<()> {
     if all || id == "fig11" || id == "slo" {
         matched = true;
         println!("{}", experiments::run_fig11(&ctx, scale)?.render());
+    }
+    if all || id == "fig12" || id == "placement" {
+        matched = true;
+        println!("{}", experiments::run_fig12(&ctx, scale)?.render());
     }
     if all || id == "ablations" {
         matched = true;

@@ -1,0 +1,514 @@
+//! Physical placement subsystem: *where* a `(tenant, key)` lives and how
+//! much resident memory each tenant actually holds.
+//!
+//! PR 3 made the arbiter's grants binding through an admission-rate
+//! budget — an indirect bound: a cheap tenant's insert storm could still
+//! physically evict a gold tenant's residents through shared-LRU
+//! interference, exactly the cross-tenant contention Memshare (Cidon et
+//! al., PAPERS.md) partitions away. This module closes the gap with two
+//! halves:
+//!
+//! 1. **Physical occupancy accounting** — every store entry carries a
+//!    tenant tag ([`crate::cache::Store::insert_tagged`]); evictions
+//!    report `(tenant, bytes)` upward through an eviction sink; the
+//!    [`crate::cluster::Cluster`] folds those events into a per-tenant
+//!    resident-bytes ledger with the invariant
+//!    `Σ per-tenant bytes == Cluster::used()`. Under
+//!    `scaler.enforce_grants` the occupancy cap binds on *resident*
+//!    bytes: over-cap tenants shed their own coldest entries at epoch
+//!    boundaries ([`crate::cluster::Cluster::shed_tenant`]) instead of
+//!    refusing admissions for repair traffic.
+//!
+//! 2. **A [`PlacementPolicy`]** deciding which instance a tenant's keys
+//!    route to, selectable via the `[placement]` config section:
+//!
+//!    * [`PlacementKind::Shared`] — today's scoped-key hash-slot routing,
+//!      the default, bit-identical to the pre-placement balancer (the
+//!      engine-parity golden suite pins it).
+//!    * [`PlacementKind::HashSlotPinned`] — each tenant is pinned to an
+//!      instance subset sized from its grant, recomputed at epoch
+//!      boundaries with minimal churn (existing pins are kept; a tenant
+//!      squatting on a higher-priority tenant's instance migrates to a
+//!      free one — the priority tenant keeps its warm residents; growth
+//!      takes free instances first and refuses to overlap while the
+//!      tenant has any pin).
+//!    * [`PlacementKind::SlabPartition`] — Memshare-style per-tenant byte
+//!      partitions *inside* each instance: reserved floors are honored
+//!      (a tenant at or under its floor is protected from cross-tenant
+//!      eviction), the pooled remainder stays evictable cross-tenant.
+//!
+//! The placement layer is deliberately passive on the request path: one
+//! virtual `route` call per request, O(1) for every policy.
+
+use crate::{ObjectId, Result, TenantId};
+
+/// Which placement policy the cluster runs (`[placement] policy = "..."`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementKind {
+    /// Scoped-key hash-slot routing over all instances (the default;
+    /// bit-identical to the pre-placement cluster).
+    #[default]
+    Shared,
+    /// Per-tenant instance subsets sized from the epoch grants.
+    HashSlotPinned,
+    /// Memshare-style per-tenant byte partitions inside each instance.
+    SlabPartition,
+}
+
+impl PlacementKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlacementKind::Shared => "shared",
+            PlacementKind::HashSlotPinned => "hash_slot_pinned",
+            PlacementKind::SlabPartition => "slab_partition",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PlacementKind> {
+        Ok(match s {
+            "shared" => PlacementKind::Shared,
+            "hash_slot_pinned" | "hash-slot-pinned" | "pinned" => PlacementKind::HashSlotPinned,
+            "slab_partition" | "slab-partition" | "partition" => PlacementKind::SlabPartition,
+            other => anyhow::bail!(
+                "unknown placement policy {other} (shared|hash_slot_pinned|slab_partition)"
+            ),
+        })
+    }
+}
+
+/// One tenant's grant row as the placement layer sees it at an epoch
+/// boundary (derived from [`crate::tenant::TenantEnforcement`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantGrant {
+    pub tenant: TenantId,
+    /// Bytes granted by the arbiter at the last epoch decision.
+    pub granted_bytes: u64,
+    /// Memshare-style reserved floor carried by the tenant's spec.
+    pub reserved_bytes: u64,
+}
+
+/// Read-only snapshot of the placement state (the `PLACEMENT` serve
+/// command renders this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementSnapshot {
+    pub policy: PlacementKind,
+    pub tenants: Vec<PlacementTenantRow>,
+}
+
+/// One tenant's row of a [`PlacementSnapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementTenantRow {
+    pub tenant: TenantId,
+    /// Physical resident bytes across the cluster (the ledger row).
+    pub resident_bytes: u64,
+    /// Instance subset the tenant is pinned to (`None` unless the
+    /// placement policy pins).
+    pub pins: Option<Vec<u32>>,
+}
+
+/// Strategy for placing `(tenant, key)` onto cluster instances.
+///
+/// `route` runs on the request path and must stay O(1); `on_grants` runs
+/// once per epoch boundary and may do linear work in tenants × instances.
+pub trait PlacementPolicy: Send {
+    fn kind(&self) -> PlacementKind;
+
+    /// Instance index for a request: `slot` is the object's hash slot,
+    /// `shared_owner` the slot map's owner (the shared fallback), `n` the
+    /// live instance count.
+    fn route(&self, tenant: TenantId, slot: u32, shared_owner: usize, n: usize) -> usize;
+
+    /// Epoch boundary: absorb the fresh grants (recompute pins or
+    /// per-instance floors). `n` is the live instance count *after* the
+    /// resize that precedes this call.
+    fn on_grants(&mut self, grants: &[TenantGrant], n: usize, instance_bytes: u64);
+
+    /// Per-tenant protected floors each instance must honor. `None`
+    /// means the policy does not partition instances at all (stores are
+    /// left untouched, keeping the default path bit-identical);
+    /// `Some(&[])` means "partitioning is active but no floor is
+    /// currently justified" and must be installed so stale floors from a
+    /// previous epoch are cleared.
+    fn instance_floors(&self) -> Option<&[(TenantId, u64)]> {
+        None
+    }
+
+    /// Current instance pins for `tenant` (`None` unless the policy pins).
+    fn pins(&self, tenant: TenantId) -> Option<&[u32]> {
+        let _ = tenant;
+        None
+    }
+}
+
+/// Build the configured placement policy.
+pub fn make_placement(kind: PlacementKind) -> Box<dyn PlacementPolicy> {
+    match kind {
+        PlacementKind::Shared => Box::new(SharedPlacement),
+        PlacementKind::HashSlotPinned => Box::new(HashSlotPinned::new()),
+        PlacementKind::SlabPartition => Box::new(SlabPartition::new()),
+    }
+}
+
+/// Today's behavior: every tenant routes through the shared slot map.
+pub struct SharedPlacement;
+
+impl PlacementPolicy for SharedPlacement {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::Shared
+    }
+
+    #[inline]
+    fn route(&self, _tenant: TenantId, _slot: u32, shared_owner: usize, _n: usize) -> usize {
+        shared_owner
+    }
+
+    fn on_grants(&mut self, _grants: &[TenantGrant], _n: usize, _instance_bytes: u64) {}
+}
+
+/// Each tenant owns an instance subset sized from its grant
+/// (`ceil(granted / S_p)`, clamped to `[1, n]`); its keys hash over that
+/// subset only, so another tenant's insert storm cannot churn its
+/// instances. Recomputation keeps existing pins (minimal churn), moves a
+/// tenant found squatting on a higher-priority tenant's instance to a
+/// free one when possible (the priority tenant's warm residents stay
+/// put), and grows onto free instances only — a tenant never overlaps an
+/// occupied instance while it holds at least one pin of its own.
+pub struct HashSlotPinned {
+    /// tenant id → pinned instance indices (empty = not pinned yet,
+    /// routes shared).
+    pins: Vec<Vec<u32>>,
+}
+
+impl HashSlotPinned {
+    pub fn new() -> Self {
+        HashSlotPinned { pins: Vec::new() }
+    }
+
+    fn pins_slot(&mut self, tenant: TenantId) -> &mut Vec<u32> {
+        let id = tenant as usize;
+        if self.pins.len() <= id {
+            self.pins.resize_with(id + 1, Vec::new);
+        }
+        &mut self.pins[id]
+    }
+}
+
+impl Default for HashSlotPinned {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementPolicy for HashSlotPinned {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::HashSlotPinned
+    }
+
+    #[inline]
+    fn route(&self, tenant: TenantId, slot: u32, shared_owner: usize, n: usize) -> usize {
+        match self.pins.get(tenant as usize) {
+            Some(pins) if !pins.is_empty() => {
+                let i = pins[slot as usize % pins.len()] as usize;
+                if i < n {
+                    i
+                } else {
+                    shared_owner
+                }
+            }
+            // Unpinned tenants (pre-first-epoch, or strays the arbiter
+            // has not granted yet) keep the shared routing.
+            _ => shared_owner,
+        }
+    }
+
+    fn on_grants(&mut self, grants: &[TenantGrant], n: usize, instance_bytes: u64) {
+        if n == 0 || grants.is_empty() {
+            return;
+        }
+        // Prune pins onto instances a shrink removed.
+        for pins in &mut self.pins {
+            pins.retain(|&i| (i as usize) < n);
+        }
+        // usage[i] = tenants currently pinned to instance i (all tenants,
+        // stale ones included — their residents are still there).
+        let mut usage = vec![0u32; n];
+        for pins in &self.pins {
+            for &i in pins {
+                usage[i as usize] += 1;
+            }
+        }
+        // Reservation-priority order: reserved desc, granted desc, id asc
+        // — the squeeze (fewer pins than the grant justifies) lands on
+        // the tenants with the weakest claims.
+        let mut order: Vec<usize> = (0..grants.len()).collect();
+        order.sort_by(|&a, &b| {
+            grants[b]
+                .reserved_bytes
+                .cmp(&grants[a].reserved_bytes)
+                .then(grants[b].granted_bytes.cmp(&grants[a].granted_bytes))
+                .then(grants[a].tenant.cmp(&grants[b].tenant))
+        });
+        let s = instance_bytes.max(1);
+        // Instances already claimed by a higher-priority tenant this
+        // round: a later tenant found squatting on one migrates away (to
+        // a free instance, if any) — the priority tenant keeps its warm
+        // instances; the intruder eats the move.
+        let mut claimed = vec![false; n];
+        for gi in order {
+            let g = &grants[gi];
+            let k = (g.granted_bytes.div_ceil(s)).clamp(1, n as u64) as usize;
+            let pins = self.pins_slot(g.tenant);
+            // Shrink: drop the most recently added pins first.
+            while pins.len() > k {
+                let dropped = pins.pop().unwrap();
+                usage[dropped as usize] -= 1;
+            }
+            // Migrate off instances a higher-priority tenant claimed.
+            for slot in pins.iter_mut() {
+                if claimed[*slot as usize] {
+                    if let Some(free) = (0..n).find(|&j| usage[j] == 0) {
+                        usage[*slot as usize] -= 1;
+                        usage[free] += 1;
+                        *slot = free as u32;
+                    }
+                }
+            }
+            // Grow onto free instances; never overlap while we own ≥ 1.
+            while pins.len() < k {
+                let mut best: Option<usize> = None;
+                for j in 0..n {
+                    if pins.contains(&(j as u32)) {
+                        continue;
+                    }
+                    match best {
+                        Some(b) if (usage[j], j) >= (usage[b], b) => {}
+                        _ => best = Some(j),
+                    }
+                }
+                let Some(j) = best else { break };
+                if usage[j] > 0 && !pins.is_empty() {
+                    break;
+                }
+                pins.push(j as u32);
+                usage[j] += 1;
+            }
+            for &p in pins.iter() {
+                claimed[p as usize] = true;
+            }
+        }
+    }
+
+    fn pins(&self, tenant: TenantId) -> Option<&[u32]> {
+        self.pins.get(tenant as usize).map(|v| v.as_slice())
+    }
+}
+
+/// Memshare-style partitions inside every instance: routing stays shared,
+/// but each instance protects, per tenant, a byte floor
+/// `min(reserved, granted) / n` (scaled down proportionally if the floors
+/// alone oversubscribe the instance). A tenant at or under its floor is
+/// immune to cross-tenant eviction; everything above the floors is the
+/// pooled remainder, evictable by anyone in LRU order.
+pub struct SlabPartition {
+    /// Per-instance protected floors, recomputed each epoch.
+    floors: Vec<(TenantId, u64)>,
+}
+
+impl SlabPartition {
+    pub fn new() -> Self {
+        SlabPartition { floors: Vec::new() }
+    }
+}
+
+impl Default for SlabPartition {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementPolicy for SlabPartition {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::SlabPartition
+    }
+
+    #[inline]
+    fn route(&self, _tenant: TenantId, _slot: u32, shared_owner: usize, _n: usize) -> usize {
+        shared_owner
+    }
+
+    fn on_grants(&mut self, grants: &[TenantGrant], n: usize, instance_bytes: u64) {
+        self.floors.clear();
+        if n == 0 {
+            return;
+        }
+        let n64 = n as u64;
+        let raw: Vec<(TenantId, u64)> = grants
+            .iter()
+            .map(|g| (g.tenant, g.reserved_bytes.min(g.granted_bytes) / n64))
+            .collect();
+        // Keep Σ floors within ~90% of the instance so a pooled remainder
+        // always exists (Memshare's pooled memory must not collapse to 0).
+        let budget = instance_bytes - instance_bytes / 10;
+        let total: u64 = raw.iter().map(|&(_, f)| f).sum();
+        let scale = if total > budget && total > 0 {
+            budget as f64 / total as f64
+        } else {
+            1.0
+        };
+        for (t, f) in raw {
+            let f = (f as f64 * scale) as u64;
+            if f > 0 {
+                self.floors.push((t, f));
+            }
+        }
+    }
+
+    fn instance_floors(&self) -> Option<&[(TenantId, u64)]> {
+        // Always `Some`, even when empty: an epoch whose grants justify
+        // no floors must still clear the previous epoch's floors.
+        Some(&self.floors)
+    }
+}
+
+/// Fold a scoped object id to a hash slot — re-exported convenience for
+/// standalone placement tests (mirrors `Cluster::slot_of`).
+#[inline]
+pub fn slot_of(obj: ObjectId, hash_slots: u32) -> u32 {
+    (crate::mix64(obj) % hash_slots as u64) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grants(rows: &[(u16, u64, u64)]) -> Vec<TenantGrant> {
+        rows.iter()
+            .map(|&(tenant, granted_bytes, reserved_bytes)| TenantGrant {
+                tenant,
+                granted_bytes,
+                reserved_bytes,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kind_round_trip() {
+        for k in [
+            PlacementKind::Shared,
+            PlacementKind::HashSlotPinned,
+            PlacementKind::SlabPartition,
+        ] {
+            assert_eq!(PlacementKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(PlacementKind::parse("nope").is_err());
+        assert_eq!(PlacementKind::default(), PlacementKind::Shared);
+    }
+
+    #[test]
+    fn shared_routes_to_slot_owner() {
+        let p = make_placement(PlacementKind::Shared);
+        assert_eq!(p.kind(), PlacementKind::Shared);
+        for slot in 0..100u32 {
+            assert_eq!(p.route(3, slot, 7, 8), 7);
+        }
+        assert!(p.instance_floors().is_none());
+        assert!(p.pins(0).is_none());
+    }
+
+    #[test]
+    fn pinned_sizes_subsets_from_grants_without_overlap() {
+        let mut p = HashSlotPinned::new();
+        let s = 100u64;
+        // gold: 3 instances worth; flood: wants 4 but only 3 stay free.
+        p.on_grants(&grants(&[(0, 300, 300), (1, 400, 100)]), 6, s);
+        let gold: Vec<u32> = p.pins(0).unwrap().to_vec();
+        let flood: Vec<u32> = p.pins(1).unwrap().to_vec();
+        assert_eq!(gold.len(), 3, "{gold:?}");
+        assert_eq!(flood.len(), 3, "{flood:?}");
+        assert!(gold.iter().all(|i| !flood.contains(i)), "{gold:?} vs {flood:?}");
+        // Routing stays inside the pinned subset, deterministically.
+        for slot in 0..1000u32 {
+            let r = p.route(0, slot, 5, 6) as u32;
+            assert!(gold.contains(&r), "slot {slot} routed to {r}");
+            assert_eq!(r as usize, p.route(0, slot, 5, 6));
+        }
+        // Unpinned strays keep the shared owner.
+        assert_eq!(p.route(9, 42, 5, 6), 5);
+    }
+
+    #[test]
+    fn pinned_recompute_has_minimal_churn() {
+        let mut p = HashSlotPinned::new();
+        let s = 100u64;
+        p.on_grants(&grants(&[(0, 300, 300)]), 6, s);
+        let before: Vec<u32> = p.pins(0).unwrap().to_vec();
+        // Same grants → identical pins.
+        p.on_grants(&grants(&[(0, 300, 300)]), 6, s);
+        assert_eq!(p.pins(0).unwrap(), &before[..]);
+        // Growth keeps the old pins as a prefix.
+        p.on_grants(&grants(&[(0, 500, 300)]), 6, s);
+        let grown = p.pins(0).unwrap();
+        assert_eq!(&grown[..3], &before[..]);
+        assert_eq!(grown.len(), 5);
+        // Shrink drops the most recently added pins.
+        p.on_grants(&grants(&[(0, 200, 200)]), 6, s);
+        assert_eq!(p.pins(0).unwrap(), &before[..2]);
+    }
+
+    #[test]
+    fn pinned_migration_moves_the_intruder_not_the_priority_tenant() {
+        let mut p = HashSlotPinned::new();
+        let s = 100u64;
+        // n=2, no free instance: gold takes both, the flood squats on one
+        // (unavoidable overlap — a pinless tenant takes the least-used).
+        p.on_grants(&grants(&[(0, 200, 200), (1, 100, 50)]), 2, s);
+        let gold: Vec<u32> = p.pins(0).unwrap().to_vec();
+        assert_eq!(gold.len(), 2);
+        assert_eq!(p.pins(1).unwrap().len(), 1);
+        // The cluster grows: the *flood* must migrate to the fresh
+        // instance — the gold tenant keeps its warm residents in place.
+        p.on_grants(&grants(&[(0, 200, 200), (1, 100, 50)]), 4, s);
+        assert_eq!(p.pins(0).unwrap(), &gold[..], "gold keeps its warm instances");
+        let flood = p.pins(1).unwrap();
+        assert_eq!(flood.len(), 1);
+        assert!(!gold.contains(&flood[0]), "the intruder migrated off gold: {flood:?}");
+    }
+
+    #[test]
+    fn pinned_prunes_after_cluster_shrink() {
+        let mut p = HashSlotPinned::new();
+        p.on_grants(&grants(&[(0, 600, 600)]), 6, 100);
+        assert_eq!(p.pins(0).unwrap().len(), 6);
+        // The cluster shrank to 2 instances: stale pins must go, and the
+        // route must never leave the live range.
+        p.on_grants(&grants(&[(0, 600, 600)]), 2, 100);
+        let pins = p.pins(0).unwrap();
+        assert_eq!(pins.len(), 2);
+        assert!(pins.iter().all(|&i| i < 2));
+        for slot in 0..100u32 {
+            assert!(p.route(0, slot, 0, 2) < 2);
+        }
+    }
+
+    #[test]
+    fn partition_floors_honor_reservations_and_leave_pool() {
+        let mut p = SlabPartition::new();
+        // Routing is shared.
+        assert_eq!(p.route(1, 9, 4, 6), 4);
+        p.on_grants(&grants(&[(0, 600, 300), (1, 600, 0)]), 3, 1000);
+        let floors = p.instance_floors().unwrap();
+        // floor = min(reserved, granted)/n; unreserved tenants get none.
+        assert_eq!(floors, &[(0, 100)]);
+        // Oversubscribed floors scale down to leave a pooled remainder.
+        let mut p = SlabPartition::new();
+        p.on_grants(&grants(&[(0, 3000, 3000), (1, 3000, 3000)]), 1, 1000);
+        let floors = p.instance_floors().unwrap();
+        let total: u64 = floors.iter().map(|&(_, f)| f).sum();
+        assert!(total <= 900, "floors {floors:?} must leave ≥10% pooled");
+        assert_eq!(floors.len(), 2);
+        // No grants → an *empty* floor set (still Some: stale floors from
+        // the previous epoch must be cleared, not left in force).
+        p.on_grants(&grants(&[]), 3, 1000);
+        assert!(p.instance_floors().unwrap().is_empty());
+    }
+}

@@ -52,6 +52,14 @@ pub trait EpochSizer {
     /// shadow work to the right per-tenant controller.
     fn on_request(&mut self, req: &Request) -> PolicyWork;
 
+    /// Physical-occupancy feedback: the balancer reports the requesting
+    /// tenant's current resident bytes (the cluster ledger row)
+    /// immediately before each `on_request`, so resident-byte-binding
+    /// policies ([`crate::tenant::TenantTtlSizer`] under
+    /// `scaler.enforce_grants`) can compare occupancy against the cap in
+    /// O(1). Default: ignored.
+    fn note_physical(&mut self, _tenant: TenantId, _resident_bytes: u64) {}
+
     /// Called after the request was physically served, with the physical
     /// outcome and the [`PolicyWork`] this request's `on_request`
     /// returned (admission verdict + shadow outcome). SLO-aware policies

@@ -8,20 +8,32 @@
 //! GET <key> <size>\n          -> HIT | MISS | SPURIOUS\n
 //! GET <tenant>/<key> <size>\n -> HIT | MISS | SPURIOUS\n   (tenant ∈ 0..65535)
 //! STATS\n                     -> one-line JSON, global counters\n
-//! STATS <tenant>\n            -> one-line JSON, that tenant's counters\n
+//! STATS <tenant>\n            -> one-line JSON, that tenant's counters
+//!                                (incl. `physical_bytes`, the tenant's
+//!                                resident bytes in the placement ledger)\n
 //! SLO <tenant>\n              -> one-line JSON, that tenant's enforcement
 //!                                state (grant, occupancy cap, TTL clamp,
 //!                                measured vs target miss ratio, priority
 //!                                boost, denied admissions); `ERR` when the
 //!                                policy does not arbitrate tenants
+//! PLACEMENT\n                 -> one-line JSON: the placement policy
+//!                                (`[placement]` config section) plus every
+//!                                active tenant's resident bytes and — for
+//!                                hash_slot_pinned — its instance pins
 //! EPOCH\n                     -> RESIZED <n>\n      (forces an epoch boundary)
 //! QUIT\n                      -> BYE\n (closes the connection)
 //! ```
 //!
 //! `SLO` reads the live enforcement loop (`scaler.enforce_grants` plus
 //! `[tenantN] reserved_mb` / `slo_miss_ratio` in the config): the epoch
-//! decision that `EPOCH` forces is the moment grants become caps/clamps,
-//! and `SLO` is how an operator watches them bind.
+//! decision that `EPOCH` forces is the moment grants become caps (binding
+//! on physical resident bytes, with over-cap tenants shed at the
+//! boundary) and TTL clamps, and `SLO` is how an operator watches them
+//! bind. `PLACEMENT` is the physical view: who actually holds how many
+//! bytes, and where (`shared` spreads every tenant over the slot map;
+//! `hash_slot_pinned` confines each tenant to the listed pins;
+//! `slab_partition` keeps Memshare-style reserved floors inside every
+//! instance).
 //!
 //! Tenant-prefix parsing is enabled only when the server is tenant-aware
 //! (a `[tenantN]` roster in the config, or the `tenant_ttl` policy) — a
@@ -123,7 +135,8 @@ impl ServerState {
             }
             Some("STATS") => match parts.next() {
                 None => Some(format!(
-                    "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
+                    "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\
+                     \"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
                     self.engine.requests(),
                     self.engine.misses(),
                     self.engine.spurious_misses(),
@@ -147,6 +160,7 @@ impl ServerState {
                     Err(_) => Some(format!("ERR bad tenant {t}")),
                 },
             },
+            Some("PLACEMENT") => Some(self.placement_line()),
             Some("EPOCH") => {
                 let n = self.engine.force_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
@@ -204,12 +218,47 @@ impl ServerState {
             .map(|(_, t)| format!("{t:.3}"))
             .unwrap_or_else(|| "null".into());
         format!(
-            "{{\"tenant\":{},\"requests\":{},\"misses\":{},\"miss_cost\":{:.9},\"ttl_secs\":{}}}",
+            "{{\"tenant\":{},\"requests\":{},\"misses\":{},\"miss_cost\":{:.9},\
+             \"physical_bytes\":{},\"ttl_secs\":{}}}",
             tenant,
             hm.total(),
             hm.misses,
             ledger.miss_dollars,
+            self.engine.tenant_physical_bytes(tenant),
             ttl,
+        )
+    }
+
+    /// One-line JSON for `PLACEMENT`: the physical placement state.
+    fn placement_line(&self) -> String {
+        let Some(snap) = self.engine.placement_snapshot() else {
+            return format!(
+                "ERR no placement (policy {} runs no cluster)",
+                self.engine.policy_name()
+            );
+        };
+        let mut tenants = String::new();
+        for (i, row) in snap.tenants.iter().enumerate() {
+            if i > 0 {
+                tenants.push(',');
+            }
+            let pins = match &row.pins {
+                Some(p) => format!(
+                    "[{}]",
+                    p.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+                ),
+                None => "null".to_string(),
+            };
+            tenants.push_str(&format!(
+                "{{\"tenant\":{},\"physical_bytes\":{},\"pins\":{}}}",
+                row.tenant, row.resident_bytes, pins
+            ));
+        }
+        format!(
+            "{{\"policy\":\"{}\",\"instances\":{},\"tenants\":[{}]}}",
+            snap.policy.as_str(),
+            self.engine.instances(),
+            tenants
         )
     }
 }
@@ -476,6 +525,35 @@ mod tests {
         assert!(st.handle_line("SLO nope").unwrap().starts_with("ERR"));
         let mut plain = state(PolicyKind::Ttl);
         assert!(plain.handle_line("SLO 0").unwrap().starts_with("ERR"));
+    }
+
+    #[test]
+    fn placement_command_reports_physical_state() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.cluster.placement = crate::placement::PlacementKind::HashSlotPinned;
+        cfg.tenants = vec![
+            TenantSpec::new(1, "api").with_multiplier(2.0),
+            TenantSpec::new(2, "batch"),
+        ];
+        let mut st = ServerState::new(&cfg);
+        st.handle_line("GET 1/k1 1000");
+        let p = st.handle_line("PLACEMENT").unwrap();
+        assert!(p.contains("\"policy\":\"hash_slot_pinned\""), "{p}");
+        assert!(p.contains("\"tenant\":1"), "{p}");
+        assert!(p.contains("\"physical_bytes\":1000"), "{p}");
+        assert!(p.contains("\"pins\":null"), "no pins before the first epoch: {p}");
+        // The epoch decision turns grants into pins.
+        st.handle_line("EPOCH");
+        let p = st.handle_line("PLACEMENT").unwrap();
+        assert!(p.contains("\"pins\":["), "pins after the epoch decision: {p}");
+        // STATS <tenant> carries the same ledger row.
+        let s = st.handle_line("STATS 1").unwrap();
+        assert!(s.contains("\"physical_bytes\":1000"), "{s}");
+        let s = st.handle_line("STATS 2").unwrap();
+        assert!(s.contains("\"physical_bytes\":0"), "{s}");
+        // The vertical mode runs no cluster.
+        let mut v = state(PolicyKind::IdealTtl);
+        assert!(v.handle_line("PLACEMENT").unwrap().starts_with("ERR"));
     }
 
     #[test]

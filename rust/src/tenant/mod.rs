@@ -24,11 +24,16 @@
 //! * **Grant enforcement** (`scaler.enforce_grants`) — the arbiter's
 //!   `granted_bytes` are *binding*, closed-loop, not merely reported:
 //!   each epoch every grant (which already contains the tenant's reserved
-//!   floor) becomes (a) a per-tenant **occupancy cap** enforced on the
-//!   balancer's admission path as a per-epoch admission byte budget for
-//!   bytes outside the tenant's virtual (affordable) set (a constant-time
-//!   compare per request — Carlsson & Eager's elastic insertion-policy
-//!   bound), and
+//!   floor) becomes (a) a per-tenant **occupancy cap that binds on
+//!   physical resident bytes**: the balancer feeds each tenant's cluster
+//!   ledger row ([`EpochSizer::note_physical`]) and an insert is admitted
+//!   only while `resident + size ≤ cap` (a constant-time compare per
+//!   request); re-admissions of the tenant's virtually-resident set stay
+//!   exempt (repair traffic its grant already covers), and a tenant found
+//!   *over* its cap at an epoch boundary is brought back under it by
+//!   **targeted shedding** of its own coldest entries
+//!   ([`crate::cluster::Cluster::shed_tenant`]) rather than by refusing
+//!   repair admissions; and
 //!   (b) a per-tenant **TTL clamp**: a tenant whose controller wants more
 //!   memory than its grant has its timer projected onto
 //!   `[T_min, T · granted/demand]`, so it converges to the largest
@@ -43,9 +48,12 @@
 //!   update (and admission verdict) through it via the request's tenant
 //!   id, and feeds physical outcomes back for the SLO tracker.
 //!
-//! Physical placement stays tenant-agnostic: the balancer routes on
-//! `(tenant, key)` by folding the tenant into the hash-slot key
-//! ([`scoped_object`]), so tenants share instances but never collide.
+//! Physical placement lives in [`crate::placement`]: by default the
+//! balancer routes on `(tenant, key)` by folding the tenant into the
+//! hash-slot key ([`scoped_object`]), so tenants share instances but
+//! never collide; the `hash_slot_pinned` and `slab_partition` policies
+//! additionally confine tenants to instance subsets or Memshare-style
+//! per-instance byte partitions sized from this module's grants.
 
 use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
 use crate::scaler::{EpochSizer, PolicyWork};
@@ -288,12 +296,16 @@ struct TenantSlot {
     id: TenantId,
     vc: VirtualCache,
     slo: SloState,
-    /// Occupancy cap in force = the per-epoch admission byte budget (the
+    /// Occupancy cap in force, bytes of *physical residency* (the
     /// tenant's `granted_bytes`, which already contains its reserved
     /// floor); `u64::MAX` before the first epoch decision or when
     /// enforcement is off.
     cap_bytes: u64,
-    /// Physical bytes admitted (inserted on miss) during the open epoch.
+    /// Physical resident bytes, as last reported by the balancer
+    /// ([`EpochSizer::note_physical`] mirrors the cluster ledger row).
+    physical_bytes: u64,
+    /// Bytes admitted (inserted on miss, outside the shadow set) during
+    /// the open epoch — diagnostic insert-volume counter.
     epoch_admitted_bytes: u64,
     /// Cumulative admissions refused by the cap.
     denied: u64,
@@ -317,9 +329,14 @@ pub struct TenantEnforcement {
     pub decided: bool,
     /// Whether grants are binding (`scaler.enforce_grants`).
     pub enforced: bool,
-    /// Occupancy cap / per-epoch admission byte budget in force.
+    /// Occupancy cap in force, binding on physical resident bytes.
     pub cap_bytes: Option<u64>,
-    /// Bytes admitted against the budget in the open epoch.
+    /// Memshare-style reserved floor from the tenant's spec.
+    pub reserved_bytes: u64,
+    /// Physical resident bytes as last reported by the balancer (the
+    /// cluster ledger row feeding the cap comparison).
+    pub physical_bytes: u64,
+    /// Bytes admitted (inserted outside the shadow set) in the open epoch.
     pub admitted_epoch_bytes: u64,
     /// Cumulative admissions refused by the cap.
     pub denied_admissions: u64,
@@ -395,6 +412,7 @@ impl ControllerBank {
             vc,
             slo: SloState::new(spec.slo_miss_ratio),
             cap_bytes: u64::MAX,
+            physical_bytes: 0,
             epoch_admitted_bytes: 0,
             denied: 0,
             last_demand: 0,
@@ -468,12 +486,12 @@ impl ControllerBank {
     }
 
     /// Record a served request's physical outcome: SLO measurement, and —
-    /// on *budget-gated* admitted misses — budget consumption. Shadow-hit
+    /// on admitted misses outside the shadow set — the epoch's admitted
+    /// insert volume (diagnostic; the binding bound is the physical
+    /// resident-byte cap checked in `on_request`). Shadow-hit
     /// re-admissions are repair traffic already counted by the demand
-    /// estimator that produced the grant, so they are exempt — which also
-    /// keeps `admitted_epoch_bytes ≤ cap_bytes` an invariant (every
-    /// charge passed the cap check in `on_request`). Denials that
-    /// suppressed an insert (`!hit && !admitted`) are counted.
+    /// estimator that produced the grant, so they are exempt. Denials
+    /// that suppressed an insert (`!hit && !admitted`) are counted.
     #[inline]
     fn record_served(
         &mut self,
@@ -557,6 +575,8 @@ impl ControllerBank {
                 decided: s.decided,
                 enforced: enforce,
                 cap_bytes: if s.cap_bytes == u64::MAX { None } else { Some(s.cap_bytes) },
+                reserved_bytes: self.registry.reserved_bytes(s.id),
+                physical_bytes: s.physical_bytes,
                 admitted_epoch_bytes: s.epoch_admitted_bytes,
                 denied_admissions: s.denied,
                 ttl_clamp_secs: s.vc.ttl_cap_secs(),
@@ -767,13 +787,16 @@ impl EpochSizer for TenantTtlSizer {
         let slot = self.bank.slot_mut(req.tenant);
         let out = slot.vc.on_request(req.ts, req.obj, req.size_bytes());
         // Admission verdict, O(1): objects inside the tenant's virtual
-        // (affordable) set always re-admit; everything else must fit the
-        // epoch's remaining byte budget. With enforcement off the verdict
-        // is unconditionally yes and no budget state is touched.
+        // (affordable) set always re-admit (repair traffic); everything
+        // else must fit the tenant's physical occupancy cap — the insert
+        // is admitted only while `resident + size ≤ cap`, where resident
+        // is the cluster ledger row the balancer reported via
+        // `note_physical`. With enforcement off the verdict is
+        // unconditionally yes and no enforcement state is touched.
         let admit = !enforce
             || out.hit
             || slot.cap_bytes == u64::MAX
-            || slot.epoch_admitted_bytes.saturating_add(req.size_bytes()) <= slot.cap_bytes;
+            || slot.physical_bytes.saturating_add(req.size_bytes()) <= slot.cap_bytes;
         // hash + route (1) + bank dispatch (1) + vcache list ops (≈2):
         // constant, one unit over the single-tenant TTL path; the
         // enforcement compare adds one more constant unit.
@@ -782,6 +805,13 @@ impl EpochSizer for TenantTtlSizer {
             shadow_hit: Some(out.hit),
             admit,
         }
+    }
+
+    fn note_physical(&mut self, tenant: TenantId, resident_bytes: u64) {
+        if !self.enforce {
+            return;
+        }
+        self.bank.slot_mut(tenant).physical_bytes = resident_bytes;
     }
 
     fn on_served(&mut self, req: &Request, hit: bool, work: &PolicyWork) {
@@ -1159,26 +1189,36 @@ mod tests {
         assert_eq!(gold.granted_bytes, gold.demand_bytes, "{gold:?}");
         assert!(bulk.granted_bytes < bulk.demand_bytes, "{bulk:?}");
         assert_eq!(bulk.cap_bytes, Some(bulk.granted_bytes));
+        let bulk_cap = bulk.granted_bytes;
         let clamp = bulk.ttl_clamp_secs.expect("squeezed tenant must be clamped");
         assert!(clamp < 3600.0, "clamp {clamp}");
         assert_eq!(gold.ttl_clamp_secs, None, "full grant leaves gold unclamped");
-        // Bulk's next-epoch insertions stop at the budget; gold admits on.
-        let mut denied = 0;
-        for i in 0..30u64 {
-            let r = Request::new(41 * SECOND + i, 900 + i, 100_000).with_tenant(1);
-            let w = s.on_request(&r);
-            if !w.admit {
-                denied += 1;
-            }
-            s.on_served(&r, false, &w);
-        }
-        assert!(denied > 0, "over-budget inserts must be refused");
+        // The cap binds on *physical residency*: the balancer reports the
+        // cluster ledger row via note_physical and fresh inserts admit
+        // only while resident + size ≤ cap.
+        s.note_physical(1, bulk_cap); // at the cap: fresh insert refused
+        let r = Request::new(41 * SECOND, 2000, 100_000).with_tenant(1);
+        let w = s.on_request(&r);
+        assert!(!w.admit, "insert past the resident cap must be refused");
+        s.on_served(&r, false, &w);
+        s.note_physical(1, bulk_cap.saturating_sub(200_000)); // room again
+        let r = Request::new(41 * SECOND + 1, 2001, 100_000).with_tenant(1);
+        assert!(s.on_request(&r).admit, "insert fitting the cap admits");
+        // Repair traffic is exempt even over the cap: an object inside
+        // bulk's virtual set re-admits regardless of residency.
+        s.note_physical(1, bulk_cap + 500_000);
+        let r = Request::new(41 * SECOND + 2, 500, 100_000).with_tenant(1);
+        let w = s.on_request(&r);
+        assert_eq!(w.shadow_hit, Some(true), "precondition: in the shadow set");
+        assert!(w.admit, "repair traffic must stay exempt");
+        // Gold, resident within its grant, keeps admitting.
+        s.note_physical(0, gold.granted_bytes.saturating_sub(100_000));
         let r = Request::new(42 * SECOND, 4242, 100_000);
         assert!(s.on_request(&r).admit, "gold stays within its grant");
         let rows = s.enforcement().unwrap();
         let bulk = rows.iter().find(|r| r.tenant == 1).unwrap();
-        assert_eq!(bulk.denied_admissions, denied);
-        assert!(bulk.admitted_epoch_bytes <= bulk.cap_bytes.unwrap());
+        assert_eq!(bulk.denied_admissions, 1, "{bulk:?}");
+        assert_eq!(bulk.physical_bytes, bulk_cap + 500_000, "ledger mirror");
         // SLO bookkeeping: gold's all-miss warmup epoch violated its 0.5
         // target, so the first decision already escalated its priority.
         let gold = rows.iter().find(|r| r.tenant == 0).unwrap();

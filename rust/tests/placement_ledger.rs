@@ -1,0 +1,144 @@
+//! Property suite for the physical placement subsystem: under randomized
+//! insert / evict / shed / resize / grant sequences, across all three
+//! placement policies and all three eviction kinds, the cluster's
+//! per-tenant resident ledger must stay *exact*:
+//!
+//! * `Σ per-tenant ledger rows == Cluster::used()` (the tentpole
+//!   invariant — eviction callbacks reported every byte), and
+//! * every instance's per-tenant store tallies partition that instance's
+//!   `used()` (the ledger's per-node counterpart).
+//!
+//! Underflow is caught two ways: the ledger's `debug_assert` fires inside
+//! the test profile, and any silent saturation would break the Σ == used
+//! equality on the next check.
+
+use elastictl::cluster::Cluster;
+use elastictl::config::{ClusterConfig, EvictionKind};
+use elastictl::placement::{PlacementKind, TenantGrant};
+use elastictl::util::proptest::check;
+use elastictl::util::rng::Pcg;
+use elastictl::TenantId;
+
+const TENANTS: u16 = 5;
+const INSTANCE_BYTES: u64 = 100_000;
+
+fn ledger_invariants(c: &Cluster, ctx: &str) {
+    assert_eq!(
+        c.ledger_residents(),
+        c.used(),
+        "Σ ledger != used() after {ctx}"
+    );
+    let per_tenant: u64 = (0..TENANTS).map(|t| c.tenant_resident_bytes(t)).sum();
+    assert_eq!(per_tenant, c.used(), "tenant rows don't partition used() after {ctx}");
+    for inst in c.instances() {
+        let tallies: u64 = (0..TENANTS).map(|t| inst.tenant_bytes_of(t)).sum();
+        assert_eq!(
+            tallies,
+            inst.used(),
+            "instance {} tallies don't partition its used() after {ctx}",
+            inst.id
+        );
+    }
+}
+
+fn random_grants(rng: &mut Pcg) -> Vec<TenantGrant> {
+    (0..TENANTS)
+        .map(|tenant| {
+            let granted_bytes = rng.below(4 * INSTANCE_BYTES);
+            let reserved_bytes = if rng.chance(0.5) { rng.below(granted_bytes.max(1)) } else { 0 };
+            TenantGrant { tenant, granted_bytes, reserved_bytes }
+        })
+        .collect()
+}
+
+fn exercise(placement: PlacementKind, eviction: EvictionKind, base_seed: u64) {
+    let name = format!("ledger_{}_{}", placement.as_str(), eviction.as_str());
+    check(&name, base_seed, |rng| {
+        let mut cfg = ClusterConfig::default();
+        cfg.placement = placement;
+        cfg.eviction = eviction;
+        cfg.seed = rng.next_u64();
+        let mut c = Cluster::new(&cfg, INSTANCE_BYTES, 1 + rng.below(4) as u32);
+        ledger_invariants(&c, "construction");
+        for op in 0..300 {
+            let roll = rng.f64();
+            let ctx;
+            if roll < 0.72 {
+                // The hot path: tenant-tagged serve (inserts + evictions).
+                let tenant = rng.below(TENANTS as u64) as TenantId;
+                let obj = rng.below(400);
+                let size = 1 + rng.below(INSTANCE_BYTES / 3);
+                c.serve_for(tenant, obj, size);
+                ctx = "serve_for";
+            } else if roll < 0.80 {
+                // Denied admission: lookup only, never touches the ledger.
+                let before = c.ledger_residents();
+                c.serve_no_insert_for(rng.below(TENANTS as u64) as TenantId, rng.below(400));
+                assert_eq!(c.ledger_residents(), before, "no-insert touched the ledger");
+                ctx = "serve_no_insert_for";
+            } else if roll < 0.88 {
+                // Occupancy-cap shedding.
+                let tenant = rng.below(TENANTS as u64) as TenantId;
+                let cap = rng.below(2 * INSTANCE_BYTES);
+                let before = c.tenant_resident_bytes(tenant);
+                let freed = c.shed_tenant(tenant, cap);
+                assert_eq!(c.tenant_resident_bytes(tenant), before - freed);
+                assert!(c.tenant_resident_bytes(tenant) <= cap, "shed must reach the cap");
+                ctx = "shed_tenant";
+            } else if roll < 0.94 {
+                // Epoch-style grant application (re-pin / re-floor).
+                let grants = random_grants(rng);
+                c.apply_grants(&grants);
+                ctx = "apply_grants";
+            } else {
+                // Elastic resize, growing and shrinking.
+                c.resize(1 + rng.below(5) as u32);
+                ctx = "resize";
+            }
+            if op % 10 == 9 || ctx != "serve_for" {
+                ledger_invariants(&c, ctx);
+            }
+        }
+        ledger_invariants(&c, "final");
+    });
+}
+
+#[test]
+fn prop_ledger_partitions_used_shared() {
+    exercise(PlacementKind::Shared, EvictionKind::Lru, 0x1ED6E1);
+}
+
+#[test]
+fn prop_ledger_partitions_used_shared_sampled() {
+    exercise(PlacementKind::Shared, EvictionKind::SampledLru, 0x1ED6E2);
+}
+
+#[test]
+fn prop_ledger_partitions_used_shared_slab() {
+    exercise(PlacementKind::Shared, EvictionKind::Slab, 0x1ED6E3);
+}
+
+#[test]
+fn prop_ledger_partitions_used_pinned() {
+    exercise(PlacementKind::HashSlotPinned, EvictionKind::Lru, 0x1ED6E4);
+}
+
+#[test]
+fn prop_ledger_partitions_used_pinned_sampled() {
+    exercise(PlacementKind::HashSlotPinned, EvictionKind::SampledLru, 0x1ED6E5);
+}
+
+#[test]
+fn prop_ledger_partitions_used_partition() {
+    exercise(PlacementKind::SlabPartition, EvictionKind::Lru, 0x1ED6E6);
+}
+
+#[test]
+fn prop_ledger_partitions_used_partition_sampled() {
+    exercise(PlacementKind::SlabPartition, EvictionKind::SampledLru, 0x1ED6E7);
+}
+
+#[test]
+fn prop_ledger_partitions_used_partition_slab() {
+    exercise(PlacementKind::SlabPartition, EvictionKind::Slab, 0x1ED6E8);
+}
