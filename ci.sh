@@ -50,4 +50,7 @@ cargo build $LOCKED --release
 echo "==> cargo test -q ${LOCKED:-unlocked}"
 cargo test $LOCKED -q
 
+echo "==> cargo doc --no-deps (-D warnings, ${LOCKED:-unlocked})"
+RUSTDOCFLAGS="-D warnings" cargo doc $LOCKED --no-deps
+
 echo "ci: all green"

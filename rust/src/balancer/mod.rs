@@ -143,9 +143,10 @@ impl Balancer {
 
     /// Epoch boundary: ask the policy for `I(k+1)`, resize, run the
     /// placement maintenance (re-pin / re-partition from the fresh
-    /// grants, then shed tenants past their binding occupancy caps), and
-    /// return the new size. The *ending* epoch is billed by the caller at
-    /// the size that was active (§2.3's synchronous billing).
+    /// grants, then shed tenants past their binding occupancy caps),
+    /// drain retiring tenants, and return the new size. The *ending*
+    /// epoch is billed by the caller at the size that was active (§2.3's
+    /// synchronous billing).
     pub fn end_epoch(&mut self, now: TimeUs) -> u32 {
         let target = self.sizer.decide(now);
         self.cluster.resize(target);
@@ -172,7 +173,55 @@ impl Balancer {
                 }
             }
         }
+        self.drain_retiring(now);
         self.cluster.len() as u32
+    }
+
+    /// Retirement drain: a draining tenant's placement state is released
+    /// and its whole ledger row shed (cap 0). Once the row reads zero
+    /// the policy transitions it to Retired and the engine reconciles
+    /// its bill. Not gated on `enforce_grants` — retiring must reclaim
+    /// memory even when grants are reporting-only. Runs at every epoch
+    /// boundary, and once more when the engine finishes so a retirement
+    /// landing in the final partial epoch still reconciles.
+    pub fn drain_retiring(&mut self, now: TimeUs) {
+        for t in self.sizer.draining() {
+            self.cluster.release_tenant(t);
+            self.cluster.shed_tenant(t, 0);
+            if self.cluster.tenant_resident_bytes(t) == 0 {
+                self.sizer.note_drained(t, now);
+            }
+        }
+    }
+
+    /// Admit (or update) a tenant mid-run (delegates to the policy).
+    pub fn admit_tenant(
+        &mut self,
+        spec: crate::tenant::TenantSpec,
+        now: TimeUs,
+    ) -> crate::Result<crate::tenant::AdmitOutcome> {
+        self.sizer.admit_tenant(spec, now)
+    }
+
+    /// Begin retiring a tenant mid-run (delegates to the policy).
+    pub fn retire_tenant(&mut self, tenant: TenantId, now: TimeUs) -> crate::Result<()> {
+        self.sizer.retire_tenant(tenant, now)
+    }
+
+    /// Tenants whose drain completed since the last call.
+    pub fn take_retired(&mut self) -> Vec<TenantId> {
+        self.sizer.take_retired()
+    }
+
+    /// Per-tenant lifecycle records, when the policy tracks them.
+    pub fn lifecycle(&self) -> Option<Vec<(TenantId, crate::tenant::Lifecycle)>> {
+        self.sizer.lifecycle()
+    }
+
+    /// The spec currently registered for `tenant`, when the policy keeps
+    /// a registry.
+    pub fn tenant_spec(&self, tenant: TenantId) -> Option<crate::tenant::TenantSpec> {
+        self.sizer.tenant_spec(tenant)
     }
 
     /// Overall miss ratio so far.

@@ -240,6 +240,19 @@ impl Cluster {
         }
     }
 
+    /// A tenant is retiring: release its placement state (pins, floors)
+    /// and re-install the remaining floors on every instance so the
+    /// departed tenant's protection is actually gone. Runs at epoch
+    /// boundaries as part of the drain; a no-op under `shared` placement.
+    pub fn release_tenant(&mut self, tenant: TenantId) {
+        self.placement.release(tenant);
+        if let Some(floors) = self.placement.instance_floors() {
+            for inst in &mut self.instances {
+                inst.set_tenant_floors(floors);
+            }
+        }
+    }
+
     /// Shed `tenant` down to `cap_bytes` resident: evict its coldest
     /// entries, instance by instance, until the ledger row fits the cap.
     /// Returns the bytes freed. Runs at epoch boundaries under grant

@@ -4,18 +4,78 @@
 //!
 //! Multi-tenant runs additionally keep one [`TenantLedger`] per tenant:
 //! misses are billed at `weight_t × m_o` (the tenant's miss-cost
-//! multiplier) and attributed to the requesting tenant, so fig10 can
-//! report who spent what on the shared cluster.
+//! multiplier) and attributed to the requesting tenant, and each epoch's
+//! storage bill is **attributed** across tenants in proportion to their
+//! physical resident bytes at the boundary ([`TenantEpochBill`]), so
+//! fig10/fig13 can report who spent what on the shared cluster.
+//!
+//! The attribution is **exact by construction**: the cluster's running
+//! totals are accumulated as the very same fold (epoch-major, tenant id
+//! ascending within each epoch) over the per-tenant bills that
+//! [`CostTracker::tenant_bills`] records, so
+//! `Σ per-epoch tenant bills == total cluster bill` holds bit-for-bit,
+//! not merely to within floating-point tolerance — the invariant the
+//! `tenant_churn` property suite pins even with tenants admitted and
+//! retired mid-run. Retiring a tenant closes its ledger through
+//! [`CostTracker::close_tenant`], which snapshots the final
+//! [`TenantReconciliation`].
 
 use crate::config::CostConfig;
 use crate::metrics::TimeSeries;
 use crate::{TenantId, TimeUs};
 
-/// Per-tenant slice of the miss bill.
+/// Per-tenant slice of the bill: misses attributed per request, storage
+/// attributed per epoch in proportion to resident bytes.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TenantLedger {
+    /// Cumulative misses by this tenant.
     pub misses: u64,
+    /// Cumulative weighted miss dollars (closed epochs + the open one).
     pub miss_dollars: f64,
+    /// Cumulative storage dollars attributed at epoch boundaries.
+    pub storage_dollars: f64,
+}
+
+impl TenantLedger {
+    /// The tenant's total bill so far.
+    pub fn total_dollars(&self) -> f64 {
+        self.storage_dollars + self.miss_dollars
+    }
+}
+
+/// One tenant's slice of one closed epoch's bill. The stream of these
+/// rows (epoch-major, tenant id ascending) *is* the cluster bill: the
+/// tracker's totals are accumulated as the fold over exactly these
+/// values, so their sum reproduces the total bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantEpochBill {
+    /// Epoch-close timestamp.
+    pub t: TimeUs,
+    /// The billed tenant.
+    pub tenant: TenantId,
+    /// Storage dollars attributed for the epoch (∝ resident bytes).
+    pub storage: f64,
+    /// Weighted miss dollars this tenant accrued within the epoch.
+    pub miss: f64,
+}
+
+/// Final bill of a retired tenant, snapshotted by
+/// [`CostTracker::close_tenant`] once its residents are fully drained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantReconciliation {
+    /// The retired tenant.
+    pub tenant: TenantId,
+    /// Time of the reconciliation (the drain-completion boundary).
+    pub at: TimeUs,
+    /// Lifetime misses.
+    pub misses: u64,
+    /// Lifetime weighted miss dollars.
+    pub miss_dollars: f64,
+    /// Lifetime attributed storage dollars.
+    pub storage_dollars: f64,
+    /// The closed bill: `storage_dollars + miss_dollars`, exactly the
+    /// fold of the tenant's [`TenantEpochBill`] rows.
+    pub total_dollars: f64,
 }
 
 /// Running cost ledger for one policy run.
@@ -30,12 +90,22 @@ pub struct CostTracker {
     epoch_miss: f64,
     /// Misses within the current epoch.
     epoch_miss_count: u64,
-    /// Per-tenant miss attribution, indexed by tenant id (grown on
-    /// demand; single-tenant runs only ever touch slot 0).
+    /// Per-tenant miss dollars accrued within the *open* epoch, indexed
+    /// by tenant id. Folded into the ledgers (and the cluster totals — the
+    /// same fold, so the attribution stays exact) at each epoch close.
+    epoch_tenant_miss: Vec<f64>,
+    /// Per-tenant attribution of closed epochs, indexed by tenant id
+    /// (grown on demand; single-tenant runs only ever touch slot 0).
     tenant_ledgers: Vec<TenantLedger>,
     /// Per-tenant miss-cost multipliers, indexed by tenant id (missing =
     /// 1.0).
     tenant_weights: Vec<f64>,
+    /// Every per-tenant epoch bill, in accumulation order (epoch-major,
+    /// tenant id ascending) — folding these reproduces the totals
+    /// bit-for-bit.
+    tenant_bills: Vec<TenantEpochBill>,
+    /// Closed bills of retired tenants.
+    reconciliations: Vec<TenantReconciliation>,
     /// Cumulative series sampled at epoch boundaries.
     pub storage_series: TimeSeries,
     pub miss_series: TimeSeries,
@@ -53,8 +123,11 @@ impl CostTracker {
             miss_total: 0.0,
             epoch_miss: 0.0,
             epoch_miss_count: 0,
+            epoch_tenant_miss: Vec::new(),
             tenant_ledgers: Vec::new(),
             tenant_weights: Vec::new(),
+            tenant_bills: Vec::new(),
+            reconciliations: Vec::new(),
             storage_series: TimeSeries::new("storage_cum"),
             miss_series: TimeSeries::new("miss_cum"),
             total_series: TimeSeries::new("total_cum"),
@@ -82,17 +155,34 @@ impl CostTracker {
         self.tenant_weights.get(t as usize).copied().unwrap_or(1.0)
     }
 
-    /// Tenant `t`'s cumulative miss attribution (zero if never seen).
+    /// Tenant `t`'s cumulative attribution (zero if never seen). Includes
+    /// the open epoch's miss accruals, so mid-run reads stay current.
     pub fn tenant_ledger(&self, t: TenantId) -> TenantLedger {
-        self.tenant_ledgers
+        let mut ledger = self
+            .tenant_ledgers
             .get(t as usize)
             .copied()
-            .unwrap_or_default()
+            .unwrap_or_default();
+        ledger.miss_dollars += self.epoch_tenant_miss.get(t as usize).copied().unwrap_or(0.0);
+        ledger
     }
 
-    /// All per-tenant ledgers, indexed by tenant id.
+    /// All per-tenant ledgers (closed epochs only), indexed by tenant id.
     pub fn tenant_ledgers(&self) -> &[TenantLedger] {
         &self.tenant_ledgers
+    }
+
+    /// Every per-tenant epoch bill so far, in accumulation order
+    /// (epoch-major, tenant id ascending within an epoch). Folding the
+    /// `storage` and `miss` fields in this order reproduces
+    /// [`Self::storage_total`] / the closed-epoch miss total bit-for-bit.
+    pub fn tenant_bills(&self) -> &[TenantEpochBill] {
+        &self.tenant_bills
+    }
+
+    /// Closed bills of retired tenants, in retirement order.
+    pub fn reconciliations(&self) -> &[TenantReconciliation] {
+        &self.reconciliations
     }
 
     /// Record one miss for an object of `size` bytes (tenant 0).
@@ -112,8 +202,11 @@ impl CostTracker {
         if self.tenant_ledgers.len() <= i {
             self.tenant_ledgers.resize(i + 1, TenantLedger::default());
         }
+        if self.epoch_tenant_miss.len() <= i {
+            self.epoch_tenant_miss.resize(i + 1, 0.0);
+        }
         self.tenant_ledgers[i].misses += 1;
-        self.tenant_ledgers[i].miss_dollars += m;
+        self.epoch_tenant_miss[i] += m;
     }
 
     /// Record an arbitrary storage charge (used by the ideal TTL cache,
@@ -124,47 +217,152 @@ impl CostTracker {
     }
 
     /// Close the epoch that just ended at `t`, billing `instances` nodes
-    /// for the whole epoch (§2.3: turning a node off early is paid anyway).
+    /// for the whole epoch (§2.3: turning a node off early is paid
+    /// anyway). Equivalent to [`Self::end_epoch_attributed`] with no
+    /// resident information: the whole epoch bill lands on tenant 0.
     pub fn end_epoch(&mut self, t: TimeUs, instances: u32) -> EpochCosts {
+        self.end_epoch_attributed(t, instances, &[])
+    }
+
+    /// Close the epoch that just ended at `t`, billing `instances` nodes
+    /// for the whole epoch and attributing the storage bill across
+    /// tenants in proportion to `residents` (each tenant's physical
+    /// resident bytes — the cluster placement ledger rows at the
+    /// boundary). The per-tenant rows are appended to
+    /// [`Self::tenant_bills`] and the cluster totals are accumulated as
+    /// the fold over those very rows, keeping
+    /// `Σ tenant bills == total bill` exact. With no residents (an empty
+    /// cluster, or a tenant-oblivious caller) the storage lands on
+    /// tenant 0, which keeps single-tenant runs bit-identical with the
+    /// unattributed accounting.
+    pub fn end_epoch_attributed(
+        &mut self,
+        t: TimeUs,
+        instances: u32,
+        residents: &[(TenantId, u64)],
+    ) -> EpochCosts {
         let storage = instances as f64 * self.cfg.instance.dollars_per_hour
             * (self.cfg.epoch_us as f64 / crate::HOUR as f64);
-        self.storage_total += storage;
-        self.miss_total += self.epoch_miss;
-        let out = EpochCosts {
-            t,
-            storage,
-            miss: self.epoch_miss,
-            miss_count: self.epoch_miss_count,
-            instances,
-        };
-        self.epoch_miss = 0.0;
-        self.epoch_miss_count = 0;
-        self.epochs += 1;
-        self.storage_series.push(t, self.storage_total);
-        self.miss_series.push(t, self.miss_total);
-        self.total_series.push(t, self.total());
+        let out = self.close_epoch_bills(t, Some((storage, residents)), instances);
         self.instances_series.push(t, instances as f64);
         out
     }
 
     /// Close an epoch for a vertically billed (ideal TTL) run: storage was
-    /// already accrued via [`Self::record_storage_dollars`].
+    /// already accrued via [`Self::record_storage_dollars`] and stays
+    /// unattributed; only the misses land on tenant bills.
     pub fn end_epoch_vertical(&mut self, t: TimeUs) -> EpochCosts {
-        self.miss_total += self.epoch_miss;
+        self.close_epoch_bills(t, None, 0)
+    }
+
+    /// Shared epoch-close: emit the per-tenant bill rows (tenant id
+    /// ascending), fold them into the ledgers and the cluster totals, and
+    /// reset the per-epoch accruals.
+    fn close_epoch_bills(
+        &mut self,
+        t: TimeUs,
+        storage: Option<(f64, &[(TenantId, u64)])>,
+        instances: u32,
+    ) -> EpochCosts {
+        // Per-tenant storage shares, resident-byte proportional. The last
+        // share-holder takes the residual so the rows fold back to the
+        // exact epoch storage bill.
+        let mut shares: Vec<(TenantId, f64)> = Vec::new();
+        let mut epoch_storage = 0.0;
+        if let Some((storage, residents)) = storage {
+            let mut rows: Vec<(TenantId, u64)> = residents
+                .iter()
+                .copied()
+                .filter(|&(_, b)| b > 0)
+                .collect();
+            rows.sort_by_key(|&(t, _)| t);
+            let total_resident: u64 = rows.iter().map(|&(_, b)| b).sum();
+            if total_resident == 0 {
+                shares.push((0, storage));
+            } else {
+                let mut allotted = 0.0;
+                for (i, &(tenant, bytes)) in rows.iter().enumerate() {
+                    let s = if i + 1 == rows.len() {
+                        storage - allotted
+                    } else {
+                        storage * (bytes as f64 / total_resident as f64)
+                    };
+                    allotted += s;
+                    shares.push((tenant, s));
+                }
+            }
+        }
+        // One pass over every tenant touched this epoch, id ascending:
+        // emit the bill row and fold it into ledger + totals.
+        let mut epoch_miss = 0.0;
+        let max_len = self
+            .epoch_tenant_miss
+            .len()
+            .max(shares.iter().map(|&(t, _)| t as usize + 1).max().unwrap_or(0));
+        if self.tenant_ledgers.len() < max_len {
+            self.tenant_ledgers.resize(max_len, TenantLedger::default());
+        }
+        let mut share_iter = shares.iter().peekable();
+        for id in 0..max_len {
+            let s = match share_iter.peek() {
+                Some(&&(tenant, s)) if tenant as usize == id => {
+                    share_iter.next();
+                    s
+                }
+                _ => 0.0,
+            };
+            let m = self.epoch_tenant_miss.get(id).copied().unwrap_or(0.0);
+            if s == 0.0 && m == 0.0 {
+                continue;
+            }
+            self.tenant_ledgers[id].storage_dollars += s;
+            self.tenant_ledgers[id].miss_dollars += m;
+            epoch_storage += s;
+            epoch_miss += m;
+            self.tenant_bills.push(TenantEpochBill {
+                t,
+                tenant: id as TenantId,
+                storage: s,
+                miss: m,
+            });
+        }
+        self.storage_total += epoch_storage;
+        self.miss_total += epoch_miss;
         let out = EpochCosts {
             t,
-            storage: 0.0,
-            miss: self.epoch_miss,
+            storage: epoch_storage,
+            miss: epoch_miss,
             miss_count: self.epoch_miss_count,
-            instances: 0,
+            instances,
         };
         self.epoch_miss = 0.0;
         self.epoch_miss_count = 0;
+        self.epoch_tenant_miss.fill(0.0);
         self.epochs += 1;
         self.storage_series.push(t, self.storage_total);
         self.miss_series.push(t, self.miss_total);
         self.total_series.push(t, self.total());
         out
+    }
+
+    /// Close a retired tenant's ledger: snapshot its lifetime bill as a
+    /// [`TenantReconciliation`]. Called by the engine once the tenant's
+    /// residents are fully drained (so the final epoch it occupied
+    /// anything has been billed). The ledger itself keeps accumulating if
+    /// the retired tenant somehow sends more traffic; the reconciliation
+    /// is the bill at close time.
+    pub fn close_tenant(&mut self, t: TenantId, at: TimeUs) -> TenantReconciliation {
+        let ledger = self.tenant_ledger(t);
+        let rec = TenantReconciliation {
+            tenant: t,
+            at,
+            misses: ledger.misses,
+            miss_dollars: ledger.miss_dollars,
+            storage_dollars: ledger.storage_dollars,
+            total_dollars: ledger.storage_dollars + ledger.miss_dollars,
+        };
+        self.reconciliations.push(rec);
+        rec
     }
 
     pub fn storage_total(&self) -> f64 {
@@ -260,6 +458,62 @@ mod tests {
         t.record_miss(1);
         assert!(t.miss_total() > 0.0);
         assert_eq!(t.total(), t.miss_total());
+    }
+
+    #[test]
+    fn attributed_epochs_fold_back_to_the_exact_totals() {
+        let mut t = CostTracker::new(CostConfig::default());
+        t.set_tenant_weight(1, 3.0);
+        t.set_tenant_weight(2, 0.5);
+        // Epoch 1: two tenants resident, both missing.
+        t.record_miss_for(1, 4096);
+        t.record_miss_for(2, 4096);
+        t.end_epoch_attributed(HOUR, 4, &[(1, 300), (2, 100)]);
+        // Epoch 2: tenant 2 drained away mid-run; tenant 7 showed up.
+        t.record_miss_for(7, 4096);
+        t.end_epoch_attributed(2 * HOUR, 3, &[(1, 500), (7, 250)]);
+        // Epoch 3: idle cluster — the bill lands on tenant 0.
+        t.end_epoch_attributed(3 * HOUR, 2, &[]);
+
+        // The bill rows fold back to the totals bit-for-bit.
+        let (mut s, mut m) = (0.0, 0.0);
+        let mut per_epoch: std::collections::BTreeMap<u64, (f64, f64)> = Default::default();
+        for b in t.tenant_bills() {
+            let e = per_epoch.entry(b.t).or_insert((0.0, 0.0));
+            e.0 += b.storage;
+            e.1 += b.miss;
+        }
+        for (_, (se, me)) in per_epoch {
+            s += se;
+            m += me;
+        }
+        assert_eq!(s, t.storage_total(), "storage fold must be exact");
+        assert_eq!(m, t.miss_total(), "miss fold must be exact");
+        assert_eq!(s + m, t.total(), "total fold must be exact");
+        // Storage shares follow resident bytes; the idle epoch billed
+        // tenant 0.
+        let e1: Vec<_> = t.tenant_bills().iter().filter(|b| b.t == HOUR).collect();
+        assert_eq!(e1.len(), 2);
+        assert!(e1[0].tenant == 1 && e1[1].tenant == 2);
+        assert!(e1[0].storage > 2.9 * e1[1].storage, "{e1:?}");
+        let idle: Vec<_> = t.tenant_bills().iter().filter(|b| b.t == 3 * HOUR).collect();
+        assert_eq!(idle.len(), 1);
+        assert_eq!(idle[0].tenant, 0);
+        assert_eq!(idle[0].miss, 0.0);
+
+        // close_tenant snapshots the ledger as the reconciliation.
+        let rec = t.close_tenant(2, 3 * HOUR);
+        let bills_2: Vec<_> = t.tenant_bills().iter().filter(|b| b.tenant == 2).collect();
+        let (mut s2, mut m2) = (0.0, 0.0);
+        for b in &bills_2 {
+            s2 += b.storage;
+            m2 += b.miss;
+        }
+        assert_eq!(rec.storage_dollars, s2, "per-tenant storage fold must be exact");
+        assert_eq!(rec.miss_dollars, m2, "per-tenant miss fold must be exact");
+        assert_eq!(rec.total_dollars, s2 + m2);
+        assert_eq!(rec.misses, 1);
+        assert_eq!(t.reconciliations().len(), 1);
     }
 
     #[test]

@@ -15,34 +15,36 @@
 //! The discrete-event simulator ([`crate::sim`]), the TCP server
 //! ([`crate::serve`]), the analytic runtime driver and the ideal-TTL
 //! reference all drive this engine instead of hand-rolling their own
-//! epoch loops. Policies come from the uniform registry in
-//! [`policy`] (every [`crate::config::PolicyKind`] is first-class — the
-//! old dispatch panicked on `analytic`); series sampling, Fig. 9 balance
+//! epoch loops. Policies come from the uniform registry
+//! ([`build_policy`]; every [`crate::config::PolicyKind`] is first-class
+//! — the old dispatch panicked on `analytic`); series sampling, Fig. 9 balance
 //! tracking and per-tenant summaries are composable [`Probe`]s. Because
 //! the engine pulls nothing, any [`crate::trace::RequestSource`] can
 //! drive it — including the streaming file readers
 //! ([`crate::trace::FileSource`]), so a million-user trace never has to
 //! materialize as a `Vec<Request>`.
 
+#![warn(missing_docs)]
+
 mod policy;
 mod probe;
 
 pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
 pub use probe::{
-    BalanceProbe, PlacementProbe, PlacementSample, Probe, ProbeCtx, ShadowProbe, SloProbe,
-    SloSample, TenantProbe, TtlProbe,
+    BalanceProbe, LifecycleProbe, LifecycleSample, PlacementProbe, PlacementSample, Probe,
+    ProbeCtx, ShadowProbe, SloProbe, SloSample, TenantProbe, TtlProbe,
 };
 
 use crate::balancer::Balancer;
 use crate::cluster::BalanceTracker;
 use crate::config::Config;
-use crate::cost::{CostTracker, EpochCosts};
+use crate::cost::{CostTracker, EpochCosts, TenantEpochBill, TenantReconciliation};
 use crate::metrics::{HitMiss, TimeSeries};
 use crate::placement::PlacementSnapshot;
 use crate::scaler::EpochSizer;
-use crate::tenant::TenantEnforcement;
-use crate::trace::{Request, RequestSource};
-use crate::{TenantId, TimeUs};
+use crate::tenant::{AdmitOutcome, Lifecycle, TenantEnforcement, TenantSpec};
+use crate::trace::{Request, RequestSource, TenantEvent, TenantEventKind, TraceItem};
+use crate::{Result, TenantId, TimeUs};
 
 /// How often the default ttl/shadow probes sample their series.
 pub const SAMPLE_EVERY: u64 = 4096;
@@ -64,8 +66,11 @@ pub struct Outcome {
 /// cost, and where that tenant's timer converged.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TenantSummary {
+    /// The tenant this row describes.
     pub tenant: TenantId,
+    /// Requests the tenant sent.
     pub requests: u64,
+    /// Physical misses among them.
     pub misses: u64,
     /// Weighted miss dollars attributed to this tenant.
     pub miss_dollars: f64,
@@ -77,15 +82,23 @@ pub struct TenantSummary {
 /// Result of one policy run over a request stream.
 #[derive(Debug)]
 pub struct RunReport {
+    /// Name of the policy that ran.
     pub policy: String,
+    /// Requests offered.
     pub requests: u64,
+    /// Physical misses (spurious included).
     pub misses: u64,
+    /// §5.2 spurious misses (resident elsewhere, routed astray).
     pub spurious_misses: u64,
+    /// Cumulative policy work units (Fig. 1 proxy).
     pub work_units: u64,
+    /// Per-epoch cost rows, in closing order.
     pub epochs: Vec<EpochCosts>,
-    /// Cumulative dollars.
+    /// Cumulative storage dollars sampled at epoch boundaries.
     pub storage_series: TimeSeries,
+    /// Cumulative miss dollars sampled at epoch boundaries.
     pub miss_series: TimeSeries,
+    /// Cumulative total dollars sampled at epoch boundaries.
     pub total_series: TimeSeries,
     /// Instances active per epoch.
     pub instances_series: TimeSeries,
@@ -103,12 +116,26 @@ pub struct RunReport {
     /// Per-epoch per-tenant physical resident bytes (post-boundary
     /// placement maintenance) — see [`PlacementProbe`].
     pub placement: Vec<PlacementSample>,
+    /// Tenant lifecycle transitions observed during the run (admissions,
+    /// drain starts, retirements with their reconciled bills) — see
+    /// [`LifecycleProbe`].
+    pub lifecycle: Vec<LifecycleSample>,
+    /// Every per-tenant epoch bill in accumulation order; folding these
+    /// reproduces the run totals bit-for-bit
+    /// ([`crate::cost::CostTracker::tenant_bills`]).
+    pub tenant_bills: Vec<TenantEpochBill>,
+    /// Closed bills of tenants retired during the run.
+    pub reconciliations: Vec<TenantReconciliation>,
+    /// Total run cost, dollars (storage + weighted misses).
     pub total_cost: f64,
+    /// Storage slice of [`RunReport::total_cost`].
     pub storage_cost: f64,
+    /// Miss slice of [`RunReport::total_cost`].
     pub miss_cost: f64,
 }
 
 impl RunReport {
+    /// Overall miss ratio of the run (0 for an empty run).
     pub fn miss_ratio(&self) -> f64 {
         if self.requests == 0 {
             0.0
@@ -175,6 +202,8 @@ pub struct EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// Start a builder from `cfg` (policy, probes and initial size can
+    /// be overridden before [`EngineBuilder::build`]).
     pub fn new(cfg: &Config) -> Self {
         EngineBuilder {
             cfg: cfg.clone(),
@@ -231,6 +260,7 @@ impl EngineBuilder {
         self
     }
 
+    /// Assemble the [`Engine`].
     pub fn build(self) -> Engine {
         let cfg = self.cfg;
         let policy = self.policy.unwrap_or_else(|| build_policy(&cfg));
@@ -253,6 +283,7 @@ impl EngineBuilder {
                     probes.push(Box::new(TenantProbe::new()));
                     probes.push(Box::new(SloProbe::new()));
                     probes.push(Box::new(PlacementProbe::new()));
+                    probes.push(Box::new(LifecycleProbe::new()));
                 }
                 (Core::Cluster(balancer), name)
             }
@@ -386,6 +417,93 @@ impl Engine {
         }
     }
 
+    /// Admit a tenant mid-run (the serve protocol's `ADMIT`, or a trace
+    /// ADMIT event): registers the spec with the policy's controller
+    /// bank and the cost ledgers. Errors when the policy does not
+    /// arbitrate tenants, or while the tenant is still draining.
+    pub fn admit_tenant(&mut self, spec: TenantSpec) -> Result<AdmitOutcome> {
+        let now = self.clock;
+        let outcome = match &mut self.core {
+            Core::Cluster(b) => b.admit_tenant(spec.clone(), now)?,
+            Core::Vertical { .. } => anyhow::bail!(
+                "policy {} does not arbitrate tenants (cannot admit tenant {})",
+                self.policy_name,
+                spec.id
+            ),
+        };
+        self.costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+        self.notify_lifecycle(spec.id, None);
+        Ok(outcome)
+    }
+
+    /// Begin retiring a tenant mid-run (the serve protocol's `RETIRE`,
+    /// or a trace RETIRE event). Retirement *drains*, it does not drop:
+    /// the tenant's controller leaves the bank immediately, and at each
+    /// following epoch boundary the balancer releases its placement
+    /// state and sheds its residents until the ledger row reads zero
+    /// (within [`crate::tenant::MAX_DRAIN_EPOCHS`] boundaries), at which
+    /// point the tenant's bill is reconciled
+    /// ([`crate::cost::CostTracker::close_tenant`]).
+    pub fn retire_tenant(&mut self, tenant: TenantId) -> Result<()> {
+        let now = self.clock;
+        match &mut self.core {
+            Core::Cluster(b) => b.retire_tenant(tenant, now)?,
+            Core::Vertical { .. } => anyhow::bail!(
+                "policy {} does not arbitrate tenants (cannot retire tenant {tenant})",
+                self.policy_name
+            ),
+        }
+        self.notify_lifecycle(tenant, None);
+        Ok(())
+    }
+
+    /// Replay one trace lifecycle event (the format-v3 event lane):
+    /// advances billing time to the event timestamp, then admits or
+    /// retires the tenant.
+    pub fn apply_event(&mut self, ev: &TenantEvent) -> Result<()> {
+        if self.auto_epochs {
+            self.advance_to(ev.ts);
+        } else {
+            self.accrue(ev.ts);
+        }
+        match ev.kind {
+            TenantEventKind::Admit { .. } => {
+                let spec = ev.spec().expect("admit events carry a spec");
+                self.admit_tenant(spec).map(|_| ())
+            }
+            TenantEventKind::Retire => self.retire_tenant(ev.tenant),
+        }
+    }
+
+    /// Emit the tenant's current lifecycle record to every probe.
+    fn notify_lifecycle(&mut self, tenant: TenantId, final_bill_dollars: Option<f64>) {
+        let rows = match &self.core {
+            Core::Cluster(b) => b.lifecycle(),
+            Core::Vertical { .. } => None,
+        };
+        let Some((_, life)) = rows.and_then(|rows| rows.into_iter().find(|(t, _)| *t == tenant))
+        else {
+            return;
+        };
+        let sample = LifecycleSample {
+            t: self.clock,
+            tenant,
+            state: life.state(),
+            resident_bytes: self.tenant_physical_bytes(tenant),
+            drain_epochs: life.drain_epochs,
+            final_bill_dollars,
+        };
+        let ctx = ProbeCtx {
+            core: &self.core,
+            costs: &self.costs,
+            processed: self.processed,
+            instances: self.active_instances,
+        };
+        for p in &mut self.probes {
+            p.on_lifecycle(&sample, &ctx);
+        }
+    }
+
     /// Bill the final (partial) epoch at full price (§2.3) and fold every
     /// probe's observations into the report.
     pub fn finish(mut self) -> RunReport {
@@ -402,13 +520,33 @@ impl Engine {
         }
         let t_bill = self.epoch_end.max(self.clock);
         match &self.core {
-            Core::Cluster(_) => {
-                self.epochs
-                    .push(self.costs.end_epoch(t_bill, self.active_instances));
+            Core::Cluster(b) => {
+                let residents = b.cluster.tenant_residents();
+                self.epochs.push(self.costs.end_epoch_attributed(
+                    t_bill,
+                    self.active_instances,
+                    &residents,
+                ));
             }
             Core::Vertical { .. } => {
                 self.epochs.push(self.costs.end_epoch_vertical(t_bill));
             }
+        }
+        // A retirement still draining at run end completes now: the
+        // final epoch was just billed with its residents, so the drain
+        // and the billing reconciliation can close the lifecycle before
+        // the report — every RETIRE pairs with a reconciliation even
+        // when no boundary followed it.
+        if let Core::Cluster(b) = &mut self.core {
+            b.drain_retiring(t_bill);
+        }
+        let retired = match &mut self.core {
+            Core::Cluster(b) => b.take_retired(),
+            Core::Vertical { .. } => Vec::new(),
+        };
+        for tenant in retired {
+            let rec = self.costs.close_tenant(tenant, t_bill);
+            self.notify_lifecycle(tenant, Some(rec.total_dollars));
         }
 
         let mut report = RunReport {
@@ -428,6 +566,9 @@ impl Engine {
             tenants: Vec::new(),
             slo: Vec::new(),
             placement: Vec::new(),
+            lifecycle: Vec::new(),
+            tenant_bills: self.costs.tenant_bills().to_vec(),
+            reconciliations: self.costs.reconciliations().to_vec(),
             total_cost: self.costs.total(),
             storage_cost: self.costs.storage_total(),
             miss_cost: self.costs.miss_total(),
@@ -472,13 +613,34 @@ impl Engine {
         }
         match &mut self.core {
             Core::Cluster(b) => {
-                self.epochs.push(self.costs.end_epoch(t, self.active_instances));
+                // Bill the closing epoch first (attributed across tenants
+                // by their resident bytes at the boundary), then apply
+                // the sizing decision — which also drains retiring
+                // tenants, so their final occupied epoch is on the bill
+                // before reconciliation below.
+                let residents = b.cluster.tenant_residents();
+                self.epochs.push(self.costs.end_epoch_attributed(
+                    t,
+                    self.active_instances,
+                    &residents,
+                ));
                 b.cluster.reset_epoch_stats();
                 self.active_instances = b.end_epoch(t);
             }
             Core::Vertical { .. } => {
                 self.epochs.push(self.costs.end_epoch_vertical(t));
             }
+        }
+        // Billing reconciliation: tenants whose drain completed at this
+        // boundary get their ledgers closed, and probes see the final
+        // Retired transition with the reconciled bill.
+        let retired = match &mut self.core {
+            Core::Cluster(b) => b.take_retired(),
+            Core::Vertical { .. } => Vec::new(),
+        };
+        for tenant in retired {
+            let rec = self.costs.close_tenant(tenant, t);
+            self.notify_lifecycle(tenant, Some(rec.total_dollars));
         }
         // Post-decision hook: resize, placement maintenance and
         // occupancy-cap shedding have been applied — probes can observe
@@ -499,10 +661,12 @@ impl Engine {
 
     // --- accessors (the server's STATS surface and probe-free callers) ---
 
+    /// Name of the policy this engine runs.
     pub fn policy_name(&self) -> &str {
         &self.policy_name
     }
 
+    /// Requests served so far.
     pub fn requests(&self) -> u64 {
         match &self.core {
             Core::Cluster(b) => b.requests,
@@ -510,6 +674,7 @@ impl Engine {
         }
     }
 
+    /// Physical misses so far (spurious included).
     pub fn misses(&self) -> u64 {
         match &self.core {
             Core::Cluster(b) => b.misses,
@@ -517,6 +682,7 @@ impl Engine {
         }
     }
 
+    /// §5.2 spurious misses so far (0 for the vertical mode).
     pub fn spurious_misses(&self) -> u64 {
         match &self.core {
             Core::Cluster(b) => b.spurious_misses,
@@ -524,6 +690,7 @@ impl Engine {
         }
     }
 
+    /// Cumulative policy work units (Fig. 1 proxy).
     pub fn work_units(&self) -> u64 {
         match &self.core {
             Core::Cluster(b) => b.work_units,
@@ -539,18 +706,22 @@ impl Engine {
         }
     }
 
+    /// The run's cost ledger (read-only).
     pub fn costs(&self) -> &CostTracker {
         &self.costs
     }
 
+    /// Current policy TTL, when the policy maintains one.
     pub fn ttl_secs(&self) -> Option<f64> {
         self.core.ttl_secs()
     }
 
+    /// Current virtual/shadow size in bytes, when the policy tracks one.
     pub fn shadow_size(&self) -> Option<u64> {
         self.core.shadow_size()
     }
 
+    /// Per-tenant timers, when the policy runs one controller per tenant.
     pub fn tenant_ttls(&self) -> Option<Vec<(TenantId, f64)>> {
         match &self.core {
             Core::Cluster(b) => b.tenant_ttls(),
@@ -573,6 +744,42 @@ impl Engine {
         self.tenant_enforcement()?
             .into_iter()
             .find(|row| row.tenant == t)
+    }
+
+    /// Per-tenant lifecycle records, when the policy tracks tenant
+    /// lifecycles (`None` otherwise).
+    pub fn tenant_lifecycle(&self) -> Option<Vec<(TenantId, Lifecycle)>> {
+        match &self.core {
+            Core::Cluster(b) => b.lifecycle(),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// Lifecycle record of one tenant (`None` when the policy does not
+    /// track lifecycles, or the tenant was never admitted).
+    pub fn tenant_lifecycle_of(&self, t: TenantId) -> Option<Lifecycle> {
+        self.tenant_lifecycle()?
+            .into_iter()
+            .find(|(id, _)| *id == t)
+            .map(|(_, life)| life)
+    }
+
+    /// Whether the lifecycle layer knows this tenant (admitted explicitly
+    /// or lazily by traffic, in any state). Always `false` for policies
+    /// without lifecycle tracking.
+    pub fn tenant_known(&self, t: TenantId) -> bool {
+        self.tenant_lifecycle_of(t).is_some()
+    }
+
+    /// The spec currently registered for `t` (`None` when the policy
+    /// keeps no registry, or the tenant was never admitted). Partial
+    /// `ADMIT` updates seed from this so unspecified fields keep their
+    /// values.
+    pub fn tenant_spec(&self, t: TenantId) -> Option<TenantSpec> {
+        match &self.core {
+            Core::Cluster(b) => b.tenant_spec(t),
+            Core::Vertical { .. } => None,
+        }
     }
 
     /// Counters for one tenant (zero if never seen).
@@ -622,11 +829,31 @@ impl Engine {
 }
 
 /// Drain a source through a freshly built engine — the one-call form every
-/// batch consumer (CLI, experiments, tests) uses.
+/// batch consumer (CLI, experiments, tests) uses. Drives the *item*
+/// stream, so a format-v3 trace (or an [`crate::trace::EventedVecSource`])
+/// admits and retires tenants mid-run; lifecycle events offered to a
+/// policy that does not arbitrate tenants are skipped (the request lane
+/// still replays in full).
 pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> RunReport {
     let mut engine = EngineBuilder::new(cfg).build();
-    while let Some(req) = source.next_request() {
-        engine.offer(&req);
+    while let Some(item) = source.next_item() {
+        match item {
+            TraceItem::Request(req) => {
+                engine.offer(&req);
+            }
+            TraceItem::Event(ev) => {
+                if let Err(e) = engine.apply_event(&ev) {
+                    // The request lane still replays in full; surface the
+                    // skipped event (tenant-oblivious policies reject
+                    // lifecycle events by design, but a failed admit or
+                    // retire on a tenant-aware policy is worth seeing).
+                    eprintln!(
+                        "engine: skipped lifecycle event for tenant {} at t={}: {e}",
+                        ev.tenant, ev.ts
+                    );
+                }
+            }
+        }
     }
     engine.finish()
 }
@@ -751,6 +978,166 @@ mod tests {
         }
         engine.finish();
         assert_eq!(seen.get(), 10);
+    }
+
+    #[test]
+    fn admit_and_retire_drain_and_reconcile() {
+        use crate::tenant::{AdmitOutcome, LifecycleState, TenantSpec, MAX_DRAIN_EPOCHS};
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0; // sticky ghosts
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.max_instances = 4;
+        let mut engine = EngineBuilder::new(&cfg).build();
+        let spec = TenantSpec::new(7, "guest").with_multiplier(2.0);
+        assert_eq!(engine.admit_tenant(spec.clone()).unwrap(), AdmitOutcome::Admitted);
+        assert!(engine.tenant_known(7));
+        assert!(!engine.tenant_known(8));
+        assert_eq!(
+            engine.tenant_lifecycle_of(7).unwrap().state(),
+            LifecycleState::Admitted
+        );
+        // Re-admitting a live tenant is a spec update.
+        assert_eq!(engine.admit_tenant(spec).unwrap(), AdmitOutcome::Updated);
+        // Traffic activates it and builds residents.
+        for i in 0..8u64 {
+            engine.offer(&Request::new(i * SECOND, i, 100_000).with_tenant(7));
+        }
+        assert_eq!(
+            engine.tenant_lifecycle_of(7).unwrap().state(),
+            LifecycleState::Active
+        );
+        assert!(engine.tenant_physical_bytes(7) > 0);
+
+        engine.retire_tenant(7).unwrap();
+        assert_eq!(
+            engine.tenant_lifecycle_of(7).unwrap().state(),
+            LifecycleState::Draining
+        );
+        // A post-retire request is served but never cached again.
+        let out = engine.offer(&Request::new(9 * SECOND, 0, 100_000).with_tenant(7));
+        assert!(out.hit, "still-resident object hits while draining");
+        let miss = engine.offer(&Request::new(10 * SECOND, 999, 100_000).with_tenant(7));
+        assert!(!miss.hit);
+        let miss2 = engine.offer(&Request::new(11 * SECOND, 999, 100_000).with_tenant(7));
+        assert!(!miss2.hit, "denied insert: the retired miss must not cache");
+
+        // The next boundary drains the residents and reconciles the bill.
+        engine.advance_to(cfg.cost.epoch_us + 1);
+        assert_eq!(engine.tenant_physical_bytes(7), 0, "drain must reclaim everything");
+        let life = engine.tenant_lifecycle_of(7).unwrap();
+        assert_eq!(life.state(), LifecycleState::Retired);
+        assert!(life.drain_epochs <= MAX_DRAIN_EPOCHS, "{life:?}");
+        assert!(engine.retire_tenant(7).is_err(), "already retired");
+        assert!(engine.retire_tenant(42).is_err(), "unknown tenant");
+
+        let report = engine.finish();
+        assert_eq!(report.reconciliations.len(), 1);
+        let rec = report.reconciliations[0];
+        assert_eq!(rec.tenant, 7);
+        assert!(rec.misses > 0);
+        assert!(rec.total_dollars > 0.0);
+        // The lifecycle audit trail saw every transition, ending Retired
+        // with the reconciled bill attached.
+        let states: Vec<LifecycleState> = report
+            .lifecycle
+            .iter()
+            .filter(|s| s.tenant == 7)
+            .map(|s| s.state)
+            .collect();
+        assert_eq!(
+            states,
+            vec![
+                LifecycleState::Admitted,
+                LifecycleState::Admitted, // spec update keeps the state
+                LifecycleState::Draining,
+                LifecycleState::Retired,
+            ]
+        );
+        let last = report.lifecycle.iter().rfind(|s| s.tenant == 7).unwrap();
+        assert_eq!(last.resident_bytes, 0);
+        assert_eq!(last.final_bill_dollars, Some(rec.total_dollars));
+        // Σ per-epoch tenant bills == total cluster bill, bit for bit
+        // (fold per epoch in bill order, then across epochs).
+        let (mut s, mut m) = (0.0, 0.0);
+        let (mut se, mut me) = (0.0, 0.0);
+        let mut cur = None;
+        for b in &report.tenant_bills {
+            if cur != Some(b.t) {
+                s += se;
+                m += me;
+                se = 0.0;
+                me = 0.0;
+                cur = Some(b.t);
+            }
+            se += b.storage;
+            me += b.miss;
+        }
+        s += se;
+        m += me;
+        assert_eq!(s + m, report.total_cost, "billing attribution must be exact");
+    }
+
+    #[test]
+    fn finish_reconciles_a_retirement_in_the_final_partial_epoch() {
+        use crate::tenant::LifecycleState;
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        let mut engine = EngineBuilder::new(&cfg).build();
+        engine.offer(&Request::new(SECOND, 1, 100_000).with_tenant(2));
+        assert!(engine.tenant_physical_bytes(2) > 0);
+        // RETIRE with no EPOCH boundary afterwards: finish() must still
+        // drain and reconcile.
+        engine.retire_tenant(2).unwrap();
+        let report = engine.finish();
+        assert_eq!(report.reconciliations.len(), 1);
+        assert_eq!(report.reconciliations[0].tenant, 2);
+        assert!(report.reconciliations[0].total_dollars > 0.0);
+        let last = report.lifecycle.iter().rfind(|s| s.tenant == 2).unwrap();
+        assert_eq!(last.state, LifecycleState::Retired);
+        assert_eq!(last.resident_bytes, 0);
+    }
+
+    #[test]
+    fn vertical_mode_rejects_lifecycle_calls() {
+        use crate::tenant::TenantSpec;
+        let mut engine = EngineBuilder::new(&tiny_cfg(PolicyKind::IdealTtl)).build();
+        assert!(engine.admit_tenant(TenantSpec::new(1, "x")).is_err());
+        assert!(engine.retire_tenant(0).is_err());
+        assert!(engine.tenant_lifecycle().is_none());
+        // Tenant-oblivious horizontal policies refuse too.
+        let mut fixed = EngineBuilder::new(&tiny_cfg(PolicyKind::Fixed)).build();
+        assert!(fixed.admit_tenant(TenantSpec::new(1, "x")).is_err());
+        assert!(!fixed.tenant_known(0));
+    }
+
+    #[test]
+    fn run_replays_trace_events_into_lifecycle() {
+        use crate::tenant::LifecycleState;
+        use crate::trace::{EventedVecSource, TenantEvent};
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.max_instances = 4;
+        let reqs: Vec<Request> = (0..30u64)
+            .map(|i| Request::new(i * MINUTE, i % 10, 50_000).with_tenant(3))
+            .collect();
+        let events = vec![
+            TenantEvent::admit(0, 3).with_multiplier(2.0),
+            TenantEvent::retire(12 * MINUTE, 3),
+        ];
+        let report = run(&cfg, &mut EventedVecSource::merged(reqs, events));
+        assert_eq!(report.requests, 30, "the request lane replays in full");
+        let retired = report
+            .lifecycle
+            .iter()
+            .find(|s| s.tenant == 3 && s.state == LifecycleState::Retired)
+            .expect("the RETIRE event must drain tenant 3");
+        assert_eq!(retired.resident_bytes, 0);
+        assert_eq!(report.reconciliations.len(), 1);
+        assert_eq!(report.reconciliations[0].tenant, 3);
     }
 
     #[test]

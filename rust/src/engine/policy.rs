@@ -88,6 +88,8 @@ pub struct VerticalTtl {
 }
 
 impl VerticalTtl {
+    /// Build the vertical reference cache from `cfg`'s controller and
+    /// cost sections.
     pub fn from_config(cfg: &Config) -> Self {
         VerticalTtl {
             vc: VirtualCache::new(&cfg.controller, cfg.cost.clone()),
@@ -100,6 +102,7 @@ impl VerticalTtl {
         self.vc.vsize()
     }
 
+    /// The underlying §4 virtual TTL cache (read-only).
     pub fn vcache(&self) -> &VirtualCache {
         &self.vc
     }

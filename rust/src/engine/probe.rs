@@ -8,7 +8,7 @@ use super::{Core, Outcome, RunReport, TenantSummary, SAMPLE_EVERY};
 use crate::cluster::BalanceTracker;
 use crate::cost::CostTracker;
 use crate::metrics::{HitMiss, TimeSeries};
-use crate::tenant::TenantEnforcement;
+use crate::tenant::{LifecycleState, TenantEnforcement};
 use crate::trace::Request;
 use crate::{TenantId, TimeUs};
 
@@ -121,8 +121,61 @@ pub trait Probe {
     /// the final partial epoch (`finish` applies no decision).
     fn on_epoch_applied(&mut self, _epoch_end: TimeUs, _ctx: &ProbeCtx) {}
 
+    /// Called on every tenant lifecycle transition the engine performs —
+    /// an `ADMIT` (new, update or re-admission), a `RETIRE` (drain
+    /// start), and the drain-completion that retires the tenant and
+    /// reconciles its bill.
+    fn on_lifecycle(&mut self, _event: &LifecycleSample, _ctx: &ProbeCtx) {}
+
     /// Fold the probe's observations into the finished report.
     fn finish(self: Box<Self>, _ctx: &ProbeCtx, _report: &mut RunReport) {}
+}
+
+/// One tenant lifecycle transition as the engine performed it (admit /
+/// drain start / retirement). `exp fig13` reads the spin-up and
+/// drain-completion timestamps from these.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleSample {
+    /// Engine clock at the transition.
+    pub t: TimeUs,
+    /// The tenant transitioning.
+    pub tenant: TenantId,
+    /// State the tenant is in *after* the transition.
+    pub state: LifecycleState,
+    /// The tenant's physical resident bytes at the transition (the
+    /// cluster ledger row — zero exactly when a retirement completes).
+    pub resident_bytes: u64,
+    /// Epoch boundaries the drain has consumed so far (bounded by
+    /// [`crate::tenant::MAX_DRAIN_EPOCHS`]).
+    pub drain_epochs: u32,
+    /// The reconciled bill, present only on the final Retired transition
+    /// ([`crate::cost::TenantReconciliation::total_dollars`]).
+    pub final_bill_dollars: Option<f64>,
+}
+
+/// Records every tenant lifecycle transition into the report's
+/// `lifecycle` field — the audit trail of a churn run (who joined when,
+/// who drained in how many epochs, and what the final bill was).
+#[derive(Default)]
+pub struct LifecycleProbe {
+    samples: Vec<LifecycleSample>,
+}
+
+impl LifecycleProbe {
+    /// New, empty probe.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Probe for LifecycleProbe {
+    fn on_lifecycle(&mut self, event: &LifecycleSample, _ctx: &ProbeCtx) {
+        self.samples.push(event.clone());
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        report.lifecycle = self.samples;
+    }
 }
 
 /// Samples the policy TTL every `every` requests into the report's
@@ -138,6 +191,7 @@ impl TtlProbe {
         Self::with_every(policy, SAMPLE_EVERY)
     }
 
+    /// Sample every `every` requests.
     pub fn with_every(policy: &str, every: u64) -> Self {
         TtlProbe {
             every: every.max(1),
@@ -174,6 +228,7 @@ impl ShadowProbe {
         Self::with_every(policy, suffix, SAMPLE_EVERY)
     }
 
+    /// Sample every `every` requests; `suffix` names the series.
     pub fn with_every(policy: &str, suffix: &str, every: u64) -> Self {
         ShadowProbe {
             every: every.max(1),
@@ -203,6 +258,7 @@ pub struct BalanceProbe {
 }
 
 impl BalanceProbe {
+    /// New, empty probe.
     pub fn new() -> Self {
         BalanceProbe { tracker: BalanceTracker::new() }
     }
@@ -232,6 +288,7 @@ impl Probe for BalanceProbe {
 pub struct TenantProbe;
 
 impl TenantProbe {
+    /// New probe.
     pub fn new() -> Self {
         TenantProbe
     }
@@ -249,9 +306,11 @@ impl Probe for TenantProbe {
 pub struct SloSample {
     /// Epoch-close timestamp.
     pub t: TimeUs,
+    /// The sampled tenant.
     pub tenant: TenantId,
-    /// Requests / misses within the closing epoch (not cumulative).
+    /// Requests within the closing epoch (not cumulative).
     pub requests: u64,
+    /// Misses within the closing epoch (not cumulative).
     pub misses: u64,
     /// Miss ratio of the closing epoch.
     pub miss_ratio: f64,
@@ -286,6 +345,7 @@ pub struct SloProbe {
 }
 
 impl SloProbe {
+    /// New, empty probe.
     pub fn new() -> Self {
         Self::default()
     }
@@ -300,6 +360,7 @@ impl SloProbe {
 pub struct PlacementSample {
     /// Epoch-boundary timestamp.
     pub t: TimeUs,
+    /// The sampled tenant.
     pub tenant: TenantId,
     /// Physical resident bytes the next epoch starts from.
     pub resident_bytes: u64,
@@ -321,6 +382,7 @@ pub struct PlacementProbe {
 }
 
 impl PlacementProbe {
+    /// New, empty probe.
     pub fn new() -> Self {
         Self::default()
     }

@@ -143,7 +143,10 @@ pub fn fig11_specs(slo: f64) -> Vec<TenantSpec> {
     ]
 }
 
-fn uniform(mut reqs: Vec<Request>, tenant: u16) -> Vec<Request> {
+/// Pin every request to the scenario's uniform object size and tag it
+/// with `tenant` (shared with fig12/fig13, which replay comparable
+/// storms/churn over the same deterministic working-set arithmetic).
+pub(super) fn uniform(mut reqs: Vec<Request>, tenant: u16) -> Vec<Request> {
     for r in &mut reqs {
         r.size = OBJ_BYTES;
         r.tenant = tenant;

@@ -1,0 +1,441 @@
+//! Fig. 13 (ours, beyond the paper) — online tenant churn on the shared
+//! elastic cluster: what admitting and retiring tenants *mid-run* costs,
+//! and what retiring actually reclaims.
+//!
+//! The paper's controller tracks time-varying demand for a fixed
+//! workload population; Carlsson & Eager's dynamic cache-instantiation
+//! analysis (PAPERS.md) shows the spin-up/tear-down transient is exactly
+//! where cost is won or lost, and Memshare treats tenant arrival and
+//! departure as the normal case its arbiter rebalances around. This
+//! experiment exercises the full lifecycle subsystem end to end:
+//!
+//! * a **base** tenant runs a steady cacheable workload for the whole
+//!   2-day window;
+//! * a **guest** tenant is `ADMIT`ed at hour 6 (via the trace event
+//!   lane — the same path as the serve protocol's `ADMIT`), sends
+//!   traffic until hour 30, and is `RETIRE`d there.
+//!
+//! Two measurements per placement policy (`shared`, `hash_slot_pinned`,
+//! `slab_partition`):
+//!
+//! * **spin-up transient** — the guest's per-epoch miss ratio over its
+//!   first epochs (cold cache, no grant history) vs its steady-state
+//!   mean: the arrival cost the static-population analysis never sees.
+//! * **reclaimed-bytes curve** — the guest's resident bytes at every
+//!   boundary after the RETIRE: the drain must reach zero within
+//!   [`crate::tenant::MAX_DRAIN_EPOCHS`] boundaries and the reconciled
+//!   final bill must equal the fold of the guest's per-epoch bills
+//!   *exactly* ([`crate::cost::CostTracker::tenant_bills`]).
+//!
+//! A **static-population baseline** replays the identical requests with
+//! both tenants admitted up front and nobody retired: after hour 30 the
+//! guest's residents linger in the physical LRUs (nothing reclaims
+//! them), which is precisely the tear-down waste the drain removes.
+
+use super::fig11_slo::{scale_factor, uniform};
+use super::{calibrate_miss_cost, ExpContext, TraceScale};
+use crate::config::{Config, PolicyKind};
+use crate::engine::{run, RunReport};
+use crate::placement::PlacementKind;
+use crate::tenant::{LifecycleState, TenantSpec, TrafficClass, MAX_DRAIN_EPOCHS};
+use crate::trace::{EventedVecSource, Request, SynthConfig, SynthGenerator, TenantEvent, VecSource};
+use crate::{Result, TimeUs, DAY, HOUR};
+
+/// Steady base tenant id.
+pub const BASE: u16 = 0;
+/// Churning guest tenant id (admitted and retired mid-run).
+pub const GUEST: u16 = 1;
+
+/// When the guest is admitted / retired within the 2-day window.
+pub const ADMIT_AT: TimeUs = 6 * HOUR;
+/// Retirement boundary of the guest tenant.
+pub const RETIRE_AT: TimeUs = 30 * HOUR;
+
+/// One placement policy's churn-run outcome.
+#[derive(Debug)]
+pub struct Fig13Variant {
+    /// Placement policy name.
+    pub name: &'static str,
+    /// The placement policy the run used.
+    pub placement: PlacementKind,
+    /// Guest per-epoch miss ratio in its first spin-up epoch with
+    /// traffic.
+    pub spinup_miss_ratio: f64,
+    /// Guest mean per-epoch miss ratio once warm (spin-up epochs
+    /// excluded, pre-retirement).
+    pub steady_miss_ratio: f64,
+    /// Epoch boundaries the drain consumed (≤ K).
+    pub drain_epochs: u32,
+    /// Guest resident bytes at each boundary from the RETIRE on (the
+    /// reclaimed-bytes curve; ends at 0).
+    pub reclaimed_curve: Vec<(TimeUs, u64)>,
+    /// The guest's reconciled final bill.
+    pub final_bill_dollars: f64,
+    /// The full churn-run report.
+    pub report: RunReport,
+}
+
+/// Fig. 13 report: one churn run per placement policy plus the
+/// static-population baseline.
+#[derive(Debug)]
+pub struct Fig13Report {
+    /// Guest admission time.
+    pub admit_at: TimeUs,
+    /// Guest retirement time.
+    pub retire_at: TimeUs,
+    /// Churn runs, one per placement policy.
+    pub variants: Vec<Fig13Variant>,
+    /// Guest resident bytes still held by the static baseline two
+    /// boundaries after the (unobserved) retirement point.
+    pub baseline_lingering_bytes: u64,
+    /// The static-population baseline report (shared placement).
+    pub baseline: RunReport,
+}
+
+impl Fig13Report {
+    /// The churn variant run under `name`.
+    pub fn variant(&self, name: &str) -> &Fig13Variant {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .expect("fig13 variant")
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "Fig.13 — online tenant churn: ADMIT at hour {:.0}, RETIRE at hour {:.0}\n",
+            crate::us_to_secs(self.admit_at) / 3600.0,
+            crate::us_to_secs(self.retire_at) / 3600.0,
+        );
+        for v in &self.variants {
+            s.push_str(&format!(
+                "  {:<16} spin-up miss%={:.4} steady={:.4} drain_epochs={} \
+                 final_bill=${:.6}\n",
+                v.name, v.spinup_miss_ratio, v.steady_miss_ratio, v.drain_epochs,
+                v.final_bill_dollars,
+            ));
+        }
+        s.push_str(&format!(
+            "  static baseline still holds {} guest bytes two epochs past the \
+             retirement point\n\
+             \x20 expected shape: the spin-up epoch pays a cold-cache transient \
+             (miss% above steady);\n\
+             \x20 the drain reclaims every guest byte within {} boundaries and \
+             Σ(per-epoch bills) == final bill exactly\n",
+            self.baseline_lingering_bytes, MAX_DRAIN_EPOCHS,
+        ));
+        s
+    }
+}
+
+/// The guest tenant's spec (2× miss cost, one reserved instance's worth
+/// at the given instance size).
+pub fn guest_spec(instance_bytes: u64) -> TenantSpec {
+    TenantSpec::new(GUEST, "guest")
+        .with_multiplier(2.0)
+        .with_class(TrafficClass::Standard)
+        .with_reserved_bytes(instance_bytes)
+}
+
+/// The base tenant's steady cacheable workload (whole window).
+fn base_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
+    let f = scale_factor(scale);
+    let mut g = SynthConfig::akamai_like();
+    g.catalogue = (1_000.0 * f) as u64;
+    g.alpha = 0.9;
+    g.mean_rate = 5.0 * f;
+    g.diurnal_amplitude = 0.3;
+    g.duration = 2 * DAY;
+    g.churn_per_day = 0.0;
+    g.seed = seed ^ 0xBA5E;
+    uniform(SynthGenerator::new(g).generate(), BASE)
+}
+
+/// The guest tenant's workload: a cacheable catalogue active only within
+/// its `[ADMIT_AT, RETIRE_AT)` lifetime.
+fn guest_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
+    let f = scale_factor(scale);
+    let mut g = SynthConfig::akamai_like();
+    g.catalogue = (800.0 * f) as u64;
+    g.alpha = 0.9;
+    g.mean_rate = 4.0 * f;
+    g.diurnal_amplitude = 0.2;
+    g.duration = RETIRE_AT - ADMIT_AT;
+    g.churn_per_day = 0.0;
+    g.seed = seed ^ 0x6E57;
+    let mut reqs = uniform(SynthGenerator::new(g).generate(), GUEST);
+    for r in &mut reqs {
+        r.ts += ADMIT_AT;
+    }
+    reqs
+}
+
+/// The churn event schedule: admit the guest at hour 6, retire it at
+/// hour 30 (the trace event lane `gen-trace --kind churn` writes).
+pub fn churn_events(instance_bytes: u64) -> Vec<TenantEvent> {
+    let spec = guest_spec(instance_bytes);
+    vec![
+        TenantEvent::admit(ADMIT_AT, GUEST)
+            .with_reserved_bytes(spec.reserved_bytes)
+            .with_multiplier(spec.miss_cost_multiplier),
+        TenantEvent::retire(RETIRE_AT, GUEST),
+    ]
+}
+
+/// The merged churn request trace (base + guest, time-ordered).
+pub fn churn_trace(scale: TraceScale, seed: u64) -> Vec<Request> {
+    let mut trace = base_trace(scale, seed);
+    trace.extend(guest_trace(scale, seed));
+    trace.sort_by_key(|r| r.ts);
+    trace
+}
+
+/// The shared-cluster config (placement and roster filled in per run).
+fn fig13_cfg(scale: TraceScale) -> Config {
+    let f = scale_factor(scale);
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.controller.t_init_secs = 3600.0;
+    cfg.cost.instance.ram_bytes = (40.0e6 * f) as u64;
+    cfg.cost.instance.dollars_per_hour = 0.017 * (40.0e6 * f) / 555.0e6;
+    cfg.scaler.max_instances = 6;
+    cfg.scaler.min_instances = 1;
+    cfg
+}
+
+/// Guest per-epoch `(t, requests, misses)` rows from the SLO record.
+fn guest_epochs(report: &RunReport) -> Vec<(TimeUs, u64, u64)> {
+    report
+        .slo
+        .iter()
+        .filter(|s| s.tenant == GUEST && s.requests > 0)
+        .map(|s| (s.t, s.requests, s.misses))
+        .collect()
+}
+
+pub fn run_fig13(ctx: &ExpContext, scale: TraceScale) -> Result<Fig13Report> {
+    let seed = 0xF16_13;
+    let trace = churn_trace(scale, seed);
+
+    let mut base_cfg = fig13_cfg(scale);
+    base_cfg.cost.miss_cost_dollars = calibrate_miss_cost(&base_cfg, &trace, 4);
+    let instance_bytes = base_cfg.cost.instance.ram_bytes;
+    // The churn runs know only the base tenant up front; the guest
+    // arrives through the event lane.
+    base_cfg.tenants = vec![TenantSpec::new(BASE, "base")];
+
+    let matrix: [(&'static str, PlacementKind); 3] = [
+        ("shared", PlacementKind::Shared),
+        ("hash_slot_pinned", PlacementKind::HashSlotPinned),
+        ("slab_partition", PlacementKind::SlabPartition),
+    ];
+    let mut variants = Vec::new();
+    for (name, placement) in matrix {
+        let mut cfg = base_cfg.clone();
+        cfg.cluster.placement = placement;
+        let mut src =
+            EventedVecSource::merged(trace.clone(), churn_events(instance_bytes));
+        let report = run(&cfg, &mut src);
+
+        // Spin-up transient vs steady state, from the per-epoch record.
+        let epochs = guest_epochs(&report);
+        anyhow::ensure!(!epochs.is_empty(), "fig13({name}): guest sent no traffic");
+        let (_, r0, m0) = epochs[0];
+        let spinup = m0 as f64 / r0 as f64;
+        let steady_rows: Vec<_> = epochs
+            .iter()
+            .skip(2)
+            .filter(|&&(t, _, _)| t <= RETIRE_AT)
+            .collect();
+        let (sr, sm) = steady_rows
+            .iter()
+            .fold((0u64, 0u64), |(r, m), &&(_, er, em)| (r + er, m + em));
+        let steady = if sr > 0 { sm as f64 / sr as f64 } else { 0.0 };
+
+        // Drain audit: the lifecycle record has the Retired transition.
+        let retired = report
+            .lifecycle
+            .iter()
+            .find(|s| s.tenant == GUEST && s.state == LifecycleState::Retired)
+            .ok_or_else(|| anyhow::anyhow!("fig13({name}): guest never retired"))?;
+        let final_bill = retired
+            .final_bill_dollars
+            .ok_or_else(|| anyhow::anyhow!("fig13({name}): no reconciled bill"))?;
+        // Reclaimed-bytes curve: the guest's post-retire ledger rows
+        // (placement samples carry only residents > 0; the curve closes
+        // with the Retired transition's zero).
+        let mut curve: Vec<(TimeUs, u64)> = report
+            .placement
+            .iter()
+            .filter(|s| s.tenant == GUEST && s.t >= RETIRE_AT)
+            .map(|s| (s.t, s.resident_bytes))
+            .collect();
+        curve.push((retired.t, retired.resident_bytes));
+
+        variants.push(Fig13Variant {
+            name,
+            placement,
+            spinup_miss_ratio: spinup,
+            steady_miss_ratio: steady,
+            drain_epochs: retired.drain_epochs,
+            reclaimed_curve: curve,
+            final_bill_dollars: final_bill,
+            report,
+        });
+    }
+
+    // Static-population baseline: both tenants rostered up front, nobody
+    // retired, identical requests.
+    let mut static_cfg = base_cfg.clone();
+    static_cfg.tenants =
+        vec![TenantSpec::new(BASE, "base"), guest_spec(instance_bytes)];
+    let baseline = run(&static_cfg, &mut VecSource::new(trace.clone()));
+    // What the baseline still holds for the guest two boundaries past
+    // the retirement point (nothing ever reclaims it).
+    let probe_at = RETIRE_AT + 2 * static_cfg.cost.epoch_us;
+    let baseline_lingering_bytes = baseline
+        .placement
+        .iter()
+        .filter(|s| s.tenant == GUEST && s.t > RETIRE_AT && s.t <= probe_at)
+        .map(|s| s.resident_bytes)
+        .last()
+        .unwrap_or(0);
+
+    // CSV artifacts: the reclaimed-bytes curves plus the headline table.
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for v in &variants {
+        for &(t, bytes) in &v.reclaimed_curve {
+            rows.push(vec![
+                v.name.to_string(),
+                format!("{:.3}", crate::us_to_secs(t) / 3600.0),
+                bytes.to_string(),
+            ]);
+        }
+    }
+    ctx.write_csv("fig13_reclaimed_bytes.csv", &["variant", "hour", "guest_bytes"], &rows)?;
+    ctx.write_csv(
+        "fig13_summary.csv",
+        &[
+            "variant",
+            "spinup_miss_ratio",
+            "steady_miss_ratio",
+            "drain_epochs",
+            "final_bill_usd",
+            "total_usd",
+        ],
+        &variants
+            .iter()
+            .map(|v| {
+                vec![
+                    v.name.to_string(),
+                    format!("{:.6}", v.spinup_miss_ratio),
+                    format!("{:.6}", v.steady_miss_ratio),
+                    v.drain_epochs.to_string(),
+                    format!("{:.6}", v.final_bill_dollars),
+                    format!("{:.6}", v.report.total_cost),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+
+    Ok(Fig13Report {
+        admit_at: ADMIT_AT,
+        retire_at: RETIRE_AT,
+        variants,
+        baseline_lingering_bytes,
+        baseline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fold a report's per-tenant epoch bills exactly as the tracker
+    /// accumulated them: per epoch in row order, then across epochs.
+    fn fold_bills(report: &RunReport, tenant: Option<u16>) -> (f64, f64) {
+        let (mut s, mut m) = (0.0, 0.0);
+        let (mut se, mut me) = (0.0, 0.0);
+        let mut cur = None;
+        for b in &report.tenant_bills {
+            if let Some(t) = tenant {
+                if b.tenant != t {
+                    continue;
+                }
+            }
+            if cur != Some(b.t) {
+                s += se;
+                m += me;
+                se = 0.0;
+                me = 0.0;
+                cur = Some(b.t);
+            }
+            se += b.storage;
+            me += b.miss;
+        }
+        (s + se, m + me)
+    }
+
+    #[test]
+    fn churn_drains_reconciles_and_pays_the_spinup_transient() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let ctx = ExpContext::standard(TraceScale::Smoke, dir.path());
+        let rep = run_fig13(&ctx, TraceScale::Smoke).unwrap();
+        assert_eq!(rep.variants.len(), 3);
+
+        for v in &rep.variants {
+            // The spin-up epoch is the cold-cache transient: it misses
+            // harder than the warm steady state.
+            assert!(
+                v.spinup_miss_ratio > v.steady_miss_ratio,
+                "{}: spin-up {} should exceed steady {}",
+                v.name,
+                v.spinup_miss_ratio,
+                v.steady_miss_ratio
+            );
+            // After RETIRE the ledger row reaches 0 within K boundaries,
+            // under every placement policy.
+            assert!(
+                v.drain_epochs <= MAX_DRAIN_EPOCHS,
+                "{}: drain took {} epochs",
+                v.name,
+                v.drain_epochs
+            );
+            let (_, last) = v.reclaimed_curve.last().unwrap();
+            assert_eq!(*last, 0, "{}: drain must end at zero bytes", v.name);
+            // The reconciled final bill equals the fold of the guest's
+            // per-epoch bills — exact, not approximate.
+            let rec = v
+                .report
+                .reconciliations
+                .iter()
+                .find(|r| r.tenant == GUEST)
+                .expect("guest reconciliation");
+            let (s, m) = fold_bills(&v.report, Some(GUEST));
+            assert_eq!(rec.storage_dollars, s, "{}: storage fold", v.name);
+            assert_eq!(rec.miss_dollars, m, "{}: miss fold", v.name);
+            assert_eq!(rec.total_dollars, s + m, "{}: total fold", v.name);
+            assert!(rec.total_dollars > 0.0);
+            // And the whole cluster bill is the fold of every tenant's
+            // bills, bit for bit.
+            let (cs, cm) = fold_bills(&v.report, None);
+            assert_eq!(
+                cs + cm,
+                v.report.total_cost,
+                "{}: Σ tenant bills != cluster bill",
+                v.name
+            );
+        }
+
+        // The static baseline never reclaims: the guest's bytes linger
+        // after its traffic stops, exactly what the drain removes.
+        assert!(
+            rep.baseline_lingering_bytes > 0,
+            "baseline should still hold guest bytes"
+        );
+
+        // Artifacts exist.
+        assert!(dir.path().join("fig13_reclaimed_bytes.csv").exists());
+        assert!(dir.path().join("fig13_summary.csv").exists());
+    }
+}

@@ -6,6 +6,7 @@ mod ablations;
 mod fig10_tenants;
 mod fig11_slo;
 mod fig12_placement;
+mod fig13_churn;
 mod fig1_overhead;
 mod fig2_mrc_accuracy;
 mod fig4_trace;
@@ -15,10 +16,16 @@ mod fig8_ttlopt;
 mod fig9_balance;
 mod irm_convergence;
 
-pub use ablations::{run_epoch_ablation, run_gain_ablation, run_instance_ablation, run_per_content_ablation, AblationReport};
+pub use ablations::{
+    run_epoch_ablation, run_gain_ablation, run_instance_ablation, run_per_content_ablation,
+    AblationReport,
+};
 pub use fig10_tenants::{run_fig10, tenant_specs, tenant_trace, Fig10Report, TenantOutcome};
 pub use fig11_slo::{fig11_specs, run_fig11, Fig11Report};
 pub use fig12_placement::{fig12_specs, run_fig12, Fig12Report, Fig12Variant};
+pub use fig13_churn::{
+    churn_events, churn_trace, guest_spec, run_fig13, Fig13Report, Fig13Variant,
+};
 pub use fig1_overhead::run_fig1;
 pub use fig2_mrc_accuracy::run_fig2;
 pub use fig4_trace::run_fig4;

@@ -77,9 +77,31 @@
 //!   grants, or `slab_partition` Memshare-style per-instance byte floors
 //!   — surfaced via the `PLACEMENT` serve command, `physical_bytes` in
 //!   `STATS <tenant>`, and [`engine::PlacementProbe`];
+//! * the **online tenant lifecycle** ([`tenant::Lifecycle`]):
+//!   `Admitted → Active → Draining → Retired`, driven mid-run by the
+//!   serve protocol's `ADMIT`/`RETIRE` commands, by
+//!   [`engine::Engine::admit_tenant`]/[`engine::Engine::retire_tenant`],
+//!   or by the **tenant-event lane** of trace format v3
+//!   ([`trace::TenantEvent`]; v1/v2 still readable). Retirement drains
+//!   rather than drops — the controller leaves the bank at once,
+//!   placement pins/floors are released, residents are shed to zero
+//!   within [`tenant::MAX_DRAIN_EPOCHS`] boundaries — and ends in a
+//!   **billing reconciliation**: each epoch's storage bill is
+//!   attributed across tenants by resident bytes
+//!   ([`cost::TenantEpochBill`]) with
+//!   `Σ per-epoch tenant bills == total cluster bill` exact by
+//!   construction, and the departed tenant's ledger closes into a
+//!   [`cost::TenantReconciliation`];
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
-//!   plus the multi-tenant fig10 study, the fig11 SLO-enforcement study
-//!   and the fig12 placement-isolation study ([`experiments`]).
+//!   plus the multi-tenant fig10 study, the fig11 SLO-enforcement
+//!   study, the fig12 placement-isolation study and the fig13
+//!   online-churn study ([`experiments`]).
+//!
+//! The prose map of all of this — module layout, the per-request
+//! dataflow and the per-epoch control loop — lives in
+//! `docs/ARCHITECTURE.md`; the serve wire protocol in
+//! `docs/PROTOCOL.md`; the figure-to-claim table in
+//! `docs/EXPERIMENTS.md`.
 //!
 //! Time is measured in microseconds ([`TimeUs`]); object sizes in bytes.
 

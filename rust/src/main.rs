@@ -1,17 +1,21 @@
 //! `elastictl` — CLI for the elastic cloud-cache coordinator.
 //!
 //! ```text
-//! elastictl gen-trace <out> [--kind akamai|irm|tenants] [--scale smoke|small|full] [--seed N]
+//! elastictl gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
 //! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
 //! elastictl exp <id> [--scale smoke|small|full] [--out DIR]
-//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 irm all
+//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 irm all
 //! elastictl plan <trace>
 //! elastictl ttlopt <trace>
 //! elastictl serve [--addr HOST:PORT] [--policy ...]
 //! Global: --config <file.toml>
 //! ```
 //!
-//! Argument parsing is hand-rolled (the offline build has no clap).
+//! `--kind churn` writes a format-v3 trace whose event lane admits and
+//! retires a guest tenant mid-run; replaying it with `run --policy
+//! tenant_ttl` drives the full lifecycle (drain + billing
+//! reconciliation). Argument parsing is hand-rolled (the offline build
+//! has no clap).
 
 use elastictl::config::{Config, PolicyKind};
 use elastictl::experiments::{self, ExpContext, TraceScale};
@@ -20,12 +24,12 @@ use elastictl::Result;
 use std::path::PathBuf;
 
 const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve> [args]
-  gen-trace <out> [--kind akamai|irm|tenants] [--scale smoke|small|full] [--seed N]
+  gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
   run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
-  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 irm ablations all)
+  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 irm ablations all)
   plan <trace>
   ttlopt <trace>
-  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, EPOCH, QUIT)";
+  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, ADMIT tenant [k=v..], RETIRE tenant, EPOCH, QUIT — see docs/PROTOCOL.md)";
 
 /// Minimal flag parser: positionals + `--key value` pairs.
 struct Args {
@@ -110,6 +114,17 @@ fn main() -> Result<()> {
             let kind = args.flag_or("kind", "akamai");
             let scale = parse_scale(&args.flag_or("scale", "smoke"))?;
             let seed: Option<u64> = args.flag("seed").map(|s| s.parse()).transpose()?;
+            // The churn kind writes a v3 trace with the tenant-event lane
+            // (mid-run ADMIT/RETIRE); every other kind stays request-only
+            // v2.
+            if kind == "churn" {
+                let reqs = experiments::churn_trace(scale, seed.unwrap_or(0xF16_13));
+                let events = experiments::churn_events(cfg.cost.instance.ram_bytes);
+                let items = trace::merge_items(reqs, events);
+                let n = trace::write_items(&out, &items)?;
+                println!("wrote {n} items (requests + tenant events) to {}", out.display());
+                return Ok(());
+            }
             let reqs = match kind.as_str() {
                 "akamai" => {
                     let mut sc: SynthConfig = scale.synth_config();
@@ -127,7 +142,7 @@ fn main() -> Result<()> {
                 }
                 // The fig10 three-tenant mux (api/web/batch profiles).
                 "tenants" => experiments::tenant_trace(scale, seed.unwrap_or(0xF16_10)),
-                other => anyhow::bail!("unknown trace kind {other} (akamai|irm|tenants)"),
+                other => anyhow::bail!("unknown trace kind {other} (akamai|irm|tenants|churn)"),
             };
             let n = trace::write_trace(&out, &reqs)?;
             println!("wrote {n} requests to {}", out.display());
@@ -270,6 +285,10 @@ fn run_experiment(id: &str, scale: TraceScale, out: &PathBuf) -> Result<()> {
     if all || id == "fig12" || id == "placement" {
         matched = true;
         println!("{}", experiments::run_fig12(&ctx, scale)?.render());
+    }
+    if all || id == "fig13" || id == "churn" {
+        matched = true;
+        println!("{}", experiments::run_fig13(&ctx, scale)?.render());
     }
     if all || id == "ablations" {
         matched = true;

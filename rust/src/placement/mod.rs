@@ -138,6 +138,11 @@ pub trait PlacementPolicy: Send {
         let _ = tenant;
         None
     }
+
+    /// A tenant is retiring: release whatever the policy holds for it
+    /// (pins, floors) so the drain can reclaim its residents and nothing
+    /// stale survives into a later re-admission. Default: nothing held.
+    fn release(&mut self, _tenant: TenantId) {}
 }
 
 /// Build the configured placement policy.
@@ -301,6 +306,12 @@ impl PlacementPolicy for HashSlotPinned {
     fn pins(&self, tenant: TenantId) -> Option<&[u32]> {
         self.pins.get(tenant as usize).map(|v| v.as_slice())
     }
+
+    fn release(&mut self, tenant: TenantId) {
+        if let Some(pins) = self.pins.get_mut(tenant as usize) {
+            pins.clear();
+        }
+    }
 }
 
 /// Memshare-style partitions inside every instance: routing stays shared,
@@ -367,6 +378,10 @@ impl PlacementPolicy for SlabPartition {
         // Always `Some`, even when empty: an epoch whose grants justify
         // no floors must still clear the previous epoch's floors.
         Some(&self.floors)
+    }
+
+    fn release(&mut self, tenant: TenantId) {
+        self.floors.retain(|&(t, _)| t != tenant);
     }
 }
 

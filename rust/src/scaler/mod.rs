@@ -17,7 +17,7 @@
 use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
 use crate::metrics::Ewma;
 use crate::mrc::{MrcProfiler, OlkenProfiler};
-use crate::tenant::TenantEnforcement;
+use crate::tenant::{AdmitOutcome, Lifecycle, TenantEnforcement, TenantSpec};
 use crate::trace::Request;
 use crate::vcache::VirtualCache;
 use crate::{TenantId, TimeUs};
@@ -93,6 +93,58 @@ pub trait EpochSizer {
     /// for policies that arbitrate tenants. `None` for tenant-oblivious
     /// policies.
     fn enforcement(&self) -> Option<Vec<TenantEnforcement>> {
+        None
+    }
+
+    // --- online tenant lifecycle (policies that arbitrate tenants) ---
+
+    /// Admit (or update) a tenant mid-run. Tenant-oblivious policies
+    /// reject the request with an error.
+    fn admit_tenant(&mut self, spec: TenantSpec, _now: TimeUs) -> crate::Result<AdmitOutcome> {
+        anyhow::bail!(
+            "policy {} does not arbitrate tenants (cannot admit tenant {})",
+            self.name(),
+            spec.id
+        )
+    }
+
+    /// Begin retiring a tenant mid-run: its controller leaves the bank
+    /// and the balancer drains its residents at the following epoch
+    /// boundaries. Tenant-oblivious policies reject the request.
+    fn retire_tenant(&mut self, tenant: TenantId, _now: TimeUs) -> crate::Result<()> {
+        anyhow::bail!(
+            "policy {} does not arbitrate tenants (cannot retire tenant {tenant})",
+            self.name()
+        )
+    }
+
+    /// Tenants currently draining toward retirement (the balancer sheds
+    /// each of these to zero resident bytes at every epoch boundary).
+    fn draining(&self) -> Vec<TenantId> {
+        Vec::new()
+    }
+
+    /// The balancer reports that a draining tenant's residents reached
+    /// zero at the boundary at `now`. Default: ignored.
+    fn note_drained(&mut self, _tenant: TenantId, _now: TimeUs) {}
+
+    /// Drain the queue of tenants whose retirement completed since the
+    /// last call (the engine reconciles their bills from this).
+    fn take_retired(&mut self) -> Vec<TenantId> {
+        Vec::new()
+    }
+
+    /// Per-tenant lifecycle records, for policies that track tenant
+    /// lifecycles. `None` for tenant-oblivious policies.
+    fn lifecycle(&self) -> Option<Vec<(TenantId, Lifecycle)>> {
+        None
+    }
+
+    /// The spec currently registered for `tenant` (`None` for
+    /// tenant-oblivious policies or unknown tenants). Serve's `ADMIT`
+    /// seeds partial updates from this so unspecified keys keep their
+    /// values.
+    fn tenant_spec(&self, _tenant: TenantId) -> Option<TenantSpec> {
         None
     }
 }

@@ -2,15 +2,19 @@
 //! have implemented the scheme described in Sect. 5.2 in a custom tool
 //! similar to mcrouter").
 //!
-//! Line protocol over TCP (one request per line, ASCII):
+//! The full line-protocol reference (wire examples, error strings, the
+//! operator workflow) lives in `docs/PROTOCOL.md` at the repository
+//! root. Summary (one request per line, ASCII over TCP):
 //!
 //! ```text
 //! GET <key> <size>\n          -> HIT | MISS | SPURIOUS\n
 //! GET <tenant>/<key> <size>\n -> HIT | MISS | SPURIOUS\n   (tenant ∈ 0..65535)
 //! STATS\n                     -> one-line JSON, global counters\n
 //! STATS <tenant>\n            -> one-line JSON, that tenant's counters
-//!                                (incl. `physical_bytes`, the tenant's
-//!                                resident bytes in the placement ledger)\n
+//!                                (incl. `physical_bytes` + lifecycle
+//!                                `state`); `ERR unknown tenant` for a
+//!                                tenant the lifecycle layer never admitted
+//!                                or already retired\n
 //! SLO <tenant>\n              -> one-line JSON, that tenant's enforcement
 //!                                state (grant, occupancy cap, TTL clamp,
 //!                                measured vs target miss ratio, priority
@@ -20,6 +24,10 @@
 //!                                (`[placement]` config section) plus every
 //!                                active tenant's resident bytes and — for
 //!                                hash_slot_pinned — its instance pins
+//! ADMIT <tenant> [reserved_mb=X] [slo=Y] [multiplier=Z] [name=N]\n
+//!                             -> OK <tenant> admitted|updated|readmitted\n
+//! RETIRE <tenant>\n           -> OK <tenant> draining\n  (drains, then
+//!                                reconciles the bill at epoch boundaries)
 //! EPOCH\n                     -> RESIZED <n>\n      (forces an epoch boundary)
 //! QUIT\n                      -> BYE\n (closes the connection)
 //! ```
@@ -33,7 +41,12 @@
 //! bytes, and where (`shared` spreads every tenant over the slot map;
 //! `hash_slot_pinned` confines each tenant to the listed pins;
 //! `slab_partition` keeps Memshare-style reserved floors inside every
-//! instance).
+//! instance). `ADMIT`/`RETIRE` drive the online tenant lifecycle
+//! ([`crate::tenant::Lifecycle`]): a retired tenant *drains* — its
+//! controller leaves the bank at once, its residents are shed at the
+//! following `EPOCH` boundaries, and once the ledger row reads zero its
+//! bill is reconciled. Both answer `ERR` on policies that do not
+//! arbitrate tenants.
 //!
 //! Tenant-prefix parsing is enabled only when the server is tenant-aware
 //! (a `[tenantN]` roster in the config, or the `tenant_ttl` policy) — a
@@ -161,6 +174,23 @@ impl ServerState {
                 },
             },
             Some("PLACEMENT") => Some(self.placement_line()),
+            Some("ADMIT") => match parts.next() {
+                None => Some("ERR ADMIT needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.admit_line(tenant, parts)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("RETIRE") => match parts.next() {
+                None => Some("ERR RETIRE needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(match self.engine.retire_tenant(tenant) {
+                        Ok(()) => format!("OK {tenant} draining"),
+                        Err(e) => format!("ERR {e}"),
+                    }),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
             Some("EPOCH") => {
                 let n = self.engine.force_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
@@ -168,6 +198,49 @@ impl ServerState {
             Some("QUIT") => None,
             Some(other) => Some(format!("ERR unknown command {other}")),
             None => Some("ERR empty".to_string()),
+        }
+    }
+
+    /// `ADMIT <tenant> [reserved_mb=X] [slo=Y] [multiplier=Z] [name=N]`:
+    /// parse the key=value spec fields and admit (or update / re-admit)
+    /// the tenant through the engine. A known tenant's update seeds from
+    /// its currently registered spec, so unspecified keys keep their
+    /// values (a brand-new tenant starts from defaults).
+    fn admit_line<'a>(
+        &mut self,
+        tenant: TenantId,
+        args: impl Iterator<Item = &'a str>,
+    ) -> String {
+        let mut spec = self
+            .engine
+            .tenant_spec(tenant)
+            .unwrap_or_else(|| crate::tenant::TenantSpec::new(tenant, format!("tenant{tenant}")));
+        for arg in args {
+            let Some((key, value)) = arg.split_once('=') else {
+                return format!("ERR bad admit arg {arg} (want key=value)");
+            };
+            match key {
+                "reserved_mb" => match value.parse::<f64>() {
+                    Ok(mb) if mb >= 0.0 && mb.is_finite() => {
+                        spec.reserved_bytes = (mb * 1024.0 * 1024.0) as u64;
+                    }
+                    _ => return format!("ERR bad reserved_mb {value}"),
+                },
+                "slo" => match value.parse::<f64>() {
+                    Ok(r) if (0.0..=1.0).contains(&r) => spec.slo_miss_ratio = Some(r),
+                    _ => return format!("ERR bad slo {value} (want a miss ratio in [0,1])"),
+                },
+                "multiplier" => match value.parse::<f64>() {
+                    Ok(m) if m > 0.0 && m.is_finite() => spec.miss_cost_multiplier = m,
+                    _ => return format!("ERR bad multiplier {value}"),
+                },
+                "name" => spec.name = value.to_string(),
+                other => return format!("ERR unknown admit key {other}"),
+            }
+        }
+        match self.engine.admit_tenant(spec) {
+            Ok(outcome) => format!("OK {tenant} {}", outcome.as_str()),
+            Err(e) => format!("ERR {e}"),
         }
     }
 
@@ -207,8 +280,24 @@ impl ServerState {
         )
     }
 
-    /// One-line JSON for `STATS <tenant>`.
+    /// One-line JSON for `STATS <tenant>`. On a lifecycle-tracking policy
+    /// an unknown or retired tenant answers the documented
+    /// `ERR unknown tenant` instead of fabricating (or lazily admitting)
+    /// a zero row; tenant-oblivious policies keep the legacy zeros so
+    /// pre-lifecycle deployments see no behavior change.
     fn tenant_stats_line(&self, tenant: TenantId) -> String {
+        let life = self.engine.tenant_lifecycle_of(tenant);
+        let state = if self.engine.tenant_lifecycle().is_some() {
+            match life {
+                None => return format!("ERR unknown tenant {tenant}"),
+                Some(l) if l.state() == crate::tenant::LifecycleState::Retired => {
+                    return format!("ERR unknown tenant {tenant} (retired)");
+                }
+                Some(l) => format!(",\"state\":\"{}\"", l.state().as_str()),
+            }
+        } else {
+            String::new()
+        };
         let hm = self.engine.tenant_stats_of(tenant);
         let ledger = self.engine.costs().tenant_ledger(tenant);
         let ttl = self
@@ -219,13 +308,14 @@ impl ServerState {
             .unwrap_or_else(|| "null".into());
         format!(
             "{{\"tenant\":{},\"requests\":{},\"misses\":{},\"miss_cost\":{:.9},\
-             \"physical_bytes\":{},\"ttl_secs\":{}}}",
+             \"physical_bytes\":{},\"ttl_secs\":{}{}}}",
             tenant,
             hm.total(),
             hm.misses,
             ledger.miss_dollars,
             self.engine.tenant_physical_bytes(tenant),
             ttl,
+            state,
         )
     }
 
@@ -481,9 +571,77 @@ mod tests {
             (m1 / m2 - 8.0).abs() < 0.2,
             "m1={m1} m2={m2} (want 4.0/0.5 = 8×)"
         );
-        // A quiet tenant reads as zeros, not an error.
+        // Roster tenants carry their lifecycle state.
+        assert!(s1.contains("\"state\":\"active\""), "{s1}");
+        // A tenant the lifecycle layer never admitted is an error, not a
+        // silently fabricated zero row.
         let s9 = st.handle_line("STATS 9").unwrap();
-        assert!(s9.contains("\"requests\":0"), "{s9}");
+        assert_eq!(s9, "ERR unknown tenant 9");
+    }
+
+    #[test]
+    fn admit_and_retire_commands_drive_the_lifecycle() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 4;
+        cfg.tenants = vec![TenantSpec::new(0, "base")];
+        let mut st = ServerState::new(&cfg);
+        // Admit a new tenant with spec fields.
+        assert_eq!(
+            st.handle_line("ADMIT 5 reserved_mb=1 slo=0.2 multiplier=3.0 name=guest")
+                .unwrap(),
+            "OK 5 admitted"
+        );
+        let s = st.handle_line("STATS 5").unwrap();
+        assert!(s.contains("\"state\":\"admitted\""), "{s}");
+        // Its traffic activates it and lands on its own objects.
+        assert_eq!(st.handle_line("GET 5/k1 100000").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET 5/k1 100000").unwrap(), "HIT");
+        let s = st.handle_line("STATS 5").unwrap();
+        assert!(s.contains("\"state\":\"active\""), "{s}");
+        assert!(s.contains("\"physical_bytes\":100000"), "{s}");
+        // A second ADMIT is a live spec update; unspecified keys keep
+        // their values (the partial update must not reset the 3×
+        // multiplier or the reservation to defaults).
+        assert_eq!(st.handle_line("ADMIT 5 slo=0.5").unwrap(), "OK 5 updated");
+        let spec = st.engine.tenant_spec(5).unwrap();
+        assert_eq!(spec.miss_cost_multiplier, 3.0, "{spec:?}");
+        assert_eq!(spec.reserved_bytes, 1024 * 1024, "{spec:?}");
+        assert_eq!(spec.slo_miss_ratio, Some(0.5), "{spec:?}");
+        assert_eq!(spec.name, "guest", "{spec:?}");
+        // Retire: the tenant drains at the next EPOCH, then reads as
+        // unknown (its bill reconciled).
+        assert_eq!(st.handle_line("RETIRE 5").unwrap(), "OK 5 draining");
+        let s = st.handle_line("STATS 5").unwrap();
+        assert!(s.contains("\"state\":\"draining\""), "{s}");
+        // While draining its misses are never cached again.
+        assert_eq!(st.handle_line("GET 5/k2 100000").unwrap(), "MISS");
+        assert_eq!(st.handle_line("GET 5/k2 100000").unwrap(), "MISS");
+        st.handle_line("EPOCH");
+        assert_eq!(st.engine.tenant_physical_bytes(5), 0, "drain must reclaim");
+        assert_eq!(
+            st.handle_line("STATS 5").unwrap(),
+            "ERR unknown tenant 5 (retired)"
+        );
+        assert_eq!(st.engine.costs().reconciliations().len(), 1);
+        // Re-admission starts a fresh lifecycle.
+        assert_eq!(st.handle_line("ADMIT 5").unwrap(), "OK 5 readmitted");
+        let s = st.handle_line("STATS 5").unwrap();
+        assert!(s.contains("\"state\":\"admitted\""), "{s}");
+        // Error surface: bad ids, bad args, double retire, unknown
+        // tenants, and tenant-oblivious policies.
+        assert!(st.handle_line("ADMIT").unwrap().starts_with("ERR"));
+        assert!(st.handle_line("ADMIT nope").unwrap().starts_with("ERR bad tenant"));
+        assert!(st.handle_line("ADMIT 6 bogus").unwrap().starts_with("ERR bad admit arg"));
+        assert!(st.handle_line("ADMIT 6 slo=7").unwrap().starts_with("ERR bad slo"));
+        assert!(st.handle_line("ADMIT 6 frob=1").unwrap().starts_with("ERR unknown admit key"));
+        assert!(st.handle_line("RETIRE").unwrap().starts_with("ERR"));
+        assert!(st.handle_line("RETIRE nope").unwrap().starts_with("ERR bad tenant"));
+        assert!(st.handle_line("RETIRE 99").unwrap().starts_with("ERR"));
+        let mut plain = state(PolicyKind::Ttl);
+        assert!(plain.handle_line("ADMIT 1").unwrap().starts_with("ERR"));
+        assert!(plain.handle_line("RETIRE 1").unwrap().starts_with("ERR"));
     }
 
     #[test]

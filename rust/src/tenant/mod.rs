@@ -55,6 +55,8 @@
 //! additionally confine tenants to instance subsets or Memshare-style
 //! per-instance byte partitions sized from this module's grants.
 
+#![warn(missing_docs)]
+
 use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
 use crate::scaler::{EpochSizer, PolicyWork};
 use crate::trace::Request;
@@ -66,6 +68,134 @@ use crate::{ObjectId, TenantId, TimeUs};
 const SLO_BOOST_STEP: f64 = 2.0;
 /// Ceiling on the SLO escalation factor.
 const SLO_BOOST_MAX: f64 = 64.0;
+
+/// Drain bound K: a retiring tenant's residents must reach zero within
+/// this many epoch boundaries (the balancer sheds the whole ledger row at
+/// every boundary while the tenant drains; strict-LRU stores clear in
+/// one, the bound leaves headroom for best-effort stores). Pinned by the
+/// `tenant_churn` property suite and the `exp fig13` smoke test.
+pub const MAX_DRAIN_EPOCHS: u32 = 4;
+
+/// Where a tenant stands in its online lifecycle.
+///
+/// ```text
+/// Admitted ──first request──▶ Active ──RETIRE──▶ Draining ──drained──▶ Retired
+///     ▲                                                                  │
+///     └───────────────────────── re-ADMIT ──────────────────────────────┘
+/// ```
+///
+/// `Admitted` tenants are registered (explicitly via
+/// [`ControllerBank::admit_tenant`], lazily by their first request, or
+/// from the `[tenantN]` config roster) but have not served traffic yet.
+/// A `Draining` tenant's controller has left the bank (no shadow updates,
+/// no grants, no admissions); its residents are shed at epoch boundaries
+/// until the ledger row reaches zero, at which point it becomes `Retired`
+/// and its bill is reconciled ([`crate::cost::CostTracker::close_tenant`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleState {
+    /// Registered, no traffic served yet.
+    Admitted,
+    /// Serving traffic; the arbiter grants it capacity.
+    Active,
+    /// Retirement requested; residents being reclaimed.
+    Draining,
+    /// Fully drained; bill reconciled. Terminal until re-admission.
+    Retired,
+}
+
+impl LifecycleState {
+    /// Stable lowercase name (serve protocol / CSV artifacts).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LifecycleState::Admitted => "admitted",
+            LifecycleState::Active => "active",
+            LifecycleState::Draining => "draining",
+            LifecycleState::Retired => "retired",
+        }
+    }
+}
+
+/// One tenant's lifecycle record: the state plus the transition
+/// timestamps an operator (or `exp fig13`) needs to audit a churn run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lifecycle {
+    state: LifecycleState,
+    /// When the tenant was (last) admitted.
+    pub admitted_at: TimeUs,
+    /// When it served its first request after (re-)admission.
+    pub activated_at: Option<TimeUs>,
+    /// When retirement was requested (drain start).
+    pub retire_requested_at: Option<TimeUs>,
+    /// When the drain completed and the bill was reconciled.
+    pub retired_at: Option<TimeUs>,
+    /// Epoch boundaries spent draining (≤ [`MAX_DRAIN_EPOCHS`]).
+    pub drain_epochs: u32,
+}
+
+impl Lifecycle {
+    /// A freshly admitted lifecycle.
+    pub fn admitted_at(now: TimeUs) -> Lifecycle {
+        Lifecycle {
+            state: LifecycleState::Admitted,
+            admitted_at: now,
+            activated_at: None,
+            retire_requested_at: None,
+            retired_at: None,
+            drain_epochs: 0,
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> LifecycleState {
+        self.state
+    }
+
+    /// Whether the tenant participates in arbitration (shadow updates,
+    /// demands, grants).
+    pub fn participates(&self) -> bool {
+        matches!(self.state, LifecycleState::Admitted | LifecycleState::Active)
+    }
+
+    fn activate(&mut self, now: TimeUs) {
+        if self.state == LifecycleState::Admitted {
+            self.state = LifecycleState::Active;
+            self.activated_at = Some(now);
+        }
+    }
+
+    fn begin_drain(&mut self, now: TimeUs) {
+        self.state = LifecycleState::Draining;
+        self.retire_requested_at = Some(now);
+        self.drain_epochs = 0;
+    }
+
+    fn finish_drain(&mut self, now: TimeUs) {
+        self.state = LifecycleState::Retired;
+        self.retired_at = Some(now);
+    }
+}
+
+/// What a mid-run `ADMIT` actually did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    /// A brand-new tenant was admitted.
+    Admitted,
+    /// A live tenant's spec (reservation, SLO, weight) was updated.
+    Updated,
+    /// A retired tenant was re-admitted with a fresh lifecycle.
+    Readmitted,
+}
+
+impl AdmitOutcome {
+    /// Stable lowercase name (serve protocol responses).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmitOutcome::Admitted => "admitted",
+            AdmitOutcome::Updated => "updated",
+            AdmitOutcome::Readmitted => "readmitted",
+        }
+    }
+}
 
 /// Traffic class of a tenant — a coarse service-level label, reported in
 /// ledgers and usable by operators to pick miss-cost multipliers.
@@ -80,6 +210,7 @@ pub enum TrafficClass {
 }
 
 impl TrafficClass {
+    /// Stable lowercase name (config files, reports).
     pub fn as_str(self) -> &'static str {
         match self {
             TrafficClass::Interactive => "interactive",
@@ -88,6 +219,7 @@ impl TrafficClass {
         }
     }
 
+    /// Parse the [`Self::as_str`] form back.
     pub fn parse(s: &str) -> crate::Result<TrafficClass> {
         Ok(match s {
             "interactive" => TrafficClass::Interactive,
@@ -101,11 +233,14 @@ impl TrafficClass {
 /// Static description of one tenant.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TenantSpec {
+    /// Compact tenant identifier carried by requests.
     pub id: TenantId,
+    /// Display name (reports, config sections).
     pub name: String,
     /// Multiplier applied to the catalog per-miss cost for this tenant
     /// (its misses cost `multiplier × m_o` dollars).
     pub miss_cost_multiplier: f64,
+    /// Coarse service-level label.
     pub class: TrafficClass,
     /// Memshare-style reservation: bytes of the shared cluster guaranteed
     /// to this tenant even under contention (`[tenantN] reserved_mb`).
@@ -120,6 +255,8 @@ pub struct TenantSpec {
 }
 
 impl TenantSpec {
+    /// A default spec: 1× miss cost, standard class, no reservation, no
+    /// SLO.
     pub fn new(id: TenantId, name: impl Into<String>) -> TenantSpec {
         TenantSpec {
             id,
@@ -131,21 +268,25 @@ impl TenantSpec {
         }
     }
 
+    /// Set the miss-cost multiplier.
     pub fn with_multiplier(mut self, m: f64) -> TenantSpec {
         self.miss_cost_multiplier = m;
         self
     }
 
+    /// Set the traffic class.
     pub fn with_class(mut self, class: TrafficClass) -> TenantSpec {
         self.class = class;
         self
     }
 
+    /// Set the Memshare-style byte reservation.
     pub fn with_reserved_bytes(mut self, bytes: u64) -> TenantSpec {
         self.reserved_bytes = bytes;
         self
     }
 
+    /// Set the miss-ratio SLO target.
     pub fn with_slo_miss_ratio(mut self, target: f64) -> TenantSpec {
         self.slo_miss_ratio = Some(target);
         self
@@ -167,6 +308,7 @@ pub struct TenantRegistry {
 }
 
 impl TenantRegistry {
+    /// An empty registry.
     pub fn new() -> TenantRegistry {
         TenantRegistry { specs: Vec::new() }
     }
@@ -187,6 +329,7 @@ impl TenantRegistry {
         reg
     }
 
+    /// Register (or replace, by id) one spec.
     pub fn register(&mut self, spec: TenantSpec) {
         match self.specs.iter_mut().find(|s| s.id == spec.id) {
             Some(slot) => *slot = spec,
@@ -194,18 +337,22 @@ impl TenantRegistry {
         }
     }
 
+    /// Number of registered tenants.
     pub fn len(&self) -> usize {
         self.specs.len()
     }
 
+    /// Whether no tenant is registered.
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
 
+    /// Iterate the registered specs in registration order.
     pub fn iter(&self) -> impl Iterator<Item = &TenantSpec> {
         self.specs.iter()
     }
 
+    /// The spec registered under `id`, if any.
     pub fn get(&self, id: TenantId) -> Option<&TenantSpec> {
         self.specs.iter().find(|s| s.id == id)
     }
@@ -291,11 +438,12 @@ impl SloState {
     }
 }
 
-/// One tenant's controller plus its enforcement state.
+/// One tenant's controller plus its enforcement and lifecycle state.
 struct TenantSlot {
     id: TenantId,
     vc: VirtualCache,
     slo: SloState,
+    life: Lifecycle,
     /// Occupancy cap in force, bytes of *physical residency* (the
     /// tenant's `granted_bytes`, which already contains its reserved
     /// floor); `u64::MAX` before the first epoch decision or when
@@ -320,6 +468,7 @@ struct TenantSlot {
 /// serve command and the [`crate::engine::SloProbe`] surface this).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TenantEnforcement {
+    /// The tenant this row describes.
     pub tenant: TenantId,
     /// Shadow demand at the last epoch decision, bytes.
     pub demand_bytes: u64,
@@ -373,9 +522,15 @@ pub struct ControllerBank {
     slots: Vec<TenantSlot>,
     /// tenant id → slot index (`u32::MAX` = absent), grown on demand.
     index: Vec<u32>,
+    /// Tenants whose drain completed since the last
+    /// [`ControllerBank::take_retired`] call (billing-reconciliation
+    /// queue for the engine).
+    newly_retired: Vec<TenantId>,
 }
 
 impl ControllerBank {
+    /// One controller per registry spec, each seeing its tenant's scaled
+    /// miss cost.
     pub fn new(ctrl: &ControllerConfig, cost: CostConfig, registry: TenantRegistry) -> Self {
         let mut bank = ControllerBank {
             ctrl: ctrl.clone(),
@@ -383,6 +538,7 @@ impl ControllerBank {
             registry: TenantRegistry::new(),
             slots: Vec::new(),
             index: Vec::new(),
+            newly_retired: Vec::new(),
         };
         for spec in registry.iter() {
             bank.admit(spec.clone());
@@ -400,6 +556,10 @@ impl ControllerBank {
     }
 
     fn admit(&mut self, spec: TenantSpec) {
+        self.admit_at(spec, 0);
+    }
+
+    fn admit_at(&mut self, spec: TenantSpec, now: TimeUs) {
         let vc = VirtualCache::new(&self.ctrl, self.scaled_cost(spec.miss_cost_multiplier));
         let slot = self.slots.len() as u32;
         let id = spec.id as usize;
@@ -411,6 +571,7 @@ impl ControllerBank {
             id: spec.id,
             vc,
             slo: SloState::new(spec.slo_miss_ratio),
+            life: Lifecycle::admitted_at(now),
             cap_bytes: u64::MAX,
             physical_bytes: 0,
             epoch_admitted_bytes: 0,
@@ -422,14 +583,144 @@ impl ControllerBank {
         self.registry.register(spec);
     }
 
+    /// Admit (or update) a tenant mid-run — the serve protocol's `ADMIT`
+    /// and the trace event lane land here.
+    ///
+    /// * Unknown tenant → fresh slot in [`LifecycleState::Admitted`].
+    /// * [`LifecycleState::Retired`] tenant → re-admission: a fresh
+    ///   controller, SLO tracker and lifecycle; the cumulative cost
+    ///   ledger keeps its history (the closed lifetime was already
+    ///   reconciled).
+    /// * Live (`Admitted`/`Active`) tenant → spec update: registry row,
+    ///   SLO target and reservation change; the controller keeps its
+    ///   trajectory.
+    /// * [`LifecycleState::Draining`] tenant → error: the drain must
+    ///   finish (and the bill reconcile) before re-admission.
+    pub fn admit_tenant(&mut self, spec: TenantSpec, now: TimeUs) -> crate::Result<AdmitOutcome> {
+        let idx = self.index.get(spec.id as usize).copied().unwrap_or(u32::MAX);
+        if idx == u32::MAX {
+            self.admit_at(spec, now);
+            return Ok(AdmitOutcome::Admitted);
+        }
+        let scaled = self.scaled_cost(spec.miss_cost_multiplier);
+        let slo = spec.slo_miss_ratio;
+        let ctrl = self.ctrl.clone();
+        let slot = &mut self.slots[idx as usize];
+        match slot.life.state() {
+            LifecycleState::Draining => {
+                anyhow::bail!("tenant {} is draining; retire must finish first", spec.id)
+            }
+            LifecycleState::Retired => {
+                slot.vc = VirtualCache::new(&ctrl, scaled);
+                slot.slo = SloState::new(slo);
+                slot.life = Lifecycle::admitted_at(now);
+                slot.cap_bytes = u64::MAX;
+                slot.physical_bytes = 0;
+                slot.epoch_admitted_bytes = 0;
+                slot.denied = 0;
+                slot.last_demand = 0;
+                slot.last_grant = 0;
+                slot.decided = false;
+                self.registry.register(spec);
+                Ok(AdmitOutcome::Readmitted)
+            }
+            LifecycleState::Admitted | LifecycleState::Active => {
+                slot.slo.target = slo;
+                self.registry.register(spec);
+                Ok(AdmitOutcome::Updated)
+            }
+        }
+    }
+
+    /// Begin retiring a tenant: its controller leaves the bank (no more
+    /// shadow updates, demands or grants) and the balancer sheds its
+    /// residents at the following epoch boundaries. Errors on unknown,
+    /// already-draining and already-retired tenants.
+    pub fn retire_tenant(&mut self, tenant: TenantId, now: TimeUs) -> crate::Result<()> {
+        let idx = self.index.get(tenant as usize).copied().unwrap_or(u32::MAX);
+        anyhow::ensure!(idx != u32::MAX, "unknown tenant {tenant}");
+        let scaled = self.scaled_cost(self.registry.multiplier(tenant));
+        let ctrl = self.ctrl.clone();
+        let slot = &mut self.slots[idx as usize];
+        match slot.life.state() {
+            LifecycleState::Draining => anyhow::bail!("tenant {tenant} is already draining"),
+            LifecycleState::Retired => anyhow::bail!("tenant {tenant} is already retired"),
+            LifecycleState::Admitted | LifecycleState::Active => {}
+        }
+        slot.life.begin_drain(now);
+        // The controller leaves the bank: drop its shadow state so the
+        // aggregate demand shrinks immediately.
+        slot.vc = VirtualCache::new(&ctrl, scaled);
+        slot.cap_bytes = u64::MAX;
+        Ok(())
+    }
+
+    /// Tenants currently draining (the balancer sheds these to zero at
+    /// each epoch boundary).
+    pub fn draining(&self) -> Vec<TenantId> {
+        self.slots
+            .iter()
+            .filter(|s| s.life.state() == LifecycleState::Draining)
+            .map(|s| s.id)
+            .collect()
+    }
+
+    /// The balancer reports a draining tenant's residents reached zero:
+    /// transition to [`LifecycleState::Retired`] and queue it for billing
+    /// reconciliation.
+    pub fn note_drained(&mut self, tenant: TenantId, now: TimeUs) {
+        let idx = self.index.get(tenant as usize).copied().unwrap_or(u32::MAX);
+        if idx == u32::MAX {
+            return;
+        }
+        let slot = &mut self.slots[idx as usize];
+        if slot.life.state() == LifecycleState::Draining {
+            slot.life.finish_drain(now);
+            self.newly_retired.push(tenant);
+        }
+    }
+
+    /// Drain the queue of tenants whose retirement completed since the
+    /// last call (the engine reconciles their bills).
+    pub fn take_retired(&mut self) -> Vec<TenantId> {
+        std::mem::take(&mut self.newly_retired)
+    }
+
+    /// Count one epoch boundary against every draining tenant (the ≤ K
+    /// drain bound of [`MAX_DRAIN_EPOCHS`]).
+    fn note_epoch_boundary(&mut self) {
+        for s in &mut self.slots {
+            if s.life.state() == LifecycleState::Draining {
+                s.life.drain_epochs += 1;
+            }
+        }
+    }
+
+    /// Lifecycle record of one tenant (`None` if never admitted).
+    pub fn lifecycle_of(&self, tenant: TenantId) -> Option<Lifecycle> {
+        let idx = self.index.get(tenant as usize).copied()?;
+        if idx == u32::MAX {
+            return None;
+        }
+        Some(self.slots[idx as usize].life)
+    }
+
+    /// Every tenant's lifecycle record, in registration order.
+    pub fn lifecycle_rows(&self) -> Vec<(TenantId, Lifecycle)> {
+        self.slots.iter().map(|s| (s.id, s.life)).collect()
+    }
+
+    /// The bank's registry view (roster + lazily admitted strays).
     pub fn registry(&self) -> &TenantRegistry {
         &self.registry
     }
 
+    /// Number of tenant slots (every lifecycle state included).
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// Whether the bank holds no tenant slots.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
@@ -456,6 +747,7 @@ impl ControllerBank {
         &mut self.slot_mut(tenant).vc
     }
 
+    /// The controller of `tenant`, if one exists.
     pub fn get(&self, tenant: TenantId) -> Option<&VirtualCache> {
         let slot = self.index.get(tenant as usize).copied()?;
         if slot == u32::MAX {
@@ -464,6 +756,7 @@ impl ControllerBank {
         Some(&self.slots[slot as usize].vc)
     }
 
+    /// Iterate `(tenant, controller)` pairs in registration order.
     pub fn iter(&self) -> impl Iterator<Item = (TenantId, &VirtualCache)> {
         self.slots.iter().map(|s| (s.id, &s.vc))
     }
@@ -505,7 +798,12 @@ impl ControllerBank {
         slot.slo.record(hit);
         if !hit {
             if !admitted {
-                slot.denied += 1;
+                // Only cap refusals count: a draining/retired tenant's
+                // suppressed inserts are retirement semantics, not the
+                // occupancy cap binding.
+                if slot.life.participates() {
+                    slot.denied += 1;
+                }
             } else if !shadow_hit {
                 slot.epoch_admitted_bytes = slot.epoch_admitted_bytes.saturating_add(size);
             }
@@ -523,9 +821,12 @@ impl ControllerBank {
 
     /// Per-tenant `(demand, reserved, weight)` rows for the arbiter; the
     /// weight is the miss-cost multiplier escalated by the SLO boost.
+    /// Draining and retired tenants have left the bank: they place no
+    /// demand and hold no reservation.
     fn demands(&self) -> Vec<TenantDemand> {
         self.slots
             .iter()
+            .filter(|s| s.life.participates())
             .map(|s| TenantDemand {
                 tenant: s.id,
                 demand_bytes: s.vc.vsize(),
@@ -564,10 +865,13 @@ impl ControllerBank {
         }
     }
 
-    /// Enforcement snapshot for every tenant slot.
+    /// Enforcement snapshot for every *participating* tenant slot
+    /// (draining/retired tenants hold no grants — in particular the
+    /// balancer must not re-pin placement from their stale rows).
     fn enforcement_rows(&self, enforce: bool) -> Vec<TenantEnforcement> {
         self.slots
             .iter()
+            .filter(|s| s.life.participates())
             .map(|s| TenantEnforcement {
                 tenant: s.id,
                 demand_bytes: s.last_demand,
@@ -591,6 +895,7 @@ impl ControllerBank {
 /// One tenant's input row to an epoch arbitration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TenantDemand {
+    /// The demanding tenant.
     pub tenant: TenantId,
     /// Shadow (virtual cache) demand at the epoch boundary, bytes.
     pub demand_bytes: u64,
@@ -601,10 +906,12 @@ pub struct TenantDemand {
 }
 
 impl TenantDemand {
+    /// A demand row with no reservation.
     pub fn new(tenant: TenantId, demand_bytes: u64, weight: f64) -> TenantDemand {
         TenantDemand { tenant, demand_bytes, reserved_bytes: 0, weight }
     }
 
+    /// Set the reserved floor.
     pub fn with_reserved(mut self, bytes: u64) -> TenantDemand {
         self.reserved_bytes = bytes;
         self
@@ -614,6 +921,7 @@ impl TenantDemand {
 /// One tenant's share of an epoch sizing decision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TenantAllocation {
+    /// The granted tenant.
     pub tenant: TenantId,
     /// Shadow (virtual cache) demand at the epoch boundary, bytes.
     pub demand_bytes: u64,
@@ -639,6 +947,8 @@ pub struct Arbiter {
 }
 
 impl Arbiter {
+    /// An arbiter for `instance_bytes`-sized nodes under `scaler`'s
+    /// min/max instance bounds.
     pub fn new(instance_bytes: u64, scaler: &ScalerConfig) -> Arbiter {
         Arbiter {
             instance_bytes: instance_bytes.max(1),
@@ -733,6 +1043,8 @@ pub struct TenantTtlSizer {
 }
 
 impl TenantTtlSizer {
+    /// Build from explicit parts (see [`TenantTtlSizer::from_config`]
+    /// for the config-driven form).
     pub fn new(
         ctrl: &ControllerConfig,
         cost: CostConfig,
@@ -766,6 +1078,7 @@ impl TenantTtlSizer {
         )
     }
 
+    /// The per-tenant controller bank (read-only).
     pub fn bank(&self) -> &ControllerBank {
         &self.bank
     }
@@ -785,6 +1098,14 @@ impl EpochSizer for TenantTtlSizer {
     fn on_request(&mut self, req: &Request) -> PolicyWork {
         let enforce = self.enforce;
         let slot = self.bank.slot_mut(req.tenant);
+        if !slot.life.participates() {
+            // A draining/retired tenant is still served (the origin fetch
+            // happens either way) but its controller has left the bank:
+            // no shadow update, and the miss is never cached — residents
+            // only ever shrink while the tenant drains.
+            return PolicyWork { units: 2, shadow_hit: None, admit: false };
+        }
+        slot.life.activate(req.ts);
         let out = slot.vc.on_request(req.ts, req.obj, req.size_bytes());
         // Admission verdict, O(1): objects inside the tenant's virtual
         // (affordable) set always re-admit (repair traffic); everything
@@ -827,8 +1148,11 @@ impl EpochSizer for TenantTtlSizer {
     fn decide(&mut self, now: TimeUs) -> u32 {
         self.bank.expire_all(now);
         // Close the SLO measurement windows first so this decision's
-        // weights carry the boost earned by the epoch just ending.
+        // weights carry the boost earned by the epoch just ending, and
+        // count the boundary against any draining tenants (the ≤ K
+        // drain bound).
         self.bank.close_epoch_slo();
+        self.bank.note_epoch_boundary();
         let demands = self.bank.demands();
         let (n, allocs) = self.arbiter.decide(&demands);
         for a in &allocs {
@@ -874,6 +1198,34 @@ impl EpochSizer for TenantTtlSizer {
 
     fn enforcement(&self) -> Option<Vec<TenantEnforcement>> {
         Some(self.bank.enforcement_rows(self.enforce))
+    }
+
+    fn admit_tenant(&mut self, spec: TenantSpec, now: TimeUs) -> crate::Result<AdmitOutcome> {
+        self.bank.admit_tenant(spec, now)
+    }
+
+    fn retire_tenant(&mut self, tenant: TenantId, now: TimeUs) -> crate::Result<()> {
+        self.bank.retire_tenant(tenant, now)
+    }
+
+    fn draining(&self) -> Vec<TenantId> {
+        self.bank.draining()
+    }
+
+    fn note_drained(&mut self, tenant: TenantId, now: TimeUs) {
+        self.bank.note_drained(tenant, now);
+    }
+
+    fn take_retired(&mut self) -> Vec<TenantId> {
+        self.bank.take_retired()
+    }
+
+    fn lifecycle(&self) -> Option<Vec<(TenantId, Lifecycle)>> {
+        Some(self.bank.lifecycle_rows())
+    }
+
+    fn tenant_spec(&self, tenant: TenantId) -> Option<TenantSpec> {
+        self.bank.registry().get(tenant).cloned()
     }
 }
 
@@ -1237,6 +1589,69 @@ mod tests {
         assert_eq!(gold.measured_miss_ratio, Some(0.0));
         assert!(!gold.in_violation());
         assert_eq!(gold.boost, 1.0);
+    }
+
+    #[test]
+    fn lifecycle_states_drive_the_bank() {
+        let mut cfg = Config::default();
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.scaler.policy = crate::config::PolicyKind::TenantTtl;
+        cfg.tenants = vec![TenantSpec::new(0, "base")];
+        let mut s = TenantTtlSizer::from_config(&cfg);
+
+        // Mid-run admission: the new tenant starts Admitted and
+        // activates on its first request.
+        let outcome = s.admit_tenant(TenantSpec::new(3, "guest"), 5 * SECOND).unwrap();
+        assert_eq!(outcome, AdmitOutcome::Admitted);
+        let life = s.lifecycle().unwrap().into_iter().find(|(t, _)| *t == 3).unwrap().1;
+        assert_eq!(life.state(), LifecycleState::Admitted);
+        assert_eq!(life.admitted_at, 5 * SECOND);
+        let w = s.on_request(&Request::new(6 * SECOND, 1, 1000).with_tenant(3));
+        assert!(w.admit);
+        let life = s.lifecycle().unwrap().into_iter().find(|(t, _)| *t == 3).unwrap().1;
+        assert_eq!(life.state(), LifecycleState::Active);
+        assert_eq!(life.activated_at, Some(6 * SECOND));
+        // Updating a live tenant keeps its state.
+        assert_eq!(
+            s.admit_tenant(TenantSpec::new(3, "guest").with_slo_miss_ratio(0.2), 7 * SECOND)
+                .unwrap(),
+            AdmitOutcome::Updated
+        );
+
+        // Retirement: demand vanishes, requests are denied admission,
+        // and the tenant stops appearing in demands/enforcement.
+        assert!(s.shadow_size().unwrap() > 0);
+        s.retire_tenant(3, 8 * SECOND).unwrap();
+        assert_eq!(s.draining(), vec![3]);
+        assert_eq!(s.shadow_size(), Some(0), "controller left the bank");
+        let w = s.on_request(&Request::new(9 * SECOND, 2, 1000).with_tenant(3));
+        assert!(!w.admit, "draining tenants must not cache");
+        assert!(s.enforcement().unwrap().iter().all(|r| r.tenant != 3));
+        // Double retire / admit-while-draining are errors.
+        assert!(s.retire_tenant(3, 9 * SECOND).is_err());
+        assert!(s.admit_tenant(TenantSpec::new(3, "guest"), 9 * SECOND).is_err());
+        assert!(s.retire_tenant(99, 9 * SECOND).is_err(), "unknown tenant");
+
+        // A boundary passes, the balancer reports the drain done.
+        s.decide(10 * SECOND);
+        s.note_drained(3, 10 * SECOND);
+        assert_eq!(s.take_retired(), vec![3]);
+        assert!(s.take_retired().is_empty(), "queue drains once");
+        let life = s.lifecycle().unwrap().into_iter().find(|(t, _)| *t == 3).unwrap().1;
+        assert_eq!(life.state(), LifecycleState::Retired);
+        assert_eq!(life.drain_epochs, 1);
+        assert!(life.drain_epochs <= MAX_DRAIN_EPOCHS);
+        assert_eq!(life.retired_at, Some(10 * SECOND));
+
+        // Re-admission starts a fresh lifecycle.
+        assert_eq!(
+            s.admit_tenant(TenantSpec::new(3, "guest"), 20 * SECOND).unwrap(),
+            AdmitOutcome::Readmitted
+        );
+        let life = s.lifecycle().unwrap().into_iter().find(|(t, _)| *t == 3).unwrap().1;
+        assert_eq!(life.state(), LifecycleState::Admitted);
+        assert_eq!(life.admitted_at, 20 * SECOND);
+        assert_eq!(life.retired_at, None);
     }
 
     #[test]

@@ -3,11 +3,12 @@
 //!
 //! The paper evaluates on anonymized Akamai traces (30 days, 2·10⁹
 //! requests, 110 M objects, sizes from bytes to tens of MB, strong diurnal
-//! pattern). Those traces are proprietary, so [`synth`] generates a
-//! synthetic workload matching the two published marginals (rank-frequency
-//! and size CDF, Fig. 4) plus the diurnal modulation that drives
-//! elasticity; [`irm`] generates stationary IRM traffic for validating the
-//! stochastic-approximation theory (Proposition 1). See DESIGN.md §3.
+//! pattern). Those traces are proprietary, so [`SynthGenerator`] generates
+//! a synthetic workload matching the two published marginals
+//! (rank-frequency and size CDF, Fig. 4) plus the diurnal modulation that
+//! drives elasticity; [`IrmGenerator`] generates stationary IRM traffic
+//! for validating the stochastic-approximation theory (Proposition 1).
+//! See DESIGN.md §3.
 
 mod irm;
 mod record;
@@ -18,7 +19,8 @@ mod zipf;
 
 pub use irm::{IrmConfig, IrmGenerator};
 pub use record::{
-    read_csv, read_trace, write_csv, write_trace, CsvReader, Request, TraceReader, TraceWriter,
+    read_csv, read_items, read_trace, write_csv, write_items, write_trace, CsvReader, Request,
+    TenantEvent, TenantEventKind, TraceItem, TraceReader, TraceWriter,
 };
 pub use stats::{characterize, TraceStats};
 pub use synth::{SynthConfig, SynthGenerator};
@@ -32,6 +34,17 @@ use std::path::Path;
 pub trait RequestSource {
     /// Next request, or `None` when the trace is exhausted.
     fn next_request(&mut self) -> Option<Request>;
+
+    /// Next trace *item* — a request, or a tenant lifecycle event from
+    /// the format-v3 event lane. The default wraps [`Self::next_request`]
+    /// (request-only sources never yield events); event-carrying sources
+    /// ([`TraceReader`] on a v3 file, [`EventedVecSource`]) override it.
+    /// Event-aware consumers ([`crate::engine::run`]) drive this method;
+    /// request-only consumers keep driving `next_request` and never see
+    /// the event lane.
+    fn next_item(&mut self) -> Option<TraceItem> {
+        self.next_request().map(TraceItem::Request)
+    }
 
     /// Drain up to `n` requests into a vector.
     fn take_requests(&mut self, n: usize) -> Vec<Request> {
@@ -60,6 +73,57 @@ impl VecSource {
 impl RequestSource for VecSource {
     fn next_request(&mut self) -> Option<Request> {
         self.reqs.next()
+    }
+}
+
+/// An in-memory item stream (requests + tenant events) — the evented
+/// counterpart of [`VecSource`]; `exp fig13` scripts churn through one.
+pub struct EventedVecSource {
+    items: std::vec::IntoIter<TraceItem>,
+}
+
+impl EventedVecSource {
+    /// Wrap a pre-built item stream (callers keep it time-ordered).
+    pub fn new(items: Vec<TraceItem>) -> Self {
+        EventedVecSource { items: items.into_iter() }
+    }
+
+    /// Merge a request trace with an event schedule into one time-ordered
+    /// stream (see [`merge_items`]).
+    pub fn merged(reqs: Vec<Request>, events: Vec<TenantEvent>) -> Self {
+        Self::new(merge_items(reqs, events))
+    }
+}
+
+/// Merge a request trace with an event schedule into one time-ordered
+/// item stream (an event at time `t` fires before requests at the same
+/// `t`, so a tenant admitted at `t` owns its first request).
+pub fn merge_items(reqs: Vec<Request>, mut events: Vec<TenantEvent>) -> Vec<TraceItem> {
+    events.sort_by_key(|e| e.ts);
+    let mut items = Vec::with_capacity(reqs.len() + events.len());
+    let mut ev = events.into_iter().peekable();
+    for r in reqs {
+        while ev.peek().map(|e| e.ts <= r.ts).unwrap_or(false) {
+            items.push(TraceItem::Event(ev.next().unwrap()));
+        }
+        items.push(TraceItem::Request(r));
+    }
+    items.extend(ev.map(TraceItem::Event));
+    items
+}
+
+impl RequestSource for EventedVecSource {
+    fn next_request(&mut self) -> Option<Request> {
+        loop {
+            match self.next_item()? {
+                TraceItem::Request(r) => return Some(r),
+                TraceItem::Event(_) => continue,
+            }
+        }
+    }
+
+    fn next_item(&mut self) -> Option<TraceItem> {
+        self.items.next()
     }
 }
 
@@ -98,6 +162,13 @@ impl RequestSource for FileSource {
         match self {
             FileSource::Binary(r) => r.next_request(),
             FileSource::Csv(r) => r.next_request(),
+        }
+    }
+
+    fn next_item(&mut self) -> Option<TraceItem> {
+        match self {
+            FileSource::Binary(r) => r.next_item(),
+            FileSource::Csv(r) => r.next_item(),
         }
     }
 }
@@ -191,6 +262,32 @@ mod tests {
         let reqs = vec![Request::new(0, 1, 10), Request::new(1, 2, 20)];
         let mut src = VecSource::new(reqs);
         assert_eq!(src.take_requests(5).len(), 2);
+        assert!(src.next_request().is_none());
+    }
+
+    #[test]
+    fn evented_source_merges_events_before_coincident_requests() {
+        let reqs = vec![
+            Request::new(1, 1, 10),
+            Request::new(5, 2, 10),
+            Request::new(9, 3, 10),
+        ];
+        let events = vec![TenantEvent::retire(20, 1), TenantEvent::admit(5, 1)];
+        let mut src = EventedVecSource::merged(reqs, events);
+        let mut kinds = Vec::new();
+        while let Some(item) = src.next_item() {
+            kinds.push(match item {
+                TraceItem::Request(r) => format!("r{}", r.ts),
+                TraceItem::Event(e) => format!("e{}", e.ts),
+            });
+        }
+        assert_eq!(kinds, vec!["r1", "e5", "r5", "r9", "e20"]);
+        // next_request skips events.
+        let mut src = EventedVecSource::merged(
+            vec![Request::new(1, 1, 10)],
+            vec![TenantEvent::admit(0, 2)],
+        );
+        assert_eq!(src.next_request(), Some(Request::new(1, 1, 10)));
         assert!(src.next_request().is_none());
     }
 

@@ -1,4 +1,4 @@
-//! The request record and trace IO.
+//! The request record, the tenant-event lane, and trace IO.
 //!
 //! Binary format v2: little-endian fixed 22-byte records
 //! `(ts_us: u64, obj: u64, size: u32, tenant: u16)` after a 16-byte header
@@ -7,6 +7,18 @@
 //! load with `tenant = 0`. CSV is also supported for interoperability
 //! (`ts_us,obj,size,tenant` with a header line; the legacy three-column
 //! header is accepted on read).
+//!
+//! Binary format v3 adds the **tenant-event lane**: each record starts
+//! with a one-byte tag — `0` = a v2-shaped request record, `1` = a tenant
+//! ADMIT event (`ts_us: u64, tenant: u16, reserved_bytes: u64,
+//! miss_cost_multiplier: f64, slo_miss_ratio: f64` with NaN encoding
+//! "no SLO"), `2` = a tenant RETIRE event (`ts_us: u64, tenant: u16`).
+//! The header count counts *items* (requests + events). v3 files are what
+//! `gen-trace --kind churn` writes; replaying one through
+//! [`crate::engine::run`] admits and retires tenants mid-run exactly as
+//! the serve protocol's `ADMIT`/`RETIRE` commands would. v1/v2 files keep
+//! reading unchanged, and [`TraceWriter::create`] keeps writing v2 so
+//! event-free traces stay byte-identical with earlier releases.
 
 use crate::{ObjectId, Result, TenantId, TimeUs};
 use std::fs::File;
@@ -15,8 +27,18 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"ELTC";
 const VERSION: u32 = 2;
+const EVENT_VERSION: u32 = 3;
 const V1_RECORD_BYTES: usize = 20;
 const RECORD_BYTES: usize = 22;
+/// v3 record tags.
+const TAG_REQUEST: u8 = 0;
+const TAG_ADMIT: u8 = 1;
+const TAG_RETIRE: u8 = 2;
+/// v3 ADMIT payload: ts u64 + tenant u16 + reserved u64 + multiplier f64
+/// + slo f64.
+const ADMIT_BYTES: usize = 8 + 2 + 8 + 8 + 8;
+/// v3 RETIRE payload: ts u64 + tenant u16.
+const RETIRE_BYTES: usize = 8 + 2;
 
 /// One trace record: tenant `tenant` requests `obj` of `size` bytes at
 /// time `ts`. Single-workload traces use tenant 0 throughout.
@@ -76,33 +98,211 @@ impl Request {
     }
 }
 
-/// Streaming binary trace writer (always writes the current version).
+/// What a tenant lifecycle event does when it is replayed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TenantEventKind {
+    /// Admit the tenant into the provisioning layer (controller bank,
+    /// arbiter, placement) with the carried spec fields.
+    Admit {
+        /// Memshare-style byte reservation (`reserved_mb` on the wire).
+        reserved_bytes: u64,
+        /// Miss-cost multiplier applied to the catalog per-miss cost.
+        miss_cost_multiplier: f64,
+        /// Optional miss-ratio SLO target.
+        slo_miss_ratio: Option<f64>,
+    },
+    /// Begin retiring the tenant: drain its residents and reconcile its
+    /// bill (the serve protocol's `RETIRE`).
+    Retire,
+}
+
+/// One tenant lifecycle event in the trace's event lane (format v3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantEvent {
+    /// Trace time at which the event fires.
+    pub ts: TimeUs,
+    /// The tenant admitted or retired.
+    pub tenant: TenantId,
+    /// What happens.
+    pub kind: TenantEventKind,
+}
+
+impl TenantEvent {
+    /// An ADMIT event with default spec fields (no reservation, 1× miss
+    /// cost, no SLO).
+    pub fn admit(ts: TimeUs, tenant: TenantId) -> TenantEvent {
+        TenantEvent {
+            ts,
+            tenant,
+            kind: TenantEventKind::Admit {
+                reserved_bytes: 0,
+                miss_cost_multiplier: 1.0,
+                slo_miss_ratio: None,
+            },
+        }
+    }
+
+    /// A RETIRE event.
+    pub fn retire(ts: TimeUs, tenant: TenantId) -> TenantEvent {
+        TenantEvent { ts, tenant, kind: TenantEventKind::Retire }
+    }
+
+    /// Set the admit reservation (no-op on a retire event).
+    pub fn with_reserved_bytes(mut self, bytes: u64) -> TenantEvent {
+        if let TenantEventKind::Admit { reserved_bytes, .. } = &mut self.kind {
+            *reserved_bytes = bytes;
+        }
+        self
+    }
+
+    /// Set the admit miss-cost multiplier (no-op on a retire event).
+    pub fn with_multiplier(mut self, m: f64) -> TenantEvent {
+        if let TenantEventKind::Admit { miss_cost_multiplier, .. } = &mut self.kind {
+            *miss_cost_multiplier = m;
+        }
+        self
+    }
+
+    /// Set the admit SLO target (no-op on a retire event).
+    pub fn with_slo_miss_ratio(mut self, target: f64) -> TenantEvent {
+        if let TenantEventKind::Admit { slo_miss_ratio, .. } = &mut self.kind {
+            *slo_miss_ratio = Some(target);
+        }
+        self
+    }
+
+    /// The [`crate::tenant::TenantSpec`] an admit event carries (`None`
+    /// for retire events).
+    pub fn spec(&self) -> Option<crate::tenant::TenantSpec> {
+        match self.kind {
+            TenantEventKind::Admit {
+                reserved_bytes,
+                miss_cost_multiplier,
+                slo_miss_ratio,
+            } => {
+                let mut spec =
+                    crate::tenant::TenantSpec::new(self.tenant, format!("tenant{}", self.tenant))
+                        .with_multiplier(miss_cost_multiplier)
+                        .with_reserved_bytes(reserved_bytes);
+                if let Some(slo) = slo_miss_ratio {
+                    spec = spec.with_slo_miss_ratio(slo);
+                }
+                Some(spec)
+            }
+            TenantEventKind::Retire => None,
+        }
+    }
+}
+
+/// One item of a trace stream: a request, or a tenant lifecycle event
+/// interleaved with the requests (format v3's event lane).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceItem {
+    /// An ordinary cache request.
+    Request(Request),
+    /// A tenant admit/retire event.
+    Event(TenantEvent),
+}
+
+impl TraceItem {
+    /// Timestamp of the item (request or event).
+    pub fn ts(&self) -> TimeUs {
+        match self {
+            TraceItem::Request(r) => r.ts,
+            TraceItem::Event(e) => e.ts,
+        }
+    }
+}
+
+/// Streaming binary trace writer. [`TraceWriter::create`] writes format
+/// v2 (requests only, byte-identical with earlier releases);
+/// [`TraceWriter::create_with_events`] writes format v3 with the tagged
+/// tenant-event lane.
 pub struct TraceWriter {
     out: BufWriter<File>,
     count: u64,
+    version: u32,
     path: std::path::PathBuf,
 }
 
 impl TraceWriter {
+    /// Create a v2 (request-only) trace file.
     pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Self::create_version(path, VERSION)
+    }
+
+    /// Create a v3 trace file whose record stream may interleave
+    /// [`TenantEvent`]s with requests.
+    pub fn create_with_events(path: impl AsRef<Path>) -> Result<Self> {
+        Self::create_version(path, EVENT_VERSION)
+    }
+
+    fn create_version(path: impl AsRef<Path>, version: u32) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut out = BufWriter::new(File::create(&path)?);
         out.write_all(MAGIC)?;
-        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&version.to_le_bytes())?;
         out.write_all(&0u64.to_le_bytes())?; // count patched on finish
-        Ok(TraceWriter { out, count: 0, path })
+        Ok(TraceWriter { out, count: 0, version, path })
     }
 
+    /// Append one request record.
     #[inline]
     pub fn write(&mut self, r: &Request) -> Result<()> {
+        if self.version >= EVENT_VERSION {
+            self.out.write_all(&[TAG_REQUEST])?;
+        }
         let mut buf = [0u8; RECORD_BYTES];
         r.encode(&mut buf);
         self.out.write_all(&buf)?;
         self.count += 1;
         Ok(())
+    }
+
+    /// Append one tenant lifecycle event (v3 files only; a v2 writer has
+    /// no event lane and errors).
+    pub fn write_event(&mut self, ev: &TenantEvent) -> Result<()> {
+        anyhow::ensure!(
+            self.version >= EVENT_VERSION,
+            "trace format v{} has no tenant-event lane (use TraceWriter::create_with_events)",
+            self.version
+        );
+        match ev.kind {
+            TenantEventKind::Admit {
+                reserved_bytes,
+                miss_cost_multiplier,
+                slo_miss_ratio,
+            } => {
+                let mut buf = [0u8; 1 + ADMIT_BYTES];
+                buf[0] = TAG_ADMIT;
+                buf[1..9].copy_from_slice(&ev.ts.to_le_bytes());
+                buf[9..11].copy_from_slice(&ev.tenant.to_le_bytes());
+                buf[11..19].copy_from_slice(&reserved_bytes.to_le_bytes());
+                buf[19..27].copy_from_slice(&miss_cost_multiplier.to_le_bytes());
+                buf[27..35].copy_from_slice(&slo_miss_ratio.unwrap_or(f64::NAN).to_le_bytes());
+                self.out.write_all(&buf)?;
+            }
+            TenantEventKind::Retire => {
+                let mut buf = [0u8; 1 + RETIRE_BYTES];
+                buf[0] = TAG_RETIRE;
+                buf[1..9].copy_from_slice(&ev.ts.to_le_bytes());
+                buf[9..11].copy_from_slice(&ev.tenant.to_le_bytes());
+                self.out.write_all(&buf)?;
+            }
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Append one trace item (request or event).
+    pub fn write_item(&mut self, item: &TraceItem) -> Result<()> {
+        match item {
+            TraceItem::Request(r) => self.write(r),
+            TraceItem::Event(e) => self.write_event(e),
+        }
     }
 
     /// Flush and patch the record count into the header.
@@ -120,10 +320,14 @@ impl TraceWriter {
 }
 
 /// Streaming binary trace reader (implements [`super::RequestSource`]).
-/// Reads both the current 22-byte records and legacy v1 20-byte records.
-/// A short read (truncated file, header count larger than the records
-/// present) ends the stream; [`TraceReader::check`] surfaces it after
-/// the drive loop (the `RequestSource` contract has no error channel).
+/// Reads the v3 tagged records (requests + tenant events), the v2
+/// 22-byte records, and legacy v1 20-byte records. On a v3 file,
+/// [`super::RequestSource::next_request`] silently skips the event lane
+/// (request-only consumers keep working); event-aware consumers drive
+/// [`super::RequestSource::next_item`] instead. A short read (truncated
+/// file, header count larger than the records present) ends the stream;
+/// [`TraceReader::check`] surfaces it after the drive loop (the
+/// `RequestSource` contract has no error channel).
 pub struct TraceReader {
     input: BufReader<File>,
     remaining: u64,
@@ -139,21 +343,27 @@ impl TraceReader {
         anyhow::ensure!(&hdr[0..4] == MAGIC, "not an elastictl trace file");
         let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
         anyhow::ensure!(
-            version == 1 || version == VERSION,
+            version == 1 || version == VERSION || version == EVENT_VERSION,
             "unsupported trace version {version}"
         );
         let remaining = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
         Ok(TraceReader { input, remaining, version, error: None })
     }
 
-    /// Records left to read.
+    /// Items left to read (requests + events).
     pub fn remaining(&self) -> u64 {
         self.remaining
     }
 
-    /// On-disk format version (1 = legacy tenant-less records).
+    /// On-disk format version (1 = legacy tenant-less records, 3 = the
+    /// tagged request + tenant-event stream).
     pub fn version(&self) -> u32 {
         self.version
+    }
+
+    /// Whether the file carries the v3 tenant-event lane.
+    pub fn has_events(&self) -> bool {
+        self.version >= EVENT_VERSION
     }
 
     /// Surface (and clear) any IO error that ended the stream early.
@@ -171,34 +381,91 @@ impl TraceReader {
         )));
         self.remaining = 0;
     }
+
+    fn fail_tag(&mut self, tag: u8) {
+        self.error = Some(anyhow::anyhow!(
+            "corrupt v3 trace: unknown record tag {tag} with {} records still expected",
+            self.remaining
+        ));
+        self.remaining = 0;
+    }
+
+    /// Read one fixed-size payload, or end the stream on a short read.
+    fn read_payload<const N: usize>(&mut self) -> Option<[u8; N]> {
+        let mut buf = [0u8; N];
+        match self.input.read_exact(&mut buf) {
+            Ok(()) => Some(buf),
+            Err(e) => {
+                self.fail(e);
+                None
+            }
+        }
+    }
+
+    /// Read the next v3 tagged item.
+    fn read_item_v3(&mut self) -> Option<TraceItem> {
+        let tag = self.read_payload::<1>()?[0];
+        match tag {
+            TAG_REQUEST => {
+                let buf = self.read_payload::<RECORD_BYTES>()?;
+                Some(TraceItem::Request(Request::decode(&buf)))
+            }
+            TAG_ADMIT => {
+                let buf = self.read_payload::<ADMIT_BYTES>()?;
+                let slo = f64::from_le_bytes(buf[26..34].try_into().unwrap());
+                Some(TraceItem::Event(TenantEvent {
+                    ts: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+                    tenant: u16::from_le_bytes(buf[8..10].try_into().unwrap()),
+                    kind: TenantEventKind::Admit {
+                        reserved_bytes: u64::from_le_bytes(buf[10..18].try_into().unwrap()),
+                        miss_cost_multiplier: f64::from_le_bytes(buf[18..26].try_into().unwrap()),
+                        slo_miss_ratio: if slo.is_nan() { None } else { Some(slo) },
+                    },
+                }))
+            }
+            TAG_RETIRE => {
+                let buf = self.read_payload::<RETIRE_BYTES>()?;
+                Some(TraceItem::Event(TenantEvent::retire(
+                    u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+                    u16::from_le_bytes(buf[8..10].try_into().unwrap()),
+                )))
+            }
+            other => {
+                self.fail_tag(other);
+                None
+            }
+        }
+    }
 }
 
 impl super::RequestSource for TraceReader {
     fn next_request(&mut self) -> Option<Request> {
+        // Request-only consumers of a v3 file skip the event lane.
+        loop {
+            match super::RequestSource::next_item(self)? {
+                TraceItem::Request(r) => return Some(r),
+                TraceItem::Event(_) => continue,
+            }
+        }
+    }
+
+    fn next_item(&mut self) -> Option<TraceItem> {
         if self.remaining == 0 {
             return None;
         }
-        let req = if self.version == 1 {
-            let mut buf = [0u8; V1_RECORD_BYTES];
-            match self.input.read_exact(&mut buf) {
-                Ok(()) => Request::decode_v1(&buf),
-                Err(e) => {
-                    self.fail(e);
-                    return None;
-                }
+        let item = match self.version {
+            1 => {
+                let buf = self.read_payload::<V1_RECORD_BYTES>()?;
+                TraceItem::Request(Request::decode_v1(&buf))
             }
-        } else {
-            let mut buf = [0u8; RECORD_BYTES];
-            match self.input.read_exact(&mut buf) {
-                Ok(()) => Request::decode(&buf),
-                Err(e) => {
-                    self.fail(e);
-                    return None;
-                }
+            VERSION => {
+                let buf = self.read_payload::<RECORD_BYTES>()?;
+                TraceItem::Request(Request::decode(&buf))
             }
+            _ => self.read_item_v3()?,
         };
         self.remaining -= 1;
-        Some(req)
+        Some(item)
     }
 }
 
@@ -209,6 +476,28 @@ pub fn write_trace(path: impl AsRef<Path>, reqs: &[Request]) -> Result<u64> {
         w.write(r)?;
     }
     w.finish()
+}
+
+/// Write a whole item stream (requests + tenant events) as a v3 binary
+/// trace. Returns the item count.
+pub fn write_items(path: impl AsRef<Path>, items: &[TraceItem]) -> Result<u64> {
+    let mut w = TraceWriter::create_with_events(path)?;
+    for item in items {
+        w.write_item(item)?;
+    }
+    w.finish()
+}
+
+/// Read a whole binary trace (any version) into memory as items.
+pub fn read_items(path: impl AsRef<Path>) -> Result<Vec<TraceItem>> {
+    use super::RequestSource;
+    let mut r = TraceReader::open(path)?;
+    let mut out = Vec::with_capacity(r.remaining() as usize);
+    while let Some(item) = r.next_item() {
+        out.push(item);
+    }
+    r.check()?;
+    Ok(out)
 }
 
 /// Read a whole binary trace into memory.
@@ -496,6 +785,83 @@ mod tests {
         let hdr = dir.path().join("hdr.csv");
         std::fs::write(&hdr, "a,b,c\n1,2,3\n").unwrap();
         assert!(CsvReader::open(&hdr).is_err());
+    }
+
+    #[test]
+    fn v3_items_round_trip_and_v2_readers_skip_events() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("churn.bin");
+        let items = vec![
+            TraceItem::Event(
+                TenantEvent::admit(0, 3)
+                    .with_reserved_bytes(1 << 20)
+                    .with_multiplier(4.0)
+                    .with_slo_miss_ratio(0.1),
+            ),
+            TraceItem::Request(Request::new(5, 7, 100).with_tenant(3)),
+            TraceItem::Request(Request::new(9, 8, 200)),
+            TraceItem::Event(TenantEvent::retire(20, 3)),
+        ];
+        let n = write_items(&p, &items).unwrap();
+        assert_eq!(n, 4);
+        let mut r = TraceReader::open(&p).unwrap();
+        assert_eq!(r.version(), 3);
+        assert!(r.has_events());
+        assert_eq!(r.remaining(), 4);
+        let back = read_items(&p).unwrap();
+        assert_eq!(back, items);
+        // A request-only consumer sees just the requests, in order.
+        let reqs = read_trace(&p).unwrap();
+        assert_eq!(
+            reqs,
+            vec![
+                Request::new(5, 7, 100).with_tenant(3),
+                Request::new(9, 8, 200),
+            ]
+        );
+        // The admit spec materializes; the retire carries none.
+        let spec = match items[0] {
+            TraceItem::Event(e) => e.spec().unwrap(),
+            _ => unreachable!(),
+        };
+        assert_eq!(spec.id, 3);
+        assert_eq!(spec.reserved_bytes, 1 << 20);
+        assert_eq!(spec.miss_cost_multiplier, 4.0);
+        assert_eq!(spec.slo_miss_ratio, Some(0.1));
+        match items[3] {
+            TraceItem::Event(e) => assert!(e.spec().is_none()),
+            _ => unreachable!(),
+        }
+        // A v2 writer refuses the event lane.
+        let mut w = TraceWriter::create(dir.path().join("v2.bin")).unwrap();
+        assert!(w.write_event(&TenantEvent::retire(0, 1)).is_err());
+    }
+
+    #[test]
+    fn v3_truncation_and_bad_tags_surface_errors() {
+        use crate::trace::RequestSource;
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("churn.bin");
+        let items = vec![
+            TraceItem::Request(Request::new(1, 1, 10)),
+            TraceItem::Event(TenantEvent::admit(2, 1)),
+        ];
+        write_items(&p, &items).unwrap();
+        // Chop mid-event: header + request record (tagged) + 3 bytes.
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..16 + 1 + RECORD_BYTES + 3]).unwrap();
+        let mut r = TraceReader::open(&p).unwrap();
+        assert!(matches!(r.next_item(), Some(TraceItem::Request(_))));
+        assert!(r.next_item().is_none());
+        assert!(r.check().is_err());
+        // An unknown tag is corruption, not silence.
+        let mut bad = bytes.clone();
+        bad[16] = 9;
+        std::fs::write(&p, &bad).unwrap();
+        let mut r = TraceReader::open(&p).unwrap();
+        assert!(r.next_item().is_none());
+        let err = r.check().expect_err("bad tag must be reported");
+        assert!(err.to_string().contains("tag"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Billing-reconciliation property suite for online tenant churn: under
+//! randomized request traffic with tenants admitted and retired mid-run,
+//! across all three placement policies (and both enforcement settings),
+//! the cost attribution must stay **exact** and retirement must actually
+//! reclaim memory:
+//!
+//! * `Σ (per-epoch tenant bills) == total cluster bill`, bit for bit —
+//!   the fold over [`elastictl::cost::CostTracker::tenant_bills`] in
+//!   accumulation order reproduces `RunReport::total_cost` with `==`,
+//!   not an epsilon, even when tenants join and leave mid-epoch;
+//! * every retired tenant's reconciled bill equals the fold of its own
+//!   per-epoch bill rows, exactly;
+//! * after a RETIRE the tenant's ledger residents reach 0 within
+//!   [`elastictl::tenant::MAX_DRAIN_EPOCHS`] epoch boundaries, and stay
+//!   at 0 (a draining tenant's traffic is never cached again).
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::engine::{EngineBuilder, RunReport};
+use elastictl::placement::PlacementKind;
+use elastictl::tenant::{LifecycleState, TenantSpec, MAX_DRAIN_EPOCHS};
+use elastictl::trace::Request;
+use elastictl::util::proptest::check;
+use elastictl::util::rng::Pcg;
+use elastictl::{TenantId, MINUTE, SECOND};
+
+const EPOCH_US: u64 = 10 * MINUTE;
+
+fn churn_cfg(placement: PlacementKind, enforce: bool) -> Config {
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.controller.t_init_secs = 1800.0;
+    cfg.cost.instance.ram_bytes = 1_000_000;
+    cfg.cost.epoch_us = EPOCH_US;
+    cfg.scaler.max_instances = 4;
+    cfg.scaler.enforce_grants = enforce;
+    cfg.cluster.placement = placement;
+    cfg.tenants = vec![
+        TenantSpec::new(0, "base").with_multiplier(2.0),
+        TenantSpec::new(1, "bulk"),
+    ];
+    cfg
+}
+
+/// Fold the report's per-tenant epoch bills exactly as the tracker
+/// accumulated them (per epoch in row order, then across epochs),
+/// optionally restricted to one tenant.
+fn fold_bills(report: &RunReport, tenant: Option<TenantId>) -> (f64, f64) {
+    let (mut s, mut m) = (0.0, 0.0);
+    let (mut se, mut me) = (0.0, 0.0);
+    let mut cur = None;
+    for b in &report.tenant_bills {
+        if let Some(t) = tenant {
+            if b.tenant != t {
+                continue;
+            }
+        }
+        if cur != Some(b.t) {
+            s += se;
+            m += me;
+            se = 0.0;
+            me = 0.0;
+            cur = Some(b.t);
+        }
+        se += b.storage;
+        me += b.miss;
+    }
+    (s + se, m + me)
+}
+
+/// One randomized churn run: random traffic over the roster tenants,
+/// random mid-run admissions of new tenants, random retirements, then
+/// the exactness and drain invariants on the report.
+fn exercise(placement: PlacementKind, enforce: bool, base_seed: u64) {
+    let name = format!(
+        "churn_{}_{}",
+        placement.as_str(),
+        if enforce { "enforced" } else { "reporting" }
+    );
+    check(&name, base_seed, |rng: &mut Pcg| {
+        let cfg = churn_cfg(placement, enforce);
+        let mut engine = EngineBuilder::new(&cfg).build();
+        // Live = admitted at some point and not yet retired.
+        let mut live: Vec<TenantId> = vec![0, 1];
+        let mut retired: Vec<TenantId> = Vec::new();
+        let mut next_tenant: TenantId = 2;
+        let mut ts: u64 = 0;
+
+        let epochs = 4 + rng.below(4);
+        for _ in 0..epochs {
+            let epoch_start = ts;
+            // A burst of requests spread over the epoch.
+            let requests = 40 + rng.below(120);
+            for _ in 0..requests {
+                ts += rng.below(EPOCH_US / 200).max(1);
+                // Mostly live tenants; occasionally a stray (lazily
+                // admitted) or a retired tenant (served, never cached).
+                let roll = rng.f64();
+                let tenant = if roll < 0.85 || retired.is_empty() {
+                    live[rng.below_usize(live.len())]
+                } else {
+                    retired[rng.below_usize(retired.len())]
+                };
+                let obj = rng.below(60);
+                let size = (20_000 + rng.below(120_000)) as u32;
+                engine.offer(&Request::new(ts, obj, size).with_tenant(tenant));
+            }
+            // Maybe admit a fresh tenant mid-epoch.
+            if rng.chance(0.5) {
+                let spec = TenantSpec::new(next_tenant, format!("t{next_tenant}"))
+                    .with_multiplier(rng.range_f64(0.2, 5.0))
+                    .with_reserved_bytes(rng.below(1_000_000));
+                engine.admit_tenant(spec).unwrap();
+                live.push(next_tenant);
+                next_tenant += 1;
+            }
+            // Maybe retire a live tenant mid-epoch (keep at least one).
+            if live.len() > 1 && rng.chance(0.4) {
+                let idx = rng.below_usize(live.len());
+                let tenant = live.swap_remove(idx);
+                engine.retire_tenant(tenant).unwrap();
+                retired.push(tenant);
+            }
+            // Close the epoch (drain + reconciliation happen here).
+            ts = epoch_start + EPOCH_US + rng.below(SECOND);
+            engine.advance_to(ts);
+            // Every retired tenant must be fully drained within K
+            // boundaries — and stay at zero residents afterwards.
+            for &t in &retired {
+                let life = engine.tenant_lifecycle_of(t).unwrap();
+                if life.state() == LifecycleState::Retired {
+                    assert_eq!(
+                        engine.tenant_physical_bytes(t),
+                        0,
+                        "retired tenant {t} still holds bytes"
+                    );
+                }
+                assert!(
+                    life.drain_epochs <= MAX_DRAIN_EPOCHS,
+                    "tenant {t} drained too slowly: {life:?}"
+                );
+            }
+        }
+        // Close out: every tenant retired earlier must have completed
+        // its drain by now (each loop iteration closed ≥ 1 boundary).
+        let report = engine.finish();
+        for &t in &retired {
+            let rec = report
+                .reconciliations
+                .iter()
+                .find(|r| r.tenant == t)
+                .unwrap_or_else(|| panic!("tenant {t} never reconciled"));
+            // Per-tenant exactness: the reconciled bill is the fold of
+            // the tenant's own epoch bills up to the reconciliation.
+            let (s, m) = fold_bills_until(&report, t, rec.at);
+            assert_eq!(rec.storage_dollars, s, "tenant {t} storage fold");
+            assert_eq!(rec.miss_dollars, m, "tenant {t} miss fold");
+            assert_eq!(rec.total_dollars, s + m, "tenant {t} total fold");
+        }
+        // Cluster-wide exactness: Σ per-epoch tenant bills == total
+        // cluster bill, bit for bit.
+        let (s, m) = fold_bills(&report, None);
+        assert_eq!(s + m, report.total_cost, "Σ tenant bills != cluster bill");
+        // The storage/miss splits agree too.
+        assert_eq!(s, report.storage_cost, "storage fold != storage total");
+        assert_eq!(m, report.miss_cost, "miss fold != miss total");
+    });
+}
+
+/// Per-tenant fold of the epoch bills with `t <= until` (a retired
+/// tenant's reconciliation snapshots its ledger at the drain boundary;
+/// later epochs may still bill its stray traffic).
+fn fold_bills_until(report: &RunReport, tenant: TenantId, until: u64) -> (f64, f64) {
+    let (mut s, mut m) = (0.0, 0.0);
+    for b in &report.tenant_bills {
+        if b.tenant == tenant && b.t <= until {
+            s += b.storage;
+            m += b.miss;
+        }
+    }
+    (s, m)
+}
+
+#[test]
+fn churn_billing_is_exact_under_shared_placement() {
+    exercise(PlacementKind::Shared, false, 0xC1);
+    exercise(PlacementKind::Shared, true, 0xC2);
+}
+
+#[test]
+fn churn_billing_is_exact_under_pinned_placement() {
+    exercise(PlacementKind::HashSlotPinned, false, 0xC3);
+    exercise(PlacementKind::HashSlotPinned, true, 0xC4);
+}
+
+#[test]
+fn churn_billing_is_exact_under_partitioned_placement() {
+    exercise(PlacementKind::SlabPartition, false, 0xC5);
+    exercise(PlacementKind::SlabPartition, true, 0xC6);
+}
