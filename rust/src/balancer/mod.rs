@@ -15,14 +15,41 @@
 //! routing O(1) + policy shadow work (O(1) for TTL, O(log M) for MRC) —
 //! the Fig. 1 comparison is exactly these code paths.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ClusterTelemetry};
 use crate::config::Config;
 use crate::cost::CostTracker;
 use crate::metrics::HitMiss;
 use crate::scaler::EpochSizer;
+use crate::telemetry::{Counter, TelemetryRegistry, Timer};
 use crate::tenant::scoped_object;
 use crate::trace::Request;
 use crate::{TenantId, TimeUs};
+
+/// Serve-path latency sampling stride: the `elastictl_serve_ns` timer
+/// reads the clock on one request in this many (two `Instant::now()`
+/// calls per sample would dominate an O(1) request path if taken on
+/// every request; 1-in-64 keeps the distribution honest at < 2% of the
+/// paths clocked).
+const SERVE_SAMPLE_STRIDE: u64 = 64;
+
+/// Pre-resolved balancer telemetry handles (request counters + the
+/// per-stage epoch timers). Absent by default: the untelemetered
+/// request path never touches them.
+struct BalancerTelemetry {
+    requests: Counter,
+    hits: Counter,
+    misses: Counter,
+    spurious: Counter,
+    denied: Counter,
+    /// Sampled end-to-end `handle` latency (1 in [`SERVE_SAMPLE_STRIDE`]).
+    serve_ns: Timer,
+    /// Epoch stage: the policy's sizing decision (arbiter included).
+    epoch_decide_ns: Timer,
+    /// Epoch stage: placement re-pin / re-partition from fresh grants.
+    epoch_placement_ns: Timer,
+    /// Epoch stage: targeted shedding of over-cap tenants.
+    epoch_shed_ns: Timer,
+}
 
 /// Outcome of one request through the balancer.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,6 +85,12 @@ pub struct Balancer {
     /// Per-tenant hit/miss counters, indexed by tenant id (grown on
     /// demand; single-tenant traces only ever touch slot 0).
     tenant_stats: Vec<HitMiss>,
+    /// Telemetry handles (`None` = off, zero request-path overhead).
+    telemetry: Option<BalancerTelemetry>,
+    /// Shedding at the most recent epoch boundary:
+    /// `(tenant, resident bytes before, bytes freed)` — the decision
+    /// journal's source for `shed_bytes`.
+    last_epoch_shed: Vec<(TenantId, u64, u64)>,
 }
 
 impl Balancer {
@@ -71,7 +104,35 @@ impl Balancer {
             denied_admissions: 0,
             work_units: 0,
             tenant_stats: Vec::new(),
+            telemetry: None,
+            last_epoch_shed: Vec::new(),
         }
+    }
+
+    /// Attach telemetry: resolve the balancer's and cluster's handles
+    /// from `registry` (once — the hot path records through them at
+    /// O(1)) and forward the registry to the sizing policy for its
+    /// per-stage epoch timers.
+    pub fn attach_telemetry(&mut self, registry: &mut TelemetryRegistry) {
+        self.sizer.attach_telemetry(registry);
+        self.cluster.set_telemetry(ClusterTelemetry::resolve(registry));
+        self.telemetry = Some(BalancerTelemetry {
+            requests: registry.counter("elastictl_requests_total"),
+            hits: registry.counter("elastictl_hits_total"),
+            misses: registry.counter("elastictl_misses_total"),
+            spurious: registry.counter("elastictl_spurious_misses_total"),
+            denied: registry.counter("elastictl_denied_admissions_total"),
+            serve_ns: registry.timer("elastictl_serve_ns"),
+            epoch_decide_ns: registry.timer("elastictl_epoch_decide_ns"),
+            epoch_placement_ns: registry.timer("elastictl_epoch_placement_ns"),
+            epoch_shed_ns: registry.timer("elastictl_epoch_shed_ns"),
+        });
+    }
+
+    /// Shedding performed at the most recent epoch boundary:
+    /// `(tenant, resident bytes before, bytes freed)`.
+    pub fn last_epoch_shed(&self) -> &[(TenantId, u64, u64)] {
+        &self.last_epoch_shed
     }
 
     /// Build a balancer from config (initial size = policy's first guess
@@ -91,6 +152,14 @@ impl Balancer {
     /// on `(tenant, key)`, serve, account, feed the physical outcome back.
     pub fn handle(&mut self, req: &Request, costs: &mut CostTracker) -> Served {
         self.requests += 1;
+        // Sampled serve-latency clock: with telemetry off (or off-stride)
+        // no clock is read and no handle is touched.
+        let serve_t0 = match &self.telemetry {
+            Some(_) if self.requests % SERVE_SAMPLE_STRIDE == 0 => {
+                Some(std::time::Instant::now())
+            }
+            _ => None,
+        };
         // O(1) ledger read: resident-byte-binding policies compare the
         // tenant's physical occupancy against its cap in `on_request`.
         self.sizer
@@ -138,6 +207,23 @@ impl Balancer {
         self.tenant_stats[i].record(hit);
         // Close the loop: SLO measurement + admission-budget charging.
         self.sizer.on_served(req, hit, &work);
+        if let Some(tel) = &self.telemetry {
+            tel.requests.inc();
+            if hit {
+                tel.hits.inc();
+            } else {
+                tel.misses.inc();
+            }
+            if spurious {
+                tel.spurious.inc();
+            }
+            if !work.admit && !hit {
+                tel.denied.inc();
+            }
+            if let Some(t0) = serve_t0 {
+                tel.serve_ns.record_ns(t0.elapsed().as_nanos() as u64);
+            }
+        }
         Served { hit, spurious, admitted: work.admit, work_units: work.units }
     }
 
@@ -148,7 +234,12 @@ impl Balancer {
     /// epoch is billed by the caller at the size that was active (§2.3's
     /// synchronous billing).
     pub fn end_epoch(&mut self, now: TimeUs) -> u32 {
-        let target = self.sizer.decide(now);
+        self.last_epoch_shed.clear();
+        let decide_timer = self.telemetry.as_ref().map(|t| t.epoch_decide_ns.clone());
+        let target = match decide_timer {
+            Some(timer) => timer.time(|| self.sizer.decide(now)),
+            None => self.sizer.decide(now),
+        };
         self.cluster.resize(target);
         if let Some(rows) = self.sizer.enforcement() {
             let grants: Vec<crate::placement::TenantGrant> = rows
@@ -161,16 +252,34 @@ impl Balancer {
                 })
                 .collect();
             if !grants.is_empty() {
-                self.cluster.apply_grants(&grants);
+                let place_timer =
+                    self.telemetry.as_ref().map(|t| t.epoch_placement_ns.clone());
+                match place_timer {
+                    Some(timer) => timer.time(|| self.cluster.apply_grants(&grants)),
+                    None => self.cluster.apply_grants(&grants),
+                }
             }
             // Binding caps: bring every over-cap tenant back to its grant
             // by evicting its own coldest entries (targeted shedding).
-            for r in &rows {
-                if r.enforced {
-                    if let Some(cap) = r.cap_bytes {
-                        self.cluster.shed_tenant(r.tenant, cap);
+            let shed_timer = self.telemetry.as_ref().map(|t| t.epoch_shed_ns.clone());
+            let shed = |cluster: &mut Cluster, log: &mut Vec<(TenantId, u64, u64)>| {
+                for r in &rows {
+                    if r.enforced {
+                        if let Some(cap) = r.cap_bytes {
+                            let before = cluster.tenant_resident_bytes(r.tenant);
+                            let freed = cluster.shed_tenant(r.tenant, cap);
+                            if freed > 0 {
+                                log.push((r.tenant, before, freed));
+                            }
+                        }
                     }
                 }
+            };
+            match shed_timer {
+                Some(timer) => {
+                    timer.time(|| shed(&mut self.cluster, &mut self.last_epoch_shed))
+                }
+                None => shed(&mut self.cluster, &mut self.last_epoch_shed),
             }
         }
         self.drain_retiring(now);
@@ -187,7 +296,11 @@ impl Balancer {
     pub fn drain_retiring(&mut self, now: TimeUs) {
         for t in self.sizer.draining() {
             self.cluster.release_tenant(t);
-            self.cluster.shed_tenant(t, 0);
+            let before = self.cluster.tenant_resident_bytes(t);
+            let freed = self.cluster.shed_tenant(t, 0);
+            if freed > 0 {
+                self.last_epoch_shed.push((t, before, freed));
+            }
             if self.cluster.tenant_resident_bytes(t) == 0 {
                 self.sizer.note_drained(t, now);
             }

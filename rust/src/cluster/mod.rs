@@ -30,8 +30,37 @@ use crate::placement::{
     make_placement, PlacementKind, PlacementPolicy, PlacementSnapshot, PlacementTenantRow,
     TenantGrant,
 };
+use crate::telemetry::{Counter, TelemetryRegistry};
 use crate::util::rng::Pcg;
 use crate::{mix64, ObjectId, TenantId};
+
+/// Pre-resolved cluster-level telemetry handles: insert/evict counters
+/// recorded on the serve path at O(1) (a `Cell` bump each). Absent by
+/// default — the untelemetered serve path does not touch them.
+#[derive(Debug, Clone)]
+pub struct ClusterTelemetry {
+    /// Objects inserted on miss.
+    pub inserts: Counter,
+    /// Bytes inserted on miss.
+    pub inserted_bytes: Counter,
+    /// Entries evicted by LRU churn on the serve path.
+    pub evictions: Counter,
+    /// Bytes evicted by LRU churn on the serve path.
+    pub evicted_bytes: Counter,
+}
+
+impl ClusterTelemetry {
+    /// Resolve the cluster's counter handles from `registry` (once, at
+    /// attach time — the hot path never does a string lookup).
+    pub fn resolve(registry: &mut TelemetryRegistry) -> ClusterTelemetry {
+        ClusterTelemetry {
+            inserts: registry.counter("elastictl_inserts_total"),
+            inserted_bytes: registry.counter("elastictl_inserted_bytes_total"),
+            evictions: registry.counter("elastictl_evictions_total"),
+            evicted_bytes: registry.counter("elastictl_evicted_bytes_total"),
+        }
+    }
+}
 
 /// A homogeneous cluster of cache instances plus the slot map.
 pub struct Cluster {
@@ -54,6 +83,8 @@ pub struct Cluster {
     tenant_resident: Vec<u64>,
     /// Reusable eviction sink (no per-request allocation).
     evict_buf: EvictionSink,
+    /// Insert/evict counters (`None` = telemetry off, zero overhead).
+    telemetry: Option<ClusterTelemetry>,
 }
 
 impl Cluster {
@@ -82,7 +113,13 @@ impl Cluster {
             placement: make_placement(cfg.placement),
             tenant_resident: Vec::new(),
             evict_buf: EvictionSink::new(),
+            telemetry: None,
         }
+    }
+
+    /// Install pre-resolved telemetry counters on the serve path.
+    pub fn set_telemetry(&mut self, telemetry: ClusterTelemetry) {
+        self.telemetry = Some(telemetry);
     }
 
     pub fn len(&self) -> usize {
@@ -171,9 +208,17 @@ impl Cluster {
         let (hit, added) = self.instances[idx].serve_tagged(obj, size, tenant, buf);
         if added > 0 {
             self.ledger_add(tenant, added);
+            if let Some(tel) = &self.telemetry {
+                tel.inserts.inc();
+                tel.inserted_bytes.add(added);
+            }
         }
         while let Some((t, b)) = self.evict_buf.pop() {
             self.ledger_sub(t, b);
+            if let Some(tel) = &self.telemetry {
+                tel.evictions.inc();
+                tel.evicted_bytes.add(b);
+            }
         }
         hit
     }

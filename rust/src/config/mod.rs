@@ -306,6 +306,31 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Decision-trace telemetry parameters (`[telemetry]` in TOML). Off by
+/// default: the untelemetered request path stays bit-identical (see
+/// `engine_parity`), and turning it on costs < 3% throughput (enforced
+/// by the `offer_with_telemetry` bench row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch for the registry + decision journal.
+    pub enabled: bool,
+    /// Maximum number of [`crate::telemetry::EpochDecisionRecord`]s the
+    /// in-memory journal retains (oldest evicted first).
+    pub journal_capacity: u32,
+    /// If set, `engine::run` writes the retained journal as JSONL here.
+    pub journal_path: Option<String>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            journal_capacity: 1024,
+            journal_path: None,
+        }
+    }
+}
+
 /// Top-level experiment / run configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -313,6 +338,8 @@ pub struct Config {
     pub controller: ControllerConfig,
     pub scaler: ScalerConfig,
     pub cluster: ClusterConfig,
+    /// Decision-trace telemetry (`[telemetry]`); disabled by default.
+    pub telemetry: TelemetryConfig,
     /// Tenant roster for the multi-tenant policy. Empty = single-tenant
     /// mode (every request is tenant 0 with multiplier 1.0). In TOML this
     /// is a `[tenant0]` / `[tenant1]` / … section per tenant, each with
@@ -427,6 +454,18 @@ impl Config {
         // [placement]
         if let Some(v) = doc.get_str("placement.policy") {
             cfg.cluster.placement = PlacementKind::parse(v)?;
+        }
+
+        // [telemetry]
+        if let Some(v) = doc.get_bool("telemetry.enabled") {
+            cfg.telemetry.enabled = v;
+        }
+        if let Some(v) = doc.get_u32("telemetry.journal_capacity") {
+            anyhow::ensure!(v > 0, "telemetry.journal_capacity must be positive");
+            cfg.telemetry.journal_capacity = v;
+        }
+        if let Some(v) = doc.get_str("telemetry.journal_path") {
+            cfg.telemetry.journal_path = Some(v.to_string());
         }
 
         // [tenant0], [tenant1], … — one section per tenant. Sections are
@@ -560,6 +599,15 @@ impl Config {
             "placement.policy",
             Value::Str(self.cluster.placement.as_str().into()),
         );
+
+        doc.set("telemetry.enabled", Value::Bool(self.telemetry.enabled));
+        doc.set(
+            "telemetry.journal_capacity",
+            Value::Int(self.telemetry.journal_capacity as i64),
+        );
+        if let Some(p) = &self.telemetry.journal_path {
+            doc.set("telemetry.journal_path", Value::Str(p.clone()));
+        }
 
         for (i, t) in self.tenants.iter().enumerate() {
             doc.set(&format!("tenant{i}.id"), Value::Int(t.id as i64));
@@ -733,6 +781,34 @@ mod tests {
         // Degenerate configs still keep the service up.
         cfg.scaler.min_instances = 0;
         assert_eq!(cfg.initial_instances(), 1);
+    }
+
+    #[test]
+    fn telemetry_section_round_trips_and_validates() {
+        // Off by default, nothing surprising in an empty config.
+        let cfg = Config::from_toml("").unwrap();
+        assert_eq!(cfg.telemetry, TelemetryConfig::default());
+        assert!(!cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.journal_capacity, 1024);
+        assert_eq!(cfg.telemetry.journal_path, None);
+
+        let mut cfg = Config::default();
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.journal_capacity = 64;
+        cfg.telemetry.journal_path = Some("out/journal.jsonl".to_string());
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.telemetry, cfg.telemetry);
+
+        // journal_path is omitted from TOML when unset (and still parses).
+        let cfg = Config::default();
+        assert!(!cfg.to_toml().contains("journal_path"));
+        assert_eq!(
+            Config::from_toml(&cfg.to_toml()).unwrap().telemetry,
+            TelemetryConfig::default()
+        );
+
+        // A zero-capacity journal is rejected loudly.
+        assert!(Config::from_toml("[telemetry]\njournal_capacity = 0\n").is_err());
     }
 
     #[test]

@@ -31,8 +31,8 @@ mod probe;
 
 pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
 pub use probe::{
-    BalanceProbe, LifecycleProbe, LifecycleSample, PlacementProbe, PlacementSample, Probe,
-    ProbeCtx, ShadowProbe, SloProbe, SloSample, TenantProbe, TtlProbe,
+    BalanceProbe, JournalProbe, LifecycleProbe, LifecycleSample, PlacementProbe,
+    PlacementSample, Probe, ProbeCtx, ShadowProbe, SloProbe, SloSample, TenantProbe, TtlProbe,
 };
 
 use crate::balancer::Balancer;
@@ -42,6 +42,9 @@ use crate::cost::{CostTracker, EpochCosts, TenantEpochBill, TenantReconciliation
 use crate::metrics::{HitMiss, TimeSeries};
 use crate::placement::PlacementSnapshot;
 use crate::scaler::EpochSizer;
+use crate::telemetry::{
+    EpochDecisionRecord, Journal, SharedJournal, SharedRegistry, TelemetryRegistry, Timer,
+};
 use crate::tenant::{AdmitOutcome, Lifecycle, TenantEnforcement, TenantSpec};
 use crate::trace::{Request, RequestSource, TenantEvent, TenantEventKind, TraceItem};
 use crate::{Result, TenantId, TimeUs};
@@ -126,6 +129,13 @@ pub struct RunReport {
     pub tenant_bills: Vec<TenantEpochBill>,
     /// Closed bills of tenants retired during the run.
     pub reconciliations: Vec<TenantReconciliation>,
+    /// The retained epoch decision journal (one record per closed epoch,
+    /// newest `[telemetry] journal_capacity` kept) — empty unless
+    /// `[telemetry] enabled`. See [`JournalProbe`].
+    pub journal: Vec<EpochDecisionRecord>,
+    /// Final flat registry snapshot (`(metric, value)` rows, tenant
+    /// labels folded into names) — empty unless `[telemetry] enabled`.
+    pub telemetry: Vec<(String, f64)>,
     /// Total run cost, dollars (storage + weighted misses).
     pub total_cost: f64,
     /// Storage slice of [`RunReport::total_cost`].
@@ -269,7 +279,20 @@ impl EngineBuilder {
             costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
         }
         let mut probes = self.probes;
-        let (core, policy_name) = match policy {
+        // Telemetry is opt-in: with `[telemetry] enabled` unset, no
+        // registry, journal or probe exists and the request path is the
+        // untelemetered one (pinned bit-for-bit by `engine_parity`).
+        let (registry, journal) = if cfg.telemetry.enabled {
+            let registry: SharedRegistry =
+                std::rc::Rc::new(std::cell::RefCell::new(TelemetryRegistry::new()));
+            let journal: SharedJournal = std::rc::Rc::new(std::cell::RefCell::new(
+                Journal::new(cfg.telemetry.journal_capacity as usize),
+            ));
+            (Some(registry), Some(journal))
+        } else {
+            (None, None)
+        };
+        let (mut core, policy_name) = match policy {
             EnginePolicy::Horizontal(sizer) => {
                 let name = sizer.name().to_string();
                 let initial = self
@@ -299,6 +322,22 @@ impl EngineBuilder {
                 )
             }
         };
+        let mut billing_timer = None;
+        if let (Some(registry), Some(journal)) = (&registry, &journal) {
+            if let Core::Cluster(b) = &mut core {
+                b.attach_telemetry(&mut registry.borrow_mut());
+            }
+            billing_timer = Some(registry.borrow_mut().timer("elastictl_epoch_billing_ns"));
+            // The arbiter's grantable capacity — Σ granted per record
+            // must never exceed it (`scripts/journal_check.py`).
+            let capacity_bytes =
+                (cfg.scaler.max_instances as u64).saturating_mul(cfg.cost.instance.ram_bytes);
+            probes.push(Box::new(JournalProbe::new(
+                journal.clone(),
+                registry.clone(),
+                capacity_bytes,
+            )));
+        }
         let active_instances = match &core {
             Core::Cluster(b) => b.cluster.len() as u32,
             Core::Vertical { .. } => 0,
@@ -317,6 +356,9 @@ impl EngineBuilder {
             processed: 0,
             clock: 0,
             epochs: Vec::new(),
+            telemetry: registry,
+            journal,
+            billing_timer,
         }
     }
 }
@@ -344,6 +386,13 @@ pub struct Engine {
     /// Latest timestamp observed (request or explicit advance).
     clock: TimeUs,
     epochs: Vec<EpochCosts>,
+    /// The live registry, when `[telemetry] enabled` (shared with the
+    /// balancer's pre-resolved handles and the journal probe).
+    telemetry: Option<SharedRegistry>,
+    /// The live decision journal, when `[telemetry] enabled`.
+    journal: Option<SharedJournal>,
+    /// Epoch-billing stage timer (`elastictl_epoch_billing_ns`).
+    billing_timer: Option<Timer>,
 }
 
 impl Engine {
@@ -569,6 +618,8 @@ impl Engine {
             lifecycle: Vec::new(),
             tenant_bills: self.costs.tenant_bills().to_vec(),
             reconciliations: self.costs.reconciliations().to_vec(),
+            journal: Vec::new(),
+            telemetry: Vec::new(),
             total_cost: self.costs.total(),
             storage_cost: self.costs.storage_total(),
             miss_cost: self.costs.miss_total(),
@@ -611,6 +662,7 @@ impl Engine {
                 p.on_epoch(t, &ctx);
             }
         }
+        let billing_timer = self.billing_timer.clone();
         match &mut self.core {
             Core::Cluster(b) => {
                 // Bill the closing epoch first (attributed across tenants
@@ -619,11 +671,15 @@ impl Engine {
                 // tenants, so their final occupied epoch is on the bill
                 // before reconciliation below.
                 let residents = b.cluster.tenant_residents();
-                self.epochs.push(self.costs.end_epoch_attributed(
-                    t,
-                    self.active_instances,
-                    &residents,
-                ));
+                let costs = &mut self.costs;
+                let instances = self.active_instances;
+                let billed = match &billing_timer {
+                    Some(timer) => {
+                        timer.time(|| costs.end_epoch_attributed(t, instances, &residents))
+                    }
+                    None => costs.end_epoch_attributed(t, instances, &residents),
+                };
+                self.epochs.push(billed);
                 b.cluster.reset_epoch_stats();
                 self.active_instances = b.end_epoch(t);
             }
@@ -817,6 +873,31 @@ impl Engine {
         }
     }
 
+    /// The live telemetry registry, when `[telemetry] enabled` (`None`
+    /// otherwise — no handle exists, nothing records).
+    pub fn telemetry(&self) -> Option<&SharedRegistry> {
+        self.telemetry.as_ref()
+    }
+
+    /// The live epoch decision journal, when `[telemetry] enabled` —
+    /// the serve `WHY` command answers from this ring.
+    pub fn journal(&self) -> Option<&SharedJournal> {
+        self.journal.as_ref()
+    }
+
+    /// Prometheus text exposition of the live registry (the serve
+    /// `METRICS` reply body), `None` when telemetry is disabled.
+    /// Point-in-time gauges are refreshed before rendering.
+    pub fn metrics_text(&self) -> Option<String> {
+        let registry = self.telemetry.as_ref()?;
+        {
+            let mut reg = registry.borrow_mut();
+            reg.gauge("elastictl_instances").set(self.instances() as f64);
+            reg.gauge("elastictl_clock_us").set(self.clock as f64);
+        }
+        Some(registry.borrow().prometheus())
+    }
+
     /// Latest timestamp observed.
     pub fn clock(&self) -> TimeUs {
         self.clock
@@ -855,7 +936,26 @@ pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> RunReport {
             }
         }
     }
-    engine.finish()
+    let report = engine.finish();
+    // The journal JSONL artifact: one record per line, written where
+    // `[telemetry] journal_path` points (nightly soak feeds this to
+    // `scripts/journal_check.py`).
+    if let Some(path) = &cfg.telemetry.journal_path {
+        let mut body = String::new();
+        for rec in &report.journal {
+            body.push_str(&rec.to_json());
+            body.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("engine: failed to write telemetry journal to {path}: {e}");
+        }
+    }
+    report
 }
 
 #[cfg(test)]
@@ -1138,6 +1238,49 @@ mod tests {
         assert_eq!(retired.resident_bytes, 0);
         assert_eq!(report.reconciliations.len(), 1);
         assert_eq!(report.reconciliations[0].tenant, 3);
+    }
+
+    #[test]
+    fn telemetry_run_records_journal_and_counters() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.telemetry.enabled = true;
+        cfg.controller.t_init_secs = 600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.cost.epoch_us = 10 * MINUTE;
+        cfg.scaler.max_instances = 4;
+        let mut engine = EngineBuilder::new(&cfg).build();
+        for i in 0..200u64 {
+            let t = (i % 2) as crate::TenantId;
+            engine.offer(&Request::new(i * SECOND, i % 20, 50_000).with_tenant(t));
+        }
+        engine.advance_to(2 * cfg.cost.epoch_us + 1);
+        let text = engine.metrics_text().expect("telemetry is enabled");
+        assert!(text.contains("elastictl_requests_total 200"), "{text}");
+        assert!(engine.journal().is_some());
+        let report = engine.finish();
+        assert!(!report.journal.is_empty(), "closed epochs must be journaled");
+        let cap = 4u64 * 1_000_000;
+        for rec in &report.journal {
+            assert_eq!(rec.capacity_bytes, cap);
+            let granted: u64 = rec.tenants.iter().map(|d| d.granted_bytes).sum();
+            assert!(granted <= cap, "arbiter invariant: {granted} > {cap}");
+            for d in &rec.tenants {
+                assert!(d.shed_bytes <= d.resident_before_bytes, "{d:?}");
+            }
+        }
+        assert!(report
+            .telemetry
+            .iter()
+            .any(|(k, v)| k == "elastictl_requests_total" && *v == 200.0));
+        // Telemetry off: no registry, no journal, empty report fields.
+        cfg.telemetry.enabled = false;
+        let mut plain = EngineBuilder::new(&cfg).build();
+        plain.offer(&Request::new(0, 1, 100));
+        assert!(plain.metrics_text().is_none());
+        assert!(plain.journal().is_none());
+        let report = plain.finish();
+        assert!(report.journal.is_empty());
+        assert!(report.telemetry.is_empty());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use super::{Core, Outcome, RunReport, TenantSummary, SAMPLE_EVERY};
 use crate::cluster::BalanceTracker;
 use crate::cost::CostTracker;
 use crate::metrics::{HitMiss, TimeSeries};
+use crate::telemetry::{EpochDecisionRecord, SharedJournal, SharedRegistry, TenantDecision};
 use crate::tenant::{LifecycleState, TenantEnforcement};
 use crate::trace::Request;
 use crate::{TenantId, TimeUs};
@@ -65,6 +66,17 @@ impl ProbeCtx<'_> {
     pub fn tenant_residents(&self) -> Option<Vec<(TenantId, u64)>> {
         match self.core {
             Core::Cluster(b) => Some(b.cluster.tenant_residents()),
+            Core::Vertical { .. } => None,
+        }
+    }
+
+    /// Shedding performed at the most recent epoch boundary:
+    /// `(tenant, resident bytes before, bytes freed)` rows for every
+    /// tenant the boundary shed (cap enforcement or retirement drains;
+    /// cluster runs only). Meaningful inside `on_epoch_applied`.
+    pub fn tenant_shed(&self) -> Option<&[(TenantId, u64, u64)]> {
+        match self.core {
+            Core::Cluster(b) => Some(b.last_epoch_shed()),
             Core::Vertical { .. } => None,
         }
     }
@@ -414,6 +426,170 @@ impl Probe for PlacementProbe {
 
     fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
         report.placement = self.samples;
+    }
+}
+
+/// Assembles one [`EpochDecisionRecord`] per closed epoch — the decision
+/// trace behind the serve `WHY` command, the JSONL journal artifact and
+/// `exp fig14-obs`. Attached by the engine whenever `[telemetry]
+/// enabled` is set; shares the journal ring and registry with the serve
+/// loop so live queries and the final report read the same records.
+pub struct JournalProbe {
+    journal: SharedJournal,
+    registry: SharedRegistry,
+    /// Grantable capacity the arbiter decides against
+    /// (`max_instances × instance bytes`) — stamped on every record so
+    /// the journal invariant Σ granted ≤ capacity is self-checking.
+    capacity_bytes: u64,
+    /// Zero-based index of the next epoch to record.
+    epoch: u64,
+    /// Cumulative denied admissions per tenant id at the previous
+    /// boundary (the enforcement rows expose lifetime totals).
+    prev_denied: Vec<u64>,
+    /// Tenant-bill rows already attributed to earlier records.
+    bills_seen: usize,
+    /// Reconciliation rows already attributed to earlier records.
+    recons_seen: usize,
+    /// Cumulative cluster dollars at the previous boundary.
+    prev_storage: f64,
+    prev_miss: f64,
+}
+
+impl JournalProbe {
+    /// New probe writing into `journal`, refreshing exposition gauges in
+    /// `registry`, stamping `capacity_bytes` on every record.
+    pub fn new(journal: SharedJournal, registry: SharedRegistry, capacity_bytes: u64) -> Self {
+        JournalProbe {
+            journal,
+            registry,
+            capacity_bytes,
+            epoch: 0,
+            prev_denied: Vec::new(),
+            bills_seen: 0,
+            recons_seen: 0,
+            prev_storage: 0.0,
+            prev_miss: 0.0,
+        }
+    }
+}
+
+impl Probe for JournalProbe {
+    fn on_epoch_applied(&mut self, epoch_end: TimeUs, ctx: &ProbeCtx) {
+        let costs = ctx.costs();
+        // Ledger rows appended since the previous boundary belong to the
+        // epoch that just closed (billing runs before this hook).
+        let bills = &costs.tenant_bills()[self.bills_seen..];
+        self.bills_seen = costs.tenant_bills().len();
+        let recons = &costs.reconciliations()[self.recons_seen..];
+        self.recons_seen = costs.reconciliations().len();
+        let storage_dollars = costs.storage_total() - self.prev_storage;
+        let miss_dollars = costs.miss_total() - self.prev_miss;
+        self.prev_storage = costs.storage_total();
+        self.prev_miss = costs.miss_total();
+
+        let rows = ctx.tenant_enforcement().unwrap_or_default();
+        let residents = ctx.tenant_residents().unwrap_or_default();
+        let shed = ctx.tenant_shed().unwrap_or(&[]);
+
+        // One row per tenant any source mentions (a draining tenant has
+        // bills and sheds after its enforcement row is gone).
+        let mut ids: Vec<TenantId> = rows
+            .iter()
+            .map(|r| r.tenant)
+            .chain(bills.iter().map(|b| b.tenant))
+            .chain(shed.iter().map(|&(t, _, _)| t))
+            .chain(recons.iter().map(|r| r.tenant))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+
+        let mut tenants = Vec::with_capacity(ids.len());
+        for t in ids {
+            let row = rows.iter().find(|r| r.tenant == t);
+            let resident_bytes = residents
+                .iter()
+                .find(|&&(id, _)| id == t)
+                .map(|&(_, b)| b)
+                .unwrap_or(0);
+            let (resident_before_bytes, shed_bytes) = shed
+                .iter()
+                .find(|&&(id, _, _)| id == t)
+                .map(|&(_, before, freed)| (before, freed))
+                .unwrap_or((resident_bytes, 0));
+            let denied_total = row.map(|r| r.denied_admissions).unwrap_or(0);
+            let ti = t as usize;
+            if self.prev_denied.len() <= ti {
+                self.prev_denied.resize(ti + 1, 0);
+            }
+            let denied = denied_total.saturating_sub(self.prev_denied[ti]);
+            self.prev_denied[ti] = denied_total;
+            let granted = row
+                .filter(|r| r.decided)
+                .map(|r| r.granted_bytes)
+                .unwrap_or(0);
+            let reserved = row.map(|r| r.reserved_bytes).unwrap_or(0);
+            tenants.push(TenantDecision {
+                tenant: t,
+                demand_bytes: row.map(|r| r.demand_bytes).unwrap_or(0),
+                granted_bytes: granted,
+                reserved_bytes: reserved,
+                pooled_bytes: granted.saturating_sub(reserved),
+                cap_bytes: row.and_then(|r| r.cap_bytes),
+                ttl_clamp_secs: row.and_then(|r| r.ttl_clamp_secs),
+                resident_before_bytes,
+                resident_bytes,
+                shed_bytes,
+                denied_admissions: denied,
+                slo_miss_ratio: row.and_then(|r| r.slo_miss_ratio),
+                measured_miss_ratio: row.and_then(|r| r.measured_miss_ratio),
+                boost: row.map(|r| r.boost).unwrap_or(1.0),
+                bill_storage_dollars: bills
+                    .iter()
+                    .filter(|b| b.tenant == t)
+                    .map(|b| b.storage)
+                    .sum(),
+                bill_miss_dollars: bills
+                    .iter()
+                    .filter(|b| b.tenant == t)
+                    .map(|b| b.miss)
+                    .sum(),
+                reconciled_dollars: recons
+                    .iter()
+                    .find(|r| r.tenant == t)
+                    .map(|r| r.total_dollars),
+            });
+        }
+
+        // Refresh exposition gauges from the decision now in force; the
+        // epoch path tolerates the name lookups the hot path avoids.
+        {
+            let mut reg = self.registry.borrow_mut();
+            reg.gauge("elastictl_instances").set(ctx.instances as f64);
+            reg.gauge("elastictl_epochs_closed").set((self.epoch + 1) as f64);
+            for d in &tenants {
+                reg.tenant_gauge("elastictl_tenant_granted_bytes", d.tenant)
+                    .set(d.granted_bytes as f64);
+                reg.tenant_gauge("elastictl_tenant_resident_bytes", d.tenant)
+                    .set(d.resident_bytes as f64);
+                reg.tenant_gauge("elastictl_tenant_boost", d.tenant).set(d.boost);
+            }
+        }
+
+        self.journal.borrow_mut().push(EpochDecisionRecord {
+            t: epoch_end,
+            epoch: self.epoch,
+            instances: ctx.instances,
+            capacity_bytes: self.capacity_bytes,
+            storage_dollars,
+            miss_dollars,
+            tenants,
+        });
+        self.epoch += 1;
+    }
+
+    fn finish(self: Box<Self>, _ctx: &ProbeCtx, report: &mut RunReport) {
+        report.journal = self.journal.borrow().records().cloned().collect();
+        report.telemetry = self.registry.borrow().snapshot();
     }
 }
 

@@ -1,0 +1,240 @@
+//! Fig. 14 (ours, beyond the paper) — the observability study: replay the
+//! fig11 SLO-spike scenario with `[telemetry] enabled` and show that the
+//! epoch decision journal pinpoints the exact epoch *and* causal decision
+//! (grant squeeze vs TTL clamp vs shed) behind the gold tenant's
+//! miss-ratio excursion.
+//!
+//! Fig11 proves enforcement holds the SLO; this experiment proves an
+//! operator can find out *why* an excursion happened without re-running
+//! anything: the journal record at the boundary that governed the worst
+//! window epoch names the corrective decision taken against each tenant
+//! (`TenantDecision::cause`), and the registry snapshot ships the run's
+//! counters/timers as a flat CSV next to it. The same records answer the
+//! live `WHY <tenant>` serve command.
+
+use super::fig11_slo::{
+    fig11_cfg, fig11_specs, flood_trace, gold_trace, FLOOD, GOLD, SPIKE_END, SPIKE_START,
+};
+use super::{calibrate_miss_cost, ExpContext, TraceScale};
+use crate::engine::{run, RunReport};
+use crate::telemetry::EpochDecisionRecord;
+use crate::trace::VecSource;
+use crate::{Result, TimeUs, HOUR};
+
+/// Fig. 14 report.
+#[derive(Debug)]
+pub struct Fig14Report {
+    /// Derived gold miss-ratio SLO (fig11's self-calibration).
+    pub slo_target: f64,
+    /// Epoch-close timestamp of the worst gold window epoch.
+    pub worst_t: TimeUs,
+    /// The gold tenant's miss ratio in that epoch.
+    pub worst_miss_ratio: f64,
+    /// Boundary timestamp of the decision that governed the worst epoch.
+    pub governing_t: TimeUs,
+    /// The journal's causal decision against the gold tenant there.
+    pub gold_cause: Option<&'static str>,
+    /// The journal's causal decision against the flood tenant there.
+    pub flood_cause: Option<&'static str>,
+    /// Number of journaled epoch records retained.
+    pub journal_len: usize,
+    /// The telemetered enforced run.
+    pub enforced: RunReport,
+}
+
+impl Fig14Report {
+    pub fn render(&self) -> String {
+        let hour = |t: TimeUs| crate::us_to_secs(t) / 3600.0;
+        format!(
+            "Fig.14 — decision-trace observability (journal + registry over the fig11 spike)\n\
+             \x20 gold SLO {:.4}; journal records {}; telemetry rows {}\n\
+             \x20 worst gold window epoch: hour {:.1}, miss ratio {:.4}\n\
+             \x20 governing decision at hour {:.1}: gold cause={} flood cause={}\n\
+             \x20 (the journal names the epoch and the corrective action — no rerun needed)\n",
+            self.slo_target,
+            self.journal_len,
+            self.enforced.telemetry.len(),
+            hour(self.worst_t),
+            self.worst_miss_ratio,
+            hour(self.governing_t),
+            self.gold_cause.unwrap_or("none"),
+            self.flood_cause.unwrap_or("none"),
+        )
+    }
+}
+
+/// The newest journal record at or before `t` that carries any tenant
+/// rows — the decision in force while the epoch closing at `t` ran.
+fn governing_record(journal: &[EpochDecisionRecord], t: TimeUs) -> Option<&EpochDecisionRecord> {
+    journal
+        .iter()
+        .rev()
+        .find(|r| r.t < t && !r.tenants.is_empty())
+        .or_else(|| journal.iter().rev().find(|r| r.t <= t && !r.tenants.is_empty()))
+}
+
+pub fn run_fig14_obs(ctx: &ExpContext, scale: TraceScale) -> Result<Fig14Report> {
+    let seed = 0xF16_11;
+    let gold = gold_trace(scale, seed);
+    let mut trace = gold.clone();
+    trace.extend(flood_trace(scale, seed));
+    trace.sort_by_key(|r| r.ts);
+
+    // Same self-calibration as fig11: balance-point miss cost, SLO from
+    // the gold tenant's uncontended miss ratio.
+    let mut cfg = fig11_cfg(scale);
+    cfg.cost.miss_cost_dollars = calibrate_miss_cost(&cfg, &trace, 4);
+    let mut solo_cfg = cfg.clone();
+    solo_cfg.scaler.enforce_grants = true;
+    solo_cfg.tenants = vec![fig11_specs(1.0).remove(0)];
+    let clean = run(&solo_cfg, &mut VecSource::new(gold));
+    let slo_target = (3.0 * clean.miss_ratio()).clamp(0.05, 0.5);
+
+    // The enforced fig11 run, now with the decision trace on: the journal
+    // JSONL lands next to the CSV artifacts (nightly soak feeds it to
+    // scripts/journal_check.py).
+    let mut obs_cfg = cfg;
+    obs_cfg.scaler.enforce_grants = true;
+    obs_cfg.tenants = fig11_specs(slo_target);
+    obs_cfg.telemetry.enabled = true;
+    obs_cfg.telemetry.journal_capacity = 4096;
+    obs_cfg.telemetry.journal_path = Some(
+        ctx.out_dir
+            .join("fig14_journal.jsonl")
+            .to_string_lossy()
+            .into_owned(),
+    );
+    let enforced = run(&obs_cfg, &mut VecSource::new(trace));
+
+    // The excursion: the worst gold epoch inside fig11's measurement
+    // window (one epoch of reaction latency after the spike onset).
+    let worst = enforced
+        .slo
+        .iter()
+        .filter(|s| s.tenant == GOLD && s.t > SPIKE_START + HOUR && s.t <= SPIKE_END)
+        .max_by(|a, b| a.miss_ratio.total_cmp(&b.miss_ratio))
+        .ok_or_else(|| anyhow::anyhow!("no gold sample inside the spike window"))?;
+    let (worst_t, worst_miss_ratio) = (worst.t, worst.miss_ratio);
+
+    // The journal record that governed that epoch names the cause.
+    let governing = governing_record(&enforced.journal, worst_t)
+        .ok_or_else(|| anyhow::anyhow!("no journal record governs t={worst_t}"))?;
+    let governing_t = governing.t;
+    let gold_cause = governing.tenant(GOLD).and_then(|d| d.cause());
+    let flood_cause = governing.tenant(FLOOD).and_then(|d| d.cause());
+
+    // CSV artifacts: the flattened journal, and the registry snapshot.
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for rec in &enforced.journal {
+        for d in &rec.tenants {
+            rows.push(vec![
+                format!("{:.3}", crate::us_to_secs(rec.t) / 3600.0),
+                rec.epoch.to_string(),
+                rec.instances.to_string(),
+                d.tenant.to_string(),
+                d.demand_bytes.to_string(),
+                d.granted_bytes.to_string(),
+                d.reserved_bytes.to_string(),
+                d.pooled_bytes.to_string(),
+                d.cap_bytes.map(|v| v.to_string()).unwrap_or_default(),
+                d.ttl_clamp_secs.map(|v| format!("{v:.3}")).unwrap_or_default(),
+                d.resident_before_bytes.to_string(),
+                d.resident_bytes.to_string(),
+                d.shed_bytes.to_string(),
+                d.denied_admissions.to_string(),
+                format!("{:.3}", d.boost),
+                d.cause().unwrap_or("").to_string(),
+            ]);
+        }
+    }
+    ctx.write_csv(
+        "fig14_journal.csv",
+        &[
+            "hour", "epoch", "instances", "tenant", "demand_bytes", "granted_bytes",
+            "reserved_bytes", "pooled_bytes", "cap_bytes", "ttl_clamp_secs",
+            "resident_before_bytes", "resident_bytes", "shed_bytes", "denied_admissions",
+            "boost", "cause",
+        ],
+        &rows,
+    )?;
+    ctx.write_csv(
+        "fig14_telemetry.csv",
+        &["metric", "value"],
+        &enforced
+            .telemetry
+            .iter()
+            .map(|(k, v)| vec![k.clone(), format!("{v:.6}")])
+            .collect::<Vec<_>>(),
+    )?;
+    ctx.write_csv(
+        "fig14_summary.csv",
+        &["metric", "value"],
+        &[
+            vec!["slo_target".into(), format!("{slo_target:.6}")],
+            vec!["worst_hour".into(), format!("{:.3}", crate::us_to_secs(worst_t) / 3600.0)],
+            vec!["worst_miss_ratio".into(), format!("{worst_miss_ratio:.6}")],
+            vec!["gold_cause".into(), gold_cause.unwrap_or("none").into()],
+            vec!["flood_cause".into(), flood_cause.unwrap_or("none").into()],
+            vec!["journal_records".into(), enforced.journal.len().to_string()],
+        ],
+    )?;
+
+    Ok(Fig14Report {
+        slo_target,
+        worst_t,
+        worst_miss_ratio,
+        governing_t,
+        gold_cause,
+        flood_cause,
+        journal_len: enforced.journal.len(),
+        enforced,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_pinpoints_the_excursion_cause() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let ctx = ExpContext::standard(TraceScale::Smoke, dir.path());
+        let rep = run_fig14_obs(&ctx, TraceScale::Smoke).unwrap();
+
+        // The decision trace exists and is internally consistent.
+        assert!(rep.journal_len > 0, "no journal records");
+        for rec in &rep.enforced.journal {
+            let granted: u64 = rec.tenants.iter().map(|d| d.granted_bytes).sum();
+            assert!(
+                granted <= rec.capacity_bytes,
+                "arbiter invariant: {granted} > {}",
+                rec.capacity_bytes
+            );
+            for d in &rec.tenants {
+                assert!(d.shed_bytes <= d.resident_before_bytes, "{d:?}");
+            }
+        }
+        // The governing record names a corrective decision: during the
+        // flood spike the cluster is oversubscribed, so at least one
+        // tenant was squeezed, clamped or shed at that boundary.
+        assert!(
+            rep.gold_cause.is_some() || rep.flood_cause.is_some(),
+            "the journal must name a cause for the excursion epoch"
+        );
+        // The registry snapshot covers the run (requests counter matches
+        // the report's own accounting).
+        let reqs = rep
+            .enforced
+            .telemetry
+            .iter()
+            .find(|(k, _)| k == "elastictl_requests_total")
+            .map(|(_, v)| *v);
+        assert_eq!(reqs, Some(rep.enforced.requests as f64));
+        // Artifacts exist — including the JSONL the soak invariant pass
+        // consumes.
+        assert!(dir.path().join("fig14_journal.jsonl").exists());
+        assert!(dir.path().join("fig14_journal.csv").exists());
+        assert!(dir.path().join("fig14_telemetry.csv").exists());
+        assert!(dir.path().join("fig14_summary.csv").exists());
+    }
+}

@@ -7,6 +7,7 @@ mod fig10_tenants;
 mod fig11_slo;
 mod fig12_placement;
 mod fig13_churn;
+mod fig14_obs;
 mod fig1_overhead;
 mod fig2_mrc_accuracy;
 mod fig4_trace;
@@ -26,6 +27,7 @@ pub use fig12_placement::{fig12_specs, run_fig12, Fig12Report, Fig12Variant};
 pub use fig13_churn::{
     churn_events, churn_trace, guest_spec, run_fig13, Fig13Report, Fig13Variant,
 };
+pub use fig14_obs::{run_fig14_obs, Fig14Report};
 pub use fig1_overhead::run_fig1;
 pub use fig2_mrc_accuracy::run_fig2;
 pub use fig4_trace::run_fig4;

@@ -92,10 +92,22 @@
 //!   `Σ per-epoch tenant bills == total cluster bill` exact by
 //!   construction, and the departed tenant's ledger closes into a
 //!   [`cost::TenantReconciliation`];
+//! * the **decision-trace telemetry subsystem** ([`telemetry`]): a
+//!   unified registry of counters / gauges / [`metrics::LogHistogram`]-
+//!   backed timers with O(1) pre-resolved-handle recording threaded
+//!   through the balancer, cluster and epoch pipeline (per-stage epoch
+//!   timing included); a bounded per-epoch decision journal
+//!   ([`telemetry::EpochDecisionRecord`]: demand → granted,
+//!   reserved/pooled split, clamps, shedding, denials, SLO escalation,
+//!   billing attribution) surfaced as `RunReport.journal`, as JSONL via
+//!   `[telemetry] journal_path`, and over the serve protocol's
+//!   `WHY <tenant>` / `METRICS` (Prometheus text) commands — all off by
+//!   default so the untelemetered request path stays bit-identical;
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
 //!   plus the multi-tenant fig10 study, the fig11 SLO-enforcement
-//!   study, the fig12 placement-isolation study and the fig13
-//!   online-churn study ([`experiments`]).
+//!   study, the fig12 placement-isolation study, the fig13
+//!   online-churn study and the fig14 observability study
+//!   ([`experiments`]).
 //!
 //! The prose map of all of this — module layout, the per-request
 //! dataflow and the per-epoch control loop — lives in
@@ -119,6 +131,7 @@ pub mod runtime;
 pub mod scaler;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod tenant;
 pub mod trace;
 pub mod ttlopt;

@@ -4,7 +4,7 @@
 //! elastictl gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
 //! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
 //! elastictl exp <id> [--scale smoke|small|full] [--out DIR]
-//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 irm all
+//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm all
 //! elastictl plan <trace>
 //! elastictl ttlopt <trace>
 //! elastictl serve [--addr HOST:PORT] [--policy ...]
@@ -26,10 +26,10 @@ use std::path::PathBuf;
 const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve> [args]
   gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
   run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
-  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 irm ablations all)
+  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm ablations all)
   plan <trace>
   ttlopt <trace>
-  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, ADMIT tenant [k=v..], RETIRE tenant, EPOCH, QUIT — see docs/PROTOCOL.md)";
+  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, ADMIT tenant [k=v..], RETIRE tenant, EPOCH, WHY tenant, METRICS, QUIT — see docs/PROTOCOL.md)";
 
 /// Minimal flag parser: positionals + `--key value` pairs.
 struct Args {
@@ -289,6 +289,10 @@ fn run_experiment(id: &str, scale: TraceScale, out: &PathBuf) -> Result<()> {
     if all || id == "fig13" || id == "churn" {
         matched = true;
         println!("{}", experiments::run_fig13(&ctx, scale)?.render());
+    }
+    if all || id == "fig14" || id == "fig14-obs" || id == "obs" {
+        matched = true;
+        println!("{}", experiments::run_fig14_obs(&ctx, scale)?.render());
     }
     if all || id == "ablations" {
         matched = true;

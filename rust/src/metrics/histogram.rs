@@ -131,6 +131,39 @@ impl LogHistogram {
     pub fn num_buckets(&self) -> usize {
         self.counts.len()
     }
+
+    /// Value at quantile `q` ∈ [0, 1], linearly interpolated within the
+    /// bucket where the cumulative weight crosses `q × total`.
+    ///
+    /// Resolution is bounded by the bucket width: the answer is exact to
+    /// within a factor of `base` of the true sample quantile. Ranks
+    /// landing in the zero bucket return 0; ranks landing in the
+    /// overflow region return the histogram's last bucket edge (the
+    /// largest value it can resolve). An empty histogram returns 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total <= 0.0 {
+            return 0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.total;
+        let mut acc = self.zero;
+        if rank <= acc {
+            return 0;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c <= 0.0 {
+                continue;
+            }
+            if rank <= acc + c {
+                let lo = self.bucket_lo(i) as f64;
+                let hi = self.bucket_lo(i + 1) as f64;
+                let frac = (rank - acc) / c;
+                return (lo + frac * (hi - lo).max(0.0)).round() as u64;
+            }
+            acc += c;
+        }
+        // The rank fell into the overflow region.
+        self.bucket_lo(self.counts.len())
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +207,59 @@ mod tests {
         assert!((h.cumulative_le(1024) - 4.0).abs() < 1e-12);
         h.clear();
         assert_eq!(h.total(), 0.0);
+    }
+
+    #[test]
+    fn quantile_edges() {
+        let mut h = LogHistogram::new(2.0, 1 << 20);
+        assert_eq!(h.quantile(0.5), 0, "empty histogram");
+        h.inc(0);
+        h.inc(0);
+        assert_eq!(h.quantile(0.5), 0, "zero bucket absorbs the rank");
+        let mut h = LogHistogram::new(2.0, 16);
+        h.inc(1 << 30); // overflow
+        assert_eq!(h.quantile(0.99), h.bucket_lo(h.num_buckets()));
+        // A single mid-range value: every quantile lands in its bucket.
+        let mut h = LogHistogram::new(2.0, 1 << 20);
+        h.inc(1000);
+        let v = h.quantile(0.5);
+        assert!((512..=1024).contains(&v), "got {v}");
+    }
+
+    /// Property: against the exact percentile of the raw samples
+    /// ([`crate::metrics::Summary::of`]), the interpolated histogram
+    /// quantile is accurate to within one bucket (a factor of `base`).
+    #[test]
+    fn quantile_tracks_exact_percentiles() {
+        let cases: usize = std::env::var("ELASTICTL_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(16);
+        let mut rng = crate::util::rng::Pcg::seed_from_u64(0x0b5e);
+        for case in 0..cases {
+            let base = [1.1, 1.25, 1.5, 2.0][case % 4];
+            let n = 200 + rng.below(2000) as usize;
+            let mut h = LogHistogram::new(base, 1 << 30);
+            let mut samples: Vec<f64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Log-uniform magnitudes spanning six decades.
+                let v = (10f64.powf(rng.f64() * 6.0)) as u64;
+                h.inc(v);
+                samples.push(v as f64);
+            }
+            let exact = crate::metrics::Summary::of(&samples).unwrap();
+            for (q, want) in [(0.5, exact.p50), (0.9, exact.p90), (0.99, exact.p99)] {
+                let got = h.quantile(q) as f64;
+                // One bucket of resolution plus interpolation slack on
+                // either side (the exact percentile uses nearest-rank,
+                // the histogram interpolates).
+                let tol = base * base;
+                assert!(
+                    got <= want * tol + 1.0 && got >= want / tol - 1.0,
+                    "case {case}: base {base} q {q}: histogram {got} vs exact {want}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -52,6 +52,28 @@ impl HitMiss {
         }
     }
 
+    /// Hit ratio, or `None` for an empty counter — distinguishing
+    /// "no traffic yet" from a true 0% hit ratio (which
+    /// [`HitMiss::hit_ratio`] conflates).
+    #[inline]
+    pub fn try_hit_ratio(&self) -> Option<f64> {
+        if self.total() == 0 {
+            None
+        } else {
+            Some(self.hits as f64 / self.total() as f64)
+        }
+    }
+
+    /// Miss ratio, or `None` for an empty counter.
+    #[inline]
+    pub fn try_miss_ratio(&self) -> Option<f64> {
+        if self.total() == 0 {
+            None
+        } else {
+            Some(self.misses as f64 / self.total() as f64)
+        }
+    }
+
     /// Merge another counter into this one.
     pub fn merge(&mut self, other: &HitMiss) {
         self.hits += other.hits;
@@ -161,12 +183,16 @@ mod tests {
         let mut hm = HitMiss::default();
         assert_eq!(hm.hit_ratio(), 0.0);
         assert_eq!(hm.miss_ratio(), 1.0);
+        assert_eq!(hm.try_hit_ratio(), None, "empty counter has no ratio");
+        assert_eq!(hm.try_miss_ratio(), None);
         for i in 0..10 {
             hm.record(i % 4 != 0); // 3 hits per 4
         }
         assert_eq!(hm.total(), 10);
         assert_eq!(hm.misses, 3);
         assert!((hm.hit_ratio() - 0.7).abs() < 1e-12);
+        assert_eq!(hm.try_hit_ratio(), Some(hm.hit_ratio()));
+        assert_eq!(hm.try_miss_ratio(), Some(hm.miss_ratio()));
         let mut other = HitMiss { hits: 1, misses: 1 };
         other.merge(&hm);
         assert_eq!(other.total(), 12);

@@ -147,6 +147,13 @@ pub trait EpochSizer {
     fn tenant_spec(&self, _tenant: TenantId) -> Option<TenantSpec> {
         None
     }
+
+    /// Attach telemetry handles ([`crate::telemetry::TelemetryRegistry`]).
+    /// Policies that instrument their epoch pipeline (e.g.
+    /// [`crate::tenant::TenantTtlSizer`]'s arbiter-sort and grant-apply
+    /// timers) resolve their handles here, once; the hot path then
+    /// records through the pre-resolved handles at O(1). Default: no-op.
+    fn attach_telemetry(&mut self, _registry: &mut crate::telemetry::TelemetryRegistry) {}
 }
 
 /// Static baseline.

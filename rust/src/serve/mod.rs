@@ -29,8 +29,22 @@
 //! RETIRE <tenant>\n           -> OK <tenant> draining\n  (drains, then
 //!                                reconciles the bill at epoch boundaries)
 //! EPOCH\n                     -> RESIZED <n>\n      (forces an epoch boundary)
+//! WHY <tenant>\n              -> one-line JSON: the newest epoch decision
+//!                                journal record for that tenant, with its
+//!                                `cause` (shed | ttl_clamp | grant_squeeze
+//!                                | null); `ERR` when telemetry is disabled
+//!                                or no epoch has closed yet
+//! METRICS\n                   -> Prometheus text exposition of the live
+//!                                telemetry registry, terminated by a
+//!                                `# EOF` line; `ERR` when telemetry is
+//!                                disabled
 //! QUIT\n                      -> BYE\n (closes the connection)
 //! ```
+//!
+//! `WHY` and `METRICS` require `[telemetry] enabled = true`: the engine
+//! then journals one decision record per closed epoch (bounded by
+//! `[telemetry] journal_capacity`) and threads pre-resolved registry
+//! handles through the request path.
 //!
 //! `SLO` reads the live enforcement loop (`scaler.enforce_grants` plus
 //! `[tenantN] reserved_mb` / `slo_miss_ratio` in the config): the epoch
@@ -147,20 +161,31 @@ impl ServerState {
                 )
             }
             Some("STATS") => match parts.next() {
-                None => Some(format!(
-                    "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"instances\":{},\
-                     \"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
-                    self.engine.requests(),
-                    self.engine.misses(),
-                    self.engine.spurious_misses(),
-                    self.engine.instances(),
-                    self.engine.costs().miss_total(),
-                    self.engine
-                        .ttl_secs()
-                        .map(|t| format!("{t:.3}"))
-                        .unwrap_or_else(|| "null".into()),
-                    self.engine.active_tenants(),
-                )),
+                None => {
+                    // `miss_ratio` is `null` before the first request:
+                    // "no traffic yet" is not a 100% miss ratio.
+                    let hm = crate::metrics::HitMiss {
+                        hits: self.engine.requests() - self.engine.misses(),
+                        misses: self.engine.misses(),
+                    };
+                    Some(format!(
+                        "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"miss_ratio\":{},\
+                         \"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
+                        self.engine.requests(),
+                        self.engine.misses(),
+                        self.engine.spurious_misses(),
+                        hm.try_miss_ratio()
+                            .map(|r| format!("{r:.6}"))
+                            .unwrap_or_else(|| "null".into()),
+                        self.engine.instances(),
+                        self.engine.costs().miss_total(),
+                        self.engine
+                            .ttl_secs()
+                            .map(|t| format!("{t:.3}"))
+                            .unwrap_or_else(|| "null".into()),
+                        self.engine.active_tenants(),
+                    ))
+                }
                 Some(t) => match t.parse::<TenantId>() {
                     Ok(tenant) => Some(self.tenant_stats_line(tenant)),
                     Err(_) => Some(format!("ERR bad tenant {t}")),
@@ -195,6 +220,14 @@ impl ServerState {
                 let n = self.engine.force_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
             }
+            Some("WHY") => match parts.next() {
+                None => Some("ERR WHY needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.why_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("METRICS") => Some(self.metrics_block()),
             Some("QUIT") => None,
             Some(other) => Some(format!("ERR unknown command {other}")),
             None => Some("ERR empty".to_string()),
@@ -317,6 +350,42 @@ impl ServerState {
             ttl,
             state,
         )
+    }
+
+    /// One-line JSON for `WHY <tenant>`: the newest decision-journal
+    /// record carrying a row for the tenant, with the causal decision
+    /// (`shed` / `ttl_clamp` / `grant_squeeze` / `null`) named.
+    fn why_line(&self, tenant: TenantId) -> String {
+        let Some(journal) = self.engine.journal() else {
+            return "ERR telemetry disabled (set [telemetry] enabled = true)".to_string();
+        };
+        let journal = journal.borrow();
+        if journal.is_empty() {
+            return "ERR no epoch decision yet (force one with EPOCH)".to_string();
+        }
+        let Some((rec, dec)) = journal.last_for(tenant) else {
+            return format!("ERR no decision recorded for tenant {tenant}");
+        };
+        format!(
+            "{{\"t\":{},\"epoch\":{},\"instances\":{},\"cause\":{},\"decision\":{}}}",
+            rec.t,
+            rec.epoch,
+            rec.instances,
+            match dec.cause() {
+                Some(c) => format!("\"{c}\""),
+                None => "null".into(),
+            },
+            dec.to_json(),
+        )
+    }
+
+    /// Prometheus text block for `METRICS`, `# EOF`-terminated so the
+    /// line-oriented client knows where the multi-line reply ends.
+    fn metrics_block(&self) -> String {
+        match self.engine.metrics_text() {
+            Some(text) => format!("{text}# EOF"),
+            None => "ERR telemetry disabled (set [telemetry] enabled = true)".to_string(),
+        }
     }
 
     /// One-line JSON for `PLACEMENT`: the physical placement state.
@@ -712,6 +781,66 @@ mod tests {
         // The vertical mode runs no cluster.
         let mut v = state(PolicyKind::IdealTtl);
         assert!(v.handle_line("PLACEMENT").unwrap().starts_with("ERR"));
+    }
+
+    #[test]
+    fn stats_miss_ratio_is_null_before_traffic() {
+        let mut st = state(PolicyKind::Ttl);
+        let stats = st.handle_line("STATS").unwrap();
+        assert!(stats.contains("\"miss_ratio\":null"), "{stats}");
+        st.handle_line("GET k 100");
+        let stats = st.handle_line("STATS").unwrap();
+        assert!(stats.contains("\"miss_ratio\":1.000000"), "{stats}");
+    }
+
+    #[test]
+    fn why_and_metrics_commands() {
+        // Telemetry off (the default): both commands answer ERR.
+        let mut plain = state(PolicyKind::TenantTtl);
+        assert!(
+            plain.handle_line("WHY 1").unwrap().starts_with("ERR telemetry disabled"),
+        );
+        assert!(
+            plain.handle_line("METRICS").unwrap().starts_with("ERR telemetry disabled"),
+        );
+
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.telemetry.enabled = true;
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 2;
+        cfg.scaler.enforce_grants = true;
+        cfg.tenants = vec![
+            TenantSpec::new(1, "gold").with_multiplier(10.0),
+            TenantSpec::new(2, "flood").with_multiplier(0.1),
+        ];
+        let mut st = ServerState::new(&cfg);
+        assert!(
+            st.handle_line("WHY 1").unwrap().starts_with("ERR no epoch decision yet"),
+        );
+        // Oversubscribe the cluster with flood traffic, then decide.
+        for i in 0..30 {
+            st.handle_line(&format!("GET 2/obj{i} 100000"));
+        }
+        st.handle_line("GET 1/k 100000");
+        st.handle_line("EPOCH");
+        let why = st.handle_line("WHY 2").unwrap();
+        assert!(why.starts_with('{'), "{why}");
+        assert!(why.contains("\"tenant\":2"), "{why}");
+        assert!(why.contains("\"cause\":"), "{why}");
+        assert!(why.contains("\"decision\":{"), "{why}");
+        assert!(
+            st.handle_line("WHY 99").unwrap().starts_with("ERR no decision recorded"),
+        );
+        let metrics = st.handle_line("METRICS").unwrap();
+        assert!(
+            metrics.contains("# TYPE elastictl_requests_total counter"),
+            "{metrics}"
+        );
+        assert!(metrics.contains("elastictl_requests_total 31"), "{metrics}");
+        assert!(metrics.ends_with("# EOF"), "{metrics}");
+        assert!(st.handle_line("WHY").unwrap().starts_with("ERR"));
+        assert!(st.handle_line("WHY nope").unwrap().starts_with("ERR bad tenant"));
     }
 
     #[test]

@@ -1,0 +1,677 @@
+//! Decision-trace telemetry: a unified registry of counters / gauges /
+//! timers with O(1) hot-path recording, plus the bounded epoch decision
+//! journal that makes every epoch's control decisions auditable.
+//!
+//! Three pillars:
+//!
+//! * **Registry** ([`TelemetryRegistry`]) — named metrics resolved once
+//!   into shared handles ([`Counter`], [`Gauge`], [`Timer`]); recording
+//!   through a handle is a `Cell` update (no string lookup, no
+//!   allocation, no locking — the engine and everything it owns live on
+//!   one thread, so plain `Rc<Cell>` sharing suffices). Timers are
+//!   [`LogHistogram`]-backed (nanoseconds) and expose interpolated
+//!   quantiles ([`LogHistogram::quantile`]).
+//! * **Decision journal** ([`Journal`], [`EpochDecisionRecord`]) — a
+//!   bounded ring of per-epoch records: for every tenant, demand →
+//!   granted, the reserved/pooled split, the TTL clamp and occupancy cap
+//!   in force, bytes shed, admission denials, the SLO escalation level
+//!   and the epoch's billing attribution. The engine's `JournalProbe`
+//!   assembles one record per closed epoch; `engine::run` writes them as
+//!   JSONL when `[telemetry] journal_path` is set; serve answers
+//!   `WHY <tenant>` from the live journal.
+//! * **Exposition** — [`TelemetryRegistry::prometheus`] renders the
+//!   registry in Prometheus text format (histogram buckets, `tenant=`
+//!   labels) for the serve `METRICS` command;
+//!   [`TelemetryRegistry::snapshot`] yields flat `(metric, value)` rows
+//!   for experiment CSV artifacts.
+//!
+//! Everything here is **off by default** (`[telemetry] enabled`): with
+//! telemetry disabled no handle exists, no clock is read and the request
+//! path is bit-for-bit the untelemetered one (pinned by `engine_parity`).
+
+#![warn(missing_docs)]
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+use crate::metrics::LogHistogram;
+use crate::{TenantId, TimeUs};
+
+/// Log base of timer histograms: ~12% bucket resolution.
+const TIMER_BASE: f64 = 1.12;
+/// Largest resolvable timer sample: 60 s in nanoseconds.
+const TIMER_MAX_NS: u64 = 60_000_000_000;
+
+/// A shared registry handle (single-threaded interior mutability — the
+/// engine, its probes and the serve loop all live on one thread).
+pub type SharedRegistry = Rc<RefCell<TelemetryRegistry>>;
+/// A shared decision-journal handle.
+pub type SharedJournal = Rc<RefCell<Journal>>;
+
+/// Pre-resolved counter handle: recording is one `Cell` update.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Rc<Cell<u64>>);
+
+impl Counter {
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.set(self.0.get().wrapping_add(1));
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.set(self.0.get().saturating_add(n));
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+/// Pre-resolved gauge handle: last-write-wins `f64`.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Rc<Cell<f64>>);
+
+impl Gauge {
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.set(v);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        self.0.get()
+    }
+}
+
+/// Pre-resolved timer handle: a [`LogHistogram`] of nanosecond samples
+/// plus an exact running sum (Prometheus `_sum`).
+#[derive(Clone)]
+pub struct Timer {
+    hist: Rc<RefCell<LogHistogram>>,
+    sum_ns: Rc<Cell<f64>>,
+}
+
+impl Timer {
+    fn new() -> Timer {
+        Timer {
+            hist: Rc::new(RefCell::new(LogHistogram::new(TIMER_BASE, TIMER_MAX_NS))),
+            sum_ns: Rc::new(Cell::new(0.0)),
+        }
+    }
+
+    /// Record one duration sample, in nanoseconds.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.hist.borrow_mut().inc(ns);
+        self.sum_ns.set(self.sum_ns.get() + ns as f64);
+    }
+
+    /// Time `f` and record its wall-clock duration.
+    #[inline]
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.record_ns(t0.elapsed().as_nanos() as u64);
+        r
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.hist.borrow().total() as u64
+    }
+
+    /// Sum of recorded samples, nanoseconds.
+    pub fn sum_ns(&self) -> f64 {
+        self.sum_ns.get()
+    }
+
+    /// Interpolated quantile of the recorded samples, nanoseconds.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        self.hist.borrow().quantile(q)
+    }
+}
+
+impl std::fmt::Debug for Timer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Timer(count={}, sum_ns={})", self.count(), self.sum_ns())
+    }
+}
+
+/// One registered metric: a name, an optional `tenant` label and the
+/// shared handle.
+struct Entry<H> {
+    name: String,
+    tenant: Option<TenantId>,
+    handle: H,
+}
+
+/// The unified registry: named counters, gauges and timers. Lookup (and
+/// therefore allocation) happens only at registration time — the hot
+/// path holds pre-resolved handles.
+#[derive(Default)]
+pub struct TelemetryRegistry {
+    counters: Vec<Entry<Counter>>,
+    gauges: Vec<Entry<Gauge>>,
+    timers: Vec<Entry<Timer>>,
+}
+
+fn resolve<H: Clone + Default>(
+    entries: &mut Vec<Entry<H>>,
+    name: &str,
+    tenant: Option<TenantId>,
+) -> H {
+    if let Some(e) = entries.iter().find(|e| e.name == name && e.tenant == tenant) {
+        return e.handle.clone();
+    }
+    let handle = H::default();
+    entries.push(Entry { name: name.to_string(), tenant, handle: handle.clone() });
+    handle
+}
+
+impl TelemetryRegistry {
+    /// An empty registry.
+    pub fn new() -> TelemetryRegistry {
+        TelemetryRegistry::default()
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&mut self, name: &str) -> Counter {
+        resolve(&mut self.counters, name, None)
+    }
+
+    /// Get or create the counter `name{tenant="t"}`.
+    pub fn tenant_counter(&mut self, name: &str, tenant: TenantId) -> Counter {
+        resolve(&mut self.counters, name, Some(tenant))
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&mut self, name: &str) -> Gauge {
+        resolve(&mut self.gauges, name, None)
+    }
+
+    /// Get or create the gauge `name{tenant="t"}`.
+    pub fn tenant_gauge(&mut self, name: &str, tenant: TenantId) -> Gauge {
+        resolve(&mut self.gauges, name, Some(tenant))
+    }
+
+    /// Get or create the timer `name` (nanosecond histogram).
+    pub fn timer(&mut self, name: &str) -> Timer {
+        if let Some(e) = self.timers.iter().find(|e| e.name == name && e.tenant.is_none()) {
+            return e.handle.clone();
+        }
+        let handle = Timer::new();
+        self.timers.push(Entry { name: name.to_string(), tenant: None, handle: handle.clone() });
+        handle
+    }
+
+    /// Render the registry in Prometheus text exposition format:
+    /// counters and gauges as single samples (with `tenant=` labels
+    /// where registered), timers as histograms (`_bucket{le=…}` /
+    /// `_sum` / `_count`) plus interpolated `_p50_ns` / `_p99_ns` /
+    /// `_p999_ns` gauges.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let label = |t: Option<TenantId>| match t {
+            Some(t) => format!("{{tenant=\"{t}\"}}"),
+            None => String::new(),
+        };
+        // One `# TYPE` line per metric name (labeled per-tenant series
+        // share a name and must not repeat it).
+        let mut seen: Vec<&str> = Vec::new();
+        for e in &self.counters {
+            if !seen.contains(&e.name.as_str()) {
+                seen.push(e.name.as_str());
+                let _ = writeln!(out, "# TYPE {} counter", e.name);
+            }
+            let _ = writeln!(out, "{}{} {}", e.name, label(e.tenant), e.handle.get());
+        }
+        seen.clear();
+        for e in &self.gauges {
+            if !seen.contains(&e.name.as_str()) {
+                seen.push(e.name.as_str());
+                let _ = writeln!(out, "# TYPE {} gauge", e.name);
+            }
+            let _ = writeln!(out, "{}{} {}", e.name, label(e.tenant), fmt_f64(e.handle.get()));
+        }
+        for e in &self.timers {
+            let _ = writeln!(out, "# TYPE {} histogram", e.name);
+            let hist = e.handle.hist.borrow();
+            let total = hist.total();
+            // Emit only the buckets where the cumulative count moves
+            // (plus +Inf): zero-count runs carry no information and
+            // omitting them keeps the wire reply compact.
+            let mut prev = 0u64;
+            for (edge, frac) in hist.cdf() {
+                let cum = (frac * total).round() as u64;
+                if cum == prev {
+                    continue;
+                }
+                prev = cum;
+                let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", e.name, edge, cum);
+            }
+            let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", e.name, total as u64);
+            let _ = writeln!(out, "{}_sum {}", e.name, fmt_f64(e.handle.sum_ns()));
+            let _ = writeln!(out, "{}_count {}", e.name, total as u64);
+            drop(hist);
+            for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
+                let _ = writeln!(out, "# TYPE {}_{suffix}_ns gauge", e.name);
+                let _ =
+                    writeln!(out, "{}_{suffix}_ns {}", e.name, e.handle.quantile_ns(q));
+            }
+        }
+        out
+    }
+
+    /// Flat `(metric, value)` rows for CSV artifacts: counters and
+    /// gauges as-is (tenant labels folded into the metric name), timers
+    /// expanded into `_count` / `_sum_ns` / `_p50_ns` / `_p99_ns` /
+    /// `_p999_ns`.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let mut rows: Vec<(String, f64)> = Vec::new();
+        let key = |name: &str, t: Option<TenantId>| match t {
+            Some(t) => format!("{name}{{tenant={t}}}"),
+            None => name.to_string(),
+        };
+        for e in &self.counters {
+            rows.push((key(&e.name, e.tenant), e.handle.get() as f64));
+        }
+        for e in &self.gauges {
+            rows.push((key(&e.name, e.tenant), e.handle.get()));
+        }
+        for e in &self.timers {
+            rows.push((format!("{}_count", e.name), e.handle.count() as f64));
+            rows.push((format!("{}_sum_ns", e.name), e.handle.sum_ns()));
+            for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
+                rows.push((
+                    format!("{}_{suffix}_ns", e.name),
+                    e.handle.quantile_ns(q) as f64,
+                ));
+            }
+        }
+        rows
+    }
+}
+
+/// Trim a float for exposition: integral values print without a
+/// fractional part, everything else with enough digits to round-trip
+/// operator-level reading.
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.9}")
+    }
+}
+
+/// One tenant's slice of an epoch decision — what the arbiter granted,
+/// what enforcement did about it, and what it cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantDecision {
+    /// The tenant this row describes.
+    pub tenant: TenantId,
+    /// Shadow (virtual-cache) demand at the decision, bytes.
+    pub demand_bytes: u64,
+    /// Bytes granted by the arbiter (reserved floor included).
+    pub granted_bytes: u64,
+    /// Memshare-style reserved floor from the tenant's spec, bytes.
+    pub reserved_bytes: u64,
+    /// Grant minus reserved floor: the pooled top-up, bytes.
+    pub pooled_bytes: u64,
+    /// Occupancy cap in force after the decision (`None` = unenforced).
+    pub cap_bytes: Option<u64>,
+    /// TTL clamp in force on the tenant's controller, seconds.
+    pub ttl_clamp_secs: Option<f64>,
+    /// Physical resident bytes before the boundary's shedding.
+    pub resident_before_bytes: u64,
+    /// Physical resident bytes after the boundary (ledger row).
+    pub resident_bytes: u64,
+    /// Bytes shed at this boundary to bring the tenant under its cap
+    /// (or to drain it).
+    pub shed_bytes: u64,
+    /// Admissions refused by the occupancy cap during the closed epoch.
+    pub denied_admissions: u64,
+    /// Configured miss-ratio SLO, if any.
+    pub slo_miss_ratio: Option<f64>,
+    /// Measured physical miss ratio of the last closed epoch with
+    /// traffic.
+    pub measured_miss_ratio: Option<f64>,
+    /// Grant-priority escalation factor (1.0 = compliant/untracked).
+    pub boost: f64,
+    /// Storage dollars attributed to this tenant for the closed epoch.
+    pub bill_storage_dollars: f64,
+    /// Miss dollars attributed to this tenant for the closed epoch.
+    pub bill_miss_dollars: f64,
+    /// Final reconciled lifetime bill, set on the record where the
+    /// tenant's retirement completed.
+    pub reconciled_dollars: Option<f64>,
+}
+
+impl TenantDecision {
+    /// The causal decision this epoch took against the tenant, most
+    /// severe first: bytes were `shed`, its timer was `ttl_clamp`ed, or
+    /// its grant was squeezed below demand (`grant_squeeze`). `None`
+    /// when the epoch took no corrective action against this tenant.
+    pub fn cause(&self) -> Option<&'static str> {
+        if self.shed_bytes > 0 {
+            Some("shed")
+        } else if self.ttl_clamp_secs.is_some() {
+            Some("ttl_clamp")
+        } else if self.granted_bytes < self.demand_bytes {
+            Some("grant_squeeze")
+        } else {
+            None
+        }
+    }
+
+    /// One-line JSON rendering (shared by the JSONL journal and the
+    /// serve `WHY` command).
+    pub fn to_json(&self) -> String {
+        let opt_u = |v: Option<u64>| v.map(|v| v.to_string()).unwrap_or_else(|| "null".into());
+        let opt_f = |v: Option<f64>| v.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into());
+        format!(
+            "{{\"tenant\":{},\"demand_bytes\":{},\"granted_bytes\":{},\"reserved_bytes\":{},\
+             \"pooled_bytes\":{},\"cap_bytes\":{},\"ttl_clamp_secs\":{},\
+             \"resident_before_bytes\":{},\"resident_bytes\":{},\"shed_bytes\":{},\
+             \"denied_admissions\":{},\"slo_miss_ratio\":{},\"measured_miss_ratio\":{},\
+             \"boost\":{:.3},\"bill_storage_dollars\":{:.9},\"bill_miss_dollars\":{:.9},\
+             \"reconciled_dollars\":{},\"cause\":{}}}",
+            self.tenant,
+            self.demand_bytes,
+            self.granted_bytes,
+            self.reserved_bytes,
+            self.pooled_bytes,
+            opt_u(self.cap_bytes),
+            opt_f(self.ttl_clamp_secs),
+            self.resident_before_bytes,
+            self.resident_bytes,
+            self.shed_bytes,
+            self.denied_admissions,
+            opt_f(self.slo_miss_ratio),
+            opt_f(self.measured_miss_ratio),
+            self.boost,
+            self.bill_storage_dollars,
+            self.bill_miss_dollars,
+            opt_f(self.reconciled_dollars),
+            match self.cause() {
+                Some(c) => format!("\"{c}\""),
+                None => "null".into(),
+            },
+        )
+    }
+}
+
+/// One epoch boundary's full decision record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochDecisionRecord {
+    /// Epoch-end timestamp (the boundary the decision was taken at).
+    pub t: TimeUs,
+    /// Zero-based index of the closed epoch.
+    pub epoch: u64,
+    /// Instance count after the sizing decision.
+    pub instances: u32,
+    /// Grantable capacity (`max_instances × instance bytes`) the
+    /// arbiter decided against — Σ granted must never exceed it.
+    pub capacity_bytes: u64,
+    /// Cluster-wide storage dollars billed for the closed epoch.
+    pub storage_dollars: f64,
+    /// Cluster-wide miss dollars accrued over the closed epoch.
+    pub miss_dollars: f64,
+    /// Per-tenant decisions, tenant-ascending.
+    pub tenants: Vec<TenantDecision>,
+}
+
+impl EpochDecisionRecord {
+    /// This record's row for `tenant`, if it participated.
+    pub fn tenant(&self, tenant: TenantId) -> Option<&TenantDecision> {
+        self.tenants.iter().find(|d| d.tenant == tenant)
+    }
+
+    /// One-line JSON rendering (one JSONL line per epoch).
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"t\":{},\"epoch\":{},\"instances\":{},\"capacity_bytes\":{},\
+             \"storage_dollars\":{:.9},\"miss_dollars\":{:.9},\"tenants\":[",
+            self.t, self.epoch, self.instances, self.capacity_bytes, self.storage_dollars,
+            self.miss_dollars,
+        );
+        for (i, d) in self.tenants.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&d.to_json());
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Bounded ring of [`EpochDecisionRecord`]s: the newest `capacity`
+/// records are retained (a serve deployment forcing epochs forever must
+/// not grow without bound).
+#[derive(Debug, Default)]
+pub struct Journal {
+    records: VecDeque<EpochDecisionRecord>,
+    capacity: usize,
+}
+
+impl Journal {
+    /// A journal retaining at most `capacity` records (min 1).
+    pub fn new(capacity: usize) -> Journal {
+        Journal { records: VecDeque::new(), capacity: capacity.max(1) }
+    }
+
+    /// Append a record, evicting the oldest past capacity.
+    pub fn push(&mut self, rec: EpochDecisionRecord) {
+        if self.records.len() == self.capacity {
+            self.records.pop_front();
+        }
+        self.records.push_back(rec);
+    }
+
+    /// Retained records, oldest first.
+    pub fn records(&self) -> impl Iterator<Item = &EpochDecisionRecord> {
+        self.records.iter()
+    }
+
+    /// Number of retained records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether no record is retained.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The newest record.
+    pub fn last(&self) -> Option<&EpochDecisionRecord> {
+        self.records.back()
+    }
+
+    /// The newest record carrying a row for `tenant`, with that row.
+    pub fn last_for(
+        &self,
+        tenant: TenantId,
+    ) -> Option<(&EpochDecisionRecord, &TenantDecision)> {
+        self.records
+            .iter()
+            .rev()
+            .find_map(|r| r.tenant(tenant).map(|d| (r, d)))
+    }
+
+    /// All retained records as JSONL (one record per line).
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            s.push_str(&r.to_json());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decision(tenant: TenantId) -> TenantDecision {
+        TenantDecision {
+            tenant,
+            demand_bytes: 1000,
+            granted_bytes: 1000,
+            reserved_bytes: 200,
+            pooled_bytes: 800,
+            cap_bytes: None,
+            ttl_clamp_secs: None,
+            resident_before_bytes: 900,
+            resident_bytes: 900,
+            shed_bytes: 0,
+            denied_admissions: 0,
+            slo_miss_ratio: None,
+            measured_miss_ratio: Some(0.25),
+            boost: 1.0,
+            bill_storage_dollars: 0.001,
+            bill_miss_dollars: 0.002,
+            reconciled_dollars: None,
+        }
+    }
+
+    fn record(t: TimeUs, epoch: u64) -> EpochDecisionRecord {
+        EpochDecisionRecord {
+            t,
+            epoch,
+            instances: 2,
+            capacity_bytes: 10_000,
+            storage_dollars: 0.003,
+            miss_dollars: 0.004,
+            tenants: vec![decision(0), decision(7)],
+        }
+    }
+
+    #[test]
+    fn counters_gauges_timers_share_handles() {
+        let mut reg = TelemetryRegistry::new();
+        let a = reg.counter("elastictl_requests_total");
+        let b = reg.counter("elastictl_requests_total");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5, "same name resolves to the same cell");
+        let g = reg.gauge("elastictl_instances");
+        g.set(3.0);
+        assert_eq!(reg.gauge("elastictl_instances").get(), 3.0);
+        let t = reg.timer("elastictl_epoch_decide_ns");
+        t.record_ns(1_000);
+        t.record_ns(2_000);
+        let t2 = reg.timer("elastictl_epoch_decide_ns");
+        assert_eq!(t2.count(), 2);
+        assert_eq!(t2.sum_ns(), 3_000.0);
+        assert!(t2.quantile_ns(0.5) >= 900 && t2.quantile_ns(0.5) <= 2_300);
+        // Labeled handles are distinct per tenant.
+        let c0 = reg.tenant_counter("elastictl_denied_total", 0);
+        let c1 = reg.tenant_counter("elastictl_denied_total", 1);
+        c0.inc();
+        assert_eq!(c1.get(), 0);
+        assert_eq!(reg.tenant_counter("elastictl_denied_total", 0).get(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut reg = TelemetryRegistry::new();
+        reg.counter("elastictl_requests_total").add(42);
+        reg.tenant_gauge("elastictl_granted_bytes", 3).set(1e6);
+        let t = reg.timer("elastictl_epoch_decide_ns");
+        t.record_ns(1500);
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE elastictl_requests_total counter"), "{text}");
+        assert!(text.contains("elastictl_requests_total 42"), "{text}");
+        assert!(text.contains("elastictl_granted_bytes{tenant=\"3\"} 1000000"), "{text}");
+        assert!(text.contains("# TYPE elastictl_epoch_decide_ns histogram"), "{text}");
+        assert!(text.contains("elastictl_epoch_decide_ns_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("elastictl_epoch_decide_ns_sum 1500"), "{text}");
+        assert!(text.contains("elastictl_epoch_decide_ns_count 1"), "{text}");
+        assert!(text.contains("elastictl_epoch_decide_ns_p99_ns "), "{text}");
+        // Every line is a comment or `name[{labels}] value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line
+                        .split_once(' ')
+                        .map(|(m, v)| !m.is_empty() && v.parse::<f64>().is_ok())
+                        .unwrap_or(false),
+                "unparseable exposition line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_rows_cover_all_kinds() {
+        let mut reg = TelemetryRegistry::new();
+        reg.counter("c").add(7);
+        reg.tenant_gauge("g", 2).set(0.5);
+        reg.timer("t").record_ns(100);
+        let rows = reg.snapshot();
+        let get = |k: &str| rows.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        assert_eq!(get("c"), Some(7.0));
+        assert_eq!(get("g{tenant=2}"), Some(0.5));
+        assert_eq!(get("t_count"), Some(1.0));
+        assert_eq!(get("t_sum_ns"), Some(100.0));
+        assert!(get("t_p999_ns").is_some());
+    }
+
+    #[test]
+    fn journal_bounds_and_lookup() {
+        let mut j = Journal::new(3);
+        assert!(j.is_empty());
+        for i in 0..5u64 {
+            j.push(record(i * 100, i));
+        }
+        assert_eq!(j.len(), 3, "bounded at capacity");
+        assert_eq!(j.records().next().unwrap().epoch, 2, "oldest evicted");
+        assert_eq!(j.last().unwrap().epoch, 4);
+        let (r, d) = j.last_for(7).unwrap();
+        assert_eq!(r.epoch, 4);
+        assert_eq!(d.tenant, 7);
+        assert!(j.last_for(99).is_none());
+    }
+
+    #[test]
+    fn decision_cause_priority() {
+        let mut d = decision(0);
+        assert_eq!(d.cause(), None, "full grant, no action");
+        d.granted_bytes = 500;
+        assert_eq!(d.cause(), Some("grant_squeeze"));
+        d.ttl_clamp_secs = Some(60.0);
+        assert_eq!(d.cause(), Some("ttl_clamp"));
+        d.shed_bytes = 100;
+        assert_eq!(d.cause(), Some("shed"));
+    }
+
+    #[test]
+    fn record_json_is_one_line_and_balanced() {
+        let mut rec = record(3_600_000_000, 0);
+        rec.tenants[1].cap_bytes = Some(4096);
+        rec.tenants[1].ttl_clamp_secs = Some(12.5);
+        rec.tenants[1].granted_bytes = 500;
+        let json = rec.to_json();
+        assert!(!json.contains('\n'));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(json.contains("\"cap_bytes\":4096"), "{json}");
+        assert!(json.contains("\"cap_bytes\":null"), "{json}");
+        assert!(json.contains("\"cause\":\"ttl_clamp\""), "{json}");
+        assert!(json.contains("\"cause\":null"), "{json}");
+        let mut j = Journal::new(8);
+        j.push(rec.clone());
+        j.push(rec);
+        assert_eq!(j.to_jsonl().lines().count(), 2);
+    }
+}

@@ -1040,6 +1040,10 @@ pub struct TenantTtlSizer {
     arbiter: Arbiter,
     enforce: bool,
     last_allocations: Vec<TenantAllocation>,
+    // Per-stage epoch timers, resolved once by `attach_telemetry`
+    // (None = telemetry off: no clock is read).
+    arbiter_timer: Option<crate::telemetry::Timer>,
+    grant_timer: Option<crate::telemetry::Timer>,
 }
 
 impl TenantTtlSizer {
@@ -1057,6 +1061,8 @@ impl TenantTtlSizer {
             arbiter: Arbiter::new(instance_bytes, scaler),
             enforce: scaler.enforce_grants,
             last_allocations: Vec::new(),
+            arbiter_timer: None,
+            grant_timer: None,
         }
     }
 
@@ -1154,9 +1160,23 @@ impl EpochSizer for TenantTtlSizer {
         self.bank.close_epoch_slo();
         self.bank.note_epoch_boundary();
         let demands = self.bank.demands();
-        let (n, allocs) = self.arbiter.decide(&demands);
-        for a in &allocs {
-            self.bank.apply_grant(a, self.enforce);
+        // The arbiter's weight sort is the projected 1000-tenant hotspot
+        // (ROADMAP): time it separately from the grant-application loop.
+        let (n, allocs) = match self.arbiter_timer.clone() {
+            Some(timer) => timer.time(|| self.arbiter.decide(&demands)),
+            None => self.arbiter.decide(&demands),
+        };
+        match self.grant_timer.clone() {
+            Some(timer) => timer.time(|| {
+                for a in &allocs {
+                    self.bank.apply_grant(a, self.enforce);
+                }
+            }),
+            None => {
+                for a in &allocs {
+                    self.bank.apply_grant(a, self.enforce);
+                }
+            }
         }
         self.last_allocations = allocs;
         n
@@ -1226,6 +1246,11 @@ impl EpochSizer for TenantTtlSizer {
 
     fn tenant_spec(&self, tenant: TenantId) -> Option<TenantSpec> {
         self.bank.registry().get(tenant).cloned()
+    }
+
+    fn attach_telemetry(&mut self, registry: &mut crate::telemetry::TelemetryRegistry) {
+        self.arbiter_timer = Some(registry.timer("elastictl_epoch_arbiter_ns"));
+        self.grant_timer = Some(registry.timer("elastictl_epoch_grant_apply_ns"));
     }
 }
 

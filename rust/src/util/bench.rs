@@ -16,6 +16,10 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p99_ns: f64,
+    /// Interpolated from a log-scale histogram of the samples
+    /// ([`crate::metrics::LogHistogram::quantile`]), so the tail estimate
+    /// stays meaningful even when fewer than 1000 iterations ran.
+    pub p999_ns: f64,
     /// Optional elements-per-iteration for throughput reporting.
     pub elements_per_iter: u64,
 }
@@ -36,8 +40,8 @@ impl BenchResult {
             String::new()
         };
         format!(
-            "{:<44} {:>12.1} ns/iter  p50 {:>12.1}  p99 {:>12.1}{}",
-            self.name, self.mean_ns, self.p50_ns, self.p99_ns, tp
+            "{:<44} {:>12.1} ns/iter  p50 {:>12.1}  p99 {:>12.1}  p999 {:>12.1}{}",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.p999_ns, tp
         )
     }
 }
@@ -85,12 +89,20 @@ impl Bencher {
         samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
         let pct = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        // Tail estimate via the interpolated log-histogram quantile: with a
+        // time-budgeted sample count the nearest-rank p999 would collapse
+        // onto the max; the histogram interpolates within its ~2% buckets.
+        let mut hist = crate::metrics::LogHistogram::new(1.02, 60_000_000_000);
+        for &ns in &samples_ns {
+            hist.inc(ns as u64);
+        }
         let result = BenchResult {
             name: format!("{}/{}", self.suite, name),
             iters: samples_ns.len() as u64,
             mean_ns: mean,
             p50_ns: pct(0.50),
             p99_ns: pct(0.99),
+            p999_ns: hist.quantile(0.999) as f64,
             elements_per_iter: elements,
         };
         println!("{}", result.render());
@@ -112,16 +124,20 @@ impl Bencher {
         let mut text = String::new();
         let fresh = !path.exists();
         if fresh {
-            text.push_str("suite_bench,iters,mean_ns,p50_ns,p99_ns,elements_per_iter,throughput_per_sec\n");
+            text.push_str(
+                "suite_bench,iters,mean_ns,p50_ns,p99_ns,p999_ns,elements_per_iter,\
+                 throughput_per_sec\n",
+            );
         }
         for r in &self.results {
             text.push_str(&format!(
-                "{},{},{:.1},{:.1},{:.1},{},{:.1}\n",
+                "{},{},{:.1},{:.1},{:.1},{:.1},{},{:.1}\n",
                 r.name,
                 r.iters,
                 r.mean_ns,
                 r.p50_ns,
                 r.p99_ns,
+                r.p999_ns,
                 r.elements_per_iter,
                 r.throughput_per_sec()
             ));
@@ -156,13 +172,14 @@ impl Bencher {
         for (i, r) in self.results.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
-                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"elements_per_iter\": {}, \
-                 \"throughput_per_sec\": {:.1}}}{}\n",
+                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"p999_ns\": {:.1}, \
+                 \"elements_per_iter\": {}, \"throughput_per_sec\": {:.1}}}{}\n",
                 r.name,
                 r.iters,
                 r.mean_ns,
                 r.p50_ns,
                 r.p99_ns,
+                r.p999_ns,
                 r.elements_per_iter,
                 r.throughput_per_sec(),
                 if i + 1 < self.results.len() { "," } else { "" },
@@ -195,6 +212,8 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.iters >= 10);
         assert!(r.p99_ns >= r.p50_ns);
+        // Histogram-interpolated tail: within one 2% bucket of the max.
+        assert!(r.p999_ns >= r.p50_ns / 1.02, "p999 {} p50 {}", r.p999_ns, r.p50_ns);
     }
 
     #[test]
@@ -206,6 +225,7 @@ mod tests {
             mean_ns: 1500.0,
             p50_ns: 1400.0,
             p99_ns: 2000.0,
+            p999_ns: 2100.0,
             elements_per_iter: 100,
         });
         b.results.push(BenchResult {
@@ -214,6 +234,7 @@ mod tests {
             mean_ns: 10.0,
             p50_ns: 10.0,
             p99_ns: 11.0,
+            p999_ns: 12.0,
             elements_per_iter: 1,
         });
         let json = b.to_json();
@@ -233,6 +254,7 @@ mod tests {
             mean_ns: 1000.0,
             p50_ns: 1000.0,
             p99_ns: 1000.0,
+            p999_ns: 1000.0,
             elements_per_iter: 500,
         };
         assert!((r.throughput_per_sec() - 5e8).abs() < 1.0);

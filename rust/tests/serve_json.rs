@@ -1,0 +1,381 @@
+//! Wire-format conformance for the serve line protocol: every JSON
+//! one-liner (`STATS` / `SLO` / `PLACEMENT` / `WHY`) must parse as valid
+//! JSON and carry exactly the fields docs/PROTOCOL.md documents, and
+//! `METRICS` must be well-formed Prometheus text terminated by `# EOF`.
+//!
+//! The JSON validator is hand-rolled (the offline build carries no
+//! serde): a strict recursive-descent parser that rejects trailing
+//! garbage, unbalanced braces, and malformed numbers, and returns the
+//! top-level object's keys in wire order so the tests can diff them
+//! against the protocol document verbatim.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::serve::ServerState;
+use elastictl::tenant::TenantSpec;
+
+/// Strict JSON parser over the reply bytes (all replies are ASCII).
+struct Json<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Json<'_> {
+    /// Validate `s` as one JSON value; returns the top-level object's
+    /// keys in order (empty for non-object values).
+    fn parse(s: &str) -> Result<Vec<String>, String> {
+        let mut p = Json { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let keys = if p.peek() == Some(b'{') { p.object()? } else { p.value().map(|_| Vec::new())? };
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing garbage at byte {}", p.i));
+        }
+        Ok(keys)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object().map(|_| ()),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(|_| ()),
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {:?} at byte {}", other.map(char::from), self.i)),
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        match text.parse::<f64>() {
+            Ok(v) if v.is_finite() => Ok(()),
+            _ => Err(format!("bad number {text:?} at byte {start}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(c @ (b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't')) => {
+                            out.push(char::from(c));
+                            self.i += 1;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                }
+                Some(c) => {
+                    out.push(char::from(c));
+                    self.i += 1;
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.eat(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("bad array at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Vec<String>, String> {
+        self.eat(b'{')?;
+        let mut keys = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(keys);
+        }
+        loop {
+            self.ws();
+            keys.push(self.string()?);
+            self.ws();
+            self.eat(b':')?;
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(keys);
+                }
+                _ => return Err(format!("bad object at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+/// Parse a reply, panicking with the reply text on invalid JSON.
+fn keys_of(reply: &str) -> Vec<String> {
+    Json::parse(reply).unwrap_or_else(|e| panic!("invalid JSON ({e}): {reply}"))
+}
+
+/// A tenant-aware, grant-enforcing, telemetry-on server with a tiny
+/// cluster, oversubscribed by flood traffic and decided once — the state
+/// every documented JSON command has something to say about.
+fn decided_state() -> ServerState {
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.telemetry.enabled = true;
+    cfg.controller.t_init_secs = 3600.0;
+    cfg.cost.instance.ram_bytes = 1_000_000;
+    cfg.scaler.max_instances = 2;
+    cfg.scaler.enforce_grants = true;
+    cfg.tenants = vec![
+        TenantSpec::new(1, "gold").with_multiplier(10.0).with_slo_miss_ratio(0.2),
+        TenantSpec::new(2, "flood").with_multiplier(0.1),
+    ];
+    let mut st = ServerState::new(&cfg);
+    for i in 0..30 {
+        st.handle_line(&format!("GET 2/obj{i} 100000"));
+    }
+    st.handle_line("GET 1/k 100000");
+    st.handle_line("EPOCH");
+    st
+}
+
+#[test]
+fn global_stats_fields_match_protocol_doc() {
+    let mut st = ServerState::new(&Config::with_policy(PolicyKind::Ttl));
+    let documented = [
+        "requests",
+        "misses",
+        "spurious",
+        "miss_ratio",
+        "instances",
+        "miss_cost",
+        "ttl_secs",
+        "tenants",
+    ];
+    // Pre-traffic: `miss_ratio` (and `ttl_secs`) are JSON `null`, and the
+    // reply must already be valid JSON with the full documented key set.
+    let reply = st.handle_line("STATS").unwrap();
+    assert!(reply.contains("\"miss_ratio\":null"), "{reply}");
+    assert_eq!(keys_of(&reply), documented, "{reply}");
+    st.handle_line("GET k1 100");
+    st.handle_line("GET k1 100");
+    let reply = st.handle_line("STATS").unwrap();
+    assert_eq!(keys_of(&reply), documented, "{reply}");
+    assert!(reply.contains("\"miss_ratio\":0.500000"), "{reply}");
+}
+
+#[test]
+fn tenant_stats_fields_match_protocol_doc() {
+    let mut st = decided_state();
+    let reply = st.handle_line("STATS 2").unwrap();
+    assert_eq!(
+        keys_of(&reply),
+        ["tenant", "requests", "misses", "miss_cost", "physical_bytes", "ttl_secs", "state"],
+        "{reply}"
+    );
+    // Tenant-oblivious policies document the same row minus `state`.
+    let mut plain = ServerState::new(&Config::with_policy(PolicyKind::Ttl));
+    plain.handle_line("GET k 100");
+    let reply = plain.handle_line("STATS 0").unwrap();
+    assert_eq!(
+        keys_of(&reply),
+        ["tenant", "requests", "misses", "miss_cost", "physical_bytes", "ttl_secs"],
+        "{reply}"
+    );
+}
+
+#[test]
+fn slo_fields_match_protocol_doc() {
+    let mut st = decided_state();
+    for t in ["SLO 1", "SLO 2"] {
+        let reply = st.handle_line(t).unwrap();
+        assert_eq!(
+            keys_of(&reply),
+            [
+                "tenant",
+                "enforced",
+                "decided",
+                "demand_bytes",
+                "granted_bytes",
+                "cap_bytes",
+                "admitted_epoch_bytes",
+                "denied",
+                "ttl_clamp_secs",
+                "slo_miss_ratio",
+                "measured_miss_ratio",
+                "in_violation",
+                "boost",
+            ],
+            "{reply}"
+        );
+    }
+}
+
+#[test]
+fn placement_fields_match_protocol_doc() {
+    let mut st = decided_state();
+    let reply = st.handle_line("PLACEMENT").unwrap();
+    assert_eq!(keys_of(&reply), ["policy", "instances", "tenants"], "{reply}");
+    // And with per-tenant pins populated (hash_slot_pinned after EPOCH).
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.cluster.placement = elastictl::placement::PlacementKind::HashSlotPinned;
+    cfg.tenants = vec![TenantSpec::new(1, "api")];
+    let mut st = ServerState::new(&cfg);
+    st.handle_line("GET 1/k1 1000");
+    st.handle_line("EPOCH");
+    let reply = st.handle_line("PLACEMENT").unwrap();
+    assert_eq!(keys_of(&reply), ["policy", "instances", "tenants"], "{reply}");
+    assert!(reply.contains("\"pins\":["), "{reply}");
+}
+
+#[test]
+fn why_fields_match_protocol_doc() {
+    let mut st = decided_state();
+    let reply = st.handle_line("WHY 2").unwrap();
+    assert_eq!(keys_of(&reply), ["t", "epoch", "instances", "cause", "decision"], "{reply}");
+    // The nested decision record round-trips the journal schema exactly.
+    let dec = &reply[reply.find("\"decision\":").unwrap() + "\"decision\":".len()..reply.len() - 1];
+    assert_eq!(
+        keys_of(dec),
+        [
+            "tenant",
+            "demand_bytes",
+            "granted_bytes",
+            "reserved_bytes",
+            "pooled_bytes",
+            "cap_bytes",
+            "ttl_clamp_secs",
+            "resident_before_bytes",
+            "resident_bytes",
+            "shed_bytes",
+            "denied_admissions",
+            "slo_miss_ratio",
+            "measured_miss_ratio",
+            "boost",
+            "bill_storage_dollars",
+            "bill_miss_dollars",
+            "reconciled_dollars",
+            "cause",
+        ],
+        "{dec}"
+    );
+}
+
+#[test]
+fn journal_jsonl_records_parse_too() {
+    // The JSONL the engine writes (and WHY serves a row of) is the same
+    // to_json(): every journaled record must be one valid JSON object.
+    let st = decided_state();
+    let journal = st.engine.journal().expect("telemetry on").borrow().to_jsonl();
+    assert!(!journal.is_empty());
+    for line in journal.lines() {
+        let keys = keys_of(line);
+        assert_eq!(
+            keys,
+            ["t", "epoch", "instances", "capacity_bytes", "storage_dollars", "miss_dollars",
+             "tenants"],
+            "{line}"
+        );
+    }
+}
+
+#[test]
+fn metrics_reply_is_prometheus_text() {
+    let mut st = decided_state();
+    let block = st.handle_line("METRICS").unwrap();
+    let mut samples = 0usize;
+    let mut lines = block.lines().peekable();
+    while let Some(line) = lines.next() {
+        let last = lines.peek().is_none();
+        if last {
+            assert_eq!(line, "# EOF", "METRICS must terminate with # EOF: {line:?}");
+            break;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("TYPE ") || rest.starts_with("HELP "),
+                "bad comment line: {line:?}"
+            );
+            continue;
+        }
+        // A sample: `name value` or `name{label="v",...} value`.
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line:?}"));
+        assert!(value.parse::<f64>().is_ok() || value == "+Inf", "bad value: {line:?}");
+        let name = series.split('{').next().unwrap();
+        assert!(
+            !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name: {line:?}"
+        );
+        let labels = &series[name.len()..];
+        assert!(
+            labels.is_empty() || (labels.starts_with('{') && labels.ends_with('}')),
+            "bad label block: {line:?}"
+        );
+        samples += 1;
+    }
+    assert!(samples >= 10, "suspiciously few samples:\n{block}");
+    // The documented request-path counters are present.
+    for metric in ["elastictl_requests_total", "elastictl_misses_total", "elastictl_instances"] {
+        assert!(block.contains(metric), "missing {metric}:\n{block}");
+    }
+}

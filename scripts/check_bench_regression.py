@@ -2,6 +2,7 @@
 """Compare a quick-bench JSON summary against the committed baseline.
 
 Usage: check_bench_regression.py <baseline.json> <current.json>
+           [--append-history BENCH_HISTORY.jsonl]
 
 The baseline (rust/benches/baseline.json) maps bench names to the
 throughput floor they are expected to sustain (elements/second, as
@@ -14,19 +15,57 @@ shared CI runners are noisy, so the job warns instead of failing. To
 ratchet the baseline, copy numbers from the BENCH_<sha>.json artifact of
 a healthy run into rust/benches/baseline.json — keep them conservative
 (below typical runner throughput) so only real regressions trip.
+
+`--append-history` appends one JSON line per run (UTC timestamp, commit
+sha from $GITHUB_SHA, suite name, per-bench throughput and p50/p999
+latencies) to the named JSONL file, so regressions can be judged against
+a trend rather than a single baseline snapshot. The CI quick-bench job
+appends to the repo-root BENCH_HISTORY.jsonl and uploads it as an
+artifact each run.
 """
 
 import json
+import os
 import sys
+import time
+
+
+def append_history(path: str, current: dict) -> None:
+    entry = {
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "sha": os.environ.get("GITHUB_SHA", "local"),
+        "suite": current.get("suite", "?"),
+        "results": {
+            r["name"]: {
+                "throughput_per_sec": r.get("throughput_per_sec", 0.0),
+                "p50_ns": r.get("p50_ns", 0.0),
+                "p999_ns": r.get("p999_ns", 0.0),
+            }
+            for r in current.get("results", [])
+        },
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"bench history: appended {entry['suite']} @ {entry['sha'][:12]} to {path}")
 
 
 def main() -> int:
-    if len(sys.argv) != 3:
+    args = sys.argv[1:]
+    history = None
+    if "--append-history" in args:
+        i = args.index("--append-history")
+        try:
+            history = args[i + 1]
+        except IndexError:
+            print(__doc__)
+            return 2
+        del args[i : i + 2]
+    if len(args) != 2:
         print(__doc__)
         return 2
-    with open(sys.argv[1]) as f:
+    with open(args[0]) as f:
         baseline = json.load(f)
-    with open(sys.argv[2]) as f:
+    with open(args[1]) as f:
         current = json.load(f)
 
     tolerance = float(baseline.get("tolerance", 0.10))
@@ -60,6 +99,9 @@ def main() -> int:
             )
     else:
         print(f"bench gate: all within {tolerance:.0%} of baseline")
+
+    if history is not None:
+        append_history(history, current)
     return 0
 
 

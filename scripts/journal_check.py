@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Invariant pass over an epoch decision journal (JSONL).
+
+Usage: journal_check.py <journal.jsonl> [more.jsonl ...]
+
+Each line is one `EpochDecisionRecord` as written by `engine::run` when
+`[telemetry] journal_path` is set (see docs/OBSERVABILITY.md for the
+schema). The nightly soak runs this over the fig14-obs journal; any
+violation exits 1 so the soak surfaces engine bugs, not just slow drifts.
+
+Checked per record:
+  * arbiter bound:   Σ granted_bytes over tenants ≤ capacity_bytes
+  * grant split:     reserved_bytes + pooled_bytes == granted_bytes
+                     (whenever the grant covers the reservation)
+  * shed bound:      shed_bytes ≤ resident_before_bytes
+  * billing fold:    Σ per-tenant bill dollars ≈ the record's cluster
+                     dollars (attribution must neither drop nor invent
+                     money; 0.1% relative tolerance for rounding)
+
+Checked across the journal (only when it starts at epoch 0, i.e. the
+bounded ring never evicted):
+  * reconciliation:  for every tenant with a `reconciled_dollars` row,
+                     the reconciled total equals the sum of its per-epoch
+                     bills (delta ≈ 0) — retirement must bill exactly
+                     what the epochs billed.
+"""
+
+import json
+import sys
+
+
+def approx(a: float, b: float, rel: float = 1e-3, abs_tol: float = 1e-9) -> bool:
+    return abs(a - b) <= max(abs_tol, rel * max(abs(a), abs(b)))
+
+
+def check_file(path: str) -> int:
+    violations = 0
+
+    def bad(msg: str) -> None:
+        nonlocal violations
+        violations += 1
+        print(f"::error title=journal invariant::{path}: {msg}")
+
+    records = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                bad(f"line {lineno}: not valid JSON ({e})")
+    if not records:
+        bad("no records (journal empty or unreadable)")
+        return violations
+
+    bills: dict[int, float] = {}
+    reconciled: dict[int, float] = {}
+    for rec in records:
+        epoch = rec.get("epoch", "?")
+        tenants = rec.get("tenants", [])
+        granted = sum(d["granted_bytes"] for d in tenants)
+        if granted > rec["capacity_bytes"]:
+            bad(
+                f"epoch {epoch}: Σ granted {granted} exceeds capacity "
+                f"{rec['capacity_bytes']}"
+            )
+        bill_total = 0.0
+        for d in tenants:
+            t = d["tenant"]
+            if d["granted_bytes"] >= d["reserved_bytes"]:
+                if d["reserved_bytes"] + d["pooled_bytes"] != d["granted_bytes"]:
+                    bad(
+                        f"epoch {epoch} tenant {t}: reserved {d['reserved_bytes']} "
+                        f"+ pooled {d['pooled_bytes']} != granted {d['granted_bytes']}"
+                    )
+            if d["shed_bytes"] > d["resident_before_bytes"]:
+                bad(
+                    f"epoch {epoch} tenant {t}: shed {d['shed_bytes']} exceeds "
+                    f"resident {d['resident_before_bytes']}"
+                )
+            bill = d["bill_storage_dollars"] + d["bill_miss_dollars"]
+            bill_total += bill
+            bills[t] = bills.get(t, 0.0) + bill
+            if d.get("reconciled_dollars") is not None:
+                reconciled[t] = reconciled.get(t, 0.0) + d["reconciled_dollars"]
+        rec_total = rec["storage_dollars"] + rec["miss_dollars"]
+        if tenants and not approx(bill_total, rec_total):
+            bad(
+                f"epoch {epoch}: per-tenant bills sum to {bill_total:.9f} but the "
+                f"record billed {rec_total:.9f}"
+            )
+
+    if records[0].get("epoch") == 0:
+        for t, total in sorted(reconciled.items()):
+            if not approx(total, bills.get(t, 0.0)):
+                bad(
+                    f"tenant {t}: reconciled {total:.9f} != Σ epoch bills "
+                    f"{bills.get(t, 0.0):.9f}"
+                )
+    elif reconciled:
+        print(
+            f"{path}: journal ring evicted early epochs — skipping the "
+            "reconciliation cross-check"
+        )
+
+    if violations == 0:
+        print(f"{path}: {len(records)} records, all invariants hold")
+    return violations
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    total = sum(check_file(p) for p in sys.argv[1:])
+    if total:
+        print(f"journal check: {total} violation(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
