@@ -1,0 +1,40 @@
+//! End-to-end server throughput bench: a real TCP server (`srv` state
+//! thread + accept loop) replayed against with the `loadgen` client over
+//! 1 and 4 connections, so the row measures the whole pipeline —
+//! connect, line parse, state-thread round trip, reply — not just the
+//! engine. The 4-connection row is the CI quick-bench gate's floor for
+//! concurrent serving throughput.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::srv::{accept_loop, loadgen, spawn_state};
+use elastictl::trace::Request;
+use elastictl::util::bench::{black_box, Bencher};
+use std::net::TcpListener;
+
+fn main() {
+    let mut b = Bencher::new("loadgen_e2e");
+    let mut cfg = Config::with_policy(PolicyKind::Fixed);
+    cfg.scaler.fixed_instances = 4;
+    cfg.cost.instance.ram_bytes = 40_000_000;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = spawn_state(cfg, None).unwrap();
+    let tx = server.tx.clone();
+    std::thread::spawn(move || {
+        let _ = accept_loop(listener, tx);
+    });
+
+    // 2000 requests over 200 objects; after the first iteration the
+    // cache is warm, so the steady state measures the serving path, not
+    // fill behavior.
+    let reqs: Vec<Request> =
+        (0..2000u64).map(|i| Request::new(i * 1000, i % 200, 1000)).collect();
+
+    for conns in [1usize, 4] {
+        b.bench(&format!("replay_{conns}conn_2k_requests"), reqs.len() as u64, || {
+            let report = loadgen::run(&addr, &reqs, conns).unwrap();
+            black_box(report.requests);
+        });
+    }
+    b.finish();
+}

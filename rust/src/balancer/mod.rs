@@ -235,6 +235,10 @@ impl Balancer {
     /// synchronous billing).
     pub fn end_epoch(&mut self, now: TimeUs) -> u32 {
         self.last_epoch_shed.clear();
+        // Reap entries whose real TTL ran out without being accessed
+        // (server runtime; a no-op — not even a branch per entry — when
+        // expiry is off).
+        self.cluster.expire_sweep();
         let decide_timer = self.telemetry.as_ref().map(|t| t.epoch_decide_ns.clone());
         let target = match decide_timer {
             Some(timer) => timer.time(|| self.sizer.decide(now)),

@@ -93,6 +93,12 @@ impl CacheInstance {
         self.store.evict_tenant(tenant, want)
     }
 
+    /// Remove `obj` if resident, returning `(bytes freed, owning tenant)`
+    /// so the cluster can debit its resident ledger (lazy TTL expiry).
+    pub fn remove_entry(&mut self, obj: ObjectId) -> Option<(u64, TenantId)> {
+        self.store.remove_entry(obj)
+    }
+
     /// Install per-tenant protected floors (slab-partition placement).
     pub fn set_tenant_floors(&mut self, floors: &[(TenantId, u64)]) {
         self.store.set_tenant_floors(floors);

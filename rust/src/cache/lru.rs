@@ -341,8 +341,8 @@ impl Store for LruCache {
         }
     }
 
-    fn remove(&mut self, obj: ObjectId) -> bool {
-        self.remove_entry(obj).is_some()
+    fn remove_entry(&mut self, obj: ObjectId) -> Option<(u64, TenantId)> {
+        LruCache::remove_entry(self, obj)
     }
 
     fn contains(&self, obj: ObjectId) -> bool {

@@ -17,12 +17,14 @@ mod instance;
 mod lru;
 mod sampled_lru;
 mod slab;
+mod ttl_policy;
 
 pub use ideal_ttl::{IdealTtlCache, TtlMode};
 pub use instance::CacheInstance;
 pub use lru::LruCache;
 pub use sampled_lru::SampledLruCache;
 pub use slab::SlabCache;
+pub use ttl_policy::{ExpiryIndex, TtlPolicy};
 
 use crate::{ObjectId, TenantId};
 
@@ -83,7 +85,13 @@ pub trait Store {
     /// size classes, fall back to plain behaviour).
     fn set_tenant_floors(&mut self, _floors: &[(TenantId, u64)]) {}
     /// Remove `obj` if present; returns true if it was resident.
-    fn remove(&mut self, obj: ObjectId) -> bool;
+    fn remove(&mut self, obj: ObjectId) -> bool {
+        self.remove_entry(obj).is_some()
+    }
+    /// Remove `obj` if present, returning the bytes it freed from
+    /// [`Store::used`] and the owning tenant — the lazy TTL expiry path
+    /// needs both to debit the cluster's resident ledger exactly.
+    fn remove_entry(&mut self, obj: ObjectId) -> Option<(u64, TenantId)>;
     /// Whether `obj` is resident, without touching recency.
     fn contains(&self, obj: ObjectId) -> bool;
     /// Drop everything.
@@ -209,6 +217,17 @@ pub(crate) mod conformance {
         assert_eq!(store.tenant_bytes(1), 0);
     }
 
+    pub fn remove_entry_reports_owner(store: &mut dyn Store) {
+        let mut sink = EvictionSink::new();
+        store.insert_tagged(11, 64, 3, &mut sink);
+        let used = store.used();
+        let (bytes, tenant) = store.remove_entry(11).expect("entry is resident");
+        assert_eq!(tenant, 3, "removal must report the owning tenant");
+        assert_eq!(store.used(), used - bytes, "removal must free exactly its bytes");
+        assert_eq!(store.tenant_bytes(3), 0);
+        assert!(store.remove_entry(11).is_none(), "second removal finds nothing");
+    }
+
     pub fn run_all(mk: impl Fn() -> Box<dyn Store + Send>) {
         basic_hit_miss(&mut *mk());
         capacity_respected(&mut *mk());
@@ -217,6 +236,7 @@ pub(crate) mod conformance {
         clear_resets(&mut *mk());
         tenant_tags_partition_used(&mut *mk());
         evictions_reported_and_targeted(&mut *mk());
+        remove_entry_reports_owner(&mut *mk());
     }
 }
 

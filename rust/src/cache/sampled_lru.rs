@@ -240,12 +240,12 @@ impl Store for SampledLruCache {
         }
     }
 
-    fn remove(&mut self, obj: ObjectId) -> bool {
+    fn remove_entry(&mut self, obj: ObjectId) -> Option<(u64, TenantId)> {
         if let Some(&i) = self.index.get(&obj) {
-            self.take_at(i as usize);
-            true
+            let e = self.take_at(i as usize);
+            Some((e.size, e.tenant))
         } else {
-            false
+            None
         }
     }
 

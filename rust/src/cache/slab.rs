@@ -245,14 +245,14 @@ impl Store for SlabCache {
         freed
     }
 
-    fn remove(&mut self, obj: ObjectId) -> bool {
+    fn remove_entry(&mut self, obj: ObjectId) -> Option<(u64, TenantId)> {
         if let Some(ci) = self.index.remove(&obj) {
             if let Some((size, tenant)) = self.classes[ci as usize].remove_entry(obj) {
                 self.sub_tenant(tenant, size);
-                return true;
+                return Some((size, tenant));
             }
         }
-        false
+        None
     }
 
     fn contains(&self, obj: ObjectId) -> bool {

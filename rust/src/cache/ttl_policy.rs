@@ -1,0 +1,192 @@
+//! Real wall-clock TTL expiry for resident entries (server runtime).
+//!
+//! The engine's TTL controller (§4) steers a *virtual* TTL; the physical
+//! stores are capacity-bound LRU variants that never expire anything on
+//! their own. A live server wants the classic cache semantics too: an
+//! entry older than its TTL must read as a miss. This module supplies
+//! that with the lazy check-on-access pattern (no timer wheel, no
+//! background scan on the request path): every resident entry carries a
+//! [`TtlPolicy`] — its TTL plus the [`Instant`] it was created or last
+//! renewed — and the *next access* to an expired entry removes it,
+//! counts a miss, and debits the cluster's per-tenant resident ledger so
+//! the `Σ tenant_resident == used()` invariant keeps holding.
+//!
+//! Off by default (`[serve] ttl_expiry_secs = 0`): the simulator and the
+//! parity-pinned server never construct an [`ExpiryIndex`], keeping the
+//! request path bit-identical.
+
+use crate::ObjectId;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Per-entry expiry state: a fixed TTL anchored at the creation (or last
+/// renewal) instant. Checked on read; never drives a timer.
+#[derive(Debug, Clone, Copy)]
+pub struct TtlPolicy {
+    /// Time-to-live of the entry.
+    pub ttl: Duration,
+    /// When the entry was created or last renewed.
+    pub creation: Instant,
+}
+
+impl TtlPolicy {
+    /// A policy expiring `ttl` from now.
+    pub fn new(ttl: Duration) -> Self {
+        TtlPolicy { ttl, creation: Instant::now() }
+    }
+
+    /// Whether the entry has outlived its TTL.
+    pub fn is_expired(&self) -> bool {
+        self.creation.elapsed() > self.ttl
+    }
+
+    /// Time remaining before expiry ([`Duration::ZERO`] once expired).
+    pub fn expire_in(&self) -> Duration {
+        self.ttl.saturating_sub(self.creation.elapsed())
+    }
+
+    /// Renew the policy: the TTL now runs from this instant (TTL caches
+    /// in the paper's model renew on every hit, matching the virtual
+    /// cache's semantics).
+    pub fn touch(&mut self) {
+        self.creation = Instant::now();
+    }
+}
+
+/// Cluster-level index of [`TtlPolicy`]s for resident entries, keyed by
+/// scoped object id. The cluster consults it on every access when expiry
+/// is enabled; entries evicted by LRU churn leave stale policies behind,
+/// which are dropped lazily (on their next access, or by the
+/// epoch-boundary [`ExpiryIndex::take_expired`] sweep).
+#[derive(Debug)]
+pub struct ExpiryIndex {
+    ttl: Duration,
+    policies: HashMap<ObjectId, TtlPolicy>,
+    /// Entries removed because their TTL ran out.
+    pub expirations: u64,
+    /// Bytes those removals freed.
+    pub expired_bytes: u64,
+}
+
+impl ExpiryIndex {
+    /// An index expiring every entry `ttl` after its last access.
+    pub fn new(ttl: Duration) -> Self {
+        ExpiryIndex {
+            ttl,
+            policies: HashMap::new(),
+            expirations: 0,
+            expired_bytes: 0,
+        }
+    }
+
+    /// The configured TTL.
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    /// Policies currently tracked (resident entries plus stale leftovers
+    /// awaiting their lazy drop).
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    /// Whether the index tracks no policies.
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+
+    /// The access-path check: `true` means `obj`'s policy had expired —
+    /// the caller must remove the resident entry and account the miss.
+    /// A live policy is renewed (TTL-on-access); an expired one is
+    /// forgotten here so the follow-up insert starts a fresh policy.
+    pub fn check_expired(&mut self, obj: ObjectId) -> bool {
+        match self.policies.get_mut(&obj) {
+            Some(p) if p.is_expired() => {
+                self.policies.remove(&obj);
+                true
+            }
+            Some(p) => {
+                p.touch();
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// A fresh entry was inserted: arm its policy.
+    pub fn note_insert(&mut self, obj: ObjectId) {
+        self.policies.insert(obj, TtlPolicy::new(self.ttl));
+    }
+
+    /// Drain every expired policy (epoch-boundary sweep, off the request
+    /// path) — returns the object ids so the caller can remove any still
+    /// resident copies and debit the ledger.
+    pub fn take_expired(&mut self) -> Vec<ObjectId> {
+        let expired: Vec<ObjectId> = self
+            .policies
+            .iter()
+            .filter(|(_, p)| p.is_expired())
+            .map(|(&o, _)| o)
+            .collect();
+        for o in &expired {
+            self.policies.remove(o);
+        }
+        expired
+    }
+
+    /// Account an expiry-driven removal.
+    pub fn record_expiry(&mut self, bytes: u64) {
+        self.expirations += 1;
+        self.expired_bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_expires_after_ttl() {
+        let p = TtlPolicy::new(Duration::from_millis(20));
+        assert!(!p.is_expired());
+        assert!(p.expire_in() > Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(p.is_expired());
+        assert_eq!(p.expire_in(), Duration::ZERO);
+    }
+
+    #[test]
+    fn touch_renews_the_clock() {
+        let mut p = TtlPolicy::new(Duration::from_millis(40));
+        std::thread::sleep(Duration::from_millis(25));
+        p.touch();
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(!p.is_expired(), "renewal must restart the TTL");
+    }
+
+    #[test]
+    fn index_checks_and_renews_on_access() {
+        let mut idx = ExpiryIndex::new(Duration::from_millis(30));
+        idx.note_insert(7);
+        assert!(!idx.check_expired(7), "fresh entry is live");
+        assert!(!idx.check_expired(99), "unknown object is never expired");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(idx.check_expired(7), "stale entry expires on access");
+        assert!(!idx.check_expired(7), "the expiry dropped the policy");
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn sweep_drains_only_the_expired() {
+        let mut idx = ExpiryIndex::new(Duration::from_millis(25));
+        idx.note_insert(1);
+        idx.note_insert(2);
+        assert!(idx.take_expired().is_empty(), "nothing expired yet");
+        std::thread::sleep(Duration::from_millis(35));
+        idx.note_insert(3);
+        let mut gone = idx.take_expired();
+        gone.sort_unstable();
+        assert_eq!(gone, vec![1, 2]);
+        assert_eq!(idx.len(), 1, "the fresh policy survives the sweep");
+    }
+}

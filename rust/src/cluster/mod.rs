@@ -24,7 +24,7 @@ mod balance;
 
 pub use balance::{BalanceSnapshot, BalanceTracker};
 
-use crate::cache::{CacheInstance, EvictionSink};
+use crate::cache::{CacheInstance, EvictionSink, ExpiryIndex};
 use crate::config::{ClusterConfig, EvictionKind};
 use crate::placement::{
     make_placement, PlacementKind, PlacementPolicy, PlacementSnapshot, PlacementTenantRow,
@@ -47,6 +47,10 @@ pub struct ClusterTelemetry {
     pub evictions: Counter,
     /// Bytes evicted by LRU churn on the serve path.
     pub evicted_bytes: Counter,
+    /// Entries removed because their real TTL ran out (server runtime).
+    pub ttl_expirations: Counter,
+    /// Bytes those expiries freed.
+    pub ttl_expired_bytes: Counter,
 }
 
 impl ClusterTelemetry {
@@ -58,6 +62,8 @@ impl ClusterTelemetry {
             inserted_bytes: registry.counter("elastictl_inserted_bytes_total"),
             evictions: registry.counter("elastictl_evictions_total"),
             evicted_bytes: registry.counter("elastictl_evicted_bytes_total"),
+            ttl_expirations: registry.counter("elastictl_ttl_expirations_total"),
+            ttl_expired_bytes: registry.counter("elastictl_ttl_expired_bytes_total"),
         }
     }
 }
@@ -85,6 +91,9 @@ pub struct Cluster {
     evict_buf: EvictionSink,
     /// Insert/evict counters (`None` = telemetry off, zero overhead).
     telemetry: Option<ClusterTelemetry>,
+    /// Real TTL expiry for resident entries (`None` = off, the default —
+    /// the simulator and the parity-pinned server never arm it).
+    expiry: Option<ExpiryIndex>,
 }
 
 impl Cluster {
@@ -114,7 +123,22 @@ impl Cluster {
             tenant_resident: Vec::new(),
             evict_buf: EvictionSink::new(),
             telemetry: None,
+            expiry: None,
         }
+    }
+
+    /// Arm real wall-clock TTL expiry: every resident entry gets a
+    /// [`crate::cache::TtlPolicy`] renewed on access and checked lazily
+    /// on the next read ([`Self::serve_for`]) — an expired entry is
+    /// removed (debiting the resident ledger) before the lookup, so it
+    /// counts as a plain miss.
+    pub fn enable_ttl_expiry(&mut self, ttl: std::time::Duration) {
+        self.expiry = Some(ExpiryIndex::new(ttl));
+    }
+
+    /// Expiry counters `(entries expired, bytes freed)` since startup.
+    pub fn expiry_stats(&self) -> Option<(u64, u64)> {
+        self.expiry.as_ref().map(|e| (e.expirations, e.expired_bytes))
     }
 
     /// Install pre-resolved telemetry counters on the serve path.
@@ -202,12 +226,18 @@ impl Cluster {
     /// the insert and every eviction it caused into the resident ledger.
     #[inline]
     pub fn serve_for(&mut self, tenant: TenantId, obj: ObjectId, size: u64) -> bool {
+        if self.expiry.is_some() {
+            self.expire_on_access(tenant, obj);
+        }
         let idx = self.route_for(tenant, obj);
         let buf = &mut self.evict_buf;
         buf.clear();
         let (hit, added) = self.instances[idx].serve_tagged(obj, size, tenant, buf);
         if added > 0 {
             self.ledger_add(tenant, added);
+            if let Some(exp) = &mut self.expiry {
+                exp.note_insert(obj);
+            }
             if let Some(tel) = &self.telemetry {
                 tel.inserts.inc();
                 tel.inserted_bytes.add(added);
@@ -234,8 +264,71 @@ impl Cluster {
     /// Placement-aware [`Self::serve_no_insert`].
     #[inline]
     pub fn serve_no_insert_for(&mut self, tenant: TenantId, obj: ObjectId) -> bool {
+        if self.expiry.is_some() {
+            self.expire_on_access(tenant, obj);
+        }
         let idx = self.route_for(tenant, obj);
         self.instances[idx].lookup_only(obj)
+    }
+
+    /// Lazy expiry check for `obj` on the access path: if its policy ran
+    /// out, remove the resident copy at the routed instance and debit the
+    /// owner's resident ledger row, so the following lookup misses like
+    /// any cold object. Only called with expiry armed.
+    fn expire_on_access(&mut self, tenant: TenantId, obj: ObjectId) {
+        let idx = self.route_for(tenant, obj);
+        let expired = match &mut self.expiry {
+            Some(exp) => exp.check_expired(obj),
+            None => return,
+        };
+        if !expired {
+            return;
+        }
+        if let Some((bytes, owner)) = self.instances[idx].remove_entry(obj) {
+            self.ledger_sub(owner, bytes);
+            if let Some(exp) = &mut self.expiry {
+                exp.record_expiry(bytes);
+            }
+            if let Some(tel) = &self.telemetry {
+                tel.ttl_expirations.inc();
+                tel.ttl_expired_bytes.add(bytes);
+            }
+        }
+    }
+
+    /// Epoch-boundary expiry sweep (never on the request path): drain
+    /// every expired policy and remove any still-resident copies — stale
+    /// duplicates left behind by slot moves included — keeping the
+    /// resident ledger exact. Returns `(entries removed, bytes freed)`;
+    /// a no-op when expiry is off.
+    pub fn expire_sweep(&mut self) -> (u64, u64) {
+        let objs = match &mut self.expiry {
+            Some(exp) => exp.take_expired(),
+            None => return (0, 0),
+        };
+        let mut count = 0u64;
+        let mut bytes = 0u64;
+        for obj in objs {
+            for inst in &mut self.instances {
+                if let Some((b, owner)) = inst.remove_entry(obj) {
+                    self.tenant_resident[owner as usize] =
+                        self.tenant_resident[owner as usize].saturating_sub(b);
+                    count += 1;
+                    bytes += b;
+                }
+            }
+        }
+        if count > 0 {
+            if let Some(exp) = &mut self.expiry {
+                exp.expirations += count;
+                exp.expired_bytes += bytes;
+            }
+            if let Some(tel) = &self.telemetry {
+                tel.ttl_expirations.add(count);
+                tel.ttl_expired_bytes.add(bytes);
+            }
+        }
+        (count, bytes)
     }
 
     /// Physical resident bytes of `tenant` across the cluster (O(1): the
@@ -608,6 +701,31 @@ mod tests {
             c.tenant_resident_bytes(1)
         );
         assert_eq!(c.ledger_residents(), c.used());
+    }
+
+    #[test]
+    fn ttl_expiry_misses_and_debits_the_ledger() {
+        use std::time::Duration;
+        let mut c = mk(2);
+        c.enable_ttl_expiry(Duration::from_millis(30));
+        assert!(!c.serve_for(1, 42, 100), "cold miss");
+        assert!(c.serve_for(1, 42, 100), "hit renews the policy");
+        std::thread::sleep(Duration::from_millis(45));
+        assert!(!c.serve_for(1, 42, 100), "expired entry reads as a miss");
+        assert_eq!(c.ledger_residents(), c.used(), "expiry must debit the ledger");
+        assert_eq!(c.expiry_stats(), Some((1, 100)));
+        // The miss reinserted the object with a fresh policy.
+        assert!(c.serve_for(1, 42, 100));
+        // The epoch-boundary sweep reaps without an access.
+        std::thread::sleep(Duration::from_millis(45));
+        let (n, b) = c.expire_sweep();
+        assert_eq!((n, b), (1, 100));
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.ledger_residents(), 0);
+        // Expiry off: the sweep is a no-op.
+        let mut plain = mk(1);
+        assert_eq!(plain.expire_sweep(), (0, 0));
+        assert_eq!(plain.expiry_stats(), None);
     }
 
     #[test]

@@ -331,6 +331,28 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// Server-runtime parameters (`[serve]` in TOML) for the `srv` subsystem.
+/// Everything defaults off: a default-config server keeps the manual-epoch,
+/// no-expiry, no-checkpoint behavior pinned by `serve_json`/`engine_parity`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Wall-clock epoch ticker period in seconds. `0` (the default) keeps
+    /// manual epochs: nothing bills or resizes until an operator `EPOCH`.
+    pub epoch_secs: u64,
+    /// Real TTL for resident entries in seconds, expired lazily on access
+    /// ([`crate::cache::TtlPolicy`]). `0.0` (the default) disables expiry.
+    pub ttl_expiry_secs: f64,
+    /// If set, the server journals every closed epoch's billing delta to
+    /// this append-only checkpoint file (see `srv::checkpoint`).
+    pub checkpoint_path: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { epoch_secs: 0, ttl_expiry_secs: 0.0, checkpoint_path: None }
+    }
+}
+
 /// Top-level experiment / run configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -340,6 +362,8 @@ pub struct Config {
     pub cluster: ClusterConfig,
     /// Decision-trace telemetry (`[telemetry]`); disabled by default.
     pub telemetry: TelemetryConfig,
+    /// Server-runtime knobs (`[serve]`); everything off by default.
+    pub serve: ServeConfig,
     /// Tenant roster for the multi-tenant policy. Empty = single-tenant
     /// mode (every request is tenant 0 with multiplier 1.0). In TOML this
     /// is a `[tenant0]` / `[tenant1]` / … section per tenant, each with
@@ -466,6 +490,21 @@ impl Config {
         }
         if let Some(v) = doc.get_str("telemetry.journal_path") {
             cfg.telemetry.journal_path = Some(v.to_string());
+        }
+
+        // [serve]
+        if let Some(v) = doc.get_u64("serve.epoch_secs") {
+            cfg.serve.epoch_secs = v;
+        }
+        if let Some(v) = doc.get_f64("serve.ttl_expiry_secs") {
+            anyhow::ensure!(
+                v >= 0.0 && v.is_finite(),
+                "serve.ttl_expiry_secs must be a finite non-negative number"
+            );
+            cfg.serve.ttl_expiry_secs = v;
+        }
+        if let Some(v) = doc.get_str("serve.checkpoint_path") {
+            cfg.serve.checkpoint_path = Some(v.to_string());
         }
 
         // [tenant0], [tenant1], … — one section per tenant. Sections are
@@ -607,6 +646,15 @@ impl Config {
         );
         if let Some(p) = &self.telemetry.journal_path {
             doc.set("telemetry.journal_path", Value::Str(p.clone()));
+        }
+
+        doc.set("serve.epoch_secs", Value::Int(self.serve.epoch_secs as i64));
+        doc.set(
+            "serve.ttl_expiry_secs",
+            Value::Float(self.serve.ttl_expiry_secs),
+        );
+        if let Some(p) = &self.serve.checkpoint_path {
+            doc.set("serve.checkpoint_path", Value::Str(p.clone()));
         }
 
         for (i, t) in self.tenants.iter().enumerate() {
@@ -809,6 +857,34 @@ mod tests {
 
         // A zero-capacity journal is rejected loudly.
         assert!(Config::from_toml("[telemetry]\njournal_capacity = 0\n").is_err());
+    }
+
+    #[test]
+    fn serve_section_round_trips_and_validates() {
+        // Everything off by default: manual epochs, no expiry, no checkpoint.
+        let cfg = Config::from_toml("").unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+        assert_eq!(cfg.serve.epoch_secs, 0);
+        assert_eq!(cfg.serve.ttl_expiry_secs, 0.0);
+        assert_eq!(cfg.serve.checkpoint_path, None);
+
+        let mut cfg = Config::default();
+        cfg.serve.epoch_secs = 30;
+        cfg.serve.ttl_expiry_secs = 2.5;
+        cfg.serve.checkpoint_path = Some("out/ckpt.jsonl".to_string());
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.serve, cfg.serve);
+
+        // checkpoint_path is omitted from TOML when unset (and still parses).
+        let cfg = Config::default();
+        assert!(!cfg.to_toml().contains("checkpoint_path"));
+        assert_eq!(
+            Config::from_toml(&cfg.to_toml()).unwrap().serve,
+            ServeConfig::default()
+        );
+
+        // A negative or non-finite expiry TTL is rejected loudly.
+        assert!(Config::from_toml("[serve]\nttl_expiry_secs = -1.0\n").is_err());
     }
 
     #[test]

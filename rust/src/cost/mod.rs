@@ -365,6 +365,41 @@ impl CostTracker {
         rec
     }
 
+    /// Restore the tracker to the state a crashed run checkpointed at its
+    /// last closed epoch (server resume — see `srv::checkpoint`): replay
+    /// the closed [`EpochCosts`] rows into the totals **as the same
+    /// epoch-major fold the live path used** (so the restored cumulative
+    /// bills are bit-identical, not merely close), re-append the
+    /// [`TenantEpochBill`] / [`TenantReconciliation`] rows, and install
+    /// the per-tenant cumulative ledger snapshots. Call on a fresh
+    /// tracker only, before any traffic.
+    pub fn restore_closed_epochs(
+        &mut self,
+        epochs: &[EpochCosts],
+        bills: &[TenantEpochBill],
+        reconciliations: &[TenantReconciliation],
+        ledgers: &[(TenantId, TenantLedger)],
+    ) {
+        for e in epochs {
+            self.storage_total += e.storage;
+            self.miss_total += e.miss;
+            self.epochs += 1;
+            self.storage_series.push(e.t, self.storage_total);
+            self.miss_series.push(e.t, self.miss_total);
+            self.total_series.push(e.t, self.total());
+            self.instances_series.push(e.t, e.instances as f64);
+        }
+        self.tenant_bills.extend_from_slice(bills);
+        self.reconciliations.extend_from_slice(reconciliations);
+        for &(t, l) in ledgers {
+            let i = t as usize;
+            if self.tenant_ledgers.len() <= i {
+                self.tenant_ledgers.resize(i + 1, TenantLedger::default());
+            }
+            self.tenant_ledgers[i] = l;
+        }
+    }
+
     pub fn storage_total(&self) -> f64 {
         self.storage_total
     }
@@ -514,6 +549,48 @@ mod tests {
         assert_eq!(rec.total_dollars, s2 + m2);
         assert_eq!(rec.misses, 1);
         assert_eq!(t.reconciliations().len(), 1);
+    }
+
+    #[test]
+    fn restore_replays_closed_epochs_bit_identically() {
+        // Run A: two attributed epochs with weighted tenants, one retirement.
+        let mut a = CostTracker::new(CostConfig::default());
+        a.set_tenant_weight(1, 3.0);
+        a.record_miss_for(1, 4096);
+        a.record_miss_for(2, 4096);
+        let e1 = a.end_epoch_attributed(HOUR, 4, &[(1, 300), (2, 100)]);
+        a.record_miss_for(7, 4096);
+        let e2 = a.end_epoch_attributed(2 * HOUR, 3, &[(1, 500), (7, 250)]);
+        let rec = a.close_tenant(2, 2 * HOUR);
+
+        // Run B: a fresh tracker restored from A's checkpointed state.
+        let mut b = CostTracker::new(CostConfig::default());
+        b.set_tenant_weight(1, 3.0);
+        let ledgers: Vec<(TenantId, TenantLedger)> = a
+            .tenant_ledgers()
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (i as TenantId, l))
+            .collect();
+        b.restore_closed_epochs(&[e1, e2], a.tenant_bills(), &[rec], &ledgers);
+
+        assert_eq!(b.epochs(), a.epochs());
+        assert_eq!(b.storage_total(), a.storage_total(), "bit-identical storage");
+        assert_eq!(b.miss_total(), a.miss_total(), "bit-identical miss dollars");
+        assert_eq!(b.tenant_bills(), a.tenant_bills());
+        assert_eq!(b.reconciliations(), a.reconciliations());
+        assert_eq!(b.tenant_ledgers(), a.tenant_ledgers());
+
+        // New epochs continue the fold exactly as the uninterrupted run.
+        let mut c = a;
+        c.record_miss_for(1, 4096);
+        b.record_miss_for(1, 4096);
+        assert_eq!(
+            b.end_epoch_attributed(3 * HOUR, 3, &[(1, 200)]),
+            c.end_epoch_attributed(3 * HOUR, 3, &[(1, 200)]),
+        );
+        assert_eq!(b.total(), c.total());
+        assert_eq!(b.tenant_bills(), c.tenant_bills());
     }
 
     #[test]

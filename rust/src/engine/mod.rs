@@ -38,7 +38,7 @@ pub use probe::{
 use crate::balancer::Balancer;
 use crate::cluster::BalanceTracker;
 use crate::config::Config;
-use crate::cost::{CostTracker, EpochCosts, TenantEpochBill, TenantReconciliation};
+use crate::cost::{CostTracker, EpochCosts, TenantEpochBill, TenantLedger, TenantReconciliation};
 use crate::metrics::{HitMiss, TimeSeries};
 use crate::placement::PlacementSnapshot;
 use crate::scaler::EpochSizer;
@@ -298,7 +298,16 @@ impl EngineBuilder {
                 let initial = self
                     .initial_instances
                     .unwrap_or_else(|| cfg.initial_instances());
-                let balancer = Balancer::from_config(&cfg, sizer, initial);
+                let mut balancer = Balancer::from_config(&cfg, sizer, initial);
+                if cfg.serve.ttl_expiry_secs > 0.0 {
+                    // Server runtime: real wall-clock TTL expiry on the
+                    // resident stores (`[serve] ttl_expiry_secs`). Off by
+                    // default — trace replay and the parity-pinned server
+                    // never arm it.
+                    balancer.cluster.enable_ttl_expiry(std::time::Duration::from_secs_f64(
+                        cfg.serve.ttl_expiry_secs,
+                    ));
+                }
                 if self.default_probes {
                     probes.push(Box::new(TtlProbe::sampled(&name)));
                     probes.push(Box::new(ShadowProbe::sampled(&name, "shadow_bytes")));
@@ -463,6 +472,40 @@ impl Engine {
         match &mut self.core {
             Core::Cluster(_) => n,
             Core::Vertical { policy, .. } => policy.decide(t),
+        }
+    }
+
+    /// Restore billing state from a checkpoint's closed epochs (the
+    /// server's `--resume`; see `srv::checkpoint`): replay the closed
+    /// [`EpochCosts`] rows, per-tenant bills, reconciliations and ledger
+    /// snapshots into the cost tracker as the exact fold the crashed run
+    /// performed, resize the cluster to the last checkpointed instance
+    /// count, and restart the epoch clock from the last closed boundary
+    /// so numbering continues where the crashed run stopped. Cache
+    /// contents and controller estimators restart cold — the bills are
+    /// the durable part. Call on a freshly built engine, before any
+    /// traffic.
+    pub fn restore_closed_epochs(
+        &mut self,
+        epochs: &[EpochCosts],
+        bills: &[TenantEpochBill],
+        reconciliations: &[TenantReconciliation],
+        ledgers: &[(TenantId, TenantLedger)],
+    ) {
+        self.costs
+            .restore_closed_epochs(epochs, bills, reconciliations, ledgers);
+        self.epochs.extend_from_slice(epochs);
+        if let Some(last) = epochs.last() {
+            if last.instances > 0 {
+                if let Core::Cluster(b) = &mut self.core {
+                    b.cluster.resize(last.instances);
+                    self.active_instances = last.instances;
+                }
+            }
+            // Billing time continues from the last closed boundary; the
+            // next epoch opens there, exactly as in the crashed run.
+            self.clock = self.clock.max(last.t);
+            self.epoch_end = last.t + self.epoch_us;
         }
     }
 
@@ -765,6 +808,14 @@ impl Engine {
     /// The run's cost ledger (read-only).
     pub fn costs(&self) -> &CostTracker {
         &self.costs
+    }
+
+    /// Every epoch closed so far, in order — index `i` is the epoch the
+    /// cost tracker counts as `i + 1` (restored epochs included). Drained
+    /// by [`Self::finish`]; the long-lived server never calls that, so
+    /// `srv::checkpoint` cursors over this slice.
+    pub fn closed_epochs(&self) -> &[EpochCosts] {
+        &self.epochs
     }
 
     /// Current policy TTL, when the policy maintains one.

@@ -103,6 +103,15 @@
 //!   `[telemetry] journal_path`, and over the serve protocol's
 //!   `WHY <tenant>` / `METRICS` (Prometheus text) commands — all off by
 //!   default so the untelemetered request path stays bit-identical;
+//! * the **concurrent server runtime** ([`srv`]): a thread-per-connection
+//!   accept loop feeding the single engine-owner state thread over one
+//!   mpsc channel (total command order, no async dependency), a
+//!   wall-clock epoch ticker (`[serve] epoch_secs`), real-`Instant` TTL
+//!   expiry on resident stores, an append-only fsync-per-epoch billing
+//!   checkpoint with idempotent `--resume` replay (bit-identical
+//!   cumulative bills after a kill, [`srv::checkpoint`]), and a
+//!   concurrent trace-replay load generator ([`srv::loadgen`]) behind
+//!   `elastictl loadgen`;
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
 //!   plus the multi-tenant fig10 study, the fig11 SLO-enforcement
 //!   study, the fig12 placement-isolation study, the fig13
@@ -131,6 +140,7 @@ pub mod runtime;
 pub mod scaler;
 pub mod serve;
 pub mod sim;
+pub mod srv;
 pub mod telemetry;
 pub mod tenant;
 pub mod trace;

@@ -7,15 +7,20 @@
 //!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm all
 //! elastictl plan <trace>
 //! elastictl ttlopt <trace>
-//! elastictl serve [--addr HOST:PORT] [--policy ...]
+//! elastictl serve [--addr HOST:PORT] [--policy ...] [--epoch-secs N] [--checkpoint F] [--resume F]
+//! elastictl loadgen <trace> [--addr HOST:PORT] [--conns N]
 //! Global: --config <file.toml>
 //! ```
 //!
 //! `--kind churn` writes a format-v3 trace whose event lane admits and
-//! retires a guest tenant mid-run; replaying it with `run --policy
-//! tenant_ttl` drives the full lifecycle (drain + billing
-//! reconciliation). Argument parsing is hand-rolled (the offline build
-//! has no clap).
+//! retires a guest tenant mid-run (as tagged CSV rows when the output
+//! path ends in `.csv`); replaying it with `run --policy tenant_ttl`
+//! drives the full lifecycle (drain + billing reconciliation). `serve`
+//! runs the concurrent durable runtime ([`elastictl::srv`]): wall-clock
+//! epochs with `--epoch-secs`, crash-safe billing with
+//! `--checkpoint`/`--resume`. `loadgen` replays a trace against a live
+//! server over N connections and reports req/s and p50/p99 latency.
+//! Argument parsing is hand-rolled (the offline build has no clap).
 
 use elastictl::config::{Config, PolicyKind};
 use elastictl::experiments::{self, ExpContext, TraceScale};
@@ -23,13 +28,15 @@ use elastictl::trace::{self, FileSource, IrmConfig, IrmGenerator, SynthConfig, S
 use elastictl::Result;
 use std::path::PathBuf;
 
-const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve> [args]
+const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve|loadgen> [args]
   gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
   run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
   exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm ablations all)
   plan <trace>
   ttlopt <trace>
-  serve [--addr HOST:PORT] [--policy P]   (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, ADMIT tenant [k=v..], RETIRE tenant, EPOCH, WHY tenant, METRICS, QUIT — see docs/PROTOCOL.md)";
+  serve [--addr HOST:PORT] [--policy P] [--epoch-secs N] [--checkpoint FILE] [--resume FILE]
+        (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, ADMIT tenant [k=v..], RETIRE tenant, BILL tenant, EPOCH, WHY tenant, METRICS, QUIT — see docs/PROTOCOL.md)
+  loadgen <trace> [--addr HOST:PORT] [--conns N]   (replay against a live server, report req/s + p50/p99)";
 
 /// Minimal flag parser: positionals + `--key value` pairs.
 struct Args {
@@ -121,7 +128,14 @@ fn main() -> Result<()> {
                 let reqs = experiments::churn_trace(scale, seed.unwrap_or(0xF16_13));
                 let events = experiments::churn_events(cfg.cost.instance.ram_bytes);
                 let items = trace::merge_items(reqs, events);
-                let n = trace::write_items(&out, &items)?;
+                // A .csv output takes the tagged-row CSV event lane; any
+                // other extension writes binary v3.
+                let n = if out.extension().map(|e| e == "csv").unwrap_or(false) {
+                    trace::write_items_csv(&out, &items)?;
+                    items.len() as u64
+                } else {
+                    trace::write_items(&out, &items)?
+                };
                 println!("wrote {n} items (requests + tenant events) to {}", out.display());
                 return Ok(());
             }
@@ -229,7 +243,25 @@ fn main() -> Result<()> {
         "serve" => {
             cfg.scaler.policy = PolicyKind::parse(&args.flag_or("policy", "ttl"))?;
             let addr = args.flag_or("addr", "127.0.0.1:7171");
-            elastictl::serve::serve(cfg, &addr)?;
+            if let Some(n) = args.flag("epoch-secs") {
+                cfg.serve.epoch_secs = n.parse()?;
+            }
+            if let Some(p) = args.flag("checkpoint") {
+                cfg.serve.checkpoint_path = Some(p.to_string());
+            }
+            elastictl::srv::serve(cfg, &addr, args.flag("resume"))?;
+        }
+        "loadgen" => {
+            let path = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("loadgen needs a trace path"))?,
+            );
+            let addr = args.flag_or("addr", "127.0.0.1:7171");
+            let conns: usize = args.flag_or("conns", "4").parse()?;
+            let reqs = read_any_trace(&path)?;
+            let report = elastictl::srv::loadgen::run(&addr, &reqs, conns)?;
+            println!("{}", report.summary());
         }
         other => anyhow::bail!("unknown command {other}\n{USAGE}"),
     }

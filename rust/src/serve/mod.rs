@@ -28,6 +28,10 @@
 //!                             -> OK <tenant> admitted|updated|readmitted\n
 //! RETIRE <tenant>\n           -> OK <tenant> draining\n  (drains, then
 //!                                reconciles the bill at epoch boundaries)
+//! BILL <tenant>\n              -> one-line JSON: the retired tenant's
+//!                                close-out reconciliation (lifetime misses,
+//!                                miss/storage/total dollars, drain time);
+//!                                `ERR` while the tenant is live or draining
 //! EPOCH\n                     -> RESIZED <n>\n      (forces an epoch boundary)
 //! WHY <tenant>\n              -> one-line JSON: the newest epoch decision
 //!                                journal record for that tenant, with its
@@ -216,6 +220,13 @@ impl ServerState {
                     Err(_) => Some(format!("ERR bad tenant {t}")),
                 },
             },
+            Some("BILL") => match parts.next() {
+                None => Some("ERR BILL needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.bill_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
             Some("EPOCH") => {
                 let n = self.engine.force_epoch(self.now_us());
                 Some(format!("RESIZED {n}"))
@@ -349,6 +360,37 @@ impl ServerState {
             self.engine.tenant_physical_bytes(tenant),
             ttl,
             state,
+        )
+    }
+
+    /// One-line JSON for `BILL <tenant>`: the close-out reconciliation
+    /// row snapshotted when the tenant finished draining (the most
+    /// recent one, should the tenant have been re-admitted and retired
+    /// again). Only a retired tenant has one — a live tenant's running
+    /// bill is on `STATS <tenant>`.
+    fn bill_line(&self, tenant: TenantId) -> String {
+        let Some(rec) = self
+            .engine
+            .costs()
+            .reconciliations()
+            .iter()
+            .rev()
+            .find(|r| r.tenant == tenant)
+        else {
+            return format!(
+                "ERR no reconciliation for tenant {tenant} (only a retired tenant \
+                 has a closed bill; STATS {tenant} reads the running ledger)"
+            );
+        };
+        format!(
+            "{{\"tenant\":{},\"at\":{},\"misses\":{},\"miss_dollars\":{},\
+             \"storage_dollars\":{},\"total_dollars\":{}}}",
+            rec.tenant,
+            rec.at,
+            rec.misses,
+            rec.miss_dollars,
+            rec.storage_dollars,
+            rec.total_dollars,
         )
     }
 
@@ -711,6 +753,38 @@ mod tests {
         let mut plain = state(PolicyKind::Ttl);
         assert!(plain.handle_line("ADMIT 1").unwrap().starts_with("ERR"));
         assert!(plain.handle_line("RETIRE 1").unwrap().starts_with("ERR"));
+    }
+
+    #[test]
+    fn bill_command_surfaces_the_reconciliation() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 4;
+        cfg.tenants = vec![TenantSpec::new(0, "base")];
+        let mut st = ServerState::new(&cfg);
+        st.handle_line("ADMIT 5 multiplier=2.0");
+        st.handle_line("GET 5/k1 1000");
+        st.handle_line("GET 5/k2 1000");
+        // Live tenants have no closed bill yet.
+        assert!(
+            st.handle_line("BILL 5").unwrap().starts_with("ERR no reconciliation"),
+        );
+        st.handle_line("RETIRE 5");
+        st.handle_line("EPOCH");
+        let bill = st.handle_line("BILL 5").unwrap();
+        assert!(bill.starts_with('{'), "{bill}");
+        assert!(bill.contains("\"tenant\":5"), "{bill}");
+        assert!(bill.contains("\"misses\":2"), "{bill}");
+        // The reply carries the exact ledger fold — the same numbers the
+        // reconciliation row holds, rendered shortest-round-trip.
+        let rec = st.engine.costs().reconciliations()[0];
+        assert!(bill.contains(&format!("\"miss_dollars\":{}", rec.miss_dollars)), "{bill}");
+        assert!(bill.contains(&format!("\"total_dollars\":{}", rec.total_dollars)), "{bill}");
+        // Error surface: missing/bad ids and never-seen tenants.
+        assert_eq!(st.handle_line("BILL").unwrap(), "ERR BILL needs a tenant id");
+        assert!(st.handle_line("BILL nope").unwrap().starts_with("ERR bad tenant"));
+        assert!(st.handle_line("BILL 42").unwrap().starts_with("ERR no reconciliation"));
     }
 
     #[test]

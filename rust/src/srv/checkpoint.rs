@@ -1,0 +1,687 @@
+//! Durable billing for the server runtime: an append-only journal of
+//! every closed epoch's billing delta, fsync'd record by record, replayed
+//! idempotently on `serve --resume`.
+//!
+//! ## File format
+//!
+//! One record per line, length-prefixed so a torn tail is detectable:
+//!
+//! ```text
+//! <decimal byte length of the JSON text> <JSON object>\n
+//! ```
+//!
+//! The JSON object is a superset of the telemetry journal's epoch record:
+//!
+//! ```text
+//! {"v":1,"epoch":N,"t":...,"instances":...,
+//!  "storage_dollars":...,"miss_dollars":...,"miss_count":...,
+//!  "bills":[{"t":...,"tenant":...,"storage":...,"miss":...},...],
+//!  "reconciliations":[{"tenant":...,"at":...,"misses":...,
+//!                      "miss_dollars":...,"storage_dollars":...,
+//!                      "total_dollars":...},...],
+//!  "ledgers":[{"tenant":...,"misses":...,"miss_dollars":...,
+//!              "storage_dollars":...},...],
+//!  "cum_storage_dollars":...,"cum_miss_dollars":...}
+//! ```
+//!
+//! `epoch` is the cost tracker's 1-based closed-epoch count after the
+//! close; `bills` are the epoch's [`TenantEpochBill`] rows;
+//! `reconciliations` the tenant close-outs that happened at this
+//! boundary; `ledgers` the cumulative per-tenant ledger snapshot taken
+//! immediately after the close (open accruals are zero there). Dollars
+//! are rendered with Rust's shortest-round-trip `f64` formatting and
+//! parsed back with `str::parse::<f64>`, so a resumed tracker's
+//! cumulative bills are **bit-identical** to the crashed run's — the
+//! `cum_*` fields exist as an independent cross-check
+//! (`scripts/journal_check.py`), not as the restore source.
+//!
+//! A record is durable once its `write` returned: the writer fsyncs
+//! (`sync_data`) after every record. A process killed mid-write leaves a
+//! torn tail; [`read`] detects it (length prefix vs remaining bytes, or
+//! a JSON parse failure) and drops it with a warning instead of
+//! crashing — the epoch it described was not durably billed, exactly as
+//! if the kill had landed a moment earlier.
+
+use crate::cost::{EpochCosts, TenantEpochBill, TenantLedger, TenantReconciliation};
+use crate::engine::Engine;
+use crate::{Result, TenantId};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+/// One closed epoch's durable billing delta (see the module doc for the
+/// wire schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointRecord {
+    /// 1-based closed-epoch count after this close.
+    pub epoch: u64,
+    /// The epoch's cluster-level bill.
+    pub costs: EpochCosts,
+    /// The epoch's per-tenant bill rows (tenant id ascending).
+    pub bills: Vec<TenantEpochBill>,
+    /// Tenant close-outs reconciled at this boundary.
+    pub reconciliations: Vec<TenantReconciliation>,
+    /// Cumulative per-tenant ledger snapshot right after the close.
+    pub ledgers: Vec<(TenantId, TenantLedger)>,
+    /// Cumulative closed storage dollars (cross-check, not restore source).
+    pub cum_storage_dollars: f64,
+    /// Cumulative closed miss dollars (cross-check, not restore source).
+    pub cum_miss_dollars: f64,
+}
+
+impl CheckpointRecord {
+    /// Render the record as its one-line JSON wire form.
+    pub fn to_json(&self) -> String {
+        let mut bills = String::new();
+        for (i, b) in self.bills.iter().enumerate() {
+            if i > 0 {
+                bills.push(',');
+            }
+            bills.push_str(&format!(
+                "{{\"t\":{},\"tenant\":{},\"storage\":{},\"miss\":{}}}",
+                b.t, b.tenant, b.storage, b.miss
+            ));
+        }
+        let mut recs = String::new();
+        for (i, r) in self.reconciliations.iter().enumerate() {
+            if i > 0 {
+                recs.push(',');
+            }
+            recs.push_str(&format!(
+                "{{\"tenant\":{},\"at\":{},\"misses\":{},\"miss_dollars\":{},\
+                 \"storage_dollars\":{},\"total_dollars\":{}}}",
+                r.tenant, r.at, r.misses, r.miss_dollars, r.storage_dollars, r.total_dollars
+            ));
+        }
+        let mut ledgers = String::new();
+        for (i, (t, l)) in self.ledgers.iter().enumerate() {
+            if i > 0 {
+                ledgers.push(',');
+            }
+            ledgers.push_str(&format!(
+                "{{\"tenant\":{},\"misses\":{},\"miss_dollars\":{},\"storage_dollars\":{}}}",
+                t, l.misses, l.miss_dollars, l.storage_dollars
+            ));
+        }
+        format!(
+            "{{\"v\":1,\"epoch\":{},\"t\":{},\"instances\":{},\"storage_dollars\":{},\
+             \"miss_dollars\":{},\"miss_count\":{},\"bills\":[{}],\"reconciliations\":[{}],\
+             \"ledgers\":[{}],\"cum_storage_dollars\":{},\"cum_miss_dollars\":{}}}",
+            self.epoch,
+            self.costs.t,
+            self.costs.instances,
+            self.costs.storage,
+            self.costs.miss,
+            self.costs.miss_count,
+            bills,
+            recs,
+            ledgers,
+            self.cum_storage_dollars,
+            self.cum_miss_dollars,
+        )
+    }
+
+    /// Parse one record from its JSON wire form.
+    pub fn from_json(text: &str) -> Result<CheckpointRecord> {
+        let v = Json::parse(text)?;
+        anyhow::ensure!(v.get_u64("v")? == 1, "unknown checkpoint record version");
+        let mut bills = Vec::new();
+        for b in v.get_arr("bills")? {
+            bills.push(TenantEpochBill {
+                t: b.get_u64("t")?,
+                tenant: b.get_u64("tenant")? as TenantId,
+                storage: b.get_f64("storage")?,
+                miss: b.get_f64("miss")?,
+            });
+        }
+        let mut reconciliations = Vec::new();
+        for r in v.get_arr("reconciliations")? {
+            reconciliations.push(TenantReconciliation {
+                tenant: r.get_u64("tenant")? as TenantId,
+                at: r.get_u64("at")?,
+                misses: r.get_u64("misses")?,
+                miss_dollars: r.get_f64("miss_dollars")?,
+                storage_dollars: r.get_f64("storage_dollars")?,
+                total_dollars: r.get_f64("total_dollars")?,
+            });
+        }
+        let mut ledgers = Vec::new();
+        for l in v.get_arr("ledgers")? {
+            ledgers.push((
+                l.get_u64("tenant")? as TenantId,
+                TenantLedger {
+                    misses: l.get_u64("misses")?,
+                    miss_dollars: l.get_f64("miss_dollars")?,
+                    storage_dollars: l.get_f64("storage_dollars")?,
+                },
+            ));
+        }
+        Ok(CheckpointRecord {
+            epoch: v.get_u64("epoch")?,
+            costs: EpochCosts {
+                t: v.get_u64("t")?,
+                storage: v.get_f64("storage_dollars")?,
+                miss: v.get_f64("miss_dollars")?,
+                miss_count: v.get_u64("miss_count")?,
+                instances: v.get_u64("instances")? as u32,
+            },
+            bills,
+            reconciliations,
+            ledgers,
+            cum_storage_dollars: v.get_f64("cum_storage_dollars")?,
+            cum_miss_dollars: v.get_f64("cum_miss_dollars")?,
+        })
+    }
+}
+
+/// Append-only, fsync-per-record checkpoint writer.
+pub struct CheckpointWriter {
+    file: File,
+}
+
+impl CheckpointWriter {
+    /// Open `path` for appending (created if absent). Records already in
+    /// the file are left untouched — replay them first and seed the
+    /// [`CheckpointCursor`] from the restored engine.
+    pub fn append(path: &Path) -> Result<CheckpointWriter> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(CheckpointWriter { file })
+    }
+
+    /// Write one length-prefixed record and fsync it. On return the
+    /// epoch is durably billed.
+    pub fn write(&mut self, rec: &CheckpointRecord) -> Result<()> {
+        let json = rec.to_json();
+        let mut buf = Vec::with_capacity(json.len() + 16);
+        buf.extend_from_slice(json.len().to_string().as_bytes());
+        buf.push(b' ');
+        buf.extend_from_slice(json.as_bytes());
+        buf.push(b'\n');
+        self.file.write_all(&buf)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Read every intact record of a checkpoint file. A torn or corrupt tail
+/// (kill mid-write) is dropped with a warning on stderr, never an error:
+/// the records before it are exactly the durably billed epochs.
+pub fn read(path: &Path) -> Result<Vec<CheckpointRecord>> {
+    let bytes = std::fs::read(path)?;
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let mut len = 0usize;
+        let mut digits = 0usize;
+        while pos < bytes.len() && bytes[pos].is_ascii_digit() && digits <= 9 {
+            len = len * 10 + (bytes[pos] - b'0') as usize;
+            pos += 1;
+            digits += 1;
+        }
+        if digits == 0 || digits > 9 || bytes.get(pos) != Some(&b' ') {
+            warn_tail(path, out.len(), "bad length prefix");
+            break;
+        }
+        pos += 1;
+        if bytes.get(pos + len) != Some(&b'\n') {
+            warn_tail(path, out.len(), "truncated record");
+            break;
+        }
+        let parsed = std::str::from_utf8(&bytes[pos..pos + len])
+            .map_err(anyhow::Error::from)
+            .and_then(CheckpointRecord::from_json);
+        match parsed {
+            Ok(rec) => out.push(rec),
+            Err(e) => {
+                warn_tail(path, out.len(), &format!("unparseable record: {e}"));
+                break;
+            }
+        }
+        pos += len + 1;
+    }
+    Ok(out)
+}
+
+fn warn_tail(path: &Path, intact: usize, what: &str) {
+    eprintln!(
+        "elastictl serve: dropping torn checkpoint tail in {} after {} intact record(s) ({what})",
+        path.display(),
+        intact
+    );
+}
+
+/// Replay checkpoint records into a freshly built (or already partially
+/// restored) engine. Idempotent: records at or before the engine's
+/// closed-epoch count are skipped, so replaying the same file twice — or
+/// a file that overlaps what the engine already billed — changes
+/// nothing. A gap in the epoch sequence ends the replay there (the
+/// records after it cannot be attributed). Returns the number of epochs
+/// restored.
+pub fn replay(engine: &mut Engine, records: &[CheckpointRecord]) -> u64 {
+    let mut done = engine.costs().epochs();
+    let mut epochs = Vec::new();
+    let mut bills = Vec::new();
+    let mut recs = Vec::new();
+    let mut ledgers: &[(TenantId, TenantLedger)] = &[];
+    for r in records {
+        if r.epoch <= done {
+            continue; // already billed — idempotent resume
+        }
+        if r.epoch != done + 1 {
+            eprintln!(
+                "elastictl serve: checkpoint epoch gap ({} then {}), ignoring the rest",
+                done, r.epoch
+            );
+            break;
+        }
+        done += 1;
+        epochs.push(r.costs);
+        bills.extend_from_slice(&r.bills);
+        recs.extend_from_slice(&r.reconciliations);
+        ledgers = &r.ledgers;
+    }
+    let n = epochs.len() as u64;
+    if n > 0 {
+        engine.restore_closed_epochs(&epochs, &bills, &recs, ledgers);
+    }
+    n
+}
+
+/// Cursor over a live engine's cost ledger: remembers how much has been
+/// checkpointed and yields one [`CheckpointRecord`] per epoch closed
+/// since. The server drains it after every handled message (manual-epoch
+/// mode closes at most one epoch per message, so the per-record bill
+/// partition is exact).
+#[derive(Debug, Default)]
+pub struct CheckpointCursor {
+    epochs: u64,
+    bills: usize,
+    reconciliations: usize,
+}
+
+impl CheckpointCursor {
+    /// Seed the cursor from an engine whose current state is already
+    /// durable (a fresh engine, or one just restored by [`replay`]).
+    pub fn caught_up(engine: &Engine) -> CheckpointCursor {
+        CheckpointCursor {
+            epochs: engine.costs().epochs(),
+            bills: engine.costs().tenant_bills().len(),
+            reconciliations: engine.costs().reconciliations().len(),
+        }
+    }
+
+    /// Records for every epoch closed since the last drain.
+    pub fn drain(&mut self, engine: &Engine) -> Vec<CheckpointRecord> {
+        let costs = engine.costs();
+        let closed = engine.closed_epochs();
+        let mut out = Vec::new();
+        while self.epochs < costs.epochs() {
+            let e = closed[self.epochs as usize];
+            let all_bills = costs.tenant_bills();
+            let mut bills = Vec::new();
+            while self.bills < all_bills.len() && all_bills[self.bills].t == e.t {
+                bills.push(all_bills[self.bills]);
+                self.bills += 1;
+            }
+            let all_recs = costs.reconciliations();
+            let mut recs = Vec::new();
+            while self.reconciliations < all_recs.len()
+                && all_recs[self.reconciliations].at == e.t
+            {
+                recs.push(all_recs[self.reconciliations]);
+                self.reconciliations += 1;
+            }
+            self.epochs += 1;
+            out.push(CheckpointRecord {
+                epoch: self.epochs,
+                costs: e,
+                bills,
+                reconciliations: recs,
+                ledgers: costs
+                    .tenant_ledgers()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| (i as TenantId, l))
+                    .collect(),
+                cum_storage_dollars: costs.storage_total(),
+                cum_miss_dollars: costs.miss_total(),
+            });
+        }
+        out
+    }
+}
+
+/// Minimal JSON value for parsing checkpoint records (the offline build
+/// carries no serde). Numbers are kept as their source text so `f64`
+/// values round-trip bit-exactly through `str::parse`.
+#[derive(Debug)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        anyhow::ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+        Ok(v)
+    }
+
+    fn get<'a>(&'a self, key: &str) -> Result<&'a Json> {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| anyhow::anyhow!("missing key {key:?}")),
+            _ => anyhow::bail!("not an object (looking for {key:?})"),
+        }
+    }
+
+    fn get_u64(&self, key: &str) -> Result<u64> {
+        match self.get(key)? {
+            Json::Num(n) => Ok(n.parse::<u64>()?),
+            other => anyhow::bail!("{key:?} is not an integer: {other:?}"),
+        }
+    }
+
+    fn get_f64(&self, key: &str) -> Result<f64> {
+        match self.get(key)? {
+            Json::Num(n) => Ok(n.parse::<f64>()?),
+            other => anyhow::bail!("{key:?} is not a number: {other:?}"),
+        }
+    }
+
+    fn get_arr<'a>(&'a self, key: &str) -> Result<&'a [Json]> {
+        match self.get(key)? {
+            Json::Arr(items) => Ok(items),
+            other => anyhow::bail!("{key:?} is not an array: {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        anyhow::ensure!(self.peek() == Some(c), "expected {:?} at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str) -> Result<()> {
+        anyhow::ensure!(self.b[self.i..].starts_with(s.as_bytes()), "bad literal at {}", self.i);
+        self.i += s.len();
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true").map(|_| Json::Bool(true)),
+            Some(b'f') => self.lit("false").map(|_| Json::Bool(false)),
+            Some(b'n') => self.lit("null").map(|_| Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(char::from), self.i),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii");
+        anyhow::ensure!(
+            text.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false),
+            "bad number {text:?} at byte {start}"
+        );
+        Ok(Json::Num(text.to_string()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(c @ (b'"' | b'\\' | b'/')) => out.push(char::from(c)),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        _ => anyhow::bail!("bad escape at byte {}", self.i),
+                    }
+                    self.i += 1;
+                }
+                Some(c) => {
+                    out.push(char::from(c));
+                    self.i += 1;
+                }
+                None => anyhow::bail!("unterminated string"),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        self.ws();
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => anyhow::bail!("bad array at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        self.ws();
+        let mut fields = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => anyhow::bail!("bad object at byte {}", self.i),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, PolicyKind};
+    use crate::engine::EngineBuilder;
+    use crate::trace::Request;
+    use crate::util::tempdir::tempdir;
+    use crate::HOUR;
+
+    fn engine(cfg: &Config) -> Engine {
+        EngineBuilder::new(cfg).no_default_probes().manual_epochs().build()
+    }
+
+    fn drive(e: &mut Engine, keys: std::ops::Range<u64>, close_at: u64) {
+        for k in keys {
+            e.offer(&Request { ts: close_at.saturating_sub(1), obj: k, size: 1000, tenant: 0 });
+        }
+        e.force_epoch(close_at);
+    }
+
+    #[test]
+    fn record_round_trips_through_json() {
+        let rec = CheckpointRecord {
+            epoch: 3,
+            costs: EpochCosts {
+                t: 2 * HOUR,
+                storage: 0.017 * 3.0,
+                miss: 1.4676e-7,
+                miss_count: 1,
+                instances: 3,
+            },
+            bills: vec![TenantEpochBill { t: 2 * HOUR, tenant: 1, storage: 0.051, miss: 0.1 }],
+            reconciliations: vec![TenantReconciliation {
+                tenant: 2,
+                at: 2 * HOUR,
+                misses: 7,
+                miss_dollars: 0.25,
+                storage_dollars: 0.5,
+                total_dollars: 0.75,
+            }],
+            ledgers: vec![
+                (0, TenantLedger::default()),
+                (1, TenantLedger { misses: 9, miss_dollars: 0.1, storage_dollars: 0.051 }),
+            ],
+            cum_storage_dollars: 0.3 + 0.1 + 0.1, // deliberately non-representable
+            cum_miss_dollars: 1.4676e-7,
+        };
+        let json = rec.to_json();
+        let back = CheckpointRecord::from_json(&json).unwrap();
+        assert_eq!(back, rec, "{json}");
+        // Bit-exactness of the awkward float, not approximate equality.
+        assert_eq!(back.cum_storage_dollars.to_bits(), rec.cum_storage_dollars.to_bits());
+    }
+
+    #[test]
+    fn cursor_yields_one_record_per_closed_epoch() {
+        let cfg = Config::with_policy(PolicyKind::Fixed);
+        let mut e = engine(&cfg);
+        let mut cur = CheckpointCursor::caught_up(&e);
+        assert!(cur.drain(&e).is_empty(), "nothing closed yet");
+        drive(&mut e, 0..5, HOUR);
+        let recs = cur.drain(&e);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].epoch, 1);
+        assert_eq!(recs[0].costs.miss_count, 5);
+        assert_eq!(recs[0].bills.len(), 1, "single-tenant epoch bills tenant 0");
+        assert_eq!(recs[0].cum_storage_dollars, e.costs().storage_total());
+        assert!(cur.drain(&e).is_empty(), "drained");
+        drive(&mut e, 5..8, 2 * HOUR);
+        let recs = cur.drain(&e);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].epoch, 2);
+    }
+
+    #[test]
+    fn write_read_replay_round_trip_is_bit_identical() {
+        let dir = tempdir().unwrap();
+        let path = dir.path().join("ckpt.jsonl");
+        let cfg = Config::with_policy(PolicyKind::Fixed);
+
+        // Uninterrupted run: two epochs, checkpointed as it goes.
+        let mut a = engine(&cfg);
+        let mut cur = CheckpointCursor::caught_up(&a);
+        let mut w = CheckpointWriter::append(&path).unwrap();
+        drive(&mut a, 0..5, HOUR);
+        drive(&mut a, 100..104, 2 * HOUR);
+        for rec in cur.drain(&a) {
+            w.write(&rec).unwrap();
+        }
+
+        // "Crashed" process: a fresh engine restored from the file.
+        let records = read(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        let mut b = engine(&cfg);
+        assert_eq!(replay(&mut b, &records), 2);
+        assert_eq!(b.costs().epochs(), 2);
+        assert_eq!(b.costs().storage_total(), a.costs().storage_total());
+        assert_eq!(b.costs().miss_total(), a.costs().miss_total());
+        assert_eq!(b.costs().tenant_bills(), a.costs().tenant_bills());
+        assert_eq!(b.costs().tenant_ledgers(), a.costs().tenant_ledgers());
+        assert_eq!(b.instances(), a.instances());
+
+        // Replaying again is a no-op (idempotent resume).
+        assert_eq!(replay(&mut b, &records), 0);
+        assert_eq!(b.costs().epochs(), 2);
+
+        // Both runs bill the next epoch identically, bit for bit.
+        drive(&mut a, 200..203, 3 * HOUR);
+        drive(&mut b, 200..203, 3 * HOUR);
+        assert_eq!(b.costs().storage_total(), a.costs().storage_total());
+        assert_eq!(b.costs().miss_total(), a.costs().miss_total());
+        assert_eq!(b.costs().tenant_bills(), a.costs().tenant_bills());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_not_fatal() {
+        let dir = tempdir().unwrap();
+        let path = dir.path().join("ckpt.jsonl");
+        let cfg = Config::with_policy(PolicyKind::Fixed);
+        let mut e = engine(&cfg);
+        let mut cur = CheckpointCursor::caught_up(&e);
+        let mut w = CheckpointWriter::append(&path).unwrap();
+        drive(&mut e, 0..3, HOUR);
+        drive(&mut e, 3..6, 2 * HOUR);
+        for rec in cur.drain(&e) {
+            w.write(&rec).unwrap();
+        }
+        drop(w);
+        // Simulate a kill mid-write: chop the last record in half.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+        let records = read(&path).unwrap();
+        assert_eq!(records.len(), 1, "only the intact record survives");
+        assert_eq!(records[0].epoch, 1);
+        // Garbage length prefix: nothing intact, still not an error.
+        std::fs::write(&path, b"zzz not a record\n").unwrap();
+        assert!(read(&path).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,199 @@
+//! Trace-replay load generator for a live `elastictl serve` endpoint.
+//!
+//! [`run`] opens N concurrent connections, partitions the trace across
+//! them round-robin (request `i` rides connection `i mod N`), and plays
+//! each partition synchronously — one `GET`, one reply — so every
+//! request yields a true round-trip latency sample. The aggregate report
+//! carries throughput (all connections together, wall clock) and
+//! p50/p99 latency over the pooled samples.
+//!
+//! Because the state thread serializes all engine access, replaying the
+//! same trace over any number of connections produces the same engine
+//! totals — only the interleaving differs — which is exactly what the
+//! `srv_concurrent` integration test pins.
+
+use crate::trace::Request;
+use crate::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Aggregate result of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Connections the trace was partitioned over.
+    pub connections: usize,
+    /// Requests successfully round-tripped.
+    pub requests: u64,
+    /// Replies that came back `HIT`.
+    pub hits: u64,
+    /// Wall-clock duration of the whole replay (connect to last reply).
+    pub elapsed_secs: f64,
+    /// Median round-trip latency in microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile round-trip latency in microseconds.
+    pub p99_us: u64,
+}
+
+impl LoadgenReport {
+    /// Aggregate throughput across all connections.
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.requests as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of requests served from cache.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.requests > 0 {
+            self.hits as f64 / self.requests as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human summary (the `elastictl loadgen` output).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests over {} connections in {:.3}s: {:.0} req/s, \
+             hit ratio {:.3}, p50 {}us, p99 {}us",
+            self.requests,
+            self.connections,
+            self.elapsed_secs,
+            self.requests_per_sec(),
+            self.hit_ratio(),
+            self.p50_us,
+            self.p99_us,
+        )
+    }
+}
+
+/// What one connection thread brings home.
+struct WorkerResult {
+    hits: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// Replay `reqs` against the server at `addr` over `conns` connections.
+pub fn run(addr: &str, reqs: &[Request], conns: usize) -> Result<LoadgenReport> {
+    anyhow::ensure!(conns > 0, "loadgen needs at least one connection");
+    let mut parts: Vec<Vec<Request>> = vec![Vec::new(); conns];
+    for (i, r) in reqs.iter().enumerate() {
+        parts[i % conns].push(*r);
+    }
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for part in parts {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || worker(&addr, &part)));
+    }
+    let mut hits = 0u64;
+    let mut latencies = Vec::with_capacity(reqs.len());
+    for h in handles {
+        let res = h.join().map_err(|_| anyhow::anyhow!("loadgen worker panicked"))??;
+        hits += res.hits;
+        latencies.extend(res.latencies_us);
+    }
+    let elapsed_secs = started.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    Ok(LoadgenReport {
+        connections: conns,
+        requests: latencies.len() as u64,
+        hits,
+        elapsed_secs,
+        p50_us: percentile(&latencies, 50.0),
+        p99_us: percentile(&latencies, 99.0),
+    })
+}
+
+/// One connection: play a partition synchronously, timing each round trip.
+fn worker(addr: &str, part: &[Request]) -> Result<WorkerResult> {
+    let sock = TcpStream::connect(addr)?;
+    sock.set_nodelay(true)?;
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let mut sock = sock;
+    let mut hits = 0u64;
+    let mut latencies_us = Vec::with_capacity(part.len());
+    let mut line = String::new();
+    for r in part {
+        // The wire key is the trace ObjectId in decimal: the server
+        // parses numeric keys straight back onto the ObjectId space, so
+        // replay touches the same objects the trace did.
+        let cmd = if r.tenant == 0 {
+            format!("GET {} {}\n", r.obj, r.size)
+        } else {
+            format!("GET {}/{} {}\n", r.tenant, r.obj, r.size)
+        };
+        let t0 = Instant::now();
+        sock.write_all(cmd.as_bytes())?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the connection mid-replay");
+        }
+        latencies_us.push(t0.elapsed().as_micros() as u64);
+        if line.trim_end() == "HIT" {
+            hits += 1;
+        }
+    }
+    let _ = sock.write_all(b"QUIT\n");
+    Ok(WorkerResult { hits, latencies_us })
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample.
+fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((p / 100.0) * (sorted_us.len() - 1) as f64).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, PolicyKind};
+    use crate::srv::{accept_loop, spawn_state};
+    use std::net::TcpListener;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 50.0), 50);
+        assert_eq!(percentile(&s, 99.0), 99);
+        assert_eq!(percentile(&s, 100.0), 100);
+        assert_eq!(percentile(&[], 50.0), 0);
+        assert_eq!(percentile(&[7], 99.0), 7);
+    }
+
+    #[test]
+    fn replays_a_trace_over_concurrent_connections() {
+        let cfg = Config::with_policy(PolicyKind::Fixed);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = spawn_state(cfg, None).unwrap();
+        let tx = server.tx.clone();
+        std::thread::spawn(move || {
+            let _ = accept_loop(listener, tx);
+        });
+
+        // 10 objects touched 4 times each: exactly 10 misses no matter
+        // how the 4 connections interleave (the state thread serializes).
+        let reqs: Vec<Request> = (0..40u64).map(|i| Request::new(i, i % 10, 100)).collect();
+        let report = run(&addr, &reqs, 4).unwrap();
+        assert_eq!(report.connections, 4);
+        assert_eq!(report.requests, 40);
+        assert_eq!(report.hits, 30, "10 distinct objects -> 10 misses");
+        assert!(report.elapsed_secs > 0.0);
+        assert!(report.requests_per_sec() > 0.0);
+        assert!(report.p50_us <= report.p99_us);
+        assert!((report.hit_ratio() - 0.75).abs() < 1e-9);
+        assert!(report.summary().contains("40 requests over 4 connections"));
+    }
+
+    #[test]
+    fn zero_connections_is_an_error() {
+        assert!(run("127.0.0.1:1", &[], 0).is_err());
+    }
+}

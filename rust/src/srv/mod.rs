@@ -1,0 +1,365 @@
+//! The server runtime: the long-lived, concurrent, durable front for
+//! `elastictl serve`.
+//!
+//! [`crate::serve`] defines the line protocol and the per-command state
+//! machine ([`ServerState`]); this module wraps that state machine in
+//! the machinery a real deployment needs:
+//!
+//! * **Concurrency** — a thread-per-connection accept loop (the offline
+//!   build carries no async runtime). Clients may pipeline: each
+//!   connection thread reads ahead line by line and forwards to the
+//!   single state-owner thread, which serializes all engine access (the
+//!   analytic policy holds non-`Send` PJRT handles, exactly as in
+//!   [`crate::serve::spawn_state`]). Replies return in request order per
+//!   connection.
+//! * **Wall-clock epochs** — `[serve] epoch_secs = N` (or
+//!   `--epoch-secs N`) starts a background ticker that forces an epoch
+//!   boundary every N seconds of wall time, through the same code path
+//!   as the operator's `EPOCH` command. The default (0) keeps epochs
+//!   fully manual, so a default-config server is bit-identical with the
+//!   pre-runtime behavior pinned by `serve_json`/`engine_parity`.
+//! * **Real TTL expiry** — `[serve] ttl_expiry_secs` arms lazy
+//!   `Instant`-based expiry on the resident stores (armed by
+//!   [`crate::engine::EngineBuilder`], implemented in
+//!   [`crate::cache::ExpiryIndex`] / [`crate::cluster::Cluster`]): an
+//!   expired entry is dropped on access (a plain miss, with the resident
+//!   ledger debited), and the epoch boundary sweeps what expired
+//!   unaccessed.
+//! * **Durability** — `[serve] checkpoint_path` (or `--resume PATH`)
+//!   journals every closed epoch's billing delta to an append-only,
+//!   fsync-per-record file ([`checkpoint`]); on startup the file is
+//!   replayed idempotently, so a killed server resumes with cumulative
+//!   bills bit-identical to an uninterrupted run. Cache contents and
+//!   controller estimators restart cold — the bills are the durable
+//!   part; the open (unbilled) epoch at the time of the kill is lost by
+//!   design, exactly like a node that died before its boundary.
+//! * **Load generation** — [`loadgen`] replays a trace file over N
+//!   concurrent connections against a live server and reports aggregate
+//!   req/s and p50/p99 latency.
+
+pub mod checkpoint;
+pub mod loadgen;
+
+use crate::config::Config;
+use crate::serve::ServerState;
+use crate::Result;
+use checkpoint::{CheckpointCursor, CheckpointWriter};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// One message for the state-owner thread.
+pub enum Msg {
+    /// A protocol line plus the channel its reply goes back on
+    /// (`None` = close the connection; only `QUIT` answers that).
+    Line(String, mpsc::Sender<Option<String>>),
+    /// A wall-clock epoch boundary from the background ticker.
+    Tick,
+}
+
+/// Command channel to the state-owner thread.
+pub type SrvTx = mpsc::Sender<Msg>;
+
+/// A spawned state-owner thread: its command channel plus what the
+/// startup replay restored.
+pub struct Server {
+    /// Send [`Msg`]s here; the state thread exits when every clone of
+    /// this sender is dropped (and its checkpoint is already durable —
+    /// the writer fsyncs record by record, so there is nothing to flush).
+    pub tx: SrvTx,
+    /// Closed epochs restored from the checkpoint at startup (0 on a
+    /// fresh start or without a checkpoint).
+    pub resumed_epochs: u64,
+}
+
+/// Spawn the state-owner thread for `cfg`. With a checkpoint path, the
+/// file's intact records are replayed into the fresh engine first
+/// (idempotently — see [`checkpoint::replay`]) and every epoch closed
+/// from then on is appended durably before the next message is handled.
+pub fn spawn_state(cfg: Config, ckpt_path: Option<PathBuf>) -> Result<Server> {
+    // File work happens on the caller: records and writer are `Send`,
+    // the engine (non-`Send` policy state) is built on the state thread.
+    let records = match &ckpt_path {
+        Some(p) if p.exists() => checkpoint::read(p)?,
+        _ => Vec::new(),
+    };
+    let writer = match &ckpt_path {
+        Some(p) => Some(CheckpointWriter::append(p)?),
+        None => None,
+    };
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let (ready_tx, ready_rx) = mpsc::channel::<u64>();
+    std::thread::spawn(move || state_loop(cfg, records, writer, rx, ready_tx));
+    let resumed_epochs = ready_rx.recv().unwrap_or(0);
+    Ok(Server { tx, resumed_epochs })
+}
+
+fn state_loop(
+    cfg: Config,
+    records: Vec<checkpoint::CheckpointRecord>,
+    writer: Option<CheckpointWriter>,
+    rx: mpsc::Receiver<Msg>,
+    ready_tx: mpsc::Sender<u64>,
+) {
+    let mut st = ServerState::new(&cfg);
+    let resumed = checkpoint::replay(&mut st.engine, &records);
+    if resumed > 0 {
+        if let Some(reg) = st.engine.telemetry() {
+            reg.borrow_mut().counter("elastictl_resume_epochs_total").add(resumed);
+        }
+    }
+    let _ = ready_tx.send(resumed);
+    // Cursor and writer travel together: everything the cursor has
+    // drained is on disk.
+    let mut durable = writer.map(|w| (w, CheckpointCursor::caught_up(&st.engine)));
+    for msg in rx {
+        match msg {
+            Msg::Line(line, reply) => {
+                let text = st.handle_line(&line);
+                // Durability barrier *before* the ack: by the time a
+                // client sees the reply (an EPOCH's RESIZED in
+                // particular), every epoch the command closed is fsync'd.
+                flush_closed_epochs(&mut durable, &st);
+                let _ = reply.send(text);
+            }
+            Msg::Tick => {
+                // The ticker is the operator's EPOCH on a wall-clock
+                // cadence: same code path, reply discarded.
+                let _ = st.handle_line("EPOCH");
+                if let Some(reg) = st.engine.telemetry() {
+                    reg.borrow_mut().counter("elastictl_epoch_ticks_total").inc();
+                }
+                flush_closed_epochs(&mut durable, &st);
+            }
+        }
+    }
+}
+
+/// Append every newly closed epoch to the checkpoint (fsync per record).
+fn flush_closed_epochs(
+    durable: &mut Option<(CheckpointWriter, CheckpointCursor)>,
+    st: &ServerState,
+) {
+    if let Some((w, cursor)) = durable.as_mut() {
+        for rec in cursor.drain(&st.engine) {
+            if let Err(e) = w.write(&rec) {
+                eprintln!("elastictl serve: checkpoint write failed: {e}");
+            }
+        }
+    }
+}
+
+/// Start the wall-clock epoch ticker: a [`Msg::Tick`] every `every`,
+/// until the state thread goes away.
+pub fn spawn_ticker(tx: SrvTx, every: Duration) {
+    std::thread::spawn(move || loop {
+        std::thread::sleep(every);
+        if tx.send(Msg::Tick).is_err() {
+            break;
+        }
+    });
+}
+
+/// Accept connections forever, one handler thread per connection.
+pub fn accept_loop(listener: TcpListener, tx: SrvTx) -> Result<()> {
+    for stream in listener.incoming() {
+        let socket = stream?;
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(socket, tx);
+        });
+    }
+    Ok(())
+}
+
+/// Serve one connection: read lines (pipelining is fine — the reader
+/// consumes as fast as the state thread answers), forward each to the
+/// state owner, write replies back in order.
+pub fn handle_conn(socket: TcpStream, tx: SrvTx) -> Result<()> {
+    let reader = BufReader::new(socket.try_clone()?);
+    let mut w = socket;
+    for line in reader.lines() {
+        let line = line?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Msg::Line(line, reply_tx))
+            .map_err(|_| anyhow::anyhow!("state thread gone"))?;
+        match reply_rx.recv()? {
+            Some(text) => {
+                w.write_all(text.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            None => {
+                w.write_all(b"BYE\n")?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the server runtime until the listener errors or the process is
+/// killed: bind, resume from the checkpoint (CLI `--resume` wins over
+/// `[serve] checkpoint_path`), start the ticker when configured, accept.
+pub fn serve(cfg: Config, addr: &str, resume: Option<&str>) -> Result<()> {
+    let ckpt = resume
+        .map(PathBuf::from)
+        .or_else(|| cfg.serve.checkpoint_path.as_ref().map(PathBuf::from));
+    let epoch_secs = cfg.serve.epoch_secs;
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "elastictl serve: listening on {} (policy={}, tenants={}, epoch_secs={}, checkpoint={})",
+        listener.local_addr()?,
+        cfg.scaler.policy.as_str(),
+        if cfg.tenants.is_empty() { 1 } else { cfg.tenants.len() },
+        epoch_secs,
+        ckpt.as_deref().map(|p| p.display().to_string()).unwrap_or_else(|| "off".into()),
+    );
+    let server = spawn_state(cfg, ckpt)?;
+    if server.resumed_epochs > 0 {
+        eprintln!(
+            "elastictl serve: resumed {} closed epoch(s) from checkpoint",
+            server.resumed_epochs
+        );
+    }
+    if epoch_secs > 0 {
+        spawn_ticker(server.tx.clone(), Duration::from_secs(epoch_secs));
+    }
+    accept_loop(listener, server.tx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, PolicyKind};
+    use crate::util::tempdir::tempdir;
+
+    /// Drive one line through the state thread and wait for the reply.
+    fn ask(tx: &SrvTx, line: &str) -> Option<String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Msg::Line(line.to_string(), reply_tx)).unwrap();
+        reply_rx.recv().unwrap()
+    }
+
+    #[test]
+    fn state_thread_serves_the_protocol() {
+        let cfg = Config::with_policy(PolicyKind::Ttl);
+        let server = spawn_state(cfg, None).unwrap();
+        assert_eq!(server.resumed_epochs, 0);
+        assert_eq!(ask(&server.tx, "GET k 100").unwrap(), "MISS");
+        assert_eq!(ask(&server.tx, "GET k 100").unwrap(), "HIT");
+        assert!(ask(&server.tx, "EPOCH").unwrap().starts_with("RESIZED"));
+        assert!(ask(&server.tx, "QUIT").is_none());
+    }
+
+    #[test]
+    fn ticks_close_epochs_like_the_epoch_command() {
+        let cfg = Config::with_policy(PolicyKind::Fixed);
+        let server = spawn_state(cfg, None).unwrap();
+        ask(&server.tx, "GET k 100");
+        server.tx.send(Msg::Tick).unwrap();
+        server.tx.send(Msg::Tick).unwrap();
+        // STATS after the ticks: the state thread is serial, so by the
+        // time the reply arrives both ticks have been handled.
+        let stats = ask(&server.tx, "STATS").unwrap();
+        assert!(stats.contains("\"requests\":1"), "{stats}");
+    }
+
+    #[test]
+    fn checkpointed_kill_and_resume_is_bit_identical() {
+        let dir = tempdir().unwrap();
+        let interrupted = dir.path().join("interrupted.ckpt");
+        let baseline = dir.path().join("baseline.ckpt");
+        let cfg = || {
+            let mut c = Config::with_policy(PolicyKind::Fixed);
+            c.scaler.fixed_instances = 2;
+            c
+        };
+        // Segment 1 keys / segment 2 keys are disjoint and fresh, so the
+        // resumed (cold-cache) run misses exactly like the baseline.
+        let seg1: Vec<String> = (0..40).map(|i| format!("GET a{i} 1000")).collect();
+        let seg2: Vec<String> = (0..40).map(|i| format!("GET b{i} 1000")).collect();
+
+        // Baseline: both segments through one uninterrupted server, with
+        // the same epoch boundaries the interrupted run will have.
+        let bsrv = spawn_state(cfg(), Some(baseline.clone())).unwrap();
+        for line in &seg1 {
+            ask(&bsrv.tx, line);
+        }
+        ask(&bsrv.tx, "EPOCH");
+        for line in &seg2 {
+            ask(&bsrv.tx, line);
+        }
+        ask(&bsrv.tx, "EPOCH");
+        drop(bsrv.tx); // let the state thread exit
+
+        // Interrupted: segment 1, an EPOCH, then a "kill" (drop the
+        // channel — the checkpoint is already fsync'd per record).
+        let s1 = spawn_state(cfg(), Some(interrupted.clone())).unwrap();
+        for line in &seg1 {
+            ask(&s1.tx, line);
+        }
+        ask(&s1.tx, "EPOCH");
+        drop(s1.tx);
+
+        // Resume and finish with segment 2.
+        let s2 = spawn_state(cfg(), Some(interrupted.clone())).unwrap();
+        assert_eq!(s2.resumed_epochs, 1, "one closed epoch must be restored");
+        for line in &seg2 {
+            ask(&s2.tx, line);
+        }
+        ask(&s2.tx, "EPOCH");
+        drop(s2.tx);
+
+        // Compare the durable bills: both runs closed the same two
+        // epochs, so every cumulative figure must agree bit for bit.
+        // Epoch timestamps are wall-clock and legitimately differ — the
+        // money and the counts must not.
+        let last = |p: &std::path::Path| checkpoint::read(p).unwrap().pop().unwrap();
+        let (a, b) = (last(&interrupted), last(&baseline));
+        assert_eq!((a.epoch, b.epoch), (2, 2));
+        assert_eq!(a.cum_miss_dollars, b.cum_miss_dollars, "bit-identical miss dollars");
+        assert_eq!(a.cum_storage_dollars, b.cum_storage_dollars, "bit-identical storage");
+        assert_eq!(a.ledgers, b.ledgers, "bit-identical per-tenant ledgers");
+        assert_eq!(a.costs.instances, b.costs.instances);
+        assert_eq!(a.costs.miss_count, b.costs.miss_count);
+        assert_eq!(
+            a.bills.iter().map(|x| (x.tenant, x.storage, x.miss)).collect::<Vec<_>>(),
+            b.bills.iter().map(|x| (x.tenant, x.storage, x.miss)).collect::<Vec<_>>(),
+            "bit-identical final-epoch bill rows"
+        );
+    }
+
+    #[test]
+    fn end_to_end_over_tcp_with_concurrent_connections() {
+        let cfg = Config::with_policy(PolicyKind::Ttl);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = spawn_state(cfg, None).unwrap();
+        let tx = server.tx.clone();
+        std::thread::spawn(move || {
+            let _ = accept_loop(listener, tx);
+        });
+        let mut handles = Vec::new();
+        for c in 0..4u32 {
+            handles.push(std::thread::spawn(move || {
+                let mut sock = TcpStream::connect(addr).unwrap();
+                // Per-connection keys: each object's accesses stay on one
+                // connection, so every key misses once then hits.
+                sock.write_all(format!("GET c{c}k 100\nGET c{c}k 100\nQUIT\n").as_bytes())
+                    .unwrap();
+                let mut lines = BufReader::new(sock).lines();
+                assert_eq!(lines.next().unwrap().unwrap(), "MISS");
+                assert_eq!(lines.next().unwrap().unwrap(), "HIT");
+                assert_eq!(lines.next().unwrap().unwrap(), "BYE");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = ask(&server.tx, "STATS").unwrap();
+        assert!(stats.contains("\"requests\":8"), "{stats}");
+        assert!(stats.contains("\"misses\":4"), "{stats}");
+    }
+}

@@ -19,8 +19,9 @@ mod zipf;
 
 pub use irm::{IrmConfig, IrmGenerator};
 pub use record::{
-    read_csv, read_items, read_trace, write_csv, write_items, write_trace, CsvReader, Request,
-    TenantEvent, TenantEventKind, TraceItem, TraceReader, TraceWriter,
+    read_csv, read_items, read_items_csv, read_trace, write_csv, write_items, write_items_csv,
+    write_trace, CsvReader, Request, TenantEvent, TenantEventKind, TraceItem, TraceReader,
+    TraceWriter,
 };
 pub use stats::{characterize, TraceStats};
 pub use synth::{SynthConfig, SynthGenerator};

@@ -522,11 +522,52 @@ pub fn write_csv(path: impl AsRef<Path>, reqs: &[Request]) -> Result<()> {
     Ok(())
 }
 
+/// Write an item stream (requests + tenant events) as CSV — the textual
+/// face of the v3 event lane. Request rows keep the plain
+/// `ts_us,obj,size,tenant` dialect; events ride tagged rows
+/// (`ADMIT,<ts>,<tenant>,<reserved_bytes>,<multiplier>,<slo|->` and
+/// `RETIRE,<ts>,<tenant>`), so request-only consumers of the same file
+/// skip them exactly as [`TraceReader`] skips the binary event lane.
+/// Floats print in shortest-round-trip form, so a read-back is
+/// bit-identical.
+pub fn write_items_csv(path: impl AsRef<Path>, items: &[TraceItem]) -> Result<()> {
+    let mut out = BufWriter::new(File::create(path.as_ref())?);
+    writeln!(out, "ts_us,obj,size,tenant")?;
+    for item in items {
+        match item {
+            TraceItem::Request(r) => {
+                writeln!(out, "{},{},{},{}", r.ts, r.obj, r.size, r.tenant)?
+            }
+            TraceItem::Event(e) => match e.kind {
+                TenantEventKind::Admit {
+                    reserved_bytes,
+                    miss_cost_multiplier,
+                    slo_miss_ratio,
+                } => {
+                    let slo =
+                        slo_miss_ratio.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string());
+                    writeln!(
+                        out,
+                        "ADMIT,{},{},{},{},{}",
+                        e.ts, e.tenant, reserved_bytes, miss_cost_multiplier, slo
+                    )?
+                }
+                TenantEventKind::Retire => writeln!(out, "RETIRE,{},{}", e.ts, e.tenant)?,
+            },
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
 /// Streaming CSV trace reader (implements [`super::RequestSource`]): same
 /// dialect as [`read_csv`] — header line required, the legacy tenant-less
 /// `ts_us,obj,size` header accepted (tenant 0), blank lines skipped — in
-/// constant memory. A malformed line or a mid-stream IO error ends the
-/// stream; [`CsvReader::check`] surfaces it after the drive loop (the
+/// constant memory. Tagged `ADMIT,...`/`RETIRE,...` rows (the
+/// [`write_items_csv`] event lane) surface through `next_item` and are
+/// skipped by `next_request`, mirroring [`TraceReader`] on a v3 file. A
+/// malformed line or a mid-stream IO error ends the stream;
+/// [`CsvReader::check`] surfaces it after the drive loop (the
 /// `RequestSource` contract has no error channel).
 pub struct CsvReader {
     lines: std::io::Lines<BufReader<File>>,
@@ -598,10 +639,57 @@ impl CsvReader {
         };
         Ok(Request { ts, obj, size, tenant })
     }
+
+    /// Whether a data row is a tagged tenant-event row rather than a
+    /// request row (request rows start with a numeric timestamp).
+    fn is_event_line(line: &str) -> bool {
+        line.starts_with("ADMIT,") || line.starts_with("RETIRE,")
+    }
+
+    fn parse_event(&self, line: &str) -> Result<TenantEvent> {
+        let i = self.lineno;
+        let mut parts = line.split(',');
+        let tag = parts.next().unwrap_or_default();
+        let mut field = |name: &str| {
+            parts
+                .next()
+                .map(str::trim)
+                .ok_or_else(|| anyhow::anyhow!("line {i}: missing {name}"))
+        };
+        let ts: TimeUs = field("ts")?.parse()?;
+        let tenant: TenantId = field("tenant")?.parse()?;
+        match tag {
+            "RETIRE" => Ok(TenantEvent::retire(ts, tenant)),
+            "ADMIT" => {
+                let reserved: u64 = field("reserved_bytes")?.parse()?;
+                let multiplier: f64 = field("multiplier")?.parse()?;
+                let slo = field("slo")?;
+                let mut ev = TenantEvent::admit(ts, tenant)
+                    .with_reserved_bytes(reserved)
+                    .with_multiplier(multiplier);
+                if slo != "-" {
+                    ev = ev.with_slo_miss_ratio(slo.parse()?);
+                }
+                Ok(ev)
+            }
+            other => anyhow::bail!("line {i}: unknown event tag {other}"),
+        }
+    }
 }
 
 impl super::RequestSource for CsvReader {
     fn next_request(&mut self) -> Option<Request> {
+        // Request-only consumers skip the event lane, exactly as
+        // `TraceReader::next_request` does on a v3 binary file.
+        loop {
+            match super::RequestSource::next_item(self)? {
+                TraceItem::Request(r) => return Some(r),
+                TraceItem::Event(_) => continue,
+            }
+        }
+    }
+
+    fn next_item(&mut self) -> Option<TraceItem> {
         if self.error.is_some() {
             return None;
         }
@@ -614,11 +702,17 @@ impl super::RequestSource for CsvReader {
                 }
             };
             self.lineno += 1;
-            if line.trim().is_empty() {
+            let data = line.trim();
+            if data.is_empty() {
                 continue;
             }
-            match self.parse_line(&line) {
-                Ok(r) => return Some(r),
+            let item = if Self::is_event_line(data) {
+                self.parse_event(data).map(TraceItem::Event)
+            } else {
+                self.parse_line(&line).map(TraceItem::Request)
+            };
+            match item {
+                Ok(it) => return Some(it),
                 Err(e) => {
                     self.error = Some(e);
                     return None;
@@ -637,6 +731,19 @@ pub fn read_csv(path: impl AsRef<Path>) -> Result<Vec<Request>> {
     let mut out = Vec::new();
     while let Some(req) = r.next_request() {
         out.push(req);
+    }
+    r.check()?;
+    Ok(out)
+}
+
+/// Read a CSV trace into memory as items, tagged tenant-event rows
+/// included (the inverse of [`write_items_csv`]).
+pub fn read_items_csv(path: impl AsRef<Path>) -> Result<Vec<TraceItem>> {
+    use super::RequestSource;
+    let mut r = CsvReader::open(path)?;
+    let mut out = Vec::new();
+    while let Some(item) = r.next_item() {
+        out.push(item);
     }
     r.check()?;
     Ok(out)
@@ -785,6 +892,49 @@ mod tests {
         let hdr = dir.path().join("hdr.csv");
         std::fs::write(&hdr, "a,b,c\n1,2,3\n").unwrap();
         assert!(CsvReader::open(&hdr).is_err());
+    }
+
+    #[test]
+    fn csv_event_lane_round_trips_and_request_readers_skip_it() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let p = dir.path().join("churn.csv");
+        let items = vec![
+            TraceItem::Event(
+                TenantEvent::admit(0, 3)
+                    .with_reserved_bytes(1 << 20)
+                    .with_multiplier(4.5)
+                    .with_slo_miss_ratio(0.1),
+            ),
+            TraceItem::Request(Request::new(5, 7, 100).with_tenant(3)),
+            TraceItem::Event(TenantEvent::admit(6, 4)), // defaults, no SLO
+            TraceItem::Request(Request::new(9, 8, 200)),
+            TraceItem::Event(TenantEvent::retire(20, 3)),
+        ];
+        write_items_csv(&p, &items).unwrap();
+        assert_eq!(read_items_csv(&p).unwrap(), items);
+        // Request-only consumers (read_csv / next_request) skip events.
+        assert_eq!(
+            read_csv(&p).unwrap(),
+            vec![
+                Request::new(5, 7, 100).with_tenant(3),
+                Request::new(9, 8, 200),
+            ]
+        );
+        // FileSource picks the CSV lane by extension and streams items.
+        let mut src = super::super::FileSource::open(&p).unwrap();
+        let mut back = Vec::new();
+        while let Some(item) = src.next_item() {
+            back.push(item);
+        }
+        src.check().unwrap();
+        assert_eq!(back, items);
+
+        // Malformed event rows end the stream and check() reports them.
+        for bad_row in ["ADMIT,1,2,3,4", "RETIRE,1", "ADMIT,1,2,nope,1.0,-"] {
+            let bad = dir.path().join("bad.csv");
+            std::fs::write(&bad, format!("ts_us,obj,size,tenant\n{bad_row}\n")).unwrap();
+            assert!(read_items_csv(&bad).is_err(), "{bad_row} must fail");
+        }
     }
 
     #[test]

@@ -243,6 +243,28 @@ fn tenant_stats_fields_match_protocol_doc() {
 }
 
 #[test]
+fn bill_fields_match_protocol_doc() {
+    // Only a retired tenant has a close-out reconciliation: admit a
+    // guest, give it traffic, retire it, and close the epoch that
+    // finishes the drain.
+    let mut st = decided_state();
+    st.handle_line("ADMIT 5 multiplier=2.0");
+    st.handle_line("GET 5/k1 1000");
+    st.handle_line("GET 5/k2 1000");
+    st.handle_line("RETIRE 5");
+    st.handle_line("EPOCH");
+    let reply = st.handle_line("BILL 5").unwrap();
+    assert_eq!(
+        keys_of(&reply),
+        ["tenant", "at", "misses", "miss_dollars", "storage_dollars", "total_dollars"],
+        "{reply}"
+    );
+    // A tenant without a closed bill answers ERR, not fabricated JSON.
+    let live = st.handle_line("BILL 1").unwrap();
+    assert!(live.starts_with("ERR"), "{live}");
+}
+
+#[test]
 fn slo_fields_match_protocol_doc() {
     let mut st = decided_state();
     for t in ["SLO 1", "SLO 2"] {

@@ -1,0 +1,131 @@
+//! Integration tests for the concurrent server runtime ([`elastictl::srv`]):
+//! a trace replayed over 4 connections must leave the engine in exactly
+//! the state a single-connection replay leaves it in (the state thread
+//! serializes all engine access), and a kill + `--resume` cycle must
+//! reproduce the uninterrupted run's cumulative bills bit for bit.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::srv::{accept_loop, checkpoint, loadgen, spawn_state, Server};
+use elastictl::trace::Request;
+use elastictl::util::tempdir::tempdir;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+
+fn fixed_cfg() -> Config {
+    let mut cfg = Config::with_policy(PolicyKind::Fixed);
+    cfg.scaler.fixed_instances = 2;
+    cfg
+}
+
+/// Bind an ephemeral port, spawn the state thread (optionally resuming
+/// from `ckpt`) and the accept loop; return the address and the server.
+fn start(cfg: Config, ckpt: Option<PathBuf>) -> (String, Server) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = spawn_state(cfg, ckpt).unwrap();
+    let tx = server.tx.clone();
+    std::thread::spawn(move || {
+        let _ = accept_loop(listener, tx);
+    });
+    (addr, server)
+}
+
+/// One ad-hoc protocol round trip over TCP (for EPOCH / STATS).
+fn roundtrip(addr: &str, line: &str) -> String {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(format!("{line}\nQUIT\n").as_bytes()).unwrap();
+    let mut lines = BufReader::new(sock).lines();
+    lines.next().unwrap().unwrap()
+}
+
+/// Uniform-size single-tenant trace: FP miss-cost sums are then
+/// identical in every accumulation order, so cumulative totals compare
+/// bit for bit across connection counts.
+fn trace(objs: std::ops::Range<u64>, repeats: u64) -> Vec<Request> {
+    let mut reqs = Vec::new();
+    let mut ts = 0;
+    for _ in 0..repeats {
+        for obj in objs.clone() {
+            reqs.push(Request::new(ts, obj, 1000));
+            ts += 1000;
+        }
+    }
+    reqs
+}
+
+#[test]
+fn four_connections_equal_one_connection() {
+    let reqs = trace(0..50, 4); // 200 requests, 50 distinct objects
+
+    let (addr4, srv4) = start(fixed_cfg(), None);
+    let report = loadgen::run(&addr4, &reqs, 4).unwrap();
+    assert_eq!(report.connections, 4);
+    assert_eq!(report.requests, 200);
+    assert_eq!(report.hits, 150, "50 distinct objects -> 50 misses");
+    assert!(report.requests_per_sec() > 0.0);
+    assert!(report.p50_us <= report.p99_us);
+
+    let (addr1, srv1) = start(fixed_cfg(), None);
+    let single = loadgen::run(&addr1, &reqs, 1).unwrap();
+    assert_eq!(single.hits, report.hits);
+
+    // The full STATS line — requests, misses, spurious, miss_ratio,
+    // instances, cumulative miss dollars — must agree exactly.
+    let s4 = roundtrip(&addr4, "STATS");
+    let s1 = roundtrip(&addr1, "STATS");
+    assert!(s4.contains("\"requests\":200"), "{s4}");
+    assert_eq!(s4, s1, "concurrent replay must match single-connection state");
+    drop(srv4);
+    drop(srv1);
+}
+
+#[test]
+fn kill_and_resume_over_tcp_is_bit_identical() {
+    let dir = tempdir().unwrap();
+    let interrupted = dir.path().join("interrupted.ckpt");
+    let baseline = dir.path().join("baseline.ckpt");
+    // Disjoint fresh key ranges per segment: the resumed (cold-cache)
+    // server misses exactly like the uninterrupted one.
+    let seg1 = trace(0..40, 1);
+    let seg2 = trace(100..140, 1);
+
+    // Baseline: both segments through one server, same epoch boundaries
+    // the interrupted run will have.
+    let (addr_b, srv_b) = start(fixed_cfg(), Some(baseline.clone()));
+    loadgen::run(&addr_b, &seg1, 4).unwrap();
+    assert!(roundtrip(&addr_b, "EPOCH").starts_with("RESIZED"));
+    loadgen::run(&addr_b, &seg2, 4).unwrap();
+    assert!(roundtrip(&addr_b, "EPOCH").starts_with("RESIZED"));
+    drop(srv_b);
+
+    // Interrupted: segment 1 and one epoch, then the server is simply
+    // abandoned — every closed epoch is already fsync'd, so there is
+    // nothing graceful left to do (that is the point).
+    let (addr_1, srv_1) = start(fixed_cfg(), Some(interrupted.clone()));
+    loadgen::run(&addr_1, &seg1, 4).unwrap();
+    assert!(roundtrip(&addr_1, "EPOCH").starts_with("RESIZED"));
+    drop(srv_1);
+
+    // Resume from the checkpoint on a fresh port and finish.
+    let (addr_2, srv_2) = start(fixed_cfg(), Some(interrupted.clone()));
+    assert_eq!(srv_2.resumed_epochs, 1, "one closed epoch must be restored");
+    loadgen::run(&addr_2, &seg2, 4).unwrap();
+    assert!(roundtrip(&addr_2, "EPOCH").starts_with("RESIZED"));
+    drop(srv_2);
+
+    // The durable bills agree bit for bit (epoch timestamps are wall
+    // clock and legitimately differ; the money and counts must not).
+    let last = |p: &std::path::Path| checkpoint::read(p).unwrap().pop().unwrap();
+    let (a, b) = (last(&interrupted), last(&baseline));
+    assert_eq!((a.epoch, b.epoch), (2, 2));
+    assert_eq!(a.cum_miss_dollars, b.cum_miss_dollars, "bit-identical miss dollars");
+    assert_eq!(a.cum_storage_dollars, b.cum_storage_dollars, "bit-identical storage");
+    assert_eq!(a.ledgers, b.ledgers, "bit-identical per-tenant ledgers");
+    assert_eq!(a.costs.miss_count, b.costs.miss_count);
+    assert_eq!(
+        a.bills.iter().map(|x| (x.tenant, x.storage, x.miss)).collect::<Vec<_>>(),
+        b.bills.iter().map(|x| (x.tenant, x.storage, x.miss)).collect::<Vec<_>>(),
+        "bit-identical final-epoch bill rows"
+    );
+}

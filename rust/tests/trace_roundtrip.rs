@@ -1,10 +1,16 @@
 //! Property-style round-trip tests for trace IO: arbitrary request
 //! streams — including max-size, zero-timestamp and extreme-tenant edge
 //! cases — must survive `write_trace`/`read_trace` and
-//! `write_csv`/`read_csv` bit-for-bit, and legacy v1/tenant-less files
-//! must keep loading as tenant 0.
+//! `write_csv`/`read_csv` bit-for-bit, legacy v1/tenant-less files must
+//! keep loading as tenant 0, and arbitrary evented (v3) item streams
+//! must survive the tagged-row CSV lane
+//! (`write_items_csv`/`read_items_csv`) with request-only readers
+//! skipping the events.
 
-use elastictl::trace::{read_csv, read_trace, write_csv, write_trace, Request};
+use elastictl::trace::{
+    read_csv, read_items_csv, read_trace, write_csv, write_items_csv, write_trace, Request,
+    TenantEvent, TraceItem,
+};
 use elastictl::util::proptest::check;
 use elastictl::util::rng::Pcg;
 use elastictl::util::tempdir::tempdir;
@@ -65,6 +71,67 @@ fn prop_csv_round_trip_preserves_requests() {
         write_csv(&p, &reqs).unwrap();
         let back = read_csv(&p).unwrap();
         assert_eq!(back, reqs);
+    });
+}
+
+/// Draw an arbitrary tenant lifecycle event, biased toward field edges.
+fn arb_event(rng: &mut Pcg, ts: u64) -> TenantEvent {
+    let tenant = match rng.below(4) {
+        0 => 0,
+        1 => u16::MAX,
+        _ => rng.below(1 << 16) as u16,
+    };
+    if rng.below(3) == 0 {
+        return TenantEvent::retire(ts, tenant);
+    }
+    let reserved = match rng.below(4) {
+        0 => 0,
+        1 => u64::MAX,
+        _ => rng.next_u64(),
+    };
+    // Any finite f64 round-trips exactly through shortest-repr Display.
+    let multiplier = match rng.below(4) {
+        0 => 0.0,
+        1 => f64::MAX,
+        _ => rng.next_u64() as f64 / 1e9,
+    };
+    let mut ev = TenantEvent::admit(ts, tenant)
+        .with_reserved_bytes(reserved)
+        .with_multiplier(multiplier);
+    if rng.below(2) == 0 {
+        ev = ev.with_slo_miss_ratio(rng.below(1 << 20) as f64 / (1 << 20) as f64);
+    }
+    ev
+}
+
+#[test]
+fn prop_csv_event_lane_round_trips_items() {
+    check("trace_csv_event_lane", 0xE7A, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("churn.csv");
+        let len = rng.below_usize(200);
+        let mut ts = 0u64;
+        let items: Vec<TraceItem> = (0..len)
+            .map(|_| {
+                if rng.below(4) == 0 {
+                    let ets = rng.below(1 << 40);
+                    TraceItem::Event(arb_event(rng, ets))
+                } else {
+                    TraceItem::Request(arb_request(rng, &mut ts))
+                }
+            })
+            .collect();
+        write_items_csv(&p, &items).unwrap();
+        assert_eq!(read_items_csv(&p).unwrap(), items);
+        // A request-only reader of the same file sees just the requests.
+        let reqs: Vec<Request> = items
+            .iter()
+            .filter_map(|i| match i {
+                TraceItem::Request(r) => Some(*r),
+                TraceItem::Event(_) => None,
+            })
+            .collect();
+        assert_eq!(read_csv(&p).unwrap(), reqs);
     });
 }
 

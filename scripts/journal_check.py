@@ -1,14 +1,19 @@
 #!/usr/bin/env python3
-"""Invariant pass over an epoch decision journal (JSONL).
+"""Invariant pass over an epoch decision journal (JSONL) or a server
+billing checkpoint (`srv::checkpoint` length-prefixed JSONL).
 
-Usage: journal_check.py <journal.jsonl> [more.jsonl ...]
+Usage: journal_check.py <journal.jsonl|server.ckpt> [more ...]
 
-Each line is one `EpochDecisionRecord` as written by `engine::run` when
+The file kind is auto-detected per file: a line shaped
+`<byte-length> {json}` is a checkpoint record (the format `elastictl
+serve --checkpoint` appends, fsync'd per closed epoch); anything else is
+one `EpochDecisionRecord` as written by `engine::run` when
 `[telemetry] journal_path` is set (see docs/OBSERVABILITY.md for the
-schema). The nightly soak runs this over the fig14-obs journal; any
-violation exits 1 so the soak surfaces engine bugs, not just slow drifts.
+schema). The nightly soak runs this over the fig14-obs journal and over
+the kill/resume serve soak's checkpoint; any violation exits 1 so the
+soaks surface engine bugs, not just slow drifts.
 
-Checked per record:
+Checked per decision record:
   * arbiter bound:   Σ granted_bytes over tenants ≤ capacity_bytes
   * grant split:     reserved_bytes + pooled_bytes == granted_bytes
                      (whenever the grant covers the reservation)
@@ -23,6 +28,19 @@ bounded ring never evicted):
                      the reconciled total equals the sum of its per-epoch
                      bills (delta ≈ 0) — retirement must bill exactly
                      what the epochs billed.
+
+Checked on a checkpoint file:
+  * framing:         each length prefix matches its record's byte length
+                     (a torn final record — a mid-write kill — is
+                     tolerated and reported, mirroring the Rust reader;
+                     torn or malformed *interior* records are errors)
+  * continuity:      epoch numbers are contiguous ascending
+  * attribution:     Σ per-tenant bill rows ≈ the epoch's storage / miss
+                     dollars
+  * cumulative fold: the running sums of the per-epoch dollars ≈ the
+                     record's cum_* fields (files starting at epoch 1)
+  * ledger closure:  Σ per-tenant ledgers ≈ the cumulative totals, and
+                     every reconciliation's total equals its parts
 """
 
 import json
@@ -33,6 +51,102 @@ def approx(a: float, b: float, rel: float = 1e-3, abs_tol: float = 1e-9) -> bool
     return abs(a - b) <= max(abs_tol, rel * max(abs(a), abs(b)))
 
 
+def looks_like_checkpoint(line: str) -> bool:
+    """`<decimal length> {json}` — the srv::checkpoint framing."""
+    head, _, rest = line.partition(" ")
+    return head.isdigit() and rest.startswith("{")
+
+
+def check_checkpoint_file(path: str, lines: list[tuple[int, str]]) -> int:
+    violations = 0
+
+    def bad(msg: str) -> None:
+        nonlocal violations
+        violations += 1
+        print(f"::error title=checkpoint invariant::{path}: {msg}")
+
+    records = []
+    for i, (lineno, line) in enumerate(lines):
+        last = i + 1 == len(lines)
+        head, _, body = line.partition(" ")
+        torn = None
+        if not looks_like_checkpoint(line):
+            torn = "not a length-prefixed record"
+        elif int(head) != len(body.encode()):
+            torn = f"length prefix {head} != {len(body.encode())} payload bytes"
+        else:
+            try:
+                records.append(json.loads(body))
+            except json.JSONDecodeError as e:
+                torn = f"not valid JSON ({e})"
+        if torn is not None:
+            # A torn *final* record is a mid-write kill: dropped without
+            # error, exactly as the Rust reader replays the file.
+            if last:
+                print(f"{path}: line {lineno}: torn tail dropped ({torn})")
+            else:
+                bad(f"line {lineno}: {torn}")
+    if not records:
+        bad("no intact records (checkpoint empty or unreadable)")
+        return violations
+
+    first_epoch = records[0].get("epoch")
+    if not isinstance(first_epoch, int):
+        bad(f"first record carries no epoch number: {records[0]}")
+        return violations
+    cum_storage = 0.0
+    cum_miss = 0.0
+    for i, rec in enumerate(records):
+        epoch = rec.get("epoch", "?")
+        if rec.get("v") != 1:
+            bad(f"epoch {epoch}: unknown checkpoint version {rec.get('v')}")
+        if epoch != first_epoch + i:
+            bad(f"record {i}: epoch {epoch}, want contiguous {first_epoch + i}")
+        bills = rec.get("bills", [])
+        if bills:
+            for field, total in [("storage", rec["storage_dollars"]), ("miss", rec["miss_dollars"])]:
+                s = sum(b[field] for b in bills)
+                if not approx(s, total):
+                    bad(
+                        f"epoch {epoch}: Σ bill {field} {s:.9f} != epoch "
+                        f"{field} dollars {total:.9f}"
+                    )
+        for r in rec.get("reconciliations", []):
+            if not approx(r["total_dollars"], r["miss_dollars"] + r["storage_dollars"]):
+                bad(
+                    f"epoch {epoch} tenant {r['tenant']}: reconciliation total "
+                    f"{r['total_dollars']:.9f} != miss + storage parts"
+                )
+        cum_storage += rec["storage_dollars"]
+        cum_miss += rec["miss_dollars"]
+        if first_epoch == 1:
+            if not approx(cum_storage, rec["cum_storage_dollars"]):
+                bad(
+                    f"epoch {epoch}: cum_storage_dollars {rec['cum_storage_dollars']:.9f} "
+                    f"!= running fold {cum_storage:.9f}"
+                )
+            if not approx(cum_miss, rec["cum_miss_dollars"]):
+                bad(
+                    f"epoch {epoch}: cum_miss_dollars {rec['cum_miss_dollars']:.9f} "
+                    f"!= running fold {cum_miss:.9f}"
+                )
+
+    last = records[-1]
+    ledgers = last.get("ledgers", [])
+    if first_epoch == 1 and ledgers:
+        for field, cum in [("storage_dollars", "cum_storage_dollars"),
+                           ("miss_dollars", "cum_miss_dollars")]:
+            s = sum(led[field] for led in ledgers)
+            if not approx(s, last[cum]):
+                bad(f"Σ ledger {field} {s:.9f} != {cum} {last[cum]:.9f}")
+    elif first_epoch != 1:
+        print(f"{path}: starts at epoch {first_epoch} — skipping cumulative cross-checks")
+
+    if violations == 0:
+        print(f"{path}: {len(records)} checkpoint records, all invariants hold")
+    return violations
+
+
 def check_file(path: str) -> int:
     violations = 0
 
@@ -41,16 +155,21 @@ def check_file(path: str) -> int:
         violations += 1
         print(f"::error title=journal invariant::{path}: {msg}")
 
-    records = []
+    lines = []
     with open(path) as f:
         for lineno, line in enumerate(f, 1):
             line = line.strip()
-            if not line:
-                continue
-            try:
-                records.append(json.loads(line))
-            except json.JSONDecodeError as e:
-                bad(f"line {lineno}: not valid JSON ({e})")
+            if line:
+                lines.append((lineno, line))
+    if lines and looks_like_checkpoint(lines[0][1]):
+        return check_checkpoint_file(path, lines)
+
+    records = []
+    for lineno, line in lines:
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            bad(f"line {lineno}: not valid JSON ({e})")
     if not records:
         bad("no records (journal empty or unreadable)")
         return violations
