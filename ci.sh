@@ -3,7 +3,9 @@
 #
 # Usage: ./ci.sh            (from anywhere; operates on the repo checkout)
 # Env:   ELASTICTL_PROPTEST_CASES / ELASTICTL_BENCH_QUICK are honored by
-#        the test suite; CI keeps their defaults.
+#        the test suite; CI keeps their defaults. ELASTICTL_TEST_SHARDS=N
+#        narrows the sharded parity/property suites to one shard width
+#        (the CI shards matrix leg runs the whole gate at 4).
 #
 # Reproducibility: every cargo invocation runs --locked against
 # Cargo.lock so CI cannot silently drift to a newer dependency
@@ -35,6 +37,18 @@ elif ! cargo metadata --locked --format-version 1 >/dev/null 2>&1; then
     LOCKED=""
 fi
 
+# The fmt and clippy gates need their rustup components; probe up front
+# so a missing one fails with an actionable message instead of a cryptic
+# "no such command" half-way through the gate.
+cargo fmt --version >/dev/null 2>&1 || {
+    echo "ci: cargo fmt is unavailable (run 'rustup component add rustfmt')" >&2
+    exit 1
+}
+cargo clippy --version >/dev/null 2>&1 || {
+    echo "ci: cargo clippy is unavailable (run 'rustup component add clippy')" >&2
+    exit 1
+}
+
 echo "==> cargo fmt --check"
 cargo fmt --all --check || {
     echo "ci: formatting drift detected (run 'cargo fmt --all')" >&2
@@ -47,7 +61,7 @@ cargo clippy $LOCKED --all-targets -- -D warnings
 echo "==> cargo build --release ${LOCKED:-unlocked}"
 cargo build $LOCKED --release
 
-echo "==> cargo test -q ${LOCKED:-unlocked}"
+echo "==> cargo test -q ${LOCKED:-unlocked}${ELASTICTL_TEST_SHARDS:+ (shards=$ELASTICTL_TEST_SHARDS)}"
 cargo test $LOCKED -q
 
 echo "==> cargo doc --no-deps (-D warnings, ${LOCKED:-unlocked})"

@@ -3,7 +3,7 @@
 //! set, so future PRs can track the speed of the unified request path.
 
 use elastictl::config::{Config, PolicyKind};
-use elastictl::engine::EngineBuilder;
+use elastictl::engine::{EngineBuilder, ShardedEngine};
 use elastictl::trace::{SynthConfig, SynthGenerator};
 use elastictl::util::bench::{black_box, Bencher};
 use elastictl::MINUTE;
@@ -101,6 +101,34 @@ fn main() {
         }
         black_box(engine.finish());
     });
+
+    // Multicore scaling: the same trace through the sharded engine at
+    // one and eight shards. The single-shard row prices the channel +
+    // batching overhead of the sharded front; the eight-shard row is the
+    // multicore throughput the CI gate tracks (baseline.json "scaling"
+    // enforces a minimum 8-vs-1 ratio on runners with >= 8 cores).
+    let mut cfg = Config::with_policy(PolicyKind::Ttl);
+    cfg.cost.instance.ram_bytes = 40_000_000;
+    cfg.cost.instance.dollars_per_hour = 0.017 * 40.0e6 / 555.0e6;
+    cfg.cost.epoch_us = 10 * MINUTE;
+    let mut tputs = Vec::new();
+    for shards in [1u32, 8] {
+        cfg.engine.shards = shards;
+        let mut last_processed = 0u64;
+        let tput = b
+            .bench(&format!("offer_sharded_{shards}"), trace.len() as u64, || {
+                let mut engine = ShardedEngine::new(&cfg).expect("the ttl policy shards");
+                for r in &trace {
+                    engine.offer(r);
+                }
+                last_processed = engine.processed();
+                black_box(engine.finish());
+            })
+            .throughput_per_sec();
+        assert_eq!(last_processed, trace.len() as u64);
+        tputs.push(tput);
+    }
+    println!("# sharded scaling 8-vs-1: {:.2}x", tputs[1] / tputs[0]);
 
     b.finish();
 }

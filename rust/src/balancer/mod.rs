@@ -17,7 +17,7 @@
 
 use crate::cluster::{Cluster, ClusterTelemetry};
 use crate::config::Config;
-use crate::cost::CostTracker;
+use crate::cost::MissAccountant;
 use crate::metrics::HitMiss;
 use crate::scaler::EpochSizer;
 use crate::telemetry::{Counter, TelemetryRegistry, Timer};
@@ -150,7 +150,11 @@ impl Balancer {
     /// policy, run its shadow update (which doubles as the admission
     /// verdict under grant enforcement), route via the placement policy
     /// on `(tenant, key)`, serve, account, feed the physical outcome back.
-    pub fn handle(&mut self, req: &Request, costs: &mut CostTracker) -> Served {
+    ///
+    /// Generic over the miss-billing sink: the monolithic engine passes
+    /// its [`crate::cost::CostTracker`]; shard workers pass a local
+    /// coalescing ledger merged exactly at the epoch barrier.
+    pub fn handle<M: MissAccountant>(&mut self, req: &Request, costs: &mut M) -> Served {
         self.requests += 1;
         // Sampled serve-latency clock: with telemetry off (or off-stride)
         // no clock is read and no handle is touched.
@@ -245,6 +249,16 @@ impl Balancer {
             None => self.sizer.decide(now),
         };
         self.cluster.resize(target);
+        self.apply_enforcement();
+        self.drain_retiring(now);
+        self.cluster.len() as u32
+    }
+
+    /// Post-resize placement maintenance, shared by [`Self::end_epoch`]
+    /// and the sharded barrier ([`Self::finish_epoch_shard`]): re-pin /
+    /// re-partition from the policy's fresh grants, then shed tenants
+    /// past their binding occupancy caps.
+    fn apply_enforcement(&mut self) {
         if let Some(rows) = self.sizer.enforcement() {
             let grants: Vec<crate::placement::TenantGrant> = rows
                 .iter()
@@ -286,6 +300,36 @@ impl Balancer {
                 None => shed(&mut self.cluster, &mut self.last_epoch_shed),
             }
         }
+    }
+
+    /// Shard-side first half of the epoch barrier, mirroring the opening
+    /// of [`Self::end_epoch`] exactly (shed log cleared, expired entries
+    /// reaped) but *reporting* the policy's per-tenant demand rows
+    /// instead of deciding locally — the front merges every shard's rows
+    /// into the one arbiter decision. `None` means the policy cannot
+    /// shard (no demand-row representation); the engine falls back to a
+    /// single engine in that case.
+    pub fn begin_epoch_shard(&mut self, now: TimeUs) -> Option<Vec<crate::tenant::TenantDemand>> {
+        self.last_epoch_shed.clear();
+        self.cluster.expire_sweep();
+        self.sizer.shard_demands(now)
+    }
+
+    /// Shard-side second half of the epoch barrier: apply the front's
+    /// split of its single decision — this shard's slice of the grants,
+    /// then the cluster resize to this shard's slice of the instance
+    /// target — and run the same placement maintenance + retirement
+    /// drain [`Self::end_epoch`] runs, in the same order. Returns the
+    /// shard cluster's new size.
+    pub fn finish_epoch_shard(
+        &mut self,
+        now: TimeUs,
+        target: u32,
+        allocs: &[crate::tenant::TenantAllocation],
+    ) -> u32 {
+        self.sizer.shard_apply_grants(allocs);
+        self.cluster.resize(target);
+        self.apply_enforcement();
         self.drain_retiring(now);
         self.cluster.len() as u32
     }

@@ -353,6 +353,23 @@ impl Default for ServeConfig {
     }
 }
 
+/// Execution-shape parameters (`[engine]` in TOML). `shards = 1` (the
+/// default) runs the classic single-threaded engine, bit-identical to
+/// every seed loop pinned by `engine_parity`; `shards = N` partitions the
+/// request path across N worker threads keyed by `hash(tenant, key) % N`,
+/// synchronized only at the epoch barrier (see `engine::ShardedEngine`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Number of shard workers the request path is partitioned across.
+    pub shards: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { shards: 1 }
+    }
+}
+
 /// Top-level experiment / run configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -364,6 +381,8 @@ pub struct Config {
     pub telemetry: TelemetryConfig,
     /// Server-runtime knobs (`[serve]`); everything off by default.
     pub serve: ServeConfig,
+    /// Execution shape (`[engine]`); one shard by default.
+    pub engine: EngineConfig,
     /// Tenant roster for the multi-tenant policy. Empty = single-tenant
     /// mode (every request is tenant 0 with multiplier 1.0). In TOML this
     /// is a `[tenant0]` / `[tenant1]` / … section per tenant, each with
@@ -505,6 +524,15 @@ impl Config {
         }
         if let Some(v) = doc.get_str("serve.checkpoint_path") {
             cfg.serve.checkpoint_path = Some(v.to_string());
+        }
+
+        // [engine]
+        if let Some(v) = doc.get_u32("engine.shards") {
+            anyhow::ensure!(
+                (1..=256).contains(&v),
+                "engine.shards must lie in 1..=256 (got {v})"
+            );
+            cfg.engine.shards = v;
         }
 
         // [tenant0], [tenant1], … — one section per tenant. Sections are
@@ -656,6 +684,8 @@ impl Config {
         if let Some(p) = &self.serve.checkpoint_path {
             doc.set("serve.checkpoint_path", Value::Str(p.clone()));
         }
+
+        doc.set("engine.shards", Value::Int(self.engine.shards as i64));
 
         for (i, t) in self.tenants.iter().enumerate() {
             doc.set(&format!("tenant{i}.id"), Value::Int(t.id as i64));
@@ -885,6 +915,23 @@ mod tests {
 
         // A negative or non-finite expiry TTL is rejected loudly.
         assert!(Config::from_toml("[serve]\nttl_expiry_secs = -1.0\n").is_err());
+    }
+
+    #[test]
+    fn engine_section_round_trips_and_validates() {
+        // One shard by default — the bit-identical classic path.
+        let cfg = Config::from_toml("").unwrap();
+        assert_eq!(cfg.engine, EngineConfig::default());
+        assert_eq!(cfg.engine.shards, 1);
+
+        let mut cfg = Config::default();
+        cfg.engine.shards = 8;
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.engine, cfg.engine);
+
+        // Out-of-range shard counts are rejected loudly.
+        assert!(Config::from_toml("[engine]\nshards = 0\n").is_err());
+        assert!(Config::from_toml("[engine]\nshards = 257\n").is_err());
     }
 
     #[test]

@@ -209,6 +209,29 @@ impl CostTracker {
         self.epoch_tenant_miss[i] += m;
     }
 
+    /// Replay a coalesced run of `count` identical miss charges of
+    /// `dollars` each for tenant `t` — the shard-merge path
+    /// (`engine::ShardedEngine`) folds per-shard miss ledgers back into
+    /// the front tracker with this. The fold is performed addend by
+    /// addend, in the same `+=` order the monolithic engine would have
+    /// used, so a run replay is bit-identical to `count` calls of
+    /// [`Self::record_miss_for`] with the same per-miss dollars.
+    pub fn record_miss_dollars_run(&mut self, t: TenantId, dollars: f64, count: u64) {
+        let i = t as usize;
+        if self.tenant_ledgers.len() <= i {
+            self.tenant_ledgers.resize(i + 1, TenantLedger::default());
+        }
+        if self.epoch_tenant_miss.len() <= i {
+            self.epoch_tenant_miss.resize(i + 1, 0.0);
+        }
+        self.epoch_miss_count += count;
+        self.tenant_ledgers[i].misses += count;
+        for _ in 0..count {
+            self.epoch_miss += dollars;
+            self.epoch_tenant_miss[i] += dollars;
+        }
+    }
+
     /// Record an arbitrary storage charge (used by the ideal TTL cache,
     /// billed on instantaneous occupancy rather than per instance).
     #[inline]
@@ -415,6 +438,23 @@ impl CostTracker {
 
     pub fn epochs(&self) -> u64 {
         self.epochs
+    }
+}
+
+/// The miss-billing sink the balancer charges on every physical miss.
+/// The monolithic engine hands the balancer the [`CostTracker`] itself;
+/// a shard worker hands it a local ledger that coalesces misses into
+/// `(tenant, dollars, count)` runs for exact replay at the epoch barrier
+/// (`engine::ShardedEngine`).
+pub trait MissAccountant {
+    /// Charge tenant `t` for one miss of an object of `size_bytes`.
+    fn record_miss_for(&mut self, t: TenantId, size_bytes: u64);
+}
+
+impl MissAccountant for CostTracker {
+    #[inline]
+    fn record_miss_for(&mut self, t: TenantId, size_bytes: u64) {
+        CostTracker::record_miss_for(self, t, size_bytes);
     }
 }
 

@@ -28,8 +28,12 @@
 
 mod policy;
 mod probe;
+mod shard;
 
 pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
+pub use shard::{
+    shard_of, split_even, split_proportional, GetOutcome, ShardRouter, ShardStats, ShardedEngine,
+};
 pub use probe::{
     BalanceProbe, JournalProbe, LifecycleProbe, LifecycleSample, PlacementProbe,
     PlacementSample, Probe, ProbeCtx, ShadowProbe, SloProbe, SloSample, TenantProbe, TtlProbe,
@@ -967,6 +971,14 @@ impl Engine {
 /// policy that does not arbitrate tenants are skipped (the request lane
 /// still replays in full).
 pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> RunReport {
+    if cfg.engine.shards > 1 {
+        match ShardedEngine::new(cfg) {
+            Ok(engine) => return run_sharded(cfg, engine, source),
+            Err(e) => {
+                eprintln!("engine: falling back to a single shard: {e}");
+            }
+        }
+    }
     let mut engine = EngineBuilder::new(cfg).build();
     while let Some(item) = source.next_item() {
         match item {
@@ -1007,6 +1019,40 @@ pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> RunReport {
         }
     }
     report
+}
+
+/// The sharded twin of the [`run`] drain loop (`[engine] shards > 1`):
+/// same item stream, same lifecycle-event skip semantics, with the hot
+/// path fanned across the shard workers. Probe-derived report sections
+/// (ttl/shadow series, balance, per-tenant summaries) stay empty — the
+/// counters, epochs, bills and totals are complete, and the
+/// `sharded_parity` test pins them against the single-shard run.
+fn run_sharded(
+    cfg: &Config,
+    mut engine: ShardedEngine,
+    source: &mut dyn RequestSource,
+) -> RunReport {
+    if cfg.telemetry.enabled {
+        eprintln!(
+            "engine: telemetry registry/journal are not collected with [engine] shards > 1"
+        );
+    }
+    while let Some(item) = source.next_item() {
+        match item {
+            TraceItem::Request(req) => {
+                engine.offer(&req);
+            }
+            TraceItem::Event(ev) => {
+                if let Err(e) = engine.apply_event(&ev) {
+                    eprintln!(
+                        "engine: skipped lifecycle event for tenant {} at t={}: {e}",
+                        ev.tenant, ev.ts
+                    );
+                }
+            }
+        }
+    }
+    engine.finish()
 }
 
 #[cfg(test)]

@@ -1,0 +1,1047 @@
+//! Multicore execution: the hot path partitioned across N shard workers,
+//! synchronized only at the epoch barrier.
+//!
+//! The paper's implementation constraint is O(1) work per request
+//! independent of cache size (§5.2); the epoch is the only global
+//! synchronization point the algorithms need — Memshare-style arbitration
+//! and billing both happen at boundaries. [`ShardedEngine`] exploits
+//! exactly that: requests route to `hash(tenant, key) % N` workers
+//! ([`shard_of`]), each owning a disjoint slice of cluster instances,
+//! placement state and per-tenant shadow/controller state, and the
+//! workers communicate with the front only through per-shard FIFO
+//! channels. At each epoch boundary the front runs a deterministic
+//! barrier:
+//!
+//! 1. **Collect** — per-shard resident-byte ledgers and coalesced
+//!    `(tenant, dollars, count)` miss runs, folded into the front
+//!    [`CostTracker`] in fixed shard order (0..N) via
+//!    [`CostTracker::record_miss_dollars_run`], so the per-tenant bills
+//!    fold exactly as the monolithic engine's would.
+//! 2. **Bill** — one `end_epoch_attributed` call at the size that was
+//!    active, on the merged residents.
+//! 3. **Prepare** — per-shard epoch-stat reset + boundary shadow
+//!    maintenance, reporting [`TenantDemand`] rows upward
+//!    ([`crate::balancer::Balancer::begin_epoch_shard`]).
+//! 4. **Decide** — the rows merge (demand summed, reservation and weight
+//!    taken once, first-seen order scanning shards 0..N) into the single
+//!    existing arbiter decision.
+//! 5. **Apply** — the target instance count and the per-tenant grants
+//!    split back out ([`split_even`], grants proportional to per-shard
+//!    demand) and every shard resizes, re-pins and sheds
+//!    ([`crate::balancer::Balancer::finish_epoch_shard`]).
+//! 6. **Reconcile** — a retiring tenant's bill closes once *every* shard
+//!    has drained its slice.
+//!
+//! With `shards = 1` the classic [`super::Engine`] runs instead (the
+//! seed loops stay bit-identical; `engine_parity` pins them); the
+//! `sharded_parity` integration test proves `shards = N` reproduces the
+//! `shards = 1` epoch rows, grants, bills and totals bit-for-bit.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::balancer::Balancer;
+use crate::cluster::BalanceTracker;
+use crate::config::{Config, CostConfig, PolicyKind};
+use crate::cost::{
+    CostTracker, EpochCosts, MissAccountant, TenantEpochBill, TenantLedger, TenantReconciliation,
+};
+use crate::metrics::TimeSeries;
+use crate::tenant::{
+    scoped_object, AdmitOutcome, Arbiter, TenantAllocation, TenantDemand, TenantSpec,
+};
+use crate::trace::{Request, TenantEvent, TenantEventKind};
+use crate::{mix64, ObjectId, Result, TenantId, TimeUs};
+
+use super::{build_policy, build_sizer, RunReport};
+
+/// Requests buffered per shard before a channel send (amortizes the
+/// per-message cost on the trace-replay path; flushed at every barrier,
+/// lifecycle or stats round-trip).
+const BATCH: usize = 512;
+
+/// Deterministic shard routing: `hash(tenant, key) % shards`. Uses the
+/// same tenant-scoped key the balancer routes on, so a `(tenant, key)`
+/// pair maps to exactly one shard and each tenant's key space partitions
+/// cleanly across all of them.
+#[inline]
+pub fn shard_of(tenant: TenantId, obj: ObjectId, shards: u32) -> usize {
+    (mix64(scoped_object(tenant, obj)) % shards.max(1) as u64) as usize
+}
+
+/// Per-shard miss-billing sink: prices each miss exactly as the front
+/// tracker would ([`CostTracker::record_miss_for`]'s
+/// `miss_cost(size) × weight`) and coalesces consecutive identical
+/// charges into `(tenant, dollars, count)` runs. The front replays the
+/// runs addend by addend at the barrier, so the fold is bit-identical to
+/// the monolithic engine charging the same misses in the same per-shard
+/// order.
+struct ShardMissLedger {
+    cfg: CostConfig,
+    weights: Vec<f64>,
+    runs: Vec<(TenantId, f64, u64)>,
+}
+
+impl ShardMissLedger {
+    fn new(cfg: CostConfig, tenants: &[TenantSpec]) -> Self {
+        let mut ledger = ShardMissLedger { cfg, weights: Vec::new(), runs: Vec::new() };
+        for spec in tenants {
+            ledger.set_weight(spec.id, spec.miss_cost_multiplier);
+        }
+        ledger
+    }
+
+    fn set_weight(&mut self, t: TenantId, weight: f64) {
+        let i = t as usize;
+        if self.weights.len() <= i {
+            self.weights.resize(i + 1, 1.0);
+        }
+        self.weights[i] = weight;
+    }
+
+    fn weight(&self, t: TenantId) -> f64 {
+        self.weights.get(t as usize).copied().unwrap_or(1.0)
+    }
+
+    /// Drain the coalesced runs accumulated since the last barrier.
+    fn take_runs(&mut self) -> Vec<(TenantId, f64, u64)> {
+        std::mem::take(&mut self.runs)
+    }
+}
+
+impl MissAccountant for ShardMissLedger {
+    fn record_miss_for(&mut self, t: TenantId, size_bytes: u64) {
+        let m = self.cfg.miss_cost(size_bytes) * self.weight(t);
+        match self.runs.last_mut() {
+            Some((lt, ld, count)) if *lt == t && ld.to_bits() == m.to_bits() => *count += 1,
+            _ => self.runs.push((t, m, 1)),
+        }
+    }
+}
+
+/// Synchronous outcome of a routed GET (the server's connection threads
+/// read this off a [`ShardRouter`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GetOutcome {
+    /// The request hit physically on the owning shard.
+    pub hit: bool,
+    /// §5.2 spurious miss (resident elsewhere on the shard's slice).
+    pub spurious: bool,
+}
+
+/// One shard's counters and ledgers, snapshotted on demand (the server's
+/// STATS surface and the shard-partition property tests).
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Requests this shard served.
+    pub requests: u64,
+    /// Physical misses among them.
+    pub misses: u64,
+    /// §5.2 spurious misses.
+    pub spurious_misses: u64,
+    /// Inserts suppressed by binding occupancy caps.
+    pub denied_admissions: u64,
+    /// Policy work units performed.
+    pub work_units: u64,
+    /// Instances this shard currently owns.
+    pub instances: u32,
+    /// Resident bytes across this shard's instances.
+    pub used_bytes: u64,
+    /// Per-tenant resident bytes on this shard (id ascending).
+    pub tenant_residents: Vec<(TenantId, u64)>,
+    /// Per-tenant request totals, indexed by tenant id.
+    pub tenant_totals: Vec<u64>,
+    /// ADMIT lifecycle messages this shard received.
+    pub admit_events: u64,
+    /// RETIRE lifecycle messages this shard received.
+    pub retire_events: u64,
+}
+
+/// Pre-billing barrier snapshot from one shard.
+struct ShardCollect {
+    residents: Vec<(TenantId, u64)>,
+    miss_runs: Vec<(TenantId, f64, u64)>,
+}
+
+/// Post-apply barrier reply from one shard.
+struct ShardApplied {
+    retired: Vec<TenantId>,
+}
+
+/// Final-drain reply from one shard ([`ShardedEngine::finish`]).
+struct ShardFinish {
+    residents: Vec<(TenantId, u64)>,
+    miss_runs: Vec<(TenantId, f64, u64)>,
+    retired: Vec<TenantId>,
+    requests: u64,
+    misses: u64,
+    spurious_misses: u64,
+    work_units: u64,
+}
+
+/// The shard worker protocol. Every variant travels the shard's FIFO
+/// channel, so ordering against buffered request batches is total.
+enum ToShard {
+    /// Fire-and-forget request batch (trace replay).
+    Batch(Vec<Request>),
+    /// One synchronous request (the server's GET path).
+    Get(Request, Sender<GetOutcome>),
+    /// Barrier step 1: residents + miss runs for the closing epoch.
+    Collect(Sender<ShardCollect>),
+    /// Barrier step 3: reset epoch stats, run boundary shadow
+    /// maintenance, report demand rows (`None` = policy cannot shard).
+    Prepare(TimeUs, Sender<Option<Vec<TenantDemand>>>),
+    /// Barrier step 5: this shard's slice of the decision.
+    Apply {
+        now: TimeUs,
+        target: u32,
+        allocs: Vec<TenantAllocation>,
+        reply: Sender<ShardApplied>,
+    },
+    /// Admit (or update) a tenant on this shard.
+    Admit(TenantSpec, TimeUs, Sender<Result<AdmitOutcome>>),
+    /// Begin retiring a tenant on this shard.
+    Retire(TenantId, TimeUs, Sender<Result<()>>),
+    /// Final partial-epoch snapshot + drain ([`ShardedEngine::finish`]).
+    Finish(TimeUs, Sender<ShardFinish>),
+    /// Checkpoint restore: adopt this shard's slice of the restored size.
+    Resize(u32),
+    /// Counter/ledger snapshot.
+    Stats(Sender<ShardStats>),
+    /// Exit the worker loop even while [`ShardRouter`] clones (server
+    /// connection threads) still hold senders.
+    Shutdown,
+}
+
+/// The worker body: owns one balancer (cluster slice + placement +
+/// policy state) built on-thread from the shared config, and drains its
+/// channel until the front drops the sender.
+fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
+    let mut b = Balancer::from_config(&cfg, build_sizer(&cfg), initial);
+    if cfg.serve.ttl_expiry_secs > 0.0 {
+        b.cluster.enable_ttl_expiry(std::time::Duration::from_secs_f64(cfg.serve.ttl_expiry_secs));
+    }
+    let mut ledger = ShardMissLedger::new(cfg.cost.clone(), &cfg.tenants);
+    let mut admit_events = 0u64;
+    let mut retire_events = 0u64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToShard::Batch(reqs) => {
+                for req in &reqs {
+                    b.handle(req, &mut ledger);
+                }
+            }
+            ToShard::Get(req, reply) => {
+                let served = b.handle(&req, &mut ledger);
+                let _ = reply.send(GetOutcome { hit: served.hit, spurious: served.spurious });
+            }
+            ToShard::Collect(reply) => {
+                let _ = reply.send(ShardCollect {
+                    residents: b.cluster.tenant_residents(),
+                    miss_runs: ledger.take_runs(),
+                });
+            }
+            ToShard::Prepare(now, reply) => {
+                b.cluster.reset_epoch_stats();
+                let _ = reply.send(b.begin_epoch_shard(now));
+            }
+            ToShard::Apply { now, target, allocs, reply } => {
+                b.finish_epoch_shard(now, target, &allocs);
+                let _ = reply.send(ShardApplied { retired: b.take_retired() });
+            }
+            ToShard::Admit(spec, now, reply) => {
+                admit_events += 1;
+                let id = spec.id;
+                let weight = spec.miss_cost_multiplier;
+                let out = b.admit_tenant(spec, now);
+                if out.is_ok() {
+                    ledger.set_weight(id, weight);
+                }
+                let _ = reply.send(out);
+            }
+            ToShard::Retire(tenant, now, reply) => {
+                retire_events += 1;
+                let _ = reply.send(b.retire_tenant(tenant, now));
+            }
+            ToShard::Finish(t_bill, reply) => {
+                // Snapshot residents and runs *before* the final drain:
+                // the front bills the final partial epoch on the
+                // occupancy it actually had, exactly as the monolithic
+                // engine does.
+                let residents = b.cluster.tenant_residents();
+                let miss_runs = ledger.take_runs();
+                b.drain_retiring(t_bill);
+                let _ = reply.send(ShardFinish {
+                    residents,
+                    miss_runs,
+                    retired: b.take_retired(),
+                    requests: b.requests,
+                    misses: b.misses,
+                    spurious_misses: b.spurious_misses,
+                    work_units: b.work_units,
+                });
+            }
+            ToShard::Resize(n) => {
+                b.cluster.resize(n);
+            }
+            ToShard::Stats(reply) => {
+                let _ = reply.send(ShardStats {
+                    requests: b.requests,
+                    misses: b.misses,
+                    spurious_misses: b.spurious_misses,
+                    denied_admissions: b.denied_admissions,
+                    work_units: b.work_units,
+                    instances: b.cluster.len() as u32,
+                    used_bytes: b.cluster.used(),
+                    tenant_residents: b.cluster.tenant_residents(),
+                    tenant_totals: b.tenant_stats().iter().map(|hm| hm.total()).collect(),
+                    admit_events,
+                    retire_events,
+                });
+            }
+            ToShard::Shutdown => break,
+        }
+    }
+}
+
+/// The front's epoch-end decider: the one place the merged demand rows
+/// become a cluster size + grants. `Fixed` pins the size statically
+/// (mirroring [`crate::scaler::FixedSizer`]); the arbiter reproduces
+/// the monolithic `ttl`/`tenant_ttl` decision exactly — same
+/// `clamp(round(Σdemand / S_p))`, same weighted grant phases.
+enum FrontDecider {
+    Fixed(u32),
+    Arbiter(Arbiter),
+}
+
+/// Cloneable per-connection handle: routes one request straight to its
+/// owning shard worker, bypassing the front entirely (the server's GET
+/// fast path — N connection threads feed N shard channels with no
+/// global lock).
+#[derive(Clone)]
+pub struct ShardRouter {
+    txs: Vec<Sender<ToShard>>,
+    shards: u32,
+}
+
+impl ShardRouter {
+    /// Serve one request on its owning shard; `None` if the engine shut
+    /// down.
+    pub fn get(&self, req: &Request) -> Option<GetOutcome> {
+        let s = shard_of(req.tenant, req.obj, self.shards);
+        let (rtx, rrx) = mpsc::channel();
+        self.txs[s].send(ToShard::Get(*req, rtx)).ok()?;
+        rrx.recv().ok()
+    }
+
+    /// Number of shards behind this router.
+    pub fn shards(&self) -> u32 {
+        self.shards
+    }
+}
+
+/// The sharded request path: the same step API as [`super::Engine`]
+/// (`offer` / `advance_to` / `force_epoch` / `finish`), with the hot
+/// path fanned across N worker threads and the policy decision,
+/// billing, and lifecycle reconciliation kept on the calling thread.
+pub struct ShardedEngine {
+    txs: Vec<Sender<ToShard>>,
+    workers: Vec<JoinHandle<()>>,
+    buffers: Vec<Vec<Request>>,
+    shards: u32,
+    costs: CostTracker,
+    decider: FrontDecider,
+    policy_name: String,
+    epoch_us: TimeUs,
+    epoch_end: TimeUs,
+    active_instances: u32,
+    auto_epochs: bool,
+    processed: u64,
+    clock: TimeUs,
+    epochs: Vec<EpochCosts>,
+    /// Every epoch decision's grant rows, in closing order — the
+    /// sharded-parity tests compare these across shard counts.
+    grants_log: Vec<(TimeUs, Vec<TenantAllocation>)>,
+    /// Tenants drained on some-but-not-all shards: `(tenant, shards
+    /// reported)`. A bill closes only when the count reaches N.
+    pending_retired: Vec<(TenantId, u32)>,
+}
+
+impl ShardedEngine {
+    /// Spawn `cfg.engine.shards` workers and assemble the front. Errors
+    /// for policies with no per-tenant demand representation (`mrc`,
+    /// `analytic`, `ideal_ttl`) — those run with `shards = 1`.
+    pub fn new(cfg: &Config) -> Result<ShardedEngine> {
+        let shards = cfg.engine.shards.max(1);
+        let decider = match cfg.scaler.policy {
+            PolicyKind::Fixed => FrontDecider::Fixed(cfg.scaler.fixed_instances.max(1)),
+            PolicyKind::Ttl | PolicyKind::TenantTtl => {
+                FrontDecider::Arbiter(Arbiter::new(cfg.cost.instance.ram_bytes, &cfg.scaler))
+            }
+            other => anyhow::bail!(
+                "policy {} cannot shard (no per-tenant demand representation); \
+                 run with [engine] shards = 1",
+                other.as_str()
+            ),
+        };
+        let policy_name = build_policy(cfg).name().to_string();
+        let mut costs = CostTracker::new(cfg.cost.clone());
+        for spec in &cfg.tenants {
+            costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+        }
+        // Shard initial sizes split the monolithic initial size, so a
+        // constant-target config never resizes (no slot reshuffles, no
+        // spurious misses the monolith would not have had).
+        let initial = split_even(cfg.initial_instances(), shards);
+        let mut txs = Vec::with_capacity(shards as usize);
+        let mut workers = Vec::with_capacity(shards as usize);
+        for s in 0..shards {
+            let (tx, rx) = mpsc::channel();
+            let wcfg = cfg.clone();
+            let n0 = initial[s as usize];
+            let handle = std::thread::Builder::new()
+                .name(format!("elastictl-shard-{s}"))
+                .spawn(move || worker_loop(wcfg, n0, rx))?;
+            txs.push(tx);
+            workers.push(handle);
+        }
+        let epoch_us = cfg.cost.epoch_us.max(1);
+        Ok(ShardedEngine {
+            txs,
+            workers,
+            buffers: (0..shards).map(|_| Vec::with_capacity(BATCH)).collect(),
+            shards,
+            costs,
+            decider,
+            policy_name,
+            epoch_us,
+            epoch_end: epoch_us,
+            active_instances: cfg.initial_instances(),
+            auto_epochs: true,
+            processed: 0,
+            clock: 0,
+            epochs: Vec::new(),
+            grants_log: Vec::new(),
+            pending_retired: Vec::new(),
+        })
+    }
+
+    /// Close billing epochs only on explicit [`Self::advance_to`] /
+    /// [`Self::force_epoch`] calls (the server's operator-driven
+    /// cadence), mirroring `EngineBuilder::manual_epochs`.
+    pub fn manual_epochs(mut self) -> Self {
+        self.auto_epochs = false;
+        self
+    }
+
+    /// Offer one request: route it to its shard's buffer (flushed at
+    /// [`BATCH`] or at any barrier). Epoch closure follows the same
+    /// automatic/manual rule as [`super::Engine::offer`].
+    pub fn offer(&mut self, req: &Request) {
+        if self.auto_epochs {
+            self.advance_to(req.ts);
+        } else {
+            self.clock = self.clock.max(req.ts);
+        }
+        self.processed += 1;
+        let s = shard_of(req.tenant, req.obj, self.shards);
+        self.buffers[s].push(*req);
+        if self.buffers[s].len() >= BATCH {
+            self.flush_shard(s);
+        }
+    }
+
+    /// Advance billing time to `ts`, closing every epoch that elapsed.
+    pub fn advance_to(&mut self, ts: TimeUs) {
+        self.clock = self.clock.max(ts);
+        while ts >= self.epoch_end {
+            let t = self.epoch_end;
+            self.close_epoch_at(t);
+            self.epoch_end += self.epoch_us;
+        }
+    }
+
+    /// Force an epoch boundary *now* (the server's `EPOCH` command).
+    /// Returns the resulting billed instance count.
+    pub fn force_epoch(&mut self, now: TimeUs) -> u32 {
+        self.clock = self.clock.max(now);
+        let t = self.clock;
+        let n = self.close_epoch_at(t);
+        self.epoch_end = t + self.epoch_us;
+        n
+    }
+
+    /// Admit (or update) a tenant on every shard. The shards hold
+    /// identical lifecycle state, so their verdicts agree; the first
+    /// error (if any) is returned and the weight is only registered on
+    /// success, exactly like [`super::Engine::admit_tenant`].
+    pub fn admit_tenant(&mut self, spec: TenantSpec) -> Result<AdmitOutcome> {
+        self.flush_all();
+        let now = self.clock;
+        let replies = self.round_trip(|_, reply| ToShard::Admit(spec.clone(), now, reply));
+        let mut outcome = None;
+        for r in replies {
+            let o = r?;
+            outcome.get_or_insert(o);
+        }
+        let outcome = outcome.expect("at least one shard replied");
+        self.costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+        Ok(outcome)
+    }
+
+    /// Begin retiring a tenant on every shard. Each shard drains its own
+    /// slice at the following boundaries; the bill reconciles when the
+    /// last shard reports the drain complete.
+    pub fn retire_tenant(&mut self, tenant: TenantId) -> Result<()> {
+        self.flush_all();
+        let now = self.clock;
+        for r in self.round_trip(|_, reply| ToShard::Retire(tenant, now, reply)) {
+            r?;
+        }
+        Ok(())
+    }
+
+    /// Replay one trace lifecycle event (mirrors
+    /// [`super::Engine::apply_event`]).
+    pub fn apply_event(&mut self, ev: &TenantEvent) -> Result<()> {
+        if self.auto_epochs {
+            self.advance_to(ev.ts);
+        } else {
+            self.clock = self.clock.max(ev.ts);
+        }
+        match ev.kind {
+            TenantEventKind::Admit { .. } => {
+                let spec = ev.spec().expect("admit events carry a spec");
+                self.admit_tenant(spec).map(|_| ())
+            }
+            TenantEventKind::Retire => self.retire_tenant(ev.tenant),
+        }
+    }
+
+    /// Restore billing state from a checkpoint's closed epochs (the
+    /// server's `--resume` under `--shards`): identical to
+    /// [`super::Engine::restore_closed_epochs`], with the restored
+    /// instance count split back across the shard clusters.
+    pub fn restore_closed_epochs(
+        &mut self,
+        epochs: &[EpochCosts],
+        bills: &[TenantEpochBill],
+        reconciliations: &[TenantReconciliation],
+        ledgers: &[(TenantId, TenantLedger)],
+    ) {
+        self.costs
+            .restore_closed_epochs(epochs, bills, reconciliations, ledgers);
+        self.epochs.extend_from_slice(epochs);
+        if let Some(last) = epochs.last() {
+            if last.instances > 0 {
+                let split = split_even(last.instances, self.shards);
+                for (s, tx) in self.txs.iter().enumerate() {
+                    let _ = tx.send(ToShard::Resize(split[s]));
+                }
+                self.active_instances = last.instances;
+            }
+            self.clock = self.clock.max(last.t);
+            self.epoch_end = last.t + self.epoch_us;
+        }
+    }
+
+    /// Bill the final (partial) epoch at full price, reconcile any drain
+    /// still in flight, aggregate the shard counters, and shut the
+    /// workers down.
+    pub fn finish(mut self) -> RunReport {
+        self.flush_all();
+        let t_bill = self.epoch_end.max(self.clock);
+        let fins = self.round_trip(|_, reply| ToShard::Finish(t_bill, reply));
+        for f in &fins {
+            for &(tenant, dollars, count) in &f.miss_runs {
+                self.costs.record_miss_dollars_run(tenant, dollars, count);
+            }
+        }
+        let residents = merge_residents(fins.iter().map(|f| f.residents.as_slice()));
+        let billed = self
+            .costs
+            .end_epoch_attributed(t_bill, self.active_instances, &residents);
+        self.epochs.push(billed);
+        let mut done = Vec::new();
+        for f in &fins {
+            for &tenant in &f.retired {
+                if self.note_shard_retired(tenant) {
+                    done.push(tenant);
+                }
+            }
+        }
+        for tenant in done {
+            self.costs.close_tenant(tenant, t_bill);
+        }
+        let report = RunReport {
+            policy: self.policy_name.clone(),
+            requests: fins.iter().map(|f| f.requests).sum(),
+            misses: fins.iter().map(|f| f.misses).sum(),
+            spurious_misses: fins.iter().map(|f| f.spurious_misses).sum(),
+            work_units: fins.iter().map(|f| f.work_units).sum(),
+            epochs: std::mem::take(&mut self.epochs),
+            storage_series: self.costs.storage_series.clone(),
+            miss_series: self.costs.miss_series.clone(),
+            total_series: self.costs.total_series.clone(),
+            instances_series: self.costs.instances_series.clone(),
+            ttl_series: TimeSeries::new(format!("{}_ttl_secs", self.policy_name)),
+            shadow_series: TimeSeries::new(format!("{}_shadow_bytes", self.policy_name)),
+            balance: BalanceTracker::new(),
+            tenants: Vec::new(),
+            slo: Vec::new(),
+            placement: Vec::new(),
+            lifecycle: Vec::new(),
+            tenant_bills: self.costs.tenant_bills().to_vec(),
+            reconciliations: self.costs.reconciliations().to_vec(),
+            journal: Vec::new(),
+            telemetry: Vec::new(),
+            total_cost: self.costs.total(),
+            storage_cost: self.costs.storage_total(),
+            miss_cost: self.costs.miss_total(),
+        };
+        self.shutdown();
+        report
+    }
+
+    // --- accessors (the server's STATS surface and the parity tests) ---
+
+    /// Name of the policy the shards run.
+    pub fn policy_name(&self) -> &str {
+        &self.policy_name
+    }
+
+    /// Number of shard workers.
+    pub fn shards(&self) -> u32 {
+        self.shards
+    }
+
+    /// Requests offered to the front so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Instances billed for the currently open epoch.
+    pub fn instances(&self) -> u32 {
+        self.active_instances
+    }
+
+    /// The front cost tracker (read-only).
+    pub fn costs(&self) -> &CostTracker {
+        &self.costs
+    }
+
+    /// Per-epoch cost rows closed so far.
+    pub fn closed_epochs(&self) -> &[EpochCosts] {
+        &self.epochs
+    }
+
+    /// Latest timestamp observed.
+    pub fn clock(&self) -> TimeUs {
+        self.clock
+    }
+
+    /// End of the currently open billing epoch.
+    pub fn epoch_end(&self) -> TimeUs {
+        self.epoch_end
+    }
+
+    /// Every epoch decision's grant rows, in closing order.
+    pub fn grants_log(&self) -> &[(TimeUs, Vec<TenantAllocation>)] {
+        &self.grants_log
+    }
+
+    /// A cloneable GET-path handle (one per server connection thread).
+    pub fn router(&self) -> ShardRouter {
+        ShardRouter { txs: self.txs.clone(), shards: self.shards }
+    }
+
+    /// Snapshot every shard's counters and ledgers (flushes buffered
+    /// requests first, so the numbers cover everything offered).
+    pub fn shard_stats(&mut self) -> Vec<ShardStats> {
+        self.flush_all();
+        self.round_trip(|_, reply| ToShard::Stats(reply))
+    }
+
+    // --- the epoch barrier ---
+
+    /// The deterministic epoch barrier (see the module docs): collect →
+    /// bill → prepare → decide → apply → reconcile, every merge in fixed
+    /// shard order 0..N.
+    fn close_epoch_at(&mut self, t: TimeUs) -> u32 {
+        self.flush_all();
+        // 1. Collect, and fold the miss runs in shard order — the exact
+        //    per-tenant fold the monolithic engine performed.
+        let collects = self.round_trip(|_, reply| ToShard::Collect(reply));
+        for c in &collects {
+            for &(tenant, dollars, count) in &c.miss_runs {
+                self.costs.record_miss_dollars_run(tenant, dollars, count);
+            }
+        }
+        let residents = merge_residents(collects.iter().map(|c| c.residents.as_slice()));
+        // 2. Bill the closing epoch at the size that was active (§2.3).
+        let billed = self
+            .costs
+            .end_epoch_attributed(t, self.active_instances, &residents);
+        self.epochs.push(billed);
+        // 3. Boundary shadow maintenance + demand rows.
+        let prepared = self.round_trip(|_, reply| ToShard::Prepare(t, reply));
+        let shard_rows: Vec<Vec<TenantDemand>> = prepared
+            .into_iter()
+            .map(|rows| rows.expect("sharded policies report demand rows"))
+            .collect();
+        // 4. One decision over the merged rows.
+        let merged = merge_demands(&shard_rows);
+        let (target, allocs) = match &self.decider {
+            FrontDecider::Fixed(n) => (*n, Vec::new()),
+            FrontDecider::Arbiter(a) => a.decide(&merged),
+        };
+        self.grants_log.push((t, allocs.clone()));
+        // 5. Fan out: instance target split evenly, grants split
+        //    proportional to each shard's share of the tenant's demand.
+        let per_shard_allocs = split_allocations(&allocs, &shard_rows);
+        let per_shard_targets = split_even(target.max(1), self.shards);
+        let applied = self.round_trip(|s, reply| ToShard::Apply {
+            now: t,
+            target: per_shard_targets[s],
+            allocs: per_shard_allocs[s].clone(),
+            reply,
+        });
+        // Billing bills the *decision*, not the per-shard floors: each
+        // shard cluster floors at one instance, so Σ shard sizes can
+        // exceed a small target — the monolithic cluster floors the same
+        // decision at one instance total, and so does this.
+        self.active_instances = target.max(1);
+        // 6. Reconcile: a tenant's bill closes once every shard drained
+        //    its slice; order follows the shards' own retirement order.
+        let mut done = Vec::new();
+        for a in &applied {
+            for &tenant in &a.retired {
+                if self.note_shard_retired(tenant) {
+                    done.push(tenant);
+                }
+            }
+        }
+        for tenant in done {
+            self.costs.close_tenant(tenant, t);
+        }
+        self.active_instances
+    }
+
+    /// Count one shard's completed drain of `tenant`; `true` once every
+    /// shard has reported (the bill may close).
+    fn note_shard_retired(&mut self, tenant: TenantId) -> bool {
+        match self.pending_retired.iter_mut().find(|(t, _)| *t == tenant) {
+            Some((_, count)) => {
+                *count += 1;
+                if *count == self.shards {
+                    self.pending_retired.retain(|(t, _)| *t != tenant);
+                    true
+                } else {
+                    false
+                }
+            }
+            None => {
+                if self.shards == 1 {
+                    true
+                } else {
+                    self.pending_retired.push((tenant, 1));
+                    false
+                }
+            }
+        }
+    }
+
+    /// Send one buffered batch to shard `s`.
+    fn flush_shard(&mut self, s: usize) {
+        if self.buffers[s].is_empty() {
+            return;
+        }
+        let batch = std::mem::replace(&mut self.buffers[s], Vec::with_capacity(BATCH));
+        let _ = self.txs[s].send(ToShard::Batch(batch));
+    }
+
+    /// Flush every shard's buffer (before any barrier or round-trip, so
+    /// channel FIFO order serializes requests before the control
+    /// message).
+    fn flush_all(&mut self) {
+        for s in 0..self.buffers.len() {
+            self.flush_shard(s);
+        }
+    }
+
+    /// One request-reply round to every shard: sends fan out first (the
+    /// workers run concurrently), then replies collect in shard order.
+    fn round_trip<R>(&self, make: impl Fn(usize, Sender<R>) -> ToShard) -> Vec<R> {
+        let mut rxs = Vec::with_capacity(self.txs.len());
+        for (s, tx) in self.txs.iter().enumerate() {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(make(s, rtx)).expect("shard worker is alive");
+            rxs.push(rrx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().expect("shard worker replies"))
+            .collect()
+    }
+
+    /// Stop the workers and join. An explicit shutdown message (not just
+    /// dropping the senders) so live [`ShardRouter`] clones on server
+    /// connection threads cannot keep a worker's receive loop alive;
+    /// their sends fail cleanly afterwards.
+    fn shutdown(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(ToShard::Shutdown);
+        }
+        self.txs.clear();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Split `total` instances across `shards` as evenly as possible,
+/// earlier shards taking the remainder: `Σ = total`, deterministic.
+pub fn split_even(total: u32, shards: u32) -> Vec<u32> {
+    let shards = shards.max(1);
+    let base = total / shards;
+    let rem = total % shards;
+    (0..shards).map(|s| base + u32::from(s < rem)).collect()
+}
+
+/// Split `total` bytes proportionally to `weights` (u128 floor
+/// arithmetic, remainder bytes to ascending indices; equal split when
+/// every weight is zero). `Σ = total`, deterministic.
+pub fn split_proportional(total: u64, weights: &[u64]) -> Vec<u64> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let sum: u128 = weights.iter().map(|&w| w as u128).sum();
+    if sum == 0 {
+        let base = total / n as u64;
+        let rem = (total % n as u64) as usize;
+        return (0..n).map(|i| base + u64::from(i < rem)).collect();
+    }
+    let mut out: Vec<u64> = weights
+        .iter()
+        .map(|&w| ((total as u128 * w as u128) / sum) as u64)
+        .collect();
+    let mut rem = total - out.iter().sum::<u64>();
+    let mut i = 0;
+    while rem > 0 {
+        out[i] += 1;
+        rem -= 1;
+        i = (i + 1) % n;
+    }
+    out
+}
+
+/// Merge per-shard demand rows into the front's arbiter input: demand
+/// bytes sum (each shard's shadow cache holds a disjoint slice of the
+/// tenant's key space), the reservation and weight are taken *once* from
+/// the first shard seen (every shard reports the tenant's full spec
+/// values — summing would multiply them by N). Row order is first-seen
+/// scanning shards 0..N, which equals every shard's identical
+/// registration order — and therefore the monolithic bank's.
+fn merge_demands(shard_rows: &[Vec<TenantDemand>]) -> Vec<TenantDemand> {
+    let mut merged: Vec<TenantDemand> = Vec::new();
+    for rows in shard_rows {
+        for d in rows {
+            match merged.iter_mut().find(|m| m.tenant == d.tenant) {
+                Some(m) => m.demand_bytes += d.demand_bytes,
+                None => merged.push(*d),
+            }
+        }
+    }
+    merged
+}
+
+/// Merge per-shard resident-byte ledgers (disjoint instance slices, so
+/// the per-tenant sums are exact u64 arithmetic), id ascending.
+fn merge_residents<'a>(
+    shards: impl Iterator<Item = &'a [(TenantId, u64)]>,
+) -> Vec<(TenantId, u64)> {
+    let mut merged: std::collections::BTreeMap<TenantId, u64> = std::collections::BTreeMap::new();
+    for rows in shards {
+        for &(tenant, bytes) in rows {
+            *merged.entry(tenant).or_insert(0) += bytes;
+        }
+    }
+    merged.into_iter().collect()
+}
+
+/// Split the front's grant rows back into per-shard allocation lists:
+/// each shard holding a demand row for the tenant receives its
+/// proportional share of the granted (and reserved) bytes, against its
+/// own local demand. Shards without a row receive nothing — applying a
+/// grant there would lazily create controller state the monolith never
+/// had.
+fn split_allocations(
+    allocs: &[TenantAllocation],
+    shard_rows: &[Vec<TenantDemand>],
+) -> Vec<Vec<TenantAllocation>> {
+    let n = shard_rows.len();
+    let mut out: Vec<Vec<TenantAllocation>> = (0..n).map(|_| Vec::new()).collect();
+    for a in allocs {
+        let holders: Vec<(usize, &TenantDemand)> = shard_rows
+            .iter()
+            .enumerate()
+            .filter_map(|(s, rows)| {
+                rows.iter().find(|d| d.tenant == a.tenant).map(|d| (s, d))
+            })
+            .collect();
+        if holders.is_empty() {
+            continue;
+        }
+        let demands: Vec<u64> = holders.iter().map(|&(_, d)| d.demand_bytes).collect();
+        let grants = split_proportional(a.granted_bytes, &demands);
+        let reserves = split_proportional(a.reserved_bytes, &demands);
+        for (i, &(s, d)) in holders.iter().enumerate() {
+            out[s].push(TenantAllocation {
+                tenant: a.tenant,
+                demand_bytes: d.demand_bytes,
+                reserved_bytes: reserves[i],
+                granted_bytes: grants[i],
+                weight: a.weight,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{MINUTE, SECOND};
+
+    #[test]
+    fn shard_of_is_deterministic_and_in_range() {
+        for shards in [1u32, 2, 3, 4, 8] {
+            for tenant in [0u16, 1, 7] {
+                for obj in 0u64..200 {
+                    let s = shard_of(tenant, obj, shards);
+                    assert!(s < shards as usize);
+                    assert_eq!(s, shard_of(tenant, obj, shards), "routing must be stable");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_even_preserves_totals() {
+        assert_eq!(split_even(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(split_even(1, 4), vec![1, 0, 0, 0]);
+        assert_eq!(split_even(0, 3), vec![0, 0, 0]);
+        for total in 0u32..40 {
+            for shards in 1u32..9 {
+                let split = split_even(total, shards);
+                assert_eq!(split.iter().sum::<u32>(), total);
+            }
+        }
+    }
+
+    #[test]
+    fn split_proportional_preserves_totals() {
+        assert_eq!(split_proportional(100, &[1, 1]), vec![50, 50]);
+        assert_eq!(split_proportional(100, &[0, 0]), vec![50, 50]);
+        assert_eq!(split_proportional(7, &[]), Vec::<u64>::new());
+        for total in [0u64, 1, 7, 100, 1_000_003] {
+            for weights in [&[1u64, 2, 3][..], &[0, 0, 5], &[10], &[0, 0, 0, 0]] {
+                let split = split_proportional(total, weights);
+                assert_eq!(split.iter().sum::<u64>(), total, "weights {weights:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_demands_sums_demand_and_takes_reservation_once() {
+        let shard0 = vec![
+            TenantDemand::new(1, 100, 2.0).with_reserved(512),
+            TenantDemand::new(2, 10, 1.0),
+        ];
+        let shard1 = vec![
+            TenantDemand::new(1, 40, 2.0).with_reserved(512),
+            TenantDemand::new(3, 5, 0.5),
+        ];
+        let merged = merge_demands(&[shard0, shard1]);
+        assert_eq!(merged.len(), 3);
+        assert_eq!(merged[0].tenant, 1);
+        assert_eq!(merged[0].demand_bytes, 140, "demand sums across shards");
+        assert_eq!(merged[0].reserved_bytes, 512, "reservation taken once, not summed");
+        assert_eq!(merged[1].tenant, 2);
+        assert_eq!(merged[2].tenant, 3);
+    }
+
+    #[test]
+    fn split_allocations_skips_shards_without_a_demand_row() {
+        let allocs = vec![TenantAllocation {
+            tenant: 1,
+            demand_bytes: 150,
+            reserved_bytes: 0,
+            granted_bytes: 150,
+            weight: 1.0,
+        }];
+        let shard_rows = vec![
+            vec![TenantDemand::new(1, 100, 1.0)],
+            Vec::new(),
+            vec![TenantDemand::new(1, 50, 1.0)],
+        ];
+        let split = split_allocations(&allocs, &shard_rows);
+        assert_eq!(split[0].len(), 1);
+        assert!(split[1].is_empty(), "no demand row, no grant");
+        assert_eq!(split[2].len(), 1);
+        assert_eq!(split[0][0].granted_bytes + split[2][0].granted_bytes, 150);
+        assert_eq!(split[0][0].granted_bytes, 100, "proportional to local demand");
+    }
+
+    #[test]
+    fn sharded_engine_rejects_unshardable_policies() {
+        for kind in [PolicyKind::Mrc, PolicyKind::Analytic, PolicyKind::IdealTtl] {
+            let mut cfg = Config::with_policy(kind);
+            cfg.engine.shards = 2;
+            assert!(ShardedEngine::new(&cfg).is_err(), "{} must not shard", kind.as_str());
+        }
+    }
+
+    #[test]
+    fn sharded_engine_smoke_run_counts_and_bills() {
+        let mut cfg = Config::with_policy(PolicyKind::Fixed);
+        cfg.engine.shards = 3;
+        cfg.scaler.fixed_instances = 4;
+        cfg.cost.epoch_us = MINUTE;
+        let mut eng = ShardedEngine::new(&cfg).expect("fixed shards");
+        for i in 0..2_000u64 {
+            eng.offer(&Request::new(i * (MINUTE / 400), i % 97, 1_000));
+        }
+        let report = eng.finish();
+        assert_eq!(report.policy, "fixed");
+        assert_eq!(report.requests, 2_000);
+        assert!(report.misses >= 97, "every cold object misses at least once");
+        assert!(report.epochs.len() >= 5, "five minutes of trace close five epochs");
+        assert!(report.total_cost > 0.0);
+        for e in &report.epochs {
+            assert_eq!(e.instances, 4, "fixed target bills four instances");
+        }
+    }
+
+    #[test]
+    fn sharded_get_path_serves_via_router() {
+        let mut cfg = Config::with_policy(PolicyKind::Ttl);
+        cfg.engine.shards = 2;
+        cfg.cost.epoch_us = MINUTE;
+        let mut eng = ShardedEngine::new(&cfg).expect("ttl shards");
+        let router = eng.router();
+        let first = router.get(&Request::new(SECOND, 42, 100)).expect("worker alive");
+        assert!(!first.hit, "cold object misses");
+        let second = router.get(&Request::new(2 * SECOND, 42, 100)).expect("worker alive");
+        assert!(second.hit, "warm object hits its owning shard");
+        let stats = eng.shard_stats();
+        assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 2);
+        drop(eng); // joins the workers without a finish
+    }
+}

@@ -30,11 +30,11 @@ use std::path::PathBuf;
 
 const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve|loadgen> [args]
   gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
-  run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
+  run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N] [--shards N]
   exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm ablations all)
   plan <trace>
   ttlopt <trace>
-  serve [--addr HOST:PORT] [--policy P] [--epoch-secs N] [--checkpoint FILE] [--resume FILE]
+  serve [--addr HOST:PORT] [--policy P] [--epoch-secs N] [--checkpoint FILE] [--resume FILE] [--shards N]
         (protocol: GET [tenant/]key size, STATS [tenant], SLO tenant, PLACEMENT, ADMIT tenant [k=v..], RETIRE tenant, BILL tenant, EPOCH, WHY tenant, METRICS, QUIT — see docs/PROTOCOL.md)
   loadgen <trace> [--addr HOST:PORT] [--conns N]   (replay against a live server, report req/s + p50/p99)";
 
@@ -72,6 +72,13 @@ impl Args {
     fn flag_or(&self, key: &str, default: &str) -> String {
         self.flag(key).unwrap_or(default).to_string()
     }
+}
+
+/// Parse `--shards N`, with the same bounds `[engine] shards` enforces.
+fn parse_shards(s: &str) -> Result<u32> {
+    let n: u32 = s.parse()?;
+    anyhow::ensure!((1..=256).contains(&n), "--shards must be in 1..=256, got {n}");
+    Ok(n)
 }
 
 fn parse_scale(s: &str) -> Result<TraceScale> {
@@ -171,6 +178,9 @@ fn main() -> Result<()> {
             if let Some(n) = args.flag("fixed-instances") {
                 cfg.scaler.fixed_instances = n.parse()?;
             }
+            if let Some(n) = args.flag("shards") {
+                cfg.engine.shards = parse_shards(n)?;
+            }
             // Stream the trace file through the engine — every policy
             // (analytic included) takes the same entry point, and the
             // trace never materializes in memory.
@@ -248,6 +258,9 @@ fn main() -> Result<()> {
             }
             if let Some(p) = args.flag("checkpoint") {
                 cfg.serve.checkpoint_path = Some(p.to_string());
+            }
+            if let Some(n) = args.flag("shards") {
+                cfg.engine.shards = parse_shards(n)?;
             }
             elastictl::srv::serve(cfg, &addr, args.flag("resume"))?;
         }

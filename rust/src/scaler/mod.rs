@@ -17,7 +17,9 @@
 use crate::config::{Config, ControllerConfig, CostConfig, ScalerConfig};
 use crate::metrics::Ewma;
 use crate::mrc::{MrcProfiler, OlkenProfiler};
-use crate::tenant::{AdmitOutcome, Lifecycle, TenantEnforcement, TenantSpec};
+use crate::tenant::{
+    AdmitOutcome, Lifecycle, TenantAllocation, TenantDemand, TenantEnforcement, TenantSpec,
+};
 use crate::trace::Request;
 use crate::vcache::VirtualCache;
 use crate::{TenantId, TimeUs};
@@ -154,6 +156,24 @@ pub trait EpochSizer {
     /// timers) resolve their handles here, once; the hot path then
     /// records through the pre-resolved handles at O(1). Default: no-op.
     fn attach_telemetry(&mut self, _registry: &mut crate::telemetry::TelemetryRegistry) {}
+
+    // --- sharded execution (engine::ShardedEngine's epoch barrier) ---
+
+    /// Shard-side half of [`Self::decide`]: run the epoch-boundary shadow
+    /// maintenance (expiry, SLO close-out, drain bookkeeping) and report
+    /// this shard's per-tenant demand rows *instead of* sizing locally —
+    /// the front merges every shard's rows and runs the one arbiter
+    /// decision. `None` (the default) declares the policy unshardable
+    /// (no demand-row representation of its decision); the engine then
+    /// falls back to the single-threaded path.
+    fn shard_demands(&mut self, _now: TimeUs) -> Option<Vec<TenantDemand>> {
+        None
+    }
+
+    /// Shard-side application of the front's decision: this shard's
+    /// slice of the merged grants (caps, TTL clamps). Policies whose
+    /// [`Self::decide`] carries no grant state need nothing here.
+    fn shard_apply_grants(&mut self, _allocs: &[TenantAllocation]) {}
 }
 
 /// Static baseline.
@@ -178,6 +198,11 @@ impl EpochSizer for FixedSizer {
 
     fn name(&self) -> &'static str {
         "fixed"
+    }
+
+    fn shard_demands(&mut self, _now: TimeUs) -> Option<Vec<TenantDemand>> {
+        // Static target: nothing to merge, the front pins the size.
+        Some(Vec::new())
     }
 }
 
@@ -246,6 +271,15 @@ impl EpochSizer for TtlSizer {
 
     fn shadow_size(&self) -> Option<u64> {
         Some(self.vc.vsize())
+    }
+
+    fn shard_demands(&mut self, now: TimeUs) -> Option<Vec<TenantDemand>> {
+        // The same expiry `decide` would run, then the shard's virtual
+        // size as a single pseudo-tenant row: the front's arbiter formula
+        // (`round(Σ vsize / S_p)` clamped) is exactly Algorithm 2 line 8
+        // applied to the merged shadow size.
+        self.vc.expire(now);
+        Some(vec![TenantDemand::new(0, self.vc.vsize(), 1.0)])
     }
 }
 

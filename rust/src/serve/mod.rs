@@ -466,7 +466,7 @@ impl ServerState {
 
 /// Split `5/alpha` into `(5, "alpha")`; tokens without a parseable tenant
 /// prefix are plain tenant-0 keys.
-fn split_tenant_key(token: &str) -> (TenantId, &str) {
+pub(crate) fn split_tenant_key(token: &str) -> (TenantId, &str) {
     if let Some((prefix, rest)) = token.split_once('/') {
         if !rest.is_empty() {
             if let Ok(t) = prefix.parse::<TenantId>() {
@@ -478,7 +478,7 @@ fn split_tenant_key(token: &str) -> (TenantId, &str) {
 }
 
 /// Deterministic string hash (FNV-1a) for non-numeric keys.
-fn fxhash_str(s: &str) -> u64 {
+pub(crate) fn fxhash_str(s: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in s.bytes() {
         h = (h ^ b as u64).wrapping_mul(0x100000001b3);

@@ -42,8 +42,8 @@
 //! crashing — the epoch it described was not durably billed, exactly as
 //! if the kill had landed a moment earlier.
 
-use crate::cost::{EpochCosts, TenantEpochBill, TenantLedger, TenantReconciliation};
-use crate::engine::Engine;
+use crate::cost::{CostTracker, EpochCosts, TenantEpochBill, TenantLedger, TenantReconciliation};
+use crate::engine::{Engine, ShardedEngine};
 use crate::{Result, TenantId};
 use std::fs::{File, OpenOptions};
 use std::io::Write;
@@ -258,11 +258,43 @@ fn warn_tail(path: &Path, intact: usize, what: &str) {
 /// records after it cannot be attributed). Returns the number of epochs
 /// restored.
 pub fn replay(engine: &mut Engine, records: &[CheckpointRecord]) -> u64 {
-    let mut done = engine.costs().epochs();
-    let mut epochs = Vec::new();
-    let mut bills = Vec::new();
-    let mut recs = Vec::new();
-    let mut ledgers: &[(TenantId, TenantLedger)] = &[];
+    let d = collect_replay(engine.costs().epochs(), records);
+    let n = d.epochs.len() as u64;
+    if n > 0 {
+        engine.restore_closed_epochs(&d.epochs, &d.bills, &d.reconciliations, &d.ledgers);
+    }
+    n
+}
+
+/// [`replay`] for the sharded engine (`serve --resume` under
+/// `[engine] shards > 1`): the same idempotent cull, restored through
+/// [`ShardedEngine::restore_closed_epochs`] so the resumed instance
+/// count fans back out across the shard clusters.
+pub fn replay_sharded(engine: &mut ShardedEngine, records: &[CheckpointRecord]) -> u64 {
+    let d = collect_replay(engine.costs().epochs(), records);
+    let n = d.epochs.len() as u64;
+    if n > 0 {
+        engine.restore_closed_epochs(&d.epochs, &d.bills, &d.reconciliations, &d.ledgers);
+    }
+    n
+}
+
+/// The closed-epoch delta a replay applies: everything past `done`
+/// closed epochs, stopping at the first gap in the epoch sequence.
+struct ReplayDelta {
+    epochs: Vec<EpochCosts>,
+    bills: Vec<TenantEpochBill>,
+    reconciliations: Vec<TenantReconciliation>,
+    ledgers: Vec<(TenantId, TenantLedger)>,
+}
+
+fn collect_replay(mut done: u64, records: &[CheckpointRecord]) -> ReplayDelta {
+    let mut d = ReplayDelta {
+        epochs: Vec::new(),
+        bills: Vec::new(),
+        reconciliations: Vec::new(),
+        ledgers: Vec::new(),
+    };
     for r in records {
         if r.epoch <= done {
             continue; // already billed — idempotent resume
@@ -275,16 +307,12 @@ pub fn replay(engine: &mut Engine, records: &[CheckpointRecord]) -> u64 {
             break;
         }
         done += 1;
-        epochs.push(r.costs);
-        bills.extend_from_slice(&r.bills);
-        recs.extend_from_slice(&r.reconciliations);
-        ledgers = &r.ledgers;
+        d.epochs.push(r.costs);
+        d.bills.extend_from_slice(&r.bills);
+        d.reconciliations.extend_from_slice(&r.reconciliations);
+        d.ledgers = r.ledgers.clone();
     }
-    let n = epochs.len() as u64;
-    if n > 0 {
-        engine.restore_closed_epochs(&epochs, &bills, &recs, ledgers);
-    }
-    n
+    d
 }
 
 /// Cursor over a live engine's cost ledger: remembers how much has been
@@ -303,17 +331,31 @@ impl CheckpointCursor {
     /// Seed the cursor from an engine whose current state is already
     /// durable (a fresh engine, or one just restored by [`replay`]).
     pub fn caught_up(engine: &Engine) -> CheckpointCursor {
+        Self::caught_up_costs(engine.costs())
+    }
+
+    /// [`Self::caught_up`] from the cost tracker alone — the sharded
+    /// front keeps its closed-epoch state outside an [`Engine`].
+    pub fn caught_up_costs(costs: &CostTracker) -> CheckpointCursor {
         CheckpointCursor {
-            epochs: engine.costs().epochs(),
-            bills: engine.costs().tenant_bills().len(),
-            reconciliations: engine.costs().reconciliations().len(),
+            epochs: costs.epochs(),
+            bills: costs.tenant_bills().len(),
+            reconciliations: costs.reconciliations().len(),
         }
     }
 
     /// Records for every epoch closed since the last drain.
     pub fn drain(&mut self, engine: &Engine) -> Vec<CheckpointRecord> {
-        let costs = engine.costs();
-        let closed = engine.closed_epochs();
+        self.drain_costs(engine.costs(), engine.closed_epochs())
+    }
+
+    /// [`Self::drain`] from the cost tracker and closed-epoch rows alone
+    /// (the sharded front's durable path).
+    pub fn drain_costs(
+        &mut self,
+        costs: &CostTracker,
+        closed: &[EpochCosts],
+    ) -> Vec<CheckpointRecord> {
         let mut out = Vec::new();
         while self.epochs < costs.epochs() {
             let e = closed[self.epochs as usize];

@@ -36,19 +36,32 @@
 //! * **Load generation** — [`loadgen`] replays a trace file over N
 //!   concurrent connections against a live server and reports aggregate
 //!   req/s and p50/p99 latency.
+//! * **Multicore sharding** — `[engine] shards = N` (or `--shards N`)
+//!   swaps the single state-owner engine for a [`ShardedEngine`]: N
+//!   shard-owner threads each run a disjoint slice of the cluster, and
+//!   connection threads route `GET`s straight to the owning shard
+//!   ([`ShardRouter`]) with no global lock on the hot path. Control
+//!   commands (`STATS`/`EPOCH`/`ADMIT`/`RETIRE`/`BILL`) still serialize
+//!   through one front thread, which runs the deterministic epoch
+//!   barrier and the same durable checkpoint path. Commands that read
+//!   monolithic engine state (`SLO`, `PLACEMENT`, `WHY`, `METRICS`)
+//!   answer `ERR … unsupported` under sharding.
 
 pub mod checkpoint;
 pub mod loadgen;
 
-use crate::config::Config;
-use crate::serve::ServerState;
-use crate::Result;
+use crate::config::{Config, PolicyKind};
+use crate::engine::{ShardRouter, ShardedEngine};
+use crate::serve::{fxhash_str, split_tenant_key, ServerState};
+use crate::tenant::TenantSpec;
+use crate::trace::Request;
+use crate::{Result, TenantId};
 use checkpoint::{CheckpointCursor, CheckpointWriter};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One message for the state-owner thread.
 pub enum Msg {
@@ -209,13 +222,18 @@ pub fn serve(cfg: Config, addr: &str, resume: Option<&str>) -> Result<()> {
     let epoch_secs = cfg.serve.epoch_secs;
     let listener = TcpListener::bind(addr)?;
     eprintln!(
-        "elastictl serve: listening on {} (policy={}, tenants={}, epoch_secs={}, checkpoint={})",
+        "elastictl serve: listening on {} (policy={}, tenants={}, shards={}, epoch_secs={}, \
+         checkpoint={})",
         listener.local_addr()?,
         cfg.scaler.policy.as_str(),
         if cfg.tenants.is_empty() { 1 } else { cfg.tenants.len() },
+        cfg.engine.shards,
         epoch_secs,
         ckpt.as_deref().map(|p| p.display().to_string()).unwrap_or_else(|| "off".into()),
     );
+    if cfg.engine.shards > 1 {
+        return serve_sharded(cfg, listener, ckpt, epoch_secs);
+    }
     let server = spawn_state(cfg, ckpt)?;
     if server.resumed_epochs > 0 {
         eprintln!(
@@ -227,6 +245,380 @@ pub fn serve(cfg: Config, addr: &str, resume: Option<&str>) -> Result<()> {
         spawn_ticker(server.tx.clone(), Duration::from_secs(epoch_secs));
     }
     accept_loop(listener, server.tx)
+}
+
+/// [`serve`] under `[engine] shards > 1`: N shard-owner threads behind
+/// the accept loop. Connection threads serve `GET`s straight off their
+/// [`ShardRouter`] clone (the multicore fast path); control lines hop to
+/// the front thread, which owns the [`ShardedEngine`], the wall-clock
+/// epoch barrier and the durable checkpoint.
+fn serve_sharded(
+    cfg: Config,
+    listener: TcpListener,
+    ckpt: Option<PathBuf>,
+    epoch_secs: u64,
+) -> Result<()> {
+    let server = spawn_sharded_state(cfg, ckpt)?;
+    if server.resumed_epochs > 0 {
+        eprintln!(
+            "elastictl serve: resumed {} closed epoch(s) from checkpoint",
+            server.resumed_epochs
+        );
+    }
+    if epoch_secs > 0 {
+        spawn_ticker(server.tx.clone(), Duration::from_secs(epoch_secs));
+    }
+    for stream in listener.incoming() {
+        let socket = stream?;
+        let tx = server.tx.clone();
+        let router = server.router.clone();
+        let (tenant_routing, start) = (server.tenant_routing, server.start);
+        std::thread::spawn(move || {
+            let _ = handle_conn_sharded(socket, tx, router, tenant_routing, start);
+        });
+    }
+    Ok(())
+}
+
+/// A spawned sharded front: the control-plane channel plus everything a
+/// connection thread needs to serve `GET`s without the front.
+pub struct ShardedServer {
+    /// Control-plane lines and epoch ticks go here.
+    pub tx: SrvTx,
+    /// Per-connection GET fast path into the shard workers.
+    pub router: ShardRouter,
+    /// Closed epochs restored from the checkpoint at startup.
+    pub resumed_epochs: u64,
+    /// Whether `GET <tenant>/<key>` prefixes are interpreted (same rule
+    /// as [`ServerState`]).
+    pub tenant_routing: bool,
+    /// The server's clock origin; request timestamps are micros since
+    /// this instant, on every thread.
+    pub start: Instant,
+}
+
+/// Spawn the sharded front thread for `cfg`, replaying the checkpoint
+/// first exactly as [`spawn_state`] does.
+pub fn spawn_sharded_state(cfg: Config, ckpt_path: Option<PathBuf>) -> Result<ShardedServer> {
+    let records = match &ckpt_path {
+        Some(p) if p.exists() => checkpoint::read(p)?,
+        _ => Vec::new(),
+    };
+    let writer = match &ckpt_path {
+        Some(p) => Some(CheckpointWriter::append(p)?),
+        None => None,
+    };
+    // Built on the caller so spawn errors surface here; the sharded
+    // engine is `Send` (the unshardable policies were rejected above).
+    let mut engine = ShardedEngine::new(&cfg)?.manual_epochs();
+    let resumed_epochs = checkpoint::replay_sharded(&mut engine, &records);
+    let router = engine.router();
+    let tenant_routing =
+        !cfg.tenants.is_empty() || cfg.scaler.policy == PolicyKind::TenantTtl;
+    let start = Instant::now();
+    let (tx, rx) = mpsc::channel::<Msg>();
+    std::thread::spawn(move || sharded_state_loop(cfg, engine, writer, rx, start));
+    Ok(ShardedServer { tx, router, resumed_epochs, tenant_routing, start })
+}
+
+fn sharded_state_loop(
+    cfg: Config,
+    engine: ShardedEngine,
+    writer: Option<CheckpointWriter>,
+    rx: mpsc::Receiver<Msg>,
+    start: Instant,
+) {
+    let mut front = ShardedFront::new(&cfg, engine, start);
+    let mut durable =
+        writer.map(|w| (w, CheckpointCursor::caught_up_costs(front.engine.costs())));
+    for msg in rx {
+        match msg {
+            Msg::Line(line, reply) => {
+                let text = front.handle_line(&line);
+                flush_sharded_epochs(&mut durable, &front.engine);
+                let _ = reply.send(text);
+            }
+            Msg::Tick => {
+                let now = front.now_us();
+                front.engine.force_epoch(now);
+                flush_sharded_epochs(&mut durable, &front.engine);
+            }
+        }
+    }
+}
+
+/// Append every newly closed epoch to the checkpoint (fsync per record).
+fn flush_sharded_epochs(
+    durable: &mut Option<(CheckpointWriter, CheckpointCursor)>,
+    engine: &ShardedEngine,
+) {
+    if let Some((w, cursor)) = durable.as_mut() {
+        for rec in cursor.drain_costs(engine.costs(), engine.closed_epochs()) {
+            if let Err(e) = w.write(&rec) {
+                eprintln!("elastictl serve: checkpoint write failed: {e}");
+            }
+        }
+    }
+}
+
+/// The sharded control plane: owns the [`ShardedEngine`] and answers
+/// the command subset that has a sharded meaning. Per-tenant miss
+/// dollars fold into the front tracker only at epoch barriers, so
+/// `STATS`' `miss_cost` covers closed epochs (the open epoch's misses
+/// land at the next `EPOCH`).
+struct ShardedFront {
+    engine: ShardedEngine,
+    router: ShardRouter,
+    /// Registered tenant specs (roster + live ADMITs − RETIREs): seeds
+    /// partial `ADMIT` updates the way the monolith's registry does.
+    specs: Vec<TenantSpec>,
+    tenant_routing: bool,
+    start: Instant,
+}
+
+impl ShardedFront {
+    fn new(cfg: &Config, engine: ShardedEngine, start: Instant) -> ShardedFront {
+        let tenant_routing =
+            !cfg.tenants.is_empty() || cfg.scaler.policy == PolicyKind::TenantTtl;
+        let router = engine.router();
+        ShardedFront { engine, router, specs: cfg.tenants.clone(), tenant_routing, start }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Handle one protocol line; `None` closes the connection (`QUIT`).
+    fn handle_line(&mut self, line: &str) -> Option<String> {
+        let mut parts = line.split_ascii_whitespace();
+        match parts.next() {
+            Some("GET") => {
+                let token = match parts.next() {
+                    Some(t) => t,
+                    None => return Some("ERR missing key".to_string()),
+                };
+                let size: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+                let req = get_request(token, size, self.tenant_routing, self.now_us());
+                Some(get_reply(self.router.get(&req)))
+            }
+            Some("STATS") => match parts.next() {
+                None => Some(self.stats_line()),
+                Some(_) => Some(unsupported("STATS <tenant>")),
+            },
+            Some("EPOCH") => {
+                let now = self.now_us();
+                let n = self.engine.force_epoch(now);
+                Some(format!("RESIZED {n}"))
+            }
+            Some("ADMIT") => match parts.next() {
+                None => Some("ERR ADMIT needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.admit_line(tenant, parts)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("RETIRE") => match parts.next() {
+                None => Some("ERR RETIRE needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(match self.engine.retire_tenant(tenant) {
+                        Ok(()) => {
+                            self.specs.retain(|s| s.id != tenant);
+                            format!("OK {tenant} draining")
+                        }
+                        Err(e) => format!("ERR {e}"),
+                    }),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("BILL") => match parts.next() {
+                None => Some("ERR BILL needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.bill_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("QUIT") => None,
+            Some(other @ ("SLO" | "PLACEMENT" | "WHY" | "METRICS")) => {
+                Some(unsupported(other))
+            }
+            Some(other) => Some(format!("ERR unknown command {other}")),
+            None => Some("ERR empty".to_string()),
+        }
+    }
+
+    /// Aggregate one-line JSON for `STATS`: the shard counters summed,
+    /// plus the billed instance count and the shard fan-out.
+    fn stats_line(&mut self) -> String {
+        let stats = self.engine.shard_stats();
+        let requests: u64 = stats.iter().map(|s| s.requests).sum();
+        let misses: u64 = stats.iter().map(|s| s.misses).sum();
+        let spurious: u64 = stats.iter().map(|s| s.spurious_misses).sum();
+        let hm = crate::metrics::HitMiss { hits: requests - misses, misses };
+        format!(
+            "{{\"requests\":{requests},\"misses\":{misses},\"spurious\":{spurious},\
+             \"miss_ratio\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":null,\
+             \"tenants\":{},\"shards\":{}}}",
+            hm.try_miss_ratio().map(|r| format!("{r:.6}")).unwrap_or_else(|| "null".into()),
+            self.engine.instances(),
+            self.engine.costs().miss_total(),
+            self.specs.len().max(1),
+            self.engine.shards(),
+        )
+    }
+
+    /// `ADMIT <tenant> [key=value …]` with the same spec-field parsing
+    /// and error strings as [`ServerState`]'s admit path.
+    fn admit_line<'a>(
+        &mut self,
+        tenant: TenantId,
+        args: impl Iterator<Item = &'a str>,
+    ) -> String {
+        let mut spec = self
+            .specs
+            .iter()
+            .find(|s| s.id == tenant)
+            .cloned()
+            .unwrap_or_else(|| TenantSpec::new(tenant, format!("tenant{tenant}")));
+        for arg in args {
+            let Some((key, value)) = arg.split_once('=') else {
+                return format!("ERR bad admit arg {arg} (want key=value)");
+            };
+            match key {
+                "reserved_mb" => match value.parse::<f64>() {
+                    Ok(mb) if mb >= 0.0 && mb.is_finite() => {
+                        spec.reserved_bytes = (mb * 1024.0 * 1024.0) as u64;
+                    }
+                    _ => return format!("ERR bad reserved_mb {value}"),
+                },
+                "slo" => match value.parse::<f64>() {
+                    Ok(r) if (0.0..=1.0).contains(&r) => spec.slo_miss_ratio = Some(r),
+                    _ => return format!("ERR bad slo {value} (want a miss ratio in [0,1])"),
+                },
+                "multiplier" => match value.parse::<f64>() {
+                    Ok(m) if m > 0.0 && m.is_finite() => spec.miss_cost_multiplier = m,
+                    _ => return format!("ERR bad multiplier {value}"),
+                },
+                "name" => spec.name = value.to_string(),
+                other => return format!("ERR unknown admit key {other}"),
+            }
+        }
+        match self.engine.admit_tenant(spec.clone()) {
+            Ok(outcome) => {
+                self.specs.retain(|s| s.id != tenant);
+                self.specs.push(spec);
+                format!("OK {tenant} {}", outcome.as_str())
+            }
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    /// `BILL <tenant>`: the most recent close-out reconciliation, same
+    /// shape and error strings as the monolithic server's.
+    fn bill_line(&self, tenant: TenantId) -> String {
+        let Some(rec) = self
+            .engine
+            .costs()
+            .reconciliations()
+            .iter()
+            .rev()
+            .find(|r| r.tenant == tenant)
+        else {
+            return format!(
+                "ERR no reconciliation for tenant {tenant} (only a retired tenant \
+                 has a closed bill; STATS {tenant} reads the running ledger)"
+            );
+        };
+        format!(
+            "{{\"tenant\":{},\"at\":{},\"misses\":{},\"miss_dollars\":{},\
+             \"storage_dollars\":{},\"total_dollars\":{}}}",
+            rec.tenant,
+            rec.at,
+            rec.misses,
+            rec.miss_dollars,
+            rec.storage_dollars,
+            rec.total_dollars,
+        )
+    }
+}
+
+fn unsupported(what: &str) -> String {
+    format!("ERR {what} unsupported with [engine] shards > 1 (run a single shard for it)")
+}
+
+/// Build the engine [`Request`] for a `GET <token> <size>` line, with
+/// the same tenant-prefix and string-key hashing rules as
+/// [`ServerState`]'s GET path.
+fn get_request(token: &str, size: u64, tenant_routing: bool, ts: u64) -> Request {
+    let (tenant, key) = if tenant_routing { split_tenant_key(token) } else { (0, token) };
+    let obj = key.parse::<u64>().unwrap_or_else(|_| crate::mix64(fxhash_str(key)));
+    Request { ts, obj, size: size.min(u32::MAX as u64) as u32, tenant }
+}
+
+fn get_reply(outcome: Option<crate::engine::GetOutcome>) -> String {
+    match outcome {
+        Some(o) if o.hit => "HIT".to_string(),
+        Some(o) if o.spurious => "SPURIOUS".to_string(),
+        Some(_) => "MISS".to_string(),
+        None => "ERR shards shut down".to_string(),
+    }
+}
+
+/// Serve one connection against the sharded runtime: `GET`s are parsed
+/// and served right here on the connection thread, straight off the
+/// owning shard's channel — N connections drive N shards concurrently.
+/// Everything else hops to the front thread.
+pub fn handle_conn_sharded(
+    socket: TcpStream,
+    tx: SrvTx,
+    router: ShardRouter,
+    tenant_routing: bool,
+    start: Instant,
+) -> Result<()> {
+    let reader = BufReader::new(socket.try_clone()?);
+    let mut w = socket;
+    for line in reader.lines() {
+        let line = line?;
+        let text = match fast_get(&line, &router, tenant_routing, start) {
+            Some(reply) => Some(reply),
+            None => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                tx.send(Msg::Line(line, reply_tx))
+                    .map_err(|_| anyhow::anyhow!("state thread gone"))?;
+                reply_rx.recv()?
+            }
+        };
+        match text {
+            Some(text) => {
+                w.write_all(text.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            None => {
+                w.write_all(b"BYE\n")?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serve `line` on the connection thread if it is a well-formed `GET`;
+/// `None` means "forward to the front".
+fn fast_get(
+    line: &str,
+    router: &ShardRouter,
+    tenant_routing: bool,
+    start: Instant,
+) -> Option<String> {
+    let mut parts = line.split_ascii_whitespace();
+    if parts.next() != Some("GET") {
+        return None;
+    }
+    let Some(token) = parts.next() else {
+        return Some("ERR missing key".to_string());
+    };
+    let size: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let req = get_request(token, size, tenant_routing, start.elapsed().as_micros() as u64);
+    Some(get_reply(router.get(&req)))
 }
 
 #[cfg(test)]
@@ -361,5 +753,150 @@ mod tests {
         let stats = ask(&server.tx, "STATS").unwrap();
         assert!(stats.contains("\"requests\":8"), "{stats}");
         assert!(stats.contains("\"misses\":4"), "{stats}");
+    }
+
+    #[test]
+    fn sharded_front_serves_the_control_plane() {
+        let mut cfg = Config::with_policy(PolicyKind::Ttl);
+        cfg.engine.shards = 4;
+        let server = spawn_sharded_state(cfg, None).unwrap();
+        assert_eq!(server.resumed_epochs, 0);
+        assert_eq!(ask(&server.tx, "GET k 100").unwrap(), "MISS");
+        assert_eq!(ask(&server.tx, "GET k 100").unwrap(), "HIT");
+        assert!(ask(&server.tx, "EPOCH").unwrap().starts_with("RESIZED"));
+        let stats = ask(&server.tx, "STATS").unwrap();
+        assert!(stats.contains("\"requests\":2"), "{stats}");
+        assert!(stats.contains("\"misses\":1"), "{stats}");
+        assert!(stats.contains("\"shards\":4"), "{stats}");
+        assert!(ask(&server.tx, "WHY 1").unwrap().starts_with("ERR WHY unsupported"));
+        assert!(
+            ask(&server.tx, "PLACEMENT").unwrap().starts_with("ERR PLACEMENT unsupported"),
+        );
+        assert!(ask(&server.tx, "STATS 0").unwrap().starts_with("ERR STATS <tenant>"));
+        assert!(ask(&server.tx, "FROB").unwrap().starts_with("ERR unknown command"));
+        assert!(ask(&server.tx, "QUIT").is_none());
+    }
+
+    #[test]
+    fn sharded_admit_retire_bill_flow() {
+        let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+        cfg.engine.shards = 2;
+        cfg.controller.t_init_secs = 3600.0;
+        cfg.cost.instance.ram_bytes = 1_000_000;
+        cfg.scaler.max_instances = 4;
+        cfg.tenants = vec![crate::tenant::TenantSpec::new(0, "base")];
+        let server = spawn_sharded_state(cfg, None).unwrap();
+        assert_eq!(
+            ask(&server.tx, "ADMIT 5 reserved_mb=1 multiplier=3.0 name=guest").unwrap(),
+            "OK 5 admitted"
+        );
+        assert_eq!(ask(&server.tx, "GET 5/k1 1000").unwrap(), "MISS");
+        assert_eq!(ask(&server.tx, "GET 5/k1 1000").unwrap(), "HIT");
+        assert!(
+            ask(&server.tx, "BILL 5").unwrap().starts_with("ERR no reconciliation"),
+            "live tenants have no closed bill"
+        );
+        assert_eq!(ask(&server.tx, "RETIRE 5").unwrap(), "OK 5 draining");
+        ask(&server.tx, "EPOCH");
+        let bill = ask(&server.tx, "BILL 5").unwrap();
+        assert!(bill.starts_with('{'), "{bill}");
+        assert!(bill.contains("\"tenant\":5"), "{bill}");
+        assert!(bill.contains("\"misses\":1"), "{bill}");
+        // Error surface matches the monolithic server's strings.
+        assert!(ask(&server.tx, "ADMIT nope").unwrap().starts_with("ERR bad tenant"));
+        assert!(ask(&server.tx, "ADMIT 6 bogus").unwrap().starts_with("ERR bad admit arg"));
+        assert!(ask(&server.tx, "ADMIT 6 slo=7").unwrap().starts_with("ERR bad slo"));
+        assert!(ask(&server.tx, "RETIRE 99").unwrap().starts_with("ERR"));
+    }
+
+    #[test]
+    fn sharded_tcp_gets_run_on_connection_threads() {
+        let mut cfg = Config::with_policy(PolicyKind::Ttl);
+        cfg.engine.shards = 2;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = spawn_sharded_state(cfg, None).unwrap();
+        let (tx, router) = (server.tx.clone(), server.router.clone());
+        let (tenant_routing, start) = (server.tenant_routing, server.start);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let socket = stream.unwrap();
+                let (tx, router) = (tx.clone(), router.clone());
+                std::thread::spawn(move || {
+                    let _ = handle_conn_sharded(socket, tx, router, tenant_routing, start);
+                });
+            }
+        });
+        let mut handles = Vec::new();
+        for c in 0..4u32 {
+            handles.push(std::thread::spawn(move || {
+                let mut sock = TcpStream::connect(addr).unwrap();
+                sock.write_all(format!("GET c{c}k 100\nGET c{c}k 100\nQUIT\n").as_bytes())
+                    .unwrap();
+                let mut lines = BufReader::new(sock).lines();
+                assert_eq!(lines.next().unwrap().unwrap(), "MISS");
+                assert_eq!(lines.next().unwrap().unwrap(), "HIT");
+                assert_eq!(lines.next().unwrap().unwrap(), "BYE");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = ask(&server.tx, "STATS").unwrap();
+        assert!(stats.contains("\"requests\":8"), "{stats}");
+        assert!(stats.contains("\"misses\":4"), "{stats}");
+    }
+
+    #[test]
+    fn sharded_checkpoint_resume_is_bit_identical() {
+        let dir = tempdir().unwrap();
+        let interrupted = dir.path().join("interrupted.ckpt");
+        let baseline = dir.path().join("baseline.ckpt");
+        let cfg = || {
+            let mut c = Config::with_policy(PolicyKind::Fixed);
+            c.scaler.fixed_instances = 2;
+            c.engine.shards = 2;
+            c
+        };
+        let seg1: Vec<String> = (0..40).map(|i| format!("GET a{i} 1000")).collect();
+        let seg2: Vec<String> = (0..40).map(|i| format!("GET b{i} 1000")).collect();
+
+        // Baseline: both segments through one uninterrupted sharded server.
+        let bsrv = spawn_sharded_state(cfg(), Some(baseline.clone())).unwrap();
+        for line in &seg1 {
+            ask(&bsrv.tx, line);
+        }
+        ask(&bsrv.tx, "EPOCH");
+        for line in &seg2 {
+            ask(&bsrv.tx, line);
+        }
+        ask(&bsrv.tx, "EPOCH");
+        drop(bsrv.tx);
+
+        // Interrupted: segment 1, an EPOCH, then a "kill".
+        let s1 = spawn_sharded_state(cfg(), Some(interrupted.clone())).unwrap();
+        for line in &seg1 {
+            ask(&s1.tx, line);
+        }
+        ask(&s1.tx, "EPOCH");
+        drop(s1.tx);
+
+        // Resume and finish with segment 2.
+        let s2 = spawn_sharded_state(cfg(), Some(interrupted.clone())).unwrap();
+        assert_eq!(s2.resumed_epochs, 1, "one closed epoch must be restored");
+        for line in &seg2 {
+            ask(&s2.tx, line);
+        }
+        ask(&s2.tx, "EPOCH");
+        drop(s2.tx);
+
+        let last = |p: &std::path::Path| checkpoint::read(p).unwrap().pop().unwrap();
+        let (a, b) = (last(&interrupted), last(&baseline));
+        assert_eq!((a.epoch, b.epoch), (2, 2));
+        assert_eq!(a.cum_miss_dollars, b.cum_miss_dollars, "bit-identical miss dollars");
+        assert_eq!(a.cum_storage_dollars, b.cum_storage_dollars, "bit-identical storage");
+        assert_eq!(a.ledgers, b.ledgers, "bit-identical per-tenant ledgers");
+        assert_eq!(a.costs.instances, b.costs.instances);
+        assert_eq!(a.costs.miss_count, b.costs.miss_count);
     }
 }

@@ -1252,6 +1252,25 @@ impl EpochSizer for TenantTtlSizer {
         self.arbiter_timer = Some(registry.timer("elastictl_epoch_arbiter_ns"));
         self.grant_timer = Some(registry.timer("elastictl_epoch_grant_apply_ns"));
     }
+
+    fn shard_demands(&mut self, now: TimeUs) -> Option<Vec<TenantDemand>> {
+        // Exactly the first half of `decide`: boundary shadow maintenance,
+        // then the demand rows the local arbiter would have consumed —
+        // reported upward for the front's merged decision instead.
+        self.bank.expire_all(now);
+        self.bank.close_epoch_slo();
+        self.bank.note_epoch_boundary();
+        Some(self.bank.demands())
+    }
+
+    fn shard_apply_grants(&mut self, allocs: &[TenantAllocation]) {
+        // Exactly the second half of `decide`, fed this shard's slice of
+        // the front's grants (caps and TTL clamps land per shard).
+        for a in allocs {
+            self.bank.apply_grant(a, self.enforce);
+        }
+        self.last_allocations = allocs.to_vec();
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,130 @@
+//! Randomized shard-partition properties (the crate's offline proptest
+//! driver): the routing hash is a total deterministic partition of the
+//! `(tenant, key)` space, every shard's resident-bytes ledger stays the
+//! exact decomposition of its cluster occupancy under arbitrary traffic
+//! and epoch churn, and tenant lifecycle events reach every shard
+//! exactly once.
+//!
+//! Case count scales with `ELASTICTL_PROPTEST_CASES` (default 64); a
+//! failure prints the `(seed, case)` pair for deterministic replay.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::engine::{shard_of, ShardedEngine};
+use elastictl::trace::{Request, TenantEvent};
+use elastictl::util::proptest::check;
+use elastictl::util::rng::Pcg;
+use elastictl::{TenantId, MINUTE};
+
+fn random_trace(rng: &mut Pcg, len: usize, tenants: u16) -> Vec<Request> {
+    let mut ts = 0u64;
+    (0..len)
+        .map(|_| {
+            ts += rng.below(2_000_000) + 1;
+            let obj = rng.below(500);
+            let size = (64 + rng.below(100_000)) as u32;
+            Request::new(ts, obj, size).with_tenant(rng.below(tenants as u64) as u16)
+        })
+        .collect()
+}
+
+fn sharded(policy: PolicyKind, shards: u32) -> ShardedEngine {
+    let mut cfg = Config::with_policy(policy);
+    cfg.cost.instance.ram_bytes = 100_000_000;
+    cfg.cost.epoch_us = MINUTE;
+    cfg.engine.shards = shards;
+    ShardedEngine::new(&cfg).expect("policy shards")
+}
+
+#[test]
+fn prop_shard_of_is_a_deterministic_total_partition() {
+    check("shard_of_partition", 0x5A01, |rng| {
+        let shards = 1 + rng.below(16) as u32;
+        for _ in 0..200 {
+            let tenant = rng.below(1 << 16) as TenantId;
+            let obj = rng.next_u64();
+            let s = shard_of(tenant, obj, shards);
+            // In range, and the same shard on every evaluation: each
+            // (tenant, key) pair has exactly one owner.
+            assert!(s < shards as usize, "shard {s} out of range 0..{shards}");
+            assert_eq!(s, shard_of(tenant, obj, shards), "routing must be deterministic");
+            assert_eq!(shard_of(tenant, obj, 1), 0, "a single shard owns everything");
+        }
+    });
+}
+
+#[test]
+fn prop_requests_land_on_their_owning_shard() {
+    check("requests_follow_shard_of", 0x5A02, |rng| {
+        let shards = 1 + rng.below(8) as u32;
+        let trace = random_trace(rng, 200 + rng.below_usize(1_800), 4);
+        let mut expected = vec![0u64; shards as usize];
+        for r in &trace {
+            expected[shard_of(r.tenant, r.obj, shards)] += 1;
+        }
+        let mut engine = sharded(PolicyKind::Ttl, shards);
+        for r in &trace {
+            engine.offer(r);
+        }
+        let stats = engine.shard_stats();
+        assert_eq!(stats.len(), shards as usize);
+        let got: Vec<u64> = stats.iter().map(|s| s.requests).collect();
+        assert_eq!(got, expected, "per-shard request counts must match the routing hash");
+        assert_eq!(got.iter().sum::<u64>(), trace.len() as u64, "no request lost or duplicated");
+    });
+}
+
+#[test]
+fn prop_resident_ledgers_decompose_used_bytes() {
+    check("residents_partition_used", 0x5A03, |rng| {
+        let shards = 1 + rng.below(8) as u32;
+        let trace = random_trace(rng, 200 + rng.below_usize(1_800), 4);
+        let mut engine = sharded(PolicyKind::Ttl, shards);
+        for r in &trace {
+            engine.offer(r);
+        }
+        let stats = engine.shard_stats();
+        let mut total_used = 0u64;
+        for (i, s) in stats.iter().enumerate() {
+            let ledger_sum: u64 = s.tenant_residents.iter().map(|&(_, b)| b).sum();
+            assert_eq!(
+                ledger_sum,
+                s.used_bytes,
+                "shard {i}: tenant ledgers must sum to cluster used()"
+            );
+            total_used += s.used_bytes;
+        }
+        // Misses inserted something somewhere, and nothing was counted
+        // on two shards at once: the per-shard ledgers decompose the
+        // fleet-wide occupancy.
+        let misses: u64 = stats.iter().map(|s| s.misses).sum();
+        assert!(misses > 0, "a fresh cache must miss");
+        assert!(total_used > 0, "misses must leave residents behind");
+    });
+}
+
+#[test]
+fn prop_lifecycle_events_reach_every_shard_exactly_once() {
+    check("lifecycle_reaches_all_shards", 0x5A04, |rng| {
+        let shards = 1 + rng.below(8) as u32;
+        let mut engine = sharded(PolicyKind::TenantTtl, shards);
+        let admits = 1 + rng.below(6) as u16;
+        let retires = rng.below(admits as u64 + 1) as u16;
+        let mut ts = 0u64;
+        // Admit tenants 1..=admits, then retire the first `retires` of
+        // them, with tenant-0 traffic interleaved so barriers fire.
+        for id in 1..=admits {
+            ts += rng.below(5_000_000) + 1;
+            engine.apply_event(&TenantEvent::admit(ts, id)).expect("admit applies");
+            engine.offer(&Request::new(ts, rng.below(100), 1_000));
+        }
+        for id in 1..=retires {
+            ts += rng.below(5_000_000) + 1;
+            engine.apply_event(&TenantEvent::retire(ts, id)).expect("retire applies");
+            engine.offer(&Request::new(ts, rng.below(100), 1_000));
+        }
+        for (i, s) in engine.shard_stats().iter().enumerate() {
+            assert_eq!(s.admit_events, admits as u64, "shard {i}: ADMIT fan-out");
+            assert_eq!(s.retire_events, retires as u64, "shard {i}: RETIRE fan-out");
+        }
+    });
+}

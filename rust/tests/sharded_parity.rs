@@ -1,0 +1,231 @@
+//! Sharded-engine parity: `[engine] shards = N` must reproduce the
+//! single-shard run *bit-for-bit* — epoch-by-epoch bills, per-tenant
+//! epoch rows, retirement reconciliations, and the final RunReport
+//! totals — on a multi-tenant trace with mid-run ADMIT/RETIRE churn.
+//!
+//! The configs below pin the exactness class where bit parity is a hard
+//! guarantee rather than an approximation: a clamped controller
+//! (`t_min == t_max == t_init`, so every shard's local controller holds
+//! the same constant TTL), `min_instances == max_instances` (no resizes,
+//! hence no hash-slot shuffles and no spurious misses), ample per-shard
+//! capacity (no evictions, so hit/miss is a pure function of TTL and
+//! time, independent of placement), the default flat per-miss cost, and
+//! grant enforcement off. Within that class every divergence is a real
+//! bug in the barrier merge, not float noise, so the assertions compare
+//! `f64::to_bits` — never an epsilon.
+//!
+//! `ELASTICTL_TEST_SHARDS=N` narrows the shard matrix to one width (the
+//! CI shards leg runs the suite at 4); the default matrix is {2, 4}.
+
+use elastictl::config::{Config, PolicyKind};
+use elastictl::engine::{self, EngineBuilder, ShardedEngine};
+use elastictl::tenant::{TenantAllocation, TenantSpec};
+use elastictl::trace::{Request, SynthConfig, SynthGenerator, TenantEvent};
+use elastictl::{TimeUs, MINUTE};
+
+/// One step of the replayed workload: a request or a lifecycle event.
+enum Op {
+    Req(Request),
+    Event(TenantEvent),
+}
+
+const ADMIT_T3: TimeUs = 45 * MINUTE;
+const RETIRE_T2: TimeUs = 75 * MINUTE;
+
+/// Shard widths under test: {2, 4} by default, or the single width named
+/// by `ELASTICTL_TEST_SHARDS` (the CI shards matrix leg sets 4).
+fn test_shards() -> Vec<u32> {
+    match std::env::var("ELASTICTL_TEST_SHARDS") {
+        Ok(s) => vec![s.parse().expect("ELASTICTL_TEST_SHARDS must be a shard count")],
+        Err(_) => vec![2, 4],
+    }
+}
+
+/// Two simulated hours across tenants 0..=2, with tenant 3 admitted at
+/// 45 min (1.5× miss cost, an 8 MB reservation) and tenant 2 retired at
+/// 75 min — after which its traffic share moves to tenant 3.
+fn churn_ops() -> Vec<Op> {
+    let mut synth = SynthConfig::tiny();
+    synth.mean_rate = 25.0;
+    let trace = SynthGenerator::new(synth).generate();
+
+    let mut ops = Vec::with_capacity(trace.len() + 2);
+    let mut admitted = false;
+    let mut retired = false;
+    for (i, r) in trace.iter().enumerate() {
+        if !admitted && r.ts >= ADMIT_T3 {
+            ops.push(Op::Event(
+                TenantEvent::admit(ADMIT_T3, 3)
+                    .with_multiplier(1.5)
+                    .with_reserved_bytes(8_000_000),
+            ));
+            admitted = true;
+        }
+        if !retired && r.ts >= RETIRE_T2 {
+            ops.push(Op::Event(TenantEvent::retire(RETIRE_T2, 2)));
+            retired = true;
+        }
+        let tenant = if retired {
+            // Tenant 2 is draining; its slot routes to the newcomer.
+            match i % 3 {
+                0 => 0,
+                1 => 1,
+                _ => 3,
+            }
+        } else if admitted {
+            (i % 4) as u16
+        } else {
+            (i % 3) as u16
+        };
+        ops.push(Op::Req(r.with_tenant(tenant)));
+    }
+    assert!(admitted && retired, "trace too short for the churn schedule");
+    ops
+}
+
+/// A config inside the bit-parity exactness class (see module docs).
+fn parity_cfg(policy: PolicyKind) -> Config {
+    let mut cfg = Config::with_policy(policy);
+    cfg.cost.instance.ram_bytes = 400_000_000;
+    cfg.cost.epoch_us = 10 * MINUTE;
+    cfg.scaler.fixed_instances = 4;
+    cfg.scaler.min_instances = 4;
+    cfg.scaler.max_instances = 4;
+    cfg.controller.t_init_secs = 300.0;
+    cfg.controller.t_min_secs = 300.0;
+    cfg.controller.t_max_secs = 300.0;
+    if policy == PolicyKind::TenantTtl {
+        cfg.tenants = vec![
+            TenantSpec::new(0, "a").with_multiplier(2.0).with_reserved_bytes(4_000_000),
+            TenantSpec::new(1, "b"),
+            TenantSpec::new(2, "c").with_multiplier(0.5),
+        ];
+    }
+    cfg
+}
+
+fn run_monolith(cfg: &Config, ops: &[Op]) -> engine::RunReport {
+    let mut e = EngineBuilder::new(cfg).no_default_probes().build();
+    for op in ops {
+        match op {
+            Op::Req(r) => {
+                e.offer(r);
+            }
+            Op::Event(ev) => e.apply_event(ev).expect("lifecycle event applies"),
+        }
+    }
+    e.finish()
+}
+
+type GrantsLog = Vec<(TimeUs, Vec<TenantAllocation>)>;
+
+fn run_sharded(cfg: &Config, shards: u32, ops: &[Op]) -> (engine::RunReport, GrantsLog) {
+    let mut cfg = cfg.clone();
+    cfg.engine.shards = shards;
+    let mut e = ShardedEngine::new(&cfg).expect("policy shards");
+    for op in ops {
+        match op {
+            Op::Req(r) => e.offer(r),
+            Op::Event(ev) => e.apply_event(ev).expect("lifecycle event applies"),
+        }
+    }
+    let grants = e.grants_log().to_vec();
+    (e.finish(), grants)
+}
+
+/// Every pinned aggregate, epoch row, tenant bill, and reconciliation —
+/// compared on `to_bits`, so "close" is a failure.
+fn assert_bit_identical(got: &engine::RunReport, want: &engine::RunReport, what: &str) {
+    assert_eq!(got.requests, want.requests, "{what}: requests");
+    assert_eq!(got.misses, want.misses, "{what}: misses");
+    assert_eq!(got.spurious_misses, want.spurious_misses, "{what}: spurious");
+
+    assert_eq!(got.epochs.len(), want.epochs.len(), "{what}: epoch count");
+    for (g, w) in got.epochs.iter().zip(&want.epochs) {
+        assert_eq!(g.t, w.t, "{what}: epoch boundary");
+        assert_eq!(g.instances, w.instances, "{what}: instances at t={}", g.t);
+        assert_eq!(g.miss_count, w.miss_count, "{what}: miss count at t={}", g.t);
+        assert_eq!(
+            (g.storage.to_bits(), g.miss.to_bits()),
+            (w.storage.to_bits(), w.miss.to_bits()),
+            "{what}: epoch dollars at t={} (got {g:?}, want {w:?})",
+            g.t,
+        );
+    }
+
+    assert_eq!(got.tenant_bills.len(), want.tenant_bills.len(), "{what}: bill rows");
+    for (g, w) in got.tenant_bills.iter().zip(&want.tenant_bills) {
+        assert_eq!((g.t, g.tenant), (w.t, w.tenant), "{what}: bill row order");
+        assert_eq!(
+            (g.storage.to_bits(), g.miss.to_bits()),
+            (w.storage.to_bits(), w.miss.to_bits()),
+            "{what}: tenant {} bill at t={} (got {g:?}, want {w:?})",
+            g.tenant,
+            g.t,
+        );
+    }
+
+    assert_eq!(
+        got.reconciliations.len(),
+        want.reconciliations.len(),
+        "{what}: reconciliation count"
+    );
+    for (g, w) in got.reconciliations.iter().zip(&want.reconciliations) {
+        assert_eq!((g.tenant, g.at, g.misses), (w.tenant, w.at, w.misses), "{what}: recon id");
+        assert_eq!(
+            (g.miss_dollars.to_bits(), g.storage_dollars.to_bits(), g.total_dollars.to_bits()),
+            (w.miss_dollars.to_bits(), w.storage_dollars.to_bits(), w.total_dollars.to_bits()),
+            "{what}: tenant {} closed bill (got {g:?}, want {w:?})",
+            g.tenant,
+        );
+    }
+
+    assert_eq!(got.storage_cost.to_bits(), want.storage_cost.to_bits(), "{what}: storage total");
+    assert_eq!(got.miss_cost.to_bits(), want.miss_cost.to_bits(), "{what}: miss total");
+    assert_eq!(got.total_cost.to_bits(), want.total_cost.to_bits(), "{what}: grand total");
+}
+
+#[test]
+fn sharded_matches_single_shard_bit_for_bit() {
+    let ops = churn_ops();
+    for policy in [PolicyKind::Fixed, PolicyKind::Ttl, PolicyKind::TenantTtl] {
+        let cfg = parity_cfg(policy);
+        let (want, want_grants) = run_sharded(&cfg, 1, &ops);
+        assert!(want.requests > 100_000, "trace too small to be meaningful");
+        assert!(want.epochs.len() >= 10, "trace spans too few epochs");
+        for shards in test_shards() {
+            let what = format!("{policy:?} shards={shards}");
+            let (got, got_grants) = run_sharded(&cfg, shards, &ops);
+            assert_bit_identical(&got, &want, &what);
+            assert_eq!(got_grants, want_grants, "{what}: grants log");
+        }
+    }
+    // The churn actually exercised retirement billing.
+    let (base, _) = run_sharded(&parity_cfg(PolicyKind::TenantTtl), 1, &ops);
+    assert_eq!(base.reconciliations.len(), 1);
+    assert_eq!(base.reconciliations[0].tenant, 2);
+}
+
+#[test]
+fn sharded_matches_the_monolithic_engine_bit_for_bit() {
+    let ops = churn_ops();
+    for policy in [PolicyKind::Fixed, PolicyKind::Ttl, PolicyKind::TenantTtl] {
+        let cfg = parity_cfg(policy);
+        let want = run_monolith(&cfg, &ops);
+        for shards in test_shards() {
+            let (got, _) = run_sharded(&cfg, shards, &ops);
+            assert_bit_identical(&got, &want, &format!("{policy:?} shards={shards} vs monolith"));
+        }
+    }
+}
+
+#[test]
+fn sharded_runs_are_deterministic_across_repeats() {
+    let ops = churn_ops();
+    let cfg = parity_cfg(PolicyKind::TenantTtl);
+    let shards = *test_shards().last().unwrap();
+    let (a, grants_a) = run_sharded(&cfg, shards, &ops);
+    let (b, grants_b) = run_sharded(&cfg, shards, &ops);
+    assert_bit_identical(&a, &b, "repeat run");
+    assert_eq!(grants_a, grants_b, "repeat run: grants log");
+}

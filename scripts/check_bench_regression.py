@@ -10,11 +10,20 @@ emitted by the bench harness when ELASTICTL_BENCH_JSON is set). A run
 whose throughput drops more than `tolerance` below its baseline is
 reported as a regression via a GitHub Actions ::warning:: annotation.
 
-The gate is advisory (exit code 0 either way): quick-mode numbers on
-shared CI runners are noisy, so the job warns instead of failing. To
-ratchet the baseline, copy numbers from the BENCH_<sha>.json artifact of
-a healthy run into rust/benches/baseline.json — keep them conservative
-(below typical runner throughput) so only real regressions trip.
+The throughput gate is advisory (quick-mode numbers on shared CI
+runners are noisy, so it warns instead of failing). To ratchet the
+baseline, copy numbers from the BENCH_<sha>.json artifact of a healthy
+run into rust/benches/baseline.json — keep them conservative (below
+typical runner throughput) so only real regressions trip. Rows present
+in the current run but absent from the baseline draw a ::warning:: so
+new benches get floors instead of silently escaping the gate.
+
+The baseline's "scaling" section is the one hard gate: each rule
+requires `row` to sustain at least `min_ratio` times the throughput of
+`vs` (e.g. the 8-shard engine vs the single-shard engine). The ratio is
+enforced with exit code 1 only when the runner has at least `min_cores`
+CPUs (os.cpu_count()); below that a shard-starved runner cannot
+demonstrate the speedup, so the rule downgrades to a ::warning::.
 
 `--append-history` appends one JSON line per run (UTC timestamp, commit
 sha from $GITHUB_SHA, suite name, per-bench throughput and p50/p999
@@ -89,6 +98,10 @@ def main() -> int:
     for name in sorted(set(results) - set(floors)):
         tput = float(results[name].get("throughput_per_sec", 0.0))
         print(f"{name:<44} {'(no baseline)':>14} {tput:>14.0f}  new — consider adding")
+        print(
+            f"::warning title=bench baseline missing::{name}: {tput:.0f}/s has no "
+            f"baseline floor — add one to rust/benches/baseline.json"
+        )
 
     if regressions:
         for name, floor, tput in regressions:
@@ -100,9 +113,53 @@ def main() -> int:
     else:
         print(f"bench gate: all within {tolerance:.0%} of baseline")
 
+    failures = check_scaling(baseline, results)
+
     if history is not None:
         append_history(history, current)
-    return 0
+    return 1 if failures else 0
+
+
+def check_scaling(baseline: dict, results: dict) -> list:
+    """Enforce the baseline's scaling rules; returns the failed rows."""
+    failures = []
+    cores = os.cpu_count() or 0
+    for rule in baseline.get("scaling", []):
+        row, vs = rule["row"], rule["vs"]
+        min_ratio = float(rule.get("min_ratio", 1.0))
+        min_cores = int(rule.get("min_cores", 0))
+        a, b = results.get(row), results.get(vs)
+        if a is None or b is None:
+            missing = row if a is None else vs
+            print(
+                f"::warning title=scaling gate skipped::{missing} not in the bench "
+                f"output — cannot judge {row} vs {vs}"
+            )
+            continue
+        num = float(a.get("throughput_per_sec", 0.0))
+        den = float(b.get("throughput_per_sec", 0.0))
+        ratio = num / den if den > 0 else 0.0
+        enforced = cores >= min_cores
+        mode = "enforced" if enforced else f"advisory — {cores} cores < {min_cores}"
+        verdict = "ok" if ratio >= min_ratio else "BELOW TARGET"
+        print(
+            f"scaling {row} vs {vs}: {ratio:.2f}x "
+            f"(min {min_ratio:.2f}x, {mode})  {verdict}"
+        )
+        if ratio >= min_ratio:
+            continue
+        if enforced:
+            print(
+                f"::error title=scaling regression::{row}: {ratio:.2f}x vs {vs} "
+                f"(minimum {min_ratio:.2f}x on runners with >= {min_cores} cores)"
+            )
+            failures.append(row)
+        else:
+            print(
+                f"::warning title=scaling below target::{row}: {ratio:.2f}x vs {vs} "
+                f"(minimum {min_ratio:.2f}x; advisory on this {cores}-core runner)"
+            )
+    return failures
 
 
 if __name__ == "__main__":
