@@ -32,7 +32,8 @@ mod shard;
 
 pub use policy::{build_policy, build_sizer, EnginePolicy, VerticalTtl};
 pub use shard::{
-    shard_of, split_even, split_proportional, GetOutcome, ShardRouter, ShardStats, ShardedEngine,
+    shard_of, split_even, split_proportional, sum_tenant_stats, GetOutcome, ShardObservation,
+    ShardRouter, ShardStats, ShardedEngine,
 };
 pub use probe::{
     BalanceProbe, JournalProbe, LifecycleProbe, LifecycleSample, PlacementProbe,
@@ -1025,18 +1026,14 @@ pub fn run(cfg: &Config, source: &mut dyn RequestSource) -> RunReport {
 /// same item stream, same lifecycle-event skip semantics, with the hot
 /// path fanned across the shard workers. Probe-derived report sections
 /// (ttl/shadow series, balance, per-tenant summaries) stay empty — the
-/// counters, epochs, bills and totals are complete, and the
-/// `sharded_parity` test pins them against the single-shard run.
+/// counters, epochs, bills, totals, journal and telemetry rows are
+/// complete, and the `sharded_parity` test pins them against the
+/// single-shard run.
 fn run_sharded(
     cfg: &Config,
     mut engine: ShardedEngine,
     source: &mut dyn RequestSource,
 ) -> RunReport {
-    if cfg.telemetry.enabled {
-        eprintln!(
-            "engine: telemetry registry/journal are not collected with [engine] shards > 1"
-        );
-    }
     while let Some(item) = source.next_item() {
         match item {
             TraceItem::Request(req) => {
@@ -1052,7 +1049,24 @@ fn run_sharded(
             }
         }
     }
-    engine.finish()
+    let report = engine.finish();
+    // Same journal JSONL artifact as the monolithic drain loop.
+    if let Some(path) = &cfg.telemetry.journal_path {
+        let mut body = String::new();
+        for rec in &report.journal {
+            body.push_str(&rec.to_json());
+            body.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("engine: failed to write telemetry journal to {path}: {e}");
+        }
+    }
+    report
 }
 
 #[cfg(test)]

@@ -32,13 +32,25 @@
 //! 6. **Reconcile** — a retiring tenant's bill closes once *every* shard
 //!    has drained its slice.
 //!
+//! Observability is shard-native: with `[telemetry] enabled` each
+//! worker attaches its balancer to a per-shard [`TelemetryRegistry`]
+//! (scraped with `shard="i"` labels plus cluster-level sums through
+//! [`crate::telemetry::prometheus_merged`]), the front records
+//! shard-health metrics (queue depth, batch occupancy, barrier-wait and
+//! merge timers, request imbalance), and the barrier replays the
+//! monolithic `JournalProbe` record assembly over the merged state, so
+//! the per-epoch decision records are bit-identical to the `shards = 1`
+//! journal.
+//!
 //! With `shards = 1` the classic [`super::Engine`] runs instead (the
 //! seed loops stay bit-identical; `engine_parity` pins them); the
 //! `sharded_parity` integration test proves `shards = N` reproduces the
-//! `shards = 1` epoch rows, grants, bills and totals bit-for-bit.
+//! `shards = 1` epoch rows, grants, bills, totals — and journal records
+//! — bit-for-bit.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::balancer::Balancer;
 use crate::cluster::BalanceTracker;
@@ -46,9 +58,14 @@ use crate::config::{Config, CostConfig, PolicyKind};
 use crate::cost::{
     CostTracker, EpochCosts, MissAccountant, TenantEpochBill, TenantLedger, TenantReconciliation,
 };
-use crate::metrics::TimeSeries;
+use crate::metrics::{HitMiss, TimeSeries};
+use crate::placement::PlacementSnapshot;
+use crate::telemetry::{
+    self, Counter, EpochDecisionRecord, Gauge, Journal, TelemetryRegistry, TenantDecision, Timer,
+};
 use crate::tenant::{
-    scoped_object, AdmitOutcome, Arbiter, TenantAllocation, TenantDemand, TenantSpec,
+    scoped_object, AdmitOutcome, Arbiter, Lifecycle, TenantAllocation, TenantDemand,
+    TenantEnforcement, TenantSpec, SLO_BOOST_MAX, SLO_BOOST_STEP,
 };
 use crate::trace::{Request, TenantEvent, TenantEventKind};
 use crate::{mix64, ObjectId, Result, TenantId, TimeUs};
@@ -161,11 +178,46 @@ pub struct ShardStats {
 struct ShardCollect {
     residents: Vec<(TenantId, u64)>,
     miss_runs: Vec<(TenantId, f64, u64)>,
+    /// Cumulative per-tenant hit/miss counters, indexed by tenant id.
+    /// The front differences Σ-over-shards against the previous boundary
+    /// to replicate each tenant's SLO measurement window.
+    tenant_stats: Vec<HitMiss>,
 }
 
 /// Post-apply barrier reply from one shard.
 struct ShardApplied {
     retired: Vec<TenantId>,
+    /// Post-apply per-tenant resident bytes (the journal's ledger view).
+    residents: Vec<(TenantId, u64)>,
+    /// This boundary's `(tenant, resident_before, freed)` shed log.
+    shed: Vec<(TenantId, u64, u64)>,
+    /// Post-apply enforcement rows (`None` = the policy does not
+    /// arbitrate tenants).
+    enforcement: Option<Vec<TenantEnforcement>>,
+}
+
+/// Point-in-time observability snapshot of one shard. The front merges
+/// these — summing values over the disjoint shard slices, taking
+/// spec-wide values once — to answer the server's `SLO`, `PLACEMENT`
+/// and `STATS <tenant>` queries at the cost of one round-trip.
+#[derive(Debug, Clone)]
+pub struct ShardObservation {
+    /// Enforcement rows (`None` = the policy does not arbitrate tenants).
+    pub enforcement: Option<Vec<TenantEnforcement>>,
+    /// Per-tenant lifecycle states (`None` = no lifecycle tracking).
+    pub lifecycle: Option<Vec<(TenantId, Lifecycle)>>,
+    /// Cumulative per-tenant hit/miss counters, indexed by tenant id.
+    pub tenant_stats: Vec<HitMiss>,
+    /// Per-tenant resident bytes on this shard (id ascending).
+    pub residents: Vec<(TenantId, u64)>,
+    /// This shard's placement snapshot.
+    pub placement: PlacementSnapshot,
+    /// Per-tenant controller TTLs, seconds (`None` = single controller).
+    pub ttls: Option<Vec<(TenantId, f64)>>,
+    /// Instances this shard's cluster currently owns (pins in
+    /// [`Self::placement`] index into them; a merged view offsets each
+    /// shard's pins by the preceding shards' counts).
+    pub instances: u32,
 }
 
 /// Final-drain reply from one shard ([`ShardedEngine::finish`]).
@@ -198,8 +250,10 @@ enum ToShard {
         allocs: Vec<TenantAllocation>,
         reply: Sender<ShardApplied>,
     },
-    /// Admit (or update) a tenant on this shard.
-    Admit(TenantSpec, TimeUs, Sender<Result<AdmitOutcome>>),
+    /// Admit (or update) a tenant on this shard; the reply carries the
+    /// shard's cumulative hit/miss counters for the tenant so the front
+    /// can reset its SLO window replica on readmission.
+    Admit(TenantSpec, TimeUs, Sender<Result<(AdmitOutcome, HitMiss)>>),
     /// Begin retiring a tenant on this shard.
     Retire(TenantId, TimeUs, Sender<Result<()>>),
     /// Final partial-epoch snapshot + drain ([`ShardedEngine::finish`]).
@@ -208,6 +262,9 @@ enum ToShard {
     Resize(u32),
     /// Counter/ledger snapshot.
     Stats(Sender<ShardStats>),
+    /// Live observability snapshot (the server's `SLO` / `PLACEMENT` /
+    /// `STATS <tenant>` surface).
+    Observe(Sender<ShardObservation>),
     /// Exit the worker loop even while [`ShardRouter`] clones (server
     /// connection threads) still hold senders.
     Shutdown,
@@ -216,8 +273,19 @@ enum ToShard {
 /// The worker body: owns one balancer (cluster slice + placement +
 /// policy state) built on-thread from the shared config, and drains its
 /// channel until the front drops the sender.
-fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
+fn worker_loop(
+    cfg: Config,
+    initial: u32,
+    telemetry: Option<TelemetryRegistry>,
+    rx: Receiver<ToShard>,
+) {
     let mut b = Balancer::from_config(&cfg, build_sizer(&cfg), initial);
+    if let Some(mut reg) = telemetry {
+        // Pre-resolve this worker's counter/timer handles. The front
+        // holds a clone of the same registry, so the scrape sees them
+        // live under its `shard="i"` label.
+        b.attach_telemetry(&mut reg);
+    }
     if cfg.serve.ttl_expiry_secs > 0.0 {
         b.cluster.enable_ttl_expiry(std::time::Duration::from_secs_f64(cfg.serve.ttl_expiry_secs));
     }
@@ -239,6 +307,7 @@ fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
                 let _ = reply.send(ShardCollect {
                     residents: b.cluster.tenant_residents(),
                     miss_runs: ledger.take_runs(),
+                    tenant_stats: b.tenant_stats().to_vec(),
                 });
             }
             ToShard::Prepare(now, reply) => {
@@ -247,7 +316,12 @@ fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
             }
             ToShard::Apply { now, target, allocs, reply } => {
                 b.finish_epoch_shard(now, target, &allocs);
-                let _ = reply.send(ShardApplied { retired: b.take_retired() });
+                let _ = reply.send(ShardApplied {
+                    retired: b.take_retired(),
+                    residents: b.cluster.tenant_residents(),
+                    shed: b.last_epoch_shed().to_vec(),
+                    enforcement: b.tenant_enforcement(),
+                });
             }
             ToShard::Admit(spec, now, reply) => {
                 admit_events += 1;
@@ -257,7 +331,7 @@ fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
                 if out.is_ok() {
                     ledger.set_weight(id, weight);
                 }
-                let _ = reply.send(out);
+                let _ = reply.send(out.map(|o| (o, b.tenant_stats_of(id))));
             }
             ToShard::Retire(tenant, now, reply) => {
                 retire_events += 1;
@@ -299,6 +373,17 @@ fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
                     retire_events,
                 });
             }
+            ToShard::Observe(reply) => {
+                let _ = reply.send(ShardObservation {
+                    enforcement: b.tenant_enforcement(),
+                    lifecycle: b.lifecycle(),
+                    tenant_stats: b.tenant_stats().to_vec(),
+                    residents: b.cluster.tenant_residents(),
+                    placement: b.cluster.placement_snapshot(),
+                    ttls: b.tenant_ttls(),
+                    instances: b.cluster.len() as u32,
+                });
+            }
             ToShard::Shutdown => break,
         }
     }
@@ -312,6 +397,131 @@ fn worker_loop(cfg: Config, initial: u32, rx: Receiver<ToShard>) {
 enum FrontDecider {
     Fixed(u32),
     Arbiter(Arbiter),
+}
+
+/// Front-side replica of one tenant's SLO window state. The per-slot
+/// `SloState` lives inside each shard's controller bank, where it closes
+/// on shard-local windows; the front re-runs the same arithmetic on the
+/// Σ-over-shards window, so `measured_miss_ratio` and `boost` in merged
+/// enforcement rows and journal records are bit-identical to the
+/// monolithic engine's. Maintained whether or not telemetry is on (the
+/// server's `SLO` command works without telemetry, as on the monolith).
+#[derive(Debug, Clone)]
+struct SloReplica {
+    target: Option<f64>,
+    measured: Option<f64>,
+    boost: f64,
+}
+
+impl Default for SloReplica {
+    fn default() -> Self {
+        SloReplica::new(None)
+    }
+}
+
+impl SloReplica {
+    fn new(target: Option<f64>) -> SloReplica {
+        SloReplica { target, measured: None, boost: 1.0 }
+    }
+
+    /// Mirror of the monolithic `SloState::close_epoch` on an explicit
+    /// `(hits, misses)` window: the same integer counts and the same
+    /// division give the same bits; quiet windows keep the last
+    /// measurement and decay the boost.
+    fn close_epoch(&mut self, hits: u64, misses: u64) {
+        let total = hits + misses;
+        let fresh = if total > 0 { Some(misses as f64 / total as f64) } else { None };
+        if fresh.is_some() {
+            self.measured = fresh;
+        }
+        if let Some(target) = self.target {
+            match fresh {
+                Some(m) if m > target => {
+                    self.boost = (self.boost * SLO_BOOST_STEP).min(SLO_BOOST_MAX);
+                }
+                _ => {
+                    self.boost = (self.boost / SLO_BOOST_STEP).max(1.0);
+                }
+            }
+        }
+    }
+}
+
+/// The front's telemetry state (`[telemetry] enabled` only): the front
+/// registry (barrier + decision metrics, no `shard` label), one registry
+/// per shard worker (scraped under `shard="i"` labels plus cluster-level
+/// sums), the decision-journal ring, and the cursor state the monolithic
+/// `JournalProbe` keeps — the barrier's record assembly mirrors it field
+/// for field.
+struct FrontTelemetry {
+    registry: TelemetryRegistry,
+    shard_registries: Vec<TelemetryRegistry>,
+    journal: Journal,
+    /// Grantable capacity stamped on every record
+    /// (`max_instances × instance bytes`).
+    capacity_bytes: u64,
+    /// Zero-based index of the next epoch to record.
+    epoch: u64,
+    /// Cumulative denied admissions per tenant id at the previous
+    /// boundary (the enforcement rows expose lifetime totals).
+    prev_denied: Vec<u64>,
+    /// Bill / reconciliation rows already attributed to earlier records.
+    bills_seen: usize,
+    recons_seen: usize,
+    /// Cumulative cluster dollars at the previous boundary.
+    prev_storage: f64,
+    prev_miss: f64,
+    /// Shard-health handles: per-shard front-buffer depth at the barrier
+    /// and flushed-batch size, the per-shard request counters feeding the
+    /// imbalance gauge (max/mean), and the barrier timers.
+    queue_depth: Vec<Gauge>,
+    batch_occupancy: Vec<Gauge>,
+    shard_requests: Vec<Counter>,
+    imbalance: Gauge,
+    barrier_wait: Timer,
+    epoch_merge: Timer,
+}
+
+impl FrontTelemetry {
+    fn new(cfg: &Config, shards: u32) -> FrontTelemetry {
+        let registry = TelemetryRegistry::new();
+        let shard_registries: Vec<TelemetryRegistry> =
+            (0..shards).map(|_| TelemetryRegistry::new()).collect();
+        let queue_depth = shard_registries
+            .iter()
+            .map(|r| r.gauge("elastictl_shard_queue_depth"))
+            .collect();
+        let batch_occupancy = shard_registries
+            .iter()
+            .map(|r| r.gauge("elastictl_shard_batch_occupancy"))
+            .collect();
+        let shard_requests = shard_registries
+            .iter()
+            .map(|r| r.counter("elastictl_requests_total"))
+            .collect();
+        let imbalance = registry.gauge("elastictl_shard_request_imbalance");
+        let barrier_wait = registry.timer("elastictl_epoch_barrier_wait_ns");
+        let epoch_merge = registry.timer("elastictl_epoch_merge_ns");
+        FrontTelemetry {
+            registry,
+            shard_registries,
+            journal: Journal::new(cfg.telemetry.journal_capacity as usize),
+            capacity_bytes: (cfg.scaler.max_instances as u64)
+                .saturating_mul(cfg.cost.instance.ram_bytes),
+            epoch: 0,
+            prev_denied: Vec::new(),
+            bills_seen: 0,
+            recons_seen: 0,
+            prev_storage: 0.0,
+            prev_miss: 0.0,
+            queue_depth,
+            batch_occupancy,
+            shard_requests,
+            imbalance,
+            barrier_wait,
+            epoch_merge,
+        }
+    }
 }
 
 /// Cloneable per-connection handle: routes one request straight to its
@@ -365,6 +575,16 @@ pub struct ShardedEngine {
     /// Tenants drained on some-but-not-all shards: `(tenant, shards
     /// reported)`. A bill closes only when the count reaches N.
     pending_retired: Vec<(TenantId, u32)>,
+    /// Front-side SLO window replicas, indexed by tenant id. Always
+    /// maintained — the `SLO` surface works with telemetry off, exactly
+    /// as the monolithic engine's does.
+    slo: Vec<SloReplica>,
+    /// Σ-over-shards cumulative hit/miss counters at the last boundary
+    /// (the replicas' measurement windows difference against these).
+    prev_stats: Vec<HitMiss>,
+    /// Registries + decision journal (`None` unless `[telemetry]
+    /// enabled`).
+    obs: Option<FrontTelemetry>,
 }
 
 impl ShardedEngine {
@@ -389,6 +609,19 @@ impl ShardedEngine {
         for spec in &cfg.tenants {
             costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
         }
+        // Front SLO replicas, seeded from the config roster; stray
+        // tenants grow the vector lazily with best-effort defaults,
+        // matching the monolithic bank's lazy admission.
+        let mut slo: Vec<SloReplica> = Vec::new();
+        for spec in &cfg.tenants {
+            let i = spec.id as usize;
+            if slo.len() <= i {
+                slo.resize_with(i + 1, SloReplica::default);
+            }
+            slo[i] = SloReplica::new(spec.slo_miss_ratio);
+        }
+        let prev_stats = vec![HitMiss::default(); slo.len()];
+        let obs = cfg.telemetry.enabled.then(|| FrontTelemetry::new(cfg, shards));
         // Shard initial sizes split the monolithic initial size, so a
         // constant-target config never resizes (no slot reshuffles, no
         // spurious misses the monolith would not have had).
@@ -399,9 +632,10 @@ impl ShardedEngine {
             let (tx, rx) = mpsc::channel();
             let wcfg = cfg.clone();
             let n0 = initial[s as usize];
+            let wreg = obs.as_ref().map(|o| o.shard_registries[s as usize].clone());
             let handle = std::thread::Builder::new()
                 .name(format!("elastictl-shard-{s}"))
-                .spawn(move || worker_loop(wcfg, n0, rx))?;
+                .spawn(move || worker_loop(wcfg, n0, wreg, rx))?;
             txs.push(tx);
             workers.push(handle);
         }
@@ -423,6 +657,9 @@ impl ShardedEngine {
             epochs: Vec::new(),
             grants_log: Vec::new(),
             pending_retired: Vec::new(),
+            slo,
+            prev_stats,
+            obs,
         })
     }
 
@@ -480,12 +717,28 @@ impl ShardedEngine {
         let now = self.clock;
         let replies = self.round_trip(|_, reply| ToShard::Admit(spec.clone(), now, reply));
         let mut outcome = None;
+        let mut stats = HitMiss::default();
         for r in replies {
-            let o = r?;
+            let (o, hm) = r?;
             outcome.get_or_insert(o);
+            stats.hits += hm.hits;
+            stats.misses += hm.misses;
         }
         let outcome = outcome.expect("at least one shard replied");
         self.costs.set_tenant_weight(spec.id, spec.miss_cost_multiplier);
+        // Keep the front SLO replica in lockstep with the slots: a fresh
+        // (re)admission starts a fresh window state — mid-epoch, so the
+        // window baseline resets to the tenant's cumulative counters —
+        // while an update only retargets it.
+        self.grow_tenant_state(spec.id as usize + 1);
+        let i = spec.id as usize;
+        match outcome {
+            AdmitOutcome::Updated => self.slo[i].target = spec.slo_miss_ratio,
+            AdmitOutcome::Admitted | AdmitOutcome::Readmitted => {
+                self.slo[i] = SloReplica::new(spec.slo_miss_ratio);
+                self.prev_stats[i] = stats;
+            }
+        }
         Ok(outcome)
     }
 
@@ -573,6 +826,16 @@ impl ShardedEngine {
         for tenant in done {
             self.costs.close_tenant(tenant, t_bill);
         }
+        // The final partial epoch bills but records no journal entry —
+        // the monolithic engine's finish runs no decision either.
+        let journal = match &self.obs {
+            Some(o) => o.journal.records().cloned().collect(),
+            None => Vec::new(),
+        };
+        let telemetry_rows = match &self.obs {
+            Some(o) => telemetry::snapshot_merged(&o.registry, &o.shard_registries),
+            None => Vec::new(),
+        };
         let report = RunReport {
             policy: self.policy_name.clone(),
             requests: fins.iter().map(|f| f.requests).sum(),
@@ -593,8 +856,8 @@ impl ShardedEngine {
             lifecycle: Vec::new(),
             tenant_bills: self.costs.tenant_bills().to_vec(),
             reconciliations: self.costs.reconciliations().to_vec(),
-            journal: Vec::new(),
-            telemetry: Vec::new(),
+            journal,
+            telemetry: telemetry_rows,
             total_cost: self.costs.total(),
             storage_cost: self.costs.storage_total(),
             miss_cost: self.costs.miss_total(),
@@ -662,34 +925,132 @@ impl ShardedEngine {
         self.round_trip(|_, reply| ToShard::Stats(reply))
     }
 
+    // --- the observability surface ---
+
+    /// The live epoch decision journal (`None` unless `[telemetry]
+    /// enabled`) — the server's `WHY <tenant>` reads this.
+    pub fn journal(&self) -> Option<&Journal> {
+        self.obs.as_ref().map(|o| &o.journal)
+    }
+
+    /// The front telemetry registry (`None` unless `[telemetry]
+    /// enabled`). Serve-loop counters (epoch ticks, resumes) register
+    /// here and appear unlabeled in the merged exposition.
+    pub fn telemetry(&self) -> Option<&TelemetryRegistry> {
+        self.obs.as_ref().map(|o| &o.registry)
+    }
+
+    /// Merged Prometheus exposition: the front registry's series
+    /// verbatim, per-shard series under `shard="i"` labels plus
+    /// cluster-level sums (`None` unless `[telemetry] enabled`).
+    /// Refreshes the same point-in-time gauges the monolithic
+    /// `Engine::metrics_text` refreshes.
+    pub fn metrics_text(&self) -> Option<String> {
+        let obs = self.obs.as_ref()?;
+        obs.registry.gauge("elastictl_instances").set(self.active_instances as f64);
+        obs.registry.gauge("elastictl_clock_us").set(self.clock as f64);
+        Some(telemetry::prometheus_merged(&obs.registry, &obs.shard_registries))
+    }
+
+    /// One observability snapshot per shard, in shard order (flushes
+    /// buffered requests first, so the counters and ledgers cover
+    /// everything offered).
+    pub fn observe(&mut self) -> Vec<ShardObservation> {
+        self.flush_all();
+        self.round_trip(|_, reply| ToShard::Observe(reply))
+    }
+
+    /// Merge per-shard enforcement rows into the monolithic view:
+    /// per-slice quantities (demand, grant, cap, physical, admitted,
+    /// denied) sum across the disjoint shards; spec-wide values (the
+    /// reservation, SLO target and enforce flag every shard repeats) are
+    /// taken once; the TTL clamp is the tightest in force; and
+    /// `measured_miss_ratio` / `boost` come from the front's SLO window
+    /// replicas — the shard-local windows each saw only a slice of the
+    /// tenant's traffic.
+    pub fn merge_enforcement(
+        &self,
+        per_shard: &[Vec<TenantEnforcement>],
+    ) -> Vec<TenantEnforcement> {
+        let mut merged: Vec<TenantEnforcement> = Vec::new();
+        for rows in per_shard {
+            for r in rows {
+                match merged.iter_mut().find(|m| m.tenant == r.tenant) {
+                    Some(m) => {
+                        m.demand_bytes += r.demand_bytes;
+                        m.granted_bytes += r.granted_bytes;
+                        m.decided |= r.decided;
+                        m.cap_bytes = match (m.cap_bytes, r.cap_bytes) {
+                            (Some(a), Some(b)) => Some(a + b),
+                            _ => None,
+                        };
+                        m.physical_bytes += r.physical_bytes;
+                        m.admitted_epoch_bytes += r.admitted_epoch_bytes;
+                        m.denied_admissions += r.denied_admissions;
+                        m.ttl_clamp_secs = match (m.ttl_clamp_secs, r.ttl_clamp_secs) {
+                            (Some(a), Some(b)) => Some(a.min(b)),
+                            (a, b) => a.or(b),
+                        };
+                    }
+                    None => merged.push(r.clone()),
+                }
+            }
+        }
+        for m in &mut merged {
+            match self.slo.get(m.tenant as usize) {
+                Some(rep) => {
+                    m.measured_miss_ratio = rep.measured;
+                    m.boost = rep.boost;
+                }
+                None => {
+                    m.measured_miss_ratio = None;
+                    m.boost = 1.0;
+                }
+            }
+        }
+        merged
+    }
+
     // --- the epoch barrier ---
 
     /// The deterministic epoch barrier (see the module docs): collect →
     /// bill → prepare → decide → apply → reconcile, every merge in fixed
     /// shard order 0..N.
     fn close_epoch_at(&mut self, t: TimeUs) -> u32 {
+        if let Some(obs) = &self.obs {
+            for (s, g) in obs.queue_depth.iter().enumerate() {
+                g.set(self.buffers[s].len() as f64);
+            }
+        }
         self.flush_all();
         // 1. Collect, and fold the miss runs in shard order — the exact
         //    per-tenant fold the monolithic engine performed.
-        let collects = self.round_trip(|_, reply| ToShard::Collect(reply));
+        let collects = self.timed_round_trip(|_, reply| ToShard::Collect(reply));
         for c in &collects {
             for &(tenant, dollars, count) in &c.miss_runs {
                 self.costs.record_miss_dollars_run(tenant, dollars, count);
             }
         }
         let residents = merge_residents(collects.iter().map(|c| c.residents.as_slice()));
+        // Close the front SLO window replicas on the Σ-over-shards
+        // hit/miss counters — the same window the monolithic controller
+        // bank closes during its decide step.
+        let stats = sum_tenant_stats(collects.iter().map(|c| c.tenant_stats.as_slice()));
+        self.close_slo_windows(&stats);
         // 2. Bill the closing epoch at the size that was active (§2.3).
         let billed = self
             .costs
             .end_epoch_attributed(t, self.active_instances, &residents);
         self.epochs.push(billed);
         // 3. Boundary shadow maintenance + demand rows.
-        let prepared = self.round_trip(|_, reply| ToShard::Prepare(t, reply));
+        let prepared = self.timed_round_trip(|_, reply| ToShard::Prepare(t, reply));
         let shard_rows: Vec<Vec<TenantDemand>> = prepared
             .into_iter()
             .map(|rows| rows.expect("sharded policies report demand rows"))
             .collect();
         // 4. One decision over the merged rows.
+        let mut merge_ns = 0u64;
+        let t0 = self.obs.is_some().then(Instant::now);
         let merged = merge_demands(&shard_rows);
         let (target, allocs) = match &self.decider {
             FrontDecider::Fixed(n) => (*n, Vec::new()),
@@ -700,7 +1061,10 @@ impl ShardedEngine {
         //    proportional to each shard's share of the tenant's demand.
         let per_shard_allocs = split_allocations(&allocs, &shard_rows);
         let per_shard_targets = split_even(target.max(1), self.shards);
-        let applied = self.round_trip(|s, reply| ToShard::Apply {
+        if let Some(t0) = t0 {
+            merge_ns += t0.elapsed().as_nanos() as u64;
+        }
+        let applied = self.timed_round_trip(|s, reply| ToShard::Apply {
             now: t,
             target: per_shard_targets[s],
             allocs: per_shard_allocs[s].clone(),
@@ -711,6 +1075,7 @@ impl ShardedEngine {
         // exceed a small target — the monolithic cluster floors the same
         // decision at one instance total, and so does this.
         self.active_instances = target.max(1);
+        let t0 = self.obs.is_some().then(Instant::now);
         // 6. Reconcile: a tenant's bill closes once every shard drained
         //    its slice; order follows the shards' own retirement order.
         let mut done = Vec::new();
@@ -724,7 +1089,170 @@ impl ShardedEngine {
         for tenant in done {
             self.costs.close_tenant(tenant, t);
         }
+        // 7. Journal: replay the monolithic `JournalProbe` assembly over
+        //    the merged barrier state (no-op with telemetry off).
+        self.record_epoch(t, &applied);
+        if let (Some(t0), Some(obs)) = (t0, &self.obs) {
+            merge_ns += t0.elapsed().as_nanos() as u64;
+            obs.epoch_merge.record_ns(merge_ns);
+        }
         self.active_instances
+    }
+
+    /// [`Self::round_trip`], recorded against the barrier-wait timer
+    /// when telemetry is on — the time the front spends blocked on shard
+    /// replies (three samples per boundary: collect, prepare, apply).
+    fn timed_round_trip<R>(&self, make: impl Fn(usize, Sender<R>) -> ToShard) -> Vec<R> {
+        match &self.obs {
+            Some(obs) => obs.barrier_wait.time(|| self.round_trip(make)),
+            None => self.round_trip(make),
+        }
+    }
+
+    /// Ensure the per-tenant replica vectors cover tenant ids `< n`.
+    fn grow_tenant_state(&mut self, n: usize) {
+        if self.slo.len() < n {
+            self.slo.resize_with(n, SloReplica::default);
+        }
+        if self.prev_stats.len() < n {
+            self.prev_stats.resize(n, HitMiss::default());
+        }
+    }
+
+    /// Close every tenant's SLO measurement window on the summed
+    /// cumulative counters: the window is the diff against the previous
+    /// boundary, bit-identical arithmetic to the monolithic
+    /// `SloState::close_epoch` (including the quiet-epoch boost decay).
+    fn close_slo_windows(&mut self, stats: &[HitMiss]) {
+        let n = stats.len().max(self.slo.len());
+        self.grow_tenant_state(n);
+        for i in 0..n {
+            let cum = stats.get(i).copied().unwrap_or(self.prev_stats[i]);
+            let hits = cum.hits - self.prev_stats[i].hits;
+            let misses = cum.misses - self.prev_stats[i].misses;
+            self.prev_stats[i] = cum;
+            self.slo[i].close_epoch(hits, misses);
+        }
+    }
+
+    /// Replay the monolithic `JournalProbe` record assembly over the
+    /// merged barrier state — bills and reconciliations sliced from the
+    /// front tracker, enforcement rows merged across shards, sheds and
+    /// residents summed — push the record, and refresh the decision
+    /// gauges plus the shard-imbalance gauge. No-op with telemetry off.
+    fn record_epoch(&mut self, t: TimeUs, applied: &[ShardApplied]) {
+        if self.obs.is_none() {
+            return;
+        }
+        let per_shard: Option<Vec<Vec<TenantEnforcement>>> =
+            applied.iter().map(|a| a.enforcement.clone()).collect();
+        let rows = per_shard.map(|v| self.merge_enforcement(&v)).unwrap_or_default();
+        let residents = merge_residents(applied.iter().map(|a| a.residents.as_slice()));
+        let shed = merge_shed(applied);
+        let instances = self.active_instances;
+        let costs = &self.costs;
+        let Some(obs) = self.obs.as_mut() else {
+            return;
+        };
+        // Ledger rows appended since the previous boundary belong to the
+        // epoch that just closed (billing ran before this).
+        let bills = &costs.tenant_bills()[obs.bills_seen..];
+        obs.bills_seen = costs.tenant_bills().len();
+        let recons = &costs.reconciliations()[obs.recons_seen..];
+        obs.recons_seen = costs.reconciliations().len();
+        let storage_dollars = costs.storage_total() - obs.prev_storage;
+        let miss_dollars = costs.miss_total() - obs.prev_miss;
+        obs.prev_storage = costs.storage_total();
+        obs.prev_miss = costs.miss_total();
+        // One row per tenant any source mentions (a draining tenant has
+        // bills and sheds after its enforcement row is gone).
+        let mut ids: Vec<TenantId> = rows
+            .iter()
+            .map(|r| r.tenant)
+            .chain(bills.iter().map(|b| b.tenant))
+            .chain(shed.iter().map(|&(st, _, _)| st))
+            .chain(recons.iter().map(|r| r.tenant))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let mut tenants = Vec::with_capacity(ids.len());
+        for id in ids {
+            let row = rows.iter().find(|r| r.tenant == id);
+            let resident_bytes = residents
+                .iter()
+                .find(|&&(rt, _)| rt == id)
+                .map(|&(_, b)| b)
+                .unwrap_or(0);
+            let (resident_before_bytes, shed_bytes) = shed
+                .iter()
+                .find(|&&(st, _, _)| st == id)
+                .map(|&(_, before, freed)| (before, freed))
+                .unwrap_or((resident_bytes, 0));
+            let denied_total = row.map(|r| r.denied_admissions).unwrap_or(0);
+            let ti = id as usize;
+            if obs.prev_denied.len() <= ti {
+                obs.prev_denied.resize(ti + 1, 0);
+            }
+            let denied = denied_total.saturating_sub(obs.prev_denied[ti]);
+            obs.prev_denied[ti] = denied_total;
+            let granted = row.filter(|r| r.decided).map(|r| r.granted_bytes).unwrap_or(0);
+            let reserved = row.map(|r| r.reserved_bytes).unwrap_or(0);
+            tenants.push(TenantDecision {
+                tenant: id,
+                demand_bytes: row.map(|r| r.demand_bytes).unwrap_or(0),
+                granted_bytes: granted,
+                reserved_bytes: reserved,
+                pooled_bytes: granted.saturating_sub(reserved),
+                cap_bytes: row.and_then(|r| r.cap_bytes),
+                ttl_clamp_secs: row.and_then(|r| r.ttl_clamp_secs),
+                resident_before_bytes,
+                resident_bytes,
+                shed_bytes,
+                denied_admissions: denied,
+                slo_miss_ratio: row.and_then(|r| r.slo_miss_ratio),
+                measured_miss_ratio: row.and_then(|r| r.measured_miss_ratio),
+                boost: row.map(|r| r.boost).unwrap_or(1.0),
+                bill_storage_dollars: bills
+                    .iter()
+                    .filter(|b| b.tenant == id)
+                    .map(|b| b.storage)
+                    .sum(),
+                bill_miss_dollars: bills.iter().filter(|b| b.tenant == id).map(|b| b.miss).sum(),
+                reconciled_dollars: recons
+                    .iter()
+                    .find(|r| r.tenant == id)
+                    .map(|r| r.total_dollars),
+            });
+        }
+        // Refresh exposition gauges from the decision now in force, as
+        // the monolithic probe does.
+        obs.registry.gauge("elastictl_instances").set(instances as f64);
+        obs.registry.gauge("elastictl_epochs_closed").set((obs.epoch + 1) as f64);
+        for d in &tenants {
+            obs.registry
+                .tenant_gauge("elastictl_tenant_granted_bytes", d.tenant)
+                .set(d.granted_bytes as f64);
+            obs.registry
+                .tenant_gauge("elastictl_tenant_resident_bytes", d.tenant)
+                .set(d.resident_bytes as f64);
+            obs.registry.tenant_gauge("elastictl_tenant_boost", d.tenant).set(d.boost);
+        }
+        obs.journal.push(EpochDecisionRecord {
+            t,
+            epoch: obs.epoch,
+            instances,
+            capacity_bytes: obs.capacity_bytes,
+            storage_dollars,
+            miss_dollars,
+            tenants,
+        });
+        obs.epoch += 1;
+        // Shard health: request-count imbalance across workers, read off
+        // the per-shard counter handles (max/mean; 1.0 = perfectly even).
+        let reqs: Vec<u64> = obs.shard_requests.iter().map(|c| c.get()).collect();
+        let max = reqs.iter().copied().max().unwrap_or(0) as f64;
+        let mean = reqs.iter().sum::<u64>() as f64 / reqs.len().max(1) as f64;
+        obs.imbalance.set(if mean > 0.0 { max / mean } else { 1.0 });
     }
 
     /// Count one shard's completed drain of `tenant`; `true` once every
@@ -755,6 +1283,9 @@ impl ShardedEngine {
     fn flush_shard(&mut self, s: usize) {
         if self.buffers[s].is_empty() {
             return;
+        }
+        if let Some(obs) = &self.obs {
+            obs.batch_occupancy[s].set(self.buffers[s].len() as f64);
         }
         let batch = std::mem::replace(&mut self.buffers[s], Vec::with_capacity(BATCH));
         let _ = self.txs[s].send(ToShard::Batch(batch));
@@ -855,6 +1386,42 @@ fn merge_demands(shard_rows: &[Vec<TenantDemand>]) -> Vec<TenantDemand> {
             match merged.iter_mut().find(|m| m.tenant == d.tenant) {
                 Some(m) => m.demand_bytes += d.demand_bytes,
                 None => merged.push(*d),
+            }
+        }
+    }
+    merged
+}
+
+/// Sum per-shard cumulative hit/miss counter vectors element-wise
+/// (tenant-id indexed; shards partition each tenant's key space, so the
+/// sums are the monolithic counters exactly).
+pub fn sum_tenant_stats<'a>(shards: impl Iterator<Item = &'a [HitMiss]>) -> Vec<HitMiss> {
+    let mut out: Vec<HitMiss> = Vec::new();
+    for rows in shards {
+        if out.len() < rows.len() {
+            out.resize(rows.len(), HitMiss::default());
+        }
+        for (i, hm) in rows.iter().enumerate() {
+            out[i].hits += hm.hits;
+            out[i].misses += hm.misses;
+        }
+    }
+    out
+}
+
+/// Merge per-shard shed reports `(tenant, resident_before, freed)`:
+/// shards hold disjoint slices of each tenant's residency, so both the
+/// before-bytes and the freed-bytes sum exactly.
+fn merge_shed(applied: &[ShardApplied]) -> Vec<(TenantId, u64, u64)> {
+    let mut merged: Vec<(TenantId, u64, u64)> = Vec::new();
+    for a in applied {
+        for &(tenant, before, freed) in &a.shed {
+            match merged.iter_mut().find(|(mt, _, _)| *mt == tenant) {
+                Some(m) => {
+                    m.1 += before;
+                    m.2 += freed;
+                }
+                None => merged.push((tenant, before, freed)),
             }
         }
     }
@@ -1027,6 +1594,57 @@ mod tests {
         for e in &report.epochs {
             assert_eq!(e.instances, 4, "fixed target bills four instances");
         }
+    }
+
+    #[test]
+    fn sum_tenant_stats_sums_elementwise_over_ragged_shards() {
+        let shard0 = vec![HitMiss { hits: 3, misses: 1 }];
+        let shard1 = vec![HitMiss { hits: 2, misses: 2 }, HitMiss { hits: 0, misses: 5 }];
+        let sum = sum_tenant_stats([shard0.as_slice(), shard1.as_slice()].into_iter());
+        assert_eq!(sum.len(), 2);
+        assert_eq!((sum[0].hits, sum[0].misses), (5, 3));
+        assert_eq!((sum[1].hits, sum[1].misses), (0, 5));
+    }
+
+    #[test]
+    fn merge_shed_sums_disjoint_slices() {
+        let applied = vec![
+            ShardApplied {
+                retired: Vec::new(),
+                residents: Vec::new(),
+                shed: vec![(1, 100, 40), (2, 10, 10)],
+                enforcement: None,
+            },
+            ShardApplied {
+                retired: Vec::new(),
+                residents: Vec::new(),
+                shed: vec![(1, 60, 20)],
+                enforcement: None,
+            },
+        ];
+        let merged = merge_shed(&applied);
+        assert_eq!(merged, vec![(1, 160, 60), (2, 10, 10)]);
+    }
+
+    #[test]
+    fn slo_replica_tracks_the_boost_ladder() {
+        let mut rep = SloReplica::new(Some(0.25));
+        rep.close_epoch(1, 3); // miss ratio 0.75 > target: boost doubles
+        assert_eq!(rep.measured, Some(0.75));
+        assert_eq!(rep.boost, SLO_BOOST_STEP);
+        rep.close_epoch(0, 0); // quiet window: measurement kept, boost decays
+        assert_eq!(rep.measured, Some(0.75));
+        assert_eq!(rep.boost, 1.0);
+        for _ in 0..32 {
+            rep.close_epoch(0, 1);
+        }
+        assert_eq!(rep.boost, SLO_BOOST_MAX, "boost saturates at the cap");
+        rep.close_epoch(3, 1); // 0.25 is not > target: decay
+        assert_eq!(rep.boost, SLO_BOOST_MAX / SLO_BOOST_STEP);
+        let mut untargeted = SloReplica::new(None);
+        untargeted.close_epoch(0, 10);
+        assert_eq!(untargeted.measured, Some(1.0));
+        assert_eq!(untargeted.boost, 1.0, "no target, no boost movement");
     }
 
     #[test]

@@ -29,6 +29,28 @@ impl LogHistogram {
         }
     }
 
+    /// Rebuild a histogram from raw per-bucket weights (the telemetry
+    /// timer's atomic buckets snapshot through this so quantile / CDF
+    /// logic lives in one place).
+    pub fn from_parts(base: f64, counts: Vec<f64>, zero: f64, overflow: f64) -> Self {
+        assert!(base > 1.0);
+        let total = zero + overflow + counts.iter().sum::<f64>();
+        LogHistogram { base, counts, zero, overflow, total }
+    }
+
+    /// Fold `other`'s weights into `self`. Both histograms must share a
+    /// bucket layout (same base and bucket count).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.base.to_bits(), other.base.to_bits(), "histogram base mismatch");
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram bucket mismatch");
+        self.zero += other.zero;
+        self.overflow += other.overflow;
+        self.total += other.total;
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+    }
+
     #[inline]
     fn bucket_of(&self, v: u64) -> Option<usize> {
         if v == 0 {

@@ -41,22 +41,26 @@
 //!   shard-owner threads each run a disjoint slice of the cluster, and
 //!   connection threads route `GET`s straight to the owning shard
 //!   ([`ShardRouter`]) with no global lock on the hot path. Control
-//!   commands (`STATS`/`EPOCH`/`ADMIT`/`RETIRE`/`BILL`) still serialize
-//!   through one front thread, which runs the deterministic epoch
-//!   barrier and the same durable checkpoint path. Commands that read
-//!   monolithic engine state (`SLO`, `PLACEMENT`, `WHY`, `METRICS`)
-//!   answer `ERR … unsupported` under sharding.
+//!   commands still serialize through one front thread, which runs the
+//!   deterministic epoch barrier and the same durable checkpoint path —
+//!   and answers the full observability surface: `SLO`, `PLACEMENT` and
+//!   `STATS <tenant>` merge one observation round-trip over the shards
+//!   (sums over the disjoint slices, spec-wide values once), `WHY`
+//!   reads the barrier-merged decision journal, and `METRICS` renders
+//!   the merged Prometheus exposition (front series plus per-shard
+//!   series under `shard="i"` labels and cluster-level sums).
 
 pub mod checkpoint;
 pub mod loadgen;
 
 use crate::config::{Config, PolicyKind};
-use crate::engine::{ShardRouter, ShardedEngine};
+use crate::engine::{sum_tenant_stats, ShardObservation, ShardRouter, ShardedEngine};
 use crate::serve::{fxhash_str, split_tenant_key, ServerState};
-use crate::tenant::TenantSpec;
+use crate::tenant::{LifecycleState, TenantEnforcement, TenantSpec};
 use crate::trace::Request;
 use crate::{Result, TenantId};
 use checkpoint::{CheckpointCursor, CheckpointWriter};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -312,6 +316,11 @@ pub fn spawn_sharded_state(cfg: Config, ckpt_path: Option<PathBuf>) -> Result<Sh
     // engine is `Send` (the unshardable policies were rejected above).
     let mut engine = ShardedEngine::new(&cfg)?.manual_epochs();
     let resumed_epochs = checkpoint::replay_sharded(&mut engine, &records);
+    if resumed_epochs > 0 {
+        if let Some(reg) = engine.telemetry() {
+            reg.counter("elastictl_resume_epochs_total").add(resumed_epochs);
+        }
+    }
     let router = engine.router();
     let tenant_routing =
         !cfg.tenants.is_empty() || cfg.scaler.policy == PolicyKind::TenantTtl;
@@ -341,6 +350,9 @@ fn sharded_state_loop(
             Msg::Tick => {
                 let now = front.now_us();
                 front.engine.force_epoch(now);
+                if let Some(reg) = front.engine.telemetry() {
+                    reg.counter("elastictl_epoch_ticks_total").inc();
+                }
                 flush_sharded_epochs(&mut durable, &front.engine);
             }
         }
@@ -403,8 +415,27 @@ impl ShardedFront {
             }
             Some("STATS") => match parts.next() {
                 None => Some(self.stats_line()),
-                Some(_) => Some(unsupported("STATS <tenant>")),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.tenant_stats_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
             },
+            Some("SLO") => match parts.next() {
+                None => Some("ERR SLO needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.slo_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("PLACEMENT") => Some(self.placement_line()),
+            Some("WHY") => match parts.next() {
+                None => Some("ERR WHY needs a tenant id".to_string()),
+                Some(t) => match t.parse::<TenantId>() {
+                    Ok(tenant) => Some(self.why_line(tenant)),
+                    Err(_) => Some(format!("ERR bad tenant {t}")),
+                },
+            },
+            Some("METRICS") => Some(self.metrics_block()),
             Some("EPOCH") => {
                 let now = self.now_us();
                 let n = self.engine.force_epoch(now);
@@ -438,9 +469,6 @@ impl ShardedFront {
                 },
             },
             Some("QUIT") => None,
-            Some(other @ ("SLO" | "PLACEMENT" | "WHY" | "METRICS")) => {
-                Some(unsupported(other))
-            }
             Some(other) => Some(format!("ERR unknown command {other}")),
             None => Some("ERR empty".to_string()),
         }
@@ -512,6 +540,170 @@ impl ShardedFront {
         }
     }
 
+    /// `STATS <tenant>` over the merged shard observations: requests and
+    /// misses are Σ-over-shards cumulative counters, `miss_cost` reads
+    /// the front ledger (closed epochs — the open epoch's misses land at
+    /// the next `EPOCH`), `physical_bytes` sums the disjoint resident
+    /// slices. `ttl_secs` is `null`: each shard's controller estimates
+    /// its own TTL on its own slice, so no single figure exists. The
+    /// lifecycle gate matches the monolithic reply contract.
+    fn tenant_stats_line(&mut self, tenant: TenantId) -> String {
+        let obs = self.engine.observe();
+        let state = match merged_lifecycle(&obs, tenant) {
+            LifecycleGate::Untracked => String::new(),
+            LifecycleGate::Unknown => return format!("ERR unknown tenant {tenant}"),
+            LifecycleGate::Retired => {
+                return format!("ERR unknown tenant {tenant} (retired)");
+            }
+            LifecycleGate::State(s) => format!(",\"state\":\"{}\"", s.as_str()),
+        };
+        let stats = sum_tenant_stats(obs.iter().map(|o| o.tenant_stats.as_slice()));
+        let hm = stats.get(tenant as usize).copied().unwrap_or_default();
+        let ledger = self.engine.costs().tenant_ledger(tenant);
+        let physical: u64 = obs
+            .iter()
+            .flat_map(|o| o.residents.iter())
+            .filter(|&&(t, _)| t == tenant)
+            .map(|&(_, b)| b)
+            .sum();
+        format!(
+            "{{\"tenant\":{},\"requests\":{},\"misses\":{},\"miss_cost\":{:.9},\
+             \"physical_bytes\":{},\"ttl_secs\":null{}}}",
+            tenant,
+            hm.total(),
+            hm.misses,
+            ledger.miss_dollars,
+            physical,
+            state,
+        )
+    }
+
+    /// `SLO <tenant>` over the merged enforcement rows: same JSON shape
+    /// and error string as the monolithic server's, with the per-slice
+    /// quantities summed and `measured_miss_ratio` / `boost` taken from
+    /// the front's Σ-over-shards window replicas.
+    fn slo_line(&mut self, tenant: TenantId) -> String {
+        let obs = self.engine.observe();
+        let per_shard: Option<Vec<Vec<TenantEnforcement>>> =
+            obs.iter().map(|o| o.enforcement.clone()).collect();
+        let row = per_shard
+            .map(|v| self.engine.merge_enforcement(&v))
+            .and_then(|rows| rows.into_iter().find(|r| r.tenant == tenant));
+        let Some(row) = row else {
+            return format!(
+                "ERR no enforcement state (policy {} does not arbitrate tenants, \
+                 or tenant {tenant} has never been seen)",
+                self.engine.policy_name()
+            );
+        };
+        let opt_u64 = |v: Option<u64>| {
+            v.map(|x| x.to_string()).unwrap_or_else(|| "null".into())
+        };
+        let opt_f64 = |v: Option<f64>| {
+            v.map(|x| format!("{x:.6}")).unwrap_or_else(|| "null".into())
+        };
+        format!(
+            "{{\"tenant\":{},\"enforced\":{},\"decided\":{},\"demand_bytes\":{},\
+             \"granted_bytes\":{},\"cap_bytes\":{},\"admitted_epoch_bytes\":{},\
+             \"denied\":{},\"ttl_clamp_secs\":{},\"slo_miss_ratio\":{},\
+             \"measured_miss_ratio\":{},\"in_violation\":{},\"boost\":{:.3}}}",
+            row.tenant,
+            row.enforced,
+            row.decided,
+            row.demand_bytes,
+            row.granted_bytes,
+            opt_u64(row.cap_bytes),
+            row.admitted_epoch_bytes,
+            row.denied_admissions,
+            opt_f64(row.ttl_clamp_secs),
+            opt_f64(row.slo_miss_ratio),
+            opt_f64(row.measured_miss_ratio),
+            row.in_violation(),
+            row.boost,
+        )
+    }
+
+    /// `PLACEMENT` over the merged shard snapshots: resident bytes sum
+    /// per tenant, pins re-index into a global instance space (shard
+    /// `s`'s instance `i` becomes `Σ earlier shard sizes + i`), the
+    /// reported instance count is the billed cluster target — the same
+    /// figure the monolithic reply carries.
+    fn placement_line(&mut self) -> String {
+        let obs = self.engine.observe();
+        let policy = obs.first().map(|o| o.placement.policy).unwrap_or_default();
+        let mut rows: BTreeMap<TenantId, (u64, Option<Vec<u32>>)> = BTreeMap::new();
+        let mut offset = 0u32;
+        for o in &obs {
+            for r in &o.placement.tenants {
+                let entry = rows.entry(r.tenant).or_insert((0, None));
+                entry.0 += r.resident_bytes;
+                if let Some(pins) = &r.pins {
+                    entry
+                        .1
+                        .get_or_insert_with(Vec::new)
+                        .extend(pins.iter().map(|&i| i + offset));
+                }
+            }
+            offset += o.instances;
+        }
+        let mut tenants = String::new();
+        for (i, (tenant, (bytes, pins))) in rows.iter().enumerate() {
+            if i > 0 {
+                tenants.push(',');
+            }
+            let pins = match pins {
+                Some(p) => format!(
+                    "[{}]",
+                    p.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+                ),
+                None => "null".to_string(),
+            };
+            tenants.push_str(&format!(
+                "{{\"tenant\":{tenant},\"physical_bytes\":{bytes},\"pins\":{pins}}}"
+            ));
+        }
+        format!(
+            "{{\"policy\":\"{}\",\"instances\":{},\"tenants\":[{}]}}",
+            policy.as_str(),
+            self.engine.instances(),
+            tenants
+        )
+    }
+
+    /// `WHY <tenant>` from the barrier-merged decision journal: same
+    /// shape and error strings as the monolithic server's.
+    fn why_line(&self, tenant: TenantId) -> String {
+        let Some(journal) = self.engine.journal() else {
+            return "ERR telemetry disabled (set [telemetry] enabled = true)".to_string();
+        };
+        if journal.is_empty() {
+            return "ERR no epoch decision yet (force one with EPOCH)".to_string();
+        }
+        let Some((rec, dec)) = journal.last_for(tenant) else {
+            return format!("ERR no decision recorded for tenant {tenant}");
+        };
+        format!(
+            "{{\"t\":{},\"epoch\":{},\"instances\":{},\"cause\":{},\"decision\":{}}}",
+            rec.t,
+            rec.epoch,
+            rec.instances,
+            match dec.cause() {
+                Some(c) => format!("\"{c}\""),
+                None => "null".into(),
+            },
+            dec.to_json(),
+        )
+    }
+
+    /// Merged Prometheus text block for `METRICS`, `# EOF`-terminated
+    /// exactly like the monolithic reply.
+    fn metrics_block(&self) -> String {
+        match self.engine.metrics_text() {
+            Some(text) => format!("{text}# EOF"),
+            None => "ERR telemetry disabled (set [telemetry] enabled = true)".to_string(),
+        }
+    }
+
     /// `BILL <tenant>`: the most recent close-out reconciliation, same
     /// shape and error strings as the monolithic server's.
     fn bill_line(&self, tenant: TenantId) -> String {
@@ -541,8 +733,49 @@ impl ShardedFront {
     }
 }
 
-fn unsupported(what: &str) -> String {
-    format!("ERR {what} unsupported with [engine] shards > 1 (run a single shard for it)")
+/// A tenant's merged lifecycle verdict for `STATS <tenant>`.
+enum LifecycleGate {
+    /// The policy tracks no lifecycle (legacy zero-row replies).
+    Untracked,
+    /// No shard knows the tenant.
+    Unknown,
+    /// Every shard drained it: the documented `(retired)` error.
+    Retired,
+    /// The live merged state.
+    State(LifecycleState),
+}
+
+/// Merge per-shard lifecycle states: the shards receive every lifecycle
+/// event, so they only disagree transiently while a drain completes on
+/// some shards before others — a tenant drained everywhere is `Retired`,
+/// drained somewhere is still `Draining`, and an `Active` anywhere wins
+/// over `Admitted` (a shard that saw no traffic yet).
+fn merged_lifecycle(obs: &[ShardObservation], tenant: TenantId) -> LifecycleGate {
+    if obs.iter().all(|o| o.lifecycle.is_none()) {
+        return LifecycleGate::Untracked;
+    }
+    let states: Vec<LifecycleState> = obs
+        .iter()
+        .filter_map(|o| o.lifecycle.as_ref())
+        .filter_map(|rows| rows.iter().find(|(t, _)| *t == tenant))
+        .map(|(_, l)| l.state())
+        .collect();
+    if states.is_empty() {
+        return LifecycleGate::Unknown;
+    }
+    if states.iter().all(|s| *s == LifecycleState::Retired) {
+        return LifecycleGate::Retired;
+    }
+    if states
+        .iter()
+        .any(|s| matches!(s, LifecycleState::Draining | LifecycleState::Retired))
+    {
+        return LifecycleGate::State(LifecycleState::Draining);
+    }
+    if states.iter().any(|s| *s == LifecycleState::Active) {
+        return LifecycleGate::State(LifecycleState::Active);
+    }
+    LifecycleGate::State(LifecycleState::Admitted)
 }
 
 /// Build the engine [`Request`] for a `GET <token> <size>` line, with
@@ -759,22 +992,66 @@ mod tests {
     fn sharded_front_serves_the_control_plane() {
         let mut cfg = Config::with_policy(PolicyKind::Ttl);
         cfg.engine.shards = 4;
+        cfg.telemetry.enabled = true;
         let server = spawn_sharded_state(cfg, None).unwrap();
         assert_eq!(server.resumed_epochs, 0);
         assert_eq!(ask(&server.tx, "GET k 100").unwrap(), "MISS");
         assert_eq!(ask(&server.tx, "GET k 100").unwrap(), "HIT");
+        assert_eq!(
+            ask(&server.tx, "WHY 0").unwrap(),
+            "ERR no epoch decision yet (force one with EPOCH)"
+        );
         assert!(ask(&server.tx, "EPOCH").unwrap().starts_with("RESIZED"));
         let stats = ask(&server.tx, "STATS").unwrap();
         assert!(stats.contains("\"requests\":2"), "{stats}");
         assert!(stats.contains("\"misses\":1"), "{stats}");
         assert!(stats.contains("\"shards\":4"), "{stats}");
-        assert!(ask(&server.tx, "WHY 1").unwrap().starts_with("ERR WHY unsupported"));
+        // WHY after the boundary: tenant 0 was billed, so the journal
+        // carries a decision row for it.
+        let why = ask(&server.tx, "WHY 0").unwrap();
+        assert!(why.starts_with("{\"t\":"), "{why}");
+        assert!(why.contains("\"decision\":{\"tenant\":0,"), "{why}");
+        // STATS <tenant>: the ttl policy tracks no lifecycle, so the
+        // legacy reply shape (no state key) with the summed counters.
+        let ts = ask(&server.tx, "STATS 0").unwrap();
+        assert!(ts.contains("\"tenant\":0"), "{ts}");
+        assert!(ts.contains("\"requests\":2"), "{ts}");
+        assert!(ts.contains("\"misses\":1"), "{ts}");
+        // PLACEMENT merges the per-shard snapshots.
+        let placement = ask(&server.tx, "PLACEMENT").unwrap();
+        assert!(placement.starts_with("{\"policy\":\"shared\""), "{placement}");
+        // SLO on a non-arbitrating policy: the documented error.
         assert!(
-            ask(&server.tx, "PLACEMENT").unwrap().starts_with("ERR PLACEMENT unsupported"),
+            ask(&server.tx, "SLO 0").unwrap().starts_with("ERR no enforcement state"),
         );
-        assert!(ask(&server.tx, "STATS 0").unwrap().starts_with("ERR STATS <tenant>"));
+        // METRICS: merged exposition, shard-labeled and EOF-terminated.
+        let metrics = ask(&server.tx, "METRICS").unwrap();
+        assert!(metrics.contains("elastictl_requests_total{shard=\"0\"}"), "{metrics}");
+        assert!(metrics.ends_with("# EOF"), "{metrics}");
         assert!(ask(&server.tx, "FROB").unwrap().starts_with("ERR unknown command"));
         assert!(ask(&server.tx, "QUIT").is_none());
+    }
+
+    #[test]
+    fn sharded_control_plane_without_telemetry() {
+        let mut cfg = Config::with_policy(PolicyKind::Ttl);
+        cfg.engine.shards = 2;
+        let server = spawn_sharded_state(cfg, None).unwrap();
+        ask(&server.tx, "GET k 100");
+        ask(&server.tx, "EPOCH");
+        assert_eq!(
+            ask(&server.tx, "WHY 0").unwrap(),
+            "ERR telemetry disabled (set [telemetry] enabled = true)"
+        );
+        assert_eq!(
+            ask(&server.tx, "METRICS").unwrap(),
+            "ERR telemetry disabled (set [telemetry] enabled = true)"
+        );
+        // The observation surface works without telemetry.
+        let ts = ask(&server.tx, "STATS 0").unwrap();
+        assert!(ts.contains("\"requests\":1"), "{ts}");
+        let placement = ask(&server.tx, "PLACEMENT").unwrap();
+        assert!(placement.starts_with("{\"policy\":"), "{placement}");
     }
 
     #[test]

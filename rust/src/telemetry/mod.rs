@@ -6,11 +6,17 @@
 //!
 //! * **Registry** ([`TelemetryRegistry`]) — named metrics resolved once
 //!   into shared handles ([`Counter`], [`Gauge`], [`Timer`]); recording
-//!   through a handle is a `Cell` update (no string lookup, no
-//!   allocation, no locking — the engine and everything it owns live on
-//!   one thread, so plain `Rc<Cell>` sharing suffices). Timers are
-//!   [`LogHistogram`]-backed (nanoseconds) and expose interpolated
-//!   quantiles ([`LogHistogram::quantile`]).
+//!   through a handle is a relaxed atomic integer store (no string
+//!   lookup, no allocation, no locking — handles are `Arc<AtomicU64>`
+//!   based and `Send`, so each shard worker of the sharded engine can
+//!   own pre-resolved handles while the front merges them at scrape
+//!   time). Timers are atomic log-bucket histograms (nanoseconds) that
+//!   snapshot into a [`LogHistogram`] for interpolated quantiles
+//!   ([`LogHistogram::quantile`]). Registry clones share one underlying
+//!   metric table, so a handle resolved through any clone is visible to
+//!   every other ([`prometheus_merged`] renders a sharded deployment's
+//!   registries as one exposition with `shard="i"` labels plus
+//!   cluster-level sums).
 //! * **Decision journal** ([`Journal`], [`EpochDecisionRecord`]) — a
 //!   bounded ring of per-epoch records: for every tenant, demand →
 //!   granted, the reserved/pooled split, the TTL clamp and occupancy cap
@@ -31,10 +37,12 @@
 
 #![warn(missing_docs)]
 
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
 
 use crate::metrics::LogHistogram;
 use crate::{TenantId, TimeUs};
@@ -44,75 +52,137 @@ const TIMER_BASE: f64 = 1.12;
 /// Largest resolvable timer sample: 60 s in nanoseconds.
 const TIMER_MAX_NS: u64 = 60_000_000_000;
 
-/// A shared registry handle (single-threaded interior mutability — the
-/// engine, its probes and the serve loop all live on one thread).
+/// A shared registry handle. The registry is internally `Arc`-shared and
+/// thread-safe; the `Rc<RefCell<…>>` wrapper survives for the monolithic
+/// engine's probe plumbing, which hands one handle around a
+/// single-threaded object graph.
 pub type SharedRegistry = Rc<RefCell<TelemetryRegistry>>;
 /// A shared decision-journal handle.
 pub type SharedJournal = Rc<RefCell<Journal>>;
 
-/// Pre-resolved counter handle: recording is one `Cell` update.
+/// Pre-resolved counter handle: recording is one relaxed atomic add, so
+/// the handle is `Send` and a shard worker can hold it across threads.
 #[derive(Debug, Clone, Default)]
-pub struct Counter(Rc<Cell<u64>>);
+pub struct Counter(Arc<AtomicU64>);
 
 impl Counter {
-    /// Add 1.
+    /// Add 1 (wrapping).
     #[inline]
     pub fn inc(&self) {
-        self.0.set(self.0.get().wrapping_add(1));
+        self.0.fetch_add(1, Relaxed);
     }
 
-    /// Add `n`.
+    /// Add `n` (saturating).
     #[inline]
     pub fn add(&self, n: u64) {
-        self.0.set(self.0.get().saturating_add(n));
+        let mut cur = self.0.load(Relaxed);
+        loop {
+            let next = cur.saturating_add(n);
+            match self.0.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
     }
 
     /// Current value.
     #[inline]
     pub fn get(&self) -> u64 {
-        self.0.get()
+        self.0.load(Relaxed)
     }
 }
 
-/// Pre-resolved gauge handle: last-write-wins `f64`.
+/// Pre-resolved gauge handle: last-write-wins `f64`, stored bit-cast in
+/// an atomic so the handle is `Send`.
 #[derive(Debug, Clone, Default)]
-pub struct Gauge(Rc<Cell<f64>>);
+pub struct Gauge(Arc<AtomicU64>);
 
 impl Gauge {
     /// Set the gauge.
     #[inline]
     pub fn set(&self, v: f64) {
-        self.0.set(v);
+        self.0.store(v.to_bits(), Relaxed);
     }
 
     /// Current value.
     #[inline]
     pub fn get(&self) -> f64 {
-        self.0.get()
+        f64::from_bits(self.0.load(Relaxed))
     }
 }
 
-/// Pre-resolved timer handle: a [`LogHistogram`] of nanosecond samples
-/// plus an exact running sum (Prometheus `_sum`).
+/// The atomic storage behind a [`Timer`]: log-spaced nanosecond buckets
+/// mirroring [`LogHistogram`]'s layout (zero bucket, per-decade buckets,
+/// overflow), each an `AtomicU64` count, plus an exact integer sum.
+struct AtomicHistogram {
+    base: f64,
+    ln_base: f64,
+    counts: Vec<AtomicU64>,
+    zero: AtomicU64,
+    overflow: AtomicU64,
+    total: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl AtomicHistogram {
+    fn new(base: f64, max_value: u64) -> AtomicHistogram {
+        // Same bucket count as `LogHistogram::new` so a snapshot
+        // round-trips losslessly through `LogHistogram::from_parts`.
+        let nbuckets = LogHistogram::new(base, max_value).num_buckets();
+        AtomicHistogram {
+            base,
+            ln_base: base.ln(),
+            counts: (0..nbuckets).map(|_| AtomicU64::new(0)).collect(),
+            zero: AtomicU64::new(0),
+            overflow: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn record(&self, ns: u64) {
+        self.total.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+        if ns == 0 {
+            self.zero.fetch_add(1, Relaxed);
+            return;
+        }
+        let idx = ((ns as f64).ln() / self.ln_base) as usize;
+        match self.counts.get(idx) {
+            Some(c) => c.fetch_add(1, Relaxed),
+            None => self.overflow.fetch_add(1, Relaxed),
+        };
+    }
+
+    /// Snapshot into a plain [`LogHistogram`] (for quantiles / CDF).
+    fn snapshot(&self) -> LogHistogram {
+        LogHistogram::from_parts(
+            self.base,
+            self.counts.iter().map(|c| c.load(Relaxed) as f64).collect(),
+            self.zero.load(Relaxed) as f64,
+            self.overflow.load(Relaxed) as f64,
+        )
+    }
+}
+
+/// Pre-resolved timer handle: an atomic log-bucket histogram of
+/// nanosecond samples plus an exact running sum (Prometheus `_sum`).
+/// Recording is three relaxed atomic adds — no lock, `Send` + `Sync`.
 #[derive(Clone)]
 pub struct Timer {
-    hist: Rc<RefCell<LogHistogram>>,
-    sum_ns: Rc<Cell<f64>>,
+    hist: Arc<AtomicHistogram>,
 }
 
 impl Timer {
     fn new() -> Timer {
-        Timer {
-            hist: Rc::new(RefCell::new(LogHistogram::new(TIMER_BASE, TIMER_MAX_NS))),
-            sum_ns: Rc::new(Cell::new(0.0)),
-        }
+        Timer { hist: Arc::new(AtomicHistogram::new(TIMER_BASE, TIMER_MAX_NS)) }
     }
 
     /// Record one duration sample, in nanoseconds.
     #[inline]
     pub fn record_ns(&self, ns: u64) {
-        self.hist.borrow_mut().inc(ns);
-        self.sum_ns.set(self.sum_ns.get() + ns as f64);
+        self.hist.record(ns);
     }
 
     /// Time `f` and record its wall-clock duration.
@@ -126,17 +196,22 @@ impl Timer {
 
     /// Number of recorded samples.
     pub fn count(&self) -> u64 {
-        self.hist.borrow().total() as u64
+        self.hist.total.load(Relaxed)
     }
 
     /// Sum of recorded samples, nanoseconds.
     pub fn sum_ns(&self) -> f64 {
-        self.sum_ns.get()
+        self.hist.sum_ns.load(Relaxed) as f64
     }
 
     /// Interpolated quantile of the recorded samples, nanoseconds.
     pub fn quantile_ns(&self, q: f64) -> u64 {
-        self.hist.borrow().quantile(q)
+        self.hist.snapshot().quantile(q)
+    }
+
+    /// A point-in-time [`LogHistogram`] snapshot of the samples.
+    pub fn histogram(&self) -> LogHistogram {
+        self.hist.snapshot()
     }
 }
 
@@ -154,14 +229,22 @@ struct Entry<H> {
     handle: H,
 }
 
-/// The unified registry: named counters, gauges and timers. Lookup (and
-/// therefore allocation) happens only at registration time — the hot
-/// path holds pre-resolved handles.
+/// The metric table behind a registry (shared by every clone).
 #[derive(Default)]
-pub struct TelemetryRegistry {
+struct RegistryInner {
     counters: Vec<Entry<Counter>>,
     gauges: Vec<Entry<Gauge>>,
     timers: Vec<Entry<Timer>>,
+}
+
+/// The unified registry: named counters, gauges and timers. Lookup (and
+/// therefore locking + allocation) happens only at registration time —
+/// the hot path holds pre-resolved lock-free handles. Clones share one
+/// underlying table, so a shard worker attaching through its clone makes
+/// the handles visible to the front's scrape.
+#[derive(Default, Clone)]
+pub struct TelemetryRegistry {
+    inner: Arc<Mutex<RegistryInner>>,
 }
 
 fn resolve<H: Clone + Default>(
@@ -183,33 +266,38 @@ impl TelemetryRegistry {
         TelemetryRegistry::default()
     }
 
+    fn lock(&self) -> std::sync::MutexGuard<'_, RegistryInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Get or create the counter `name`.
-    pub fn counter(&mut self, name: &str) -> Counter {
-        resolve(&mut self.counters, name, None)
+    pub fn counter(&self, name: &str) -> Counter {
+        resolve(&mut self.lock().counters, name, None)
     }
 
     /// Get or create the counter `name{tenant="t"}`.
-    pub fn tenant_counter(&mut self, name: &str, tenant: TenantId) -> Counter {
-        resolve(&mut self.counters, name, Some(tenant))
+    pub fn tenant_counter(&self, name: &str, tenant: TenantId) -> Counter {
+        resolve(&mut self.lock().counters, name, Some(tenant))
     }
 
     /// Get or create the gauge `name`.
-    pub fn gauge(&mut self, name: &str) -> Gauge {
-        resolve(&mut self.gauges, name, None)
+    pub fn gauge(&self, name: &str) -> Gauge {
+        resolve(&mut self.lock().gauges, name, None)
     }
 
     /// Get or create the gauge `name{tenant="t"}`.
-    pub fn tenant_gauge(&mut self, name: &str, tenant: TenantId) -> Gauge {
-        resolve(&mut self.gauges, name, Some(tenant))
+    pub fn tenant_gauge(&self, name: &str, tenant: TenantId) -> Gauge {
+        resolve(&mut self.lock().gauges, name, Some(tenant))
     }
 
     /// Get or create the timer `name` (nanosecond histogram).
-    pub fn timer(&mut self, name: &str) -> Timer {
-        if let Some(e) = self.timers.iter().find(|e| e.name == name && e.tenant.is_none()) {
+    pub fn timer(&self, name: &str) -> Timer {
+        let mut inner = self.lock();
+        if let Some(e) = inner.timers.iter().find(|e| e.name == name && e.tenant.is_none()) {
             return e.handle.clone();
         }
         let handle = Timer::new();
-        self.timers.push(Entry { name: name.to_string(), tenant: None, handle: handle.clone() });
+        inner.timers.push(Entry { name: name.to_string(), tenant: None, handle: handle.clone() });
         handle
     }
 
@@ -224,10 +312,11 @@ impl TelemetryRegistry {
             Some(t) => format!("{{tenant=\"{t}\"}}"),
             None => String::new(),
         };
+        let inner = self.lock();
         // One `# TYPE` line per metric name (labeled per-tenant series
         // share a name and must not repeat it).
         let mut seen: Vec<&str> = Vec::new();
-        for e in &self.counters {
+        for e in &inner.counters {
             if !seen.contains(&e.name.as_str()) {
                 seen.push(e.name.as_str());
                 let _ = writeln!(out, "# TYPE {} counter", e.name);
@@ -235,38 +324,15 @@ impl TelemetryRegistry {
             let _ = writeln!(out, "{}{} {}", e.name, label(e.tenant), e.handle.get());
         }
         seen.clear();
-        for e in &self.gauges {
+        for e in &inner.gauges {
             if !seen.contains(&e.name.as_str()) {
                 seen.push(e.name.as_str());
                 let _ = writeln!(out, "# TYPE {} gauge", e.name);
             }
             let _ = writeln!(out, "{}{} {}", e.name, label(e.tenant), fmt_f64(e.handle.get()));
         }
-        for e in &self.timers {
-            let _ = writeln!(out, "# TYPE {} histogram", e.name);
-            let hist = e.handle.hist.borrow();
-            let total = hist.total();
-            // Emit only the buckets where the cumulative count moves
-            // (plus +Inf): zero-count runs carry no information and
-            // omitting them keeps the wire reply compact.
-            let mut prev = 0u64;
-            for (edge, frac) in hist.cdf() {
-                let cum = (frac * total).round() as u64;
-                if cum == prev {
-                    continue;
-                }
-                prev = cum;
-                let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", e.name, edge, cum);
-            }
-            let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", e.name, total as u64);
-            let _ = writeln!(out, "{}_sum {}", e.name, fmt_f64(e.handle.sum_ns()));
-            let _ = writeln!(out, "{}_count {}", e.name, total as u64);
-            drop(hist);
-            for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
-                let _ = writeln!(out, "# TYPE {}_{suffix}_ns gauge", e.name);
-                let _ =
-                    writeln!(out, "{}_{suffix}_ns {}", e.name, e.handle.quantile_ns(q));
-            }
+        for e in &inner.timers {
+            write_timer_exposition(&mut out, &e.name, &e.handle.histogram(), e.handle.sum_ns());
         }
         out
     }
@@ -281,24 +347,184 @@ impl TelemetryRegistry {
             Some(t) => format!("{name}{{tenant={t}}}"),
             None => name.to_string(),
         };
-        for e in &self.counters {
+        let inner = self.lock();
+        for e in &inner.counters {
             rows.push((key(&e.name, e.tenant), e.handle.get() as f64));
         }
-        for e in &self.gauges {
+        for e in &inner.gauges {
             rows.push((key(&e.name, e.tenant), e.handle.get()));
         }
-        for e in &self.timers {
-            rows.push((format!("{}_count", e.name), e.handle.count() as f64));
+        for e in &inner.timers {
+            let hist = e.handle.histogram();
+            rows.push((format!("{}_count", e.name), hist.total()));
             rows.push((format!("{}_sum_ns", e.name), e.handle.sum_ns()));
             for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
-                rows.push((
-                    format!("{}_{suffix}_ns", e.name),
-                    e.handle.quantile_ns(q) as f64,
-                ));
+                rows.push((format!("{}_{suffix}_ns", e.name), hist.quantile(q) as f64));
             }
         }
         rows
     }
+}
+
+/// One timer's histogram exposition block: moving buckets + `+Inf`,
+/// `_sum` / `_count`, and the interpolated quantile gauges.
+fn write_timer_exposition(out: &mut String, name: &str, hist: &LogHistogram, sum_ns: f64) {
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let total = hist.total();
+    // Emit only the buckets where the cumulative count moves (plus
+    // +Inf): zero-count runs carry no information and omitting them
+    // keeps the wire reply compact.
+    let mut prev = 0u64;
+    for (edge, frac) in hist.cdf() {
+        let cum = (frac * total).round() as u64;
+        if cum == prev {
+            continue;
+        }
+        prev = cum;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{edge}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", total as u64);
+    let _ = writeln!(out, "{name}_sum {}", fmt_f64(sum_ns));
+    let _ = writeln!(out, "{name}_count {}", total as u64);
+    for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
+        let _ = writeln!(out, "# TYPE {name}_{suffix}_ns gauge");
+        let _ = writeln!(out, "{name}_{suffix}_ns {}", hist.quantile(q));
+    }
+}
+
+/// Render a sharded deployment's registries as one Prometheus
+/// exposition: the front registry's series verbatim (no `shard` label),
+/// then every per-shard counter and gauge twice — once per shard under a
+/// `shard="i"` label (tenant labels preserved) and once as the
+/// cluster-level sum under the plain name. Shard timers merge into one
+/// cluster-level histogram per name: per-shard latency splits would
+/// multiply the reply by the shard count for little operator signal.
+pub fn prometheus_merged(front: &TelemetryRegistry, shards: &[TelemetryRegistry]) -> String {
+    let mut out = front.prometheus();
+    let label = |s: usize, t: Option<TenantId>| match t {
+        Some(t) => format!("{{shard=\"{s}\",tenant=\"{t}\"}}"),
+        None => format!("{{shard=\"{s}\"}}"),
+    };
+    let sum_label = |t: Option<TenantId>| match t {
+        Some(t) => format!("{{tenant=\"{t}\"}}"),
+        None => String::new(),
+    };
+    let counters = collect_rows(shards, |i| &i.counters, |h| h.get() as f64);
+    for (name, rows, sums) in counters {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (shard, tenant, v) in rows {
+            let _ = writeln!(out, "{name}{} {}", label(shard, tenant), v as u64);
+        }
+        for (tenant, v) in sums {
+            let _ = writeln!(out, "{name}{} {}", sum_label(tenant), v as u64);
+        }
+    }
+    let gauges = collect_rows(shards, |i| &i.gauges, |h| h.get());
+    for (name, rows, sums) in gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for (shard, tenant, v) in rows {
+            let _ = writeln!(out, "{name}{} {}", label(shard, tenant), fmt_f64(v));
+        }
+        for (tenant, v) in sums {
+            let _ = writeln!(out, "{name}{} {}", sum_label(tenant), fmt_f64(v));
+        }
+    }
+    for (name, hist, sum_ns) in merge_timers(shards) {
+        write_timer_exposition(&mut out, &name, &hist, sum_ns);
+    }
+    out
+}
+
+/// Flat merged rows for CSV artifacts / `RunReport.telemetry`: the front
+/// registry's rows verbatim, per-shard counter/gauge rows keyed
+/// `name{shard=i}` (tenant folded in), cluster-level sums under the
+/// plain key, and shard timers merged into one `_count` / `_sum_ns` /
+/// quantile set per name.
+pub fn snapshot_merged(
+    front: &TelemetryRegistry,
+    shards: &[TelemetryRegistry],
+) -> Vec<(String, f64)> {
+    let mut rows = front.snapshot();
+    let key = |s: usize, t: Option<TenantId>| match t {
+        Some(t) => format!("{{shard={s},tenant={t}}}"),
+        None => format!("{{shard={s}}}"),
+    };
+    let sum_key = |t: Option<TenantId>| match t {
+        Some(t) => format!("{{tenant={t}}}"),
+        None => String::new(),
+    };
+    let counters = collect_rows(shards, |i| &i.counters, |h| h.get() as f64);
+    let gauges = collect_rows(shards, |i| &i.gauges, |h| h.get());
+    for (name, per_shard, sums) in counters.into_iter().chain(gauges) {
+        for (shard, tenant, v) in per_shard {
+            rows.push((format!("{name}{}", key(shard, tenant)), v));
+        }
+        for (tenant, v) in sums {
+            rows.push((format!("{name}{}", sum_key(tenant)), v));
+        }
+    }
+    for (name, hist, sum_ns) in merge_timers(shards) {
+        rows.push((format!("{name}_count"), hist.total()));
+        rows.push((format!("{name}_sum_ns"), sum_ns));
+        for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
+            rows.push((format!("{name}_{suffix}_ns"), hist.quantile(q) as f64));
+        }
+    }
+    rows
+}
+
+/// Per-name merged view of one handle kind across shard registries:
+/// `(name, [(shard, tenant, value)], [(tenant, Σ value)])`, names and
+/// tenants in first-seen order.
+type MergedRows =
+    Vec<(String, Vec<(usize, Option<TenantId>, f64)>, Vec<(Option<TenantId>, f64)>)>;
+
+fn collect_rows<H>(
+    shards: &[TelemetryRegistry],
+    pick: fn(&RegistryInner) -> &Vec<Entry<H>>,
+    read: fn(&H) -> f64,
+) -> MergedRows {
+    let mut merged: MergedRows = Vec::new();
+    for (shard, reg) in shards.iter().enumerate() {
+        let inner = reg.lock();
+        for e in pick(&inner) {
+            let at = match merged.iter().position(|(n, _, _)| *n == e.name) {
+                Some(at) => at,
+                None => {
+                    merged.push((e.name.clone(), Vec::new(), Vec::new()));
+                    merged.len() - 1
+                }
+            };
+            let slot = &mut merged[at];
+            let v = read(&e.handle);
+            slot.1.push((shard, e.tenant, v));
+            match slot.2.iter().position(|(t, _)| *t == e.tenant) {
+                Some(at) => slot.2[at].1 += v,
+                None => slot.2.push((e.tenant, v)),
+            }
+        }
+    }
+    merged
+}
+
+/// Merge every shard's timers by name into `(name, histogram, Σ sum_ns)`.
+fn merge_timers(shards: &[TelemetryRegistry]) -> Vec<(String, LogHistogram, f64)> {
+    let mut merged: Vec<(String, LogHistogram, f64)> = Vec::new();
+    for reg in shards {
+        let inner = reg.lock();
+        for e in &inner.timers {
+            let hist = e.handle.histogram();
+            let sum = e.handle.sum_ns();
+            match merged.iter().position(|(n, _, _)| *n == e.name) {
+                Some(at) => {
+                    merged[at].1.merge(&hist);
+                    merged[at].2 += sum;
+                }
+                None => merged.push((e.name.clone(), hist, sum)),
+            }
+        }
+    }
+    merged
 }
 
 /// Trim a float for exposition: integral values print without a
@@ -559,7 +785,7 @@ mod tests {
 
     #[test]
     fn counters_gauges_timers_share_handles() {
-        let mut reg = TelemetryRegistry::new();
+        let reg = TelemetryRegistry::new();
         let a = reg.counter("elastictl_requests_total");
         let b = reg.counter("elastictl_requests_total");
         a.inc();
@@ -585,7 +811,7 @@ mod tests {
 
     #[test]
     fn prometheus_exposition_shape() {
-        let mut reg = TelemetryRegistry::new();
+        let reg = TelemetryRegistry::new();
         reg.counter("elastictl_requests_total").add(42);
         reg.tenant_gauge("elastictl_granted_bytes", 3).set(1e6);
         let t = reg.timer("elastictl_epoch_decide_ns");
@@ -614,7 +840,7 @@ mod tests {
 
     #[test]
     fn snapshot_rows_cover_all_kinds() {
-        let mut reg = TelemetryRegistry::new();
+        let reg = TelemetryRegistry::new();
         reg.counter("c").add(7);
         reg.tenant_gauge("g", 2).set(0.5);
         reg.timer("t").record_ns(100);
@@ -625,6 +851,66 @@ mod tests {
         assert_eq!(get("t_count"), Some(1.0));
         assert_eq!(get("t_sum_ns"), Some(100.0));
         assert!(get("t_p999_ns").is_some());
+    }
+
+    #[test]
+    fn handles_are_send_and_record_across_threads() {
+        let reg = TelemetryRegistry::new();
+        let c = reg.counter("elastictl_requests_total");
+        let t = reg.timer("elastictl_serve_ns");
+        let worker = std::thread::spawn(move || {
+            c.inc();
+            c.inc();
+            t.record_ns(500);
+        });
+        worker.join().unwrap();
+        assert_eq!(reg.counter("elastictl_requests_total").get(), 2);
+        assert_eq!(reg.timer("elastictl_serve_ns").count(), 1);
+        // Clones share the underlying table: a handle resolved through a
+        // clone is visible to the original's scrape.
+        let clone = reg.clone();
+        clone.counter("elastictl_hits_total").inc();
+        assert_eq!(reg.counter("elastictl_hits_total").get(), 1);
+    }
+
+    #[test]
+    fn merged_exposition_labels_shards_and_sums() {
+        let front = TelemetryRegistry::new();
+        front.gauge("elastictl_instances").set(2.0);
+        let shards: Vec<TelemetryRegistry> =
+            (0..2).map(|_| TelemetryRegistry::new()).collect();
+        shards[0].counter("elastictl_requests_total").add(3);
+        shards[1].counter("elastictl_requests_total").add(5);
+        shards[1].tenant_counter("elastictl_denied_total", 7).add(2);
+        shards[0].timer("elastictl_serve_ns").record_ns(1_000);
+        shards[1].timer("elastictl_serve_ns").record_ns(2_000);
+        let text = prometheus_merged(&front, &shards);
+        assert!(text.contains("elastictl_instances 2"), "{text}");
+        assert!(text.contains("elastictl_requests_total{shard=\"0\"} 3"), "{text}");
+        assert!(text.contains("elastictl_requests_total{shard=\"1\"} 5"), "{text}");
+        assert!(text.contains("elastictl_requests_total 8"), "{text}");
+        assert!(text.contains("elastictl_denied_total{shard=\"1\",tenant=\"7\"} 2"), "{text}");
+        assert!(text.contains("elastictl_denied_total{tenant=\"7\"} 2"), "{text}");
+        assert!(text.contains("elastictl_serve_ns_count 2"), "{text}");
+        // The merged text is still line-parseable exposition.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line
+                        .split_once(' ')
+                        .map(|(m, v)| !m.is_empty() && v.parse::<f64>().is_ok())
+                        .unwrap_or(false),
+                "unparseable exposition line: {line}"
+            );
+        }
+        let rows = snapshot_merged(&front, &shards);
+        let get = |k: &str| rows.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        assert_eq!(get("elastictl_requests_total{shard=0}"), Some(3.0));
+        assert_eq!(get("elastictl_requests_total{shard=1}"), Some(5.0));
+        assert_eq!(get("elastictl_requests_total"), Some(8.0));
+        assert_eq!(get("elastictl_denied_total{shard=1,tenant=7}"), Some(2.0));
+        assert_eq!(get("elastictl_serve_ns_count"), Some(2.0));
+        assert_eq!(get("elastictl_serve_ns_sum_ns"), Some(3_000.0));
     }
 
     #[test]

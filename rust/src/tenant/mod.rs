@@ -64,10 +64,11 @@ use crate::vcache::VirtualCache;
 use crate::{ObjectId, TenantId, TimeUs};
 
 /// Grant-priority escalation per epoch in SLO violation (and the decay
-/// factor once compliant).
-const SLO_BOOST_STEP: f64 = 2.0;
+/// factor once compliant). Public so the sharded front can replicate the
+/// window arithmetic bit-for-bit.
+pub const SLO_BOOST_STEP: f64 = 2.0;
 /// Ceiling on the SLO escalation factor.
-const SLO_BOOST_MAX: f64 = 64.0;
+pub const SLO_BOOST_MAX: f64 = 64.0;
 
 /// Drain bound K: a retiring tenant's residents must reach zero within
 /// this many epoch boundaries (the balancer sheds the whole ledger row at

@@ -2,6 +2,8 @@
 //! one-liner (`STATS` / `SLO` / `PLACEMENT` / `WHY`) must parse as valid
 //! JSON and carry exactly the fields docs/PROTOCOL.md documents, and
 //! `METRICS` must be well-formed Prometheus text terminated by `# EOF`.
+//! The sharded front answers the same surface: its replies are pinned
+//! here too, including the `shard="i"` labels in the merged exposition.
 //!
 //! The JSON validator is hand-rolled (the offline build carries no
 //! serde): a strict recursive-descent parser that rejects trailing
@@ -11,7 +13,9 @@
 
 use elastictl::config::{Config, PolicyKind};
 use elastictl::serve::ServerState;
+use elastictl::srv::{spawn_sharded_state, Msg, SrvTx};
 use elastictl::tenant::TenantSpec;
+use std::sync::mpsc;
 
 /// Strict JSON parser over the reply bytes (all replies are ASCII).
 struct Json<'a> {
@@ -359,10 +363,10 @@ fn journal_jsonl_records_parse_too() {
     }
 }
 
-#[test]
-fn metrics_reply_is_prometheus_text() {
-    let mut st = decided_state();
-    let block = st.handle_line("METRICS").unwrap();
+/// Walk a `METRICS` reply asserting Prometheus text grammar line by line
+/// (comments are TYPE/HELP, samples are `name[{labels}] value`, the block
+/// ends with `# EOF`); returns the sample count.
+fn assert_prometheus_grammar(block: &str) -> usize {
     let mut samples = 0usize;
     let mut lines = block.lines().peekable();
     while let Some(line) = lines.next() {
@@ -395,9 +399,180 @@ fn metrics_reply_is_prometheus_text() {
         );
         samples += 1;
     }
+    samples
+}
+
+#[test]
+fn metrics_reply_is_prometheus_text() {
+    let mut st = decided_state();
+    let block = st.handle_line("METRICS").unwrap();
+    let samples = assert_prometheus_grammar(&block);
     assert!(samples >= 10, "suspiciously few samples:\n{block}");
     // The documented request-path counters are present.
     for metric in ["elastictl_requests_total", "elastictl_misses_total", "elastictl_instances"] {
         assert!(block.contains(metric), "missing {metric}:\n{block}");
+    }
+}
+
+// --- the sharded front answers the same surface ---
+
+/// Drive one line through a sharded front thread and wait for the reply.
+fn ask(tx: &SrvTx, line: &str) -> Option<String> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    tx.send(Msg::Line(line.to_string(), reply_tx)).unwrap();
+    reply_rx.recv().unwrap()
+}
+
+/// The sharded twin of [`decided_state`]: same tenants, same flood, same
+/// single decided epoch, behind `shards` workers.
+fn sharded_decided(shards: u32) -> SrvTx {
+    let mut cfg = Config::with_policy(PolicyKind::TenantTtl);
+    cfg.engine.shards = shards;
+    cfg.telemetry.enabled = true;
+    cfg.controller.t_init_secs = 3600.0;
+    cfg.cost.instance.ram_bytes = 1_000_000;
+    cfg.scaler.max_instances = 2;
+    cfg.scaler.enforce_grants = true;
+    cfg.tenants = vec![
+        TenantSpec::new(1, "gold").with_multiplier(10.0).with_slo_miss_ratio(0.2),
+        TenantSpec::new(2, "flood").with_multiplier(0.1),
+    ];
+    let server = spawn_sharded_state(cfg, None).expect("tenant_ttl shards");
+    for i in 0..30 {
+        ask(&server.tx, &format!("GET 2/obj{i} 100000"));
+    }
+    ask(&server.tx, "GET 1/k 100000");
+    ask(&server.tx, "EPOCH");
+    server.tx
+}
+
+#[test]
+fn sharded_global_stats_has_null_miss_ratio_before_traffic() {
+    let mut cfg = Config::with_policy(PolicyKind::Ttl);
+    cfg.engine.shards = 2;
+    let server = spawn_sharded_state(cfg, None).unwrap();
+    let reply = ask(&server.tx, "STATS").unwrap();
+    assert!(reply.contains("\"miss_ratio\":null"), "{reply}");
+    assert_eq!(
+        keys_of(&reply),
+        [
+            "requests",
+            "misses",
+            "spurious",
+            "miss_ratio",
+            "instances",
+            "miss_cost",
+            "ttl_secs",
+            "tenants",
+            "shards",
+        ],
+        "{reply}"
+    );
+}
+
+#[test]
+fn sharded_tenant_stats_fields_match_protocol_doc() {
+    let tx = sharded_decided(2);
+    let reply = ask(&tx, "STATS 2").unwrap();
+    assert_eq!(
+        keys_of(&reply),
+        ["tenant", "requests", "misses", "miss_cost", "physical_bytes", "ttl_secs", "state"],
+        "{reply}"
+    );
+    assert!(reply.contains("\"requests\":30"), "{reply}");
+    assert!(reply.contains("\"state\":\"active\""), "{reply}");
+}
+
+#[test]
+fn sharded_slo_fields_match_protocol_doc() {
+    let tx = sharded_decided(2);
+    for t in ["SLO 1", "SLO 2"] {
+        let reply = ask(&tx, t).unwrap();
+        assert_eq!(
+            keys_of(&reply),
+            [
+                "tenant",
+                "enforced",
+                "decided",
+                "demand_bytes",
+                "granted_bytes",
+                "cap_bytes",
+                "admitted_epoch_bytes",
+                "denied",
+                "ttl_clamp_secs",
+                "slo_miss_ratio",
+                "measured_miss_ratio",
+                "in_violation",
+                "boost",
+            ],
+            "{reply}"
+        );
+    }
+}
+
+#[test]
+fn sharded_placement_fields_match_protocol_doc() {
+    let tx = sharded_decided(2);
+    let reply = ask(&tx, "PLACEMENT").unwrap();
+    assert_eq!(keys_of(&reply), ["policy", "instances", "tenants"], "{reply}");
+}
+
+#[test]
+fn sharded_why_fields_match_protocol_doc() {
+    let tx = sharded_decided(2);
+    let reply = ask(&tx, "WHY 2").unwrap();
+    assert_eq!(keys_of(&reply), ["t", "epoch", "instances", "cause", "decision"], "{reply}");
+    let dec = &reply[reply.find("\"decision\":").unwrap() + "\"decision\":".len()..reply.len() - 1];
+    assert_eq!(
+        keys_of(dec),
+        [
+            "tenant",
+            "demand_bytes",
+            "granted_bytes",
+            "reserved_bytes",
+            "pooled_bytes",
+            "cap_bytes",
+            "ttl_clamp_secs",
+            "resident_before_bytes",
+            "resident_bytes",
+            "shed_bytes",
+            "denied_admissions",
+            "slo_miss_ratio",
+            "measured_miss_ratio",
+            "boost",
+            "bill_storage_dollars",
+            "bill_miss_dollars",
+            "reconciled_dollars",
+            "cause",
+        ],
+        "{dec}"
+    );
+}
+
+#[test]
+fn sharded_metrics_reply_is_prometheus_text_with_shard_labels() {
+    let tx = sharded_decided(2);
+    let block = ask(&tx, "METRICS").unwrap();
+    let samples = assert_prometheus_grammar(&block);
+    assert!(samples >= 10, "suspiciously few samples:\n{block}");
+    // Per-shard series under shard labels, one per worker…
+    for shard in 0..2 {
+        assert!(
+            block.contains(&format!("elastictl_requests_total{{shard=\"{shard}\"}}")),
+            "missing shard {shard} series:\n{block}"
+        );
+    }
+    // …the cluster-level sum under the plain name, and the shard-health
+    // metrics the front records at every barrier.
+    for metric in [
+        "\nelastictl_requests_total ",
+        "elastictl_shard_queue_depth{shard=\"0\"}",
+        "elastictl_shard_batch_occupancy{shard=\"0\"}",
+        "elastictl_shard_request_imbalance",
+        "elastictl_epoch_barrier_wait_ns_count",
+        "elastictl_epoch_merge_ns_count",
+        "elastictl_instances",
+    ] {
+        assert!(block.contains(metric), "missing {metric:?}:\n{block}");
     }
 }

@@ -14,11 +14,17 @@
 //! bug in the barrier merge, not float noise, so the assertions compare
 //! `f64::to_bits` — never an epsilon.
 //!
+//! With telemetry on, the epoch decision journal is held to the same
+//! standard: every record the sharded barrier emits must match the
+//! `shards = 1` journal field-for-field (and turning telemetry on must
+//! not perturb a single decision).
+//!
 //! `ELASTICTL_TEST_SHARDS=N` narrows the shard matrix to one width (the
 //! CI shards leg runs the suite at 4); the default matrix is {2, 4}.
 
 use elastictl::config::{Config, PolicyKind};
 use elastictl::engine::{self, EngineBuilder, ShardedEngine};
+use elastictl::telemetry::EpochDecisionRecord;
 use elastictl::tenant::{TenantAllocation, TenantSpec};
 use elastictl::trace::{Request, SynthConfig, SynthGenerator, TenantEvent};
 use elastictl::{TimeUs, MINUTE};
@@ -228,4 +234,105 @@ fn sharded_runs_are_deterministic_across_repeats() {
     let (b, grants_b) = run_sharded(&cfg, shards, &ops);
     assert_bit_identical(&a, &b, "repeat run");
     assert_eq!(grants_a, grants_b, "repeat run: grants log");
+}
+
+/// [`parity_cfg`] with the decision journal and metric registry on.
+fn telemetry_cfg(policy: PolicyKind) -> Config {
+    let mut cfg = parity_cfg(policy);
+    cfg.telemetry.enabled = true;
+    cfg
+}
+
+/// The journal twin of [`assert_bit_identical`]: every retained epoch
+/// decision record field, f64s compared on `to_bits`.
+fn assert_journal_identical(
+    got: &[EpochDecisionRecord],
+    want: &[EpochDecisionRecord],
+    what: &str,
+) {
+    let bits = |v: Option<f64>| v.map(f64::to_bits);
+    assert_eq!(got.len(), want.len(), "{what}: journal length");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!((g.t, g.epoch, g.instances), (w.t, w.epoch, w.instances), "{what}: record id");
+        assert_eq!(g.capacity_bytes, w.capacity_bytes, "{what}: capacity at t={}", g.t);
+        assert_eq!(
+            (g.storage_dollars.to_bits(), g.miss_dollars.to_bits()),
+            (w.storage_dollars.to_bits(), w.miss_dollars.to_bits()),
+            "{what}: epoch dollars at t={}",
+            g.t,
+        );
+        assert_eq!(g.tenants.len(), w.tenants.len(), "{what}: tenant rows at t={}", g.t);
+        for (gt, wt) in g.tenants.iter().zip(&w.tenants) {
+            let ctx = format!("{what}: tenant {} at t={}", gt.tenant, g.t);
+            assert_eq!(gt.tenant, wt.tenant, "{ctx}: row order");
+            assert_eq!(
+                (gt.demand_bytes, gt.granted_bytes, gt.reserved_bytes, gt.pooled_bytes),
+                (wt.demand_bytes, wt.granted_bytes, wt.reserved_bytes, wt.pooled_bytes),
+                "{ctx}: grant quantities",
+            );
+            assert_eq!(gt.cap_bytes, wt.cap_bytes, "{ctx}: cap");
+            assert_eq!(bits(gt.ttl_clamp_secs), bits(wt.ttl_clamp_secs), "{ctx}: ttl clamp");
+            assert_eq!(
+                (gt.resident_before_bytes, gt.resident_bytes, gt.shed_bytes),
+                (wt.resident_before_bytes, wt.resident_bytes, wt.shed_bytes),
+                "{ctx}: residency",
+            );
+            assert_eq!(gt.denied_admissions, wt.denied_admissions, "{ctx}: denials");
+            assert_eq!(bits(gt.slo_miss_ratio), bits(wt.slo_miss_ratio), "{ctx}: slo target");
+            assert_eq!(
+                bits(gt.measured_miss_ratio),
+                bits(wt.measured_miss_ratio),
+                "{ctx}: measured miss ratio",
+            );
+            assert_eq!(gt.boost.to_bits(), wt.boost.to_bits(), "{ctx}: boost");
+            assert_eq!(
+                (gt.bill_storage_dollars.to_bits(), gt.bill_miss_dollars.to_bits()),
+                (wt.bill_storage_dollars.to_bits(), wt.bill_miss_dollars.to_bits()),
+                "{ctx}: attributed bill",
+            );
+            assert_eq!(
+                bits(gt.reconciled_dollars),
+                bits(wt.reconciled_dollars),
+                "{ctx}: reconciled bill",
+            );
+            assert_eq!(gt.cause(), wt.cause(), "{ctx}: cause");
+        }
+    }
+}
+
+#[test]
+fn sharded_journal_matches_single_shard_bit_for_bit() {
+    let ops = churn_ops();
+    for policy in [PolicyKind::Ttl, PolicyKind::TenantTtl] {
+        let cfg = telemetry_cfg(policy);
+        let (want, _) = run_sharded(&cfg, 1, &ops);
+        assert!(want.journal.len() >= 10, "journal spans too few epochs");
+        for shards in test_shards() {
+            let what = format!("{policy:?} shards={shards} journal");
+            let (got, _) = run_sharded(&cfg, shards, &ops);
+            assert_journal_identical(&got.journal, &want.journal, &what);
+        }
+    }
+    // The churn's retirement shows up in the journal, not just the bills:
+    // exactly one record carries tenant 2's close-out reconciliation.
+    let (base, _) = run_sharded(&telemetry_cfg(PolicyKind::TenantTtl), 1, &ops);
+    let closed: Vec<_> = base
+        .journal
+        .iter()
+        .filter_map(|r| r.tenant(2))
+        .filter(|d| d.reconciled_dollars.is_some())
+        .collect();
+    assert_eq!(closed.len(), 1, "tenant 2 retirement must journal one reconciliation");
+}
+
+#[test]
+fn telemetry_leaves_sharded_decisions_bit_identical() {
+    let ops = churn_ops();
+    let shards = *test_shards().last().unwrap();
+    let (want, want_grants) = run_sharded(&parity_cfg(PolicyKind::TenantTtl), shards, &ops);
+    assert!(want.journal.is_empty() && want.telemetry.is_empty(), "off means off");
+    let (got, got_grants) = run_sharded(&telemetry_cfg(PolicyKind::TenantTtl), shards, &ops);
+    assert!(!got.journal.is_empty() && !got.telemetry.is_empty(), "on means on");
+    assert_bit_identical(&got, &want, "telemetry on vs off");
+    assert_eq!(got_grants, want_grants, "telemetry on vs off: grants log");
 }

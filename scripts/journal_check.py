@@ -1,17 +1,20 @@
 #!/usr/bin/env python3
-"""Invariant pass over an epoch decision journal (JSONL) or a server
-billing checkpoint (`srv::checkpoint` length-prefixed JSONL).
+"""Invariant pass over an epoch decision journal (JSONL), a server
+billing checkpoint (`srv::checkpoint` length-prefixed JSONL), or a
+sharded `METRICS` scrape (Prometheus text exposition).
 
-Usage: journal_check.py <journal.jsonl|server.ckpt> [more ...]
+Usage: journal_check.py <journal.jsonl|server.ckpt|metrics.prom> [more ...]
 
 The file kind is auto-detected per file: a line shaped
 `<byte-length> {json}` is a checkpoint record (the format `elastictl
-serve --checkpoint` appends, fsync'd per closed epoch); anything else is
-one `EpochDecisionRecord` as written by `engine::run` when
-`[telemetry] journal_path` is set (see docs/OBSERVABILITY.md for the
-schema). The nightly soak runs this over the fig14-obs journal and over
-the kill/resume serve soak's checkpoint; any violation exits 1 so the
-soaks surface engine bugs, not just slow drifts.
+serve --checkpoint` appends, fsync'd per closed epoch); a line starting
+with `#` or a bare metric name is Prometheus text (what the sharded
+front answers to `METRICS`); anything else is one `EpochDecisionRecord`
+as written by `engine::run` when `[telemetry] journal_path` is set (see
+docs/OBSERVABILITY.md for the schema). The nightly soak runs this over
+the fig14-obs journal, over the kill/resume serve soak's checkpoint, and
+over the METRICS scrape taken from the sharded soak leg; any violation
+exits 1 so the soaks surface engine bugs, not just slow drifts.
 
 Checked per decision record:
   * arbiter bound:   Σ granted_bytes over tenants ≤ capacity_bytes
@@ -29,6 +32,19 @@ bounded ring never evicted):
                      bills (delta ≈ 0) — retirement must bill exactly
                      what the epochs billed.
 
+Checked on a sharded METRICS scrape:
+  * grammar:         every non-comment line is `name[{labels}] value`
+  * shard labels:    `shard="i"` series exist, each (metric, shard) pair
+                     appears at most once, every unlabeled metric's shard
+                     set is contiguous from 0, and all metrics agree on
+                     the shard width
+  * merge closure:   for every shard-labeled series the unlabeled
+                     cluster-level sample equals the sum of its per-shard
+                     samples (the merged exposition must neither drop nor
+                     invent traffic — exact for counters, 1e-6 relative
+                     for gauges)
+  * request path:    per-shard `elastictl_requests_total` series present
+
 Checked on a checkpoint file:
   * framing:         each length prefix matches its record's byte length
                      (a torn final record — a mid-write kill — is
@@ -44,6 +60,7 @@ Checked on a checkpoint file:
 """
 
 import json
+import re
 import sys
 
 
@@ -55,6 +72,94 @@ def looks_like_checkpoint(line: str) -> bool:
     """`<decimal length> {json}` — the srv::checkpoint framing."""
     head, _, rest = line.partition(" ")
     return head.isdigit() and rest.startswith("{")
+
+
+SAMPLE_RE = re.compile(r"^([A-Za-z_:][A-Za-z0-9_:]*)(\{[^}]*\})? (\S+)$")
+LABEL_RE = re.compile(r'(\w+)="([^"]*)"')
+
+
+def looks_like_metrics(line: str) -> bool:
+    """A Prometheus comment or a `name[{labels}] value` sample."""
+    return line.startswith("#") or SAMPLE_RE.match(line) is not None
+
+
+def check_metrics_file(path: str, lines: list[tuple[int, str]]) -> int:
+    violations = 0
+
+    def bad(msg: str) -> None:
+        nonlocal violations
+        violations += 1
+        print(f"::error title=metrics invariant::{path}: {msg}")
+
+    # (name, non-shard labels) -> the unlabeled cluster sample (if any)
+    # plus every `shard="i"` sample, so the merge closure can be checked
+    # per series family.
+    series: dict[tuple, dict] = {}
+    saw_eof = False
+    for lineno, line in lines:
+        if line == "# EOF":
+            saw_eof = True
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        if m is None:
+            bad(f"line {lineno}: not a metric sample: {line!r}")
+            continue
+        name, labelblock, value = m.groups()
+        try:
+            v = float(value)
+        except ValueError:
+            bad(f"line {lineno}: unparseable value {value!r}")
+            continue
+        labels = dict(LABEL_RE.findall(labelblock or ""))
+        shard = labels.pop("shard", None)
+        key = (name, tuple(sorted(labels.items())))
+        entry = series.setdefault(key, {"plain": None, "shards": {}})
+        if shard is None:
+            if entry["plain"] is not None:
+                bad(f"line {lineno}: duplicate series {name}{labelblock or ''}")
+            entry["plain"] = v
+        elif not shard.isdigit():
+            bad(f"line {lineno}: non-numeric shard label {shard!r}")
+        elif int(shard) in entry["shards"]:
+            bad(f"line {lineno}: duplicate shard {shard} sample for {name}")
+        else:
+            entry["shards"][int(shard)] = v
+
+    sharded = {key: e for key, e in series.items() if e["shards"]}
+    if not sharded:
+        bad('no shard="i" series (not a sharded METRICS scrape?)')
+        return violations
+    width = 1 + max(max(e["shards"]) for e in sharded.values())
+    for (name, labels), e in sorted(sharded.items()):
+        what = name + "".join(f"{{{k}={v}}}" for k, v in labels)
+        idx = sorted(e["shards"])
+        if labels:
+            # Tenant-labeled series appear only on shards that saw the
+            # tenant — any subset of the width is fine.
+            if idx[-1] >= width:
+                bad(f"{what}: shard {idx[-1]} outside the {width}-shard width")
+        elif idx != list(range(width)):
+            bad(f"{what}: shard labels {idx}, want contiguous 0..{width - 1}")
+        if e["plain"] is None:
+            bad(f"{what}: per-shard series but no cluster-level sum sample")
+        elif not approx(sum(e["shards"].values()), e["plain"], rel=1e-6, abs_tol=1e-6):
+            bad(
+                f"{what}: Σ shard samples {sum(e['shards'].values()):.9f} != "
+                f"cluster sum {e['plain']:.9f}"
+            )
+    if all(name != "elastictl_requests_total" for name, _ in sharded):
+        bad("no per-shard elastictl_requests_total series")
+    if not saw_eof:
+        print(f"{path}: no # EOF terminator (truncated scrape?)")
+
+    if violations == 0:
+        print(
+            f"{path}: {len(sharded)} shard-labeled series over {width} shard(s), "
+            "all invariants hold"
+        )
+    return violations
 
 
 def check_checkpoint_file(path: str, lines: list[tuple[int, str]]) -> int:
@@ -163,6 +268,8 @@ def check_file(path: str) -> int:
                 lines.append((lineno, line))
     if lines and looks_like_checkpoint(lines[0][1]):
         return check_checkpoint_file(path, lines)
+    if lines and looks_like_metrics(lines[0][1]):
+        return check_metrics_file(path, lines)
 
     records = []
     for lineno, line in lines:
