@@ -64,6 +64,30 @@ fn main() {
         })
         .p50_ns;
 
+    // Admission-filter overhead: the same enforced run with the
+    // Mth-request sketch live — one hash + one packed-nibble bump per
+    // request, no allocation. Acceptance bound for the admission layer:
+    // within 5% (p50) of the unfiltered enforced row.
+    let mut cfg_mth = cfg.clone();
+    cfg_mth.admission.filter = elastictl::config::AdmissionKind::MthRequest;
+    cfg_mth.admission.m = 2;
+    let mth_p50 = b
+        .bench("offer_mth_request", trace.len() as u64, || {
+            let mut engine = EngineBuilder::new(&cfg_mth).no_default_probes().build();
+            for r in &trace {
+                black_box(engine.offer(r));
+            }
+            black_box(engine.finish());
+        })
+        .p50_ns;
+    let overhead_pct = (mth_p50 - bare_p50) / bare_p50 * 100.0;
+    println!("# mth_request overhead vs enforced (p50): {overhead_pct:+.2}%");
+    assert!(
+        overhead_pct < 5.0,
+        "mth_request overhead {overhead_pct:.2}% breaches the 5% budget \
+         (bare p50 {bare_p50:.0} ns, filtered p50 {mth_p50:.0} ns)"
+    );
+
     // Telemetry overhead: the same enforced run with the registry +
     // decision journal live. The acceptance gate for the telemetry
     // subsystem: pre-resolved handles and 1-in-64 serve-latency sampling

@@ -1,0 +1,430 @@
+//! Composable admission filters — *should this miss be inserted at all?*
+//!
+//! The paper's controller decides *how long* to keep objects (the TTL
+//! timer) but admits every miss, so one-hit-wonder-heavy traces pay
+//! storage for bytes that never hit again. This module adds the missing
+//! axis as a config-selectable layer under every
+//! [`crate::config::PolicyKind`] (`[admission] filter = ...`), threaded
+//! through [`crate::balancer::Balancer::handle`] alongside the grant-cap
+//! denial: a denied insert still serves the miss
+//! ([`crate::cluster::Cluster::serve_no_insert_for`]), it just never
+//! occupies cluster RAM.
+//!
+//! Two O(1)-per-request filters (the paper's own complexity constraint):
+//!
+//! * [`MthRequestFilter`] — *cache on Mth request* (Carlsson & Eager,
+//!   arXiv 1812.07264): a per-`(tenant, key)` request-count gate backed
+//!   by a fixed-size 4-bit counting sketch. A key's insert is admitted
+//!   on (or, under cell collisions, before) its Mth observed request;
+//!   epoch boundaries halve every counter so stale popularity decays.
+//!   The sketch is direct-indexed by the *same* hash the shard router
+//!   uses (`mix64(scoped_object(tenant, key))`), so with a power-of-two
+//!   cell count every pair of colliding keys also co-shards for
+//!   power-of-two shard counts — per-shard sketches are bit-identical
+//!   to the monolithic one (pinned by `sharded_parity`).
+//! * [`KeepCostFilter`] — *to keep or not to keep* (Le Scouarnec et
+//!   al., arXiv 1312.0499): admit iff the expected miss dollars saved
+//!   by caching (`multiplier × m_o`) are at least the expected storage
+//!   dollars of holding the object for the tenant's current TTL
+//!   (`threshold × s_o × c × T_i`). Stateless; reads the tenant's live
+//!   timer via [`crate::scaler::EpochSizer::tenant_ttl_secs`].
+//!
+//! Sketch guarantees (pinned by `tests/admission_properties.rs`):
+//! counters never under-count (one cell per key, increments only, so a
+//! key's cell is at least its true observation count → admission never
+//! happens *later* than the true Mth request), collisions only admit
+//! *early* at a rate bounded by the sketch load factor, aging halves
+//! every counter exactly (floor), and state stays at the configured
+//! byte budget regardless of unique-key count.
+
+#![warn(missing_docs)]
+
+use crate::config::{AdmissionKind, Config, CostConfig};
+use crate::tenant::scoped_object;
+use crate::trace::Request;
+use crate::{ObjectId, TenantId};
+
+/// Saturation ceiling of one 4-bit sketch counter. `[admission] m` is
+/// validated to stay at or below this, so a saturated cell always admits.
+pub const SKETCH_COUNTER_MAX: u8 = 15;
+
+/// An admission-side vote on one request, consulted by the balancer
+/// after the policy's own verdict (grant caps, draining tenants). The
+/// combined verdict is the AND of both: the filter can only *suppress*
+/// inserts the policy would have allowed, never force one.
+pub trait AdmissionFilter {
+    /// Observe one request and vote on inserting it if it misses. Runs
+    /// on the hot path for *every* request (hits included — the Mth
+    /// sketch counts observations, not misses); must be O(1).
+    ///
+    /// `ttl_secs` is the requesting tenant's current timer (only
+    /// fetched when [`AdmissionFilter::needs_ttl`] says so); `None`
+    /// means the policy keeps no timer and TTL-priced filters stay
+    /// inert (admit).
+    fn observe(&mut self, req: &Request, ttl_secs: Option<f64>) -> bool;
+
+    /// Whether [`AdmissionFilter::observe`] wants the tenant's current
+    /// TTL. The balancer skips the timer lookup entirely when this is
+    /// false, keeping the Mth-request hot path free of it.
+    fn needs_ttl(&self) -> bool {
+        false
+    }
+
+    /// Epoch boundary: age the filter state (the Mth sketch halves its
+    /// counters). Called once per boundary by both the monolithic
+    /// balancer and each shard worker, so sharded and monolithic
+    /// sketches age in lockstep.
+    fn end_epoch(&mut self);
+
+    /// Stable filter name (`mth_request` | `keep_cost`).
+    fn name(&self) -> &'static str;
+
+    /// Bytes of filter state — constant for the run, whatever the
+    /// unique-key count (pinned by `admission_properties`).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Build the configured filter, if any (`[admission] filter`, default
+/// `none` → `None`: the request path stays bit-identical to the seed).
+pub fn build_filter(cfg: &Config) -> Option<Box<dyn AdmissionFilter>> {
+    match cfg.admission.filter {
+        AdmissionKind::None => None,
+        AdmissionKind::MthRequest => Some(Box::new(MthRequestFilter::from_config(cfg))),
+        AdmissionKind::KeepCost => Some(Box::new(KeepCostFilter::from_config(cfg))),
+    }
+}
+
+/// *Cache on Mth request*: a fixed-size 4-bit counting sketch over
+/// `(tenant, key)`, admitting an insert once the key's cell has seen M
+/// observations. One hash, one cell per key (a direct-indexed, depth-1
+/// counting Bloom filter): collisions can only *over*-count, so the
+/// filter never admits later than the true Mth request.
+pub struct MthRequestFilter {
+    /// Packed 4-bit counters, two per byte (`2 × cells.len()` cells).
+    cells: Vec<u8>,
+    /// Cell-index mask (`cell_count - 1`; the count is a power of two).
+    mask: u64,
+    /// Per-tenant M overrides, dense by tenant id; missing → default.
+    m: Vec<u8>,
+    /// `[admission] m` — admit on the Mth observed request.
+    default_m: u8,
+}
+
+impl MthRequestFilter {
+    /// A sketch of `sketch_bytes` (rounded up to a power of two, min 2)
+    /// admitting on the `m`th observed request (clamped to
+    /// 1..=[`SKETCH_COUNTER_MAX`]).
+    pub fn new(sketch_bytes: usize, m: u32) -> MthRequestFilter {
+        let bytes = sketch_bytes.max(2).next_power_of_two();
+        MthRequestFilter {
+            cells: vec![0u8; bytes],
+            mask: (bytes as u64 * 2) - 1,
+            m: Vec::new(),
+            default_m: m.clamp(1, SKETCH_COUNTER_MAX as u32) as u8,
+        }
+    }
+
+    /// Build from `[admission]` (sketch size, default M, per-tenant
+    /// `admission_m` overrides).
+    pub fn from_config(cfg: &Config) -> MthRequestFilter {
+        let mut f = MthRequestFilter::new(cfg.admission.sketch_bytes as usize, cfg.admission.m);
+        for o in &cfg.admission.overrides {
+            if let Some(m) = o.m {
+                f.set_tenant_m(o.tenant, m);
+            }
+        }
+        f
+    }
+
+    /// Override one tenant's M (clamped to 1..=[`SKETCH_COUNTER_MAX`]).
+    pub fn set_tenant_m(&mut self, tenant: TenantId, m: u32) {
+        let i = tenant as usize;
+        if self.m.len() <= i {
+            let d = self.default_m;
+            self.m.resize(i + 1, d);
+        }
+        self.m[i] = m.clamp(1, SKETCH_COUNTER_MAX as u32) as u8;
+    }
+
+    /// The M in force for `tenant`.
+    #[inline]
+    pub fn m_of(&self, tenant: TenantId) -> u8 {
+        self.m.get(tenant as usize).copied().unwrap_or(self.default_m)
+    }
+
+    /// Cell index of `(tenant, obj)` — the shard router's hash
+    /// (`mix64 ∘ scoped_object`) masked to the cell count, so colliding
+    /// keys share their low bits and therefore their shard.
+    #[inline]
+    fn cell_of(&self, tenant: TenantId, obj: ObjectId) -> usize {
+        (crate::mix64(scoped_object(tenant, obj)) & self.mask) as usize
+    }
+
+    /// Saturating-increment the cell; returns the post-increment count.
+    #[inline]
+    fn bump(&mut self, cell: usize) -> u8 {
+        let byte = &mut self.cells[cell >> 1];
+        if cell & 1 == 0 {
+            let v = *byte & 0x0F;
+            if v < SKETCH_COUNTER_MAX {
+                *byte = (*byte & 0xF0) | (v + 1);
+                v + 1
+            } else {
+                SKETCH_COUNTER_MAX
+            }
+        } else {
+            let v = *byte >> 4;
+            if v < SKETCH_COUNTER_MAX {
+                *byte = (*byte & 0x0F) | ((v + 1) << 4);
+                v + 1
+            } else {
+                SKETCH_COUNTER_MAX
+            }
+        }
+    }
+
+    /// Current sketch count for `(tenant, obj)` — a diagnostic read for
+    /// tests and tooling; the hot path never calls it.
+    pub fn count(&self, tenant: TenantId, obj: ObjectId) -> u8 {
+        let cell = self.cell_of(tenant, obj);
+        let byte = self.cells[cell >> 1];
+        if cell & 1 == 0 {
+            byte & 0x0F
+        } else {
+            byte >> 4
+        }
+    }
+
+    /// Number of 4-bit cells.
+    pub fn cell_count(&self) -> usize {
+        self.cells.len() * 2
+    }
+}
+
+impl AdmissionFilter for MthRequestFilter {
+    #[inline]
+    fn observe(&mut self, req: &Request, _ttl_secs: Option<f64>) -> bool {
+        let cell = self.cell_of(req.tenant, req.obj);
+        self.bump(cell) >= self.m_of(req.tenant)
+    }
+
+    fn end_epoch(&mut self) {
+        // Exact halving (floor) of every 4-bit counter, both nibbles at
+        // once: popularity decays geometrically across epochs, so the
+        // sketch tracks the recent request mix instead of all history.
+        for b in &mut self.cells {
+            let hi = (*b >> 4) >> 1;
+            let lo = (*b & 0x0F) >> 1;
+            *b = (hi << 4) | lo;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mth_request"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.cells.len()
+    }
+}
+
+/// *To keep or not to keep*: admit iff the expected miss dollars of not
+/// caching (`multiplier × m_o`) are at least `threshold ×` the expected
+/// storage dollars of holding the object for the tenant's current TTL
+/// (`s_o × c × T_i`). Stateless and exact — no sketch, no aging.
+pub struct KeepCostFilter {
+    cost: CostConfig,
+    per_byte_sec: f64,
+    /// Per-tenant threshold overrides, dense by tenant id.
+    thresholds: Vec<f64>,
+    default_threshold: f64,
+    /// Per-tenant miss-cost multipliers from the roster, dense by id.
+    multipliers: Vec<f64>,
+}
+
+impl KeepCostFilter {
+    /// Build from the cost catalog and `[admission] keep_threshold`
+    /// (with per-tenant `keep_threshold` overrides and the roster's
+    /// miss-cost multipliers).
+    pub fn from_config(cfg: &Config) -> KeepCostFilter {
+        let mut f = KeepCostFilter {
+            per_byte_sec: cfg.cost.storage_cost_per_byte_sec(),
+            cost: cfg.cost.clone(),
+            thresholds: Vec::new(),
+            default_threshold: cfg.admission.keep_threshold,
+            multipliers: Vec::new(),
+        };
+        for t in &cfg.tenants {
+            f.set_multiplier(t.id, t.miss_cost_multiplier);
+        }
+        for o in &cfg.admission.overrides {
+            if let Some(th) = o.keep_threshold {
+                f.set_threshold(o.tenant, th);
+            }
+        }
+        f
+    }
+
+    /// Direct constructor for tests/tools: catalog costs, one global
+    /// threshold, no per-tenant state.
+    pub fn new(cost: CostConfig, threshold: f64) -> KeepCostFilter {
+        KeepCostFilter {
+            per_byte_sec: cost.storage_cost_per_byte_sec(),
+            cost,
+            thresholds: Vec::new(),
+            default_threshold: threshold,
+            multipliers: Vec::new(),
+        }
+    }
+
+    /// Override one tenant's keep threshold.
+    pub fn set_threshold(&mut self, tenant: TenantId, threshold: f64) {
+        let i = tenant as usize;
+        if self.thresholds.len() <= i {
+            let d = self.default_threshold;
+            self.thresholds.resize(i + 1, d);
+        }
+        self.thresholds[i] = threshold;
+    }
+
+    /// Set one tenant's miss-cost multiplier (roster tenants get theirs
+    /// at construction; strays default to 1.0).
+    pub fn set_multiplier(&mut self, tenant: TenantId, multiplier: f64) {
+        let i = tenant as usize;
+        if self.multipliers.len() <= i {
+            self.multipliers.resize(i + 1, 1.0);
+        }
+        self.multipliers[i] = multiplier;
+    }
+
+    #[inline]
+    fn threshold_of(&self, tenant: TenantId) -> f64 {
+        self.thresholds
+            .get(tenant as usize)
+            .copied()
+            .unwrap_or(self.default_threshold)
+    }
+
+    #[inline]
+    fn multiplier_of(&self, tenant: TenantId) -> f64 {
+        self.multipliers.get(tenant as usize).copied().unwrap_or(1.0)
+    }
+}
+
+impl AdmissionFilter for KeepCostFilter {
+    #[inline]
+    fn observe(&mut self, req: &Request, ttl_secs: Option<f64>) -> bool {
+        // No timer (fixed/MRC policies before their first decision, or
+        // policies that keep none): the expected residency is unknown,
+        // so the filter stays inert rather than guessing.
+        let Some(ttl) = ttl_secs else { return true };
+        let size = req.size_bytes();
+        let miss = self.multiplier_of(req.tenant) * self.cost.miss_cost(size);
+        let storage = size as f64 * self.per_byte_sec * ttl;
+        miss >= self.threshold_of(req.tenant) * storage
+    }
+
+    fn needs_ttl(&self) -> bool {
+        true
+    }
+
+    fn end_epoch(&mut self) {}
+
+    fn name(&self) -> &'static str {
+        "keep_cost"
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AdmissionKind;
+
+    #[test]
+    fn mth_admits_on_the_mth_observation() {
+        let mut f = MthRequestFilter::new(1 << 14, 3);
+        let req = |i: u64| Request::new(i, 42, 1000);
+        assert!(!f.observe(&req(0), None));
+        assert!(!f.observe(&req(1), None));
+        assert!(f.observe(&req(2), None), "3rd observation admits");
+        assert!(f.observe(&req(3), None), "and it stays admitted");
+        assert_eq!(f.count(0, 42), 4);
+    }
+
+    #[test]
+    fn m_of_one_admits_immediately() {
+        let mut f = MthRequestFilter::new(1 << 14, 1);
+        assert!(f.observe(&Request::new(0, 7, 10), None));
+    }
+
+    #[test]
+    fn per_tenant_m_overrides_apply() {
+        let mut f = MthRequestFilter::new(1 << 14, 2);
+        f.set_tenant_m(3, 1);
+        assert_eq!(f.m_of(3), 1);
+        assert_eq!(f.m_of(0), 2);
+        assert_eq!(f.m_of(999), 2);
+        assert!(f.observe(&Request::new(0, 9, 10).with_tenant(3), None));
+        assert!(!f.observe(&Request::new(0, 9, 10), None), "tenant 0 still gated");
+    }
+
+    #[test]
+    fn aging_halves_counters() {
+        let mut f = MthRequestFilter::new(1 << 14, 15);
+        for i in 0..5 {
+            f.observe(&Request::new(i, 1, 10), None);
+        }
+        for i in 0..9 {
+            f.observe(&Request::new(i, 2, 10), None);
+        }
+        assert_eq!(f.count(0, 1), 5);
+        assert_eq!(f.count(0, 2), 9);
+        f.end_epoch();
+        assert_eq!(f.count(0, 1), 2);
+        assert_eq!(f.count(0, 2), 4);
+        f.end_epoch();
+        assert_eq!(f.count(0, 1), 1);
+        assert_eq!(f.count(0, 2), 2);
+    }
+
+    #[test]
+    fn counters_saturate_and_still_admit() {
+        let mut f = MthRequestFilter::new(1 << 14, 15);
+        for i in 0..40 {
+            f.observe(&Request::new(i, 5, 10), None);
+        }
+        assert_eq!(f.count(0, 5), SKETCH_COUNTER_MAX);
+        assert!(f.observe(&Request::new(40, 5, 10), None));
+    }
+
+    #[test]
+    fn keep_cost_prices_the_ttl_window() {
+        let mut cost = CostConfig::default();
+        cost.miss_cost_dollars = 1e-6;
+        let sps = cost.storage_cost_per_byte_sec();
+        let mut f = KeepCostFilter::new(cost, 1.0);
+        // Break-even TTL for a 1 MB object: miss == size * c * T.
+        let size = 1_000_000u32;
+        let t_even = 1e-6 / (size as f64 * sps);
+        let req = Request::new(0, 1, size);
+        assert!(f.observe(&req, Some(t_even * 0.5)), "cheap storage: keep");
+        assert!(!f.observe(&req, Some(t_even * 2.0)), "long TTL: drop");
+        assert!(f.observe(&req, None), "no timer: filter stays inert");
+    }
+
+    #[test]
+    fn build_filter_dispatches_on_config() {
+        let mut cfg = Config::default();
+        assert!(build_filter(&cfg).is_none(), "default: no filter");
+        cfg.admission.filter = AdmissionKind::MthRequest;
+        assert_eq!(build_filter(&cfg).unwrap().name(), "mth_request");
+        cfg.admission.filter = AdmissionKind::KeepCost;
+        let f = build_filter(&cfg).unwrap();
+        assert_eq!(f.name(), "keep_cost");
+        assert!(f.needs_ttl());
+    }
+}

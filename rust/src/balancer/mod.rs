@@ -15,6 +15,7 @@
 //! routing O(1) + policy shadow work (O(1) for TTL, O(log M) for MRC) —
 //! the Fig. 1 comparison is exactly these code paths.
 
+use crate::admission::AdmissionFilter;
 use crate::cluster::{Cluster, ClusterTelemetry};
 use crate::config::Config;
 use crate::cost::MissAccountant;
@@ -41,6 +42,7 @@ struct BalancerTelemetry {
     misses: Counter,
     spurious: Counter,
     denied: Counter,
+    filter_denied: Counter,
     /// Sampled end-to-end `handle` latency (1 in [`SERVE_SAMPLE_STRIDE`]).
     serve_ns: Timer,
     /// Epoch stage: the policy's sizing decision (arbiter included).
@@ -59,9 +61,10 @@ pub struct Served {
     /// The miss was *spurious*: the object is resident on some instance,
     /// but slot reassignment routed the request elsewhere (§5.2).
     pub spurious: bool,
-    /// The policy admitted the request's object (on a miss, the fetched
-    /// object was inserted). `false` only under multi-tenant grant
-    /// enforcement when the tenant overran its occupancy cap.
+    /// The request's object was admitted (on a miss, the fetched object
+    /// was inserted). `false` when the tenant overran its occupancy cap
+    /// under grant enforcement, or when the configured admission filter
+    /// voted against the insert.
     pub admitted: bool,
     /// Policy work units performed (Fig. 1 proxy).
     pub work_units: u32,
@@ -80,11 +83,25 @@ pub struct Balancer {
     /// Requests whose insert was refused by the policy's admission
     /// verdict (multi-tenant occupancy-cap enforcement).
     pub denied_admissions: u64,
+    /// Requests whose insert was refused by the admission filter
+    /// (`[admission] filter`) — disjoint from `denied_admissions`: a
+    /// request denied by both counts only as a grant-cap denial (the
+    /// filter's verdict is moot when the insert was already refused).
+    pub filter_denials: u64,
     /// Cumulative policy work units.
     pub work_units: u64,
     /// Per-tenant hit/miss counters, indexed by tenant id (grown on
     /// demand; single-tenant traces only ever touch slot 0).
     tenant_stats: Vec<HitMiss>,
+    /// Optional admission filter (`None` by default: the request path
+    /// is bit-identical to the pre-filter balancer).
+    filter: Option<Box<dyn AdmissionFilter>>,
+    /// Cached `filter.needs_ttl()` so the hot path branches on a bool
+    /// instead of a virtual call when the filter is TTL-blind.
+    filter_needs_ttl: bool,
+    /// Per-tenant filter denials, indexed by tenant id (grown on
+    /// demand) — the journal's `filter_denials` source.
+    tenant_filter_denials: Vec<u64>,
     /// Telemetry handles (`None` = off, zero request-path overhead).
     telemetry: Option<BalancerTelemetry>,
     /// Shedding at the most recent epoch boundary:
@@ -102,11 +119,28 @@ impl Balancer {
             misses: 0,
             spurious_misses: 0,
             denied_admissions: 0,
+            filter_denials: 0,
             work_units: 0,
             tenant_stats: Vec::new(),
+            filter: None,
+            filter_needs_ttl: false,
+            tenant_filter_denials: Vec::new(),
             telemetry: None,
             last_epoch_shed: Vec::new(),
         }
+    }
+
+    /// Install an admission filter ahead of the insert path. `None`
+    /// (the default) keeps the balancer bit-identical to the
+    /// pre-filter request path.
+    pub fn set_filter(&mut self, filter: Option<Box<dyn AdmissionFilter>>) {
+        self.filter_needs_ttl = filter.as_ref().map(|f| f.needs_ttl()).unwrap_or(false);
+        self.filter = filter;
+    }
+
+    /// The installed admission filter's name, if any.
+    pub fn filter_name(&self) -> Option<&'static str> {
+        self.filter.as_ref().map(|f| f.name())
     }
 
     /// Attach telemetry: resolve the balancer's and cluster's handles
@@ -122,6 +156,7 @@ impl Balancer {
             misses: registry.counter("elastictl_misses_total"),
             spurious: registry.counter("elastictl_spurious_misses_total"),
             denied: registry.counter("elastictl_denied_admissions_total"),
+            filter_denied: registry.counter("elastictl_filter_denials_total"),
             serve_ns: registry.timer("elastictl_serve_ns"),
             epoch_decide_ns: registry.timer("elastictl_epoch_decide_ns"),
             epoch_placement_ns: registry.timer("elastictl_epoch_placement_ns"),
@@ -139,7 +174,9 @@ impl Balancer {
     /// for elastic policies, `fixed_instances` otherwise).
     pub fn from_config(cfg: &Config, sizer: Box<dyn EpochSizer>, initial: u32) -> Self {
         let cluster = Cluster::new(&cfg.cluster, cfg.cost.instance.ram_bytes, initial);
-        Self::new(cluster, sizer)
+        let mut b = Self::new(cluster, sizer);
+        b.set_filter(crate::admission::build_filter(cfg));
+        b
     }
 
     pub fn sizer(&self) -> &dyn EpochSizer {
@@ -170,6 +207,23 @@ impl Balancer {
             .note_physical(req.tenant, self.cluster.tenant_resident_bytes(req.tenant));
         let work = self.sizer.on_request(req);
         self.work_units += work.units as u64;
+        // Admission-filter vote: the filter observes every request (an
+        // Mth-request sketch must count hits too, or a popular key's
+        // count would freeze once resident) but only gates the insert
+        // below. TTL-pricing filters get the tenant's current timer; a
+        // TTL-blind filter skips even that O(1) lookup.
+        let filter_ok = match self.filter.as_mut() {
+            Some(f) => {
+                let ttl = if self.filter_needs_ttl {
+                    self.sizer.tenant_ttl_secs(req.tenant)
+                } else {
+                    None
+                };
+                f.observe(req, ttl)
+            }
+            None => true,
+        };
+        let admit = work.admit && filter_ok;
 
         let obj = scoped_object(req.tenant, req.obj);
         let routed = self.cluster.route_for(req.tenant, obj);
@@ -180,16 +234,27 @@ impl Balancer {
         // set stay exempt: that is repair traffic its grant already
         // covers, and overage is reclaimed by targeted shedding at the
         // epoch boundary instead).
-        let hit = if work.admit {
+        let hit = if admit {
             self.cluster.serve_for(req.tenant, obj, req.size_bytes())
         } else {
             self.cluster.serve_no_insert_for(req.tenant, obj)
         };
-        if !work.admit && !hit {
+        if !hit {
             // Count only denials that actually suppressed an insert (a
             // physical hit needed none), matching the per-tenant
-            // `denied_admissions` in the enforcement rows.
-            self.denied_admissions += 1;
+            // `denied_admissions` in the enforcement rows. A grant-cap
+            // denial shadows the filter's verdict: the two counters
+            // partition the suppressed inserts.
+            if !work.admit {
+                self.denied_admissions += 1;
+            } else if !filter_ok {
+                self.filter_denials += 1;
+                let i = req.tenant as usize;
+                if self.tenant_filter_denials.len() <= i {
+                    self.tenant_filter_denials.resize(i + 1, 0);
+                }
+                self.tenant_filter_denials[i] += 1;
+            }
         }
         let mut spurious = false;
         if !hit {
@@ -221,14 +286,18 @@ impl Balancer {
             if spurious {
                 tel.spurious.inc();
             }
-            if !work.admit && !hit {
-                tel.denied.inc();
+            if !hit {
+                if !work.admit {
+                    tel.denied.inc();
+                } else if !filter_ok {
+                    tel.filter_denied.inc();
+                }
             }
             if let Some(t0) = serve_t0 {
                 tel.serve_ns.record_ns(t0.elapsed().as_nanos() as u64);
             }
         }
-        Served { hit, spurious, admitted: work.admit, work_units: work.units }
+        Served { hit, spurious, admitted: admit, work_units: work.units }
     }
 
     /// Epoch boundary: ask the policy for `I(k+1)`, resize, run the
@@ -243,6 +312,11 @@ impl Balancer {
         // (server runtime; a no-op — not even a branch per entry — when
         // expiry is off).
         self.cluster.expire_sweep();
+        // Age the admission filter's sketch (halve counts) once per
+        // epoch — mirrored by `begin_epoch_shard` on the sharded path.
+        if let Some(f) = self.filter.as_mut() {
+            f.end_epoch();
+        }
         let decide_timer = self.telemetry.as_ref().map(|t| t.epoch_decide_ns.clone());
         let target = match decide_timer {
             Some(timer) => timer.time(|| self.sizer.decide(now)),
@@ -312,6 +386,11 @@ impl Balancer {
     pub fn begin_epoch_shard(&mut self, now: TimeUs) -> Option<Vec<crate::tenant::TenantDemand>> {
         self.last_epoch_shed.clear();
         self.cluster.expire_sweep();
+        // Exactly one sketch aging per barrier, mirroring `end_epoch`
+        // (the finish half must not age again).
+        if let Some(f) = self.filter.as_mut() {
+            f.end_epoch();
+        }
         self.sizer.shard_demands(now)
     }
 
@@ -406,6 +485,21 @@ impl Balancer {
             .get(t as usize)
             .copied()
             .unwrap_or_default()
+    }
+
+    /// Cumulative admission-filter denials for one tenant (zero if the
+    /// filter never refused it, or no filter is configured).
+    pub fn tenant_filter_denials_of(&self, t: TenantId) -> u64 {
+        self.tenant_filter_denials
+            .get(t as usize)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Cumulative admission-filter denials, indexed by tenant id (empty
+    /// slots for tenants the filter never refused).
+    pub fn tenant_filter_denials(&self) -> &[u64] {
+        &self.tenant_filter_denials
     }
 
     /// Policy diagnostics for the figure series.
@@ -567,6 +661,33 @@ mod tests {
         let s = b.handle(&req(34 * SECOND, 3, 100_000).with_tenant(1), &mut c);
         assert!(s.admitted);
         assert!(b.tenant_enforcement().is_some());
+    }
+
+    #[test]
+    fn filter_denials_skip_the_insert() {
+        // A 2nd-request filter under the default policy: the first
+        // observation of every key is refused (served, not inserted),
+        // the second admits — so the third request of a key is the
+        // first that can physically hit.
+        let mut cfg = Config::with_policy(PolicyKind::Fixed);
+        cfg.admission.filter = crate::config::AdmissionKind::MthRequest;
+        cfg.admission.m = 2;
+        let sizer = make_sizer(&cfg);
+        let mut b = Balancer::from_config(&cfg, sizer, 2);
+        let mut c = CostTracker::new(cfg.cost.clone());
+        assert_eq!(b.filter_name(), Some("mth_request"));
+        let s1 = b.handle(&req(0, 7, 1000), &mut c);
+        assert!(!s1.hit && !s1.admitted, "first sight must be refused");
+        assert_eq!(b.filter_denials, 1);
+        assert_eq!(b.denied_admissions, 0, "filter denials are separate");
+        let s2 = b.handle(&req(SECOND, 7, 1000), &mut c);
+        assert!(!s2.hit, "object was never inserted");
+        assert!(s2.admitted, "2nd observation reaches M=2");
+        let s3 = b.handle(&req(2 * SECOND, 7, 1000), &mut c);
+        assert!(s3.hit, "admitted insert must serve the 3rd request");
+        assert_eq!(b.filter_denials, 1);
+        assert_eq!(b.tenant_filter_denials_of(0), 1);
+        assert_eq!(b.tenant_filter_denials_of(1), 0);
     }
 
     #[test]

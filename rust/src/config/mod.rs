@@ -353,6 +353,90 @@ impl Default for ServeConfig {
     }
 }
 
+/// Which admission filter gates inserts on the balancer's request path
+/// (`[admission] filter = "..."` in TOML). See [`crate::admission`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionKind {
+    /// No filter: every policy-admitted miss inserts (the seed path,
+    /// bit-identical — the default).
+    None,
+    /// Cache on Mth request: a fixed-size counting sketch admits a key's
+    /// insert on its Mth observed request (Carlsson & Eager).
+    MthRequest,
+    /// Cost-based keep/drop: admit iff expected miss dollars ≥ expected
+    /// storage dollars at the tenant's current TTL (Le Scouarnec et al.).
+    KeepCost,
+}
+
+impl AdmissionKind {
+    /// Stable lowercase name (config files, reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmissionKind::None => "none",
+            AdmissionKind::MthRequest => "mth_request",
+            AdmissionKind::KeepCost => "keep_cost",
+        }
+    }
+
+    /// Parse the [`Self::as_str`] form back.
+    pub fn parse(s: &str) -> Result<AdmissionKind> {
+        Ok(match s {
+            "none" => AdmissionKind::None,
+            "mth_request" | "mth-request" => AdmissionKind::MthRequest,
+            "keep_cost" | "keep-cost" => AdmissionKind::KeepCost,
+            other => anyhow::bail!(
+                "unknown admission filter {other} (none|mth_request|keep_cost)"
+            ),
+        })
+    }
+}
+
+/// One tenant's admission overrides (`[tenantN] admission_m = ...` /
+/// `keep_threshold = ...`), keyed by tenant id.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionOverride {
+    /// The tenant these overrides apply to.
+    pub tenant: u16,
+    /// Per-tenant M for the Mth-request filter (1..=15).
+    pub m: Option<u32>,
+    /// Per-tenant threshold for the keep/drop filter (> 0).
+    pub keep_threshold: Option<f64>,
+}
+
+/// Admission-filter parameters (`[admission]` in TOML). The default
+/// (`filter = "none"`) keeps the request path bit-identical to the
+/// pre-admission seed loops (pinned by `engine_parity`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// Which filter gates inserts.
+    pub filter: AdmissionKind,
+    /// Mth-request filter: admit a key on its Mth observed request.
+    /// Bounded by the sketch's 4-bit counter ceiling (1..=15).
+    pub m: u32,
+    /// Mth-request sketch size in bytes (two 4-bit counters per byte).
+    /// A power of two, so the cell index shares its low bits with the
+    /// shard router's `hash % shards` — colliding keys co-shard and
+    /// per-shard sketches stay bit-identical to the monolithic one.
+    pub sketch_bytes: u64,
+    /// Keep/drop filter: admit iff
+    /// `multiplier × m_o ≥ keep_threshold × s_o × c × T_i`.
+    pub keep_threshold: f64,
+    /// Per-tenant overrides parsed from the `[tenantN]` sections.
+    pub overrides: Vec<AdmissionOverride>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            filter: AdmissionKind::None,
+            m: 2,
+            sketch_bytes: 32768,
+            keep_threshold: 1.0,
+            overrides: Vec::new(),
+        }
+    }
+}
+
 /// Execution-shape parameters (`[engine]` in TOML). `shards = 1` (the
 /// default) runs the classic single-threaded engine, bit-identical to
 /// every seed loop pinned by `engine_parity`; `shards = N` partitions the
@@ -383,6 +467,8 @@ pub struct Config {
     pub serve: ServeConfig,
     /// Execution shape (`[engine]`); one shard by default.
     pub engine: EngineConfig,
+    /// Admission filter (`[admission]`); none by default.
+    pub admission: AdmissionConfig,
     /// Tenant roster for the multi-tenant policy. Empty = single-tenant
     /// mode (every request is tenant 0 with multiplier 1.0). In TOML this
     /// is a `[tenant0]` / `[tenant1]` / … section per tenant, each with
@@ -535,6 +621,32 @@ impl Config {
             cfg.engine.shards = v;
         }
 
+        // [admission]
+        if let Some(v) = doc.get_str("admission.filter") {
+            cfg.admission.filter = AdmissionKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_u32("admission.m") {
+            anyhow::ensure!(
+                (1..=15).contains(&v),
+                "admission.m must lie in 1..=15 (the sketch's 4-bit counters saturate at 15; got {v})"
+            );
+            cfg.admission.m = v;
+        }
+        if let Some(v) = doc.get_u64("admission.sketch_bytes") {
+            anyhow::ensure!(
+                v.is_power_of_two() && (1024..=(1 << 24)).contains(&v),
+                "admission.sketch_bytes must be a power of two in 1024..=16777216 (got {v})"
+            );
+            cfg.admission.sketch_bytes = v;
+        }
+        if let Some(v) = doc.get_f64("admission.keep_threshold") {
+            anyhow::ensure!(
+                v > 0.0 && v.is_finite(),
+                "admission.keep_threshold must be a finite positive number"
+            );
+            cfg.admission.keep_threshold = v;
+        }
+
         // [tenant0], [tenant1], … — one section per tenant. Sections are
         // discovered by scanning the parsed keys, so a gap in the
         // numbering (say, a deleted [tenant1] between [tenant0] and
@@ -584,6 +696,36 @@ impl Config {
                     "tenant{i}: slo_miss_ratio must lie in [0, 1]"
                 );
                 spec = spec.with_slo_miss_ratio(r);
+            }
+            // Per-tenant admission overrides ride in the tenant section
+            // but land in cfg.admission (keyed by tenant *id*, so the
+            // filter's dense lookup works whatever the section number).
+            let m = match doc.get_u32(&format!("tenant{i}.admission_m")) {
+                Some(m) => {
+                    anyhow::ensure!(
+                        (1..=15).contains(&m),
+                        "tenant{i}: admission_m must lie in 1..=15 (got {m})"
+                    );
+                    Some(m)
+                }
+                None => None,
+            };
+            let keep_threshold = match doc.get_f64(&format!("tenant{i}.keep_threshold")) {
+                Some(th) => {
+                    anyhow::ensure!(
+                        th > 0.0 && th.is_finite(),
+                        "tenant{i}: keep_threshold must be a finite positive number"
+                    );
+                    Some(th)
+                }
+                None => None,
+            };
+            if m.is_some() || keep_threshold.is_some() {
+                cfg.admission.overrides.push(AdmissionOverride {
+                    tenant: id as u16,
+                    m,
+                    keep_threshold,
+                });
             }
             tenants.push(spec);
         }
@@ -687,6 +829,20 @@ impl Config {
 
         doc.set("engine.shards", Value::Int(self.engine.shards as i64));
 
+        doc.set(
+            "admission.filter",
+            Value::Str(self.admission.filter.as_str().into()),
+        );
+        doc.set("admission.m", Value::Int(self.admission.m as i64));
+        doc.set(
+            "admission.sketch_bytes",
+            Value::Int(self.admission.sketch_bytes as i64),
+        );
+        doc.set(
+            "admission.keep_threshold",
+            Value::Float(self.admission.keep_threshold),
+        );
+
         for (i, t) in self.tenants.iter().enumerate() {
             doc.set(&format!("tenant{i}.id"), Value::Int(t.id as i64));
             doc.set(&format!("tenant{i}.name"), Value::Str(t.name.clone()));
@@ -706,6 +862,14 @@ impl Config {
             }
             if let Some(r) = t.slo_miss_ratio {
                 doc.set(&format!("tenant{i}.slo_miss_ratio"), Value::Float(r));
+            }
+            if let Some(o) = self.admission.overrides.iter().find(|o| o.tenant == t.id) {
+                if let Some(m) = o.m {
+                    doc.set(&format!("tenant{i}.admission_m"), Value::Int(m as i64));
+                }
+                if let Some(th) = o.keep_threshold {
+                    doc.set(&format!("tenant{i}.keep_threshold"), Value::Float(th));
+                }
             }
         }
         doc.render()
@@ -932,6 +1096,62 @@ mod tests {
         // Out-of-range shard counts are rejected loudly.
         assert!(Config::from_toml("[engine]\nshards = 0\n").is_err());
         assert!(Config::from_toml("[engine]\nshards = 257\n").is_err());
+    }
+
+    #[test]
+    fn admission_section_round_trips_and_validates() {
+        // No filter by default — the bit-identical seed path.
+        let cfg = Config::from_toml("").unwrap();
+        assert_eq!(cfg.admission, AdmissionConfig::default());
+        assert_eq!(cfg.admission.filter, AdmissionKind::None);
+        assert_eq!(cfg.admission.m, 2);
+        assert_eq!(cfg.admission.sketch_bytes, 32768);
+
+        let mut cfg = Config::default();
+        cfg.admission.filter = AdmissionKind::MthRequest;
+        cfg.admission.m = 3;
+        cfg.admission.sketch_bytes = 65536;
+        cfg.admission.keep_threshold = 0.5;
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.admission, cfg.admission);
+
+        // The string kinds parse both ways.
+        for k in [AdmissionKind::None, AdmissionKind::MthRequest, AdmissionKind::KeepCost] {
+            assert_eq!(AdmissionKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(AdmissionKind::parse("bloom").is_err());
+
+        // Out-of-range values error loudly.
+        assert!(Config::from_toml("[admission]\nfilter = \"bogus\"\n").is_err());
+        assert!(Config::from_toml("[admission]\nm = 0\n").is_err());
+        assert!(Config::from_toml("[admission]\nm = 16\n").is_err());
+        assert!(Config::from_toml("[admission]\nsketch_bytes = 1000\n").is_err());
+        assert!(Config::from_toml("[admission]\nsketch_bytes = 512\n").is_err());
+        assert!(Config::from_toml("[admission]\nkeep_threshold = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn admission_tenant_overrides_round_trip() {
+        let cfg = Config::from_toml(
+            "[admission]\nfilter = \"mth_request\"\nm = 2\n\
+             [tenant0]\nadmission_m = 4\n\
+             [tenant1]\nname = \"bulk\"\nkeep_threshold = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.admission.overrides.len(), 2);
+        assert_eq!(cfg.admission.overrides[0].tenant, 0);
+        assert_eq!(cfg.admission.overrides[0].m, Some(4));
+        assert_eq!(cfg.admission.overrides[0].keep_threshold, None);
+        assert_eq!(cfg.admission.overrides[1].tenant, 1);
+        assert_eq!(cfg.admission.overrides[1].keep_threshold, Some(2.5));
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.admission.overrides, cfg.admission.overrides);
+        // Overrides key on the tenant *id*, not the section number.
+        let cfg = Config::from_toml("[tenant0]\nid = 9\nadmission_m = 3\n").unwrap();
+        assert_eq!(cfg.admission.overrides[0].tenant, 9);
+        // Out-of-range overrides error loudly.
+        assert!(Config::from_toml("[tenant0]\nadmission_m = 16\n").is_err());
+        assert!(Config::from_toml("[tenant0]\nkeep_threshold = -1.0\n").is_err());
     }
 
     #[test]

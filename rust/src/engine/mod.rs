@@ -794,6 +794,16 @@ impl Engine {
         }
     }
 
+    /// Inserts refused by the admission filter so far (0 with
+    /// `[admission] filter = none`, and for the vertical mode — the
+    /// ideal cache admits everything by construction).
+    pub fn filter_denials(&self) -> u64 {
+        match &self.core {
+            Core::Cluster(b) => b.filter_denials,
+            Core::Vertical { .. } => 0,
+        }
+    }
+
     /// Cumulative policy work units (Fig. 1 proxy).
     pub fn work_units(&self) -> u64 {
         match &self.core {

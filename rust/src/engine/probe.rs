@@ -81,6 +81,15 @@ impl ProbeCtx<'_> {
         }
     }
 
+    /// Cumulative admission-filter denials, indexed by tenant id
+    /// (cluster runs only; empty when no filter is configured).
+    pub fn tenant_filter_denials(&self) -> Option<&[u64]> {
+        match self.core {
+            Core::Cluster(b) => Some(b.tenant_filter_denials()),
+            Core::Vertical { .. } => None,
+        }
+    }
+
     /// The run's cost ledger.
     pub fn costs(&self) -> &CostTracker {
         self.costs
@@ -446,6 +455,9 @@ pub struct JournalProbe {
     /// Cumulative denied admissions per tenant id at the previous
     /// boundary (the enforcement rows expose lifetime totals).
     prev_denied: Vec<u64>,
+    /// Cumulative admission-filter denials per tenant id at the
+    /// previous boundary (the balancer exposes lifetime totals).
+    prev_filter: Vec<u64>,
     /// Tenant-bill rows already attributed to earlier records.
     bills_seen: usize,
     /// Reconciliation rows already attributed to earlier records.
@@ -465,6 +477,7 @@ impl JournalProbe {
             capacity_bytes,
             epoch: 0,
             prev_denied: Vec::new(),
+            prev_filter: Vec::new(),
             bills_seen: 0,
             recons_seen: 0,
             prev_storage: 0.0,
@@ -490,15 +503,21 @@ impl Probe for JournalProbe {
         let rows = ctx.tenant_enforcement().unwrap_or_default();
         let residents = ctx.tenant_residents().unwrap_or_default();
         let shed = ctx.tenant_shed().unwrap_or(&[]);
+        let filter_totals = ctx.tenant_filter_denials().unwrap_or(&[]);
 
         // One row per tenant any source mentions (a draining tenant has
-        // bills and sheds after its enforcement row is gone).
+        // bills and sheds after its enforcement row is gone; a filter
+        // denial can hit a tenant no arbiter tracks).
         let mut ids: Vec<TenantId> = rows
             .iter()
             .map(|r| r.tenant)
             .chain(bills.iter().map(|b| b.tenant))
             .chain(shed.iter().map(|&(t, _, _)| t))
             .chain(recons.iter().map(|r| r.tenant))
+            .chain(filter_totals.iter().enumerate().filter_map(|(t, &total)| {
+                let prev = self.prev_filter.get(t).copied().unwrap_or(0);
+                (total > prev).then_some(t as TenantId)
+            }))
             .collect();
         ids.sort_unstable();
         ids.dedup();
@@ -523,6 +542,12 @@ impl Probe for JournalProbe {
             }
             let denied = denied_total.saturating_sub(self.prev_denied[ti]);
             self.prev_denied[ti] = denied_total;
+            let filter_total = filter_totals.get(ti).copied().unwrap_or(0);
+            if self.prev_filter.len() <= ti {
+                self.prev_filter.resize(ti + 1, 0);
+            }
+            let filter_denials = filter_total.saturating_sub(self.prev_filter[ti]);
+            self.prev_filter[ti] = filter_total;
             let granted = row
                 .filter(|r| r.decided)
                 .map(|r| r.granted_bytes)
@@ -540,6 +565,7 @@ impl Probe for JournalProbe {
                 resident_bytes,
                 shed_bytes,
                 denied_admissions: denied,
+                filter_denials,
                 slo_miss_ratio: row.and_then(|r| r.slo_miss_ratio),
                 measured_miss_ratio: row.and_then(|r| r.measured_miss_ratio),
                 boost: row.map(|r| r.boost).unwrap_or(1.0),

@@ -158,6 +158,8 @@ pub struct ShardStats {
     pub spurious_misses: u64,
     /// Inserts suppressed by binding occupancy caps.
     pub denied_admissions: u64,
+    /// Inserts suppressed by the admission filter (`[admission] filter`).
+    pub filter_denials: u64,
     /// Policy work units performed.
     pub work_units: u64,
     /// Instances this shard currently owns.
@@ -194,6 +196,10 @@ struct ShardApplied {
     /// Post-apply enforcement rows (`None` = the policy does not
     /// arbitrate tenants).
     enforcement: Option<Vec<TenantEnforcement>>,
+    /// Cumulative admission-filter denials, indexed by tenant id — the
+    /// front sums the disjoint shard slices and differences against the
+    /// previous boundary for the journal rows.
+    filter_denials: Vec<u64>,
 }
 
 /// Point-in-time observability snapshot of one shard. The front merges
@@ -321,6 +327,7 @@ fn worker_loop(
                     residents: b.cluster.tenant_residents(),
                     shed: b.last_epoch_shed().to_vec(),
                     enforcement: b.tenant_enforcement(),
+                    filter_denials: b.tenant_filter_denials().to_vec(),
                 });
             }
             ToShard::Admit(spec, now, reply) => {
@@ -364,6 +371,7 @@ fn worker_loop(
                     misses: b.misses,
                     spurious_misses: b.spurious_misses,
                     denied_admissions: b.denied_admissions,
+                    filter_denials: b.filter_denials,
                     work_units: b.work_units,
                     instances: b.cluster.len() as u32,
                     used_bytes: b.cluster.used(),
@@ -465,6 +473,9 @@ struct FrontTelemetry {
     /// Cumulative denied admissions per tenant id at the previous
     /// boundary (the enforcement rows expose lifetime totals).
     prev_denied: Vec<u64>,
+    /// Cumulative admission-filter denials (Σ over shards) per tenant
+    /// id at the previous boundary.
+    prev_filter: Vec<u64>,
     /// Bill / reconciliation rows already attributed to earlier records.
     bills_seen: usize,
     recons_seen: usize,
@@ -510,6 +521,7 @@ impl FrontTelemetry {
                 .saturating_mul(cfg.cost.instance.ram_bytes),
             epoch: 0,
             prev_denied: Vec::new(),
+            prev_filter: Vec::new(),
             bills_seen: 0,
             recons_seen: 0,
             prev_storage: 0.0,
@@ -1149,6 +1161,18 @@ impl ShardedEngine {
         let rows = per_shard.map(|v| self.merge_enforcement(&v)).unwrap_or_default();
         let residents = merge_residents(applied.iter().map(|a| a.residents.as_slice()));
         let shed = merge_shed(applied);
+        // Σ-over-shards cumulative filter denials, indexed by tenant id
+        // (the shard slices are disjoint, so the sum is the monolithic
+        // lifetime total).
+        let mut filter_totals: Vec<u64> = Vec::new();
+        for a in applied {
+            if filter_totals.len() < a.filter_denials.len() {
+                filter_totals.resize(a.filter_denials.len(), 0);
+            }
+            for (i, &v) in a.filter_denials.iter().enumerate() {
+                filter_totals[i] += v;
+            }
+        }
         let instances = self.active_instances;
         let costs = &self.costs;
         let Some(obs) = self.obs.as_mut() else {
@@ -1165,13 +1189,18 @@ impl ShardedEngine {
         obs.prev_storage = costs.storage_total();
         obs.prev_miss = costs.miss_total();
         // One row per tenant any source mentions (a draining tenant has
-        // bills and sheds after its enforcement row is gone).
+        // bills and sheds after its enforcement row is gone; a filter
+        // denial can hit a tenant no arbiter tracks).
         let mut ids: Vec<TenantId> = rows
             .iter()
             .map(|r| r.tenant)
             .chain(bills.iter().map(|b| b.tenant))
             .chain(shed.iter().map(|&(st, _, _)| st))
             .chain(recons.iter().map(|r| r.tenant))
+            .chain(filter_totals.iter().enumerate().filter_map(|(ft, &total)| {
+                let prev = obs.prev_filter.get(ft).copied().unwrap_or(0);
+                (total > prev).then_some(ft as TenantId)
+            }))
             .collect();
         ids.sort_unstable();
         ids.dedup();
@@ -1195,6 +1224,12 @@ impl ShardedEngine {
             }
             let denied = denied_total.saturating_sub(obs.prev_denied[ti]);
             obs.prev_denied[ti] = denied_total;
+            let filter_total = filter_totals.get(ti).copied().unwrap_or(0);
+            if obs.prev_filter.len() <= ti {
+                obs.prev_filter.resize(ti + 1, 0);
+            }
+            let filter_denials = filter_total.saturating_sub(obs.prev_filter[ti]);
+            obs.prev_filter[ti] = filter_total;
             let granted = row.filter(|r| r.decided).map(|r| r.granted_bytes).unwrap_or(0);
             let reserved = row.map(|r| r.reserved_bytes).unwrap_or(0);
             tenants.push(TenantDecision {
@@ -1209,6 +1244,7 @@ impl ShardedEngine {
                 resident_bytes,
                 shed_bytes,
                 denied_admissions: denied,
+                filter_denials,
                 slo_miss_ratio: row.and_then(|r| r.slo_miss_ratio),
                 measured_miss_ratio: row.and_then(|r| r.measured_miss_ratio),
                 boost: row.map(|r| r.boost).unwrap_or(1.0),

@@ -8,6 +8,7 @@ mod fig11_slo;
 mod fig12_placement;
 mod fig13_churn;
 mod fig14_obs;
+mod fig15_admission;
 mod fig1_overhead;
 mod fig2_mrc_accuracy;
 mod fig4_trace;
@@ -28,6 +29,7 @@ pub use fig13_churn::{
     churn_events, churn_trace, guest_spec, run_fig13, Fig13Report, Fig13Variant,
 };
 pub use fig14_obs::{run_fig14_obs, Fig14Report};
+pub use fig15_admission::{run_fig15, Fig15Report, Fig15Row};
 pub use fig1_overhead::run_fig1;
 pub use fig2_mrc_accuracy::run_fig2;
 pub use fig4_trace::run_fig4;

@@ -112,6 +112,14 @@
 //!   cumulative bills after a kill, [`srv::checkpoint`]), and a
 //!   concurrent trace-replay load generator ([`srv::loadgen`]) behind
 //!   `elastictl loadgen`;
+//! * the **admission-filter layer** ([`admission`]): config-selectable
+//!   O(1) insertion filters under every policy (`[admission] filter =
+//!   none|mth_request|keep_cost`) — a cache-on-Mth-request counting
+//!   sketch with epoch-boundary aging, and a cost-based keep-vs-drop
+//!   decision pricing each insert's expected storage against its miss
+//!   dollars at the tenant's current TTL; denials serve the miss
+//!   without inserting, counted as `filter_denials` in STATS, the
+//!   telemetry registry and the journal's `cause = filter_denied` rows;
 //! * the **experiment harness** regenerating every figure of §2/§3/§6
 //!   plus the multi-tenant fig10 study, the fig11 SLO-enforcement
 //!   study, the fig12 placement-isolation study, the fig13
@@ -126,6 +134,7 @@
 //!
 //! Time is measured in microseconds ([`TimeUs`]); object sizes in bytes.
 
+pub mod admission;
 pub mod balancer;
 pub mod cache;
 pub mod cluster;

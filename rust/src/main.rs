@@ -4,7 +4,7 @@
 //! elastictl gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
 //! elastictl run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N]
 //! elastictl exp <id> [--scale smoke|small|full] [--out DIR]
-//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm all
+//!     ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs fig15 irm all
 //! elastictl plan <trace>
 //! elastictl ttlopt <trace>
 //! elastictl serve [--addr HOST:PORT] [--policy ...] [--epoch-secs N] [--checkpoint F] [--resume F]
@@ -31,7 +31,7 @@ use std::path::PathBuf;
 const USAGE: &str = "usage: elastictl [--config FILE] <gen-trace|run|exp|plan|ttlopt|serve|loadgen> [args]
   gen-trace <out> [--kind akamai|irm|tenants|churn] [--scale smoke|small|full] [--seed N]
   run <trace> [--policy fixed|ttl|mrc|ideal_ttl|analytic|tenant_ttl] [--fixed-instances N] [--shards N]
-  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs irm ablations all)
+  exp <id> [--scale smoke|small|full] [--out DIR]   (ids: fig1 fig2 fig4 fig5 fig6 fig7 headline fig8 fig9 fig10 fig11 fig12 fig13 fig14-obs fig15 irm ablations all)
   plan <trace>
   ttlopt <trace>
   serve [--addr HOST:PORT] [--policy P] [--epoch-secs N] [--checkpoint FILE] [--resume FILE] [--shards N]
@@ -338,6 +338,17 @@ fn run_experiment(id: &str, scale: TraceScale, out: &PathBuf) -> Result<()> {
     if all || id == "fig14" || id == "fig14-obs" || id == "obs" {
         matched = true;
         println!("{}", experiments::run_fig14_obs(&ctx, scale)?.render());
+    }
+    if all || id == "fig15" || id == "admission" {
+        matched = true;
+        // fig15 builds its own scenario zoo (wonder / storm / churn), so
+        // only the request volume scales with --scale.
+        let n = match scale {
+            TraceScale::Smoke => 120_000,
+            TraceScale::Small => 600_000,
+            TraceScale::Full => 2_000_000,
+        };
+        println!("{}", experiments::run_fig15(n, &ctx.out_dir)?.render());
     }
     if all || id == "ablations" {
         matched = true;

@@ -80,6 +80,14 @@ pub trait EpochSizer {
         None
     }
 
+    /// The timer governing `tenant`'s inserts, for TTL-pricing admission
+    /// filters ([`crate::admission::KeepCostFilter`]). Must be O(1) —
+    /// it runs on the request path. Default: the policy-wide timer;
+    /// per-tenant-controller policies override with the tenant's own.
+    fn tenant_ttl_secs(&self, _tenant: TenantId) -> Option<f64> {
+        self.ttl_secs()
+    }
+
     /// Current virtual/profiled size in bytes (Fig. 5 right).
     fn shadow_size(&self) -> Option<u64> {
         None

@@ -36,8 +36,9 @@
 //! WHY <tenant>\n              -> one-line JSON: the newest epoch decision
 //!                                journal record for that tenant, with its
 //!                                `cause` (shed | ttl_clamp | grant_squeeze
-//!                                | null); `ERR` when telemetry is disabled
-//!                                or no epoch has closed yet
+//!                                | filter_denied | null); `ERR` when
+//!                                telemetry is disabled or no epoch has
+//!                                closed yet
 //! METRICS\n                   -> Prometheus text exposition of the live
 //!                                telemetry registry, terminated by a
 //!                                `# EOF` line; `ERR` when telemetry is
@@ -173,11 +174,13 @@ impl ServerState {
                         misses: self.engine.misses(),
                     };
                     Some(format!(
-                        "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"miss_ratio\":{},\
+                        "{{\"requests\":{},\"misses\":{},\"spurious\":{},\"filter_denials\":{},\
+                         \"miss_ratio\":{},\
                          \"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":{},\"tenants\":{}}}",
                         self.engine.requests(),
                         self.engine.misses(),
                         self.engine.spurious_misses(),
+                        self.engine.filter_denials(),
                         hm.try_miss_ratio()
                             .map(|r| format!("{r:.6}"))
                             .unwrap_or_else(|| "null".into()),

@@ -481,9 +481,11 @@ impl ShardedFront {
         let requests: u64 = stats.iter().map(|s| s.requests).sum();
         let misses: u64 = stats.iter().map(|s| s.misses).sum();
         let spurious: u64 = stats.iter().map(|s| s.spurious_misses).sum();
+        let filter_denials: u64 = stats.iter().map(|s| s.filter_denials).sum();
         let hm = crate::metrics::HitMiss { hits: requests - misses, misses };
         format!(
             "{{\"requests\":{requests},\"misses\":{misses},\"spurious\":{spurious},\
+             \"filter_denials\":{filter_denials},\
              \"miss_ratio\":{},\"instances\":{},\"miss_cost\":{:.9},\"ttl_secs\":null,\
              \"tenants\":{},\"shards\":{}}}",
             hm.try_miss_ratio().map(|r| format!("{r:.6}")).unwrap_or_else(|| "null".into()),

@@ -565,6 +565,9 @@ pub struct TenantDecision {
     pub shed_bytes: u64,
     /// Admissions refused by the occupancy cap during the closed epoch.
     pub denied_admissions: u64,
+    /// Inserts refused by the admission filter (`[admission] filter`)
+    /// during the closed epoch — disjoint from `denied_admissions`.
+    pub filter_denials: u64,
     /// Configured miss-ratio SLO, if any.
     pub slo_miss_ratio: Option<f64>,
     /// Measured physical miss ratio of the last closed epoch with
@@ -583,9 +586,10 @@ pub struct TenantDecision {
 
 impl TenantDecision {
     /// The causal decision this epoch took against the tenant, most
-    /// severe first: bytes were `shed`, its timer was `ttl_clamp`ed, or
-    /// its grant was squeezed below demand (`grant_squeeze`). `None`
-    /// when the epoch took no corrective action against this tenant.
+    /// severe first: bytes were `shed`, its timer was `ttl_clamp`ed,
+    /// its grant was squeezed below demand (`grant_squeeze`), or the
+    /// admission filter refused inserts (`filter_denied`). `None` when
+    /// the epoch took no corrective action against this tenant.
     pub fn cause(&self) -> Option<&'static str> {
         if self.shed_bytes > 0 {
             Some("shed")
@@ -593,6 +597,8 @@ impl TenantDecision {
             Some("ttl_clamp")
         } else if self.granted_bytes < self.demand_bytes {
             Some("grant_squeeze")
+        } else if self.filter_denials > 0 {
+            Some("filter_denied")
         } else {
             None
         }
@@ -607,7 +613,8 @@ impl TenantDecision {
             "{{\"tenant\":{},\"demand_bytes\":{},\"granted_bytes\":{},\"reserved_bytes\":{},\
              \"pooled_bytes\":{},\"cap_bytes\":{},\"ttl_clamp_secs\":{},\
              \"resident_before_bytes\":{},\"resident_bytes\":{},\"shed_bytes\":{},\
-             \"denied_admissions\":{},\"slo_miss_ratio\":{},\"measured_miss_ratio\":{},\
+             \"denied_admissions\":{},\"filter_denials\":{},\
+             \"slo_miss_ratio\":{},\"measured_miss_ratio\":{},\
              \"boost\":{:.3},\"bill_storage_dollars\":{:.9},\"bill_miss_dollars\":{:.9},\
              \"reconciled_dollars\":{},\"cause\":{}}}",
             self.tenant,
@@ -621,6 +628,7 @@ impl TenantDecision {
             self.resident_bytes,
             self.shed_bytes,
             self.denied_admissions,
+            self.filter_denials,
             opt_f(self.slo_miss_ratio),
             opt_f(self.measured_miss_ratio),
             self.boost,
@@ -762,6 +770,7 @@ mod tests {
             resident_bytes: 900,
             shed_bytes: 0,
             denied_admissions: 0,
+            filter_denials: 0,
             slo_miss_ratio: None,
             measured_miss_ratio: Some(0.25),
             boost: 1.0,
@@ -933,12 +942,23 @@ mod tests {
     fn decision_cause_priority() {
         let mut d = decision(0);
         assert_eq!(d.cause(), None, "full grant, no action");
+        d.filter_denials = 3;
+        assert_eq!(d.cause(), Some("filter_denied"));
         d.granted_bytes = 500;
         assert_eq!(d.cause(), Some("grant_squeeze"));
         d.ttl_clamp_secs = Some(60.0);
         assert_eq!(d.cause(), Some("ttl_clamp"));
         d.shed_bytes = 100;
         assert_eq!(d.cause(), Some("shed"));
+    }
+
+    #[test]
+    fn decision_json_carries_filter_denials() {
+        let mut d = decision(0);
+        d.filter_denials = 9;
+        let json = d.to_json();
+        assert!(json.contains("\"filter_denials\":9"), "{json}");
+        assert!(json.contains("\"cause\":\"filter_denied\""), "{json}");
     }
 
     #[test]

@@ -1209,6 +1209,13 @@ impl EpochSizer for TenantTtlSizer {
         }
     }
 
+    /// O(1) per-tenant timer for TTL-pricing admission filters — the
+    /// tenant's *own* controller, not the `ttl_secs` fleet mean (which
+    /// is O(T) and the wrong price for an individual insert).
+    fn tenant_ttl_secs(&self, tenant: TenantId) -> Option<f64> {
+        self.bank.get(tenant).map(|vc| vc.ttl_secs())
+    }
+
     fn shadow_size(&self) -> Option<u64> {
         Some(self.bank.total_vsize())
     }

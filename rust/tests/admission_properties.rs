@@ -1,0 +1,175 @@
+//! Property suite for the admission filters (ISSUE 10 satellite): the
+//! Mth-request sketch's one-sided error (never admits *later* than the
+//! true Mth request), its bounded false-admit rate under adversarial key
+//! sets, exact epoch halving, constant state size, and the keep/drop
+//! filter's cost inequality.
+
+use elastictl::admission::{AdmissionFilter, KeepCostFilter, MthRequestFilter, SKETCH_COUNTER_MAX};
+use elastictl::config::CostConfig;
+use elastictl::trace::Request;
+use elastictl::util::proptest::check;
+use std::collections::HashMap;
+
+fn req(tenant: u16, obj: u64) -> Request {
+    Request::new(0, obj, 1000).with_tenant(tenant)
+}
+
+/// The sketch is depth-1 with saturating increments: a key's cell count
+/// is at least `min(true observations, 15)`, so whenever the true count
+/// reaches M the filter must already admit. Collisions may admit early,
+/// never late.
+#[test]
+fn sketch_never_admits_later_than_the_true_mth_request() {
+    check("mth_never_late", 0xAD_01, |rng| {
+        let m = 1 + rng.below(SKETCH_COUNTER_MAX as u64) as u32;
+        let mut f = MthRequestFilter::new(1 << 12, m);
+        // A small, hot key pool so every key accumulates observations.
+        let pool: Vec<(u16, u64)> = (0..64)
+            .map(|_| (rng.below(4) as u16, rng.next_u64() >> 20))
+            .collect();
+        let mut truth: HashMap<(u16, u64), u32> = HashMap::new();
+        for _ in 0..2_000 {
+            let (t, o) = pool[rng.below_usize(pool.len())];
+            let n = truth.entry((t, o)).or_insert(0);
+            *n += 1;
+            let admitted = f.observe(&req(t, o), None);
+            if *n >= m {
+                assert!(
+                    admitted,
+                    "true count {n} ≥ M={m} but the filter refused (t={t} o={o})"
+                );
+            }
+            // The cell never under-counts the key's own observations.
+            let expect = (*n).min(SKETCH_COUNTER_MAX as u32) as u8;
+            assert!(
+                f.count(t, o) >= expect,
+                "cell {} under-counts true {expect}",
+                f.count(t, o)
+            );
+        }
+    });
+}
+
+/// False admits come only from cell collisions, so on a fresh key the
+/// first-observation admit rate is bounded by the sketch's load factor.
+/// Preload ⅛ of the cells (both sequential-id and random-id key sets —
+/// sequential is the classic adversarial pattern for weak hashes), then
+/// probe never-seen keys: well under 20% may slip through at M=2.
+#[test]
+fn false_admit_rate_stays_under_the_load_factor_bound() {
+    check("mth_false_admits", 0xAD_02, |rng| {
+        let mut f = MthRequestFilter::new(1 << 15, 2);
+        let cells = f.cell_count() as u64; // 65536
+        let preload = cells / 8;
+        let sequential = rng.chance(0.5);
+        let base = rng.next_u64() >> 20;
+        for i in 0..preload {
+            let obj = if sequential { base + i } else { rng.next_u64() >> 4 };
+            f.observe(&req(0, obj), None);
+        }
+        // Fresh keys from a disjoint id range (tenant 1 scopes them away
+        // from every preloaded key even on draw collisions).
+        let probes = 2_000u64;
+        let mut admitted = 0u64;
+        for i in 0..probes {
+            if f.observe(&req(1, (1 << 60) | (base + i)), None) {
+                admitted += 1;
+            }
+        }
+        let rate = admitted as f64 / probes as f64;
+        assert!(
+            rate <= 0.20,
+            "false-admit rate {rate:.3} exceeds bound (load {:.3})",
+            preload as f64 / cells as f64
+        );
+    });
+}
+
+/// Epoch aging halves every counter exactly (floor), whatever the count.
+#[test]
+fn epoch_aging_halves_counts_exactly() {
+    check("mth_aging", 0xAD_03, |rng| {
+        // M=15 keeps the gate irrelevant; we only exercise the counters.
+        let mut f = MthRequestFilter::new(1 << 13, 15);
+        let keys: Vec<(u16, u64)> = (0..50)
+            .map(|_| (rng.below(8) as u16, rng.next_u64() >> 8))
+            .collect();
+        for &(t, o) in &keys {
+            for _ in 0..rng.below(20) {
+                f.observe(&req(t, o), None);
+            }
+        }
+        // Snapshot *cell* reads (collisions included) before aging: the
+        // halving contract is per cell, floor division.
+        let before: Vec<u8> = keys.iter().map(|&(t, o)| f.count(t, o)).collect();
+        f.end_epoch();
+        for (&(t, o), &b) in keys.iter().zip(&before) {
+            assert_eq!(f.count(t, o), b / 2, "cell for ({t},{o}) was {b}");
+        }
+    });
+}
+
+/// Filter state is exactly the configured sketch allocation (rounded up
+/// to a power of two) and never grows, however many unique keys stream
+/// through.
+#[test]
+fn sketch_state_is_constant_in_unique_key_count() {
+    check("mth_state_bytes", 0xAD_04, |rng| {
+        let asked = 1usize << (10 + rng.below(6)); // 1 KB .. 32 KB
+        let mut f = MthRequestFilter::new(asked, 2);
+        let allocated = f.state_bytes();
+        assert_eq!(allocated, asked.next_power_of_two());
+        assert_eq!(f.cell_count(), allocated * 2);
+        let base = rng.next_u64() >> 20;
+        for i in 0..20_000u64 {
+            f.observe(&req((i % 5) as u16, base + i), None);
+        }
+        assert_eq!(f.state_bytes(), allocated, "state grew with unique keys");
+    });
+}
+
+/// 200k unique keys through the default-size sketch: the footprint
+/// stays at the configured bytes (the fixed-size guarantee at scale).
+#[test]
+fn sketch_state_survives_two_hundred_thousand_unique_keys() {
+    let mut f = MthRequestFilter::new(32_768, 2);
+    let allocated = f.state_bytes();
+    for i in 0..200_000u64 {
+        f.observe(&req(0, (7 << 40) + i), None);
+    }
+    assert_eq!(f.state_bytes(), allocated);
+}
+
+/// keep_cost admits iff expected miss dollars ≥ threshold × expected
+/// storage dollars over the tenant's current TTL, computed here from
+/// the cost catalog independently of the filter's own arithmetic; a
+/// missing timer leaves the filter inert (admit).
+#[test]
+fn keep_cost_admits_iff_miss_dollars_cover_storage_dollars() {
+    check("keep_cost_inequality", 0xAD_05, |rng| {
+        let mut cost = CostConfig::default();
+        cost.miss_cost_dollars = rng.range_f64(1e-9, 1e-4);
+        let threshold = rng.range_f64(0.1, 8.0);
+        let multiplier = rng.range_f64(0.25, 4.0);
+        let size = rng.range_u64(100, 10_000_000) as u32;
+        let ttl = rng.range_f64(0.5, 500_000.0);
+        let mut f = KeepCostFilter::new(cost.clone(), threshold);
+        f.set_multiplier(2, multiplier);
+        let r = Request::new(0, 1, size).with_tenant(2);
+        let miss = multiplier * cost.miss_cost(size);
+        let storage = size as f64 * cost.storage_cost_per_byte_sec() * ttl;
+        // Skip knife-edge draws: the contract is the inequality, not a
+        // particular rounding of float noise at exact equality.
+        if (miss - threshold * storage).abs() <= 1e-9 * miss.max(threshold * storage) {
+            return;
+        }
+        let expect = miss >= threshold * storage;
+        assert_eq!(f.observe(&r, Some(ttl)), expect, "size={size} ttl={ttl}");
+        // Shrinking the TTL only shrinks the storage side: an admitted
+        // object stays admitted at any shorter timer.
+        if expect {
+            assert!(f.observe(&r, Some(ttl * 0.25)));
+        }
+        assert!(f.observe(&r, None), "no timer ⇒ inert");
+    });
+}

@@ -219,6 +219,44 @@ fn engine_matches_reference_loop_for_ideal_ttl() {
     assert_eq!(got.spurious, 0);
 }
 
+/// The admission layer's do-no-harm contract: the default config (no
+/// `[admission]` section), an explicit `filter = none`, and even an
+/// `mth_request` sketch at M=1 (which admits every first observation)
+/// all leave the serving loop bit-identical to the seed. A real gate
+/// (M=2) must then move the aggregates — proof the plumbing is live.
+#[test]
+fn admission_default_none_and_m1_keep_the_engine_bit_identical() {
+    use elastictl::config::AdmissionKind;
+    let mut trace = parity_trace();
+    trace.truncate(100_000);
+    let cfg = parity_cfg(PolicyKind::Ttl);
+    let want = golden_of_report(&engine::run(&cfg, &mut VecSource::new(trace.clone())));
+
+    let mut explicit_none = cfg.clone();
+    explicit_none.admission.filter = AdmissionKind::None;
+    let got = golden_of_report(&engine::run(&explicit_none, &mut VecSource::new(trace.clone())));
+    assert_eq!(got, want, "explicit filter=none diverged from the default");
+
+    let mut m1 = cfg.clone();
+    m1.admission.filter = AdmissionKind::MthRequest;
+    m1.admission.m = 1;
+    let got = golden_of_report(&engine::run(&m1, &mut VecSource::new(trace.clone())));
+    assert_eq!(got, want, "mth_request at M=1 admits everything, must not perturb");
+
+    let mut m2 = cfg.clone();
+    m2.admission.filter = AdmissionKind::MthRequest;
+    m2.admission.m = 2;
+    let got = golden_of_report(&engine::run(&m2, &mut VecSource::new(trace)));
+    assert_eq!(got.requests, want.requests);
+    assert!(
+        got.misses > want.misses,
+        "M=2 must suppress first-sight inserts and cost re-request misses \
+         ({} vs {})",
+        got.misses,
+        want.misses
+    );
+}
+
 #[test]
 fn streaming_sources_match_vec_source_bit_for_bit() {
     let dir = elastictl::util::tempdir::tempdir().unwrap();

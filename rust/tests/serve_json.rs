@@ -208,6 +208,7 @@ fn global_stats_fields_match_protocol_doc() {
         "requests",
         "misses",
         "spurious",
+        "filter_denials",
         "miss_ratio",
         "instances",
         "miss_cost",
@@ -333,6 +334,7 @@ fn why_fields_match_protocol_doc() {
             "resident_bytes",
             "shed_bytes",
             "denied_admissions",
+            "filter_denials",
             "slo_miss_ratio",
             "measured_miss_ratio",
             "boost",
@@ -459,6 +461,7 @@ fn sharded_global_stats_has_null_miss_ratio_before_traffic() {
             "requests",
             "misses",
             "spurious",
+            "filter_denials",
             "miss_ratio",
             "instances",
             "miss_cost",
@@ -537,6 +540,7 @@ fn sharded_why_fields_match_protocol_doc() {
             "resident_bytes",
             "shed_bytes",
             "denied_admissions",
+            "filter_denials",
             "slo_miss_ratio",
             "measured_miss_ratio",
             "boost",

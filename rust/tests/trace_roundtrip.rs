@@ -8,8 +8,8 @@
 //! skipping the events.
 
 use elastictl::trace::{
-    read_csv, read_items_csv, read_trace, write_csv, write_items_csv, write_trace, Request,
-    TenantEvent, TraceItem,
+    read_csv, read_items, read_items_csv, read_trace, write_csv, write_items, write_items_csv,
+    write_trace, CsvReader, Request, RequestSource, TenantEvent, TraceItem, TraceReader,
 };
 use elastictl::util::proptest::check;
 use elastictl::util::rng::Pcg;
@@ -132,6 +132,136 @@ fn prop_csv_event_lane_round_trips_items() {
             })
             .collect();
         assert_eq!(read_csv(&p).unwrap(), reqs);
+    });
+}
+
+/// An arbitrary mixed v3 item stream (requests + lifecycle events),
+/// never empty — the malformed-input properties need something to tear.
+fn arb_items(rng: &mut Pcg) -> Vec<TraceItem> {
+    let len = 1 + rng.below_usize(100);
+    let mut ts = 0u64;
+    (0..len)
+        .map(|_| {
+            if rng.below(4) == 0 {
+                let ets = rng.below(1 << 40);
+                TraceItem::Event(arb_event(rng, ets))
+            } else {
+                TraceItem::Request(arb_request(rng, &mut ts))
+            }
+        })
+        .collect()
+}
+
+/// On-disk length of one v3 tagged record: 1 tag byte + 22 (request),
+/// 34 (admit) or 10 (retire) payload bytes.
+fn v3_record_len(item: &TraceItem) -> usize {
+    match item {
+        TraceItem::Request(_) => 1 + 22,
+        TraceItem::Event(e) => {
+            if e.spec().is_some() {
+                1 + 34
+            } else {
+                1 + 10
+            }
+        }
+    }
+}
+
+/// Torn v3 tails: chopping the file at ANY byte short of its full length
+/// (the header's item count still promising the original stream) must
+/// yield a clean prefix of the items, a terminated stream, and a
+/// truncation error out of `check()` — never a silent short read.
+#[test]
+fn prop_torn_v3_binary_tail_surfaces_check_error() {
+    check("trace_torn_v3_tail", 0xF3A, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("torn.bin");
+        let items = arb_items(rng);
+        write_items(&p, &items).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let cut = 16 + rng.below_usize(bytes.len() - 16);
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+
+        let mut r = TraceReader::open(&p).unwrap();
+        let mut got = Vec::new();
+        while let Some(item) = r.next_item() {
+            got.push(item);
+        }
+        assert!(got.len() < items.len(), "a torn tail must lose at least one item");
+        assert_eq!(got[..], items[..got.len()], "surviving prefix must be intact");
+        let err = r.check().expect_err("truncation must be reported");
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // The batch reader refuses the same file outright.
+        assert!(read_items(&p).is_err());
+    });
+}
+
+/// Garbage record tags anywhere in a v3 stream are corruption: the
+/// reader stops at the flipped record, hands back the intact prefix, and
+/// `check()` names the bad tag.
+#[test]
+fn prop_garbage_v3_tag_surfaces_check_error() {
+    check("trace_garbage_v3_tag", 0xF3B, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("flip.bin");
+        let items = arb_items(rng);
+        write_items(&p, &items).unwrap();
+        let k = rng.below_usize(items.len());
+        let offset = 16 + items[..k].iter().map(v3_record_len).sum::<usize>();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[offset] = 3 + (rng.below(253) as u8); // any tag outside {0,1,2}
+        std::fs::write(&p, &bytes).unwrap();
+
+        let mut r = TraceReader::open(&p).unwrap();
+        let mut got = Vec::new();
+        while let Some(item) = r.next_item() {
+            got.push(item);
+        }
+        assert_eq!(got[..], items[..k], "items before the flipped tag must survive");
+        let err = r.check().expect_err("a garbage tag must be reported");
+        assert!(err.to_string().contains("tag"), "{err}");
+        assert!(read_items(&p).is_err());
+    });
+}
+
+/// Malformed CSV rows — truncated request rows, event rows with missing
+/// or non-numeric fields, stray tags — spliced at a random position into
+/// a valid event-lane file must stop the stream there and surface a
+/// `check()` error; the rows above the splice still parse.
+#[test]
+fn prop_malformed_csv_rows_surface_check_error() {
+    const BAD_ROWS: &[&str] = &[
+        "ADMIT,1,2,3,4",          // admit row missing the slo field
+        "RETIRE,7",               // retire row missing the tenant
+        "ADMIT,5,6,xx,1.0,-",     // non-numeric reserved_bytes
+        "RETIRE,a,b",             // non-numeric ts
+        "ADMIT,1,2,3,4,zz",       // unparsable slo
+        "9999,123",               // truncated request row
+        "nope,2,3,4",             // non-numeric ts on a request row
+        ",,,,",                   // all fields empty
+        "FOO,1,2,3",              // stray tag parses as a request row
+    ];
+    check("trace_malformed_csv_rows", 0xF3C, |rng| {
+        let dir = tempdir().unwrap();
+        let p = dir.path().join("bad.csv");
+        let items = arb_items(rng);
+        write_items_csv(&p, &items).unwrap();
+        // Splice one bad row at a random data position.
+        let pos = rng.below_usize(items.len() + 1);
+        let bad = BAD_ROWS[rng.below_usize(BAD_ROWS.len())];
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.insert(1 + pos, bad); // line 0 is the header
+        std::fs::write(&p, lines.join("\n")).unwrap();
+
+        let mut r = CsvReader::open(&p).unwrap();
+        let mut got = Vec::new();
+        while let Some(item) = r.next_item() {
+            got.push(item);
+        }
+        assert_eq!(got[..], items[..pos], "rows above the splice must survive ({bad})");
+        assert!(r.check().is_err(), "{bad} must be reported");
+        assert!(read_items_csv(&p).is_err(), "{bad} must fail the batch reader");
     });
 }
 
